@@ -1,0 +1,76 @@
+//! Bandwidth-sensitivity sweep (the Fig. 8 scenario): how the unzipFPGA
+//! designs and the baselines scale with off-chip memory bandwidth on both
+//! platforms, including the multi-tenant motivation — bandwidth shrinking
+//! as co-located apps contend for memory.
+//!
+//! ```sh
+//! cargo run --release --example dse_sweep [network]
+//! ```
+
+use unzipfpga::arch::Platform;
+use unzipfpga::baselines::faithful::evaluate_faithful;
+use unzipfpga::baselines::pruning::TaylorPruner;
+use unzipfpga::dse::search::{optimise, sweep, DseConfig};
+use unzipfpga::workload::{Network, RatioProfile};
+
+fn main() -> unzipfpga::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "resnet34".into());
+    let net = Network::by_name(&name)
+        .ok_or_else(|| unzipfpga::Error::InvalidConfig(format!("unknown network {name}")))?;
+    let cfg = DseConfig::default();
+
+    for plat in Platform::all() {
+        println!("\n== {} ({}) ==", plat.name, plat.board);
+        println!(
+            "{:<6} {:>10} {:>10} {:>10} {:>10} {:>9} {:>9}",
+            "bw", "vanilla", "Tay82", "OVSF50", "OVSF25", "spd50", "spd25"
+        );
+        for bw in [1u32, 2, 4, 8, 12] {
+            if bw > plat.peak_bw_mult {
+                continue;
+            }
+            let vanilla = evaluate_faithful(&plat, bw, &net)?.perf.inf_per_s;
+            let tay = evaluate_faithful(&plat, bw, &TaylorPruner::new(0.82).prune(&net))?
+                .perf
+                .inf_per_s;
+            let o50 = optimise(&cfg, &plat, bw, &net, &RatioProfile::ovsf50(&net), true)?
+                .perf
+                .inf_per_s;
+            let o25 = optimise(&cfg, &plat, bw, &net, &RatioProfile::ovsf25(&net), true)?
+                .perf
+                .inf_per_s;
+            println!(
+                "{:<6} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>8.2}x {:>8.2}x",
+                format!("{bw}x"),
+                vanilla,
+                tay,
+                o50,
+                o25,
+                o50 / vanilla,
+                o25 / vanilla
+            );
+        }
+    }
+
+    // Feasible-space visualisation data: throughput vs DSP allocation split
+    // between the engine and CNN-WGen at 1× bandwidth.
+    println!("\n== design-space slice (Z7045 @ 1x, OVSF50): wgen share vs inf/s ==");
+    let plat = Platform::z7045();
+    let profile = RatioProfile::ovsf50(&net);
+    let points = sweep(&cfg, &plat, 1, &net, &profile, true);
+    let mut best_by_share: std::collections::BTreeMap<u64, f64> = Default::default();
+    for p in &points {
+        let share = p.sigma.m * 100 / (p.sigma.m + p.sigma.engine_macs());
+        let bucket = share / 5 * 5;
+        let e = best_by_share.entry(bucket).or_insert(0.0);
+        *e = e.max(p.inf_per_s);
+    }
+    for (share, inf) in best_by_share {
+        println!(
+            "  wgen {share:>2}–{:<2}% of DSPs: best {inf:>7.1} inf/s  {}",
+            share + 4,
+            "#".repeat((inf / 2.0) as usize)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,159 @@
+//! END-TO-END DRIVER: every layer of the stack composes on a real workload.
+//!
+//! 1. Loads the AOT artifacts (L2 JAX model + L1 Pallas kernels, lowered to
+//!    HLO text by `make artifacts`) into the PJRT runtime — Python is not
+//!    involved at run time.
+//! 2. Cross-checks numerics: PJRT-executed weights generation ≡ the rust
+//!    cycle-level TiWGen simulator ≡ the Python oracle's reference vectors.
+//! 3. Plans ResNet18-OVSF50 on the Z7045 via DSE, then serves a batched
+//!    request stream through the coordinator where each request executes
+//!    the AOT model forward, reporting latency/throughput.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E. Run with:
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_inference
+//! ```
+
+use std::time::Instant;
+use unzipfpga::arch::Platform;
+use unzipfpga::coordinator::scheduler::InferencePlan;
+use unzipfpga::coordinator::server::{InferenceServer, Request};
+use unzipfpga::dse::search::{optimise, DseConfig};
+use unzipfpga::runtime::{artifacts_dir, ArtifactRegistry};
+use unzipfpga::sim::hw_weights::HwOvsfWeights;
+use unzipfpga::sim::wgen::WGenSim;
+use unzipfpga::util::prng::Xoshiro256;
+use unzipfpga::workload::{resnet, RatioProfile};
+
+const N_IN: usize = 16;
+const N_BASIS: usize = 8;
+const N_OUT: usize = 32;
+
+fn load_f32(path: &std::path::Path) -> Vec<f32> {
+    std::fs::read(path)
+        .unwrap_or_else(|e| panic!("missing {path:?} — run `make artifacts` ({e})"))
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect()
+}
+
+fn main() -> unzipfpga::Result<()> {
+    let dir = artifacts_dir();
+    let mut reg = ArtifactRegistry::new(dir.clone())?;
+    println!("== stage 1: PJRT runtime ({}) ==", reg.client().platform_name());
+    for name in ["ovsf_wgen", "ovsf_conv", "gemm", "model_fwd"] {
+        let t = Instant::now();
+        reg.get(name)?;
+        println!("  compiled {name:<10} in {:?}", t.elapsed());
+    }
+
+    println!("\n== stage 2: three-layer numeric agreement ==");
+    let alphas = load_f32(&dir.join("wgen_test_alphas.f32"));
+    let expected = load_f32(&dir.join("wgen_test_expected.f32"));
+    let out = reg
+        .get("ovsf_wgen")?
+        .run_f32(&[(&alphas, &[N_IN, N_BASIS, N_OUT])])?;
+    let max_py = out[0]
+        .iter()
+        .zip(&expected)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    // Rust cycle-level TiWGen over the same α (layout transposed).
+    let mut rust_alphas = vec![0.0f32; alphas.len()];
+    for c in 0..N_IN {
+        for j in 0..N_BASIS {
+            for o in 0..N_OUT {
+                rust_alphas[(o * N_IN + c) * N_BASIS + j] = alphas[(c * N_BASIS + j) * N_OUT + o];
+            }
+        }
+    }
+    let hw = HwOvsfWeights {
+        n_out: N_OUT,
+        n_in: N_IN,
+        k_ovsf: 4,
+        k: 3,
+        n_basis: N_BASIS,
+        alphas: rust_alphas,
+    };
+    let sim = WGenSim::new(&unzipfpga::arch::DesignPoint::new(32, 16, 16, 16), &hw).generate();
+    let max_rs = out[0]
+        .iter()
+        .zip(&sim.weights)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("  PJRT vs python-oracle : max |Δ| = {max_py:.2e}");
+    println!("  PJRT vs rust TiWGen   : max |Δ| = {max_rs:.2e}");
+    assert!(max_py < 1e-4 && max_rs < 1e-4, "three-layer disagreement!");
+    println!(
+        "  TiWGen cycle walk: {} cycles/output-tile, {} vector MACs",
+        sim.cycles_per_output_tile, sim.vector_macs
+    );
+
+    println!("\n== stage 3: DSE + coordinator serving ==");
+    let net = resnet::resnet18();
+    let profile = RatioProfile::ovsf50(&net);
+    let plat = Platform::z7045();
+    let dse = optimise(&DseConfig::default(), &plat, 4, &net, &profile, true)?;
+    println!(
+        "  σ* = {} → modelled {:.1} inf/s on {}",
+        dse.sigma, dse.perf.inf_per_s, plat.name
+    );
+    let plan = InferencePlan::build(&plat, 4, dse.sigma, &net, &profile);
+    let device_latency = plan.latency_s;
+
+    // The served model: the AOT small-CNN forward (run per request).
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let width = 16usize;
+    let w2 = 32usize;
+    let nb = 8usize;
+    let head_b = vec![0.0f32; 10];
+    let head_w = rng.normal_vec(w2 * 10);
+    let ovsf1 = rng.normal_vec(width * nb * width);
+    let ovsf2 = rng.normal_vec(width * nb * width);
+    let ovsf3 = rng.normal_vec(width * nb * w2);
+    let ovsf4 = rng.normal_vec(w2 * nb * w2);
+    let stem = rng.normal_vec(3 * 3 * 3 * width);
+    let server = InferenceServer::spawn(plan, move || {
+        // The worker re-opens its own registry: PJRT clients are not Send.
+        let mut reg = ArtifactRegistry::new(artifacts_dir()).expect("client");
+        reg.get("model_fwd").expect("precompile");
+        move |req: &Request| {
+        let exe = reg.get("model_fwd").expect("cached");
+        exe.run_f32(&[
+            (&req.input, &[8, 16, 16, 3]),
+            (&head_b, &[10]),
+            (&head_w, &[w2, 10]),
+            (&ovsf1, &[width, nb, width]),
+            (&ovsf2, &[width, nb, width]),
+            (&ovsf3, &[width, nb, w2]),
+            (&ovsf4, &[w2, nb, w2]),
+            (&stem, &[3, 3, 3, width]),
+        ])
+        .expect("PJRT model forward")
+        .into_iter()
+        .next()
+        .unwrap()
+        }
+    });
+
+    let n_req = 64u64;
+    let mut rng2 = Xoshiro256::seed_from_u64(8);
+    let t0 = Instant::now();
+    for id in 0..n_req {
+        let input = rng2.normal_vec(8 * 16 * 16 * 3);
+        let resp = server.infer(Request { id, input })?;
+        assert_eq!(resp.output.len(), 80);
+        assert!(resp.output.iter().all(|v| v.is_finite()));
+    }
+    let wall = t0.elapsed();
+    let metrics = server.shutdown()?;
+    println!("  served {n_req} requests in {wall:?}");
+    println!("  host  : {}", metrics.summary());
+    println!(
+        "  device: {:.2} ms/inf modelled ⇒ {:.1} inf/s (ResNet18-OVSF50 @ 4x)",
+        device_latency * 1e3,
+        1.0 / device_latency
+    );
+    println!("\nE2E OK — all three layers compose.");
+    Ok(())
+}

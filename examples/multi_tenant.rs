@@ -1,0 +1,49 @@
+//! Multi-tenant co-location study — the paper's concluding vision: CNN
+//! engines sharing off-chip memory with other applications. On-the-fly
+//! weights generation is what keeps throughput usable as per-tenant
+//! bandwidth shrinks.
+//!
+//! ```sh
+//! cargo run --release --example multi_tenant [network] [platform]
+//! ```
+
+use unzipfpga::arch::Platform;
+use unzipfpga::coordinator::multi_tenant::co_location_sweep;
+use unzipfpga::workload::Network;
+
+fn main() -> unzipfpga::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "resnet18".into());
+    let net = Network::by_name(&name)
+        .ok_or_else(|| unzipfpga::Error::InvalidConfig(format!("unknown network {name}")))?;
+    let plat = match std::env::args().nth(2).as_deref() {
+        Some("z7045") => Platform::z7045(),
+        _ => Platform::zu7ev(),
+    };
+    println!(
+        "co-location study: {} on {} ({}x total bandwidth shared with co-located apps)\n",
+        net.name, plat.name, plat.peak_bw_mult
+    );
+    println!(
+        "{:<8} {:>10} {:>14} {:>14} {:>9}",
+        "tenants", "bw/tenant", "baseline inf/s", "unzip inf/s", "speedup"
+    );
+    let reports = co_location_sweep(&plat, plat.peak_bw_mult, &net, 6)?;
+    for r in &reports {
+        println!(
+            "{:<8} {:>9}x {:>14.1} {:>14.1} {:>8.2}x",
+            r.tenants,
+            r.bw_per_tenant,
+            r.baseline_inf_s,
+            r.unzip_inf_s,
+            r.speedup()
+        );
+    }
+    let first = reports.first().unwrap().speedup();
+    let last = reports.last().unwrap().speedup();
+    println!(
+        "\nunzipFPGA's advantage grows {:.2}x → {:.2}x as co-location intensifies —",
+        first, last
+    );
+    println!("the memory-wall mitigation the paper's conclusion anticipates.");
+    Ok(())
+}

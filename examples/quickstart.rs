@@ -1,0 +1,59 @@
+//! Quickstart: derive an OVSF variant of ResNet18, run the hardware-aware
+//! design flow (DSE) for a ZC706 board, and report the resulting design —
+//! the `Converter → Optimiser → DSE` pipeline of the paper's Fig. 2.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use unzipfpga::accuracy::AccuracyModel;
+use unzipfpga::arch::Platform;
+use unzipfpga::baselines::faithful::evaluate_faithful;
+use unzipfpga::dse::search::{optimise, DseConfig};
+use unzipfpga::workload::{resnet, RatioProfile};
+
+fn main() -> unzipfpga::Result<()> {
+    // 1. The deep-learning expert supplies a CNN + target platform.
+    let net = resnet::resnet18();
+    let platform = Platform::z7045();
+    println!(
+        "network : {} — {:.1}M params, {:.2} GOps",
+        net.name,
+        net.params() as f64 / 1e6,
+        net.gops()
+    );
+    println!(
+        "platform: {} ({}): {} DSP, {:.2} MB BRAM, {} kLUT @ {} MHz\n",
+        platform.name,
+        platform.board,
+        platform.dsp,
+        platform.bram_bytes as f64 / 1e6,
+        platform.luts / 1000,
+        platform.clock_hz / 1e6
+    );
+
+    // 2. The Converter derives the OVSF model (hand-tuned OVSF50 ratios).
+    let profile = RatioProfile::ovsf50(&net);
+    let acc = AccuracyModel::for_network(&net);
+    println!(
+        "OVSF variant: {} — {:.1}M α-params (effective ρ {:.2}), top-1 {:.1}%",
+        profile.name,
+        net.params_compressed(&profile) as f64 / 1e6,
+        profile.effective_rho(&net),
+        acc.top1(&net, &profile)
+    );
+
+    // 3. The Optimiser explores the design space per bandwidth budget.
+    for bw in [1u32, 2, 4] {
+        let unzip = optimise(&DseConfig::default(), &platform, bw, &net, &profile, true)?;
+        let baseline = evaluate_faithful(&platform, bw, &net)?;
+        println!(
+            "{bw}x bandwidth: σ* = {} → {:>6.1} inf/s  (faithful baseline {:>6.1}, speedup {:.2}x)",
+            unzip.sigma,
+            unzip.perf.inf_per_s,
+            baseline.perf.inf_per_s,
+            unzip.perf.inf_per_s / baseline.perf.inf_per_s
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,163 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts for the rust runtime.
+
+HLO text (not `.serialize()`): jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids that the runtime's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+All functions are lowered with `return_tuple=True`; the rust side unwraps
+with `decompose_tuple`.
+
+Artifacts (``make artifacts``):
+  ovsf_wgen.hlo.txt   — CNN-WGen: α (16,8,32) → weights (144, 32)
+  ovsf_conv.hlo.txt   — one OVSF conv layer fwd: x (1,16,16,16), α (16,8,32)
+  model_fwd.hlo.txt   — small OVSF CNN forward: x (8,16,16,3) → logits
+  gemm.hlo.txt        — PE-array GEMM: (64,144) @ (144,32)
+  manifest.json       — shapes + hashes for the runtime's sanity checks
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import fused as fused_k
+from .kernels import gemm as gemm_k
+from .kernels import ovsf_wgen, ref
+
+# Canonical artifact shapes (kept small: these exercise the full code path
+# on the runtime side; the simulator handles paper-scale shapes).
+WGEN_SHAPE = dict(n_in=16, n_basis=8, n_out=32, k=3)
+CONV_X = (1, 16, 16, 16)
+MODEL_X = (8, 16, 16, 3)
+GEMM_A = (64, 144)
+GEMM_W = (144, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is REQUIRED: the default elides constant
+    # payloads as `{...}`, which the runtime's HLO-text parser silently
+    # zero-fills — the OVSF basis matrix would become all zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_wgen():
+    s = WGEN_SHAPE
+
+    def fn(alphas):
+        return (ovsf_wgen.wgen_pallas(alphas, s["k"], tc=32),)
+
+    spec = jax.ShapeDtypeStruct((s["n_in"], s["n_basis"], s["n_out"]),
+                                jnp.float32)
+    return jax.jit(fn).lower(spec)
+
+
+def lower_conv():
+    s = WGEN_SHAPE
+
+    def fn(x, alphas):
+        return (model.ovsf_conv(x, alphas, s["k"], use_pallas=True),)
+
+    xs = jax.ShapeDtypeStruct(CONV_X, jnp.float32)
+    al = jax.ShapeDtypeStruct((s["n_in"], s["n_basis"], s["n_out"]),
+                              jnp.float32)
+    return jax.jit(fn).lower(xs, al)
+
+
+def lower_model_fwd():
+    params = model.init_params(jax.random.PRNGKey(0), rho=0.5)
+
+    def fn(x, *flat_params):
+        p = jax.tree_util.tree_unflatten(treedef, flat_params)
+        return (model.forward(p, x),)
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    xs = jax.ShapeDtypeStruct(MODEL_X, jnp.float32)
+    specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in flat]
+    return jax.jit(fn).lower(xs, *specs), params, treedef
+
+
+def lower_fused():
+    """Fused wgen+GEMM: activations (64, 144) × α (16, 8, 32)."""
+    s = WGEN_SHAPE
+
+    def fn(a, alphas):
+        return (fused_k.ovsf_gemm_fused(a, alphas, s["k"], tc=32),)
+
+    a = jax.ShapeDtypeStruct(GEMM_A, jnp.float32)
+    al = jax.ShapeDtypeStruct((s["n_in"], s["n_basis"], s["n_out"]),
+                              jnp.float32)
+    return jax.jit(fn).lower(a, al)
+
+
+def lower_gemm():
+    def fn(a, w):
+        return (gemm_k.gemm_pallas(a, w, tr=64, tp=16, tc=32),)
+
+    a = jax.ShapeDtypeStruct(GEMM_A, jnp.float32)
+    w = jax.ShapeDtypeStruct(GEMM_W, jnp.float32)
+    return jax.jit(fn).lower(a, w)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+
+    def emit(name: str, lowered) -> None:
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest[name] = {
+            "bytes": len(text),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+
+    print("lowering L1/L2 to HLO text:")
+    emit("ovsf_wgen", lower_wgen())
+    emit("ovsf_conv", lower_conv())
+    emit("gemm", lower_gemm())
+    emit("ovsf_gemm_fused", lower_fused())
+    fwd_lowered, params, _ = lower_model_fwd()
+    emit("model_fwd", fwd_lowered)
+
+    # Reference vectors so the rust e2e test can bit-compare numerics.
+    import numpy as np
+
+    rng = np.random.default_rng(7)
+    s = WGEN_SHAPE
+    alphas = rng.normal(size=(s["n_in"], s["n_basis"], s["n_out"])).astype(
+        np.float32)
+    w_ref = np.asarray(ref.wgen_reference(jnp.asarray(alphas), s["k"]))
+    # Raw little-endian f32 (the rust side has no npy reader).
+    alphas.tofile(os.path.join(args.out_dir, "wgen_test_alphas.f32"))
+    w_ref.tofile(os.path.join(args.out_dir, "wgen_test_expected.f32"))
+    manifest["wgen_test"] = {
+        "alphas": list(alphas.shape),
+        "expected": list(w_ref.shape),
+        "k": s["k"],
+    }
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"  manifest.json -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""OVSF Model Converter (paper Fig. 2): derive α coefficients from dense
+convolution weights via the regression stage of §6.1.
+
+Build-time tool:
+
+    python -m compile.convert --weights w.f32 --shape 64,32,3,3 \
+        --rho 0.5 --out alphas.f32
+
+reads raw little-endian f32 dense weights (OIHW), projects every
+(filter, channel) chunk onto the OVSF basis, keeps the first ⌊ρ·K'²⌉
+codes (the hardware's Sequential layout) and writes the α tensor
+(n_in, n_basis, n_out) in the runtime's expected layout, plus a JSON
+sidecar with the geometry and the reconstruction-fidelity report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from .kernels import ref
+
+
+def convert(weights: np.ndarray, rho: float) -> tuple[np.ndarray, dict]:
+    """Dense OIHW weights → (alphas (n_in, nb, n_out), report dict)."""
+    n_out, n_in, k, k2 = weights.shape
+    if k != k2:
+        raise ValueError(f"non-square kernel {k}x{k2}")
+    alphas = ref.alphas_from_dense(weights, rho)
+    recon = np.asarray(ref.wgen_reference(alphas, k))  # (n_in*K², n_out)
+    want = weights.transpose(1, 2, 3, 0).reshape(n_in * k * k, n_out)
+    err = recon - want
+    denom = float(np.mean(want ** 2)) or 1.0
+    report = {
+        "shape": [int(n_out), int(n_in), int(k), int(k)],
+        "rho": rho,
+        "n_basis": int(alphas.shape[1]),
+        "dense_params": int(weights.size),
+        "alpha_params": int(alphas.size),
+        "compression": float(weights.size / alphas.size),
+        "nmse": float(np.mean(err ** 2) / denom),
+        "max_abs_err": float(np.abs(err).max()),
+    }
+    return alphas, report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--weights", required=True, help="raw f32 OIHW file")
+    ap.add_argument("--shape", required=True,
+                    help="n_out,n_in,k,k (e.g. 64,32,3,3)")
+    ap.add_argument("--rho", type=float, default=0.5)
+    ap.add_argument("--out", required=True, help="output α f32 file")
+    args = ap.parse_args()
+
+    shape = tuple(int(s) for s in args.shape.split(","))
+    if len(shape) != 4:
+        raise SystemExit("--shape must be n_out,n_in,k,k")
+    w = np.fromfile(args.weights, dtype=np.float32).reshape(shape)
+    alphas, report = convert(w, args.rho)
+    alphas.tofile(args.out)
+    with open(args.out + ".json", "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels: the papers compute hot-spots.
+
+* ovsf_wgen - CNN-WGen: on-the-fly OVSF weights generation (TiWGen).
+* gemm - the single-computation-engine PE array as a tiled output-stationary matmul.
+* ref - pure-jnp oracles both kernels are verified against.
+"""
+
+from . import fused, gemm, ovsf_wgen, ref  # noqa: F401

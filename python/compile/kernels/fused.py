@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: FUSED on-the-fly weights generation + GEMM.
+
+This is the TPU rendition of the paper's central architectural property:
+the generated weights NEVER leave on-chip memory. One grid step generates
+the weight chunk for (channel c, filter tile t) from α + the OVSF basis
+*inside* the kernel (VMEM scratch) and immediately contracts it with the
+activation strip — the weights exist only inside the fused region, just as
+CNN-WGen feeds the PE array through the weights buffer without an off-chip
+round trip (paper Fig. 4).
+
+out[R, T_C-tile] = Σ_c  A[:, c-chunk] @ (basis_crop @ α[c])
+
+Grid: (⌈n_out/tc⌉, n_in) with the channel axis innermost so the output
+tile accumulates in place (output-stationary over the reduction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _fused_kernel(a_ref, basis_ref, alphas_ref, out_ref):
+    """Grid step (t, c): generate chunk weights, contract, accumulate.
+
+    a_ref     : (R, 1, K²)     — activation strip of channel c
+    basis_ref : (K², n_basis)  — aligned OVSF codes (shared)
+    alphas_ref: (1, n_basis, T_C)
+    out_ref   : (R, T_C)       — output tile, accumulated over c
+    """
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # CNN-WGen: the weight chunk lives only in VMEM/registers.
+    w_chunk = jnp.dot(
+        basis_ref[...], alphas_ref[0], preferred_element_type=jnp.float32
+    )  # (K², T_C)
+    # PE array: immediately consumed.
+    out_ref[...] += jnp.dot(
+        a_ref[:, 0, :], w_chunk, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tc", "interpret"))
+def ovsf_gemm_fused(a: jnp.ndarray, alphas: jnp.ndarray, k: int,
+                    tc: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """`(R, n_in·K²) @ wgen(α)` without materialising the weights.
+
+    a: (R, n_in·K²) im2col activations (channel-major: column
+    `c·K² + kpos`); alphas: (n_in, n_basis, n_out). Returns (R, n_out).
+    """
+    n_in, n_basis, n_out = alphas.shape
+    k2 = k * k
+    r, p = a.shape
+    assert p == n_in * k2, f"activation depth {p} != {n_in}·{k2}"
+    tc = min(tc, n_out)
+    cp = pl.cdiv(n_out, tc) * tc
+    alphas_pad = jnp.pad(alphas, ((0, 0), (0, 0), (0, cp - n_out)))
+    basis = jnp.asarray(ref.basis_crop(k, n_basis))
+    # Activations viewed as (R, n_in, K²) blocks.
+    a3 = a.reshape(r, n_in, k2)
+    grid = (cp // tc, n_in)
+    out = pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, 1, k2), lambda t, c: (0, c, 0)),
+            pl.BlockSpec((k2, n_basis), lambda t, c: (0, 0)),
+            pl.BlockSpec((1, n_basis, tc), lambda t, c: (c, 0, t)),
+        ],
+        out_specs=pl.BlockSpec((r, tc), lambda t, c: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((r, cp), jnp.float32),
+        interpret=interpret,
+    )(a3, basis, alphas_pad)
+    return out[:, :n_out]
+
+
+def hbm_traffic_bytes(r: int, n_in: int, k: int, n_basis: int, n_out: int,
+                      fused: bool) -> int:
+    """HBM traffic model (f32): the fused kernel reads activations + α and
+    writes outputs; the unfused pipeline additionally round-trips the dense
+    weights matrix. This is the §Perf accounting for the fusion win."""
+    k2 = k * k
+    base = 4 * (r * n_in * k2 + n_in * n_basis * n_out + r * n_out)
+    if fused:
+        return base
+    return base + 2 * 4 * (n_in * k2 * n_out)  # write + read of W

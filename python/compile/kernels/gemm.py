@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: output-stationary tiled GEMM — the PE-array analogue.
+
+TPU adaptation of the paper's processing engine (§4.1): the `T_R×T_C`
+output tile lives in VMEM across the `⌈P/T_P⌉` depth tiles (output-
+stationary accumulation), the depth loop is the innermost grid axis, and
+the `T_P`-wide dot products of the PEs map onto the MXU's systolic
+contraction. BlockSpec expresses the HBM↔VMEM schedule the paper builds
+with activation/weight buffers + double buffering.
+
+interpret=True for CPU execution (see ovsf_wgen.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tiles: MXU-shaped.
+DEFAULT_TR = 128
+DEFAULT_TP = 128
+DEFAULT_TC = 128
+
+
+def _gemm_kernel(a_ref, w_ref, out_ref):
+    """Grid step (r, c, p): accumulate A(rp)·W(pc) into the output tile."""
+    p_idx = pl.program_id(2)
+
+    @pl.when(p_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        a_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tr", "tp", "tc", "interpret"))
+def gemm_pallas(a: jnp.ndarray, w: jnp.ndarray, tr: int = DEFAULT_TR,
+                tp: int = DEFAULT_TP, tc: int = DEFAULT_TC,
+                interpret: bool = True) -> jnp.ndarray:
+    """`(R,P) @ (P,C)` with an output-stationary tile schedule."""
+    r, p = a.shape
+    p2, c = w.shape
+    assert p == p2, f"inner dims mismatch: {p} vs {p2}"
+    tr, tp, tc = min(tr, r), min(tp, p), min(tc, c)
+    # Pad to tile multiples: interpret-mode OOB block reads are undefined
+    # (NaN), exactly like a real engine needs zero-padded edge tiles.
+    rp = pl.cdiv(r, tr) * tr
+    pp = pl.cdiv(p, tp) * tp
+    cp = pl.cdiv(c, tc) * tc
+    a_pad = jnp.pad(a, ((0, rp - r), (0, pp - p)))
+    w_pad = jnp.pad(w, ((0, pp - p), (0, cp - c)))
+    grid = (rp // tr, cp // tc, pp // tp)
+    out = pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, tp), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tp, tc), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tr, tc), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, cp), jnp.float32),
+        interpret=interpret,
+    )(a_pad, w_pad)
+    return out[:r, :c]
+
+
+def mxu_utilisation_estimate(r: int, p: int, c: int, tr: int, tp: int,
+                             tc: int) -> float:
+    """Design-time MXU utilisation estimate: useful MACs over MACs issued
+    by full 128×128 systolic passes across the padded tile grid."""
+    import math
+
+    tiles = math.ceil(r / tr) * math.ceil(c / tc) * math.ceil(p / tp)
+    issued = tiles * tr * tp * tc
+    return (r * p * c) / issued if issued else 0.0

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: on-the-fly OVSF weights generation (TiWGen, Alg. 1).
+
+TPU adaptation of CNN-WGen (see DESIGN.md §Hardware-Adaptation): the
+hardware's M-wide multiplier/adder vector datapath maps to a per-channel
+(K², n_basis) × (n_basis, T_C) matmul on the MXU/VPU; the grid over
+(channel, filter-tile) plays the role of TiWGen's subtile loop; the OVSF
+FIFO + aligner rate-matching trick is a *hardware* storage optimisation
+with no TPU analogue, so the aligned basis tile is materialised directly
+(its storage is K²·n_basis values ≤ 256 — trivially VMEM-resident).
+
+Pallas runs in interpret mode: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Filter-tile width (the T_C analogue). 128 matches the MXU lane width.
+DEFAULT_TC = 128
+
+
+def _wgen_kernel(basis_ref, alphas_ref, out_ref):
+    """One grid step: weights chunk for (channel c, filter tile t).
+
+    basis_ref : (K², n_basis)     — aligned OVSF codes (cropped frame rows)
+    alphas_ref: (1, n_basis, T_C) — α of this channel / filter tile
+    out_ref   : (1, K², T_C)      — generated weight chunk
+    """
+    # The multiplier array + adder tree of CNN-WGen in one MXU call.
+    out_ref[0] = jnp.dot(
+        basis_ref[...], alphas_ref[0], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tc", "interpret"))
+def wgen_pallas(alphas: jnp.ndarray, k: int, tc: int = DEFAULT_TC,
+                interpret: bool = True) -> jnp.ndarray:
+    """Generate the engine-layout (P, C) weights matrix from α coefficients.
+
+    alphas: (n_in, n_basis, n_out), f32 or bf16 (the MXU's native input
+    dtype — accumulation stays f32 via preferred_element_type).
+    Grid: (n_in, ⌈n_out/tc⌉).
+    """
+    n_in, n_basis, n_out = alphas.shape
+    k2 = k * k
+    tc = min(tc, n_out)
+    # Pad the filter axis to a tile multiple (interpret-mode OOB blocks are
+    # undefined — the hardware's edge tiles are similarly padded).
+    cp = pl.cdiv(n_out, tc) * tc
+    alphas_pad = jnp.pad(alphas, ((0, 0), (0, 0), (0, cp - n_out)))
+    basis = jnp.asarray(ref.basis_crop(k, n_basis)).astype(alphas.dtype)  # (K², nb)
+    grid = (n_in, cp // tc)
+    out = pl.pallas_call(
+        _wgen_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k2, n_basis), lambda c, t: (0, 0)),
+            pl.BlockSpec((1, n_basis, tc), lambda c, t: (c, 0, t)),
+        ],
+        out_specs=pl.BlockSpec((1, k2, tc), lambda c, t: (c, 0, t)),
+        out_shape=jax.ShapeDtypeStruct((n_in, k2, cp), jnp.float32),
+        interpret=interpret,
+    )(basis, alphas_pad)
+    return out[:, :, :n_out].reshape(n_in * k2, n_out)
+
+
+def vmem_footprint_bytes(k: int, n_basis: int, tc: int) -> int:
+    """Per-step VMEM residency of the kernel (design-time estimate used by
+    the §Perf analysis): basis tile + α tile + output tile, f32."""
+    k2 = k * k
+    return 4 * (k2 * n_basis + n_basis * tc + k2 * tc)

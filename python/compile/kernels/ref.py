@@ -1,0 +1,113 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here mirrors the rust-side algebra bit-for-bit (same Sylvester
+construction, same crop convention, same GEMM layouts) so the three layers
+can be cross-checked: Pallas kernel ≡ this oracle ≡ rust `sim::hw_weights`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def hadamard(n: int) -> np.ndarray:
+    """Sylvester-Hadamard matrix H_n (paper Eq. 1). Rows are OVSF codes."""
+    if n < 1 or n & (n - 1):
+        raise ValueError(f"OVSF basis length must be a power of two, got {n}")
+    h = np.array([[1]], dtype=np.int8)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]]).astype(np.int8)
+    return h
+
+
+def frame_positions(k: int, k_ovsf: int) -> np.ndarray:
+    """Engine kernel position -> OVSF frame position (top-left crop)."""
+    kpos = np.arange(k * k)
+    return (kpos // k) * k_ovsf + kpos % k
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def ovsf_frame(k: int) -> int:
+    """Power-of-two kernel frame K' for a target kernel K (4 for 3)."""
+    return k if (k & (k - 1)) == 0 else next_pow2(k)
+
+
+def n_basis_for(rho: float, k: int) -> int:
+    """⌊ρ·K'²⌉ clamped to [1, K'²] — matches rust `util::n_basis`."""
+    chunk = ovsf_frame(k) ** 2
+    return max(1, min(chunk, int(np.floor(rho * chunk + 0.5))))
+
+
+def basis_crop(k: int, n_basis: int) -> np.ndarray:
+    """The (K², n_basis) matrix B with B[kpos, j] = code_j[frame_pos(kpos)].
+
+    This is what the hardware OVSF generator + aligner feeds the vector
+    datapath for one chunk, laid out for the batched per-channel matmul.
+    """
+    k_ovsf = ovsf_frame(k)
+    h = hadamard(k_ovsf * k_ovsf)
+    pos = frame_positions(k, k_ovsf)
+    return h[:n_basis, pos].T.astype(np.float32)  # (K², n_basis)
+
+
+def wgen_reference(alphas: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Reference on-the-fly weights generation.
+
+    alphas: (n_in, n_basis, n_out) per-channel OVSF coefficients.
+    Returns the engine-layout weights matrix (P, C) = (n_in*K², n_out).
+    """
+    n_in, n_basis, n_out = alphas.shape
+    b = jnp.asarray(basis_crop(k, n_basis))  # (K², nb)
+    w = jnp.einsum("pj,cjo->cpo", b, alphas)  # (n_in, K², n_out)
+    return w.reshape(n_in * k * k, n_out)
+
+
+def gemm_reference(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul oracle for the PE-array kernel: (R,P) @ (P,C)."""
+    return a @ w
+
+
+def ovsf_conv_reference(x: jnp.ndarray, alphas: jnp.ndarray, k: int,
+                        stride: int = 1, pad: str = "SAME") -> jnp.ndarray:
+    """Oracle OVSF convolution: generate weights, then conv.
+
+    x: (N, H, W, C_in); alphas: (C_in, n_basis, C_out).
+    """
+    import jax.lax as lax
+
+    n_in, n_basis, n_out = alphas.shape
+    w_gemm = wgen_reference(alphas, k)  # (n_in*K², n_out)
+    # (n_in, K, K, n_out) -> HWIO
+    w = w_gemm.reshape(n_in, k, k, n_out).transpose(1, 2, 0, 3)
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def alphas_from_dense(weights: np.ndarray, rho: float) -> np.ndarray:
+    """Project dense (n_out, n_in, k, k) weights onto the per-chunk OVSF
+    basis, keeping the first ⌊ρ·K'²⌉ codes — the hardware's Sequential
+    layout (mirrors rust `HwOvsfWeights::from_dense`).
+
+    Returns alphas (n_in, n_basis, n_out).
+    """
+    n_out, n_in, k, _ = weights.shape
+    k_ovsf = ovsf_frame(k)
+    chunk = k_ovsf * k_ovsf
+    n_basis = n_basis_for(rho, k)
+    h = hadamard(chunk).astype(np.float32)
+    # Embed k×k into the k'×k' frame.
+    frame = np.zeros((n_out, n_in, chunk), dtype=np.float32)
+    pos = frame_positions(k, k_ovsf)
+    frame[:, :, pos] = weights.reshape(n_out, n_in, k * k)
+    # Projection: alpha_j = <frame, h_j> / chunk.
+    alphas = np.einsum("oct,jt->ocj", frame, h[:n_basis]) / chunk
+    return np.ascontiguousarray(alphas.transpose(1, 2, 0))  # (n_in, nb, n_out)

@@ -1,0 +1,155 @@
+"""L2: OVSF CNN model in JAX (forward + backward), calling the L1 kernels.
+
+The model mirrors the paper's OVSF formulation (§2.3, §6.1): standard
+convolutions whose filters are a *learned linear combination of OVSF
+codes* — the α coefficients are the only learnable conv parameters; the
+codes are fixed. 3×3 filters are extracted from the 4×4 OVSF frame by
+cropping (the strategy the paper selects for ImageNet, Table 3).
+
+A small OVSF-ResNet-style classifier for 16×16 synthetic images is built
+here for the end-to-end training example; the per-layer OVSF conv is the
+same module the AOT artifacts export.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import gemm, ovsf_wgen, ref
+
+
+# ---------------------------------------------------------------------------
+# OVSF convolution layer
+# ---------------------------------------------------------------------------
+
+def ovsf_conv(x: jnp.ndarray, alphas: jnp.ndarray, k: int, stride: int = 1,
+              use_pallas: bool = False) -> jnp.ndarray:
+    """OVSF convolution: generate weights on the fly, then convolve.
+
+    x: (N, H, W, C_in) NHWC; alphas: (C_in, n_basis, C_out).
+    `use_pallas` routes weight generation through the L1 kernel (interpret
+    mode — slower, used by tests and the AOT path); the default jnp path
+    lowers to identical HLO modulo the pallas custom ops.
+    """
+    if use_pallas:
+        w_gemm = ovsf_wgen.wgen_pallas(alphas, k)
+    else:
+        w_gemm = ref.wgen_reference(alphas, k)
+    n_in, _, n_out = alphas.shape
+    w = w_gemm.reshape(n_in, k, k, n_out).transpose(1, 2, 0, 3)  # HWIO
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def dense_conv(x: jnp.ndarray, w_hwio: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Plain convolution for the non-OVSF layers (stem, 1×1, classifier)."""
+    return jax.lax.conv_general_dilated(
+        x, w_hwio, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Small OVSF CNN (e2e training example)
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, rho: float = 0.5, width: int = 16,
+                n_classes: int = 10) -> dict[str, Any]:
+    """Initialise the small OVSF CNN.
+
+    Architecture (16×16×3 inputs): dense 3×3 stem (width) → 2 OVSF 3×3
+    convs (width) → stride-2 OVSF conv (2·width) → OVSF conv → global avg
+    pool → linear head. The stem stays dense per the paper (§6.2).
+    """
+    k = 3
+    nb = ref.n_basis_for(rho, k)
+    keys = jax.random.split(key, 8)
+
+    def conv_init(kk, fan_in, shape):
+        return jax.random.normal(kk, shape, jnp.float32) * np.sqrt(2.0 / fan_in)
+
+    def alpha_init(kk, n_in, n_out):
+        # Initialise α so the implied filters have He-like variance: each
+        # filter weight is Σ_j α_j b_j with b = ±1 ⇒ var(w) = nb·var(α).
+        scale = np.sqrt(2.0 / (n_in * k * k) / nb)
+        return jax.random.normal(kk, (n_in, nb, n_out), jnp.float32) * scale
+
+    w2 = 2 * width
+    return {
+        "stem": conv_init(keys[0], 3 * k * k, (k, k, 3, width)),
+        "ovsf1": alpha_init(keys[1], width, width),
+        "ovsf2": alpha_init(keys[2], width, width),
+        "ovsf3": alpha_init(keys[3], width, w2),
+        "ovsf4": alpha_init(keys[4], w2, w2),
+        "head_w": conv_init(keys[5], w2, (w2, n_classes)),
+        "head_b": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def forward(params: dict[str, Any], x: jnp.ndarray,
+            use_pallas: bool = False) -> jnp.ndarray:
+    """Logits for a batch of (N, 16, 16, 3) images."""
+    k = 3
+    h = jax.nn.relu(dense_conv(x, params["stem"]))
+    h = jax.nn.relu(ovsf_conv(h, params["ovsf1"], k, use_pallas=use_pallas))
+    h = jax.nn.relu(h + ovsf_conv(h, params["ovsf2"], k, use_pallas=use_pallas))
+    h = jax.nn.relu(ovsf_conv(h, params["ovsf3"], k, stride=2,
+                              use_pallas=use_pallas))
+    h = jax.nn.relu(h + ovsf_conv(h, params["ovsf4"], k, use_pallas=use_pallas))
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    return h @ params["head_w"] + params["head_b"]
+
+
+def loss_fn(params: dict[str, Any], x: jnp.ndarray, y: jnp.ndarray,
+            use_pallas: bool = False) -> jnp.ndarray:
+    """Mean softmax cross-entropy."""
+    logits = forward(params, x, use_pallas=use_pallas)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def train_step(params: dict[str, Any], x: jnp.ndarray, y: jnp.ndarray,
+               lr: float = 3e-3):
+    """One SGD-with-momentum-free step; returns (new_params, loss)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new_params = jax.tree_util.tree_map(
+        lambda p, g: p - lr * g if p.dtype == jnp.float32 else p, params, grads
+    )
+    return new_params, loss
+
+
+def accuracy(params: dict[str, Any], x: jnp.ndarray, y: jnp.ndarray) -> float:
+    """Top-1 accuracy."""
+    pred = jnp.argmax(forward(params, x), axis=1)
+    return float(jnp.mean((pred == y).astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Synthetic dataset (the "tiny corpus" of the e2e example)
+# ---------------------------------------------------------------------------
+
+def synthetic_dataset(seed: int, n: int, n_classes: int = 10,
+                      side: int = 16, proto_seed: int = 42):
+    """Class-conditional structured images: each class is a fixed random
+    smooth pattern + noise. Linearly non-trivial, CNN-learnable.
+
+    The class prototypes are drawn from `proto_seed` (fixed) so train and
+    test splits generated with different `seed`s share the class structure.
+    """
+    proto_rng = np.random.default_rng(proto_seed)
+    protos = proto_rng.normal(size=(n_classes, side, side, 3)).astype(np.float32)
+    # Smooth the prototypes so convs with small receptive fields can win.
+    for _ in range(2):
+        protos = (protos + np.roll(protos, 1, 1) + np.roll(protos, 1, 2)) / 3.0
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, n_classes, size=n)
+    x = protos[y] + 0.35 * rng.normal(size=(n, side, side, 3)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)

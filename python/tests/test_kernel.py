@@ -1,0 +1,229 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; fixed cases pin the artifact shapes. This is the
+core correctness signal for the compute hot-spot.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm, ovsf_wgen, ref
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-checks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 4, 16, 64])
+def test_hadamard_orthogonal(n):
+    h = ref.hadamard(n).astype(np.int64)
+    np.testing.assert_array_equal(h @ h.T, n * np.eye(n, dtype=np.int64))
+
+
+def test_hadamard_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        ref.hadamard(6)
+
+
+@pytest.mark.parametrize("k,expect", [(1, 1), (2, 2), (3, 4), (4, 4), (5, 8)])
+def test_ovsf_frame(k, expect):
+    assert ref.ovsf_frame(k) == expect
+
+
+def test_frame_positions_crop():
+    # 3×3 in a 4×4 frame: rows 0,1,2 / cols 0,1,2.
+    np.testing.assert_array_equal(
+        ref.frame_positions(3, 4), [0, 1, 2, 4, 5, 6, 8, 9, 10]
+    )
+
+
+@pytest.mark.parametrize("rho,k,expect", [
+    (1.0, 3, 16), (0.5, 3, 8), (0.25, 3, 4), (0.125, 3, 2),
+    (0.4, 3, 6), (0.0, 3, 1), (1.0, 4, 16), (0.5, 2, 2),
+])
+def test_n_basis(rho, k, expect):
+    assert ref.n_basis_for(rho, k) == expect
+
+
+def test_full_rho_projection_roundtrip():
+    # ρ=1: alphas_from_dense then wgen_reference reproduces the filters.
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(8, 4, 3, 3)).astype(np.float32)
+    alphas = ref.alphas_from_dense(w, 1.0)
+    recon = np.asarray(ref.wgen_reference(jnp.asarray(alphas), 3))
+    want = w.transpose(1, 2, 3, 0).reshape(4 * 9, 8)
+    np.testing.assert_allclose(recon, want, rtol=1e-4, atol=1e-5)
+
+
+def test_projection_error_monotone_in_rho():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(4, 4, 3, 3)).astype(np.float32)
+    prev = np.inf
+    for rho in (0.125, 0.25, 0.5, 1.0):
+        alphas = ref.alphas_from_dense(w, rho)
+        recon = np.asarray(ref.wgen_reference(jnp.asarray(alphas), 3))
+        want = w.transpose(1, 2, 3, 0).reshape(4 * 9, 4)
+        err = float(np.mean((recon - want) ** 2))
+        assert err <= prev + 1e-9, f"not monotone at rho={rho}"
+        prev = err
+    assert prev < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Pallas wgen kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_in=st.integers(1, 8),
+    n_out=st.integers(1, 40),
+    k=st.sampled_from([2, 3, 4]),
+    rho=st.sampled_from([0.125, 0.25, 0.5, 1.0]),
+    tc=st.sampled_from([4, 8, 32, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_wgen_pallas_matches_reference(n_in, n_out, k, rho, tc, seed):
+    nb = ref.n_basis_for(rho, k)
+    rng = np.random.default_rng(seed)
+    alphas = jnp.asarray(rng.normal(size=(n_in, nb, n_out)).astype(np.float32))
+    got = np.asarray(ovsf_wgen.wgen_pallas(alphas, k, tc=tc))
+    want = np.asarray(ref.wgen_reference(alphas, k))
+    assert got.shape == (n_in * k * k, n_out)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_wgen_pallas_artifact_shape():
+    # The exact configuration exported by aot.py.
+    rng = np.random.default_rng(7)
+    alphas = jnp.asarray(rng.normal(size=(16, 8, 32)).astype(np.float32))
+    got = np.asarray(ovsf_wgen.wgen_pallas(alphas, 3, tc=32))
+    want = np.asarray(ref.wgen_reference(alphas, 3))
+    assert got.shape == (144, 32)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_wgen_vmem_footprint_tiny():
+    # The whole working set of one grid step sits far below VMEM (~16 MB).
+    assert ovsf_wgen.vmem_footprint_bytes(3, 16, 128) < 64 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Pallas GEMM kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.integers(1, 70),
+    p=st.integers(1, 60),
+    c=st.integers(1, 50),
+    tiles=st.sampled_from([(8, 8, 8), (16, 8, 4), (32, 16, 16), (128, 128, 128)]),
+    seed=st.integers(0, 2**31),
+)
+def test_gemm_pallas_matches_reference(r, p, c, tiles, seed):
+    tr, tp, tc = tiles
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(r, p)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(p, c)).astype(np.float32))
+    got = np.asarray(gemm.gemm_pallas(a, w, tr=tr, tp=tp, tc=tc))
+    want = np.asarray(ref.gemm_reference(a, w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_output_stationary_accumulation():
+    # Depth far larger than T_P forces many accumulation steps.
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.normal(size=(8, 200)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(200, 8)).astype(np.float32))
+    got = np.asarray(gemm.gemm_pallas(a, w, tr=8, tp=8, tc=8))
+    np.testing.assert_allclose(got, np.asarray(a) @ np.asarray(w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mxu_utilisation_estimate():
+    # Perfectly tiled ⇒ 1.0; padded ⇒ < 1.
+    assert gemm.mxu_utilisation_estimate(128, 128, 128, 128, 128, 128) == 1.0
+    est = gemm.mxu_utilisation_estimate(100, 100, 100, 128, 128, 128)
+    assert 0.4 < est < 0.5  # (100/128)³
+
+
+# ---------------------------------------------------------------------------
+# Cross-layer agreement with the rust simulator convention
+# ---------------------------------------------------------------------------
+
+def test_rust_convention_hadamard_h4():
+    # rust OvsfBasis::new(4) codes — must match exactly (same Sylvester
+    # recursion) or the artifacts and the simulator would disagree.
+    h = ref.hadamard(4)
+    np.testing.assert_array_equal(h[0], [1, 1, 1, 1])
+    np.testing.assert_array_equal(h[1], [1, -1, 1, -1])
+    np.testing.assert_array_equal(h[2], [1, 1, -1, -1])
+    np.testing.assert_array_equal(h[3], [1, -1, -1, 1])
+
+
+# ---------------------------------------------------------------------------
+# Fused wgen+GEMM kernel (the no-weight-round-trip property)
+# ---------------------------------------------------------------------------
+
+from compile.kernels import fused  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_in=st.integers(1, 8),
+    n_out=st.integers(1, 33),
+    k=st.sampled_from([2, 3, 4]),
+    rho=st.sampled_from([0.25, 0.5, 1.0]),
+    r=st.integers(1, 24),
+    tc=st.sampled_from([8, 16, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_fused_matches_unfused_pipeline(n_in, n_out, k, rho, r, tc, seed):
+    nb = ref.n_basis_for(rho, k)
+    rng = np.random.default_rng(seed)
+    alphas = jnp.asarray(rng.normal(size=(n_in, nb, n_out)).astype(np.float32))
+    a = jnp.asarray(rng.normal(size=(r, n_in * k * k)).astype(np.float32))
+    got = np.asarray(fused.ovsf_gemm_fused(a, alphas, k, tc=tc))
+    want = np.asarray(ref.gemm_reference(a, ref.wgen_reference(alphas, k)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_traffic_model():
+    # The fused kernel saves the full dense-weights round trip.
+    unfused = fused.hbm_traffic_bytes(64, 16, 3, 8, 32, fused=False)
+    fusedb = fused.hbm_traffic_bytes(64, 16, 3, 8, 32, fused=True)
+    saved = unfused - fusedb
+    assert saved == 2 * 4 * 16 * 9 * 32
+    assert fusedb < unfused
+
+
+# ---------------------------------------------------------------------------
+# Dtype sweeps: bf16 inputs with f32 accumulation (MXU-native)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_in=st.integers(1, 6),
+    n_out=st.integers(1, 20),
+    k=st.sampled_from([3, 4]),
+    seed=st.integers(0, 2**31),
+)
+def test_wgen_pallas_bf16(n_in, n_out, k, seed):
+    nb = ref.n_basis_for(0.5, k)
+    rng = np.random.default_rng(seed)
+    a32 = rng.normal(size=(n_in, nb, n_out)).astype(np.float32)
+    a16 = jnp.asarray(a32).astype(jnp.bfloat16)
+    got = np.asarray(ovsf_wgen.wgen_pallas(a16, k)).astype(np.float32)
+    want = np.asarray(ref.wgen_reference(jnp.asarray(a32), k))
+    # bf16 has ~8 mantissa bits: relative tolerance ~1/128 per term,
+    # scaled by the accumulation depth.
+    np.testing.assert_allclose(got, want, rtol=0.05, atol=0.05 * nb)
+
+
+def test_wgen_pallas_bf16_output_is_f32_accumulated():
+    rng = np.random.default_rng(9)
+    a = jnp.asarray(rng.normal(size=(4, 8, 8)).astype(np.float32)).astype(
+        jnp.bfloat16)
+    out = ovsf_wgen.wgen_pallas(a, 3)
+    assert out.dtype == jnp.float32

@@ -1,0 +1,119 @@
+"""L2 model tests: OVSF conv semantics, shapes, training signal."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_ovsf_conv_matches_oracle():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 4)).astype(np.float32))
+    alphas = jnp.asarray(rng.normal(size=(4, 8, 6)).astype(np.float32))
+    got = model.ovsf_conv(x, alphas, 3)
+    want = ref.ovsf_conv_reference(x, alphas, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ovsf_conv_pallas_path_equals_jnp_path():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 6, 6, 4)).astype(np.float32))
+    alphas = jnp.asarray(rng.normal(size=(4, 4, 8)).astype(np.float32))
+    a = model.ovsf_conv(x, alphas, 3, use_pallas=False)
+    b = model.ovsf_conv(x, alphas, 3, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ovsf_conv_rho1_equals_dense_conv():
+    # ρ=1 OVSF conv with α projected from dense weights == the dense conv.
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(6, 4, 3, 3)).astype(np.float32)  # OIHW
+    alphas = jnp.asarray(ref.alphas_from_dense(w, 1.0))
+    x = jnp.asarray(rng.normal(size=(1, 8, 8, 4)).astype(np.float32))
+    got = model.ovsf_conv(x, alphas, 3)
+    w_hwio = jnp.asarray(w.transpose(2, 3, 1, 0))
+    want = model.dense_conv(x, w_hwio)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_forward_shapes():
+    params = model.init_params(jax.random.PRNGKey(0), rho=0.5)
+    x = jnp.zeros((4, 16, 16, 3), jnp.float32)
+    logits = model.forward(params, x)
+    assert logits.shape == (4, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_strided_ovsf_conv_halves_resolution():
+    params = model.init_params(jax.random.PRNGKey(1), rho=0.5)
+    x = jnp.zeros((1, 16, 16, 3), jnp.float32)
+    h = model.dense_conv(x, params["stem"])
+    h2 = model.ovsf_conv(h, params["ovsf3"], 3, stride=2)
+    assert h2.shape == (1, 8, 8, 32)
+
+
+def test_training_reduces_loss():
+    params = model.init_params(jax.random.PRNGKey(0), rho=0.5)
+    x, y = model.synthetic_dataset(0, 512)
+    l0 = float(model.loss_fn(params, x, y))
+    rng = np.random.default_rng(0)
+    for _ in range(60):
+        idx = rng.integers(0, 512, size=64)
+        params, _ = model.train_step(params, x[idx], y[idx])
+    l1 = float(model.loss_fn(params, x, y))
+    assert l1 < l0 * 0.8, f"loss {l0:.3f} -> {l1:.3f}: no learning signal"
+
+
+def test_gradients_flow_to_alphas_only_on_ovsf_layers():
+    params = model.init_params(jax.random.PRNGKey(0), rho=0.25)
+    x, y = model.synthetic_dataset(3, 32)
+    grads = jax.grad(model.loss_fn)(params, x, y)
+    for name in ("ovsf1", "ovsf2", "ovsf3", "ovsf4"):
+        g = np.asarray(grads[name])
+        assert np.abs(g).max() > 0, f"no gradient on {name} alphas"
+    assert np.abs(np.asarray(grads["stem"])).max() > 0
+
+
+def test_rho_controls_parameter_count():
+    p50 = model.init_params(jax.random.PRNGKey(0), rho=0.5)
+    p25 = model.init_params(jax.random.PRNGKey(0), rho=0.25)
+    n50 = sum(int(np.prod(p50[k].shape)) for k in p50 if k.startswith("ovsf"))
+    n25 = sum(int(np.prod(p25[k].shape)) for k in p25 if k.startswith("ovsf"))
+    assert n25 == n50 // 2
+
+
+def test_synthetic_dataset_is_learnable_structure():
+    x, y = model.synthetic_dataset(0, 256)
+    assert x.shape == (256, 16, 16, 3)
+    assert int(y.max()) <= 9
+    # Same-class images correlate more than cross-class ones.
+    xs = np.asarray(x).reshape(256, -1)
+    ys = np.asarray(y)
+    same, diff = [], []
+    for i in range(0, 120, 2):
+        for j in range(i + 1, 120, 7):
+            c = float(np.dot(xs[i], xs[j]) /
+                      (np.linalg.norm(xs[i]) * np.linalg.norm(xs[j])))
+            (same if ys[i] == ys[j] else diff).append(c)
+    if same and diff:
+        assert np.mean(same) > np.mean(diff)
+
+
+@pytest.mark.parametrize("rho", [0.25, 0.5, 1.0])
+def test_train_step_is_jittable_across_rho(rho):
+    params = model.init_params(jax.random.PRNGKey(0), rho=rho)
+    x, y = model.synthetic_dataset(1, 64)
+    p2, loss = model.train_step(params, x, y)
+    assert np.isfinite(float(loss))
+    # Params actually moved.
+    moved = any(
+        not np.allclose(np.asarray(params[k]), np.asarray(p2[k]))
+        for k in params if k.startswith("ovsf")
+    )
+    assert moved

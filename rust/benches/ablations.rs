@@ -1,0 +1,107 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * OVSF basis **storage designs** (§4.2.2's three options);
+//! * **dataflow** (output- vs weight-stationary wgen pressure, §4.2.1);
+//! * **DSE strategy** (exhaustive vs greedy hill-climbing);
+//! * **selective-PE** average gain across the benchmark suite (Table 10's
+//!   mechanism as a single number);
+//! * **multi-tenant** bandwidth contention (the paper's conclusion).
+
+use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::coordinator::multi_tenant::co_location_sweep;
+use unzipfpga::dse::greedy::greedy_optimise;
+use unzipfpga::dse::search::{optimise, DseConfig};
+use unzipfpga::perf::dataflow::{max_affordable_rho, Dataflow};
+use unzipfpga::perf::model::PerfModel;
+use unzipfpga::sim::ovsf_storage;
+use unzipfpga::util::bench::bench_auto;
+use unzipfpga::workload::{resnet, Network, RatioProfile};
+
+fn main() {
+    println!("== ablation 1: OVSF basis storage designs (§4.2.2) ==");
+    for (m, t_p, t_c, k2, nb) in [(64u64, 16u64, 48u64, 16u64, 8u64), (128, 8, 96, 16, 16)] {
+        let (mono, mux, fifo) = ovsf_storage::compare(m, t_p, t_c, k2, nb, 2);
+        println!(
+            "  M={m:>3} T_P={t_p:>2} T_C={t_c:>3}: monolithic {:>8} bits | mux {:>5} bits + {:>5} LUTs | FIFO+aligner {:>5} bits + {:>3} LUTs",
+            mono.storage_bits, mux.storage_bits, mux.selection_luts,
+            fifo.storage_bits, fifo.selection_luts
+        );
+    }
+
+    println!("\n== ablation 2: dataflow (wgen pressure OS vs WS, §4.2.1) ==");
+    let model = PerfModel::new(Platform::z7045(), 4);
+    let sigma = DesignPoint::new(8, 64, 16, 96); // deliberately small wgen
+    let net = resnet::resnet18();
+    let mut os_sum = 0.0;
+    let mut ws_sum = 0.0;
+    let mut n = 0;
+    for layer in net.layers.iter().filter(|l| l.ovsf) {
+        os_sum += max_affordable_rho(&model, Dataflow::OutputStationary, &sigma, layer);
+        ws_sum += max_affordable_rho(&model, Dataflow::WeightStationary, &sigma, layer);
+        n += 1;
+    }
+    println!(
+        "  mean max-affordable ρ at M=8: output-stationary {:.3}, weight-stationary {:.3}",
+        os_sum / n as f64,
+        ws_sum / n as f64
+    );
+
+    println!("\n== ablation 3: DSE strategy (exhaustive vs greedy) ==");
+    let cfg = DseConfig::default();
+    let profile = RatioProfile::ovsf50(&net);
+    let plat = Platform::z7045();
+    let ex = bench_auto("dse: exhaustive (1200 pts)", 1200, || {
+        optimise(&cfg, &plat, 4, &net, &profile, true)
+            .unwrap()
+            .perf
+            .inf_per_s
+    });
+    let gr = bench_auto("dse: greedy hill-climb", 1200, || {
+        greedy_optimise(&cfg, &plat, 4, &net, &profile)
+            .unwrap()
+            .inf_per_s
+    });
+    let ex_r = optimise(&cfg, &plat, 4, &net, &profile, true).unwrap();
+    let gr_r = greedy_optimise(&cfg, &plat, 4, &net, &profile).unwrap();
+    println!(
+        "  quality: greedy {:.2} / exhaustive {:.2} inf/s = {:.1}% at {}/{} evaluations ({:.1}x faster wall-clock)",
+        gr_r.inf_per_s,
+        ex_r.perf.inf_per_s,
+        100.0 * gr_r.inf_per_s / ex_r.perf.inf_per_s,
+        gr_r.evaluations,
+        ex_r.explored,
+        ex.mean_ns / gr.mean_ns
+    );
+
+    println!("\n== ablation 4: selective PEs across the suite ==");
+    let mut gains = Vec::new();
+    for net in Network::benchmarks() {
+        let plat = Platform::z7045();
+        let profile = RatioProfile::ovsf50(&net);
+        if let Ok(with) = optimise(&cfg, &plat, 4, &net, &profile, true) {
+            let mut m = PerfModel::new(plat.clone(), 4);
+            m.selective_pes = false;
+            let without = m.network_perf(&with.sigma, &net, &profile);
+            gains.push(with.perf.inf_per_s / without.inf_per_s);
+        }
+    }
+    println!(
+        "  mean gain {:.3}x (geo {:.3}x) over {} benchmarks",
+        unzipfpga::util::stats::mean(&gains),
+        unzipfpga::util::stats::geo_mean(&gains),
+        gains.len()
+    );
+
+    println!("\n== ablation 5: multi-tenant bandwidth contention ==");
+    let reports = co_location_sweep(&Platform::zu7ev(), 12, &resnet::resnet18(), 4).unwrap();
+    for r in &reports {
+        println!(
+            "  {} tenant(s) @ {}x/tenant: baseline {:>6.1} vs unzipFPGA {:>6.1} inf/s  ({:.2}x)",
+            r.tenants,
+            r.bw_per_tenant,
+            r.baseline_inf_s,
+            r.unzip_inf_s,
+            r.speedup()
+        );
+    }
+}

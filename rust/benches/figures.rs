@@ -1,0 +1,17 @@
+//! Bench: regenerate every paper figure's data series.
+
+use unzipfpga::report::figures;
+use unzipfpga::util::bench::bench_auto;
+
+fn main() {
+    println!("== paper-figure regeneration benches ==");
+    bench_auto("fig8 (speedup vs bandwidth)", 800, || {
+        figures::fig8().unwrap().len()
+    });
+    bench_auto("fig9 (accuracy-time Pareto)", 800, || {
+        figures::fig9().unwrap().len()
+    });
+    bench_auto("fig10 (energy efficiency vs TX2)", 400, || {
+        figures::fig10().unwrap().len()
+    });
+}

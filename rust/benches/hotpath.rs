@@ -1,0 +1,87 @@
+//! Hot-path microbenches: the inner loops the §Perf pass optimises.
+//!
+//! * analytical perf-model evaluation (DSE inner loop)
+//! * full DSE sweep (feasible-point enumeration rate)
+//! * cycle-level network simulation
+//! * TiWGen numeric weight generation
+//! * OVSF reconstruction algebra
+//! * autotuner end-to-end
+
+use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::autotune::autotune;
+use unzipfpga::dse::search::{optimise, sweep, DseConfig};
+use unzipfpga::ovsf::codes::OvsfBasis;
+use unzipfpga::perf::model::PerfModel;
+use unzipfpga::sim::engine::simulate_network_timing;
+use unzipfpga::sim::hw_weights::HwOvsfWeights;
+use unzipfpga::sim::ovsf_gen::OvsfGenerator;
+use unzipfpga::sim::wgen::WGenSim;
+use unzipfpga::util::bench::bench_auto;
+use unzipfpga::util::prng::Xoshiro256;
+use unzipfpga::workload::{resnet, RatioProfile};
+
+fn main() {
+    println!("== L3 hot-path microbenches ==");
+    let net = resnet::resnet18();
+    let profile = RatioProfile::ovsf50(&net);
+    let plat = Platform::z7045();
+    let sigma = DesignPoint::new(64, 64, 16, 48);
+    let model = PerfModel::new(plat.clone(), 4);
+
+    bench_auto("perf_model: ResNet18 network_perf", 600, || {
+        model.network_perf(&sigma, &net, &profile).total_cycles
+    });
+
+    let cfg = DseConfig::default();
+    bench_auto("dse: full sweep (1200 pts, ResNet18)", 1500, || {
+        sweep(&cfg, &plat, 4, &net, &profile, true).len()
+    });
+
+    bench_auto("dse: optimise (argmax incl. sweep)", 1500, || {
+        optimise(&cfg, &plat, 4, &net, &profile, true)
+            .unwrap()
+            .perf
+            .inf_per_s
+    });
+
+    bench_auto("sim: ResNet18 timing walk", 800, || {
+        simulate_network_timing(&sigma, &plat, 4, true, &net, &profile).len()
+    });
+
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let hw = HwOvsfWeights::random(&mut rng, 64, 64, 3, 0.5).unwrap();
+    let wg_sigma = DesignPoint::new(64, 64, 16, 64);
+    bench_auto("sim: TiWGen generate 64×64×3×3 (ρ=.5)", 900, || {
+        WGenSim::new(&wg_sigma, &hw).generate().vector_macs
+    });
+
+    let basis = OvsfBasis::new(16).unwrap();
+    bench_auto("sim: OVSF FIFO/aligner 10k emits (M=48)", 400, || {
+        let mut g = OvsfGenerator::new(&basis, 8, 48);
+        let mut buf = Vec::with_capacity(48);
+        let mut acc = 0i32;
+        for _ in 0..10_000 {
+            g.emit_into(&mut buf);
+            acc += buf[0] as i32;
+        }
+        acc
+    });
+
+    let basis256 = OvsfBasis::new(256).unwrap();
+    let mut rng2 = Xoshiro256::seed_from_u64(2);
+    let target = rng2.normal_vec(256);
+    bench_auto("ovsf: project+reconstruct L=256", 400, || {
+        let alphas = unzipfpga::ovsf::regress::project(&basis256, &target);
+        let sel = unzipfpga::ovsf::basis::select(
+            unzipfpga::ovsf::basis::BasisSelection::IterativeDrop,
+            &basis256,
+            &alphas,
+            0.5,
+        );
+        unzipfpga::ovsf::regress::reconstruct_vec(&basis256, &sel)[0]
+    });
+
+    bench_auto("autotune: ResNet18 @ 2x end-to-end", 2000, || {
+        autotune(&cfg, &plat, 2, &net).unwrap().final_inf_per_s
+    });
+}

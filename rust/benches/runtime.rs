@@ -1,0 +1,58 @@
+//! PJRT runtime benches: artifact compile time and hot-path dispatch
+//! latency (the coordinator's per-request cost). Skips cleanly when
+//! artifacts are absent.
+
+use unzipfpga::runtime::{artifacts_dir, ArtifactRegistry};
+use unzipfpga::util::bench::bench_auto;
+use unzipfpga::util::prng::Xoshiro256;
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP runtime benches: artifacts missing — run `make artifacts`");
+        return;
+    }
+    println!("== PJRT runtime benches ==");
+    let mut reg = ArtifactRegistry::new(dir).expect("client");
+
+    bench_auto("compile: ovsf_wgen artifact (cold-ish)", 1500, || {
+        // Re-load from text each iteration: measures parse+compile.
+        let client = unzipfpga::runtime::RuntimeClient::cpu().unwrap();
+        unzipfpga::runtime::LoadedExecutable::load(
+            &client,
+            &unzipfpga::runtime::artifacts_dir().join("ovsf_wgen.hlo.txt"),
+        )
+        .unwrap()
+        .path
+        .exists()
+    });
+
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let alphas = rng.normal_vec(16 * 8 * 32);
+    reg.get("ovsf_wgen").unwrap();
+    bench_auto("execute: ovsf_wgen (α 16×8×32 → 144×32)", 800, || {
+        reg.get("ovsf_wgen")
+            .unwrap()
+            .run_f32(&[(&alphas, &[16, 8, 32])])
+            .unwrap()[0][0]
+    });
+
+    let a = rng.normal_vec(64 * 144);
+    let w = rng.normal_vec(144 * 32);
+    reg.get("gemm").unwrap();
+    bench_auto("execute: gemm 64×144×32", 800, || {
+        reg.get("gemm")
+            .unwrap()
+            .run_f32(&[(&a, &[64, 144]), (&w, &[144, 32])])
+            .unwrap()[0][0]
+    });
+
+    let x = rng.normal_vec(16 * 16 * 16);
+    reg.get("ovsf_conv").unwrap();
+    bench_auto("execute: ovsf_conv 16×16×16 → ×32", 800, || {
+        reg.get("ovsf_conv")
+            .unwrap()
+            .run_f32(&[(&x, &[1, 16, 16, 16]), (&alphas, &[16, 8, 32])])
+            .unwrap()[0][0]
+    });
+}

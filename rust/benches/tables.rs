@@ -1,0 +1,42 @@
+//! Bench: regenerate every paper table end-to-end, timing each harness.
+//! (`cargo bench --bench tables`; criterion is unavailable offline — the
+//! in-repo `util::bench` harness provides warmup + stats.)
+
+use unzipfpga::report::tables;
+use unzipfpga::util::bench::bench_auto;
+
+fn main() {
+    println!("== paper-table regeneration benches ==");
+    let t1 = bench_auto("table1 (ratio methods × bounds)", 400, || {
+        tables::table1().unwrap().len()
+    });
+    let t3 = bench_auto("table3 (basis × extraction)", 100, || {
+        tables::table3().unwrap().len()
+    });
+    let t4 = bench_auto("table4 (ResNet34 compression)", 400, || {
+        tables::table4().unwrap().len()
+    });
+    let t5 = bench_auto("table5 (ResNet18 compression)", 400, || {
+        tables::table5().unwrap().len()
+    });
+    let t6 = bench_auto("table6 (SqueezeNet)", 400, || {
+        tables::table6().unwrap().len()
+    });
+    let t7 = bench_auto("table7 (prior work R18/34/SqN)", 400, || {
+        tables::table7().unwrap().len()
+    });
+    let t8 = bench_auto("table8 (prior work R50)", 400, || {
+        tables::table8().unwrap().len()
+    });
+    let t9 = bench_auto("table9 (resource breakdown)", 400, || {
+        tables::table9().unwrap().len()
+    });
+    let t10 = bench_auto("table10 (selective-PE ablation)", 400, || {
+        tables::table10().unwrap().len()
+    });
+    let total_ms = [&t1, &t3, &t4, &t5, &t6, &t7, &t8, &t9, &t10]
+        .iter()
+        .map(|r| r.mean_ns / 1e6)
+        .sum::<f64>();
+    println!("\nfull table suite: {total_ms:.1} ms (sum of means)");
+}

@@ -1,0 +1,5 @@
+//! Accuracy model for OVSF/pruned variants.
+
+pub mod model;
+
+pub use model::AccuracyModel;

@@ -1,0 +1,133 @@
+//! Paper-anchored accuracy model.
+//!
+//! ImageNet-scale training is outside this reproduction's budget (see
+//! DESIGN.md §Substitutions). Hardware results need only the workload
+//! shapes and ρ profiles, which we use exactly; the *accuracy columns* of
+//! Tables 1 and 4–6 are regenerated from a monotone interpolation anchored
+//! on the paper's own reported (effective-ρ → top-1) points per network.
+//! Trend-level accuracy (Table 3-style strategy comparisons and the e2e
+//! loss curve) is *measured* by training real OVSF models on synthetic data
+//! in `python/compile/train.py`.
+
+use crate::workload::{Network, RatioProfile};
+
+/// Accuracy anchors for one network: `(effective ρ over OVSF layers,
+/// top-1 %)`, plus the dense reference accuracy.
+#[derive(Clone, Debug)]
+pub struct AccuracyModel {
+    /// Network name the anchors belong to.
+    pub network: String,
+    /// Dense (uncompressed) top-1 accuracy.
+    pub dense_top1: f64,
+    /// Anchor points, ascending in ρ.
+    anchors: Vec<(f64, f64)>,
+}
+
+impl AccuracyModel {
+    /// Build the anchored model for one of the paper's benchmarks.
+    ///
+    /// Anchors come from Tables 4–6 (ImageNet top-1 of the OVSF50/OVSF25
+    /// variants) and §7.2.2 (ResNet50); effective ρ is computed from the
+    /// same hand-tuned profiles with this crate's own profile arithmetic,
+    /// so interpolation queries and anchors share one scale.
+    pub fn for_network(net: &Network) -> Self {
+        let e50 = RatioProfile::ovsf50(net).effective_rho(net);
+        let e25 = RatioProfile::ovsf25(net).effective_rho(net);
+        let (dense, a50, a25) = match net.name.as_str() {
+            "ResNet18" => (69.8, 69.2, 67.3),
+            "ResNet34" => (73.3, 72.8, 71.5),
+            "ResNet50" => (76.15, 76.23, 74.6), // OVSF50 slightly *above* dense (§7.2.2)
+            "SqueezeNet" => (58.2, 57.6, 57.1),
+            // Unknown nets: generic gentle degradation curve.
+            _ => (70.0, 69.3, 67.5),
+        };
+        AccuracyModel {
+            network: net.name.clone(),
+            dense_top1: dense,
+            anchors: vec![(e25, a25), (e50, a50), (1.0, dense.max(a50))],
+        }
+    }
+
+    /// Top-1 accuracy for an arbitrary ratio profile: monotone piecewise-
+    /// linear interpolation on effective ρ (clamped at the ends).
+    pub fn top1(&self, net: &Network, profile: &RatioProfile) -> f64 {
+        let e = profile.effective_rho(net);
+        self.top1_at_effective_rho(e)
+    }
+
+    /// Interpolate at a raw effective-ρ value.
+    pub fn top1_at_effective_rho(&self, e: f64) -> f64 {
+        let a = &self.anchors;
+        if e <= a[0].0 {
+            // Extrapolate below the lowest anchor with the first segment's
+            // slope (accuracy keeps degrading with compression).
+            let (x0, y0) = a[0];
+            let (x1, y1) = a[1];
+            let slope = (y1 - y0) / (x1 - x0);
+            return y0 - slope * (x0 - e);
+        }
+        for w in a.windows(2) {
+            let (x0, y0) = w[0];
+            let (x1, y1) = w[1];
+            if e <= x1 {
+                return y0 + (y1 - y0) * (e - x0) / (x1 - x0);
+            }
+        }
+        a.last().unwrap().1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::resnet;
+
+    #[test]
+    fn anchors_reproduce_paper_numbers() {
+        let net = resnet::resnet18();
+        let m = AccuracyModel::for_network(&net);
+        let a50 = m.top1(&net, &RatioProfile::ovsf50(&net));
+        let a25 = m.top1(&net, &RatioProfile::ovsf25(&net));
+        assert!((a50 - 69.2).abs() < 0.05, "OVSF50 anchor: {a50}");
+        assert!((a25 - 67.3).abs() < 0.05, "OVSF25 anchor: {a25}");
+    }
+
+    #[test]
+    fn monotone_in_effective_rho() {
+        let net = resnet::resnet34();
+        let m = AccuracyModel::for_network(&net);
+        let mut prev = 0.0;
+        for i in 0..50 {
+            let e = 0.05 + 0.95 * i as f64 / 49.0;
+            let a = m.top1_at_effective_rho(e);
+            assert!(a >= prev - 1e-9, "not monotone at e={e}");
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn autotuned_profiles_land_between_anchors() {
+        // A profile between OVSF25 and OVSF50 must land between their
+        // accuracies — the mechanism behind Table 1's +1.2pp gains.
+        let net = resnet::resnet18();
+        let m = AccuracyModel::for_network(&net);
+        let mut mid = RatioProfile::ovsf25(&net);
+        for (i, l) in net.layers.iter().enumerate() {
+            if l.ovsf && mid.rhos[i] < 0.4 {
+                mid.rhos[i] = 0.4;
+            }
+        }
+        let a_mid = m.top1(&net, &mid);
+        let a25 = m.top1(&net, &RatioProfile::ovsf25(&net));
+        let a50 = m.top1(&net, &RatioProfile::ovsf50(&net));
+        assert!(a_mid > a25 && a_mid <= a50 + 1e-9, "{a25} < {a_mid} ≤ {a50}");
+    }
+
+    #[test]
+    fn uniform_1_matches_or_exceeds_dense_reference() {
+        let net = resnet::resnet50();
+        let m = AccuracyModel::for_network(&net);
+        let full = m.top1(&net, &RatioProfile::uniform(&net, 1.0));
+        assert!(full >= m.dense_top1 - 1e-9);
+    }
+}

@@ -1,0 +1,94 @@
+//! The design point `σ = ⟨M, T_R, T_P, T_C⟩` (paper §5).
+//!
+//! * `M`   — TiWGen subtile size = width of CNN-WGen's vector units.
+//! * `T_R` — row-tile size of the activations matrix (buffer sizing).
+//! * `T_P` — depth-tile size = MAC units per PE.
+//! * `T_C` — column-tile size = number of PEs.
+
+use crate::util::ceil_div;
+
+/// A candidate configuration of the engine + weights generator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DesignPoint {
+    /// CNN-WGen subtile size (vector-unit width). `0` disables the weights
+    /// generator (faithful baseline configuration).
+    pub m: u64,
+    /// Activations row-tile size.
+    pub t_r: u64,
+    /// MACs per PE (depth tile).
+    pub t_p: u64,
+    /// Number of PEs (column tile).
+    pub t_c: u64,
+}
+
+impl DesignPoint {
+    /// Construct a design point.
+    pub fn new(m: u64, t_r: u64, t_p: u64, t_c: u64) -> Self {
+        Self { m, t_r, t_p, t_c }
+    }
+
+    /// Total MAC units of the processing engine.
+    pub fn engine_macs(&self) -> u64 {
+        self.t_p * self.t_c
+    }
+
+    /// DSPs consumed (engine MACs + M-wide wgen multiplier array), paper §5.2:
+    /// `D_MAC × (M + T_P·T_C) ≤ D_fpga`.
+    pub fn dsps(&self, dsp_per_mac: u64) -> u64 {
+        dsp_per_mac * (self.m + self.engine_macs())
+    }
+
+    /// Number of weight subtiles per `T_P×T_C` tile (`⌈T_P·T_C / M⌉`).
+    pub fn subtiles_per_tile(&self) -> u64 {
+        assert!(self.m > 0, "subtiles undefined when wgen is disabled");
+        ceil_div(self.t_p * self.t_c, self.m)
+    }
+
+    /// `true` if the weights generator is instantiated.
+    pub fn has_wgen(&self) -> bool {
+        self.m > 0
+    }
+}
+
+impl std::fmt::Display for DesignPoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "⟨M={}, T_R={}, T_P={}, T_C={}⟩",
+            self.m, self.t_r, self.t_p, self.t_c
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resource_accounting() {
+        let s = DesignPoint::new(64, 128, 16, 32);
+        assert_eq!(s.engine_macs(), 512);
+        assert_eq!(s.dsps(1), 576);
+        assert_eq!(s.subtiles_per_tile(), 8);
+        assert!(s.has_wgen());
+    }
+
+    #[test]
+    fn subtile_rounding() {
+        let s = DesignPoint::new(100, 1, 16, 32); // 512 / 100 → 6 subtiles
+        assert_eq!(s.subtiles_per_tile(), 6);
+    }
+
+    #[test]
+    fn baseline_has_no_wgen() {
+        let s = DesignPoint::new(0, 64, 8, 8);
+        assert!(!s.has_wgen());
+        assert_eq!(s.dsps(1), 64);
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let s = DesignPoint::new(32, 64, 8, 16);
+        assert_eq!(format!("{s}"), "⟨M=32, T_R=64, T_P=8, T_C=16⟩");
+    }
+}

@@ -1,0 +1,8 @@
+//! Architectural configuration: target FPGA platforms (paper Table 2) and
+//! the tunable design point `σ = ⟨M, T_R, T_P, T_C⟩` (paper §5).
+
+pub mod design_point;
+pub mod platform;
+
+pub use design_point::DesignPoint;
+pub use platform::{BandwidthConfig, Platform};

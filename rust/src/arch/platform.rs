@@ -1,0 +1,170 @@
+//! FPGA platform models — paper Table 2 plus the bandwidth-scaling scheme
+//! of §7.1 (1× = 1.1 GB/s up to 12× = 13.4 GB/s, controlled in the paper by
+//! the number of memory ports and word packing).
+
+/// An FPGA platform (SoC board) targeted by the DSE.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Platform {
+    /// Short name, e.g. "Z7045".
+    pub name: &'static str,
+    /// Board name, e.g. "ZC706".
+    pub board: &'static str,
+    /// DSP blocks available.
+    pub dsp: u64,
+    /// On-chip RAM capacity in bytes (BRAM).
+    pub bram_bytes: u64,
+    /// Logic capacity in LUTs.
+    pub luts: u64,
+    /// Flip-flops.
+    pub flip_flops: u64,
+    /// Fabric clock in Hz (paper: 150 MHz on ZC706, 200 MHz on ZCU104).
+    pub clock_hz: f64,
+    /// Peak *measured* off-chip bandwidth in bytes/s at the maximum port
+    /// configuration (4.5 GB/s on ZC706 = 4×, 13.4 GB/s on ZCU104 = 12×).
+    pub peak_bw_bytes: f64,
+    /// The bandwidth multiplier of the peak configuration (4 or 12).
+    pub peak_bw_mult: u32,
+    /// DSPs consumed per 16-bit MAC (paper: 1 on the evaluated Xilinx parts).
+    pub dsp_per_mac: u64,
+    /// Board power model: idle-subtracted dynamic power at full utilisation
+    /// (W) — used only by the Fig. 10 energy-efficiency comparison.
+    pub dynamic_power_w: f64,
+}
+
+/// A bandwidth setting: multiplier over the 1× baseline (≈1.1 GB/s).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BandwidthConfig {
+    /// Multiplier (1, 2, 4, 12, ...).
+    pub mult: u32,
+    /// Total bandwidth in bytes/s.
+    pub total_bytes_per_s: f64,
+    /// Fraction of total bandwidth allocated to the input stream; the rest
+    /// serves the output stream. Inputs dominate under output-stationary
+    /// dataflow, so the default split favours them.
+    pub input_fraction: f64,
+}
+
+impl BandwidthConfig {
+    /// Input-stream bandwidth (bytes/s).
+    pub fn bw_in(&self) -> f64 {
+        self.total_bytes_per_s * self.input_fraction
+    }
+
+    /// Output-stream bandwidth (bytes/s).
+    pub fn bw_out(&self) -> f64 {
+        self.total_bytes_per_s * (1.0 - self.input_fraction)
+    }
+}
+
+/// 1× baseline bandwidth in bytes/s (paper: "less than 4.5 GB/s for Ultra96
+/// and ZC706", with 1× quoted as 1.1 GB/s).
+pub const BASE_BW_BYTES: f64 = 1.1e9 * 1.0166; // 12× ⇒ 13.4 GB/s, 4× ⇒ 4.47 GB/s
+
+impl Platform {
+    /// Xilinx Zynq-7000 Z7045 on the ZC706 board.
+    pub fn z7045() -> Self {
+        Platform {
+            name: "Z7045",
+            board: "ZC706",
+            dsp: 900,
+            bram_bytes: 2_400_000 + 120_000, // 2.40 MB BRAM (+distributed slack)
+            luts: 218_600,
+            flip_flops: 437_200,
+            clock_hz: 150e6,
+            peak_bw_bytes: 4.5e9,
+            peak_bw_mult: 4,
+            dsp_per_mac: 1,
+            dynamic_power_w: 5.0,
+        }
+    }
+
+    /// Xilinx Zynq UltraScale+ ZU7EV on the ZCU104 board.
+    pub fn zu7ev() -> Self {
+        Platform {
+            name: "ZU7EV",
+            board: "ZCU104",
+            dsp: 1728,
+            bram_bytes: 4_750_000 + 230_000,
+            luts: 230_000,
+            flip_flops: 461_000,
+            clock_hz: 200e6,
+            peak_bw_bytes: 13.4e9,
+            peak_bw_mult: 12,
+            dsp_per_mac: 1,
+            dynamic_power_w: 7.0,
+        }
+    }
+
+    /// All evaluated platforms.
+    pub fn all() -> Vec<Platform> {
+        vec![Platform::z7045(), Platform::zu7ev()]
+    }
+
+    /// Bandwidth configuration at multiplier `mult` (1×, 2×, 4×, 12×...).
+    /// Clamped to the platform's measured peak.
+    pub fn bandwidth(&self, mult: u32) -> BandwidthConfig {
+        let raw = BASE_BW_BYTES * mult as f64;
+        BandwidthConfig {
+            mult,
+            total_bytes_per_s: raw.min(self.peak_bw_bytes * 1.0001),
+            input_fraction: 2.0 / 3.0,
+        }
+    }
+
+    /// Peak MAC throughput (MACs/cycle) if every DSP maps one 16-bit MAC.
+    pub fn peak_macs_per_cycle(&self) -> u64 {
+        self.dsp / self.dsp_per_mac
+    }
+
+    /// Theoretical peak in GOp/s (2 ops per MAC).
+    pub fn peak_gops(&self) -> f64 {
+        2.0 * self.peak_macs_per_cycle() as f64 * self.clock_hz / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        let z = Platform::z7045();
+        assert_eq!(z.dsp, 900);
+        assert_eq!(z.luts, 218_600);
+        assert_eq!(z.clock_hz, 150e6);
+        let u = Platform::zu7ev();
+        assert_eq!(u.dsp, 1728);
+        assert_eq!(u.clock_hz, 200e6);
+        assert!(u.bram_bytes > z.bram_bytes);
+    }
+
+    #[test]
+    fn bandwidth_scaling_matches_paper() {
+        let z = Platform::z7045();
+        let bw1 = z.bandwidth(1);
+        assert!((bw1.total_bytes_per_s / 1e9 - 1.12).abs() < 0.02, "1× ≈ 1.1 GB/s");
+        let bw4 = z.bandwidth(4);
+        assert!((bw4.total_bytes_per_s / 1e9 - 4.47).abs() < 0.05, "4× ≈ 4.5 GB/s");
+        // ZC706 saturates at its measured peak.
+        let bw12 = z.bandwidth(12);
+        assert!(bw12.total_bytes_per_s <= 4.5e9 * 1.001);
+        // ZCU104 reaches 13.4 GB/s at 12×.
+        let u = Platform::zu7ev();
+        assert!((u.bandwidth(12).total_bytes_per_s / 1e9 - 13.4).abs() < 0.1);
+    }
+
+    #[test]
+    fn bw_split_sums_to_total() {
+        let bw = Platform::z7045().bandwidth(2);
+        assert!((bw.bw_in() + bw.bw_out() - bw.total_bytes_per_s).abs() < 1.0);
+        assert!(bw.bw_in() > bw.bw_out(), "input stream gets the larger share");
+    }
+
+    #[test]
+    fn peak_gops_sane() {
+        // Z7045 @150 MHz, 900 DSP ⇒ 270 GOp/s peak.
+        assert!((Platform::z7045().peak_gops() - 270.0).abs() < 1.0);
+        // ZU7EV @200 MHz, 1728 DSP ⇒ 691.2 GOp/s.
+        assert!((Platform::zu7ev().peak_gops() - 691.2).abs() < 1.0);
+    }
+}

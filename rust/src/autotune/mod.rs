@@ -1,0 +1,194 @@
+//! Hardware-aware tuning of OVSF ratios (paper §6.2, Fig. 7).
+//!
+//! Insight: when a layer is memory- or compute-bound, the weights-generation
+//! stage has slack — its OVSF ratio can be raised (better weight
+//! approximation ⇒ better accuracy) *without* moving the layer's initiation
+//! interval, i.e. at zero throughput cost.
+//!
+//! The scheme: ① run the design flow at the OVSF25 ratios and fix the
+//! resulting accelerator configuration; ② classify every layer's bottleneck;
+//! ③ for layers not bound by CNN-WGen, raise ρ step-by-step up to (but not
+//! past) the point where weights generation would become the bottleneck;
+//! ④ emit the converged profile (the model is then retrained and the DSE
+//! re-run — steps the caller drives).
+
+use crate::arch::{DesignPoint, Platform};
+use crate::dse::search::{optimise, DseConfig};
+use crate::error::Result;
+use crate::perf::model::{PerfModel, WeightsSource};
+use crate::perf::Bound;
+use crate::workload::{Network, RatioProfile};
+
+/// The ratio ladder the tuner climbs (superset of every value appearing in
+/// the paper's Table 1: 0.125 … 1.0).
+pub const RHO_LADDER: [f64; 7] = [0.125, 0.25, 0.333, 0.4, 0.5, 0.75, 1.0];
+
+/// Outcome of the autotuning pass.
+#[derive(Clone, Debug)]
+pub struct AutotuneResult {
+    /// The converged per-layer profile.
+    pub profile: RatioProfile,
+    /// The accelerator configuration the tuning was performed against.
+    pub sigma: DesignPoint,
+    /// Per-layer bound classification at the initial (OVSF25) profile.
+    pub initial_bounds: Vec<Bound>,
+    /// Per-layer bound classification at the converged profile.
+    pub final_bounds: Vec<Bound>,
+    /// Throughput at the initial profile (inf/s).
+    pub initial_inf_per_s: f64,
+    /// Throughput at the converged profile (inf/s).
+    pub final_inf_per_s: f64,
+}
+
+/// Raise one layer's ρ as far as the pipeline slack allows: the largest
+/// ladder value whose `t_wgen` does not exceed the layer's II from the
+/// other stages. Only increases over `rho_now` are permitted (the paper's
+/// lower-bound guarantee).
+fn max_rho_within_slack(
+    perf: &PerfModel,
+    sigma: &DesignPoint,
+    layer: &crate::workload::layer::Layer,
+    rho_now: f64,
+) -> f64 {
+    let base = perf.layer_perf(sigma, layer, WeightsSource::OnTheFly { rho: rho_now });
+    // Slack ceiling: the II set by the non-wgen stages.
+    let ceiling = base.t_mem_in.max(base.t_eng).max(base.t_mem_out);
+    let mut best = rho_now;
+    for &rho in RHO_LADDER.iter() {
+        if rho <= rho_now {
+            continue;
+        }
+        let t_wgen = perf.t_wgen(sigma, layer, rho);
+        if t_wgen <= ceiling {
+            best = rho;
+        }
+    }
+    best
+}
+
+/// Run the full hardware-aware autotuning flow for a CNN–platform pair at a
+/// given bandwidth. Starts from the OVSF25 profile (paper step ①).
+pub fn autotune(
+    cfg: &DseConfig,
+    platform: &Platform,
+    bw_mult: u32,
+    net: &Network,
+) -> Result<AutotuneResult> {
+    let initial = RatioProfile::ovsf25(net);
+    autotune_from(cfg, platform, bw_mult, net, initial)
+}
+
+/// Autotune from an explicit starting profile.
+pub fn autotune_from(
+    cfg: &DseConfig,
+    platform: &Platform,
+    bw_mult: u32,
+    net: &Network,
+    initial: RatioProfile,
+) -> Result<AutotuneResult> {
+    // ① derive the accelerator configuration at the starting ratios.
+    let dse = optimise(cfg, platform, bw_mult, net, &initial, true)?;
+    let sigma = dse.sigma;
+    let perf = PerfModel::new(platform.clone(), bw_mult);
+
+    // ② bottleneck analysis at the starting profile.
+    let initial_perf = perf.network_perf(&sigma, net, &initial);
+    let initial_bounds: Vec<Bound> = initial_perf.layers.iter().map(|l| l.bound).collect();
+
+    // ③ per-layer ratio raise within pipeline slack.
+    let mut rhos = initial.rhos.clone();
+    for (i, layer) in net.layers.iter().enumerate() {
+        if !layer.ovsf {
+            continue;
+        }
+        rhos[i] = max_rho_within_slack(&perf, &sigma, layer, rhos[i]);
+    }
+    let profile = RatioProfile {
+        name: "hw-aware-autotuned".to_string(),
+        rhos,
+    };
+
+    // ④ converged evaluation.
+    let final_perf = perf.network_perf(&sigma, net, &profile);
+    let final_bounds: Vec<Bound> = final_perf.layers.iter().map(|l| l.bound).collect();
+    Ok(AutotuneResult {
+        profile,
+        sigma,
+        initial_bounds,
+        final_bounds,
+        initial_inf_per_s: initial_perf.inf_per_s,
+        final_inf_per_s: final_perf.inf_per_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::resnet;
+
+    fn run(bw: u32) -> (Network, AutotuneResult) {
+        let net = resnet::resnet18();
+        let cfg = DseConfig::default();
+        let r = autotune(&cfg, &Platform::z7045(), bw, &net).unwrap();
+        (net, r)
+    }
+
+    #[test]
+    fn ratios_only_increase() {
+        let (net, r) = run(1);
+        let initial = RatioProfile::ovsf25(&net);
+        for (i, (&a, &b)) in initial.rhos.iter().zip(&r.profile.rhos).enumerate() {
+            assert!(b >= a - 1e-12, "layer {i} decreased: {a} → {b}");
+        }
+    }
+
+    #[test]
+    fn throughput_is_preserved() {
+        // The paper's guarantee: accuracy gain at no processing-speed cost.
+        for bw in [1u32, 2, 4] {
+            let (_, r) = run(bw);
+            let ratio = r.final_inf_per_s / r.initial_inf_per_s;
+            assert!(
+                ratio > 0.98,
+                "autotuning lost {:.1}% throughput at {bw}×",
+                (1.0 - ratio) * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn memory_bound_layers_get_higher_ratios() {
+        // At 1× bandwidth ResNet18 is severely memory-bound (Table 1):
+        // the tuner should raise many ratios above OVSF25.
+        let (net, r) = run(1);
+        let initial = RatioProfile::ovsf25(&net);
+        let raised = initial
+            .rhos
+            .iter()
+            .zip(&r.profile.rhos)
+            .filter(|(&a, &b)| b > a + 1e-12)
+            .count();
+        assert!(raised >= 4, "only {raised} layers raised at 1×");
+        let e_init = initial.effective_rho(&net);
+        let e_final = r.profile.effective_rho(&net);
+        assert!(e_final > e_init, "effective ρ must rise: {e_init} → {e_final}");
+    }
+
+    #[test]
+    fn never_creates_wgen_bottleneck() {
+        for bw in [1u32, 2, 4] {
+            let (_, r) = run(bw);
+            for (i, (&before, &after)) in
+                r.initial_bounds.iter().zip(&r.final_bounds).enumerate()
+            {
+                if before != Bound::WGen {
+                    assert_ne!(
+                        after,
+                        Bound::WGen,
+                        "layer {i} became wgen-bound at {bw}× after tuning"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! The faithful baseline: an optimised conventional single computation
+//! engine (paper Fig. 3 / §7.1.4-a) executing the *vanilla* CNN, with
+//! weights streamed from off-chip (or pinned on-chip when they fit) and the
+//! tile configuration chosen by roofline-style DSE.
+
+use crate::arch::Platform;
+use crate::dse::roofline::{baseline_optimise, BaselineResult};
+use crate::dse::search::DseConfig;
+use crate::error::Result;
+use crate::workload::Network;
+
+/// Run the baseline DSE and return the optimised conventional-engine design
+/// for `net` at a bandwidth multiplier.
+pub fn evaluate_faithful(
+    platform: &Platform,
+    bw_mult: u32,
+    net: &Network,
+) -> Result<BaselineResult> {
+    baseline_optimise(&DseConfig::default(), platform, bw_mult, net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::search::optimise;
+    use crate::workload::{resnet, RatioProfile};
+
+    #[test]
+    fn unzip_beats_faithful_at_1x_bandwidth() {
+        // The paper's core claim (Tables 4–5): at constrained bandwidth
+        // on-the-fly generation wins substantially.
+        let net = resnet::resnet34();
+        let plat = Platform::z7045();
+        let faithful = evaluate_faithful(&plat, 1, &net).unwrap();
+        let profile = RatioProfile::ovsf50(&net);
+        let unzip = optimise(&DseConfig::default(), &plat, 1, &net, &profile, true).unwrap();
+        let speedup = unzip.perf.inf_per_s / faithful.perf.inf_per_s;
+        assert!(
+            speedup > 1.3,
+            "expected ≳2× speedup at 1× bandwidth, got {speedup:.2}×"
+        );
+    }
+
+    #[test]
+    fn gap_closes_at_high_bandwidth() {
+        let net = resnet::resnet34();
+        let plat = Platform::z7045();
+        let profile = RatioProfile::ovsf50(&net);
+        let s = |bw: u32| {
+            let f = evaluate_faithful(&plat, bw, &net).unwrap();
+            let u = optimise(&DseConfig::default(), &plat, bw, &net, &profile, true).unwrap();
+            u.perf.inf_per_s / f.perf.inf_per_s
+        };
+        let s1 = s(1);
+        let s4 = s(4);
+        assert!(s4 < s1, "speedup must shrink with bandwidth: {s1:.2}→{s4:.2}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Embedded-GPU (NVIDIA Jetson TX2) model for the Fig. 10 energy-efficiency
+//! comparison (paper §7.6).
+//!
+//! The paper measures TensorRT + cuDNN FP16 at batch 1 in the Max-Q mode
+//! (GPU at 850 MHz, best perf/W). We model the GPU as an FP16 roofline with
+//! per-network achieved-efficiency factors: batch-1 inference on small
+//! kernels leaves much of the 256-core GPU idle — most severely for
+//! SqueezeNet-class models — which is exactly the effect the paper's
+//! comparison rests on. See DESIGN.md §Substitutions.
+
+/// Jetson TX2 in Max-Q mode.
+#[derive(Clone, Debug)]
+pub struct Tx2Model {
+    /// GPU clock (Hz) — Max-Q sets 850 MHz.
+    pub clock_hz: f64,
+    /// CUDA cores.
+    pub cores: u32,
+    /// FP16 ops per core per cycle (2-wide FMA ⇒ 4 ops).
+    pub fp16_ops_per_core_cycle: f64,
+    /// Idle-subtracted board power during inference (W).
+    pub dynamic_power_w: f64,
+}
+
+impl Default for Tx2Model {
+    fn default() -> Self {
+        Tx2Model {
+            clock_hz: 850e6,
+            cores: 256,
+            fp16_ops_per_core_cycle: 4.0,
+            dynamic_power_w: 9.0,
+        }
+    }
+}
+
+impl Tx2Model {
+    /// Peak FP16 GOp/s.
+    pub fn peak_gops(&self) -> f64 {
+        self.cores as f64 * self.fp16_ops_per_core_cycle * self.clock_hz / 1e9
+    }
+
+    /// Achieved fraction of peak for batch-1 TensorRT inference, per
+    /// network class. Calibrated against published TX2 TensorRT batch-1
+    /// figures: deep uniform convs utilise the GPU best; small/1×1-heavy
+    /// networks poorly.
+    pub fn efficiency(network: &str) -> f64 {
+        match network {
+            "ResNet18" => 0.13,
+            "ResNet34" => 0.15,
+            "ResNet50" => 0.17,
+            "SqueezeNet" => 0.10,
+            _ => 0.14,
+        }
+    }
+
+    /// Modelled batch-1 throughput (inf/s) for a network of `gops` work.
+    pub fn inf_per_s(&self, network: &str, gops: f64) -> f64 {
+        self.peak_gops() * Self::efficiency(network) / gops
+    }
+
+    /// Energy efficiency in inf/s/W.
+    pub fn inf_per_s_per_w(&self, network: &str, gops: f64) -> f64 {
+        self.inf_per_s(network, gops) / self.dynamic_power_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Network;
+
+    #[test]
+    fn peak_matches_spec() {
+        let m = Tx2Model::default();
+        // 256 cores × 4 × 0.85 GHz = 870.4 GOp/s FP16.
+        assert!((m.peak_gops() - 870.4).abs() < 0.5);
+    }
+
+    #[test]
+    fn throughputs_in_plausible_range() {
+        let m = Tx2Model::default();
+        for net in Network::benchmarks() {
+            let t = m.inf_per_s(&net.name, net.gops());
+            assert!(
+                t > 10.0 && t < 1000.0,
+                "{}: {t} inf/s outside plausible TX2 range",
+                net.name
+            );
+        }
+    }
+
+    #[test]
+    fn squeezenet_underutilises_most() {
+        assert!(Tx2Model::efficiency("SqueezeNet") < Tx2Model::efficiency("ResNet18"));
+        assert!(Tx2Model::efficiency("ResNet18") < Tx2Model::efficiency("ResNet50"));
+    }
+}

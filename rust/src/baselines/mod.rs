@@ -1,0 +1,12 @@
+//! Evaluation baselines (paper §7.1.4, §7.2.2, §7.6): the optimised
+//! conventional engine (faithful), Taylor-pruned variants, the embedded-GPU
+//! (Jetson TX2) model and the static prior-FPGA-work comparison rows.
+
+pub mod faithful;
+pub mod gpu;
+pub mod prior_work;
+pub mod pruning;
+
+pub use faithful::evaluate_faithful;
+pub use gpu::Tx2Model;
+pub use pruning::TaylorPruner;

@@ -1,0 +1,283 @@
+//! Static comparison rows for Tables 7–8: published figures of prior FPGA
+//! accelerators, quoted from the paper (those systems are closed-source;
+//! the paper itself compares against their published numbers).
+
+/// One prior-work accelerator row.
+#[derive(Clone, Debug)]
+pub struct PriorWork {
+    /// System name / citation tag.
+    pub name: &'static str,
+    /// Benchmark network.
+    pub network: &'static str,
+    /// Target FPGA.
+    pub fpga: &'static str,
+    /// Clock in MHz.
+    pub clock_mhz: u32,
+    /// Precision description.
+    pub precision: &'static str,
+    /// DSP blocks on the device.
+    pub dsps: u32,
+    /// Logic capacity in kLUTs (or kALMs for Intel parts).
+    pub klut: f64,
+    /// Block RAM in MB.
+    pub bram_mb: f64,
+    /// Reported throughput (inf/s).
+    pub inf_s: f64,
+    /// Reported inf/s/DSP (precision-adjusted as in the paper: ×0.5 for 8b).
+    pub inf_s_dsp: f64,
+    /// Reported inf/s/kLUT.
+    pub inf_s_logic: f64,
+}
+
+/// Table 7 rows (ResNet18/34 + SqueezeNet designs).
+pub fn table7_rows() -> Vec<PriorWork> {
+    vec![
+        PriorWork {
+            name: "Compiler-based [17]",
+            network: "ResNet18",
+            fpga: "Z7045",
+            clock_mhz: 250,
+            precision: "16b fixed",
+            dsps: 900,
+            klut: 218.6,
+            bram_mb: 2.40,
+            inf_s: 21.38,
+            inf_s_dsp: 0.0237,
+            inf_s_logic: 0.0978,
+        },
+        PriorWork {
+            name: "Sparse-CNN (Deep Compression) [59]",
+            network: "ResNet34",
+            fpga: "Z7045",
+            clock_mhz: 166,
+            precision: "16b fixed",
+            dsps: 900,
+            klut: 218.6,
+            bram_mb: 2.40,
+            inf_s: 27.84,
+            inf_s_dsp: 0.0309,
+            inf_s_logic: 0.1273,
+        },
+        PriorWork {
+            name: "Light-OPU [100]",
+            network: "SqueezeNet",
+            fpga: "K325T",
+            clock_mhz: 200,
+            precision: "8b fixed",
+            dsps: 840,
+            klut: 203.8,
+            bram_mb: 1.95,
+            inf_s: 420.90,
+            inf_s_dsp: 0.2505,
+            inf_s_logic: 2.0652,
+        },
+        PriorWork {
+            name: "Multi-accelerator V485T [75]",
+            network: "SqueezeNet",
+            fpga: "V485T",
+            clock_mhz: 170,
+            precision: "16b fixed",
+            dsps: 2800,
+            klut: 303.6,
+            bram_mb: 4.52,
+            inf_s: 913.40,
+            inf_s_dsp: 0.3260,
+            inf_s_logic: 3.0085,
+        },
+        PriorWork {
+            name: "Multi-accelerator V690T [75]",
+            network: "SqueezeNet",
+            fpga: "V690T",
+            clock_mhz: 170,
+            precision: "16b fixed",
+            dsps: 3600,
+            klut: 433.2,
+            bram_mb: 6.46,
+            inf_s: 1173.00,
+            inf_s_dsp: 0.3258,
+            inf_s_logic: 2.7077,
+        },
+    ]
+}
+
+/// Table 8 rows (ResNet50 designs).
+pub fn table8_rows() -> Vec<PriorWork> {
+    vec![
+        PriorWork {
+            name: "Snowflake [31]",
+            network: "ResNet50",
+            fpga: "Z7045",
+            clock_mhz: 250,
+            precision: "16b fixed",
+            dsps: 900,
+            klut: 218.6,
+            bram_mb: 2.40,
+            inf_s: 17.7,
+            inf_s_dsp: 0.0196,
+            inf_s_logic: 0.0809,
+        },
+        PriorWork {
+            name: "xDNN [95]",
+            network: "ResNet50",
+            fpga: "VU9P",
+            clock_mhz: 500,
+            precision: "8b fixed",
+            dsps: 6840,
+            klut: 1182.0,
+            bram_mb: 9.48,
+            inf_s: 153.57,
+            inf_s_dsp: 0.0112,
+            inf_s_logic: 0.0649,
+        },
+        PriorWork {
+            name: "DNNVM [96]",
+            network: "ResNet50",
+            fpga: "ZU9",
+            clock_mhz: 500,
+            precision: "8b fixed",
+            dsps: 2520,
+            klut: 274.0,
+            bram_mb: 4.01,
+            inf_s: 80.95,
+            inf_s_dsp: 0.016,
+            inf_s_logic: 0.1477,
+        },
+        PriorWork {
+            name: "ALAMO (Arria10) [62]",
+            network: "ResNet50",
+            fpga: "GX1150",
+            clock_mhz: 240,
+            precision: "16b fixed",
+            dsps: 3036,
+            klut: 427.2,
+            bram_mb: 6.60,
+            inf_s: 71.38,
+            inf_s_dsp: 0.0235,
+            inf_s_logic: 0.1671,
+        },
+        PriorWork {
+            name: "ALAMO (Stratix10) [62]",
+            network: "ResNet50",
+            fpga: "GX2800",
+            clock_mhz: 150,
+            precision: "16b fixed",
+            dsps: 11520,
+            klut: 933.0,
+            bram_mb: 28.62,
+            inf_s: 77.55,
+            inf_s_dsp: 0.0067,
+            inf_s_logic: 0.0831,
+        },
+        PriorWork {
+            name: "ResNetAccel [63]",
+            network: "ResNet50",
+            fpga: "GX1150",
+            clock_mhz: 300,
+            precision: "16b fixed",
+            dsps: 3036,
+            klut: 427.2,
+            bram_mb: 6.60,
+            inf_s: 33.93,
+            inf_s_dsp: 0.0111,
+            inf_s_logic: 0.0794,
+        },
+        PriorWork {
+            name: "FTDL [76]",
+            network: "ResNet50",
+            fpga: "VU125",
+            clock_mhz: 650,
+            precision: "16b fixed",
+            dsps: 1200,
+            klut: 716.0,
+            bram_mb: 11.075,
+            inf_s: 151.22,
+            inf_s_dsp: 0.1260,
+            inf_s_logic: 0.2112,
+        },
+        PriorWork {
+            name: "Cloud-DNN [19]",
+            network: "ResNet50",
+            fpga: "VU9P",
+            clock_mhz: 125,
+            precision: "16b fixed",
+            dsps: 6840,
+            klut: 1182.0,
+            bram_mb: 43.23,
+            inf_s: 71.94,
+            inf_s_dsp: 0.0105,
+            inf_s_logic: 0.0608,
+        },
+        PriorWork {
+            name: "Interconnect-aware [73]",
+            network: "ResNet50",
+            fpga: "VU37P",
+            clock_mhz: 650,
+            precision: "8b fixed",
+            dsps: 9024,
+            klut: 1304.0,
+            bram_mb: 42.61,
+            inf_s: 766.0,
+            inf_s_dsp: 0.0424,
+            inf_s_logic: 0.5874,
+        },
+        PriorWork {
+            name: "Full-stack [58]",
+            network: "ResNet50",
+            fpga: "GX1150",
+            clock_mhz: 200,
+            precision: "8b fixed",
+            dsps: 3036,
+            klut: 427.2,
+            bram_mb: 6.60,
+            inf_s: 197.23,
+            inf_s_dsp: 0.0324,
+            inf_s_logic: 0.4616,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_internally_consistent() {
+        // inf/s/LUT must equal inf_s / klut within the paper's rounding —
+        // for the 16-bit rows. (The paper applies its ×0.5 8-bit adjustment
+        // to the logic column of some 8-bit rows but not others; those rows
+        // are quoted verbatim.)
+        for row in table7_rows().iter().chain(table8_rows().iter()) {
+            if row.precision.starts_with("8b") {
+                continue;
+            }
+            let derived = row.inf_s / row.klut;
+            assert!(
+                (derived - row.inf_s_logic).abs() / row.inf_s_logic < 0.02,
+                "{}: derived {derived} vs quoted {}",
+                row.name,
+                row.inf_s_logic
+            );
+        }
+    }
+
+    #[test]
+    fn precision_adjustment_applied_to_8b_rows() {
+        // 8-bit rows carry the paper's ×0.5 DSP adjustment: their quoted
+        // inf/s/DSP is half the raw inf_s/dsps.
+        for row in table8_rows() {
+            let raw = row.inf_s / row.dsps as f64;
+            let factor = row.inf_s_dsp / raw;
+            if row.precision.starts_with("8b") {
+                assert!((factor - 0.5).abs() < 0.05, "{}: {factor}", row.name);
+            } else {
+                assert!((factor - 1.0).abs() < 0.05, "{}: {factor}", row.name);
+            }
+        }
+    }
+
+    #[test]
+    fn table_sizes() {
+        assert_eq!(table7_rows().len(), 5);
+        assert_eq!(table8_rows().len(), 10);
+    }
+}

@@ -1,0 +1,187 @@
+//! Taylor channel pruning baseline (paper §7.1.4-b, Molchanov et al. [65]).
+//!
+//! The paper prunes channels by their first-order Taylor contribution to
+//! the loss, iteratively, until a target keep-ratio is reached ("Tay82"
+//! keeps 82% of filters). For the *hardware* evaluation only the pruned
+//! layer shapes matter. The paper's reported parameter counts scale
+//! ≈ linearly with the keep-ratio (e.g. ResNet34 Tay82: 17.4M ≈ 0.80×
+//! 21.8M), which corresponds to scaling each prunable layer's channel
+//! count by √keep. Accuracy anchors come from Tables 4–5.
+//!
+//! A *criterion-level* implementation (scores → iterative drop) is also
+//! provided and exercised on synthetic gradients, preserving the paper's
+//! mechanism even though ImageNet gradients are out of scope.
+
+use crate::workload::layer::LayerKind;
+use crate::workload::Network;
+
+/// Channel-pruning transformer.
+#[derive(Clone, Debug)]
+pub struct TaylorPruner {
+    /// Fraction of filters kept (e.g. 0.82 for Tay82).
+    pub keep: f64,
+}
+
+impl TaylorPruner {
+    /// Pruner at a keep-ratio.
+    pub fn new(keep: f64) -> Self {
+        assert!(keep > 0.0 && keep <= 1.0);
+        Self { keep }
+    }
+
+    /// The paper's naming: `Tay82` etc.
+    pub fn name(&self) -> String {
+        format!("Tay{:.0}", self.keep * 100.0)
+    }
+
+    /// Scale a channel count by √keep, keeping at least 1 and rounding to a
+    /// hardware-friendly multiple of 4 where possible.
+    fn scale(&self, ch: u64) -> u64 {
+        let s = (ch as f64 * self.keep.sqrt()).round() as u64;
+        let s = s.max(1);
+        if s >= 8 {
+            (s / 4) * 4
+        } else {
+            s
+        }
+    }
+
+    /// Produce the pruned network: channel counts shrink by √keep on every
+    /// prunable layer, with input channels chained to the producing layer.
+    /// The stem input (3) and classifier output (1000) stay fixed.
+    pub fn prune(&self, net: &Network) -> Network {
+        let mut layers = Vec::with_capacity(net.layers.len());
+        for (i, l) in net.layers.iter().enumerate() {
+            let mut nl = l.clone();
+            // Input channels follow the upstream pruning except the stem.
+            if i > 0 && l.n_in > 3 {
+                nl.n_in = self.scale(l.n_in);
+            }
+            // Output channels pruned except the final classifier.
+            let is_classifier =
+                i == net.layers.len() - 1 || (l.kind == LayerKind::Fc) || l.n_out == 1000;
+            if !is_classifier {
+                nl.n_out = self.scale(l.n_out);
+            }
+            layers.push(nl);
+        }
+        Network {
+            name: format!("{}-{}", net.name, self.name()),
+            layers,
+        }
+    }
+
+    /// Paper-anchored top-1 accuracy for the pruned variant of a benchmark
+    /// (linear interpolation between the reported keep-ratio anchors).
+    pub fn top1(&self, net: &Network) -> Option<f64> {
+        let anchors: &[(f64, f64)] = match net.name.as_str() {
+            "ResNet34" => &[(0.45, 63.1), (0.56, 67.8), (0.72, 71.9), (0.82, 72.7), (1.0, 73.3)],
+            "ResNet18" => &[(0.56, 58.3), (0.72, 64.8), (0.82, 67.3), (0.88, 68.8), (1.0, 69.8)],
+            _ => return None,
+        };
+        let k = self.keep;
+        if k <= anchors[0].0 {
+            return Some(anchors[0].1);
+        }
+        for w in anchors.windows(2) {
+            let (x0, y0) = w[0];
+            let (x1, y1) = w[1];
+            if k <= x1 {
+                return Some(y0 + (y1 - y0) * (k - x0) / (x1 - x0));
+            }
+        }
+        Some(anchors.last().unwrap().1)
+    }
+}
+
+/// First-order Taylor importance of a filter: `|Σ w·g|` over its weights
+/// and gradients (Molchanov et al.). Exercised on synthetic models in tests
+/// and the Python trainer.
+pub fn taylor_score(weights: &[f32], grads: &[f32]) -> f64 {
+    assert_eq!(weights.len(), grads.len());
+    weights
+        .iter()
+        .zip(grads)
+        .map(|(&w, &g)| (w as f64) * (g as f64))
+        .sum::<f64>()
+        .abs()
+}
+
+/// Iteratively drop the lowest-scoring filters until `keep`·N survive;
+/// returns the surviving indices (ascending).
+pub fn iterative_taylor_prune(scores: &[f64], keep: f64) -> Vec<usize> {
+    let n = scores.len();
+    let target = ((n as f64 * keep).round() as usize).clamp(1, n);
+    let mut live: Vec<usize> = (0..n).collect();
+    while live.len() > target {
+        let (pos, _) = live
+            .iter()
+            .enumerate()
+            .min_by(|(_, &a), (_, &b)| scores[a].partial_cmp(&scores[b]).unwrap())
+            .unwrap();
+        live.remove(pos);
+    }
+    live
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::resnet;
+
+    #[test]
+    fn params_scale_linearly_with_keep() {
+        // The calibration target: Tay82 on ResNet34 ⇒ ≈17.4M params.
+        let net = resnet::resnet34();
+        let pruned = TaylorPruner::new(0.82).prune(&net);
+        let ratio = pruned.params() as f64 / net.params() as f64;
+        assert!(
+            (ratio - 0.80).abs() < 0.06,
+            "Tay82 params ratio {ratio:.3} vs paper ≈0.80"
+        );
+        let p_m = pruned.params() as f64 / 1e6;
+        assert!((p_m - 17.4).abs() < 1.6, "Tay82 {p_m}M vs paper 17.4M");
+    }
+
+    #[test]
+    fn deeper_prune_means_fewer_params() {
+        let net = resnet::resnet18();
+        let mut prev = net.params();
+        for keep in [0.88, 0.82, 0.72, 0.56] {
+            let p = TaylorPruner::new(keep).prune(&net).params();
+            assert!(p < prev, "params must shrink at keep={keep}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn classifier_shape_preserved() {
+        let net = resnet::resnet18();
+        let pruned = TaylorPruner::new(0.56).prune(&net);
+        assert_eq!(pruned.layers.last().unwrap().n_out, 1000);
+        assert_eq!(pruned.layers[0].n_in, 3);
+    }
+
+    #[test]
+    fn accuracy_anchors_match_tables() {
+        let net34 = resnet::resnet34();
+        assert!((TaylorPruner::new(0.82).top1(&net34).unwrap() - 72.7).abs() < 0.01);
+        assert!((TaylorPruner::new(0.56).top1(&net34).unwrap() - 67.8).abs() < 0.01);
+        let net18 = resnet::resnet18();
+        assert!((TaylorPruner::new(0.72).top1(&net18).unwrap() - 64.8).abs() < 0.01);
+    }
+
+    #[test]
+    fn iterative_prune_keeps_top_scores() {
+        let scores = vec![0.5, 0.1, 0.9, 0.3, 0.7, 0.2];
+        let kept = iterative_taylor_prune(&scores, 0.5);
+        assert_eq!(kept, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn taylor_score_is_abs_inner_product() {
+        let w = vec![1.0f32, -2.0, 3.0];
+        let g = vec![0.5f32, 0.5, -0.5];
+        assert!((taylor_score(&w, &g) - 2.0).abs() < 1e-9);
+    }
+}

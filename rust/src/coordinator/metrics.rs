@@ -1,0 +1,77 @@
+//! Latency/throughput metrics for the request loop.
+
+use crate::util::stats;
+use std::time::Duration;
+
+/// Collected request metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    latencies_us: Vec<f64>,
+}
+
+impl Metrics {
+    /// Empty collector.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request latency.
+    pub fn record(&mut self, d: Duration) {
+        self.latencies_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    /// Requests recorded.
+    pub fn count(&self) -> usize {
+        self.latencies_us.len()
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        stats::mean(&self.latencies_us)
+    }
+
+    /// Latency percentile (µs).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        stats::percentile(&self.latencies_us, p)
+    }
+
+    /// Throughput implied by total busy time (req/s).
+    pub fn throughput(&self) -> f64 {
+        let total_s: f64 = self.latencies_us.iter().sum::<f64>() / 1e6;
+        if total_s == 0.0 {
+            0.0
+        } else {
+            self.count() as f64 / total_s
+        }
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}µs p50={:.1}µs p99={:.1}µs throughput={:.1}/s",
+            self.count(),
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(99.0),
+            self.throughput()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarises() {
+        let mut m = Metrics::new();
+        for us in [100u64, 200, 300] {
+            m.record(Duration::from_micros(us));
+        }
+        assert_eq!(m.count(), 3);
+        assert!((m.mean_us() - 200.0).abs() < 1.0);
+        assert!(m.percentile_us(50.0) >= 100.0);
+        assert!(m.throughput() > 0.0);
+        assert!(m.summary().contains("n=3"));
+    }
+}

@@ -1,0 +1,14 @@
+//! The inference coordinator (L3): schedules layers on the simulated
+//! accelerator, drives the PJRT runtime for real-numerics execution, and
+//! serves a request stream with metrics — the role the Arm host CPU plays
+//! on the paper's boards (§7.1).
+
+pub mod metrics;
+pub mod multi_model;
+pub mod multi_tenant;
+pub mod scheduler;
+pub mod server;
+
+pub use metrics::Metrics;
+pub use scheduler::InferencePlan;
+pub use server::{InferenceServer, Request, Response};

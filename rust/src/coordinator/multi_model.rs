@@ -1,0 +1,213 @@
+//! Multi-model time-sharing — the defining property of single computation
+//! engines (paper §1: "the accelerator's resources are reused across both
+//! layers and CNN models, without the need to reconfigure the fabric").
+//!
+//! One engine configuration `σ` serves several CNNs. Switching models
+//! costs only the α-coefficient (re)load for the incoming model's OVSF
+//! layers — dense weights never move because they are generated on-chip;
+//! a conventional engine would re-stream its entire weights at first use
+//! of every layer regardless. The manager tracks which model's α set is
+//! resident and charges switch cycles accordingly.
+
+use crate::arch::{DesignPoint, Platform};
+use crate::coordinator::scheduler::InferencePlan;
+use crate::error::{Error, Result};
+use crate::workload::{Network, RatioProfile};
+use std::collections::HashMap;
+
+/// A registered model: plan + α volume.
+#[derive(Clone, Debug)]
+pub struct RegisteredModel {
+    /// Inference plan on the shared engine configuration.
+    pub plan: InferencePlan,
+    /// α words that must be resident for this model.
+    pub alpha_words: u64,
+    /// Inference count served.
+    pub served: u64,
+}
+
+/// Time-sharing manager for one engine configuration.
+pub struct MultiModelManager {
+    platform: Platform,
+    sigma: DesignPoint,
+    bw_mult: u32,
+    models: HashMap<String, RegisteredModel>,
+    /// Name of the model whose α set is currently resident.
+    resident: Option<String>,
+    /// Cumulative cycles spent on model switches (α reload).
+    pub switch_cycles: f64,
+    /// Cumulative cycles spent on inference.
+    pub inference_cycles: f64,
+}
+
+impl MultiModelManager {
+    /// Manager over a fixed engine configuration.
+    pub fn new(platform: Platform, bw_mult: u32, sigma: DesignPoint) -> Self {
+        Self {
+            platform,
+            sigma,
+            bw_mult,
+            models: HashMap::new(),
+            resident: None,
+            switch_cycles: 0.0,
+            inference_cycles: 0.0,
+        }
+    }
+
+    /// Register a network with a ratio profile. The same σ serves all
+    /// models — no fabric reconfiguration.
+    pub fn register(&mut self, net: &Network, profile: &RatioProfile) {
+        let plan = InferencePlan::build(&self.platform, self.bw_mult, self.sigma, net, profile);
+        let alpha_words: u64 = net
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.ovsf)
+            .map(|(i, l)| l.n_in * l.n_out * l.basis_per_chunk(profile.rho(i)))
+            .sum();
+        self.models.insert(
+            net.name.clone(),
+            RegisteredModel {
+                plan,
+                alpha_words,
+                served: 0,
+            },
+        );
+    }
+
+    /// Cycles to load a model's α set (16-bit words over the input stream).
+    fn alpha_load_cycles(&self, words: u64) -> f64 {
+        let bw = self.platform.bandwidth(self.bw_mult);
+        (words * 2) as f64 / (bw.bw_in() / self.platform.clock_hz)
+    }
+
+    /// Serve one inference of `model`; returns the charged cycles
+    /// (switch + inference).
+    pub fn infer(&mut self, model: &str) -> Result<f64> {
+        let m = self
+            .models
+            .get(model)
+            .ok_or_else(|| Error::Coordinator(format!("model '{model}' not registered")))?
+            .clone();
+        let mut cycles = 0.0;
+        if self.resident.as_deref() != Some(model) {
+            let sw = self.alpha_load_cycles(m.alpha_words);
+            self.switch_cycles += sw;
+            cycles += sw;
+            self.resident = Some(model.to_string());
+        }
+        cycles += m.plan.total_cycles;
+        self.inference_cycles += m.plan.total_cycles;
+        self.models.get_mut(model).unwrap().served += 1;
+        Ok(cycles)
+    }
+
+    /// Fraction of total cycles lost to model switching.
+    pub fn switch_overhead(&self) -> f64 {
+        let total = self.switch_cycles + self.inference_cycles;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.switch_cycles / total
+        }
+    }
+
+    /// Per-model served counts.
+    pub fn served(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<(String, u64)> = self
+            .models
+            .iter()
+            .map(|(k, m)| (k.clone(), m.served))
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{resnet, squeezenet};
+
+    fn manager() -> MultiModelManager {
+        let mut mm = MultiModelManager::new(
+            Platform::zu7ev(),
+            12,
+            DesignPoint::new(128, 256, 8, 96),
+        );
+        let r18 = resnet::resnet18();
+        let sqn = squeezenet::squeezenet1_1();
+        mm.register(&r18, &RatioProfile::ovsf50(&r18));
+        mm.register(&sqn, &RatioProfile::ovsf50(&sqn));
+        mm
+    }
+
+    #[test]
+    fn same_engine_serves_both_models() {
+        let mut mm = manager();
+        let c1 = mm.infer("ResNet18").unwrap();
+        let c2 = mm.infer("SqueezeNet").unwrap();
+        assert!(c1 > 0.0 && c2 > 0.0);
+        assert_eq!(mm.served(), vec![("ResNet18".into(), 1), ("SqueezeNet".into(), 1)]);
+    }
+
+    #[test]
+    fn switching_charges_alpha_reload_only_once_per_run() {
+        let mut mm = manager();
+        let first = mm.infer("ResNet18").unwrap();
+        let repeat = mm.infer("ResNet18").unwrap();
+        assert!(
+            first > repeat,
+            "first inference pays the α load: {first} vs {repeat}"
+        );
+        let back = mm.infer("SqueezeNet").unwrap();
+        let back2 = mm.infer("SqueezeNet").unwrap();
+        assert!(back > back2);
+    }
+
+    #[test]
+    fn batched_scheduling_amortises_switches() {
+        // Round-robin (A B A B ...) pays a switch per request; batching
+        // (A A A A B B B B) pays two — the scheduling insight time-shared
+        // engines rely on.
+        let mut rr = manager();
+        for _ in 0..4 {
+            rr.infer("ResNet18").unwrap();
+            rr.infer("SqueezeNet").unwrap();
+        }
+        let mut batched = manager();
+        for _ in 0..4 {
+            batched.infer("ResNet18").unwrap();
+        }
+        for _ in 0..4 {
+            batched.infer("SqueezeNet").unwrap();
+        }
+        assert!(
+            batched.switch_cycles < rr.switch_cycles,
+            "batched {} !< round-robin {}",
+            batched.switch_cycles,
+            rr.switch_cycles
+        );
+        assert!(batched.switch_overhead() < rr.switch_overhead());
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let mut mm = manager();
+        assert!(mm.infer("VGG19").is_err());
+    }
+
+    #[test]
+    fn switch_cost_is_small_vs_inference() {
+        // The on-the-fly advantage: switching models costs only the α set
+        // (≈ MBs/compression), far less than an inference.
+        let mut mm = manager();
+        let first = mm.infer("ResNet18").unwrap();
+        let steady = mm.infer("ResNet18").unwrap();
+        let switch = first - steady;
+        assert!(
+            switch < steady,
+            "α reload ({switch}) should be below one inference ({steady})"
+        );
+    }
+}

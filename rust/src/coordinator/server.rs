@@ -1,0 +1,168 @@
+//! Threaded inference request loop (batch = 1, the paper's embedded
+//! setting). The offline crate set has no tokio; a worker thread + mpsc
+//! channels implement the same accept → execute → respond loop the Arm
+//! host runs on the boards.
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::scheduler::InferencePlan;
+use crate::error::{Error, Result};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// An inference request: an opaque input id plus (optionally) activations
+/// for real-numerics execution.
+#[derive(Debug)]
+pub struct Request {
+    /// Request identifier.
+    pub id: u64,
+    /// Flat input activations (empty for timing-only requests).
+    pub input: Vec<f32>,
+}
+
+/// The server's reply.
+#[derive(Debug)]
+pub struct Response {
+    /// Request identifier.
+    pub id: u64,
+    /// Simulated on-accelerator latency (seconds).
+    pub device_latency_s: f64,
+    /// Host wall-clock latency for the request.
+    pub host_latency_s: f64,
+    /// Output activations (empty for timing-only requests).
+    pub output: Vec<f32>,
+}
+
+enum Msg {
+    Work(Request, mpsc::Sender<Response>),
+    Shutdown,
+}
+
+/// A single-worker inference server executing an [`InferencePlan`].
+pub struct InferenceServer {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<JoinHandle<Metrics>>,
+}
+
+impl InferenceServer {
+    /// Spawn the worker. `factory` is called *inside* the worker thread to
+    /// build the executor (PJRT clients are not `Send`, so the executor —
+    /// which maps a request's input to output activations — must be
+    /// constructed where it runs).
+    pub fn spawn<F, E>(plan: InferencePlan, factory: F) -> Self
+    where
+        F: FnOnce() -> E + Send + 'static,
+        E: FnMut(&Request) -> Vec<f32>,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = std::thread::spawn(move || {
+            let mut execute = factory();
+            let mut metrics = Metrics::new();
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Work(req, reply) => {
+                        let start = Instant::now();
+                        let output = execute(&req);
+                        let host = start.elapsed();
+                        metrics.record(host);
+                        // Ignore send failure: client may have dropped.
+                        let _ = reply.send(Response {
+                            id: req.id,
+                            device_latency_s: plan.latency_s,
+                            host_latency_s: host.as_secs_f64(),
+                            output,
+                        });
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+            metrics
+        });
+        Self {
+            tx,
+            worker: Some(worker),
+        }
+    }
+
+    /// Submit a request and wait for its response.
+    pub fn infer(&self, req: Request) -> Result<Response> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Work(req, reply_tx))
+            .map_err(|_| Error::Coordinator("worker gone".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("no response".into()))
+    }
+
+    /// Stop the worker and collect the metrics.
+    pub fn shutdown(mut self) -> Result<Metrics> {
+        self.tx
+            .send(Msg::Shutdown)
+            .map_err(|_| Error::Coordinator("worker gone".into()))?;
+        self.worker
+            .take()
+            .expect("worker present")
+            .join()
+            .map_err(|_| Error::Coordinator("worker panicked".into()))
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{DesignPoint, Platform};
+    use crate::workload::{resnet, RatioProfile};
+
+    fn plan() -> InferencePlan {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        InferencePlan::build(
+            &Platform::z7045(),
+            4,
+            DesignPoint::new(64, 64, 16, 48),
+            &net,
+            &profile,
+        )
+    }
+
+    #[test]
+    fn serves_requests_in_order() {
+        let server = InferenceServer::spawn(plan(), || |req: &Request| vec![req.id as f32]);
+        for id in 0..10u64 {
+            let resp = server
+                .infer(Request {
+                    id,
+                    input: vec![],
+                })
+                .unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.output, vec![id as f32]);
+            assert!(resp.device_latency_s > 0.0);
+        }
+        let metrics = server.shutdown().unwrap();
+        assert_eq!(metrics.count(), 10);
+    }
+
+    #[test]
+    fn shutdown_is_clean_without_requests() {
+        let server = InferenceServer::spawn(plan(), || |_: &Request| vec![]);
+        let metrics = server.shutdown().unwrap();
+        assert_eq!(metrics.count(), 0);
+    }
+
+    #[test]
+    fn drop_does_not_hang() {
+        let server = InferenceServer::spawn(plan(), || |_: &Request| vec![]);
+        drop(server);
+    }
+}

@@ -1,0 +1,9 @@
+//! Design-space exploration (paper §5.3, Eq. 10): exhaustive search over
+//! `σ = ⟨M, T_R, T_P, T_C⟩` under the platform's resource constraints.
+
+pub mod greedy;
+pub mod roofline;
+pub mod search;
+
+pub use roofline::baseline_optimise;
+pub use search::{optimise, sweep, DseConfig, DseResult};

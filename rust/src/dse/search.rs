@@ -1,0 +1,249 @@
+//! Exhaustive DSE for unzipFPGA (paper Eq. 10):
+//!
+//! `max_σ T(σ, W)  s.t.  rsc(σ) ≤ rsc_avail`
+//!
+//! The search enumerates the candidate grid, prunes infeasible points on
+//! the cheap DSP test first, evaluates the survivors with the analytical
+//! model and keeps the argmax. The grid is sharded across threads (the
+//! offline crate set has no rayon; plain `std::thread` scoped workers).
+
+use crate::arch::{DesignPoint, Platform};
+use crate::error::{Error, Result};
+use crate::perf::model::{NetworkPerf, PerfModel};
+use crate::rsc::model::{ResourceModel, ResourceUsage};
+use crate::workload::{Network, RatioProfile};
+
+/// Candidate grids for each tunable parameter.
+#[derive(Clone, Debug)]
+pub struct DseConfig {
+    /// Candidate M values (wgen vector width).
+    pub m: Vec<u64>,
+    /// Candidate T_R values.
+    pub t_r: Vec<u64>,
+    /// Candidate T_P values.
+    pub t_p: Vec<u64>,
+    /// Candidate T_C values.
+    pub t_c: Vec<u64>,
+    /// Worker threads for the sweep.
+    pub threads: usize,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        DseConfig {
+            m: vec![8, 16, 32, 64, 128, 256],
+            t_r: vec![16, 32, 64, 128, 256],
+            t_p: vec![4, 8, 16, 32, 64],
+            t_c: vec![8, 16, 32, 64, 96, 128, 192, 256],
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(16),
+        }
+    }
+}
+
+impl DseConfig {
+    /// Enumerate the raw candidate grid.
+    pub fn candidates(&self) -> Vec<DesignPoint> {
+        let mut out =
+            Vec::with_capacity(self.m.len() * self.t_r.len() * self.t_p.len() * self.t_c.len());
+        for &m in &self.m {
+            for &t_r in &self.t_r {
+                for &t_p in &self.t_p {
+                    for &t_c in &self.t_c {
+                        out.push(DesignPoint::new(m, t_r, t_p, t_c));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Outcome of a DSE run.
+#[derive(Clone, Debug)]
+pub struct DseResult {
+    /// Winning design point.
+    pub sigma: DesignPoint,
+    /// Its predicted performance.
+    pub perf: NetworkPerf,
+    /// Its resource usage.
+    pub usage: ResourceUsage,
+    /// Points enumerated.
+    pub explored: usize,
+    /// Points that passed the resource constraints.
+    pub feasible: usize,
+}
+
+/// One evaluated feasible point (for sweeps / figures).
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// The design point.
+    pub sigma: DesignPoint,
+    /// Throughput in inf/s.
+    pub inf_per_s: f64,
+    /// Resource usage.
+    pub usage: ResourceUsage,
+}
+
+/// Evaluate every feasible candidate; returns all of them (unsorted).
+pub fn sweep(
+    cfg: &DseConfig,
+    platform: &Platform,
+    bw_mult: u32,
+    net: &Network,
+    profile: &RatioProfile,
+    selective_pes: bool,
+) -> Vec<SweepPoint> {
+    let candidates = cfg.candidates();
+    let rsc = ResourceModel {
+        platform: platform.clone(),
+        wl_bytes: 2,
+        selective_pes,
+    };
+    let mut perf = PerfModel::new(platform.clone(), bw_mult);
+    perf.selective_pes = selective_pes;
+
+    let n_threads = cfg.threads.max(1).min(candidates.len().max(1));
+    let chunk = candidates.len().div_ceil(n_threads);
+    let mut results: Vec<SweepPoint> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for shard in candidates.chunks(chunk.max(1)) {
+            let rsc = &rsc;
+            let perf = &perf;
+            handles.push(scope.spawn(move || {
+                let mut local = Vec::new();
+                for &sigma in shard {
+                    // Cheap prune: DSP budget (paper prunes violating
+                    // configurations "to accelerate the exploration").
+                    if sigma.dsps(rsc.platform.dsp_per_mac) > rsc.platform.dsp {
+                        continue;
+                    }
+                    let usage = rsc.usage(&sigma, net, profile);
+                    if !rsc.feasible(&usage) {
+                        continue;
+                    }
+                    let p = perf.network_perf(&sigma, net, profile);
+                    local.push(SweepPoint {
+                        sigma,
+                        inf_per_s: p.inf_per_s,
+                        usage,
+                    });
+                }
+                local
+            }));
+        }
+        for h in handles {
+            results.extend(h.join().expect("DSE worker panicked"));
+        }
+    });
+    results
+}
+
+/// Run the full optimisation (Eq. 10) and return the best design.
+pub fn optimise(
+    cfg: &DseConfig,
+    platform: &Platform,
+    bw_mult: u32,
+    net: &Network,
+    profile: &RatioProfile,
+    selective_pes: bool,
+) -> Result<DseResult> {
+    let explored = cfg.candidates().len();
+    let points = sweep(cfg, platform, bw_mult, net, profile, selective_pes);
+    let feasible = points.len();
+    let best = points
+        .into_iter()
+        .max_by(|a, b| a.inf_per_s.partial_cmp(&b.inf_per_s).unwrap())
+        .ok_or_else(|| Error::NoFeasibleDesign {
+            network: net.name.clone(),
+            platform: platform.name.to_string(),
+        })?;
+    let mut perf_model = PerfModel::new(platform.clone(), bw_mult);
+    perf_model.selective_pes = selective_pes;
+    let perf = perf_model.network_perf(&best.sigma, net, profile);
+    Ok(DseResult {
+        sigma: best.sigma,
+        perf,
+        usage: best.usage,
+        explored,
+        feasible,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::resnet;
+
+    #[test]
+    fn finds_feasible_optimum_on_z7045() {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let cfg = DseConfig::default();
+        let r = optimise(&cfg, &Platform::z7045(), 4, &net, &profile, true).unwrap();
+        assert!(r.feasible > 0 && r.feasible <= r.explored);
+        assert!(r.usage.dsps <= 900);
+        assert!(r.perf.inf_per_s > 1.0, "ResNet18 should exceed 1 inf/s");
+        // The optimum should use a substantial share of the DSP budget.
+        assert!(
+            r.usage.dsps as f64 >= 0.5 * 900.0,
+            "optimum uses only {} DSPs",
+            r.usage.dsps
+        );
+    }
+
+    #[test]
+    fn optimum_is_argmax_of_sweep() {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let mut cfg = DseConfig::default();
+        cfg.m = vec![32, 64];
+        cfg.t_r = vec![32, 64];
+        cfg.t_p = vec![8, 16];
+        cfg.t_c = vec![32, 64];
+        let pts = sweep(&cfg, &Platform::z7045(), 4, &net, &profile, true);
+        let best_sweep = pts
+            .iter()
+            .map(|p| p.inf_per_s)
+            .fold(f64::MIN, f64::max);
+        let r = optimise(&cfg, &Platform::z7045(), 4, &net, &profile, true).unwrap();
+        assert!((r.perf.inf_per_s - best_sweep).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_bandwidth_never_hurts() {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let cfg = DseConfig::default();
+        let r1 = optimise(&cfg, &Platform::z7045(), 1, &net, &profile, true).unwrap();
+        let r4 = optimise(&cfg, &Platform::z7045(), 4, &net, &profile, true).unwrap();
+        assert!(r4.perf.inf_per_s >= r1.perf.inf_per_s * 0.999);
+    }
+
+    #[test]
+    fn bigger_platform_is_faster() {
+        let net = resnet::resnet50();
+        let profile = RatioProfile::ovsf50(&net);
+        let cfg = DseConfig::default();
+        let z = optimise(&cfg, &Platform::z7045(), 4, &net, &profile, true).unwrap();
+        let u = optimise(&cfg, &Platform::zu7ev(), 4, &net, &profile, true).unwrap();
+        assert!(u.perf.inf_per_s > z.perf.inf_per_s);
+    }
+
+    #[test]
+    fn infeasible_when_grid_exceeds_platform() {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let cfg = DseConfig {
+            m: vec![512],
+            t_r: vec![64],
+            t_p: vec![64],
+            t_c: vec![256], // 512 + 16384 MACs ≫ 900 DSPs
+            threads: 2,
+        };
+        assert!(optimise(&cfg, &Platform::z7045(), 4, &net, &profile, true).is_err());
+    }
+}

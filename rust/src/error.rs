@@ -1,0 +1,63 @@
+//! Unified error type for the unzipFPGA crate.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors raised across the unzipFPGA stack.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A requested OVSF basis length is not a power of two.
+    #[error("OVSF basis length must be a power of two, got {0}")]
+    InvalidBasisLength(usize),
+
+    /// Shape mismatch when reconstructing or decomposing tensors.
+    #[error("shape mismatch: {0}")]
+    ShapeMismatch(String),
+
+    /// A design point violates the platform's resource constraints.
+    #[error("infeasible design point: {0}")]
+    Infeasible(String),
+
+    /// The design-space exploration found no feasible configuration.
+    #[error("DSE found no feasible design for {network} on {platform}")]
+    NoFeasibleDesign {
+        /// Target network name.
+        network: String,
+        /// Target platform name.
+        platform: String,
+    },
+
+    /// Invalid configuration supplied by the caller.
+    #[error("invalid configuration: {0}")]
+    InvalidConfig(String),
+
+    /// An artifact file (AOT-compiled HLO) is missing.
+    #[error("missing artifact {path}: run `make artifacts` first ({source})")]
+    MissingArtifact {
+        /// Path that was attempted.
+        path: String,
+        /// Underlying I/O error.
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// Errors bubbled up from the XLA/PJRT runtime.
+    #[error("XLA runtime error: {0}")]
+    Xla(String),
+
+    /// Plain I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// Coordinator/server errors (channel shutdowns etc.).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

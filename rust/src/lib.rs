@@ -1,0 +1,61 @@
+//! # unzipFPGA — CNN engines with on-the-fly weights generation
+//!
+//! Reproduction of *"Mitigating Memory Wall Effects in CNN Engines with
+//! On-the-Fly Weights Generation"* (Venieris, Fernandez-Marques, Lane).
+//!
+//! The crate is organised as the paper's system:
+//!
+//! * [`ovsf`] — OVSF binary-code algebra: Sylvester–Hadamard construction,
+//!   basis selection, filter reconstruction and regression (paper §2.2–2.3, §6.1).
+//! * [`workload`] — CNN layer descriptors and the GEMM view `⟨R, P, C⟩`
+//!   (paper §4.1) for ResNet18/34/50 and SqueezeNet1.1.
+//! * [`arch`] — FPGA platform specs (Table 2) and the design point
+//!   `σ = ⟨M, T_R, T_P, T_C⟩`.
+//! * [`perf`] — analytical performance model (Eqs. 5–8) and bottleneck
+//!   classification.
+//! * [`rsc`] — resource-consumption model (Eqs. 3, 4, 9) + LUT regression.
+//! * [`dse`] — exhaustive design-space exploration (Eq. 10) and the roofline
+//!   DSE used by the faithful baseline.
+//! * [`autotune`] — hardware-aware OVSF-ratio selection (paper §6.2).
+//! * [`sim`] — cycle-level simulator of the engine + CNN-WGen (TiWGen,
+//!   OVSF FIFO/aligner, alpha buffer, input-selective PEs).
+//! * [`baselines`] — faithful SCE, Taylor channel pruning, embedded-GPU model
+//!   and static prior-work rows.
+//! * [`accuracy`] — paper-anchored accuracy model for ρ-profiles.
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX/Pallas
+//!   artifacts (HLO text) and executes them.
+//! * [`coordinator`] — the inference driver: per-layer scheduling, request
+//!   loop and metrics.
+//! * [`report`] — regenerates every table and figure of the paper's
+//!   evaluation section.
+
+#![warn(missing_docs)]
+
+pub mod accuracy;
+pub mod arch;
+pub mod autotune;
+pub mod baselines;
+pub mod coordinator;
+pub mod dse;
+pub mod error;
+pub mod ovsf;
+pub mod perf;
+pub mod report;
+pub mod rsc;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};
+
+/// Commonly used items.
+pub mod prelude {
+    pub use crate::arch::{DesignPoint, Platform};
+    pub use crate::dse::search::DseResult;
+    pub use crate::error::{Error, Result};
+    pub use crate::ovsf::codes::OvsfBasis;
+    pub use crate::perf::model::{LayerPerf, PerfModel};
+    pub use crate::workload::layer::{Layer, LayerKind};
+    pub use crate::workload::Network;
+}

@@ -1,0 +1,393 @@
+//! unzipFPGA CLI — the leader entrypoint.
+//!
+//! ```text
+//! unzipfpga dse --network resnet18 --platform z7045 --bw 4
+//! unzipfpga autotune --network resnet18 --bw 2
+//! unzipfpga simulate --network resnet34 --bw 1
+//! unzipfpga table1|table3|...|table10
+//! unzipfpga fig8|fig9|fig10 [--csv]
+//! unzipfpga tables            # everything, for EXPERIMENTS.md
+//! unzipfpga serve --network resnet18 --requests 100
+//! unzipfpga runtime-check     # PJRT artifact smoke test
+//! ```
+
+use unzipfpga::arch::Platform;
+use unzipfpga::autotune::autotune;
+use unzipfpga::coordinator::scheduler::InferencePlan;
+use unzipfpga::coordinator::server::{InferenceServer, Request};
+use unzipfpga::dse::search::{optimise, DseConfig};
+use unzipfpga::error::Result;
+use unzipfpga::report::{figures, tables};
+use unzipfpga::sim::engine::simulate_network_timing;
+use unzipfpga::workload::{Network, RatioProfile};
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        flags.insert(key.to_string(), "true".into());
+                        i += 1;
+                    }
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { cmd, flags }
+    }
+
+    fn network(&self) -> Result<Network> {
+        let name = self
+            .flags
+            .get("network")
+            .map(String::as_str)
+            .unwrap_or("resnet18");
+        Network::by_name(name).ok_or_else(|| {
+            unzipfpga::Error::InvalidConfig(format!(
+                "unknown network '{name}' (try resnet18/resnet34/resnet50/squeezenet)"
+            ))
+        })
+    }
+
+    fn platform(&self) -> Platform {
+        match self
+            .flags
+            .get("platform")
+            .map(String::as_str)
+            .unwrap_or("z7045")
+            .to_lowercase()
+            .as_str()
+        {
+            "zu7ev" | "zcu104" => Platform::zu7ev(),
+            _ => Platform::z7045(),
+        }
+    }
+
+    fn bw(&self) -> u32 {
+        self.flags
+            .get("bw")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(4)
+    }
+
+    fn profile(&self, net: &Network) -> RatioProfile {
+        match self
+            .flags
+            .get("profile")
+            .map(String::as_str)
+            .unwrap_or("ovsf50")
+            .to_lowercase()
+            .as_str()
+        {
+            "ovsf25" => RatioProfile::ovsf25(net),
+            "uniform1" => RatioProfile::uniform(net, 1.0),
+            _ => RatioProfile::ovsf50(net),
+        }
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    match args.cmd.as_str() {
+        "dse" => cmd_dse(&args),
+        "autotune" => cmd_autotune(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "multi-tenant" => cmd_multi_tenant(&args),
+        "analyse" | "analyze" => cmd_analyse(&args),
+        "runtime-check" => cmd_runtime_check(),
+        "table1" => print_table(tables::table1()?),
+        "table3" => print_table(tables::table3()?),
+        "table4" => print_table(tables::table4()?),
+        "table5" => print_table(tables::table5()?),
+        "table6" => print_table(tables::table6()?),
+        "table7" => print_table(tables::table7()?),
+        "table8" => print_table(tables::table8()?),
+        "table9" => print_table(tables::table9()?),
+        "table10" => print_table(tables::table10()?),
+        "fig8" => print_fig(figures::fig8()?, &args),
+        "fig9" => print_fig(figures::fig9()?, &args),
+        "fig10" => print_fig(figures::fig10()?, &args),
+        "tables" => cmd_all_tables(),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+unzipFPGA — CNN inference with on-the-fly OVSF weights generation
+
+USAGE: unzipfpga <command> [--network N] [--platform P] [--bw B] [--profile Q]
+
+COMMANDS:
+  dse            design-space exploration (Eq. 10) for a CNN-platform pair
+  autotune       hardware-aware OVSF ratio tuning (paper §6.2)
+  simulate       cycle-level simulation of the selected design
+  serve          run the inference request loop on the planned design
+  multi-tenant   co-location study: bandwidth shared with other apps
+  analyse        per-layer breakdown (GEMM view, stage times, bound, util)
+  runtime-check  load + execute the AOT PJRT artifacts (needs `make artifacts`)
+  table1|3..10   regenerate the paper's tables
+  fig8|9|10      regenerate the paper's figures (use --csv for raw series)
+  tables         regenerate everything (EXPERIMENTS.md input)
+
+FLAGS:
+  --network   resnet18|resnet34|resnet50|squeezenet|vgg16|mobilenetv1
+              (default resnet18)
+  --platform  z7045 | zu7ev                                 (default z7045)
+  --bw        bandwidth multiplier 1|2|4|12                 (default 4)
+  --profile   ovsf50 | ovsf25 | uniform1                    (default ovsf50)
+  --requests  request count for `serve`                     (default 100)
+";
+
+fn print_table(t: unzipfpga::util::table::Table) -> Result<()> {
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn print_fig(t: unzipfpga::util::table::Table, args: &Args) -> Result<()> {
+    if args.flags.contains_key("csv") {
+        println!("{}", t.render_csv());
+    } else {
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let plat = args.platform();
+    let profile = args.profile(&net);
+    let r = optimise(&DseConfig::default(), &plat, args.bw(), &net, &profile, true)?;
+    println!(
+        "network   : {} ({} layers, {:.2} GOps)",
+        net.name,
+        net.layers.len(),
+        net.gops()
+    );
+    println!(
+        "platform  : {} @ {} MHz, {}x bandwidth",
+        plat.name,
+        plat.clock_hz / 1e6,
+        args.bw()
+    );
+    println!(
+        "profile   : {} (effective ρ = {:.3})",
+        profile.name,
+        profile.effective_rho(&net)
+    );
+    println!("explored  : {} points, {} feasible", r.explored, r.feasible);
+    println!("σ*        : {}", r.sigma);
+    println!("throughput: {:.2} inf/s", r.perf.inf_per_s);
+    println!("PE util   : {:.1}%", 100.0 * r.perf.engine_utilisation);
+    println!(
+        "resources : {} DSP, {:.2} MB BRAM, {} kLUT (α spill: {} words)",
+        r.usage.dsps,
+        r.usage.bram_bytes as f64 / 1e6,
+        r.usage.luts / 1000,
+        r.usage.alpha_spill_words
+    );
+    Ok(())
+}
+
+fn cmd_autotune(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let plat = args.platform();
+    let r = autotune(&DseConfig::default(), &plat, args.bw(), &net)?;
+    println!("σ = {}", r.sigma);
+    println!(
+        "throughput: {:.2} → {:.2} inf/s (must be preserved)",
+        r.initial_inf_per_s, r.final_inf_per_s
+    );
+    let initial = RatioProfile::ovsf25(&net);
+    println!(
+        "effective ρ: {:.3} → {:.3}",
+        initial.effective_rho(&net),
+        r.profile.effective_rho(&net)
+    );
+    println!(
+        "{:<26} {:>9} {:>9} {:>7} {:>7}",
+        "layer", "ρ before", "ρ after", "bound0", "bound1"
+    );
+    for (i, l) in net.layers.iter().enumerate() {
+        if !l.ovsf {
+            continue;
+        }
+        println!(
+            "{:<26} {:>9.3} {:>9.3} {:>7} {:>7}",
+            l.name,
+            initial.rho(i),
+            r.profile.rho(i),
+            r.initial_bounds[i].label(),
+            r.final_bounds[i].label()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let plat = args.platform();
+    let profile = args.profile(&net);
+    let r = optimise(&DseConfig::default(), &plat, args.bw(), &net, &profile, true)?;
+    let traces = simulate_network_timing(&r.sigma, &plat, args.bw(), true, &net, &profile);
+    println!(
+        "cycle-level simulation of {} on {} ({}x, σ = {}):",
+        net.name,
+        plat.name,
+        args.bw(),
+        r.sigma
+    );
+    let mut total = 0u64;
+    for t in &traces {
+        println!("  {}", t.summary());
+        total += t.total_cycles;
+    }
+    let inf_s = plat.clock_hz / total as f64;
+    println!("simulated total : {total} cycles = {inf_s:.2} inf/s");
+    println!("analytical model: {:.2} inf/s", r.perf.inf_per_s);
+    let dev = (inf_s - r.perf.inf_per_s).abs() / r.perf.inf_per_s;
+    println!("deviation       : {:.2}% (DMA burst rounding)", dev * 100.0);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let plat = args.platform();
+    let profile = args.profile(&net);
+    let n_req: u64 = args
+        .flags
+        .get("requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    let r = optimise(&DseConfig::default(), &plat, args.bw(), &net, &profile, true)?;
+    let plan = InferencePlan::build(&plat, args.bw(), r.sigma, &net, &profile);
+    println!(
+        "serving {} on {} (σ = {}, device latency {:.2} ms)",
+        plan.network,
+        plat.name,
+        plan.sigma,
+        plan.latency_s * 1e3
+    );
+    let device_latency = plan.latency_s;
+    let server = InferenceServer::spawn(plan, || {
+        // Timing-only serving: the device time is simulated; the host loop
+        // measures coordination overhead.
+        |_req: &Request| vec![]
+    });
+    for id in 0..n_req {
+        server.infer(Request { id, input: vec![] })?;
+    }
+    let metrics = server.shutdown()?;
+    println!("host loop : {}", metrics.summary());
+    println!(
+        "device    : {:.2} ms/inf => {:.2} inf/s",
+        device_latency * 1e3,
+        1.0 / device_latency
+    );
+    Ok(())
+}
+
+fn cmd_analyse(args: &Args) -> Result<()> {
+    let net = args.network()?;
+    let plat = args.platform();
+    let profile = args.profile(&net);
+    let r = optimise(&DseConfig::default(), &plat, args.bw(), &net, &profile, true)?;
+    let t = unzipfpga::report::layer_analysis::layer_analysis(
+        &plat,
+        args.bw(),
+        &r.sigma,
+        &net,
+        &profile,
+    )?;
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_multi_tenant(args: &Args) -> Result<()> {
+    use unzipfpga::coordinator::multi_tenant::co_location_sweep;
+    let net = args.network()?;
+    let plat = args.platform();
+    let reports = co_location_sweep(&plat, plat.peak_bw_mult, &net, 6)?;
+    println!(
+        "{:<8} {:>10} {:>14} {:>14} {:>9}",
+        "tenants", "bw/tenant", "baseline", "unzipFPGA", "speedup"
+    );
+    for r in &reports {
+        println!(
+            "{:<8} {:>9}x {:>14.1} {:>14.1} {:>8.2}x",
+            r.tenants,
+            r.bw_per_tenant,
+            r.baseline_inf_s,
+            r.unzip_inf_s,
+            r.speedup()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_runtime_check() -> Result<()> {
+    use unzipfpga::runtime::{artifacts_dir, ArtifactRegistry};
+    let mut reg = ArtifactRegistry::new(artifacts_dir())?;
+    println!("PJRT platform: {}", reg.client().platform_name());
+    for name in ["ovsf_wgen", "ovsf_conv", "gemm", "ovsf_gemm_fused", "model_fwd"] {
+        if !reg.has(name) {
+            println!("  {name}: MISSING (run `make artifacts`)");
+            continue;
+        }
+        let exe = reg.get(name)?;
+        println!("  {name}: loaded + compiled from {}", exe.path.display());
+    }
+    Ok(())
+}
+
+fn cmd_all_tables() -> Result<()> {
+    for (name, t) in [
+        ("table1", tables::table1()?),
+        ("table3", tables::table3()?),
+        ("table4", tables::table4()?),
+        ("table5", tables::table5()?),
+        ("table6", tables::table6()?),
+        ("table7", tables::table7()?),
+        ("table8", tables::table8()?),
+        ("table9", tables::table9()?),
+        ("table10", tables::table10()?),
+    ] {
+        println!("==== {name} ====");
+        println!("{}", t.render());
+    }
+    for (name, t) in [
+        ("fig8", figures::fig8()?),
+        ("fig9", figures::fig9()?),
+        ("fig10", figures::fig10()?),
+    ] {
+        println!("==== {name} (CSV) ====");
+        println!("{}", t.render_csv());
+    }
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! Basis-subset selection for compression ratios ρ < 1 (paper §6.1).
+//!
+//! Two strategies, compared in the paper's Table 3:
+//!
+//! * **Sequential** — keep the first `⌊ρ·L⌉` codes (simpler objective,
+//!   possibly less expressive filters).
+//! * **IterativeDrop** — iteratively discard the code with the smallest
+//!   associated `|α|` until the target ratio is reached (data-dependent,
+//!   consistently better in the paper).
+
+use crate::ovsf::codes::OvsfBasis;
+use crate::util::n_basis;
+
+/// Strategy for choosing which `⌊ρ·L⌉` of the `L` codes to keep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BasisSelection {
+    /// Keep codes `0..⌊ρ·L⌉` in construction order.
+    Sequential,
+    /// Iteratively drop the code with the smallest `|α|` magnitude.
+    IterativeDrop,
+}
+
+impl std::fmt::Display for BasisSelection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BasisSelection::Sequential => write!(f, "sequential"),
+            BasisSelection::IterativeDrop => write!(f, "iterative"),
+        }
+    }
+}
+
+/// The kept subset of a basis for one filter: indices + their coefficients.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SelectedBasis {
+    /// Kept code indices, ascending.
+    pub indices: Vec<usize>,
+    /// Coefficient for each kept index (same order as `indices`).
+    pub alphas: Vec<f32>,
+}
+
+impl SelectedBasis {
+    /// Number of kept codes.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// `true` if nothing was kept.
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+}
+
+/// Select a subset of `basis` for a target vector with full-basis
+/// coefficients `alphas` (one per code), at ratio `rho`.
+///
+/// For both strategies the surviving coefficients are unchanged: the basis
+/// is orthogonal, so the least-squares coefficients of the kept subset equal
+/// the projections onto the kept codes.
+pub fn select(
+    strategy: BasisSelection,
+    basis: &OvsfBasis,
+    alphas: &[f32],
+    rho: f64,
+) -> SelectedBasis {
+    let l = basis.len();
+    assert_eq!(alphas.len(), l, "need one α per basis code");
+    let keep = n_basis(rho, l);
+    match strategy {
+        BasisSelection::Sequential => SelectedBasis {
+            indices: (0..keep).collect(),
+            alphas: alphas[..keep].to_vec(),
+        },
+        BasisSelection::IterativeDrop => {
+            // Dropping the smallest |α| one at a time is equivalent to
+            // keeping the `keep` largest |α| (orthogonality ⇒ no re-fit
+            // needed between drops), but we still implement it iteratively
+            // to mirror the paper's procedure and to keep ties stable.
+            let mut live: Vec<usize> = (0..l).collect();
+            while live.len() > keep {
+                let (pos, _) = live
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, &a), (_, &b)| {
+                        alphas[a]
+                            .abs()
+                            .partial_cmp(&alphas[b].abs())
+                            .unwrap()
+                            .then(b.cmp(&a)) // tie: drop the later index
+                    })
+                    .expect("non-empty");
+                live.remove(pos);
+            }
+            live.sort_unstable();
+            SelectedBasis {
+                alphas: live.iter().map(|&i| alphas[i]).collect(),
+                indices: live,
+            }
+        }
+    }
+}
+
+/// Residual energy `E = ‖v − Σ α_j b_j‖²` of a selection against a target
+/// vector (paper Eq. 2's error term).
+pub fn residual_energy(
+    basis: &OvsfBasis,
+    sel: &SelectedBasis,
+    target: &[f32],
+) -> f64 {
+    let l = basis.len();
+    assert_eq!(target.len(), l);
+    let mut recon = vec![0.0f64; l];
+    for (k, &j) in sel.indices.iter().enumerate() {
+        let a = sel.alphas[k] as f64;
+        for (t, r) in recon.iter_mut().enumerate() {
+            *r += a * basis.at(j, t) as f64;
+        }
+    }
+    target
+        .iter()
+        .zip(&recon)
+        .map(|(&v, &r)| (v as f64 - r).powi(2))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ovsf::regress::project;
+    use crate::util::check::forall;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn sequential_keeps_prefix() {
+        let b = OvsfBasis::new(8).unwrap();
+        let alphas: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let s = select(BasisSelection::Sequential, &b, &alphas, 0.5);
+        assert_eq!(s.indices, vec![0, 1, 2, 3]);
+        assert_eq!(s.alphas, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn iterative_keeps_largest_magnitude() {
+        let b = OvsfBasis::new(8).unwrap();
+        let alphas = vec![0.1f32, -5.0, 0.2, 4.0, -0.05, 3.0, 0.0, 2.0];
+        let s = select(BasisSelection::IterativeDrop, &b, &alphas, 0.5);
+        assert_eq!(s.indices, vec![1, 3, 5, 7]);
+        assert_eq!(s.alphas, vec![-5.0, 4.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn iterative_never_worse_than_sequential() {
+        forall("iterative-beats-sequential", 40, |rng| {
+            let l = 1usize << rng.gen_range(2, 6); // 4..32
+            let b = OvsfBasis::new(l).unwrap();
+            let target = rng.normal_vec(l);
+            let alphas = project(&b, &target);
+            let rho = [0.25, 0.5, 0.75][rng.gen_range(0, 2) as usize];
+            let seq = select(BasisSelection::Sequential, &b, &alphas, rho);
+            let ite = select(BasisSelection::IterativeDrop, &b, &alphas, rho);
+            let e_seq = residual_energy(&b, &seq, &target);
+            let e_ite = residual_energy(&b, &ite, &target);
+            assert!(
+                e_ite <= e_seq + 1e-6,
+                "iterative {e_ite} worse than sequential {e_seq}"
+            );
+        });
+    }
+
+    #[test]
+    fn energy_monotone_in_rho() {
+        // Paper Eq. 2: ε → 0 as ρ increases.
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let b = OvsfBasis::new(16).unwrap();
+        let target = rng.normal_vec(16);
+        let alphas = project(&b, &target);
+        let mut prev = f64::INFINITY;
+        for rho in [0.125, 0.25, 0.5, 0.75, 1.0] {
+            let s = select(BasisSelection::IterativeDrop, &b, &alphas, rho);
+            let e = residual_energy(&b, &s, &target);
+            assert!(e <= prev + 1e-9, "energy not monotone at ρ={rho}");
+            prev = e;
+        }
+        assert!(prev < 1e-6, "full basis must reconstruct exactly");
+    }
+}

@@ -1,0 +1,232 @@
+//! OVSF code construction (paper Eq. 1).
+//!
+//! `H_1 = [1]`, `H_{2k} = H_2 ⊗ H_k` (Sylvester construction). Each row of
+//! `H_L` is an OVSF code of length `L = 2^k`: binary (±1) and mutually
+//! orthogonal, so the `L` rows form a basis of `R^L`.
+//!
+//! Two representations are kept: `i8` (±1) rows for numerics, and bit-packed
+//! `u64` blocks (1 ⇒ +1, 0 ⇒ −1) mirroring how the hardware OVSF FIFO
+//! stores codes on-chip (1 bit/element).
+
+use crate::error::{Error, Result};
+use crate::util::is_pow2;
+
+/// A full OVSF basis of length `L` (all `L` codes).
+#[derive(Clone, Debug)]
+pub struct OvsfBasis {
+    len: usize,
+    /// Row-major ±1 entries: `codes[j*len + t]` is element `t` of code `j`.
+    codes: Vec<i8>,
+}
+
+impl OvsfBasis {
+    /// Construct the length-`len` OVSF basis. `len` must be a power of two.
+    pub fn new(len: usize) -> Result<Self> {
+        if !is_pow2(len) {
+            return Err(Error::InvalidBasisLength(len));
+        }
+        // Sylvester expansion, iteratively doubling.
+        let mut codes = vec![1i8];
+        let mut cur = 1usize;
+        while cur < len {
+            let next = cur * 2;
+            let mut out = vec![0i8; next * next];
+            for r in 0..cur {
+                for c in 0..cur {
+                    let v = codes[r * cur + c];
+                    out[r * next + c] = v; // top-left
+                    out[r * next + cur + c] = v; // top-right
+                    out[(cur + r) * next + c] = v; // bottom-left
+                    out[(cur + r) * next + cur + c] = -v; // bottom-right
+                }
+            }
+            codes = out;
+            cur = next;
+        }
+        Ok(Self { len, codes })
+    }
+
+    /// Basis length `L` (= number of codes).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// `true` iff the basis is empty (never for a constructed basis).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The `j`-th code as a ±1 slice.
+    pub fn code(&self, j: usize) -> &[i8] {
+        assert!(j < self.len, "code index {j} out of range (L={})", self.len);
+        &self.codes[j * self.len..(j + 1) * self.len]
+    }
+
+    /// Element `(j, t)` — sign of code `j` at position `t`.
+    #[inline]
+    pub fn at(&self, j: usize, t: usize) -> i8 {
+        self.codes[j * self.len + t]
+    }
+
+    /// Inner product of two codes (orthogonality: `L·δ_ij`).
+    pub fn dot(&self, i: usize, j: usize) -> i64 {
+        self.code(i)
+            .iter()
+            .zip(self.code(j))
+            .map(|(&a, &b)| (a as i64) * (b as i64))
+            .sum()
+    }
+
+    /// Bit-packed form of code `j`: bit `t` of the result is 1 iff the
+    /// element is +1. This is the on-chip storage format of the hardware
+    /// OVSF FIFO (paper §4.2.2): 1 bit per element.
+    pub fn packed(&self, j: usize) -> Vec<u64> {
+        let words = (self.len + 63) / 64;
+        let mut out = vec![0u64; words];
+        for (t, &v) in self.code(j).iter().enumerate() {
+            if v > 0 {
+                out[t / 64] |= 1u64 << (t % 64);
+            }
+        }
+        out
+    }
+
+    /// Unpack a bit-packed code back to ±1.
+    pub fn unpack(packed: &[u64], len: usize) -> Vec<i8> {
+        (0..len)
+            .map(|t| {
+                if packed[t / 64] >> (t % 64) & 1 == 1 {
+                    1
+                } else {
+                    -1
+                }
+            })
+            .collect()
+    }
+
+    /// On-chip storage for the full basis in bits (paper Eq. 9 uses the
+    /// `K²_max × K²_max`-bit OVSF FIFO term).
+    pub fn storage_bits(&self) -> u64 {
+        (self.len * self.len) as u64
+    }
+
+    /// Tree-structured construction (Adachi et al. [4]): code
+    /// `c_{2k} = [c_k, c_k]`, `c_{2k+1} = [c_k, −c_k]`. Returns code with
+    /// tree index `idx` at depth `log2(len)`. Used to cross-check the
+    /// Sylvester construction.
+    pub fn tree_code(len: usize, idx: usize) -> Result<Vec<i8>> {
+        if !is_pow2(len) {
+            return Err(Error::InvalidBasisLength(len));
+        }
+        assert!(idx < len);
+        let mut code = vec![1i8];
+        let mut bits = Vec::new();
+        let mut i = idx;
+        let mut l = len;
+        while l > 1 {
+            bits.push(i % 2);
+            i /= 2;
+            l /= 2;
+        }
+        // bits collected LSB-first == order of expansions from root.
+        for &b in bits.iter().rev() {
+            let mut next = Vec::with_capacity(code.len() * 2);
+            next.extend_from_slice(&code);
+            if b == 0 {
+                next.extend_from_slice(&code);
+            } else {
+                next.extend(code.iter().map(|&v| -v));
+            }
+            code = next;
+        }
+        Ok(code)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn rejects_non_pow2() {
+        assert!(OvsfBasis::new(6).is_err());
+        assert!(OvsfBasis::new(0).is_err());
+    }
+
+    #[test]
+    fn h2_matches_paper() {
+        let b = OvsfBasis::new(2).unwrap();
+        assert_eq!(b.code(0), &[1, 1]);
+        assert_eq!(b.code(1), &[1, -1]);
+    }
+
+    #[test]
+    fn h4_matches_kronecker() {
+        let b = OvsfBasis::new(4).unwrap();
+        assert_eq!(b.code(0), &[1, 1, 1, 1]);
+        assert_eq!(b.code(1), &[1, -1, 1, -1]);
+        assert_eq!(b.code(2), &[1, 1, -1, -1]);
+        assert_eq!(b.code(3), &[1, -1, -1, 1]);
+    }
+
+    #[test]
+    fn rows_mutually_orthogonal() {
+        for l in [2usize, 4, 8, 16, 64, 256] {
+            let b = OvsfBasis::new(l).unwrap();
+            for i in 0..l.min(16) {
+                for j in 0..l.min(16) {
+                    let d = b.dot(i, j);
+                    if i == j {
+                        assert_eq!(d, l as i64);
+                    } else {
+                        assert_eq!(d, 0, "codes {i},{j} of L={l} not orthogonal");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn orthogonality_property_random_pairs() {
+        forall("ovsf-orthogonal", 64, |rng| {
+            let l = 1usize << rng.gen_range(1, 9); // 2..256
+            let b = OvsfBasis::new(l).unwrap();
+            let i = rng.gen_range(0, l as u64 - 1) as usize;
+            let j = rng.gen_range(0, l as u64 - 1) as usize;
+            let expect = if i == j { l as i64 } else { 0 };
+            assert_eq!(b.dot(i, j), expect);
+        });
+    }
+
+    #[test]
+    fn packing_round_trips() {
+        forall("ovsf-pack-roundtrip", 32, |rng| {
+            let l = 1usize << rng.gen_range(1, 8);
+            let b = OvsfBasis::new(l).unwrap();
+            let j = rng.gen_range(0, l as u64 - 1) as usize;
+            let packed = b.packed(j);
+            assert_eq!(OvsfBasis::unpack(&packed, l), b.code(j));
+        });
+    }
+
+    #[test]
+    fn tree_construction_spans_same_set() {
+        // The tree codes are a permutation of the Sylvester rows.
+        for l in [2usize, 4, 8, 16] {
+            let b = OvsfBasis::new(l).unwrap();
+            let sylvester: std::collections::HashSet<Vec<i8>> =
+                (0..l).map(|j| b.code(j).to_vec()).collect();
+            let tree: std::collections::HashSet<Vec<i8>> = (0..l)
+                .map(|j| OvsfBasis::tree_code(l, j).unwrap())
+                .collect();
+            assert_eq!(sylvester, tree, "L={l}");
+        }
+    }
+
+    #[test]
+    fn storage_matches_bit_count() {
+        let b = OvsfBasis::new(16).unwrap();
+        assert_eq!(b.storage_bits(), 256);
+    }
+}

@@ -1,0 +1,14 @@
+//! OVSF (orthogonal variable spreading factor) code algebra — paper §2.2–2.3.
+//!
+//! OVSF codes are the rows of Sylvester–Hadamard matrices; a layer's filters
+//! are reconstructed at run time as a learned linear combination of
+//! `⌊ρ·L⌉` codes of length `L = N_in·K·K`.
+
+pub mod basis;
+pub mod codes;
+pub mod reconstruct;
+pub mod regress;
+
+pub use basis::{BasisSelection, SelectedBasis};
+pub use codes::OvsfBasis;
+pub use reconstruct::{Filter3x3Mode, OvsfLayer};

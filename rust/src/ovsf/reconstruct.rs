@@ -1,0 +1,350 @@
+//! Filter reconstruction from OVSF codes (paper Fig. 1 and §6.1).
+//!
+//! A conv layer `N_out × N_in × K × K` is built filter-by-filter: each of
+//! the `N_out` filters is a linear combination of `⌊ρ·L⌉` codes of length
+//! `L = N_in·K'·K'`, reshaped to `N_in × K' × K'`. OVSF codes force `K'` to
+//! be a power of two, so `K = 3` filters are *extracted* from `K' = 4`
+//! reconstructions either by cropping or by 2×2 stride-1 average pooling —
+//! the paper's two strategies (Table 3).
+
+use crate::error::{Error, Result};
+use crate::ovsf::basis::{select, BasisSelection, SelectedBasis};
+use crate::ovsf::codes::OvsfBasis;
+use crate::ovsf::regress::{project, reconstruct_vec};
+use crate::util::{is_pow2, next_pow2};
+
+/// How to obtain a `3×3` (generally non-pow2 `K×K`) filter from the
+/// power-of-two OVSF reconstruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Filter3x3Mode {
+    /// Take the top-left `K×K` crop of the `K'×K'` reconstruction.
+    Crop,
+    /// Average-pool the `K'×K'` reconstruction down to `K×K`
+    /// (window `K'−K+1`, stride 1).
+    AdaptivePool,
+}
+
+impl std::fmt::Display for Filter3x3Mode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Filter3x3Mode::Crop => write!(f, "crop"),
+            Filter3x3Mode::AdaptivePool => write!(f, "adaptive"),
+        }
+    }
+}
+
+/// An OVSF-parameterised convolutional layer: the compressed representation
+/// (α coefficients + kept code indices per filter) and the geometry needed
+/// to reconstruct the dense weights.
+#[derive(Clone, Debug)]
+pub struct OvsfLayer {
+    /// Output channels (number of filters).
+    pub n_out: usize,
+    /// Input channels.
+    pub n_in: usize,
+    /// Target spatial kernel size (e.g. 3).
+    pub k: usize,
+    /// Power-of-two kernel size used for code construction (e.g. 4 for k=3).
+    pub k_ovsf: usize,
+    /// Compression ratio ρ ∈ (0, 1].
+    pub rho: f64,
+    /// Extraction mode when `k != k_ovsf`.
+    pub mode: Filter3x3Mode,
+    /// Per-filter kept basis.
+    pub filters: Vec<SelectedBasis>,
+}
+
+impl OvsfLayer {
+    /// Code length `L = N_in · K'²`.
+    pub fn code_len(&self) -> usize {
+        self.n_in * self.k_ovsf * self.k_ovsf
+    }
+
+    /// Number of α parameters stored for this layer
+    /// (`N_out · ⌊ρ·K'²⌉·N_in` in the paper's accounting).
+    pub fn n_alphas(&self) -> usize {
+        self.filters.iter().map(|f| f.len()).sum()
+    }
+
+    /// Derive an OVSF layer from dense pre-trained weights
+    /// (`weights.len() == n_out·n_in·k·k`, layout `[n_out][n_in][kh][kw]`)
+    /// via exact projection + basis selection (paper §6.1 regression stage).
+    pub fn from_weights(
+        weights: &[f32],
+        n_out: usize,
+        n_in: usize,
+        k: usize,
+        rho: f64,
+        strategy: BasisSelection,
+        mode: Filter3x3Mode,
+    ) -> Result<Self> {
+        if weights.len() != n_out * n_in * k * k {
+            return Err(Error::ShapeMismatch(format!(
+                "weights len {} != {}·{}·{}·{}",
+                weights.len(),
+                n_out,
+                n_in,
+                k,
+                k
+            )));
+        }
+        if !is_pow2(n_in) {
+            return Err(Error::ShapeMismatch(format!(
+                "OVSF layers need power-of-two N_in, got {n_in}"
+            )));
+        }
+        let k_ovsf = if is_pow2(k) { k } else { next_pow2(k) };
+        let l = n_in * k_ovsf * k_ovsf;
+        let basis = OvsfBasis::new(l)?;
+        let mut filters = Vec::with_capacity(n_out);
+        for o in 0..n_out {
+            // Embed the K×K filter into the K'×K' frame (zero padding at the
+            // right/bottom) so the projection targets the OVSF geometry.
+            let mut target = vec![0.0f32; l];
+            for c in 0..n_in {
+                for kh in 0..k {
+                    for kw in 0..k {
+                        let src = ((o * n_in + c) * k + kh) * k + kw;
+                        let dst = (c * k_ovsf + kh) * k_ovsf + kw;
+                        target[dst] = weights[src];
+                    }
+                }
+            }
+            let alphas = project(&basis, &target);
+            filters.push(select(strategy, &basis, &alphas, rho));
+        }
+        Ok(Self {
+            n_out,
+            n_in,
+            k,
+            k_ovsf,
+            rho,
+            mode,
+            filters,
+        })
+    }
+
+    /// Random OVSF layer (for synthetic workloads / tests): i.i.d. normal α
+    /// on a strategy-selected subset.
+    pub fn random(
+        rng: &mut crate::util::prng::Xoshiro256,
+        n_out: usize,
+        n_in: usize,
+        k: usize,
+        rho: f64,
+        mode: Filter3x3Mode,
+    ) -> Result<Self> {
+        let k_ovsf = if is_pow2(k) { k } else { next_pow2(k) };
+        let l = n_in * k_ovsf * k_ovsf;
+        let basis = OvsfBasis::new(l)?;
+        let filters = (0..n_out)
+            .map(|_| {
+                let alphas = rng.normal_vec(l);
+                select(BasisSelection::IterativeDrop, &basis, &alphas, rho)
+            })
+            .collect();
+        Ok(Self {
+            n_out,
+            n_in,
+            k,
+            k_ovsf,
+            rho,
+            mode,
+            filters,
+        })
+    }
+
+    /// Reconstruct the dense `n_out·n_in·k·k` weights (the software oracle
+    /// of what CNN-WGen produces in hardware).
+    pub fn reconstruct(&self) -> Result<Vec<f32>> {
+        let basis = OvsfBasis::new(self.code_len())?;
+        let mut out = vec![0.0f32; self.n_out * self.n_in * self.k * self.k];
+        for (o, sel) in self.filters.iter().enumerate() {
+            let full = reconstruct_vec(&basis, sel); // n_in × k' × k'
+            for c in 0..self.n_in {
+                let plane = &full[c * self.k_ovsf * self.k_ovsf..(c + 1) * self.k_ovsf * self.k_ovsf];
+                let extracted = extract_kxk(plane, self.k_ovsf, self.k, self.mode);
+                let dst = ((o * self.n_in) + c) * self.k * self.k;
+                out[dst..dst + self.k * self.k].copy_from_slice(&extracted);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Extract a `k×k` filter plane from a `k'×k'` reconstruction.
+pub fn extract_kxk(plane: &[f32], k_ovsf: usize, k: usize, mode: Filter3x3Mode) -> Vec<f32> {
+    assert_eq!(plane.len(), k_ovsf * k_ovsf);
+    assert!(k <= k_ovsf);
+    if k == k_ovsf {
+        return plane.to_vec();
+    }
+    match mode {
+        Filter3x3Mode::Crop => {
+            let mut out = Vec::with_capacity(k * k);
+            for r in 0..k {
+                for c in 0..k {
+                    out.push(plane[r * k_ovsf + c]);
+                }
+            }
+            out
+        }
+        Filter3x3Mode::AdaptivePool => {
+            // Window w = k' − k + 1, stride 1 average pooling.
+            let w = k_ovsf - k + 1;
+            let inv = 1.0f32 / (w * w) as f32;
+            let mut out = Vec::with_capacity(k * k);
+            for r in 0..k {
+                for c in 0..k {
+                    let mut acc = 0.0f32;
+                    for dr in 0..w {
+                        for dc in 0..w {
+                            acc += plane[(r + dr) * k_ovsf + (c + dc)];
+                        }
+                    }
+                    out.push(acc * inv);
+                }
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::prng::Xoshiro256;
+
+    fn rand_weights(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+        rng.normal_vec(n)
+    }
+
+    #[test]
+    fn full_rho_pow2_kernel_is_exact() {
+        // ρ=1 and K already a power of two ⇒ reconstruction must be exact.
+        forall("ovsf-layer-exact", 16, |rng| {
+            let n_in = 1usize << rng.gen_range(0, 3); // 1..4... n_in must be pow2 ≥1
+            let n_in = n_in.max(2);
+            let n_out = rng.gen_range(1, 4) as usize;
+            let k = [1usize, 2, 4][rng.gen_range(0, 2) as usize];
+            let w = rand_weights(rng, n_out * n_in * k * k);
+            let layer = OvsfLayer::from_weights(
+                &w,
+                n_out,
+                n_in,
+                k,
+                1.0,
+                BasisSelection::Sequential,
+                Filter3x3Mode::Crop,
+            )
+            .unwrap();
+            let r = layer.reconstruct().unwrap();
+            for (a, b) in w.iter().zip(&r) {
+                assert!((a - b).abs() < 1e-4, "exact reconstruction failed");
+            }
+        });
+    }
+
+    #[test]
+    fn crop_of_full_rho_3x3_is_exact() {
+        // With ρ=1 the 4×4 frame reproduces the zero-padded 3×3 exactly, so
+        // the crop recovers the original 3×3 filter.
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let (n_out, n_in, k) = (4usize, 8usize, 3usize);
+        let w = rand_weights(&mut rng, n_out * n_in * k * k);
+        let layer = OvsfLayer::from_weights(
+            &w,
+            n_out,
+            n_in,
+            k,
+            1.0,
+            BasisSelection::IterativeDrop,
+            Filter3x3Mode::Crop,
+        )
+        .unwrap();
+        let r = layer.reconstruct().unwrap();
+        for (a, b) in w.iter().zip(&r) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn reconstruction_error_decreases_with_rho() {
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let (n_out, n_in, k) = (2usize, 4usize, 4usize);
+        let w = rand_weights(&mut rng, n_out * n_in * k * k);
+        let mut prev = f64::INFINITY;
+        for rho in [0.25, 0.5, 0.75, 1.0] {
+            let layer = OvsfLayer::from_weights(
+                &w,
+                n_out,
+                n_in,
+                k,
+                rho,
+                BasisSelection::IterativeDrop,
+                Filter3x3Mode::Crop,
+            )
+            .unwrap();
+            let r = layer.reconstruct().unwrap();
+            let err: f64 = w
+                .iter()
+                .zip(&r)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            assert!(err <= prev + 1e-9, "error not monotone at ρ={rho}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn pool_extraction_shapes() {
+        let plane: Vec<f32> = (0..16).map(|i| i as f32).collect(); // 4×4
+        let crop = extract_kxk(&plane, 4, 3, Filter3x3Mode::Crop);
+        assert_eq!(crop, vec![0.0, 1.0, 2.0, 4.0, 5.0, 6.0, 8.0, 9.0, 10.0]);
+        let pool = extract_kxk(&plane, 4, 3, Filter3x3Mode::AdaptivePool);
+        assert_eq!(pool.len(), 9);
+        // window 2×2: pool[0] = mean(0,1,4,5) = 2.5
+        assert!((pool[0] - 2.5).abs() < 1e-6);
+        assert!((pool[8] - 12.5).abs() < 1e-6); // mean(10,11,14,15)
+    }
+
+    #[test]
+    fn alpha_count_matches_rho() {
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let layer = OvsfLayer::random(&mut rng, 8, 16, 3, 0.25, Filter3x3Mode::Crop).unwrap();
+        let l = layer.code_len();
+        assert_eq!(l, 16 * 16);
+        let per_filter = crate::util::n_basis(0.25, l);
+        assert_eq!(layer.n_alphas(), 8 * per_filter);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let w = vec![0.0f32; 10];
+        assert!(OvsfLayer::from_weights(
+            &w,
+            2,
+            2,
+            2,
+            1.0,
+            BasisSelection::Sequential,
+            Filter3x3Mode::Crop
+        )
+        .is_err());
+        let w = vec![0.0f32; 3 * 3 * 3 * 3];
+        assert!(
+            OvsfLayer::from_weights(
+                &w,
+                3,
+                3,
+                3,
+                1.0,
+                BasisSelection::Sequential,
+                Filter3x3Mode::Crop
+            )
+            .is_err(),
+            "non-pow2 N_in must be rejected"
+        );
+    }
+}

@@ -1,0 +1,107 @@
+//! Coefficient regression from pre-trained filters (paper §6.1, Eq. 2).
+//!
+//! `α* = argmin_α ‖Σ_j α_j b_j − f̂‖²`. With the full orthogonal basis the
+//! solution is the exact projection `α_j = ⟨f̂, b_j⟩ / L`. The paper uses
+//! this to initialise OVSF models from pre-trained CNNs (ImageNet setting).
+
+use crate::ovsf::basis::SelectedBasis;
+use crate::ovsf::codes::OvsfBasis;
+
+/// Exact projection of `target` onto the full basis: one α per code.
+pub fn project(basis: &OvsfBasis, target: &[f32]) -> Vec<f32> {
+    let l = basis.len();
+    assert_eq!(target.len(), l, "target length must equal basis length");
+    let inv_l = 1.0f64 / l as f64;
+    (0..l)
+        .map(|j| {
+            // Slice-wise walk (no per-element bounds re-check via `at`).
+            let code = basis.code(j);
+            let mut acc = 0.0f64;
+            for (&v, &s) in target.iter().zip(code) {
+                acc += v as f64 * s as f64;
+            }
+            (acc * inv_l) as f32
+        })
+        .collect()
+}
+
+/// Reconstruct a vector from a (possibly partial) selection.
+pub fn reconstruct_vec(basis: &OvsfBasis, sel: &SelectedBasis) -> Vec<f32> {
+    let l = basis.len();
+    let mut out = vec![0.0f32; l];
+    for (k, &j) in sel.indices.iter().enumerate() {
+        let a = sel.alphas[k];
+        let code = basis.code(j);
+        for (o, &c) in out.iter_mut().zip(code) {
+            *o += a * c as f32;
+        }
+    }
+    out
+}
+
+/// Mean squared reconstruction error for a selection against a target.
+pub fn mse(basis: &OvsfBasis, sel: &SelectedBasis, target: &[f32]) -> f64 {
+    let recon = reconstruct_vec(basis, sel);
+    let n = target.len() as f64;
+    target
+        .iter()
+        .zip(&recon)
+        .map(|(&t, &r)| ((t - r) as f64).powi(2))
+        .sum::<f64>()
+        / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ovsf::basis::{select, BasisSelection};
+    use crate::util::check::forall;
+
+    #[test]
+    fn full_projection_reconstructs_exactly() {
+        forall("projection-exact", 32, |rng| {
+            let l = 1usize << rng.gen_range(1, 8); // 2..128
+            let b = OvsfBasis::new(l).unwrap();
+            let target = rng.normal_vec(l);
+            let alphas = project(&b, &target);
+            let sel = select(BasisSelection::Sequential, &b, &alphas, 1.0);
+            let recon = reconstruct_vec(&b, &sel);
+            for (t, r) in target.iter().zip(&recon) {
+                assert!((t - r).abs() < 1e-4, "t={t} r={r} (L={l})");
+            }
+        });
+    }
+
+    #[test]
+    fn projection_of_code_is_indicator() {
+        let b = OvsfBasis::new(8).unwrap();
+        // target = 2.5 * code 3  ⇒ α = [0,0,0,2.5,0,...]
+        let target: Vec<f32> = b.code(3).iter().map(|&v| 2.5 * v as f32).collect();
+        let alphas = project(&b, &target);
+        for (j, &a) in alphas.iter().enumerate() {
+            if j == 3 {
+                assert!((a - 2.5).abs() < 1e-6);
+            } else {
+                assert!(a.abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn partial_projection_is_least_squares_optimal() {
+        // For an orthogonal basis, perturbing any kept α away from the
+        // projection can only increase the error.
+        forall("projection-optimal", 24, |rng| {
+            let l = 16usize;
+            let b = OvsfBasis::new(l).unwrap();
+            let target = rng.normal_vec(l);
+            let alphas = project(&b, &target);
+            let sel = select(BasisSelection::IterativeDrop, &b, &alphas, 0.5);
+            let base = mse(&b, &sel, &target);
+            let mut worse = sel.clone();
+            let k = rng.gen_range(0, worse.alphas.len() as u64 - 1) as usize;
+            worse.alphas[k] += 0.1;
+            assert!(mse(&b, &worse, &target) >= base - 1e-9);
+        });
+    }
+}

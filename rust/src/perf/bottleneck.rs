@@ -1,0 +1,84 @@
+//! Per-layer bottleneck classification (paper Table 1's Bound row).
+//!
+//! The accelerator is a three-stage pipeline — (input transfer ∥ weights
+//! generation) → engine → output transfer — whose initiation interval is
+//! the max of the stage times (Eq. 8). The dominating stage classifies the
+//! layer: IFM / OFM memory-bound, compute-bound, or weights-generation-bound.
+
+/// Which pipeline stage bounds a layer's initiation interval.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bound {
+    /// Memory-bound w.r.t. input feature maps.
+    Ifm,
+    /// Memory-bound w.r.t. output feature maps.
+    Ofm,
+    /// Compute-bound (processing engine).
+    Compute,
+    /// Weights-generation-bound (CNN-WGen).
+    WGen,
+}
+
+impl Bound {
+    /// The paper's single-letter labels (Table 1 footnote).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Bound::Ifm => "IFM",
+            Bound::Ofm => "OFM",
+            Bound::Compute => "C",
+            Bound::WGen => "W",
+        }
+    }
+
+    /// Classify from the four stage times (cycles).
+    pub fn classify(t_mem_in: f64, t_wgen: f64, t_eng: f64, t_mem_out: f64) -> Bound {
+        // Matches Eq. 8's nesting: stage 1 is max(t_mem_in, t_wgen).
+        let stage1 = t_mem_in.max(t_wgen);
+        let ii = stage1.max(t_eng).max(t_mem_out);
+        if ii == stage1 {
+            if t_mem_in >= t_wgen {
+                Bound::Ifm
+            } else {
+                Bound::WGen
+            }
+        } else if ii == t_eng {
+            Bound::Compute
+        } else {
+            Bound::Ofm
+        }
+    }
+}
+
+impl std::fmt::Display for Bound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_follows_max() {
+        assert_eq!(Bound::classify(100.0, 10.0, 50.0, 5.0), Bound::Ifm);
+        assert_eq!(Bound::classify(10.0, 100.0, 50.0, 5.0), Bound::WGen);
+        assert_eq!(Bound::classify(10.0, 20.0, 90.0, 5.0), Bound::Compute);
+        assert_eq!(Bound::classify(10.0, 20.0, 30.0, 95.0), Bound::Ofm);
+    }
+
+    #[test]
+    fn ties_prefer_stage_order() {
+        // Equal IFM and wgen → IFM (transfer and generation overlap; the
+        // paper reports IFM when the memory stream is at least as long).
+        assert_eq!(Bound::classify(50.0, 50.0, 10.0, 10.0), Bound::Ifm);
+        // Stage-1 vs engine tie → stage 1 wins the max() nesting.
+        assert_eq!(Bound::classify(50.0, 10.0, 50.0, 10.0), Bound::Ifm);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Bound::Ifm.label(), "IFM");
+        assert_eq!(Bound::WGen.label(), "W");
+        assert_eq!(format!("{}", Bound::Compute), "C");
+    }
+}

@@ -1,0 +1,155 @@
+//! Dataflow variants (paper §4.2.1 "Applicability to Other Dataflows").
+//!
+//! The presented TiWGen instance targets output-stationary engines; the
+//! paper notes that weight-stationary designs (e.g. the TPU) reuse each
+//! weight tile for many cycles, so the OVSF generator "would have to
+//! generate weights in longer periods" and the DSE "would automatically
+//! adjust the resource allocation". This module models that: under
+//! weight stationarity a generated `T_P×T_C` tile is reused across all
+//! `⌈R/T_R⌉` row tiles, so the *required* generation rate — and hence the
+//! pressure CNN-WGen puts on the pipeline — drops by that factor.
+
+use crate::arch::DesignPoint;
+#[cfg(test)]
+use crate::arch::Platform;
+use crate::perf::model::PerfModel;
+use crate::util::ceil_div;
+use crate::workload::{Network, RatioProfile};
+
+/// Engine dataflow.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataflow {
+    /// Output-stationary (the paper's engine; partial sums stay on-chip).
+    OutputStationary,
+    /// Weight-stationary (TPU-like; weights pinned, activations stream).
+    WeightStationary,
+}
+
+/// Effective weights-generation cycles charged *per output tile* under a
+/// dataflow: weight stationarity amortises one generation over the row
+/// tiles that reuse the weight tile.
+pub fn wgen_cycles_per_tile(
+    model: &PerfModel,
+    dataflow: Dataflow,
+    sigma: &DesignPoint,
+    layer: &crate::workload::layer::Layer,
+    rho: f64,
+) -> f64 {
+    let raw = model.t_wgen(sigma, layer, rho);
+    match dataflow {
+        Dataflow::OutputStationary => raw,
+        Dataflow::WeightStationary => {
+            let row_tiles = ceil_div(layer.gemm().r, sigma.t_r).max(1);
+            raw / row_tiles as f64
+        }
+    }
+}
+
+/// Network-level comparison of the two dataflows' wgen pressure: returns
+/// `(os_bound_layers, ws_bound_layers)` — how many layers are weights-
+/// generation-bound under each, at the given design point.
+pub fn wgen_bound_layers(
+    model: &PerfModel,
+    sigma: &DesignPoint,
+    net: &Network,
+    profile: &RatioProfile,
+) -> (usize, usize) {
+    let mut os = 0usize;
+    let mut ws = 0usize;
+    for (i, layer) in net.layers.iter().enumerate() {
+        if !layer.ovsf {
+            continue;
+        }
+        let rho = profile.rho(i);
+        let ceiling = model
+            .t_mem_in(sigma, layer, 0.0)
+            .max(model.t_eng(sigma, layer))
+            .max(model.t_mem_out(sigma, layer));
+        let os_w = wgen_cycles_per_tile(model, Dataflow::OutputStationary, sigma, layer, rho);
+        let ws_w = wgen_cycles_per_tile(model, Dataflow::WeightStationary, sigma, layer, rho);
+        if os_w > ceiling {
+            os += 1;
+        }
+        if ws_w > ceiling {
+            ws += 1;
+        }
+    }
+    (os, ws)
+}
+
+/// The maximum ρ each dataflow can afford on a layer before generation
+/// becomes the bottleneck — the knob the paper says the DSE would adjust.
+pub fn max_affordable_rho(
+    model: &PerfModel,
+    dataflow: Dataflow,
+    sigma: &DesignPoint,
+    layer: &crate::workload::layer::Layer,
+) -> f64 {
+    let ceiling = model
+        .t_mem_in(sigma, layer, 0.0)
+        .max(model.t_eng(sigma, layer))
+        .max(model.t_mem_out(sigma, layer));
+    let mut best = 0.0;
+    for &rho in crate::autotune::RHO_LADDER.iter() {
+        if wgen_cycles_per_tile(model, dataflow, sigma, layer, rho) <= ceiling {
+            best = rho;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::layer::Layer;
+    use crate::workload::resnet;
+
+    fn setup() -> (PerfModel, DesignPoint) {
+        (
+            PerfModel::new(Platform::z7045(), 4),
+            DesignPoint::new(16, 64, 16, 96),
+        )
+    }
+
+    #[test]
+    fn weight_stationary_amortises_generation() {
+        let (model, sigma) = setup();
+        let layer = Layer::conv("t", 56, 56, 64, 64, 3, 1, 1, true);
+        let os = wgen_cycles_per_tile(&model, Dataflow::OutputStationary, &sigma, &layer, 1.0);
+        let ws = wgen_cycles_per_tile(&model, Dataflow::WeightStationary, &sigma, &layer, 1.0);
+        let row_tiles = ceil_div(layer.gemm().r, sigma.t_r);
+        assert!((os / ws - row_tiles as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ws_never_more_wgen_bound_than_os() {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::uniform(&net, 1.0);
+        let (model, _) = setup();
+        // Deliberately tiny generator to create pressure.
+        let sigma = DesignPoint::new(8, 64, 16, 96);
+        let (os, ws) = wgen_bound_layers(&model, &sigma, &net, &profile);
+        assert!(ws <= os, "WS bound layers {ws} > OS {os}");
+        assert!(os > 0, "tiny M at ρ=1 must bind some layers under OS");
+    }
+
+    #[test]
+    fn ws_affords_higher_ratios() {
+        let (model, _) = setup();
+        let sigma = DesignPoint::new(8, 64, 16, 96);
+        let layer = Layer::conv("deep", 14, 14, 256, 256, 3, 1, 1, true);
+        let os = max_affordable_rho(&model, Dataflow::OutputStationary, &sigma, &layer);
+        let ws = max_affordable_rho(&model, Dataflow::WeightStationary, &sigma, &layer);
+        assert!(ws >= os, "WS {ws} < OS {os}");
+    }
+
+    #[test]
+    fn fc_layers_identical_under_both() {
+        // R = 1 for FC: nothing to amortise.
+        let (model, sigma) = setup();
+        let fc = Layer::fc("fc", 512, 1000);
+        let os = wgen_cycles_per_tile(&model, Dataflow::OutputStationary, &sigma, &fc, 0.5);
+        let ws = wgen_cycles_per_tile(&model, Dataflow::WeightStationary, &sigma, &fc, 0.5);
+        assert_eq!(os, ws);
+    }
+}

@@ -1,0 +1,10 @@
+//! Analytical performance model (paper §5.1, Eqs. 5–8) and per-layer
+//! bottleneck classification (used by Table 1 and the autotuner).
+
+pub mod bottleneck;
+pub mod dataflow;
+pub mod model;
+
+pub use bottleneck::Bound;
+pub use dataflow::Dataflow;
+pub use model::{LayerPerf, NetworkPerf, PerfModel, WeightsSource};

@@ -1,0 +1,435 @@
+//! Analytical performance model — paper §5.1 (Eqs. 5–8).
+//!
+//! All times are in fabric clock cycles. Memory bandwidths are converted to
+//! bytes/cycle at the platform clock, so memory and compute stages compare
+//! directly, exactly as the paper's initiation-interval analysis does.
+
+use crate::arch::{BandwidthConfig, DesignPoint, Platform};
+use crate::perf::bottleneck::Bound;
+use crate::util::ceil_div;
+use crate::workload::layer::Layer;
+use crate::workload::{Network, RatioProfile};
+
+/// Where a layer's weights come from during execution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WeightsSource {
+    /// CNN-WGen reconstructs them on-chip (unzipFPGA; α's pre-loaded).
+    OnTheFly {
+        /// OVSF ratio ρ of the layer.
+        rho: f64,
+    },
+    /// Streamed from off-chip per tile (conventional engine, Fig. 3).
+    OffChip,
+    /// Weights fully resident on-chip (small layers on the baseline whose
+    /// weights fit the leftover BRAM; fetched once per inference).
+    OnChip,
+}
+
+/// Performance figures of one layer on one design point.
+#[derive(Clone, Debug)]
+pub struct LayerPerf {
+    /// Layer name.
+    pub name: String,
+    /// Input transfer time per output tile (cycles) — Eq. 6, including any
+    /// off-chip weight streaming for the baseline.
+    pub t_mem_in: f64,
+    /// Weights-generation time per output tile (cycles) — Eq. 5 (0 when
+    /// weights are not generated).
+    pub t_wgen: f64,
+    /// Engine time per output tile (cycles) — `t_eng` or `t_eng*` (Eq. 7).
+    pub t_eng: f64,
+    /// Output transfer time per output tile (cycles).
+    pub t_mem_out: f64,
+    /// Initiation interval (Eq. 8).
+    pub ii: f64,
+    /// Number of output tiles `⌈R/T_R⌉·⌈C/T_C⌉`.
+    pub tiles: u64,
+    /// Total cycles for the layer (`II · tiles`).
+    pub total_cycles: f64,
+    /// Dominating stage.
+    pub bound: Bound,
+}
+
+/// Whole-network performance summary.
+#[derive(Clone, Debug)]
+pub struct NetworkPerf {
+    /// Per-layer figures.
+    pub layers: Vec<LayerPerf>,
+    /// Total cycles per inference.
+    pub total_cycles: f64,
+    /// Throughput in inferences/second.
+    pub inf_per_s: f64,
+    /// Achieved MAC/cycle ÷ instantiated engine MACs (PE-array utilisation).
+    pub engine_utilisation: f64,
+}
+
+/// The analytical model: platform + bandwidth point + datapath options.
+#[derive(Clone, Debug)]
+pub struct PerfModel {
+    /// Target platform.
+    pub platform: Platform,
+    /// Off-chip bandwidth configuration.
+    pub bw: BandwidthConfig,
+    /// Wordlength in bytes (paper: 16-bit fixed ⇒ 2).
+    pub wl_bytes: f64,
+    /// Input-selective PEs enabled (Eq. 7 vs plain `t_eng`).
+    pub selective_pes: bool,
+}
+
+impl PerfModel {
+    /// Model at a given bandwidth multiplier with selective PEs on.
+    pub fn new(platform: Platform, bw_mult: u32) -> Self {
+        let bw = platform.bandwidth(bw_mult);
+        Self {
+            platform,
+            bw,
+            wl_bytes: 2.0,
+            selective_pes: true,
+        }
+    }
+
+    /// Disable the input-selective PE mechanism (ablation, Table 10).
+    pub fn without_selective_pes(mut self) -> Self {
+        self.selective_pes = false;
+        self
+    }
+
+    /// Input-stream bytes per cycle.
+    fn bpc_in(&self) -> f64 {
+        self.bw.bw_in() / self.platform.clock_hz
+    }
+
+    /// Output-stream bytes per cycle.
+    fn bpc_out(&self) -> f64 {
+        self.bw.bw_out() / self.platform.clock_hz
+    }
+
+    /// Eq. 5 — CNN-WGen cycles to generate the weights needed for one
+    /// `T_R×T_C` output tile: `⌊ρ·l⌉ · ⌈T_P·T_C/M⌉ · ⌈P/T_P⌉`.
+    pub fn t_wgen(&self, sigma: &DesignPoint, layer: &Layer, rho: f64) -> f64 {
+        if !sigma.has_wgen() {
+            return 0.0;
+        }
+        let g = layer.gemm();
+        let n_basis = layer.basis_per_chunk(rho);
+        (n_basis * sigma.subtiles_per_tile() * ceil_div(g.p, sigma.t_p)) as f64
+    }
+
+    /// Eq. 6 (input side) — cycles to stream the `T_R×P` activations strip
+    /// for one output tile, plus `extra_bytes` of co-streamed data (weights
+    /// for the baseline).
+    pub fn t_mem_in(&self, sigma: &DesignPoint, layer: &Layer, extra_bytes: f64) -> f64 {
+        let g = layer.gemm();
+        let bytes = sigma.t_r.min(g.r) as f64 * g.p as f64 * self.wl_bytes + extra_bytes;
+        bytes / self.bpc_in()
+    }
+
+    /// Eq. 6 (output side) — cycles to drain a `T_R×T_C` output tile.
+    pub fn t_mem_out(&self, sigma: &DesignPoint, layer: &Layer) -> f64 {
+        let g = layer.gemm();
+        let rows = sigma.t_r.min(g.r) as f64;
+        let cols = sigma.t_c.min(g.c) as f64;
+        rows * cols * self.wl_bytes / self.bpc_out()
+    }
+
+    /// Engine cycles per output tile with `cols` live columns — `t_eng =
+    /// T_R·⌈P/T_P⌉`, refined to Eq. 7 (`t_eng*`) when input-selective PEs
+    /// are enabled and the tile underfills the PE array. Partial (edge)
+    /// column tiles pass their actual width here.
+    pub fn t_eng_cols(&self, sigma: &DesignPoint, layer: &Layer, cols: u64) -> f64 {
+        let g = layer.gemm();
+        let t_r = sigma.t_r.min(g.r) as f64;
+        let p_tiles = ceil_div(g.p, sigma.t_p) as f64;
+        let plain = t_r * p_tiles;
+        if !self.selective_pes || cols >= sigma.t_c {
+            return plain;
+        }
+        // Eq. 7: partially unroll T_R across the T_C − C idle PEs.
+        let t_c = sigma.t_c as f64;
+        let c = cols as f64;
+        let idle = t_c - c;
+        let numer = t_r * c - idle * (c + 1.0);
+        let refined = (idle + (numer / t_c).ceil().max(0.0)) * p_tiles;
+        // Work conservation: never below the perfectly balanced floor and
+        // never worse than the unmodified engine.
+        let floor = (t_r * c / t_c).ceil() * p_tiles;
+        refined.max(floor).min(plain)
+    }
+
+    /// Engine cycles for a full-width tile of the layer (`cols =
+    /// min(C, T_C)`).
+    pub fn t_eng(&self, sigma: &DesignPoint, layer: &Layer) -> f64 {
+        self.t_eng_cols(sigma, layer, layer.gemm().c.min(sigma.t_c))
+    }
+
+    /// Full per-layer evaluation for a weights source.
+    ///
+    /// Column tiles are evaluated in two groups — full-width tiles and the
+    /// remainder (edge) tile, whose narrower width both shortens the output
+    /// drain and lets the input-selective PEs steal work (Eq. 7). The
+    /// reported stage times/bound are those of the dominant (full-width)
+    /// group; `total_cycles` sums both groups, so it can be below
+    /// `II·tiles` when an edge tile exists.
+    pub fn layer_perf(
+        &self,
+        sigma: &DesignPoint,
+        layer: &Layer,
+        src: WeightsSource,
+    ) -> LayerPerf {
+        let g = layer.gemm();
+        let row_tiles = ceil_div(g.r, sigma.t_r);
+        let col_tiles = ceil_div(g.c, sigma.t_c);
+        let tiles = row_tiles * col_tiles;
+        let rows = sigma.t_r.min(g.r) as f64;
+
+        // Column-tile groups: (count, live columns).
+        let full_cols = g.c / sigma.t_c;
+        let c_rem = g.c % sigma.t_c;
+        let mut groups: Vec<(u64, u64)> = Vec::with_capacity(2);
+        if full_cols > 0 {
+            groups.push((full_cols, sigma.t_c));
+        }
+        if c_rem > 0 {
+            groups.push((1, c_rem));
+        }
+
+        let wgen_cycles = match src {
+            WeightsSource::OnTheFly { rho } if layer.ovsf => self.t_wgen(sigma, layer, rho),
+            _ => 0.0,
+        };
+
+        let mut total = 0.0f64;
+        let mut dominant: Option<(f64, f64, f64, f64, f64)> = None;
+        for (gi, &(count, cols)) in groups.iter().enumerate() {
+            let extra_in_bytes = match src {
+                WeightsSource::OnTheFly { .. } if layer.ovsf => 0.0,
+                // Dense weights stream per tile (baseline / non-OVSF layer).
+                WeightsSource::OnTheFly { .. } | WeightsSource::OffChip => {
+                    (g.p * cols) as f64 * self.wl_bytes
+                }
+                WeightsSource::OnChip => {
+                    // Fetched once per inference; amortise over all tiles.
+                    (g.p * g.c) as f64 * self.wl_bytes / tiles as f64
+                }
+            };
+            let t_mem_in = self.t_mem_in(sigma, layer, extra_in_bytes);
+            let t_eng = self.t_eng_cols(sigma, layer, cols);
+            let t_mem_out = rows * cols as f64 * self.wl_bytes / self.bpc_out();
+            let ii = t_mem_in.max(wgen_cycles).max(t_eng).max(t_mem_out);
+            total += ii * (row_tiles * count) as f64;
+            if gi == 0 {
+                dominant = Some((t_mem_in, wgen_cycles, t_eng, t_mem_out, ii));
+            }
+        }
+        let (t_mem_in, t_wgen, t_eng, t_mem_out, ii) =
+            dominant.expect("at least one column-tile group");
+        LayerPerf {
+            name: layer.name.clone(),
+            t_mem_in,
+            t_wgen,
+            t_eng,
+            t_mem_out,
+            ii,
+            tiles,
+            total_cycles: total,
+            bound: Bound::classify(t_mem_in, t_wgen, t_eng, t_mem_out),
+        }
+    }
+
+    /// Evaluate a whole network under unzipFPGA's on-the-fly execution with
+    /// a ratio profile.
+    pub fn network_perf(
+        &self,
+        sigma: &DesignPoint,
+        net: &Network,
+        profile: &RatioProfile,
+    ) -> NetworkPerf {
+        let layers: Vec<LayerPerf> = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                self.layer_perf(
+                    sigma,
+                    l,
+                    WeightsSource::OnTheFly {
+                        rho: profile.rho(i),
+                    },
+                )
+            })
+            .collect();
+        self.summarise(sigma, net, layers)
+    }
+
+    /// Evaluate a network with an explicit per-layer weights source
+    /// (used by the faithful baseline).
+    pub fn network_perf_with_sources(
+        &self,
+        sigma: &DesignPoint,
+        net: &Network,
+        sources: &[WeightsSource],
+    ) -> NetworkPerf {
+        assert_eq!(sources.len(), net.layers.len());
+        let layers: Vec<LayerPerf> = net
+            .layers
+            .iter()
+            .zip(sources)
+            .map(|(l, &src)| self.layer_perf(sigma, l, src))
+            .collect();
+        self.summarise(sigma, net, layers)
+    }
+
+    fn summarise(&self, sigma: &DesignPoint, net: &Network, layers: Vec<LayerPerf>) -> NetworkPerf {
+        let total_cycles: f64 = layers.iter().map(|l| l.total_cycles).sum();
+        let inf_per_s = self.platform.clock_hz / total_cycles;
+        let macs: f64 = net.macs() as f64;
+        let engine_utilisation = macs / (total_cycles * sigma.engine_macs() as f64);
+        NetworkPerf {
+            layers,
+            total_cycles,
+            inf_per_s,
+            engine_utilisation,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::resnet;
+
+    fn setup() -> (PerfModel, DesignPoint, Layer) {
+        let m = PerfModel::new(Platform::z7045(), 4);
+        let sigma = DesignPoint::new(64, 64, 16, 48);
+        let layer = Layer::conv("t", 28, 28, 128, 128, 3, 1, 1, true);
+        (m, sigma, layer)
+    }
+
+    #[test]
+    fn eq5_wgen_cycles() {
+        let (m, sigma, layer) = setup();
+        // ρ=0.5 ⇒ 8 basis vectors; subtiles = ⌈16·48/64⌉ = 12;
+        // P tiles = ⌈1152/16⌉ = 72 ⇒ 8·12·72 = 6912 cycles.
+        assert_eq!(m.t_wgen(&sigma, &layer, 0.5), 8.0 * 12.0 * 72.0);
+    }
+
+    #[test]
+    fn eq6_memory_cycles_scale_inversely_with_bw() {
+        let (m4, sigma, layer) = setup();
+        let m1 = PerfModel::new(Platform::z7045(), 1);
+        let t4 = m4.t_mem_in(&sigma, &layer, 0.0);
+        let t1 = m1.t_mem_in(&sigma, &layer, 0.0);
+        assert!(
+            (t1 / t4 - 4.0).abs() < 0.05,
+            "1× should be ~4× slower than 4×: {t1} vs {t4}"
+        );
+    }
+
+    #[test]
+    fn eq7_selective_pes_speed_up_underfilled_layers() {
+        let m = PerfModel::new(Platform::z7045(), 4);
+        // C = 64 on a 128-PE engine: the paper's motivating example.
+        let sigma = DesignPoint::new(64, 128, 4, 128);
+        let layer = Layer::conv("u", 14, 14, 64, 64, 3, 1, 1, true);
+        let with = m.t_eng(&sigma, &layer);
+        let without = m.clone().without_selective_pes().t_eng(&sigma, &layer);
+        assert!(with < without, "selective PEs must help: {with} vs {without}");
+        // Never better than perfect balancing.
+        let g = layer.gemm();
+        let floor = ((sigma.t_r.min(g.r) as f64 * g.c as f64) / sigma.t_c as f64).ceil()
+            * ceil_div(g.p, sigma.t_p) as f64;
+        assert!(with >= floor - 1e-9);
+    }
+
+    #[test]
+    fn eq7_noop_when_array_filled() {
+        let m = PerfModel::new(Platform::z7045(), 4);
+        let sigma = DesignPoint::new(64, 64, 16, 48);
+        let layer = Layer::conv("f", 28, 28, 128, 128, 3, 1, 1, true); // C=128 ≥ 48
+        let with = m.t_eng(&sigma, &layer);
+        let without = m.clone().without_selective_pes().t_eng(&sigma, &layer);
+        assert_eq!(with, without);
+    }
+
+    #[test]
+    fn eq8_ii_is_max_of_stages() {
+        let (m, sigma, layer) = setup();
+        let p = m.layer_perf(&sigma, &layer, WeightsSource::OnTheFly { rho: 0.5 });
+        let expect = p.t_mem_in.max(p.t_wgen).max(p.t_eng).max(p.t_mem_out);
+        assert_eq!(p.ii, expect);
+        // Edge column tiles are narrower, so the total is bounded by the
+        // full-tile II and can fall below it when C % T_C ≠ 0.
+        assert!(p.total_cycles <= p.ii * p.tiles as f64 + 1e-9);
+        assert!(p.total_cycles >= 0.5 * p.ii * p.tiles as f64);
+    }
+
+    #[test]
+    fn edge_column_tiles_accounted() {
+        // C = 128 on T_C = 48: 2 full tiles + a 32-wide edge tile whose
+        // selective-PE schedule is shorter ⇒ total < II·tiles.
+        let m = PerfModel::new(Platform::z7045(), 4);
+        let sigma = DesignPoint::new(64, 64, 16, 48);
+        let layer = Layer::conv("t", 28, 28, 128, 128, 3, 1, 1, true);
+        let with = m.layer_perf(&sigma, &layer, WeightsSource::OnTheFly { rho: 0.5 });
+        let without = m
+            .clone()
+            .without_selective_pes()
+            .layer_perf(&sigma, &layer, WeightsSource::OnTheFly { rho: 0.5 });
+        assert!(
+            with.total_cycles <= without.total_cycles,
+            "selective PEs must help on the edge tile when compute-bound"
+        );
+    }
+
+    #[test]
+    fn on_the_fly_strictly_beats_offchip_at_low_bandwidth() {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let m = PerfModel::new(Platform::z7045(), 1);
+        let sigma = DesignPoint::new(64, 64, 16, 48);
+        let otf = m.network_perf(&sigma, &net, &profile);
+        let off: Vec<WeightsSource> = net.layers.iter().map(|_| WeightsSource::OffChip).collect();
+        let base = m.network_perf_with_sources(&sigma, &net, &off);
+        assert!(
+            otf.inf_per_s > base.inf_per_s,
+            "on-the-fly {} ≤ off-chip {} at 1× bandwidth",
+            otf.inf_per_s,
+            base.inf_per_s
+        );
+    }
+
+    #[test]
+    fn gains_shrink_as_bandwidth_grows() {
+        // The paper's headline trend (Fig. 8): speedup decays with bandwidth.
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let sigma = DesignPoint::new(64, 64, 16, 48);
+        let off: Vec<WeightsSource> = net.layers.iter().map(|_| WeightsSource::OffChip).collect();
+        let mut prev = f64::INFINITY;
+        for mult in [1u32, 2, 4] {
+            let m = PerfModel::new(Platform::z7045(), mult);
+            let otf = m.network_perf(&sigma, &net, &profile).inf_per_s;
+            let base = m
+                .network_perf_with_sources(&sigma, &net, &off)
+                .inf_per_s;
+            let speedup = otf / base;
+            assert!(
+                speedup <= prev + 0.05,
+                "speedup should not grow with bandwidth: {speedup} at {mult}×"
+            );
+            prev = speedup;
+        }
+    }
+
+    #[test]
+    fn utilisation_bounded() {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let m = PerfModel::new(Platform::z7045(), 4);
+        let sigma = DesignPoint::new(64, 64, 16, 48);
+        let p = m.network_perf(&sigma, &net, &profile);
+        assert!(p.engine_utilisation > 0.0 && p.engine_utilisation <= 1.0 + 1e-9);
+    }
+
+    use crate::util::ceil_div;
+}

@@ -1,0 +1,177 @@
+//! Figure regeneration (paper Figs. 8–10) as CSV series.
+
+use crate::accuracy::AccuracyModel;
+use crate::arch::Platform;
+use crate::autotune::autotune;
+use crate::baselines::faithful::evaluate_faithful;
+use crate::baselines::gpu::Tx2Model;
+use crate::baselines::pruning::TaylorPruner;
+use crate::dse::search::{optimise, DseConfig};
+use crate::error::Result;
+use crate::util::table::{f, Table};
+use crate::workload::{Network, RatioProfile};
+
+/// **Fig. 8** — speedup over the vanilla baseline vs off-chip bandwidth
+/// (1×…12×) for Tay82 and the unzipFPGA OVSF variants, on both platforms.
+pub fn fig8() -> Result<Table> {
+    let mut t = Table::new(
+        "Fig. 8 — speedup over optimised vanilla baseline vs bandwidth",
+        &["platform", "network", "bandwidth_x", "method", "speedup"],
+    );
+    let cfg = DseConfig::default();
+    for plat in Platform::all() {
+        for net in Network::benchmarks() {
+            for bw in [1u32, 2, 4, 12] {
+                if bw > plat.peak_bw_mult {
+                    continue;
+                }
+                let vanilla = evaluate_faithful(&plat, bw, &net)?.perf.inf_per_s;
+                // Tay82 baseline.
+                let pruner = TaylorPruner::new(0.82);
+                let pruned = pruner.prune(&net);
+                let tay = evaluate_faithful(&plat, bw, &pruned)?.perf.inf_per_s;
+                t.row(vec![
+                    plat.name.into(),
+                    net.name.clone(),
+                    bw.to_string(),
+                    "Tay82".into(),
+                    f(tay / vanilla, 3),
+                ]);
+                for profile in [RatioProfile::ovsf50(&net), RatioProfile::ovsf25(&net)] {
+                    let unzip = optimise(&cfg, &plat, bw, &net, &profile, true)?
+                        .perf
+                        .inf_per_s;
+                    t.row(vec![
+                        plat.name.into(),
+                        net.name.clone(),
+                        bw.to_string(),
+                        format!("unzipFPGA-{}", profile.name),
+                        f(unzip / vanilla, 3),
+                    ]);
+                }
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// **Fig. 9** — accuracy vs execution time for the ratio-selection methods
+/// (ResNet18/34 on Z7045 at 1×/2×/4×).
+pub fn fig9() -> Result<Table> {
+    let mut t = Table::new(
+        "Fig. 9 — accuracy vs execution time per ratio-selection method",
+        &["network", "bandwidth_x", "method", "exec_ms", "top1_pct"],
+    );
+    let plat = Platform::z7045();
+    let cfg = DseConfig::default();
+    for net in [crate::workload::resnet::resnet18(), crate::workload::resnet::resnet34()] {
+        let acc = AccuracyModel::for_network(&net);
+        for bw in [1u32, 2, 4] {
+            let mut methods: Vec<(String, RatioProfile)> = vec![
+                ("manual-OVSF50".into(), RatioProfile::ovsf50(&net)),
+                ("manual-OVSF25".into(), RatioProfile::ovsf25(&net)),
+                ("uniform-0.5".into(), RatioProfile::uniform(&net, 0.5)),
+                ("uniform-0.25".into(), RatioProfile::uniform(&net, 0.25)),
+            ];
+            let tuned = autotune(&cfg, &plat, bw, &net)?;
+            methods.push(("hw-aware-autotuning".into(), tuned.profile.clone()));
+            for (name, profile) in methods {
+                let r = optimise(&cfg, &plat, bw, &net, &profile, true)?;
+                t.row(vec![
+                    net.name.clone(),
+                    bw.to_string(),
+                    name,
+                    f(1e3 / r.perf.inf_per_s, 2),
+                    f(acc.top1(&net, &profile), 2),
+                ]);
+            }
+        }
+    }
+    Ok(t)
+}
+
+/// **Fig. 10** — energy efficiency (inf/s/W) of unzipFPGA vs Jetson TX2
+/// (Max-Q), OVSF50 variants.
+pub fn fig10() -> Result<Table> {
+    let mut t = Table::new(
+        "Fig. 10 — energy efficiency vs embedded GPU (TX2, Max-Q)",
+        &["network", "platform", "inf_s", "power_w", "inf_s_per_w", "gain_vs_tx2"],
+    );
+    let cfg = DseConfig::default();
+    let tx2 = Tx2Model::default();
+    let mut gains = Vec::new();
+    for net in Network::benchmarks() {
+        let plat = if net.name == "SqueezeNet" {
+            Platform::zu7ev()
+        } else {
+            Platform::z7045()
+        };
+        let profile = RatioProfile::ovsf50(&net);
+        let bw = plat.peak_bw_mult;
+        let unzip = optimise(&cfg, &plat, bw, &net, &profile, true)?;
+        let fpga_eff = unzip.perf.inf_per_s / plat.dynamic_power_w;
+        let gpu_inf = tx2.inf_per_s(&net.name, net.gops());
+        let gpu_eff = tx2.inf_per_s_per_w(&net.name, net.gops());
+        let gain = fpga_eff / gpu_eff;
+        gains.push(gain);
+        t.row(vec![
+            net.name.clone(),
+            plat.name.into(),
+            f(unzip.perf.inf_per_s, 1),
+            f(plat.dynamic_power_w, 1),
+            f(fpga_eff, 2),
+            format!("{gain:.2}x"),
+        ]);
+        t.row(vec![
+            net.name.clone(),
+            "TX2".into(),
+            f(gpu_inf, 1),
+            f(tx2.dynamic_power_w, 1),
+            f(gpu_eff, 2),
+            "1.00x".into(),
+        ]);
+    }
+    let avg = crate::util::stats::mean(&gains);
+    let geo = crate::util::stats::geo_mean(&gains);
+    t.row(vec![
+        "Average".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        format!("{avg:.2}x / {geo:.2}x geo"),
+    ]);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_covers_both_platforms() {
+        let t = fig8().unwrap();
+        let csv = t.render_csv();
+        assert!(csv.contains("Z7045") && csv.contains("ZU7EV"));
+        assert!(csv.contains("unzipFPGA-OVSF50"));
+        // Z7045: 1/2/4 × 4 nets × 3 methods = 36; ZU7EV adds 12× ⇒ 48.
+        assert_eq!(t.len(), 36 + 48);
+    }
+
+    #[test]
+    fn fig9_has_five_methods_per_point() {
+        let t = fig9().unwrap();
+        assert_eq!(t.len(), 2 * 3 * 5);
+    }
+
+    #[test]
+    fn fig10_fpga_wins_on_average() {
+        let t = fig10().unwrap();
+        let rendered = t.render();
+        // 4 networks × 2 rows + average.
+        assert_eq!(t.len(), 9);
+        // The average gain row should show a >1 multiple.
+        let avg_line = rendered.lines().last().unwrap().to_string();
+        assert!(avg_line.contains('x'), "{avg_line}");
+    }
+}

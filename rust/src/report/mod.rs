@@ -1,0 +1,8 @@
+//! Report harnesses: regenerate every table and figure of the paper's
+//! evaluation section (§7) from this repo's models, DSE and simulator.
+//! Used by the CLI (`unzipfpga table4` etc.), the benches and
+//! EXPERIMENTS.md.
+
+pub mod figures;
+pub mod layer_analysis;
+pub mod tables;

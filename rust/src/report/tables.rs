@@ -1,0 +1,479 @@
+//! Table regeneration (paper Tables 1, 3–10).
+
+use crate::accuracy::AccuracyModel;
+use crate::arch::Platform;
+use crate::autotune::autotune;
+use crate::baselines::faithful::evaluate_faithful;
+use crate::baselines::prior_work;
+use crate::baselines::pruning::TaylorPruner;
+use crate::dse::search::{optimise, DseConfig, DseResult};
+use crate::error::Result;
+use crate::util::table::{f, Table};
+use crate::workload::{resnet, squeezenet, Network, RatioProfile};
+
+/// Interaction penalty when stacking pruning and OVSF (calibrated on the
+/// paper's Tay+OVSF rows; see EXPERIMENTS.md).
+const STACK_PENALTY_PP: f64 = 0.5;
+
+fn acc_for(net: &Network, profile: &RatioProfile) -> f64 {
+    AccuracyModel::for_network(net).top1(net, profile)
+}
+
+/// Throughput of unzipFPGA for a net/profile at several bandwidths.
+fn unzip_perfs(
+    platform: &Platform,
+    net: &Network,
+    profile: &RatioProfile,
+    bws: &[u32],
+) -> Result<Vec<f64>> {
+    let cfg = DseConfig::default();
+    bws.iter()
+        .map(|&bw| Ok(optimise(&cfg, platform, bw, net, profile, true)?.perf.inf_per_s))
+        .collect()
+}
+
+/// Throughput of the faithful baseline at several bandwidths.
+fn baseline_perfs(platform: &Platform, net: &Network, bws: &[u32]) -> Result<Vec<f64>> {
+    bws.iter()
+        .map(|&bw| Ok(evaluate_faithful(platform, bw, net)?.perf.inf_per_s))
+        .collect()
+}
+
+fn fmt_perfs(perfs: &[f64]) -> String {
+    let cells: Vec<String> = perfs.iter().map(|p| f(*p, 1)).collect();
+    format!("({})", cells.join(", "))
+}
+
+/// **Table 1** — OVSF ratio-selection methods vs per-layer bound for
+/// ResNet18 on Z7045 at 1×/2×/4× bandwidth.
+pub fn table1() -> Result<Table> {
+    let net = resnet::resnet18();
+    let plat = Platform::z7045();
+    let mut t = Table::new(
+        "Table 1 — ratio selection vs bottleneck (ResNet18, Z7045)",
+        &["Bandwidth", "Method", "Top-1 (%)", "inf/s", "Per-layer bound", "Per-layer ρ"],
+    );
+    let cfg = DseConfig::default();
+    for bw in [1u32, 2, 4] {
+        let tuned = autotune(&cfg, &plat, bw, &net)?;
+        let methods: Vec<(String, RatioProfile)> = vec![
+            ("OVSF25".into(), RatioProfile::ovsf25(&net)),
+            ("uniform-1.0".into(), RatioProfile::uniform(&net, 1.0)),
+            ("hw-aware-autotuning".into(), tuned.profile.clone()),
+        ];
+        for (name, profile) in methods {
+            let perf = crate::perf::model::PerfModel::new(plat.clone(), bw).network_perf(
+                &tuned.sigma,
+                &net,
+                &profile,
+            );
+            let bounds: Vec<String> = perf
+                .layers
+                .iter()
+                .zip(&net.layers)
+                .filter(|(_, l)| l.kind == crate::workload::LayerKind::Conv)
+                .map(|(lp, _)| lp.bound.label().to_string())
+                .collect();
+            let rhos: Vec<String> = net
+                .layers
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.kind == crate::workload::LayerKind::Conv)
+                .map(|(i, _)| format!("{:.3}", profile.rho(i)))
+                .collect();
+            t.row(vec![
+                format!("{bw}x"),
+                name,
+                f(acc_for(&net, &profile), 1),
+                f(perf.inf_per_s, 1),
+                bounds.join(" "),
+                rhos.join(" "),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// **Table 3** — basis-selection × 3×3-extraction strategies. The accuracy
+/// numbers are *measured* by `python/compile/train.py` on a synthetic
+/// dataset (written to `artifacts/table3_results.csv`); if that file is
+/// missing, the paper's reference rows are shown instead.
+pub fn table3() -> Result<Table> {
+    let path = crate::runtime::artifacts_dir().join("table3_results.csv");
+    let mut t = Table::new(
+        "Table 3 — basis selection and 3×3 extraction",
+        &["Model", "Basis", "3×3", "OVSF100 acc", "OVSF50 acc", "OVSF25 acc", "Source"],
+    );
+    if let Ok(csv) = std::fs::read_to_string(&path) {
+        for line in csv.lines().skip(1) {
+            let cells: Vec<&str> = line.split(',').collect();
+            if cells.len() >= 6 {
+                let mut row: Vec<String> = cells[..6].iter().map(|s| s.to_string()).collect();
+                row.push("measured (synthetic)".into());
+                t.row(row);
+            }
+        }
+    }
+    if t.is_empty() {
+        // Paper reference (ImageNet-scale CIFAR-10 runs are out of budget;
+        // run `make table3_train` to produce measured synthetic trends).
+        for (model, basis, filt, a100, a50, a25) in [
+            ("ResNet18", "Sequential", "Crop", 93.9, 93.7, 92.9),
+            ("ResNet18", "Sequential", "Adaptive", 93.7, 93.8, 93.0),
+            ("ResNet18", "Iterative", "Crop", 94.1, 93.6, 93.6),
+            ("ResNet18", "Iterative", "Adaptive", 94.0, 93.8, 92.3),
+            ("ResNet34", "Sequential", "Crop", 94.1, 93.9, 93.4),
+            ("ResNet34", "Sequential", "Adaptive", 94.3, 94.0, 93.4),
+            ("ResNet34", "Iterative", "Crop", 94.1, 93.8, 94.3),
+            ("ResNet34", "Iterative", "Adaptive", 93.8, 93.7, 93.2),
+        ] {
+            t.row(vec![
+                model.into(),
+                basis.into(),
+                filt.into(),
+                f(a100, 1),
+                f(a50, 1),
+                f(a25, 1),
+                "paper reference".into(),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Shared builder for Tables 4 and 5.
+fn compression_table(net: &Network, title: &str) -> Result<Table> {
+    let plat = Platform::z7045();
+    let bws = [1u32, 2, 4];
+    let acc = AccuracyModel::for_network(net);
+    let mut t = Table::new(
+        title,
+        &["Model", "Method", "Params (M)", "Top-1 (%)", "inf/s (1x, 2x, 4x)"],
+    );
+    // Vanilla.
+    t.row(vec![
+        net.name.clone(),
+        "-".into(),
+        f(net.params() as f64 / 1e6, 1),
+        f(acc.dense_top1, 1),
+        fmt_perfs(&baseline_perfs(&plat, net, &bws)?),
+    ]);
+    // Taylor-pruned variants.
+    let keeps: &[f64] = if net.name == "ResNet18" {
+        &[0.88, 0.82, 0.72, 0.56]
+    } else {
+        &[0.82, 0.72, 0.56, 0.45]
+    };
+    for &keep in keeps {
+        let pruner = TaylorPruner::new(keep);
+        let pruned = pruner.prune(net);
+        t.row(vec![
+            net.name.clone(),
+            pruner.name(),
+            f(pruned.params() as f64 / 1e6, 1),
+            f(pruner.top1(net).unwrap_or(f64::NAN), 1),
+            fmt_perfs(&baseline_perfs(&plat, &pruned, &bws)?),
+        ]);
+    }
+    // OVSF variants on unzipFPGA.
+    for profile in [RatioProfile::ovsf50(net), RatioProfile::ovsf25(net)] {
+        t.row(vec![
+            net.name.clone(),
+            profile.name.clone(),
+            f(net.params_compressed(&profile) as f64 / 1e6, 1),
+            f(acc.top1(net, &profile), 1),
+            fmt_perfs(&unzip_perfs(&plat, net, &profile, &bws)?),
+        ]);
+    }
+    // Stacked Tay + OVSF.
+    for (keep, ovsf50) in [(0.82f64, true), (0.82, false), (0.72, true), (0.72, false)] {
+        // ResNet18 table shows only the Tay82 combinations.
+        if net.name == "ResNet18" && (keep - 0.82).abs() > 1e-9 {
+            continue;
+        }
+        let pruner = TaylorPruner::new(keep);
+        let pruned = pruner.prune(net);
+        let profile = if ovsf50 {
+            RatioProfile::ovsf50(&pruned)
+        } else {
+            RatioProfile::ovsf25(&pruned)
+        };
+        let acc_stack = pruner.top1(net).unwrap_or(acc.dense_top1)
+            + (acc.top1(net, &if ovsf50 {
+                RatioProfile::ovsf50(net)
+            } else {
+                RatioProfile::ovsf25(net)
+            }) - acc.dense_top1)
+            - STACK_PENALTY_PP;
+        t.row(vec![
+            net.name.clone(),
+            format!("{}+{}", pruner.name(), profile.name),
+            f(pruned.params_compressed(&profile) as f64 / 1e6, 1),
+            f(acc_stack, 1),
+            fmt_perfs(&unzip_perfs(&plat, &pruned, &profile, &bws)?),
+        ]);
+    }
+    Ok(t)
+}
+
+/// **Table 4** — ResNet34 compression schemes on ZC706.
+pub fn table4() -> Result<Table> {
+    compression_table(
+        &resnet::resnet34(),
+        "Table 4 — ResNet34 compression schemes (ZC706)",
+    )
+}
+
+/// **Table 5** — ResNet18 compression schemes on ZC706.
+pub fn table5() -> Result<Table> {
+    compression_table(
+        &resnet::resnet18(),
+        "Table 5 — ResNet18 compression schemes (ZC706)",
+    )
+}
+
+/// **Table 6** — SqueezeNet on ZCU104 at 1×/2×/4×/12×.
+pub fn table6() -> Result<Table> {
+    let net = squeezenet::squeezenet1_1();
+    let plat = Platform::zu7ev();
+    let bws = [1u32, 2, 4, 12];
+    let acc = AccuracyModel::for_network(&net);
+    let mut t = Table::new(
+        "Table 6 — SqueezeNet (ZCU104)",
+        &["Model", "Method", "Params (M)", "Top-1 (%)", "inf/s (1x, 2x, 4x, 12x)"],
+    );
+    t.row(vec![
+        net.name.clone(),
+        "-".into(),
+        f(net.params() as f64 / 1e6, 2),
+        f(acc.dense_top1, 1),
+        fmt_perfs(&baseline_perfs(&plat, &net, &bws)?),
+    ]);
+    for profile in [RatioProfile::ovsf50(&net), RatioProfile::ovsf25(&net)] {
+        t.row(vec![
+            net.name.clone(),
+            profile.name.clone(),
+            f(net.params_compressed(&profile) as f64 / 1e6, 2),
+            f(acc.top1(&net, &profile), 1),
+            fmt_perfs(&unzip_perfs(&plat, &net, &profile, &bws)?),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Density metrics of one of our designs.
+fn our_density_row(
+    label: &str,
+    net: &Network,
+    plat: &Platform,
+    bw: u32,
+) -> Result<(String, DseResult, f64, f64)> {
+    let profile = RatioProfile::ovsf50(net);
+    let r = optimise(&DseConfig::default(), plat, bw, net, &profile, true)?;
+    let inf_s = r.perf.inf_per_s;
+    let inf_s_dsp = inf_s / plat.dsp as f64;
+    let inf_s_klut = inf_s / (plat.luts as f64 / 1e3);
+    Ok((label.to_string(), r, inf_s_dsp, inf_s_klut))
+}
+
+/// **Table 7** — comparison with prior FPGA work (ResNet18/34, SqueezeNet).
+pub fn table7() -> Result<Table> {
+    let mut t = Table::new(
+        "Table 7 — prior FPGA work (ResNet18/34 + SqueezeNet)",
+        &["Design", "Network", "FPGA", "inf/s", "inf/s/DSP", "inf/s/kLUT"],
+    );
+    for row in prior_work::table7_rows() {
+        t.row(vec![
+            row.name.into(),
+            row.network.into(),
+            row.fpga.into(),
+            f(row.inf_s, 2),
+            f(row.inf_s_dsp, 4),
+            f(row.inf_s_logic, 4),
+        ]);
+    }
+    let z = Platform::z7045();
+    let u = Platform::zu7ev();
+    for (label, net, plat, bw) in [
+        ("unzipFPGA: ResNet18*", resnet::resnet18(), &z, 4u32),
+        ("unzipFPGA: ResNet34*", resnet::resnet34(), &z, 4),
+        ("unzipFPGA: SqueezeNet*", squeezenet::squeezenet1_1(), &u, 12),
+    ] {
+        let (label, r, d, l) = our_density_row(label, &net, plat, bw)?;
+        t.row(vec![
+            label,
+            net.name.clone(),
+            plat.name.into(),
+            f(r.perf.inf_per_s, 2),
+            f(d, 4),
+            f(l, 4),
+        ]);
+    }
+    Ok(t)
+}
+
+/// **Table 8** — comparison with prior FPGA work (ResNet50).
+pub fn table8() -> Result<Table> {
+    let mut t = Table::new(
+        "Table 8 — prior FPGA work (ResNet50)",
+        &["Design", "FPGA", "inf/s", "inf/s/DSP", "inf/s/kLUT"],
+    );
+    for row in prior_work::table8_rows() {
+        t.row(vec![
+            row.name.into(),
+            row.fpga.into(),
+            f(row.inf_s, 2),
+            f(row.inf_s_dsp, 4),
+            f(row.inf_s_logic, 4),
+        ]);
+    }
+    let net = resnet::resnet50();
+    for (label, plat, bw) in [
+        ("unzipFPGA: ResNet50* (Z7045)", Platform::z7045(), 4u32),
+        ("unzipFPGA: ResNet50* (ZU7EV)", Platform::zu7ev(), 12),
+    ] {
+        let (label, r, d, l) = our_density_row(label, &net, &plat, bw)?;
+        t.row(vec![
+            label,
+            plat.name.into(),
+            f(r.perf.inf_per_s, 2),
+            f(d, 4),
+            f(l, 4),
+        ]);
+    }
+    Ok(t)
+}
+
+/// **Table 9** — resource breakdown between CNN-WGen and the engine.
+pub fn table9() -> Result<Table> {
+    let plat = Platform::z7045();
+    let rsc = crate::rsc::model::ResourceModel::new(plat.clone());
+    let mut t = Table::new(
+        "Table 9 — resource breakdown (ZC706, OVSF50)",
+        &["Design", "DSPs WGen", "DSPs Engine", "LUTs WGen", "LUTs Engine"],
+    );
+    for net in [resnet::resnet18(), resnet::resnet34(), resnet::resnet50()] {
+        let profile = RatioProfile::ovsf50(&net);
+        let r = optimise(&DseConfig::default(), &plat, 4, &net, &profile, true)?;
+        let (d_wgen, d_eng) = rsc.dsp_split(&r.sigma);
+        let total_dsp = (d_wgen + d_eng) as f64;
+        let l_wgen = rsc.luts_wgen(&r.sigma) as f64;
+        let l_total = rsc.luts(&r.sigma) as f64;
+        t.row(vec![
+            format!("{}-OVSF50 {}", net.name, r.sigma),
+            format!("{:.1}%", 100.0 * d_wgen as f64 / total_dsp),
+            format!("{:.1}%", 100.0 * d_eng as f64 / total_dsp),
+            format!("{:.1}%", 100.0 * l_wgen / plat.luts as f64),
+            format!(
+                "{:.1}%",
+                100.0 * (l_total - l_wgen) / plat.luts as f64
+            ),
+        ]);
+    }
+    Ok(t)
+}
+
+/// **Table 10** — input-selective PE ablation across all benchmarks.
+pub fn table10() -> Result<Table> {
+    let mut t = Table::new(
+        "Table 10 — input-selective PE ablation",
+        &["Model", "Profile", "Platform", "without (inf/s)", "with (inf/s)", "Gain"],
+    );
+    let cfg = DseConfig::default();
+    let mut gains = Vec::new();
+    for net in Network::benchmarks() {
+        for profile in [RatioProfile::ovsf50(&net), RatioProfile::ovsf25(&net)] {
+            let plats = if net.name == "SqueezeNet" {
+                vec![Platform::zu7ev()]
+            } else {
+                vec![Platform::z7045(), Platform::zu7ev()]
+            };
+            for plat in plats {
+                let bw = plat.peak_bw_mult;
+                let with = optimise(&cfg, &plat, bw, &net, &profile, true)?;
+                // Ablation: same design point, switches removed.
+                let mut model = crate::perf::model::PerfModel::new(plat.clone(), bw);
+                model.selective_pes = false;
+                let without = model.network_perf(&with.sigma, &net, &profile);
+                let gain = with.perf.inf_per_s / without.inf_per_s;
+                gains.push(gain);
+                t.row(vec![
+                    net.name.clone(),
+                    profile.name.clone(),
+                    plat.name.into(),
+                    f(without.inf_per_s, 1),
+                    f(with.perf.inf_per_s, 1),
+                    format!("{gain:.2}x"),
+                ]);
+            }
+        }
+    }
+    let avg = crate::util::stats::mean(&gains);
+    let geo = crate::util::stats::geo_mean(&gains);
+    t.row(vec![
+        "Average".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        format!("{avg:.2}x / {geo:.2}x geo"),
+    ]);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_nine_method_rows() {
+        let t = table1().unwrap();
+        assert_eq!(t.len(), 9); // 3 bandwidths × 3 methods
+    }
+
+    #[test]
+    fn table4_and_5_render() {
+        let t4 = table4().unwrap();
+        assert!(t4.len() >= 9, "vanilla + 4 pruned + 2 OVSF + ≥2 stacked");
+        let t5 = table5().unwrap();
+        assert!(t5.len() >= 8);
+        assert!(t5.render().contains("OVSF50"));
+    }
+
+    #[test]
+    fn table6_rows() {
+        let t = table6().unwrap();
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn table7_8_include_ours_and_prior() {
+        let t7 = table7().unwrap();
+        assert_eq!(t7.len(), 5 + 3);
+        let t8 = table8().unwrap();
+        assert_eq!(t8.len(), 10 + 2);
+        assert!(t8.render().contains("unzipFPGA"));
+    }
+
+    #[test]
+    fn table9_three_designs() {
+        let t = table9().unwrap();
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn table10_gains_at_least_one() {
+        let t = table10().unwrap();
+        assert_eq!(t.len(), 14 + 1); // 14 configs + average row
+        let rendered = t.render();
+        assert!(!rendered.contains("0.9"), "no sub-1.0 gains expected");
+    }
+
+    #[test]
+    fn table3_renders() {
+        // 8 paper-reference rows without the measured CSV, or 4 measured
+        // rows (basis × extraction) once `make table3_train` has run.
+        let t = table3().unwrap();
+        assert!(t.len() >= 4);
+    }
+}

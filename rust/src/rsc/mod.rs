@@ -1,0 +1,5 @@
+//! Resource-consumption model (paper §5.2, Eqs. 3, 4, 9).
+
+pub mod model;
+
+pub use model::{AlphaBufferGeometry, ResourceModel, ResourceUsage};

@@ -1,0 +1,335 @@
+//! Resource-consumption model — paper §5.2.
+//!
+//! * DSPs: `D_MAC · (M + T_P·T_C) ≤ D_fpga` (16-bit fixed ⇒ `D_MAC = 1`).
+//! * On-chip RAM (Eq. 9): double-buffered I/O activation buffers, the
+//!   banked Alpha buffer (Eqs. 3–4) and the binary OVSF FIFO.
+//! * LUTs: linear regression over the tunable parameters, as the paper fits
+//!   from place-and-route measurements; our coefficients are calibrated to
+//!   the paper's reported utilisation (§7.2.3, Table 9).
+
+use crate::arch::{DesignPoint, Platform};
+use crate::util::ceil_div;
+use crate::workload::{Network, RatioProfile};
+
+/// Geometry of the banked Alpha buffer (paper Eqs. 3–4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AlphaBufferGeometry {
+    /// `N_f` — filters touched per M-subtile ⇒ number of parallel α ports
+    /// (= number of independent sub-buffers, `N_P^Alpha`).
+    pub n_ports: u64,
+    /// `D^Alpha` — depth of each sub-buffer to hold all layers' α values.
+    pub depth: u64,
+}
+
+impl AlphaBufferGeometry {
+    /// Eq. 3 — ports needed so each cycle can read the α of every filter a
+    /// subtile straddles. The second product term is interpreted per units
+    /// (`⌈mod(M,T_P)/K²_max⌉`): the leftover slice of a subtile that wraps
+    /// into the next weight-tile row contributes its own filter chunks.
+    pub fn n_f(m: u64, t_p: u64, k2_max: u64) -> u64 {
+        assert!(m > 0 && t_p > 0 && k2_max > 0);
+        let full = ceil_div(m.min(t_p), k2_max) * (m / t_p).max(if m >= t_p { 1 } else { 0 });
+        let rem = m % t_p;
+        let tail = if rem > 0 { ceil_div(rem, k2_max) } else { 0 };
+        (full + tail).max(1)
+    }
+
+    /// Worst-case per-cycle α-port demand for arbitrary tile alignment.
+    /// Eq. 3 assumes `T_P`/`M` align with the `K²` chunk grid; when they do
+    /// not, an M-element subtile can straddle one extra column segment and
+    /// one extra chunk per segment. This bound sizes the banking safely for
+    /// every design point the DSE may pick.
+    pub fn n_f_worst_case(m: u64, t_p: u64, k2: u64) -> u64 {
+        assert!(m > 0 && t_p > 0 && k2 > 0);
+        let s = m.min(t_p);
+        let col_aligned = m % t_p == 0 || t_p % m == 0;
+        let segs = if m <= t_p {
+            if col_aligned {
+                1
+            } else {
+                2
+            }
+        } else if col_aligned {
+            ceil_div(m, t_p)
+        } else {
+            ceil_div(m, t_p) + 1
+        };
+        let chunk_aligned = col_aligned && t_p % k2 == 0;
+        let chunks = if chunk_aligned {
+            ceil_div(s, k2)
+        } else {
+            ceil_div(s.saturating_sub(1).max(1), k2) + 1
+        };
+        (segs * chunks).clamp(1, m)
+    }
+
+    /// Eq. 4 — per-port depth over all `N_L` layers:
+    /// `Σ_l N_in·N_out·⌈ρ_l·K'_l²⌉ / N_P^Alpha`.
+    pub fn new(sigma: &DesignPoint, net: &Network, profile: &RatioProfile) -> Self {
+        let k2_max = net
+            .layers
+            .iter()
+            .filter(|l| l.ovsf)
+            .map(|l| l.ovsf_code_len() / l.n_in)
+            .max()
+            .unwrap_or(16);
+        let n_ports = Self::n_f(sigma.m.max(1), sigma.t_p, k2_max);
+        let total_alphas: u64 = net
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.ovsf)
+            .map(|(i, l)| l.n_in * l.n_out * l.basis_per_chunk(profile.rho(i)))
+            .sum();
+        AlphaBufferGeometry {
+            n_ports,
+            depth: ceil_div(total_alphas, n_ports),
+        }
+    }
+
+    /// Total α words stored on-chip.
+    pub fn words(&self) -> u64 {
+        self.n_ports * self.depth
+    }
+}
+
+/// Resource usage vector `rsc(σ)` of a design point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResourceUsage {
+    /// DSP blocks.
+    pub dsps: u64,
+    /// On-chip RAM bytes (buffers + α + OVSF FIFO).
+    pub bram_bytes: u64,
+    /// Look-up tables (regression estimate).
+    pub luts: u64,
+    /// α words that exceeded the on-chip budget and spill off-chip
+    /// (transferred upfront; paper §4.2.2).
+    pub alpha_spill_words: u64,
+}
+
+/// The full resource model for a CNN–platform pair.
+#[derive(Clone, Debug)]
+pub struct ResourceModel {
+    /// Target platform.
+    pub platform: Platform,
+    /// Wordlength in bytes.
+    pub wl_bytes: u64,
+    /// Whether input-selective PE switches are instantiated (adds < 7% LUTs,
+    /// §7.2.3).
+    pub selective_pes: bool,
+}
+
+impl ResourceModel {
+    /// Default 16-bit model with selective PEs.
+    pub fn new(platform: Platform) -> Self {
+        Self {
+            platform,
+            wl_bytes: 2,
+            selective_pes: true,
+        }
+    }
+
+    /// Largest `K'²` across the network's OVSF layers (FIFO sizing).
+    fn k2_max(net: &Network) -> u64 {
+        net.layers
+            .iter()
+            .filter(|l| l.ovsf)
+            .map(|l| l.ovsf_code_len() / l.n_in)
+            .max()
+            .unwrap_or(16)
+    }
+
+    /// LUT regression (paper fits this from P&R runs; constants calibrated
+    /// to the reported ~75–80% LUT utilisation of the evaluated designs).
+    pub fn luts(&self, sigma: &DesignPoint) -> u64 {
+        const BASE: f64 = 30_000.0; // control, AXI/DMA, scheduler
+        const PER_MAC: f64 = 150.0; // PE datapath + routing per MAC
+        const PER_M_LANE: f64 = 180.0; // wgen vector lane + aligner slice
+        const PER_TR: f64 = 14.0; // row sequencing / addressing
+        let mut luts = BASE
+            + PER_MAC * sigma.engine_macs() as f64
+            + PER_M_LANE * sigma.m as f64
+            + PER_TR * sigma.t_r as f64;
+        if self.selective_pes {
+            luts *= 1.065; // measured overhead "< 7%" (§7.2.3)
+        }
+        luts as u64
+    }
+
+    /// LUTs attributable to CNN-WGen alone (vector lanes + aligner) — the
+    /// Table 9 breakdown.
+    pub fn luts_wgen(&self, sigma: &DesignPoint) -> u64 {
+        (180.0 * sigma.m as f64) as u64
+    }
+
+    /// DSP split between CNN-WGen and the engine (Table 9).
+    pub fn dsp_split(&self, sigma: &DesignPoint) -> (u64, u64) {
+        (
+            sigma.m * self.platform.dsp_per_mac,
+            sigma.engine_macs() * self.platform.dsp_per_mac,
+        )
+    }
+
+    /// Full usage vector for a design point on a network/profile.
+    pub fn usage(
+        &self,
+        sigma: &DesignPoint,
+        net: &Network,
+        profile: &RatioProfile,
+    ) -> ResourceUsage {
+        let dsps = sigma.dsps(self.platform.dsp_per_mac);
+        // Eq. 9 terms: double-buffered input (T_R×T_P) and output (T_R×T_C)
+        // activation buffers ...
+        let io_words = 2 * (sigma.t_r * sigma.t_p + sigma.t_r * sigma.t_c);
+        let io_bytes = io_words * self.wl_bytes;
+        // ... the binary OVSF FIFO (K_max² codes × K_max² bits) ...
+        let k2 = Self::k2_max(net);
+        let fifo_bytes = (k2 * k2 + 7) / 8;
+        // ... and the Alpha buffer, capped to the leftover capacity
+        // (remaining α spill off-chip, §4.2.2).
+        let alpha = if sigma.has_wgen() {
+            AlphaBufferGeometry::new(sigma, net, profile)
+        } else {
+            AlphaBufferGeometry { n_ports: 1, depth: 0 }
+        };
+        let alpha_bytes_wanted = alpha.words() * self.wl_bytes;
+        let cap = self.platform.bram_bytes;
+        let leftover = cap.saturating_sub(io_bytes + fifo_bytes);
+        let alpha_bytes = alpha_bytes_wanted.min(leftover);
+        let alpha_spill_words = (alpha_bytes_wanted - alpha_bytes) / self.wl_bytes;
+        ResourceUsage {
+            dsps,
+            bram_bytes: io_bytes + fifo_bytes + alpha_bytes,
+            luts: self.luts(sigma),
+            alpha_spill_words,
+        }
+    }
+
+    /// Feasibility check `rsc(σ) ≤ rsc_avail` (Eq. 10's constraint).
+    pub fn feasible(&self, usage: &ResourceUsage) -> bool {
+        usage.dsps <= self.platform.dsp
+            && usage.bram_bytes <= self.platform.bram_bytes
+            && usage.luts <= self.platform.luts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::workload::resnet;
+
+    #[test]
+    fn eq3_ports_scale_with_m() {
+        // M ≤ T_P: one slice of ⌈M/K²⌉ chunks.
+        assert_eq!(AlphaBufferGeometry::n_f(16, 64, 16), 1);
+        assert_eq!(AlphaBufferGeometry::n_f(64, 64, 16), 4);
+        // M > T_P: wraps ⌊M/T_P⌋ rows plus the remainder slice.
+        assert_eq!(AlphaBufferGeometry::n_f(128, 64, 16), 8);
+        let with_rem = AlphaBufferGeometry::n_f(96, 64, 16);
+        assert!(with_rem >= 6, "96-wide subtile spans ≥6 filter chunks");
+    }
+
+    #[test]
+    fn eq4_depth_covers_all_alphas() {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let sigma = DesignPoint::new(64, 64, 16, 48);
+        let g = AlphaBufferGeometry::new(&sigma, &net, &profile);
+        let total: u64 = net
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.ovsf)
+            .map(|(i, l)| l.n_in * l.n_out * l.basis_per_chunk(profile.rho(i)))
+            .sum();
+        assert!(g.words() >= total, "banked capacity must cover all α");
+        assert!(g.words() < total + g.n_ports, "no more than one row of padding");
+    }
+
+    #[test]
+    fn usage_monotone_in_design_size() {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let model = ResourceModel::new(Platform::z7045());
+        let small = model.usage(&DesignPoint::new(16, 32, 8, 8), &net, &profile);
+        let large = model.usage(&DesignPoint::new(64, 64, 16, 48), &net, &profile);
+        assert!(large.dsps > small.dsps);
+        assert!(large.luts > small.luts);
+        assert!(large.bram_bytes >= small.bram_bytes);
+    }
+
+    #[test]
+    fn dsp_constraint_matches_paper_formula() {
+        let model = ResourceModel::new(Platform::z7045());
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        // M + T_P·T_C = 900 exactly fills the Z7045.
+        let sigma = DesignPoint::new(68, 64, 16, 52);
+        let u = model.usage(&sigma, &net, &profile);
+        assert_eq!(u.dsps, 68 + 832);
+        assert!(model.feasible(&u));
+        let over = DesignPoint::new(69, 64, 16, 52);
+        let u2 = model.usage(&over, &net, &profile);
+        assert!(!model.feasible(&u2), "901 DSPs must be infeasible");
+    }
+
+    #[test]
+    fn selective_pe_lut_overhead_under_7pct() {
+        let base = ResourceModel {
+            platform: Platform::z7045(),
+            wl_bytes: 2,
+            selective_pes: false,
+        };
+        let with = ResourceModel::new(Platform::z7045());
+        let sigma = DesignPoint::new(64, 64, 16, 48);
+        let l0 = base.luts(&sigma) as f64;
+        let l1 = with.luts(&sigma) as f64;
+        let overhead = l1 / l0 - 1.0;
+        assert!(overhead > 0.0 && overhead < 0.07, "overhead {overhead}");
+    }
+
+    #[test]
+    fn bram_never_exceeds_capacity_due_to_spill() {
+        forall("bram-spill-cap", 40, |rng| {
+            let net = resnet::resnet50();
+            let profile = RatioProfile::uniform(&net, 1.0); // worst-case α volume
+            let model = ResourceModel::new(Platform::z7045());
+            let sigma = DesignPoint::new(
+                1 << rng.gen_range(3, 8),
+                1 << rng.gen_range(4, 8),
+                1 << rng.gen_range(2, 5),
+                1 << rng.gen_range(3, 7),
+            );
+            let u = model.usage(&sigma, &net, &profile);
+            assert!(u.bram_bytes <= model.platform.bram_bytes + u_io_floor(&sigma));
+        });
+    }
+
+    // The I/O buffers themselves may exceed tiny-platform capacity; the cap
+    // applies only to the α share. Helper keeps the property honest.
+    fn u_io_floor(sigma: &DesignPoint) -> u64 {
+        2 * (sigma.t_r * sigma.t_p + sigma.t_r * sigma.t_c) * 2
+    }
+
+    #[test]
+    fn lut_model_is_linear_in_params() {
+        // Regression sanity: fitting our own generated points recovers the
+        // linear structure (paper fits from P&R measurements).
+        let model = ResourceModel::new(Platform::z7045());
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for &m in &[16u64, 32, 64] {
+            for &tp in &[8u64, 16] {
+                for &tc in &[16u64, 32, 64] {
+                    let sigma = DesignPoint::new(m, 64, tp, tc);
+                    rows.push(vec![(tp * tc) as f64, m as f64]);
+                    ys.push(model.luts(&sigma) as f64);
+                }
+            }
+        }
+        let (_b, w) = crate::util::stats::multilinear_fit(&rows, &ys);
+        assert!(w[0] > 100.0, "per-MAC LUT slope recovered: {}", w[0]);
+        assert!(w[1] > 100.0, "per-lane LUT slope recovered: {}", w[1]);
+    }
+}

@@ -1,0 +1,44 @@
+//! Thin wrapper around the PJRT CPU client (`xla` crate).
+
+use crate::error::Result;
+
+/// A PJRT client handle. One per process; executables borrow it.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    /// Platform name reported by PJRT.
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Device count.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Access the raw client (for compilation).
+    pub(crate) fn raw(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let c = RuntimeClient::cpu().expect("PJRT CPU client");
+        assert!(c.device_count() >= 1);
+        assert!(!c.platform_name().is_empty());
+    }
+}

@@ -1,0 +1,128 @@
+//! Loading and executing AOT artifacts.
+//!
+//! Interchange format is **HLO text** (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md). All artifacts are
+//! lowered with `return_tuple=True`, so results unwrap with `to_tuple`.
+
+use crate::error::{Error, Result};
+use crate::runtime::client::RuntimeClient;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled PJRT executable loaded from an HLO-text artifact.
+pub struct LoadedExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path (diagnostics).
+    pub path: PathBuf,
+}
+
+impl LoadedExecutable {
+    /// Load + compile an HLO-text file.
+    pub fn load(client: &RuntimeClient, path: &Path) -> Result<Self> {
+        if !path.exists() {
+            return Err(Error::MissingArtifact {
+                path: path.display().to_string(),
+                source: std::io::Error::new(std::io::ErrorKind::NotFound, "no such file"),
+            });
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::InvalidConfig(format!("non-utf8 path {path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.raw().compile(&comp)?;
+        Ok(Self {
+            exe,
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Execute with f32 buffers: each input is `(data, dims)`. The artifact
+    /// must return a tuple; all tuple elements are returned as flat f32
+    /// vectors with their dimensions.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64).map_err(Error::from)
+            })
+            .collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.decompose_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            out.push(t.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// A registry of named artifacts in a directory, compiled lazily and cached.
+pub struct ArtifactRegistry {
+    client: RuntimeClient,
+    dir: PathBuf,
+    cache: HashMap<String, LoadedExecutable>,
+}
+
+impl ArtifactRegistry {
+    /// Registry over `dir` with a fresh CPU client.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        Ok(Self {
+            client: RuntimeClient::cpu()?,
+            dir: dir.into(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Artifact path for a name (`<dir>/<name>.hlo.txt`).
+    pub fn path_of(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// `true` if the artifact file exists.
+    pub fn has(&self, name: &str) -> bool {
+        self.path_of(name).exists()
+    }
+
+    /// Get (compile-on-first-use) an executable by name.
+    pub fn get(&mut self, name: &str) -> Result<&LoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let exe = LoadedExecutable::load(&self.client, &self.path_of(name))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// The underlying client.
+    pub fn client(&self) -> &RuntimeClient {
+        &self.client
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let client = RuntimeClient::cpu().unwrap();
+        let err = LoadedExecutable::load(&client, Path::new("/nonexistent/x.hlo.txt"))
+            .err()
+            .expect("must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("make artifacts"), "actionable message: {msg}");
+    }
+
+    #[test]
+    fn registry_paths() {
+        let reg = ArtifactRegistry::new("/tmp/unzipfpga-test-artifacts").unwrap();
+        assert_eq!(
+            reg.path_of("model"),
+            PathBuf::from("/tmp/unzipfpga-test-artifacts/model.hlo.txt")
+        );
+        assert!(!reg.has("definitely-not-there"));
+    }
+}

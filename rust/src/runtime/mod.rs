@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text,
+//! see `python/compile/aot.py`) and executes them on the XLA CPU client.
+//! Python never runs on this path — the artifacts are self-contained.
+
+pub mod client;
+pub mod executable;
+
+pub use client::RuntimeClient;
+pub use executable::{ArtifactRegistry, LoadedExecutable};
+
+/// Default artifacts directory, overridable with `UNZIPFPGA_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("UNZIPFPGA_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

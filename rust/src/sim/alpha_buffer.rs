@@ -1,0 +1,179 @@
+//! Banked Alpha buffer (paper §4.2.2 "Memory Customisation in Alpha
+//! Buffer", Eqs. 3–4).
+//!
+//! Each TiWGen subtile straddles weights of `N_f` distinct filters, so
+//! `N_f` α values must be fetched *in the same cycle*. The unified buffer
+//! is split into `N_P^Alpha = N_f` independent sub-buffers; filter `o` of
+//! any layer lives in bank `o mod N_f`, making the per-cycle accesses of a
+//! subtile (consecutive filters) conflict-free by construction. The
+//! simulator checks that property on every read.
+
+use crate::sim::hw_weights::HwOvsfWeights;
+use std::collections::HashMap;
+
+/// Address of one layer's α block inside the banked buffer.
+#[derive(Clone, Copy, Debug)]
+struct LayerMeta {
+    n_in: usize,
+    n_basis: usize,
+}
+
+/// The banked α store of CNN-WGen.
+#[derive(Clone, Debug)]
+pub struct AlphaBufferSim {
+    /// Number of parallel ports / banks (`N_f`).
+    pub n_ports: usize,
+    /// Bank contents: `banks[b]` holds α words in write order.
+    banks: Vec<Vec<f32>>,
+    /// Per-bank base offset of each layer.
+    layer_base: HashMap<usize, (Vec<usize>, LayerMeta)>,
+    /// Reads issued (for port-pressure accounting).
+    pub reads: u64,
+    /// Peak simultaneous same-bank accesses observed (must stay 1).
+    pub max_bank_conflict: usize,
+}
+
+impl AlphaBufferSim {
+    /// Create an empty buffer with `n_ports` banks.
+    pub fn new(n_ports: usize) -> Self {
+        assert!(n_ports >= 1);
+        Self {
+            n_ports,
+            banks: vec![Vec::new(); n_ports],
+            layer_base: HashMap::new(),
+            reads: 0,
+            max_bank_conflict: 1,
+        }
+    }
+
+    /// Load one layer's α values (done upfront, before inference — the
+    /// paper transfers α "upfront" so they are excluded from the per-tile
+    /// memory time).
+    pub fn write_layer(&mut self, layer_id: usize, w: &HwOvsfWeights) {
+        let bases: Vec<usize> = self.banks.iter().map(|b| b.len()).collect();
+        for o in 0..w.n_out {
+            let bank = o % self.n_ports;
+            for c in 0..w.n_in {
+                for j in 0..w.n_basis {
+                    self.banks[bank].push(w.alpha(o, c, j));
+                }
+            }
+        }
+        self.layer_base.insert(
+            layer_id,
+            (
+                bases,
+                LayerMeta {
+                    n_in: w.n_in,
+                    n_basis: w.n_basis,
+                },
+            ),
+        );
+    }
+
+    /// Per-bank depth (paper Eq. 4's `D^Alpha`, as built).
+    pub fn depth(&self) -> usize {
+        self.banks.iter().map(|b| b.len()).max().unwrap_or(0)
+    }
+
+    /// One-cycle parallel fetch: α of basis `j`, channel `c` for a set of
+    /// filters. Panics if two requested filters collide on a bank — the
+    /// hardware guarantee the banking scheme exists to provide.
+    pub fn fetch(&mut self, layer_id: usize, filters: &[usize], c: usize, j: usize) -> Vec<f32> {
+        let (bases, meta) = self.layer_base.get(&layer_id).expect("layer not loaded");
+        let mut used = vec![false; self.n_ports];
+        let mut out = Vec::with_capacity(filters.len());
+        let mut conflict = 1usize;
+        for &o in filters {
+            let bank = o % self.n_ports;
+            if used[bank] {
+                conflict += 1;
+            }
+            used[bank] = true;
+            // Word index of filter o inside its bank for this layer:
+            // filters land in the bank in ascending order, o / n_ports-th
+            // block of n_in·n_basis words.
+            let block = o / self.n_ports;
+            let idx =
+                bases[bank] + block * meta.n_in * meta.n_basis + c * meta.n_basis + j;
+            out.push(self.banks[bank][idx]);
+        }
+        self.reads += 1;
+        self.max_bank_conflict = self.max_bank_conflict.max(conflict);
+        assert_eq!(
+            self.max_bank_conflict, 1,
+            "bank conflict: filters {filters:?} on {} ports",
+            self.n_ports
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn sample_weights(seed: u64) -> HwOvsfWeights {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        HwOvsfWeights::random(&mut rng, 8, 4, 3, 0.5).unwrap()
+    }
+
+    #[test]
+    fn round_trips_alphas() {
+        let w = sample_weights(1);
+        let mut buf = AlphaBufferSim::new(4);
+        buf.write_layer(0, &w);
+        for o in 0..w.n_out {
+            for c in 0..w.n_in {
+                for j in 0..w.n_basis {
+                    let got = buf.fetch(0, &[o], c, j);
+                    assert_eq!(got[0], w.alpha(o, c, j), "o={o} c={c} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_fetch_of_consecutive_filters() {
+        let w = sample_weights(2);
+        let mut buf = AlphaBufferSim::new(4);
+        buf.write_layer(0, &w);
+        // A subtile straddling filters 4..8 — one per bank, no conflicts.
+        let got = buf.fetch(0, &[4, 5, 6, 7], 1, 2);
+        for (i, o) in (4..8).enumerate() {
+            assert_eq!(got[i], w.alpha(o, 1, 2));
+        }
+        assert_eq!(buf.max_bank_conflict, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "bank conflict")]
+    fn conflicting_filters_panic() {
+        let w = sample_weights(3);
+        let mut buf = AlphaBufferSim::new(4);
+        buf.write_layer(0, &w);
+        buf.fetch(0, &[0, 4], 0, 0); // both map to bank 0
+    }
+
+    #[test]
+    fn multiple_layers_coexist() {
+        let w0 = sample_weights(4);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let w1 = HwOvsfWeights::random(&mut rng, 6, 2, 2, 1.0).unwrap();
+        let mut buf = AlphaBufferSim::new(2);
+        buf.write_layer(0, &w0);
+        buf.write_layer(7, &w1);
+        assert_eq!(buf.fetch(7, &[3], 1, 2)[0], w1.alpha(3, 1, 2));
+        assert_eq!(buf.fetch(0, &[5], 2, 0)[0], w0.alpha(5, 2, 0));
+    }
+
+    #[test]
+    fn depth_matches_eq4_shape() {
+        let w = sample_weights(6);
+        let mut buf = AlphaBufferSim::new(4);
+        buf.write_layer(0, &w);
+        // 8 filters × 4 ch × 8 basis = 256 α over 4 banks ⇒ 64 deep.
+        assert_eq!(buf.depth(), 64);
+    }
+}

@@ -1,0 +1,203 @@
+//! Hardware-form OVSF weights: per-(filter, channel) coefficients over the
+//! `K'²`-length OVSF chunk basis (see `sim` module docs for why this is
+//! equivalent to the paper's length-`L` formulation).
+
+use crate::error::{Error, Result};
+use crate::ovsf::codes::OvsfBasis;
+use crate::util::{is_pow2, n_basis, next_pow2};
+use crate::util::prng::Xoshiro256;
+
+/// The compressed representation CNN-WGen consumes: for every filter `o`
+/// and channel `c`, `n_basis` α coefficients over the first `n_basis` codes
+/// of the `K'²` OVSF basis (Sequential selection — the hardware layout).
+#[derive(Clone, Debug)]
+pub struct HwOvsfWeights {
+    /// Output channels (filters).
+    pub n_out: usize,
+    /// Input channels.
+    pub n_in: usize,
+    /// Power-of-two kernel frame (4 for K=3).
+    pub k_ovsf: usize,
+    /// Target kernel size.
+    pub k: usize,
+    /// Basis vectors per chunk (`⌈ρ·K'²⌉`).
+    pub n_basis: usize,
+    /// α values, layout `[n_out][n_in][n_basis]`.
+    pub alphas: Vec<f32>,
+}
+
+impl HwOvsfWeights {
+    /// Chunk length `K'²` (the OVSF code length per chunk).
+    pub fn chunk_len(&self) -> usize {
+        self.k_ovsf * self.k_ovsf
+    }
+
+    /// Engine positions per chunk (`K²` — the GEMM view's share of `P`).
+    pub fn engine_chunk(&self) -> usize {
+        self.k * self.k
+    }
+
+    /// Engine `P` dimension (`N_in·K²`).
+    pub fn p_dim(&self) -> usize {
+        self.n_in * self.engine_chunk()
+    }
+
+    /// Map an engine kernel position (`0..K²`) to its OVSF frame position
+    /// (`0..K'²`) — the top-left crop the hardware extracts for non-pow2
+    /// kernels (paper §6.1; Table 3 selects Crop for ImageNet).
+    #[inline]
+    pub fn frame_pos(&self, kpos: usize) -> usize {
+        (kpos / self.k) * self.k_ovsf + kpos % self.k
+    }
+
+    /// Random instance for simulation/tests.
+    pub fn random(
+        rng: &mut Xoshiro256,
+        n_out: usize,
+        n_in: usize,
+        k: usize,
+        rho: f64,
+    ) -> Result<Self> {
+        let k_ovsf = if is_pow2(k) { k } else { next_pow2(k) };
+        let chunk = k_ovsf * k_ovsf;
+        let nb = n_basis(rho, chunk);
+        let alphas = rng.normal_vec(n_out * n_in * nb);
+        Ok(Self {
+            n_out,
+            n_in,
+            k_ovsf,
+            k,
+            n_basis: nb,
+            alphas,
+        })
+    }
+
+    /// Derive hardware-form coefficients from dense weights by projecting
+    /// each `(o, c)` chunk on the `K'²` basis and keeping the first
+    /// `⌈ρ·K'²⌉` codes (the hardware's Sequential layout).
+    pub fn from_dense(weights: &[f32], n_out: usize, n_in: usize, k: usize, rho: f64) -> Result<Self> {
+        if weights.len() != n_out * n_in * k * k {
+            return Err(Error::ShapeMismatch(format!(
+                "weights len {} != {n_out}·{n_in}·{k}²",
+                weights.len()
+            )));
+        }
+        let k_ovsf = if is_pow2(k) { k } else { next_pow2(k) };
+        let chunk = k_ovsf * k_ovsf;
+        let nb = n_basis(rho, chunk);
+        let basis = OvsfBasis::new(chunk)?;
+        let mut alphas = Vec::with_capacity(n_out * n_in * nb);
+        let mut frame = vec![0.0f32; chunk];
+        for o in 0..n_out {
+            for c in 0..n_in {
+                frame.iter_mut().for_each(|x| *x = 0.0);
+                for kh in 0..k {
+                    for kw in 0..k {
+                        frame[kh * k_ovsf + kw] = weights[((o * n_in + c) * k + kh) * k + kw];
+                    }
+                }
+                let inv = 1.0f64 / chunk as f64;
+                for j in 0..nb {
+                    let mut acc = 0.0f64;
+                    for (t, &v) in frame.iter().enumerate() {
+                        acc += v as f64 * basis.at(j, t) as f64;
+                    }
+                    alphas.push((acc * inv) as f32);
+                }
+            }
+        }
+        Ok(Self {
+            n_out,
+            n_in,
+            k_ovsf,
+            k,
+            n_basis: nb,
+            alphas,
+        })
+    }
+
+    /// α for `(filter o, channel c, basis j)`.
+    #[inline]
+    pub fn alpha(&self, o: usize, c: usize, j: usize) -> f32 {
+        self.alphas[(o * self.n_in + c) * self.n_basis + j]
+    }
+
+    /// Software oracle: reconstruct the dense weights in the engine's
+    /// `P × C` GEMM layout (`P = N_in·K²`, `C = N_out`, row
+    /// `p = c·K² + kpos`, column = filter). Non-pow2 kernels take the
+    /// top-left crop of the `K'×K'` OVSF frame.
+    pub fn dense_gemm(&self) -> Result<Vec<f32>> {
+        let chunk = self.chunk_len();
+        let ek = self.engine_chunk();
+        let basis = OvsfBasis::new(chunk)?;
+        let p_dim = self.p_dim();
+        let mut out = vec![0.0f32; p_dim * self.n_out];
+        for o in 0..self.n_out {
+            for c in 0..self.n_in {
+                for kpos in 0..ek {
+                    let pos = self.frame_pos(kpos);
+                    let mut acc = 0.0f32;
+                    for j in 0..self.n_basis {
+                        acc += self.alpha(o, c, j) * basis.at(j, pos) as f32;
+                    }
+                    out[(c * ek + kpos) * self.n_out + o] = acc;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Number of α parameters.
+    pub fn n_alphas(&self) -> usize {
+        self.alphas.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn from_dense_full_rho_is_exact() {
+        // ρ=1 must reproduce the original weights exactly — for pow2
+        // kernels directly, for K=3 via the zero-padded frame + crop.
+        forall("hw-weights-exact", 16, |rng| {
+            let n_out = 3usize;
+            let n_in = 4usize;
+            let k = *rng.choose(&[2usize, 3, 4]);
+            let w = rng.normal_vec(n_out * n_in * k * k);
+            let hw = HwOvsfWeights::from_dense(&w, n_out, n_in, k, 1.0).unwrap();
+            let dense = hw.dense_gemm().unwrap();
+            let ek = k * k;
+            for o in 0..n_out {
+                for c in 0..n_in {
+                    for kpos in 0..ek {
+                        let orig = w[((o * n_in + c) * k + kpos / k) * k + kpos % k];
+                        let got = dense[(c * ek + kpos) * n_out + o];
+                        assert!((orig - got).abs() < 1e-4, "k={k} o={o} c={c} kpos={kpos}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn alpha_counts() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let hw = HwOvsfWeights::random(&mut rng, 8, 4, 3, 0.5).unwrap();
+        assert_eq!(hw.k_ovsf, 4);
+        assert_eq!(hw.n_basis, 8); // ⌊0.5·16⌉
+        assert_eq!(hw.n_alphas(), 8 * 4 * 8);
+    }
+
+    #[test]
+    fn gemm_layout_dimensions() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let hw = HwOvsfWeights::random(&mut rng, 5, 2, 2, 1.0).unwrap();
+        let dense = hw.dense_gemm().unwrap();
+        assert_eq!(dense.len(), 2 * 4 * 5); // P=8, C=5
+    }
+
+    use crate::util::prng::Xoshiro256;
+}

@@ -1,0 +1,128 @@
+//! im2col lowering — the paper's engine executes convolutions as GEMM
+//! (§4.1): an `R×P` activations matrix is built from the NHWC feature map
+//! with `R = out_h·out_w` patch rows and `P = N_in·K²` columns ordered
+//! channel-major (`p = c·K² + kh·K + kw`), matching both the TiWGen weight
+//! layout and JAX's HWIO convolution semantics so the simulator's layer
+//! output can be bit-compared with the PJRT conv artifact.
+
+use crate::workload::layer::Layer;
+
+/// Lower one NHWC feature map (`h×w×c_in`, batch 1) to the layer's `R×P`
+/// GEMM activations with SAME-style padding described by the layer.
+pub fn im2col(layer: &Layer, x: &[f32]) -> Vec<f32> {
+    let (h, w, c_in) = (layer.h as usize, layer.w as usize, layer.n_in as usize);
+    assert_eq!(x.len(), h * w * c_in, "input must be h·w·c_in NHWC");
+    let k = layer.k as usize;
+    let s = layer.stride as usize;
+    let pad = layer.pad as usize;
+    let out_h = layer.out_h() as usize;
+    let out_w = layer.out_w() as usize;
+    let p_dim = c_in * k * k;
+    let mut out = vec![0.0f32; out_h * out_w * p_dim];
+    for oy in 0..out_h {
+        for ox in 0..out_w {
+            let r = oy * out_w + ox;
+            for c in 0..c_in {
+                for kh in 0..k {
+                    for kw in 0..k {
+                        let iy = (oy * s + kh) as isize - pad as isize;
+                        let ix = (ox * s + kw) as isize - pad as isize;
+                        let v = if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w
+                        {
+                            x[(iy as usize * w + ix as usize) * c_in + c]
+                        } else {
+                            0.0 // zero padding
+                        };
+                        out[r * p_dim + c * k * k + kh * k + kw] = v;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_1x1_conv_is_a_reshape() {
+        let layer = Layer::conv("pw", 3, 3, 2, 4, 1, 1, 0, false);
+        let x: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        let m = im2col(&layer, &x);
+        // R=9, P=2: row r = pixel r's 2 channels.
+        assert_eq!(m.len(), 9 * 2);
+        assert_eq!(m[0], x[0]);
+        assert_eq!(m[1], x[1]);
+        assert_eq!(m[2 * 4], x[8]); // pixel 4, channel 0
+    }
+
+    #[test]
+    fn padding_zeroes_the_border_taps() {
+        let layer = Layer::conv("c", 4, 4, 1, 1, 3, 1, 1, false);
+        let x = vec![1.0f32; 16];
+        let m = im2col(&layer, &x);
+        // Top-left output: the (0,0) tap falls on padding.
+        assert_eq!(m[0], 0.0, "kh=0,kw=0 of corner patch is padded");
+        assert_eq!(m[4], 1.0, "centre tap is real data");
+        // Interior patch (1,1): all taps real.
+        let r = 1 * 4 + 1;
+        assert!(m[r * 9..r * 9 + 9].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn strided_conv_shrinks_rows() {
+        let layer = Layer::conv("s", 8, 8, 2, 4, 3, 2, 1, false);
+        let x = vec![0.5f32; 8 * 8 * 2];
+        let m = im2col(&layer, &x);
+        let g = layer.gemm();
+        assert_eq!(m.len(), (g.r * g.p) as usize);
+        assert_eq!(g.r, 16); // 4×4 outputs
+    }
+
+    #[test]
+    fn conv_via_gemm_matches_direct_convolution() {
+        // Small direct conv reference.
+        let layer = Layer::conv("c", 5, 5, 2, 3, 3, 1, 1, false);
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(3);
+        let x = rng.normal_vec(5 * 5 * 2);
+        let wts = rng.normal_vec(2 * 9 * 3); // P×C
+        let m = im2col(&layer, &x);
+        let g = layer.gemm();
+        // GEMM path.
+        let mut via_gemm = vec![0.0f32; (g.r * g.c) as usize];
+        for r in 0..g.r as usize {
+            for p in 0..g.p as usize {
+                for c in 0..g.c as usize {
+                    via_gemm[r * g.c as usize + c] +=
+                        m[r * g.p as usize + p] * wts[p * g.c as usize + c];
+                }
+            }
+        }
+        // Direct convolution.
+        for oy in 0..5usize {
+            for ox in 0..5usize {
+                for co in 0..3usize {
+                    let mut acc = 0.0f32;
+                    for ci in 0..2usize {
+                        for kh in 0..3usize {
+                            for kw in 0..3usize {
+                                let iy = oy as isize + kh as isize - 1;
+                                let ix = ox as isize + kw as isize - 1;
+                                if iy < 0 || ix < 0 || iy >= 5 || ix >= 5 {
+                                    continue;
+                                }
+                                let xv = x[(iy as usize * 5 + ix as usize) * 2 + ci];
+                                let wv = wts[(ci * 9 + kh * 3 + kw) * 3 + co];
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    let got = via_gemm[(oy * 5 + ox) * 3 + co];
+                    assert!((got - acc).abs() < 1e-4, "({oy},{ox},{co})");
+                }
+            }
+        }
+    }
+}

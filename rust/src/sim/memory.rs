@@ -1,0 +1,83 @@
+//! Bandwidth-modelled DMA streams for the off-chip memory interface.
+//!
+//! The paper controls bandwidth with memory-port count and word packing
+//! (§7.1); the simulator models each direction as a stream delivering
+//! `bytes_per_cycle`, with cycle costs rounded up to whole cycles per
+//! burst. Totals are tracked for the traffic accounting in the reports.
+
+/// One direction of the off-chip interface.
+#[derive(Clone, Debug)]
+pub struct DmaStream {
+    /// Deliverable bytes per fabric cycle.
+    pub bytes_per_cycle: f64,
+    /// Total bytes moved.
+    pub total_bytes: u64,
+    /// Total cycles spent (sum of per-burst ceilings).
+    pub total_cycles: u64,
+}
+
+impl DmaStream {
+    /// Stream at a bandwidth (bytes/s) and fabric clock (Hz).
+    pub fn new(bandwidth_bytes_per_s: f64, clock_hz: f64) -> Self {
+        assert!(bandwidth_bytes_per_s > 0.0 && clock_hz > 0.0);
+        Self {
+            bytes_per_cycle: bandwidth_bytes_per_s / clock_hz,
+            total_bytes: 0,
+            total_cycles: 0,
+        }
+    }
+
+    /// Cycles to move a burst of `bytes` (no state change).
+    pub fn burst_cycles(&self, bytes: u64) -> u64 {
+        (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+
+    /// Issue a burst; returns its cycle cost and updates totals.
+    pub fn transfer(&mut self, bytes: u64) -> u64 {
+        let cycles = self.burst_cycles(bytes);
+        self.total_bytes += bytes;
+        self.total_cycles += cycles;
+        cycles
+    }
+
+    /// Achieved bytes/cycle so far (≤ `bytes_per_cycle` due to ceilings).
+    pub fn achieved_bytes_per_cycle(&self) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            self.total_bytes as f64 / self.total_cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_cost_rounds_up() {
+        let s = DmaStream::new(3e9, 1.5e8); // 20 bytes/cycle
+        assert_eq!(s.burst_cycles(20), 1);
+        assert_eq!(s.burst_cycles(21), 2);
+        assert_eq!(s.burst_cycles(0), 0);
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut s = DmaStream::new(2e9, 2e8); // 10 bytes/cycle
+        s.transfer(100);
+        s.transfer(5);
+        assert_eq!(s.total_bytes, 105);
+        assert_eq!(s.total_cycles, 11);
+        assert!(s.achieved_bytes_per_cycle() <= 10.0);
+    }
+
+    #[test]
+    fn bandwidth_scaling_halves_cycles() {
+        let s1 = DmaStream::new(1.1e9, 1.5e8);
+        let s2 = DmaStream::new(2.2e9, 1.5e8);
+        let big = 1_000_000;
+        let ratio = s1.burst_cycles(big) as f64 / s2.burst_cycles(big) as f64;
+        assert!((ratio - 2.0).abs() < 0.01);
+    }
+}

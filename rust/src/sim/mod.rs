@@ -1,0 +1,36 @@
+//! Cycle-level simulator of the unzipFPGA architecture (paper §4).
+//!
+//! The simulator executes the actual schedules — TiWGen's loop nest
+//! (Alg. 1), the OVSF FIFO + basis-vector aligner rate matching, the banked
+//! Alpha buffer, the output-stationary PE array with input-selective
+//! work-stealing, and the bandwidth-modelled DMA streams — with
+//! deterministic cycle counters *and* real numerics. Its cycle counts are
+//! cross-checked against the paper's closed-form model (Eqs. 5–8) and its
+//! generated weights against the software OVSF oracle.
+//!
+//! ### Hardware weight form
+//!
+//! §2.3 formulates filters over length-`L = N_in·K'²` codes while the
+//! hardware stores `N_in·N_out·⌈ρK'²⌉` α values and a `K'²`-deep FIFO.
+//! The two are equivalent: Sylvester structure gives
+//! `H_{N_in·K'²} = H_{N_in} ⊗ H_{K'²}`, so any linear combination over
+//! length-L codes regroups into per-(channel, filter) combinations over the
+//! `K'²`-length chunk basis. The simulator (and the L1 Pallas kernel) use
+//! this per-chunk form directly.
+
+pub mod alpha_buffer;
+pub mod engine;
+pub mod hw_weights;
+pub mod im2col;
+pub mod memory;
+pub mod ovsf_gen;
+pub mod ovsf_storage;
+pub mod pe_array;
+pub mod quant;
+pub mod trace;
+pub mod wgen;
+
+pub use engine::LayerSim;
+pub use hw_weights::HwOvsfWeights;
+pub use ovsf_gen::OvsfGenerator;
+pub use trace::LayerTrace;

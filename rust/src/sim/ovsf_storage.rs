@@ -1,0 +1,148 @@
+//! OVSF basis-vector storage design ablation (paper §4.2.2).
+//!
+//! The paper weighs three ways of feeding the M-wide vector datapath with
+//! basis bits and argues for the FIFO + aligner. This module models all
+//! three so the trade-off can be regenerated quantitatively:
+//!
+//! 1. **Monolithic buffer** — statically lay out every M-bit slice each
+//!    subtile will read: M ports, depth = #basis-vectors × #subtiles per
+//!    tile period. Rotated copies are materialised ⇒ heavy replication.
+//! 2. **K²-deep memory + selection mux** — one K'²-bit word per code plus
+//!    an M-output barrel-rotator built from K'²-to-1 muxes: minimal
+//!    storage, but the selection network's LUT cost (≈ one 6-LUT per
+//!    2×2-to-1 mux slice per output bit) scales with `M·log₂(K'²)` and
+//!    lengthens the critical path.
+//! 3. **FIFO + aligner** (the paper's design, `sim::ovsf_gen`): one
+//!    K'²-bit word per code and a fixed per-layer circular shift — no
+//!    generic mux tree, 1 vector/cycle.
+
+use crate::util::ceil_div;
+
+/// Cost estimate of one storage design.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StorageCost {
+    /// On-chip bits dedicated to basis storage.
+    pub storage_bits: u64,
+    /// LUTs for selection/alignment logic (estimate; 0.5 LUT per 2-to-1
+    /// mux bit-slice as on 6-LUT fabrics).
+    pub selection_luts: u64,
+    /// Read rate in basis vectors per cycle delivered to the datapath.
+    pub vectors_per_cycle: f64,
+}
+
+/// Design 1: monolithic pre-rotated slice buffer.
+///
+/// Each tile period reads `n_basis · subtiles` M-bit slices; every slice is
+/// stored explicitly (replication of rotated copies), no selection logic.
+pub fn monolithic(m: u64, t_p: u64, t_c: u64, _k2: u64, n_basis: u64) -> StorageCost {
+    let subtiles = ceil_div(t_p * t_c, m);
+    // Distinct rotations repeat with period lcm(M, K'²)/M subtiles, but a
+    // static layout stores every slice of the schedule (the paper's
+    // "replicated either in the same address or in multiple addresses").
+    let slices = n_basis * subtiles;
+    StorageCost {
+        storage_bits: slices * m,
+        selection_luts: 0,
+        vectors_per_cycle: 1.0,
+    }
+}
+
+/// Design 2: minimal `K'²`-deep memory + generic barrel rotator.
+pub fn mux_based(m: u64, k2: u64, n_basis: u64) -> StorageCost {
+    // log2(K'²) rotation stages, each M bit-slices of 2-to-1 muxes.
+    let stages = (64 - (k2.max(2) - 1).leading_zeros()) as u64;
+    // Self-concatenation for M > K'² adds a replication stage per copy.
+    let concat = if m > k2 { ceil_div(m, k2) } else { 1 };
+    StorageCost {
+        storage_bits: n_basis * k2,
+        selection_luts: (m * stages).div_ceil(2) + concat * 8,
+        vectors_per_cycle: 1.0, // but with a longer critical path
+    }
+}
+
+/// Design 3: the FIFO + basis-vector aligner (paper's choice).
+///
+/// Storage equals the minimal design; alignment needs only the fixed
+/// per-layer circular-shift wiring (one shift option per distinct K in the
+/// CNN — pure routing plus a register, modelled at ~M/8 LUTs of fan-out
+/// buffering).
+pub fn fifo_aligner(m: u64, k2: u64, n_basis: u64, distinct_kernel_sizes: u64) -> StorageCost {
+    StorageCost {
+        storage_bits: n_basis * k2,
+        selection_luts: (m / 8).max(1) * distinct_kernel_sizes,
+        vectors_per_cycle: 1.0,
+    }
+}
+
+/// Compare the three designs for a configuration; returns
+/// `(monolithic, mux, fifo)`.
+pub fn compare(
+    m: u64,
+    t_p: u64,
+    t_c: u64,
+    k2: u64,
+    n_basis: u64,
+    distinct_kernel_sizes: u64,
+) -> (StorageCost, StorageCost, StorageCost) {
+    (
+        monolithic(m, t_p, t_c, k2, n_basis),
+        mux_based(m, k2, n_basis),
+        fifo_aligner(m, k2, n_basis, distinct_kernel_sizes),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn fifo_matches_minimal_storage() {
+        let (_, mux, fifo) = compare(64, 16, 48, 16, 8, 2);
+        assert_eq!(fifo.storage_bits, mux.storage_bits, "both store 1 bit/element");
+    }
+
+    #[test]
+    fn monolithic_replicates_heavily() {
+        let (mono, _, fifo) = compare(64, 16, 48, 16, 8, 2);
+        assert!(
+            mono.storage_bits > 20 * fifo.storage_bits,
+            "monolithic {} vs fifo {} bits",
+            mono.storage_bits,
+            fifo.storage_bits
+        );
+    }
+
+    #[test]
+    fn fifo_needs_far_less_selection_logic_than_mux() {
+        forall("storage-ablation", 40, |rng| {
+            let m = 1u64 << rng.gen_range(3, 8);
+            let k2 = [4u64, 16, 64][rng.gen_range(0, 2) as usize];
+            let nb = rng.gen_range(1, k2);
+            let (_, mux, fifo) = compare(m, 16, 64, k2, nb, 2);
+            assert!(
+                fifo.selection_luts < mux.selection_luts,
+                "fifo {} !< mux {} (M={m}, K²={k2})",
+                fifo.selection_luts,
+                mux.selection_luts
+            );
+        });
+    }
+
+    #[test]
+    fn all_designs_sustain_rate() {
+        let (mono, mux, fifo) = compare(32, 8, 32, 16, 4, 1);
+        for d in [mono, mux, fifo] {
+            assert!(d.vectors_per_cycle >= 1.0, "rate matching required");
+        }
+    }
+
+    #[test]
+    fn paper_tradeoff_holds_at_paper_scale() {
+        // The dominance argument of §4.2.2: vs design 1 the FIFO removes
+        // replicated storage; vs design 2 it removes the mux tree.
+        let (mono, mux, fifo) = compare(128, 8, 96, 16, 16, 2);
+        assert!(fifo.storage_bits <= mono.storage_bits / 10);
+        assert!(fifo.selection_luts * 2 <= mux.selection_luts);
+    }
+}

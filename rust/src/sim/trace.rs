@@ -1,0 +1,64 @@
+//! Per-layer simulation records.
+
+use crate::perf::Bound;
+
+/// What the cycle-level simulator measured for one layer.
+#[derive(Clone, Debug)]
+pub struct LayerTrace {
+    /// Layer name.
+    pub name: String,
+    /// Input DMA cycles per output tile.
+    pub t_mem_in: u64,
+    /// Weights-generation cycles per output tile.
+    pub t_wgen: u64,
+    /// Engine cycles per output tile.
+    pub t_eng: u64,
+    /// Output DMA cycles per output tile.
+    pub t_mem_out: u64,
+    /// Initiation interval (max of stages).
+    pub ii: u64,
+    /// Output tiles processed.
+    pub tiles: u64,
+    /// Total cycles (`II·tiles` in steady state).
+    pub total_cycles: u64,
+    /// Dominating stage.
+    pub bound: Bound,
+    /// Input bytes moved.
+    pub bytes_in: u64,
+    /// Output bytes moved.
+    pub bytes_out: u64,
+}
+
+impl LayerTrace {
+    /// Pretty one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<24} II={:>8} tiles={:>5} total={:>10} bound={}",
+            self.name, self.ii, self.tiles, self.total_cycles, self.bound
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_contains_fields() {
+        let t = LayerTrace {
+            name: "conv1".into(),
+            t_mem_in: 10,
+            t_wgen: 5,
+            t_eng: 8,
+            t_mem_out: 2,
+            ii: 10,
+            tiles: 4,
+            total_cycles: 40,
+            bound: Bound::Ifm,
+            bytes_in: 100,
+            bytes_out: 20,
+        };
+        let s = t.summary();
+        assert!(s.contains("conv1") && s.contains("IFM") && s.contains("40"));
+    }
+}

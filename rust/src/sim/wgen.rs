@@ -1,0 +1,264 @@
+//! CNN-WGen / TiWGen simulator (paper Alg. 1, §4.2).
+//!
+//! Walks the exact loop nest of Alg. 1 — tiles → subtiles → basis vectors,
+//! with the M-wide vector datapath unrolled — producing both the cycle
+//! count (pipelined: one basis vector per cycle per subtile) and the actual
+//! numeric weights, which are checked against the software OVSF oracle.
+//!
+//! Tile layout: a weights tile is `T_P×T_C`, flattened column-major
+//! (filters are columns), so an M-element subtile spans
+//! `⌈min(T_P,M)/K'²⌉·⌊M/T_P⌋ + …` filter-chunks — paper Eq. 3's `N_f`,
+//! which the simulator verifies as the peak per-cycle α-port demand.
+
+use crate::arch::DesignPoint;
+use crate::ovsf::codes::OvsfBasis;
+use crate::sim::hw_weights::HwOvsfWeights;
+use crate::util::ceil_div;
+
+/// Result of generating one layer's full weights matrix.
+#[derive(Clone, Debug)]
+pub struct WGenResult {
+    /// Generated `P×C` weights, row-major `w[p·C + o]`
+    /// (`P = N_in·K'²`, `C = N_out`).
+    pub weights: Vec<f32>,
+    /// Cycles consumed per *output tile* (Eq. 5's quantity).
+    pub cycles_per_output_tile: u64,
+    /// Peak distinct (filter, chunk) α reads needed in any single cycle.
+    pub peak_alpha_ports: usize,
+    /// Total multiply-accumulate operations issued by the vector datapath.
+    pub vector_macs: u64,
+}
+
+/// Simulate TiWGen for one layer.
+pub struct WGenSim<'a> {
+    sigma: &'a DesignPoint,
+    w: &'a HwOvsfWeights,
+}
+
+impl<'a> WGenSim<'a> {
+    /// New simulator over hardware-form weights.
+    pub fn new(sigma: &'a DesignPoint, w: &'a HwOvsfWeights) -> Self {
+        assert!(sigma.has_wgen(), "WGen disabled in this design point");
+        Self { sigma, w }
+    }
+
+    /// Generate the full `P×C` weights matrix, walking every weight tile of
+    /// every column tile exactly as Alg. 1 schedules them. `P = N_in·K²`
+    /// (engine layout); non-pow2 kernels read the cropped frame positions
+    /// of the `K'²`-length codes via the aligner's per-layer shift options.
+    pub fn generate(&self) -> WGenResult {
+        let chunk = self.w.chunk_len();
+        let ek = self.w.engine_chunk();
+        let basis = OvsfBasis::new(chunk).expect("chunk is a power of two");
+        let p_dim = self.w.p_dim();
+        let c_dim = self.w.n_out;
+        let (m, t_p, t_c) = (
+            self.sigma.m as usize,
+            self.sigma.t_p as usize,
+            self.sigma.t_c as usize,
+        );
+        let p_tiles = ceil_div(p_dim as u64, t_p as u64);
+        let subtiles = self.sigma.subtiles_per_tile();
+        let n_basis = self.w.n_basis;
+
+        let mut weights = vec![0.0f32; p_dim * c_dim];
+        let mut cycles_one_tile = 0u64;
+        let mut peak_ports = 0usize;
+        let mut vector_macs = 0u64;
+
+        // Hoisted lookups (§Perf): the basis sign at engine position
+        // `p % K²` does not depend on the tile walk — precompute one
+        // cropped sign row per basis vector...
+        let signs: Vec<Vec<f32>> = (0..n_basis)
+            .map(|j| {
+                (0..ek)
+                    .map(|kpos| basis.at(j, self.w.frame_pos(kpos)) as f32)
+                    .collect()
+            })
+            .collect();
+
+        let col_tiles = ceil_div(c_dim as u64, t_c as u64);
+        let n_basis_stride = self.w.n_basis;
+        let mut ports: Vec<(usize, usize)> = Vec::with_capacity(16);
+        // Reusable per-subtile lane descriptors: (weights index, α base
+        // index, engine kernel position) — all the div/mod address math of
+        // the M-wide datapath hoisted out of the per-cycle basis loop
+        // (§Perf: the hardware computes these with wiring, not per cycle).
+        let mut lanes: Vec<(u32, u32, u16)> = Vec::with_capacity(m);
+        for ct in 0..col_tiles {
+            let col_base = (ct as usize) * t_c;
+            for t in 0..p_tiles {
+                // tiles loop (Alg. 1 line 1) — PIPELINE
+                let p_base = (t as usize) * t_p;
+                for i in 0..subtiles {
+                    // subtiles loop (line 2) — PIPELINE
+                    let g_base = (i as usize) * m;
+                    // Lane addressing + the per-cycle α-port set depend only
+                    // on the subtile geometry, not on the basis index j:
+                    // compute them once per subtile.
+                    ports.clear();
+                    lanes.clear();
+                    for e in 0..m {
+                        let g = g_base + e;
+                        if g >= t_p * t_c {
+                            break; // last subtile may overhang the tile
+                        }
+                        let o = col_base + g / t_p;
+                        let p = p_base + g % t_p;
+                        if o >= c_dim || p >= p_dim {
+                            continue; // edge tiles: lanes idle
+                        }
+                        let c = p / ek;
+                        lanes.push((
+                            (p * c_dim + o) as u32,
+                            ((o * self.w.n_in + c) * n_basis_stride) as u32,
+                            (p % ek) as u16,
+                        ));
+                        let pair = (o, c);
+                        if ports.last() != Some(&pair) && !ports.contains(&pair) {
+                            ports.push(pair);
+                        }
+                    }
+                    peak_ports = peak_ports.max(ports.len());
+                    for (j, sign_row) in signs.iter().enumerate() {
+                        // basis vectors loop (line 4) — PIPELINE (1 cycle)
+                        if ct == 0 {
+                            cycles_one_tile += 1;
+                        }
+                        for &(w_idx, a_base, kpos) in &lanes {
+                            // inner M-wide loop (line 5) — UNROLL:
+                            // multiplier array → adder array accumulation
+                            weights[w_idx as usize] += self.w.alphas
+                                [a_base as usize + j]
+                                * sign_row[kpos as usize];
+                        }
+                        vector_macs += lanes.len() as u64;
+                    }
+                }
+            }
+        }
+        WGenResult {
+            weights,
+            cycles_per_output_tile: cycles_one_tile,
+            peak_alpha_ports: peak_ports,
+            vector_macs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Platform;
+    use crate::perf::model::PerfModel;
+    use crate::rsc::model::AlphaBufferGeometry;
+    use crate::util::check::forall;
+    use crate::util::prng::Xoshiro256;
+    use crate::workload::layer::Layer;
+
+    fn sim_layer(
+        rng: &mut Xoshiro256,
+        n_out: usize,
+        n_in: usize,
+        k: usize,
+        rho: f64,
+        sigma: &DesignPoint,
+    ) -> (HwOvsfWeights, WGenResult) {
+        let w = HwOvsfWeights::random(rng, n_out, n_in, k, rho).unwrap();
+        let r = WGenSim::new(sigma, &w).generate();
+        (w, r)
+    }
+
+    #[test]
+    fn generated_weights_match_oracle() {
+        forall("tiwgen-matches-oracle", 20, |rng| {
+            let sigma = DesignPoint::new(
+                1 << rng.gen_range(2, 6),  // M ∈ 4..32
+                16,
+                1 << rng.gen_range(2, 5),  // T_P ∈ 4..16
+                1 << rng.gen_range(2, 5),  // T_C ∈ 4..16
+            );
+            let (w, r) = sim_layer(rng, 8, 4, 3, 0.5, &sigma);
+            let oracle = w.dense_gemm().unwrap();
+            assert_eq!(r.weights.len(), oracle.len());
+            for (i, (a, b)) in r.weights.iter().zip(&oracle).enumerate() {
+                assert!((a - b).abs() < 1e-4, "idx {i}: {a} vs {b} ({sigma})");
+            }
+        });
+    }
+
+    #[test]
+    fn cycle_count_equals_eq5() {
+        // The simulator's walked cycle count must equal the closed form
+        // t_wgen = ⌊ρ·K'²⌉ · ⌈T_P·T_C/M⌉ · ⌈P/T_P⌉ (Eq. 5).
+        forall("tiwgen-eq5", 20, |rng| {
+            let sigma = DesignPoint::new(
+                1 << rng.gen_range(3, 6),
+                32,
+                1 << rng.gen_range(2, 5),
+                1 << rng.gen_range(3, 6),
+            );
+            let n_in = 1usize << rng.gen_range(2, 4); // 4..8
+            let rho = *rng.choose(&[0.25, 0.5, 1.0]);
+            let (w, r) = sim_layer(rng, 16, n_in, 3, rho, &sigma);
+            let layer = Layer::conv("t", 8, 8, n_in as u64, w.n_out as u64, 3, 1, 1, true);
+            let model = PerfModel::new(Platform::z7045(), 4);
+            let expect = model.t_wgen(&sigma, &layer, rho);
+            assert_eq!(
+                r.cycles_per_output_tile as f64, expect,
+                "sim vs Eq.5 at {sigma}, ρ={rho}"
+            );
+        });
+    }
+
+    #[test]
+    fn alpha_port_demand_bounded_by_eq3() {
+        forall("tiwgen-eq3-ports", 20, |rng| {
+            let m = 1u64 << rng.gen_range(2, 6);
+            let t_p = 1u64 << rng.gen_range(2, 5);
+            let sigma = DesignPoint::new(m, 16, t_p, 16);
+            let (w, r) = sim_layer(rng, 16, 4, 3, 0.5, &sigma);
+            // Port demand is set by the *engine* chunk width (9 for K=3):
+            // that is the granularity at which a subtile straddles filters.
+            // Eq. 3 assumes aligned tiling; the worst-case bound covers
+            // arbitrary (M, T_P, K²) alignment.
+            let k2 = w.engine_chunk() as u64;
+            let n_f = AlphaBufferGeometry::n_f_worst_case(m, t_p, k2) as usize;
+            assert!(
+                r.peak_alpha_ports <= n_f,
+                "peak ports {} exceed worst-case N_f {} (M={m}, T_P={t_p})",
+                r.peak_alpha_ports,
+                n_f
+            );
+        });
+    }
+
+    #[test]
+    fn vector_macs_match_alpha_volume() {
+        // Every weight element accumulates n_basis products; lanes covering
+        // out-of-range elements idle.
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let sigma = DesignPoint::new(16, 16, 8, 8);
+        let (w, r) = sim_layer(&mut rng, 8, 4, 4, 0.5, &sigma);
+        let expect = w.p_dim() as u64 * w.n_out as u64 * w.n_basis as u64;
+        assert_eq!(r.vector_macs, expect);
+    }
+
+    #[test]
+    fn full_rho_reconstruction_is_exact_for_pow2() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let dense: Vec<f32> = rng.normal_vec(8 * 4 * 16);
+        let hw = HwOvsfWeights::from_dense(&dense, 8, 4, 4, 1.0).unwrap();
+        let sigma = DesignPoint::new(32, 16, 16, 8);
+        let r = WGenSim::new(&sigma, &hw).generate();
+        for o in 0..8 {
+            for c in 0..4 {
+                for pos in 0..16 {
+                    let orig = dense[((o * 4 + c) * 4 + pos / 4) * 4 + pos % 4];
+                    let got = r.weights[(c * 16 + pos) * 8 + o];
+                    assert!((orig - got).abs() < 1e-4);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Warmup + fixed-iteration timing with mean/min/σ reporting, plus a
+//! comparison helper for before/after §Perf entries. Used by every target
+//! in `rust/benches/`.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Iterations measured.
+    pub iters: u32,
+    /// Mean wall time per iteration (ns).
+    pub mean_ns: f64,
+    /// Fastest iteration (ns).
+    pub min_ns: f64,
+    /// Standard deviation (ns).
+    pub std_ns: f64,
+}
+
+impl BenchResult {
+    /// Pretty printable line (criterion-ish).
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} /iter (min {:>12}, σ {:>10}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.std_ns),
+            self.iters
+        )
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+/// The closure's return value is black-boxed to keep the work alive.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / samples.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        min_ns: min,
+        std_ns: var.sqrt(),
+    };
+    println!("{}", r.line());
+    r
+}
+
+/// Auto-calibrating variant: picks an iteration count that runs ~`budget_ms`.
+pub fn bench_auto<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchResult {
+    // One probe iteration sizes the loop.
+    let t = Instant::now();
+    std::hint::black_box(f());
+    let probe_ns = t.elapsed().as_nanos().max(1) as f64;
+    let iters = ((budget_ms as f64 * 1e6 / probe_ns).ceil() as u32).clamp(3, 10_000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2500.0), "2.50 µs");
+        assert_eq!(fmt_ns(3.3e6), "3.30 ms");
+        assert_eq!(fmt_ns(2.1e9), "2.10 s");
+    }
+
+    #[test]
+    fn auto_calibrates() {
+        let r = bench_auto("tiny", 5, || 42u8);
+        assert!(r.iters >= 3);
+    }
+}

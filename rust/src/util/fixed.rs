@@ -1,0 +1,123 @@
+//! 16-bit fixed-point helpers.
+//!
+//! The paper evaluates all designs at 16-bit fixed-point precision (§7.1).
+//! The hardware datapath models quantise α coefficients and activations to
+//! Q(int_bits).(frac_bits); these helpers provide the conversion and the
+//! quantisation-error bound used by the numerics tests.
+
+/// A Q-format specification: 1 sign bit + `int_bits` + `frac_bits` = width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFormat {
+    /// Integer bits (excluding sign).
+    pub int_bits: u32,
+    /// Fractional bits.
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    /// The paper's default 16-bit format (Q8.7 + sign).
+    pub const Q16: QFormat = QFormat {
+        int_bits: 8,
+        frac_bits: 7,
+    };
+
+    /// Total word length in bits.
+    pub fn word_length(&self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Word length in bytes (rounded up).
+    pub fn word_bytes(&self) -> u64 {
+        ((self.word_length() + 7) / 8) as u64
+    }
+
+    /// Quantisation step.
+    pub fn step(&self) -> f32 {
+        (2.0f32).powi(-(self.frac_bits as i32))
+    }
+
+    /// Representable range `[-max, max]`.
+    pub fn max_value(&self) -> f32 {
+        (2.0f32).powi(self.int_bits as i32) - self.step()
+    }
+
+    /// Quantise (round-to-nearest, saturating).
+    pub fn quantise(&self, x: f32) -> f32 {
+        let s = self.step();
+        let q = (x / s).round() * s;
+        q.clamp(-self.max_value(), self.max_value())
+    }
+
+    /// Quantise to the underlying integer code (for bit-exact HW models).
+    pub fn to_code(&self, x: f32) -> i32 {
+        let s = self.step();
+        let max_code = ((self.max_value() / s).round()) as i32;
+        ((x / s).round() as i32).clamp(-max_code, max_code)
+    }
+
+    /// Convert an integer code back to a real value.
+    pub fn from_code(&self, code: i32) -> f32 {
+        code as f32 * self.step()
+    }
+}
+
+/// Quantise a whole slice in place; returns the max absolute error introduced.
+pub fn quantise_slice(fmt: QFormat, xs: &mut [f32]) -> f32 {
+    let mut max_err = 0.0f32;
+    for x in xs.iter_mut() {
+        let q = fmt.quantise(*x);
+        max_err = max_err.max((q - *x).abs());
+        *x = q;
+    }
+    max_err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q16_geometry() {
+        let f = QFormat::Q16;
+        assert_eq!(f.word_length(), 16);
+        assert_eq!(f.word_bytes(), 2);
+        assert!((f.step() - 0.0078125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantise_round_trip_error_bounded() {
+        let f = QFormat::Q16;
+        for i in 0..1000 {
+            let x = (i as f32) * 0.137 - 70.0;
+            let q = f.quantise(x);
+            if x.abs() < f.max_value() {
+                assert!((q - x).abs() <= f.step() / 2.0 + 1e-9, "x={x} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturates() {
+        let f = QFormat::Q16;
+        assert_eq!(f.quantise(1e9), f.max_value());
+        assert_eq!(f.quantise(-1e9), -f.max_value());
+    }
+
+    #[test]
+    fn code_round_trip() {
+        let f = QFormat::Q16;
+        for x in [-1.5f32, 0.0, 0.25, 3.125, -120.0] {
+            let c = f.to_code(x);
+            assert!((f.from_code(c) - f.quantise(x)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn quantise_slice_reports_max_err() {
+        let f = QFormat::Q16;
+        let mut xs = vec![0.001f32, 0.51, 1.0];
+        let e = quantise_slice(f, &mut xs);
+        assert!(e <= f.step() / 2.0 + 1e-9);
+        assert_eq!(xs[2], 1.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Small self-contained utilities (the offline environment provides no
+//! external crates beyond the `xla` closure, so PRNG, fixed-point, stats,
+//! table rendering and the property-test harness live here).
+
+pub mod bench;
+pub mod check;
+pub mod fixed;
+pub mod prng;
+pub mod stats;
+pub mod table;
+
+/// Ceiling division for unsigned integers.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0, "ceil_div by zero");
+    (a + b - 1) / b
+}
+
+/// `true` iff `n` is a power of two (and non-zero).
+#[inline]
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+/// Smallest power of two `>= n` (n must be > 0).
+#[inline]
+pub fn next_pow2(n: usize) -> usize {
+    debug_assert!(n > 0);
+    n.next_power_of_two()
+}
+
+/// Round `x` to the nearest integer, half away from zero — the paper's
+/// `⌊ρ·L⌉` operator for choosing the number of basis vectors.
+#[inline]
+pub fn round_half_away(x: f64) -> i64 {
+    if x >= 0.0 {
+        (x + 0.5).floor() as i64
+    } else {
+        (x - 0.5).ceil() as i64
+    }
+}
+
+/// Number of basis vectors used for a length-`l` code at ratio `rho`
+/// (`⌊ρ·l⌉`, clamped to `[1, l]` — at least one basis vector is always used).
+#[inline]
+pub fn n_basis(rho: f64, l: usize) -> usize {
+    let n = round_half_away(rho * l as f64).max(1) as usize;
+    n.min(l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(8, 4), 2);
+    }
+
+    #[test]
+    fn pow2_helpers() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(64));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(12));
+        assert_eq!(next_pow2(9), 16);
+        assert_eq!(next_pow2(16), 16);
+    }
+
+    #[test]
+    fn rounding() {
+        assert_eq!(round_half_away(0.5), 1);
+        assert_eq!(round_half_away(0.49), 0);
+        assert_eq!(round_half_away(2.5), 3);
+        assert_eq!(round_half_away(-0.5), -1);
+    }
+
+    #[test]
+    fn n_basis_clamps() {
+        assert_eq!(n_basis(1.0, 16), 16);
+        assert_eq!(n_basis(0.5, 16), 8);
+        assert_eq!(n_basis(0.0, 16), 1, "at least one basis vector");
+        assert_eq!(n_basis(0.4, 9), 4); // ⌊3.6⌉ = 4
+        assert_eq!(n_basis(0.125, 9), 1);
+    }
+}

@@ -1,0 +1,161 @@
+//! Summary statistics used by benches and report harnesses.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean (all inputs must be > 0); 0 for empty input.
+pub fn geo_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via nearest-rank on a sorted copy (`p` in `[0, 100]`).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+    s[rank.min(s.len() - 1)]
+}
+
+/// Ordinary least squares fit `y ≈ a + b·x`; returns `(a, b)`.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+    }
+    if sxx == 0.0 || n < 2.0 {
+        return (my, 0.0);
+    }
+    let b = sxy / sxx;
+    (my - b * mx, b)
+}
+
+/// Multi-variate OLS `y ≈ w·x + b` solved by normal equations with
+/// Gaussian elimination; returns `(b, w)`. Used by the LUT regression model.
+pub fn multilinear_fit(rows: &[Vec<f64>], ys: &[f64]) -> (f64, Vec<f64>) {
+    assert_eq!(rows.len(), ys.len());
+    assert!(!rows.is_empty());
+    let k = rows[0].len();
+    let d = k + 1; // + intercept
+    // Build X^T X and X^T y with an implicit leading 1 column.
+    let mut xtx = vec![vec![0.0f64; d]; d];
+    let mut xty = vec![0.0f64; d];
+    for (row, &y) in rows.iter().zip(ys) {
+        let mut aug = Vec::with_capacity(d);
+        aug.push(1.0);
+        aug.extend_from_slice(row);
+        for i in 0..d {
+            xty[i] += aug[i] * y;
+            for j in 0..d {
+                xtx[i][j] += aug[i] * aug[j];
+            }
+        }
+    }
+    // Gaussian elimination with partial pivoting.
+    for col in 0..d {
+        let mut piv = col;
+        for r in col + 1..d {
+            if xtx[r][col].abs() > xtx[piv][col].abs() {
+                piv = r;
+            }
+        }
+        xtx.swap(col, piv);
+        xty.swap(col, piv);
+        let diag = xtx[col][col];
+        if diag.abs() < 1e-12 {
+            continue; // singular direction; leave coefficient at 0
+        }
+        for r in 0..d {
+            if r == col {
+                continue;
+            }
+            let f = xtx[r][col] / diag;
+            for c in 0..d {
+                xtx[r][c] -= f * xtx[col][c];
+            }
+            xty[r] -= f * xty[col];
+        }
+    }
+    let mut coef = vec![0.0f64; d];
+    for i in 0..d {
+        if xtx[i][i].abs() > 1e-12 {
+            coef[i] = xty[i] / xtx[i][i];
+        }
+    }
+    (coef[0], coef[1..].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn means() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((geo_mean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn ols_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multilinear_recovers_plane() {
+        // y = 1 + 2 x0 + 3 x1
+        let rows: Vec<Vec<f64>> = (0..40)
+            .map(|i| vec![(i % 7) as f64, (i % 5) as f64])
+            .collect();
+        let ys: Vec<f64> = rows.iter().map(|r| 1.0 + 2.0 * r[0] + 3.0 * r[1]).collect();
+        let (b, w) = multilinear_fit(&rows, &ys);
+        assert!((b - 1.0).abs() < 1e-6, "b={b}");
+        assert!((w[0] - 2.0).abs() < 1e-6);
+        assert!((w[1] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn std_dev_basic() {
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+    }
+}

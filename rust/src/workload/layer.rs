@@ -1,0 +1,252 @@
+//! Layer descriptors and their GEMM view (paper §4.1).
+//!
+//! A CONV layer with `N_in` input channels of `H×W`, `N_out` output
+//! channels, `K×K` filters, padding `p` and stride `S` maps to the
+//! multiplication of an `R×P` activations matrix with a `P×C` weights
+//! matrix: `R = out_h·out_w`, `P = N_in·K²`, `C = N_out`.
+
+use crate::util::{is_pow2, n_basis, next_pow2};
+
+/// Kind of compute layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Spatial convolution.
+    Conv,
+    /// Fully connected (K=1, spatial 1×1 view).
+    Fc,
+}
+
+/// The `⟨R, P, C⟩` GEMM workload tuple of a layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    /// Output rows (spatial positions).
+    pub r: u64,
+    /// Reduction depth (`N_in·K²`).
+    pub p: u64,
+    /// Output columns (`N_out`).
+    pub c: u64,
+}
+
+impl GemmShape {
+    /// MACs of the GEMM.
+    pub fn macs(&self) -> u64 {
+        self.r * self.p * self.c
+    }
+}
+
+/// One compute layer of a CNN.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    /// Human-readable name (e.g. "layer2.0.conv1").
+    pub name: String,
+    /// Conv or FC.
+    pub kind: LayerKind,
+    /// Input feature-map height.
+    pub h: u64,
+    /// Input feature-map width.
+    pub w: u64,
+    /// Input channels.
+    pub n_in: u64,
+    /// Output channels.
+    pub n_out: u64,
+    /// Kernel size `K` (1 for FC).
+    pub k: u64,
+    /// Stride.
+    pub stride: u64,
+    /// Padding.
+    pub pad: u64,
+    /// Whether this layer is replaced by an OVSF-CONV layer (the first conv
+    /// of a network stays dense, paper §6.2).
+    pub ovsf: bool,
+}
+
+impl Layer {
+    /// Convenience conv constructor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: impl Into<String>,
+        h: u64,
+        w: u64,
+        n_in: u64,
+        n_out: u64,
+        k: u64,
+        stride: u64,
+        pad: u64,
+        ovsf: bool,
+    ) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            h,
+            w,
+            n_in,
+            n_out,
+            k,
+            stride,
+            pad,
+            ovsf,
+        }
+    }
+
+    /// Convenience FC constructor.
+    pub fn fc(name: impl Into<String>, n_in: u64, n_out: u64) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Fc,
+            h: 1,
+            w: 1,
+            n_in,
+            n_out,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            ovsf: false,
+        }
+    }
+
+    /// Output spatial height.
+    pub fn out_h(&self) -> u64 {
+        (self.h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Output spatial width.
+    pub fn out_w(&self) -> u64 {
+        (self.w + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// GEMM view `⟨R, P, C⟩`.
+    pub fn gemm(&self) -> GemmShape {
+        GemmShape {
+            r: self.out_h() * self.out_w(),
+            p: self.n_in * self.k * self.k,
+            c: self.n_out,
+        }
+    }
+
+    /// Dense parameter count (no bias, as in the paper's accounting).
+    pub fn params(&self) -> u64 {
+        self.n_out * self.n_in * self.k * self.k
+    }
+
+    /// MACs for one inference.
+    pub fn macs(&self) -> u64 {
+        self.gemm().macs()
+    }
+
+    /// OVSF code length for this layer: `L = N_in·K'²` with `K'` the
+    /// power-of-two kernel frame (4 for K=3).
+    pub fn ovsf_code_len(&self) -> u64 {
+        let k = if is_pow2(self.k as usize) {
+            self.k
+        } else {
+            next_pow2(self.k as usize) as u64
+        };
+        self.n_in * k * k
+    }
+
+    /// Number of basis vectors per filter at ratio ρ. The paper streams the
+    /// generation per `K²`-sized chunk, so the per-subtile count is
+    /// `⌊ρ·K'²⌉` (Alg. 1's `ρK²` loop bound).
+    pub fn basis_per_chunk(&self, rho: f64) -> u64 {
+        let k = if is_pow2(self.k as usize) {
+            self.k
+        } else {
+            next_pow2(self.k as usize) as u64
+        };
+        n_basis(rho, (k * k) as usize) as u64
+    }
+
+    /// Parameter count when stored as OVSF α coefficients at ratio ρ
+    /// (paper: `N_in·N_out·⌈ρ_l·K_l²⌉` α values for layer `l`);
+    /// non-OVSF layers keep their dense parameters.
+    pub fn params_with_rho(&self, rho: f64) -> u64 {
+        if !self.ovsf || rho >= 1.0 {
+            if self.ovsf {
+                // ρ=1 OVSF layer stores N_in·N_out·K'² alphas.
+                let k = if is_pow2(self.k as usize) {
+                    self.k
+                } else {
+                    next_pow2(self.k as usize) as u64
+                };
+                return self.n_in * self.n_out * k * k;
+            }
+            return self.params();
+        }
+        self.n_in * self.n_out * self.basis_per_chunk(rho)
+    }
+
+    /// Input feature-map elements (what `t_mem_in` streams per row tile is
+    /// `T_R·P`; per full layer the paper's model moves `R·P`).
+    pub fn ifm_elems(&self) -> u64 {
+        self.gemm().r * self.gemm().p
+    }
+
+    /// Output feature-map elements.
+    pub fn ofm_elems(&self) -> u64 {
+        self.gemm().r * self.gemm().c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_gemm_view() {
+        // 3×3 s1 p1 conv on 56×56×64 → 56×56×64.
+        let l = Layer::conv("c", 56, 56, 64, 64, 3, 1, 1, true);
+        let g = l.gemm();
+        assert_eq!(g.r, 56 * 56);
+        assert_eq!(g.p, 64 * 9);
+        assert_eq!(g.c, 64);
+        assert_eq!(l.params(), 36_864);
+    }
+
+    #[test]
+    fn strided_conv_output_dims() {
+        // ResNet stem: 7×7 s2 p3 on 224 → 112.
+        let l = Layer::conv("stem", 224, 224, 3, 64, 7, 2, 3, false);
+        assert_eq!(l.out_h(), 112);
+        assert_eq!(l.out_w(), 112);
+    }
+
+    #[test]
+    fn fc_view() {
+        let l = Layer::fc("fc", 512, 1000);
+        let g = l.gemm();
+        assert_eq!((g.r, g.p, g.c), (1, 512, 1000));
+        assert_eq!(l.params(), 512_000);
+    }
+
+    #[test]
+    fn ovsf_code_len_rounds_kernel() {
+        let l3 = Layer::conv("c3", 14, 14, 256, 256, 3, 1, 1, true);
+        assert_eq!(l3.ovsf_code_len(), 256 * 16, "3×3 uses a 4×4 frame");
+        let l1 = Layer::conv("c1", 14, 14, 256, 64, 1, 1, 0, true);
+        assert_eq!(l1.ovsf_code_len(), 256);
+    }
+
+    #[test]
+    fn alpha_params_scale_with_rho() {
+        let l = Layer::conv("c", 28, 28, 128, 128, 3, 1, 1, true);
+        let full = l.params_with_rho(1.0);
+        assert_eq!(full, 128 * 128 * 16);
+        let half = l.params_with_rho(0.5);
+        assert_eq!(half, 128 * 128 * 8);
+        let quarter = l.params_with_rho(0.25);
+        assert_eq!(quarter, 128 * 128 * 4);
+        // Dense (non-OVSF) layers ignore ρ.
+        let dense = Layer::conv("d", 28, 28, 128, 128, 3, 1, 1, false);
+        assert_eq!(dense.params_with_rho(0.25), dense.params());
+    }
+
+    #[test]
+    fn basis_per_chunk_matches_paper_ratios() {
+        let l = Layer::conv("c", 28, 28, 128, 128, 3, 1, 1, true);
+        assert_eq!(l.basis_per_chunk(1.0), 16);
+        assert_eq!(l.basis_per_chunk(0.5), 8);
+        assert_eq!(l.basis_per_chunk(0.25), 4);
+        assert_eq!(l.basis_per_chunk(0.125), 2);
+        assert_eq!(l.basis_per_chunk(0.4), 6); // ⌊6.4⌉
+    }
+}

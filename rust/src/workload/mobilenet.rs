@@ -1,0 +1,112 @@
+//! MobileNetV1 — depthwise-separable workload. A stress test for the PE
+//! array, not the memory wall: depthwise layers have a GEMM depth of only
+//! `K² = 9` (each filter sees one channel), so the engine's `T_P`-deep dot
+//! products and `T_C`-wide array are chronically underfilled — exactly the
+//! mismatch the input-selective PEs (paper §4.3) address.
+//!
+//! Depthwise convolutions map to the engine as grouped GEMMs: `N` parallel
+//! `R×K²×1` problems ⇒ a layer descriptor with `n_in = 1, n_out = N`
+//! (each output column owns its K²-deep filter). 1×1 and depthwise layers
+//! stay dense (the paper applies OVSF to 3×3 multi-channel filters).
+
+use super::layer::Layer;
+use super::Network;
+
+/// ImageNet MobileNetV1 (width 1.0).
+pub fn mobilenet_v1() -> Network {
+    let mut layers = Vec::new();
+    layers.push(Layer::conv("conv1", 224, 224, 3, 32, 3, 2, 1, false));
+    // (fmap_in, channels_in, channels_out, stride of the dw conv)
+    let blocks: [(u64, u64, u64, u64); 13] = [
+        (112, 32, 64, 1),
+        (112, 64, 128, 2),
+        (56, 128, 128, 1),
+        (56, 128, 256, 2),
+        (28, 256, 256, 1),
+        (28, 256, 512, 2),
+        (14, 512, 512, 1),
+        (14, 512, 512, 1),
+        (14, 512, 512, 1),
+        (14, 512, 512, 1),
+        (14, 512, 512, 1),
+        (14, 512, 1024, 2),
+        (7, 1024, 1024, 1),
+    ];
+    for (i, &(fmap, c_in, c_out, s)) in blocks.iter().enumerate() {
+        let out_fmap = fmap / s;
+        // Depthwise 3×3: grouped — engine view n_in = 1, n_out = c_in.
+        let mut dw = Layer::conv(
+            format!("dw{}", i + 1),
+            fmap,
+            fmap,
+            1,
+            c_in,
+            3,
+            s,
+            1,
+            false,
+        );
+        // The spatial extent is per-channel; R stays the featuremap size.
+        dw.name = format!("dw{}", i + 1);
+        layers.push(dw);
+        // Pointwise 1×1.
+        layers.push(Layer::conv(
+            format!("pw{}", i + 1),
+            out_fmap,
+            out_fmap,
+            c_in,
+            c_out,
+            1,
+            1,
+            0,
+            false,
+        ));
+    }
+    layers.push(Layer::fc("fc", 1024, 1000));
+    Network {
+        name: "MobileNetV1".to_string(),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{DesignPoint, Platform};
+    use crate::perf::model::{PerfModel, WeightsSource};
+
+    #[test]
+    fn params_and_gops() {
+        let n = mobilenet_v1();
+        let p = n.params() as f64 / 1e6;
+        // 4.2M params (conv+fc, no BN).
+        assert!((p - 4.2).abs() < 0.3, "MobileNetV1 {p}M vs ~4.2M");
+        let g = n.gops();
+        assert!((g - 1.1).abs() < 0.25, "MobileNetV1 {g} GOps vs ~1.1");
+    }
+
+    #[test]
+    fn depthwise_layers_have_tiny_gemm_depth() {
+        let n = mobilenet_v1();
+        for l in n.layers.iter().filter(|l| l.name.starts_with("dw")) {
+            assert_eq!(l.gemm().p, 9, "{}: depthwise depth is K²", l.name);
+        }
+    }
+
+    #[test]
+    fn selective_pes_help_depthwise_edge_tiles() {
+        // dw layers with C = 32 on a 48-wide array: the steal schedule
+        // recovers the idle 16 PEs.
+        let plat = Platform::z7045();
+        let model = PerfModel::new(plat, 4);
+        let sigma = DesignPoint::new(16, 128, 4, 48);
+        let n = mobilenet_v1();
+        let dw1 = n.layers.iter().find(|l| l.name == "dw1").unwrap();
+        let with = model.layer_perf(&sigma, dw1, WeightsSource::OffChip);
+        let without = model
+            .clone()
+            .without_selective_pes()
+            .layer_perf(&sigma, dw1, WeightsSource::OffChip);
+        assert!(with.t_eng <= without.t_eng);
+    }
+}

@@ -1,0 +1,91 @@
+//! CNN workload descriptions: per-layer GEMM views `⟨R, P, C⟩` for the
+//! paper's benchmark networks (ResNet18/34/50, SqueezeNet1.1) and the
+//! per-layer OVSF ratio profiles.
+
+pub mod layer;
+pub mod mobilenet;
+pub mod ratios;
+pub mod resnet;
+pub mod squeezenet;
+pub mod vgg;
+
+pub use layer::{GemmShape, Layer, LayerKind};
+pub use ratios::RatioProfile;
+
+/// A full network workload: ordered compute layers.
+#[derive(Clone, Debug)]
+pub struct Network {
+    /// Network name, e.g. "ResNet18".
+    pub name: String,
+    /// Compute layers in execution order (conv + fc; pooling/activation are
+    /// bandwidth-negligible and folded away, as in the paper's engine).
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Total parameters (dense, uncompressed).
+    pub fn params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Total multiply-accumulates for one inference.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// GOps per inference (2 ops per MAC), the figure the paper quotes
+    /// (ResNet18 4.03, ResNet34 7.40, ResNet50 8.41, SqueezeNet 0.78).
+    pub fn gops(&self) -> f64 {
+        2.0 * self.macs() as f64 / 1e9
+    }
+
+    /// Parameters after OVSF compression with the given per-layer profile
+    /// (α coefficients replace dense weights on OVSF layers).
+    pub fn params_compressed(&self, profile: &RatioProfile) -> u64 {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| l.params_with_rho(profile.rho(i)))
+            .sum()
+    }
+
+    /// The four benchmark networks of the paper's evaluation.
+    pub fn benchmarks() -> Vec<Network> {
+        vec![
+            resnet::resnet18(),
+            resnet::resnet34(),
+            resnet::resnet50(),
+            squeezenet::squeezenet1_1(),
+        ]
+    }
+
+    /// Additional (non-paper) workloads supported by the framework.
+    pub fn extended() -> Vec<Network> {
+        vec![vgg::vgg16(), mobilenet::mobilenet_v1()]
+    }
+
+    /// Look a workload up by (case-insensitive) name, covering the paper
+    /// benchmarks plus the extended set.
+    pub fn by_name(name: &str) -> Option<Network> {
+        let lower = name.to_lowercase();
+        Self::benchmarks()
+            .into_iter()
+            .chain(Self::extended())
+            .find(|n| n.name.to_lowercase() == lower)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn benchmark_lookup() {
+        assert!(Network::by_name("resnet18").is_some());
+        assert!(Network::by_name("ResNet50").is_some());
+        // Extended (non-paper) workloads resolve too.
+        assert!(Network::by_name("vgg16").is_some());
+        assert!(Network::by_name("MobileNetV1").is_some());
+        assert!(Network::by_name("lenet").is_none());
+    }
+}

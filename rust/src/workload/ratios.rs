@@ -1,0 +1,192 @@
+//! Per-layer OVSF ratio profiles (paper §6.2, §7.1.3).
+//!
+//! The hand-tuned profiles assign one ratio per residual *block group*:
+//! `OVSF50 = [1.0, 0.5, 0.5, 0.5]` and `OVSF25 = [1.0, 0.4, 0.25, 0.125]`
+//! across the four ResNet stages (Fire-module groups for SqueezeNet). The
+//! hardware-aware autotuner (crate::autotune) refines these per layer.
+
+use super::Network;
+
+/// A per-layer assignment of OVSF ratios (entries for non-OVSF layers are
+/// kept at 1.0 and ignored).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RatioProfile {
+    /// Profile name (e.g. "OVSF50").
+    pub name: String,
+    /// One ρ per network layer.
+    pub rhos: Vec<f64>,
+}
+
+impl RatioProfile {
+    /// ρ for layer `i`.
+    pub fn rho(&self, i: usize) -> f64 {
+        self.rhos[i]
+    }
+
+    /// Number of layer entries.
+    pub fn len(&self) -> usize {
+        self.rhos.len()
+    }
+
+    /// `true` when empty.
+    pub fn is_empty(&self) -> bool {
+        self.rhos.is_empty()
+    }
+
+    /// Mean ρ over OVSF layers, weighted by dense parameter count — the
+    /// "effective compression" figure used by the accuracy model.
+    pub fn effective_rho(&self, net: &Network) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (i, l) in net.layers.iter().enumerate() {
+            if l.ovsf {
+                let w = l.params() as f64;
+                num += self.rhos[i] * w;
+                den += w;
+            }
+        }
+        if den == 0.0 {
+            1.0
+        } else {
+            num / den
+        }
+    }
+
+    /// Uniform profile: the same ρ on every OVSF layer (the paper's
+    /// `uniform-ρ` baseline; the first conv is never OVSF by construction).
+    pub fn uniform(net: &Network, rho: f64) -> Self {
+        RatioProfile {
+            name: format!("uniform-{rho}"),
+            rhos: net
+                .layers
+                .iter()
+                .map(|l| if l.ovsf { rho } else { 1.0 })
+                .collect(),
+        }
+    }
+
+    /// Hand-tuned per-stage profile: maps 4 stage ratios onto the layers.
+    pub fn per_stage(net: &Network, name: &str, stage_rhos: [f64; 4]) -> Self {
+        let rhos = net
+            .layers
+            .iter()
+            .map(|l| {
+                if !l.ovsf {
+                    return 1.0;
+                }
+                stage_rhos[stage_of(net, &l.name)]
+            })
+            .collect();
+        RatioProfile {
+            name: name.to_string(),
+            rhos,
+        }
+    }
+
+    /// The paper's OVSF50 profile: `[1.0, 0.5, 0.5, 0.5]`.
+    pub fn ovsf50(net: &Network) -> Self {
+        Self::per_stage(net, "OVSF50", [1.0, 0.5, 0.5, 0.5])
+    }
+
+    /// The paper's OVSF25 profile: `[1.0, 0.4, 0.25, 0.125]`.
+    pub fn ovsf25(net: &Network) -> Self {
+        Self::per_stage(net, "OVSF25", [1.0, 0.4, 0.25, 0.125])
+    }
+}
+
+/// Stage (0..4) of a layer by name for both ResNets ("layerN.") and
+/// SqueezeNet ("fireN."): Fire modules pair up into four groups
+/// (2–3, 4–5, 6–7, 8–9).
+fn stage_of(_net: &Network, name: &str) -> usize {
+    if let Some(rest) = name.strip_prefix("layer") {
+        let n: usize = rest[..1].parse().unwrap_or(1);
+        return n - 1;
+    }
+    if let Some(rest) = name.strip_prefix("stage") {
+        let n: usize = rest[..1].parse().unwrap_or(1);
+        // CIFAR-small has 3 stages; map onto the last three groups.
+        return n.min(3);
+    }
+    if let Some(rest) = name.strip_prefix("fire") {
+        let n: usize = rest[..1].parse().unwrap_or(2);
+        return ((n - 2) / 2).min(3);
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{resnet, squeezenet};
+
+    #[test]
+    fn ovsf25_matches_paper_table1_layout() {
+        let net = resnet::resnet18();
+        let p = RatioProfile::ovsf25(&net);
+        // Stage-1 OVSF layers get ρ=1.0, stage-2 0.4, stage-3 0.25, stage-4 0.125.
+        for (i, l) in net.layers.iter().enumerate() {
+            if !l.ovsf {
+                assert_eq!(p.rho(i), 1.0);
+                continue;
+            }
+            let expect = match &l.name {
+                n if n.starts_with("layer1") => 1.0,
+                n if n.starts_with("layer2") => 0.4,
+                n if n.starts_with("layer3") => 0.25,
+                _ => 0.125,
+            };
+            assert_eq!(p.rho(i), expect, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn uniform_skips_dense_layers() {
+        let net = resnet::resnet18();
+        let p = RatioProfile::uniform(&net, 0.5);
+        assert_eq!(p.rho(0), 1.0, "stem stays dense");
+        let any_ovsf = net.layers.iter().position(|l| l.ovsf).unwrap();
+        assert_eq!(p.rho(any_ovsf), 0.5);
+    }
+
+    #[test]
+    fn effective_rho_ordering() {
+        let net = resnet::resnet34();
+        let e50 = RatioProfile::ovsf50(&net).effective_rho(&net);
+        let e25 = RatioProfile::ovsf25(&net).effective_rho(&net);
+        let e100 = RatioProfile::uniform(&net, 1.0).effective_rho(&net);
+        assert!(e25 < e50 && e50 < e100);
+        assert!(e100 <= 1.0 + 1e-12);
+        // OVSF25 ratios concentrate compression on the deep (param-heavy)
+        // stages, so the effective ρ sits well below 0.4.
+        assert!(e25 < 0.3, "effective ρ of OVSF25 = {e25}");
+    }
+
+    #[test]
+    fn squeezenet_fire_grouping() {
+        let net = squeezenet::squeezenet1_1();
+        let p = RatioProfile::ovsf25(&net);
+        let fire_rho = |f: usize| {
+            let (i, _) = net
+                .layers
+                .iter()
+                .enumerate()
+                .find(|(_, l)| l.name == format!("fire{f}.expand3x3"))
+                .unwrap();
+            p.rho(i)
+        };
+        assert_eq!(fire_rho(2), 1.0);
+        assert_eq!(fire_rho(4), 0.4);
+        assert_eq!(fire_rho(7), 0.25);
+        assert_eq!(fire_rho(9), 0.125);
+    }
+
+    #[test]
+    fn compressed_params_shrink() {
+        let net = resnet::resnet34();
+        let dense = net.params();
+        let p50 = net.params_compressed(&RatioProfile::ovsf50(&net));
+        let p25 = net.params_compressed(&RatioProfile::ovsf25(&net));
+        assert!(p25 < p50, "OVSF25 smaller than OVSF50");
+        assert!(p25 < dense / 2, "OVSF25 well under half the dense params");
+    }
+}

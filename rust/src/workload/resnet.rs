@@ -1,0 +1,317 @@
+//! Residual networks (He et al.) — the paper's primary benchmarks:
+//! ImageNet ResNet18 / ResNet34 / ResNet50, plus the small CIFAR-10
+//! variants (ResNet18†/34† in the paper's Table 3).
+//!
+//! Only compute layers (conv, fc) are materialised; pooling and elementwise
+//! ops are folded, matching the paper's engine model. OVSF conversion
+//! targets the 3×3 convolutions inside residual blocks (paper §7.1.3).
+
+use super::layer::Layer;
+use super::Network;
+
+/// Block counts per stage.
+struct Stages {
+    blocks: [u64; 4],
+    bottleneck: bool,
+}
+
+fn build_imagenet_resnet(name: &str, stages: Stages) -> Network {
+    let mut layers = Vec::new();
+    // Stem: 7×7/2 conv, 224→112, then 3×3/2 maxpool → 56.
+    layers.push(Layer::conv("conv1", 224, 224, 3, 64, 7, 2, 3, false));
+    let widths = [64u64, 128, 256, 512];
+    let mut fmap = 56u64; // after maxpool
+    let mut in_ch = 64u64;
+    for (s, &n_blocks) in stages.blocks.iter().enumerate() {
+        let w = widths[s];
+        for b in 0..n_blocks {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            let in_fmap = fmap;
+            if stride == 2 {
+                fmap /= 2;
+            }
+            let prefix = format!("layer{}.{}", s + 1, b);
+            if stages.bottleneck {
+                let out_ch = w * 4;
+                // 1×1 reduce → 3×3 (OVSF) → 1×1 expand.
+                layers.push(Layer::conv(
+                    format!("{prefix}.conv1"),
+                    in_fmap,
+                    in_fmap,
+                    in_ch,
+                    w,
+                    1,
+                    1,
+                    0,
+                    false,
+                ));
+                layers.push(Layer::conv(
+                    format!("{prefix}.conv2"),
+                    in_fmap,
+                    in_fmap,
+                    w,
+                    w,
+                    3,
+                    stride,
+                    1,
+                    true,
+                ));
+                layers.push(Layer::conv(
+                    format!("{prefix}.conv3"),
+                    fmap,
+                    fmap,
+                    w,
+                    out_ch,
+                    1,
+                    1,
+                    0,
+                    false,
+                ));
+                if b == 0 {
+                    layers.push(Layer::conv(
+                        format!("{prefix}.downsample"),
+                        in_fmap,
+                        in_fmap,
+                        in_ch,
+                        out_ch,
+                        1,
+                        stride,
+                        0,
+                        false,
+                    ));
+                }
+                in_ch = out_ch;
+            } else {
+                // Basic block: 3×3 (OVSF) → 3×3 (OVSF).
+                layers.push(Layer::conv(
+                    format!("{prefix}.conv1"),
+                    in_fmap,
+                    in_fmap,
+                    in_ch,
+                    w,
+                    3,
+                    stride,
+                    1,
+                    true,
+                ));
+                layers.push(Layer::conv(
+                    format!("{prefix}.conv2"),
+                    fmap,
+                    fmap,
+                    w,
+                    w,
+                    3,
+                    1,
+                    1,
+                    true,
+                ));
+                if b == 0 && (in_ch != w || stride == 2) {
+                    layers.push(Layer::conv(
+                        format!("{prefix}.downsample"),
+                        in_fmap,
+                        in_fmap,
+                        in_ch,
+                        w,
+                        1,
+                        stride,
+                        0,
+                        false,
+                    ));
+                }
+                in_ch = w;
+            }
+        }
+    }
+    layers.push(Layer::fc("fc", in_ch, 1000));
+    Network {
+        name: name.to_string(),
+        layers,
+    }
+}
+
+/// ImageNet ResNet18 (11.7M params, 4.03 GOps per the paper).
+pub fn resnet18() -> Network {
+    build_imagenet_resnet(
+        "ResNet18",
+        Stages {
+            blocks: [2, 2, 2, 2],
+            bottleneck: false,
+        },
+    )
+}
+
+/// ImageNet ResNet34 (21.8M params, 7.40 GOps).
+pub fn resnet34() -> Network {
+    build_imagenet_resnet(
+        "ResNet34",
+        Stages {
+            blocks: [3, 4, 6, 3],
+            bottleneck: false,
+        },
+    )
+}
+
+/// ImageNet ResNet50 (25.6M params, 8.41 GOps).
+pub fn resnet50() -> Network {
+    build_imagenet_resnet(
+        "ResNet50",
+        Stages {
+            blocks: [3, 4, 6, 3],
+            bottleneck: true,
+        },
+    )
+}
+
+/// CIFAR-10 ResNet18† — the much smaller variant of He et al. used in the
+/// paper's Table 3 (0.27M params): 3 stages of n=3 basic blocks at widths
+/// 16/32/64 on 32×32 inputs.
+pub fn resnet18_cifar_small() -> Network {
+    build_cifar_small("ResNet18-small", 3)
+}
+
+/// CIFAR-10 ResNet34† analogue (n=5, 0.46M params).
+pub fn resnet34_cifar_small() -> Network {
+    build_cifar_small("ResNet34-small", 5)
+}
+
+fn build_cifar_small(name: &str, n: u64) -> Network {
+    let mut layers = Vec::new();
+    layers.push(Layer::conv("conv1", 32, 32, 3, 16, 3, 1, 1, false));
+    let widths = [16u64, 32, 64];
+    let mut fmap = 32u64;
+    let mut in_ch = 16u64;
+    for (s, &w) in widths.iter().enumerate() {
+        for b in 0..n {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            let in_fmap = fmap;
+            if stride == 2 {
+                fmap /= 2;
+            }
+            let prefix = format!("stage{}.{}", s + 1, b);
+            layers.push(Layer::conv(
+                format!("{prefix}.conv1"),
+                in_fmap,
+                in_fmap,
+                in_ch,
+                w,
+                3,
+                stride,
+                1,
+                true,
+            ));
+            layers.push(Layer::conv(
+                format!("{prefix}.conv2"),
+                fmap,
+                fmap,
+                w,
+                w,
+                3,
+                1,
+                1,
+                true,
+            ));
+            if b == 0 && in_ch != w {
+                layers.push(Layer::conv(
+                    format!("{prefix}.downsample"),
+                    in_fmap,
+                    in_fmap,
+                    in_ch,
+                    w,
+                    1,
+                    stride,
+                    0,
+                    false,
+                ));
+            }
+            in_ch = w;
+        }
+    }
+    layers.push(Layer::fc("fc", in_ch, 10));
+    Network {
+        name: name.to_string(),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_geometry() {
+        let n = resnet18();
+        // 1 stem + 16 block convs + 3 downsamples + 1 fc = 21 layers.
+        assert_eq!(n.layers.len(), 21);
+        // Paper quotes 11.7M params and 4.03 GOps (≈ within rounding: biases
+        // and BN excluded here).
+        let params_m = n.params() as f64 / 1e6;
+        assert!(
+            (params_m - 11.7).abs() < 0.2,
+            "ResNet18 params {params_m}M vs paper 11.7M"
+        );
+        // Our MAC-only count gives 3.63 GOps; the paper's 4.03 includes
+        // elementwise/BN ops the engine does not schedule.
+        let gops = n.gops();
+        assert!((3.4..4.2).contains(&gops), "ResNet18 {gops} GOps vs 4.03");
+    }
+
+    #[test]
+    fn resnet34_geometry() {
+        let n = resnet34();
+        assert_eq!(n.layers.len(), 1 + 32 + 3 + 1);
+        let params_m = n.params() as f64 / 1e6;
+        assert!(
+            (params_m - 21.8).abs() < 0.3,
+            "ResNet34 params {params_m}M vs paper 21.8M"
+        );
+        let gops = n.gops();
+        assert!((gops - 7.40).abs() < 0.5, "ResNet34 {gops} GOps vs 7.40");
+    }
+
+    #[test]
+    fn resnet50_geometry() {
+        let n = resnet50();
+        assert_eq!(n.layers.len(), 1 + 48 + 4 + 1);
+        let params_m = n.params() as f64 / 1e6;
+        assert!(
+            (params_m - 25.5).abs() < 0.5,
+            "ResNet50 params {params_m}M vs paper 25.56M"
+        );
+        let gops = n.gops();
+        assert!((gops - 8.41).abs() < 0.8, "ResNet50 {gops} GOps vs 8.41");
+    }
+
+    #[test]
+    fn ovsf_flags_only_on_3x3_block_convs() {
+        for net in [resnet18(), resnet34(), resnet50()] {
+            for l in &net.layers {
+                if l.ovsf {
+                    assert_eq!(l.k, 3, "{}: only 3×3 convs are OVSF", l.name);
+                    assert!(l.name.contains("conv"), "{}", l.name);
+                }
+            }
+            assert!(!net.layers[0].ovsf, "stem stays dense");
+            assert!(!net.layers.last().unwrap().ovsf, "fc stays dense");
+        }
+    }
+
+    #[test]
+    fn cifar_small_params_match_table3() {
+        let s18 = resnet18_cifar_small();
+        let p18 = s18.params() as f64 / 1e6;
+        assert!((p18 - 0.27).abs() < 0.02, "ResNet18† {p18}M vs 0.27M");
+        let s34 = resnet34_cifar_small();
+        let p34 = s34.params() as f64 / 1e6;
+        assert!((p34 - 0.46).abs() < 0.03, "ResNet34† {p34}M vs 0.46M");
+    }
+
+    #[test]
+    fn feature_maps_shrink_monotonically() {
+        let n = resnet50();
+        let mut last = u64::MAX;
+        for l in &n.layers {
+            assert!(l.h <= last || l.h == 1, "fmap grew at {}", l.name);
+            last = last.max(l.h);
+        }
+    }
+}

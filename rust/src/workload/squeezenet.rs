@@ -1,0 +1,166 @@
+//! SqueezeNet1.1 (Iandola et al.) — the paper's lightweight benchmark
+//! (1.24M params, 0.78 GOps). Fire modules: a 1×1 squeeze conv followed by
+//! parallel 1×1 and 3×3 expand convs. OVSF conversion follows the paper's
+//! scheme for Fire modules (§7.1.3): the 3×3 expand convs become OVSF.
+
+use super::layer::Layer;
+use super::Network;
+
+struct Fire {
+    squeeze: u64,
+    expand1: u64,
+    expand3: u64,
+}
+
+/// SqueezeNet v1.1 for 224×224 ImageNet input.
+pub fn squeezenet1_1() -> Network {
+    let mut layers = Vec::new();
+    // conv1: 3×3/2, 64 filters: 224 → 111.
+    layers.push(Layer::conv("conv1", 224, 224, 3, 64, 3, 2, 0, false));
+    // maxpool/2 → 55.
+    let fires: [(u64, Fire); 8] = [
+        (
+            55,
+            Fire {
+                squeeze: 16,
+                expand1: 64,
+                expand3: 64,
+            },
+        ),
+        (
+            55,
+            Fire {
+                squeeze: 16,
+                expand1: 64,
+                expand3: 64,
+            },
+        ),
+        // maxpool → 27
+        (
+            27,
+            Fire {
+                squeeze: 32,
+                expand1: 128,
+                expand3: 128,
+            },
+        ),
+        (
+            27,
+            Fire {
+                squeeze: 32,
+                expand1: 128,
+                expand3: 128,
+            },
+        ),
+        // maxpool → 13
+        (
+            13,
+            Fire {
+                squeeze: 48,
+                expand1: 192,
+                expand3: 192,
+            },
+        ),
+        (
+            13,
+            Fire {
+                squeeze: 48,
+                expand1: 192,
+                expand3: 192,
+            },
+        ),
+        (
+            13,
+            Fire {
+                squeeze: 64,
+                expand1: 256,
+                expand3: 256,
+            },
+        ),
+        (
+            13,
+            Fire {
+                squeeze: 64,
+                expand1: 256,
+                expand3: 256,
+            },
+        ),
+    ];
+    let mut in_ch = 64u64;
+    for (i, (fmap, fire)) in fires.iter().enumerate() {
+        let idx = i + 2; // torchvision numbering: fire2..fire9
+        layers.push(Layer::conv(
+            format!("fire{idx}.squeeze"),
+            *fmap,
+            *fmap,
+            in_ch,
+            fire.squeeze,
+            1,
+            1,
+            0,
+            false,
+        ));
+        layers.push(Layer::conv(
+            format!("fire{idx}.expand1x1"),
+            *fmap,
+            *fmap,
+            fire.squeeze,
+            fire.expand1,
+            1,
+            1,
+            0,
+            false,
+        ));
+        layers.push(Layer::conv(
+            format!("fire{idx}.expand3x3"),
+            *fmap,
+            *fmap,
+            fire.squeeze,
+            fire.expand3,
+            3,
+            1,
+            1,
+            true,
+        ));
+        in_ch = fire.expand1 + fire.expand3;
+    }
+    // Classifier conv10: 1×1 to 1000 classes at 13×13.
+    layers.push(Layer::conv("conv10", 13, 13, in_ch, 1000, 1, 1, 0, false));
+    Network {
+        name: "SqueezeNet".to_string(),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_match_paper() {
+        let n = squeezenet1_1();
+        let p = n.params() as f64 / 1e6;
+        assert!((p - 1.24).abs() < 0.05, "SqueezeNet params {p}M vs 1.24M");
+    }
+
+    #[test]
+    fn gops_match_paper() {
+        let n = squeezenet1_1();
+        let g = n.gops();
+        assert!((g - 0.78).abs() < 0.12, "SqueezeNet {g} GOps vs 0.78");
+    }
+
+    #[test]
+    fn structure() {
+        let n = squeezenet1_1();
+        // conv1 + 8 fires × 3 convs + conv10 = 26 layers.
+        assert_eq!(n.layers.len(), 26);
+        let ovsf_count = n.layers.iter().filter(|l| l.ovsf).count();
+        assert_eq!(ovsf_count, 8, "one OVSF 3×3 expand per fire module");
+        // Squeeze ratio: expand3x3 layers have non-pow2-unfriendly squeeze
+        // inputs handled by the code-length rounding.
+        for l in n.layers.iter().filter(|l| l.ovsf) {
+            assert_eq!(l.k, 3);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Failure injection: the runtime and coordinator must fail loudly and
+//! cleanly on corrupted artifacts, bad shapes and dead workers — the
+//! operational half of "production-quality".
+
+use std::io::Write;
+use unzipfpga::runtime::{ArtifactRegistry, LoadedExecutable, RuntimeClient};
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("unzipfpga-failtest-{tag}"));
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+#[test]
+fn truncated_hlo_text_is_rejected() {
+    let dir = tmp_dir("trunc");
+    let src = unzipfpga::runtime::artifacts_dir().join("ovsf_wgen.hlo.txt");
+    if !src.exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let text = std::fs::read_to_string(&src).unwrap();
+    let path = dir.join("broken.hlo.txt");
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(&text.as_bytes()[..text.len() / 2]).unwrap();
+    drop(f);
+    let client = RuntimeClient::cpu().unwrap();
+    assert!(
+        LoadedExecutable::load(&client, &path).is_err(),
+        "half an HLO module must not compile"
+    );
+}
+
+#[test]
+fn garbage_file_is_rejected() {
+    let dir = tmp_dir("garbage");
+    let path = dir.join("garbage.hlo.txt");
+    std::fs::write(&path, "this is not an HLO module at all {{{").unwrap();
+    let client = RuntimeClient::cpu().unwrap();
+    assert!(LoadedExecutable::load(&client, &path).is_err());
+}
+
+#[test]
+fn wrong_input_arity_is_an_error_not_a_crash() {
+    let dir = unzipfpga::runtime::artifacts_dir();
+    if !dir.join("gemm.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let mut reg = ArtifactRegistry::new(dir).unwrap();
+    let exe = reg.get("gemm").unwrap();
+    // gemm expects two buffers; give it one.
+    let a = vec![0.0f32; 64 * 144];
+    let r = exe.run_f32(&[(&a, &[64, 144])]);
+    assert!(r.is_err(), "arity mismatch must surface as Err");
+}
+
+#[test]
+fn registry_missing_artifact_error_is_actionable() {
+    let dir = tmp_dir("empty-registry");
+    let mut reg = ArtifactRegistry::new(dir).unwrap();
+    let err = reg.get("never-built").err().expect("must fail");
+    assert!(err.to_string().contains("make artifacts"));
+}
+
+#[test]
+fn server_survives_panicking_worker_shutdown() {
+    use unzipfpga::arch::{DesignPoint, Platform};
+    use unzipfpga::coordinator::scheduler::InferencePlan;
+    use unzipfpga::coordinator::server::{InferenceServer, Request};
+    use unzipfpga::workload::{resnet, RatioProfile};
+
+    let net = resnet::resnet18();
+    let profile = RatioProfile::ovsf50(&net);
+    let plan = InferencePlan::build(
+        &Platform::z7045(),
+        4,
+        DesignPoint::new(64, 64, 16, 48),
+        &net,
+        &profile,
+    );
+    // Worker panics on request id 3.
+    let server = InferenceServer::spawn(plan, || {
+        |req: &Request| {
+            if req.id == 3 {
+                panic!("injected worker failure");
+            }
+            vec![req.id as f32]
+        }
+    });
+    for id in 0..3u64 {
+        assert!(server.infer(Request { id, input: vec![] }).is_ok());
+    }
+    // The poisoned request: the client sees an error, not a hang.
+    let r = server.infer(Request {
+        id: 3,
+        input: vec![],
+    });
+    assert!(r.is_err(), "dead worker must surface as Err");
+    // Shutdown still terminates (worker is gone; shutdown reports error
+    // or joins — it must not hang or panic the caller).
+    let _ = server.shutdown();
+}
+
+#[test]
+fn dse_with_empty_grid_is_clean_error() {
+    use unzipfpga::dse::search::{optimise, DseConfig};
+    use unzipfpga::workload::{resnet, RatioProfile};
+
+    let net = resnet::resnet18();
+    let profile = RatioProfile::ovsf50(&net);
+    let cfg = DseConfig {
+        m: vec![],
+        t_r: vec![64],
+        t_p: vec![16],
+        t_c: vec![48],
+        threads: 2,
+    };
+    let r = optimise(&cfg, &unzipfpga::arch::Platform::z7045(), 4, &net, &profile, true);
+    assert!(matches!(
+        r,
+        Err(unzipfpga::Error::NoFeasibleDesign { .. })
+    ));
+}

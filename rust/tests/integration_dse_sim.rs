@@ -1,0 +1,142 @@
+//! Integration: DSE → cycle-level simulator → report pipeline, end to end,
+//! across networks and platforms.
+
+use unzipfpga::arch::Platform;
+use unzipfpga::autotune::autotune;
+use unzipfpga::baselines::faithful::evaluate_faithful;
+use unzipfpga::dse::search::{optimise, DseConfig};
+use unzipfpga::perf::model::PerfModel;
+use unzipfpga::sim::engine::simulate_network_timing;
+use unzipfpga::workload::{Network, RatioProfile};
+
+/// The central cross-check: for every benchmark × platform the simulator's
+/// walked totals agree with the analytical model at the DSE optimum.
+#[test]
+fn simulator_agrees_with_model_on_all_benchmarks() {
+    let cfg = DseConfig::default();
+    for net in Network::benchmarks() {
+        for plat in Platform::all() {
+            let profile = RatioProfile::ovsf50(&net);
+            let bw = plat.peak_bw_mult;
+            let r = optimise(&cfg, &plat, bw, &net, &profile, true).unwrap();
+            let traces = simulate_network_timing(&r.sigma, &plat, bw, true, &net, &profile);
+            let sim_total: u64 = traces.iter().map(|t| t.total_cycles).sum();
+            let dev = (sim_total as f64 - r.perf.total_cycles).abs() / r.perf.total_cycles;
+            assert!(
+                dev < 0.01,
+                "{} on {}: sim {} vs model {} ({dev:.4})",
+                net.name,
+                plat.name,
+                sim_total,
+                r.perf.total_cycles
+            );
+        }
+    }
+}
+
+/// Table-4-shaped end-to-end claim: at 1× bandwidth, unzipFPGA's OVSF50
+/// beats the faithful baseline by a large factor on ResNet34 and the gap
+/// closes with bandwidth (the paper reports 2.1× → 1.1×).
+#[test]
+fn headline_speedups_follow_paper_shape() {
+    let net = unzipfpga::workload::resnet::resnet34();
+    let plat = Platform::z7045();
+    let cfg = DseConfig::default();
+    let profile = RatioProfile::ovsf50(&net);
+    let mut speedups = Vec::new();
+    for bw in [1u32, 2, 4] {
+        let base = evaluate_faithful(&plat, bw, &net).unwrap().perf.inf_per_s;
+        let unzip = optimise(&cfg, &plat, bw, &net, &profile, true)
+            .unwrap()
+            .perf
+            .inf_per_s;
+        speedups.push(unzip / base);
+    }
+    assert!(
+        speedups[0] > 1.5,
+        "1× speedup {:.2} too small (paper: 2.1×)",
+        speedups[0]
+    );
+    // Decay with bandwidth, allowing ~2% slack for DSE grid discreteness
+    // between adjacent points.
+    assert!(
+        speedups[0] * 1.02 > speedups[1] && speedups[1] > speedups[2],
+        "speedups must decay with bandwidth: {speedups:?}"
+    );
+    assert!(
+        speedups[2] < 1.7,
+        "4× speedup {:.2} should be modest (paper: 1.1×)",
+        speedups[2]
+    );
+}
+
+/// Autotuning composes with the DSE across bandwidths and platforms:
+/// throughput preserved, effective ρ raised, accuracy model rewards it.
+#[test]
+fn autotune_pipeline_improves_accuracy_at_no_cost() {
+    let net = unzipfpga::workload::resnet::resnet18();
+    let cfg = DseConfig::default();
+    for bw in [1u32, 2, 4] {
+        let plat = Platform::z7045();
+        let r = autotune(&cfg, &plat, bw, &net).unwrap();
+        let acc = unzipfpga::accuracy::AccuracyModel::for_network(&net);
+        let base_acc = acc.top1(&net, &RatioProfile::ovsf25(&net));
+        let tuned_acc = acc.top1(&net, &r.profile);
+        assert!(
+            tuned_acc >= base_acc,
+            "{bw}×: tuned accuracy {tuned_acc} below OVSF25 {base_acc}"
+        );
+        assert!(r.final_inf_per_s >= r.initial_inf_per_s * 0.98);
+        // More bandwidth-constrained ⇒ more wgen slack ⇒ more accuracy
+        // recovered (Table 1's 1.2pp at 1.1 GB/s vs 0.3pp at 4.4 GB/s).
+        if bw == 1 {
+            assert!(
+                tuned_acc - base_acc > 0.4,
+                "1× should recover substantial accuracy: +{:.2}pp",
+                tuned_acc - base_acc
+            );
+        }
+    }
+}
+
+/// The DSE allocates resources sensibly: big platforms get bigger engines,
+/// and constrained bandwidth shifts the optimum toward more wgen lanes
+/// relative to what unconstrained bandwidth picks.
+#[test]
+fn dse_resource_allocation_is_sane() {
+    let net = unzipfpga::workload::resnet::resnet50();
+    let cfg = DseConfig::default();
+    let profile = RatioProfile::ovsf50(&net);
+    let z = optimise(&cfg, &Platform::z7045(), 4, &net, &profile, true).unwrap();
+    let u = optimise(&cfg, &Platform::zu7ev(), 4, &net, &profile, true).unwrap();
+    assert!(u.sigma.engine_macs() >= z.sigma.engine_macs());
+    assert!(z.usage.dsps <= 900 && u.usage.dsps <= 1728);
+    // Both allocate nonzero wgen lanes (OVSF layers dominate ResNet50's
+    // runtime at these bandwidths).
+    assert!(z.sigma.m > 0 && u.sigma.m > 0);
+}
+
+/// Bottleneck classifications from the simulator match the analytical
+/// model layer by layer (the signal driving Table 1 and the autotuner).
+#[test]
+fn bounds_agree_between_sim_and_model() {
+    let net = unzipfpga::workload::resnet::resnet18();
+    let plat = Platform::z7045();
+    let profile = RatioProfile::ovsf25(&net);
+    let sigma = unzipfpga::arch::DesignPoint::new(64, 64, 16, 48);
+    let model = PerfModel::new(plat.clone(), 1);
+    let perf = model.network_perf(&sigma, &net, &profile);
+    let traces = simulate_network_timing(&sigma, &plat, 1, true, &net, &profile);
+    let mut agree = 0;
+    for (t, p) in traces.iter().zip(&perf.layers) {
+        if t.bound == p.bound {
+            agree += 1;
+        }
+    }
+    // DMA ceilings can flip razor-edge ties; demand ≥ 90% agreement.
+    assert!(
+        agree * 10 >= traces.len() * 9,
+        "bound agreement {agree}/{}",
+        traces.len()
+    );
+}

@@ -1,0 +1,279 @@
+//! Cross-module property tests: invariants that span ovsf ↔ sim ↔ perf ↔
+//! dse — the coordinator-level guarantees of the system.
+
+use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::ovsf::basis::{select, BasisSelection};
+use unzipfpga::ovsf::codes::OvsfBasis;
+use unzipfpga::ovsf::regress::{project, reconstruct_vec};
+use unzipfpga::perf::model::PerfModel;
+use unzipfpga::sim::hw_weights::HwOvsfWeights;
+use unzipfpga::sim::wgen::WGenSim;
+use unzipfpga::util::check::forall;
+use unzipfpga::workload::layer::Layer;
+use unzipfpga::workload::{resnet, RatioProfile};
+
+/// TiWGen's generated weights are invariant to the design point σ — tiling
+/// must never change numerics, only scheduling.
+#[test]
+fn wgen_numerics_invariant_to_tiling() {
+    forall("wgen-tiling-invariance", 12, |rng| {
+        let w = HwOvsfWeights::random(rng, 8, 4, 3, 0.5).unwrap();
+        let s1 = DesignPoint::new(8, 16, 4, 4);
+        let s2 = DesignPoint::new(64, 16, 16, 8);
+        let r1 = WGenSim::new(&s1, &w).generate();
+        let r2 = WGenSim::new(&s2, &w).generate();
+        assert_eq!(r1.weights.len(), r2.weights.len());
+        for (a, b) in r1.weights.iter().zip(&r2.weights) {
+            assert!((a - b).abs() < 1e-5, "tiling changed numerics: {a} vs {b}");
+        }
+    });
+}
+
+/// Parseval-style consistency: energy of the α vector × L equals the
+/// energy of the reconstructed vector (orthogonal basis).
+#[test]
+fn alpha_energy_matches_reconstruction_energy() {
+    forall("parseval", 24, |rng| {
+        let l = 1usize << rng.gen_range(2, 6);
+        let basis = OvsfBasis::new(l).unwrap();
+        let target = rng.normal_vec(l);
+        let alphas = project(&basis, &target);
+        let sel = select(BasisSelection::Sequential, &basis, &alphas, 1.0);
+        let recon = reconstruct_vec(&basis, &sel);
+        let e_alpha: f64 = alphas.iter().map(|&a| (a as f64).powi(2)).sum::<f64>() * l as f64;
+        let e_recon: f64 = recon.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!(
+            (e_alpha - e_recon).abs() < 1e-3 * e_recon.max(1.0),
+            "Parseval violated: {e_alpha} vs {e_recon}"
+        );
+    });
+}
+
+/// Raising any single layer's ρ never *improves* throughput (wgen only
+/// gets slower) — the monotonicity the autotuner's ceiling search relies on.
+#[test]
+fn throughput_monotone_nonincreasing_in_rho() {
+    forall("rho-monotonicity", 16, |rng| {
+        let net = resnet::resnet18();
+        let plat = Platform::z7045();
+        let model = PerfModel::new(plat, *rng.choose(&[1u32, 2, 4]));
+        let sigma = DesignPoint::new(
+            1 << rng.gen_range(4, 7),
+            64,
+            16,
+            1 << rng.gen_range(4, 6),
+        );
+        let mut profile = RatioProfile::ovsf25(&net);
+        let before = model.network_perf(&sigma, &net, &profile).inf_per_s;
+        // Raise one random OVSF layer's ρ.
+        let ovsf_layers: Vec<usize> = net
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.ovsf)
+            .map(|(i, _)| i)
+            .collect();
+        let pick = *rng.choose(&ovsf_layers);
+        profile.rhos[pick] = 1.0;
+        let after = model.network_perf(&sigma, &net, &profile).inf_per_s;
+        assert!(
+            after <= before * 1.0001,
+            "raising ρ sped things up: {before} → {after}"
+        );
+    });
+}
+
+/// The II decomposition is consistent: total cycles of a layer equal
+/// II × tiles, and II is attained by at least one stage.
+#[test]
+fn ii_decomposition_consistent() {
+    forall("ii-decomposition", 24, |rng| {
+        let plat = Platform::z7045();
+        let model = PerfModel::new(plat, *rng.choose(&[1u32, 2, 4]));
+        let sigma = DesignPoint::new(
+            1 << rng.gen_range(3, 7),
+            1 << rng.gen_range(4, 8),
+            1 << rng.gen_range(2, 5),
+            1 << rng.gen_range(3, 7),
+        );
+        let layer = Layer::conv(
+            "t",
+            rng.gen_range(7, 56),
+            rng.gen_range(7, 56),
+            1 << rng.gen_range(4, 8),
+            1 << rng.gen_range(4, 8),
+            3,
+            1,
+            1,
+            true,
+        );
+        let p = model.layer_perf(
+            &sigma,
+            &layer,
+            unzipfpga::perf::model::WeightsSource::OnTheFly { rho: 0.5 },
+        );
+        assert!((p.total_cycles - p.ii * p.tiles as f64).abs() < 1e-6);
+        let stages = [p.t_mem_in, p.t_wgen, p.t_eng, p.t_mem_out];
+        assert!(stages.iter().any(|&s| (s - p.ii).abs() < 1e-9));
+        assert!(stages.iter().all(|&s| s <= p.ii + 1e-9));
+    });
+}
+
+/// Fixed-point quantisation of α (the 16-bit hardware datapath) perturbs
+/// TiWGen-generated weights by at most n_basis · step/2 per weight.
+#[test]
+fn quantised_alphas_bound_weight_error() {
+    use unzipfpga::util::fixed::QFormat;
+    forall("fixed-point-error-bound", 12, |rng| {
+        let w = HwOvsfWeights::random(rng, 4, 4, 3, 0.5).unwrap();
+        let mut wq = w.clone();
+        let fmt = QFormat::Q16;
+        for a in wq.alphas.iter_mut() {
+            *a = fmt.quantise(*a);
+        }
+        let sigma = DesignPoint::new(16, 16, 8, 4);
+        let exact = WGenSim::new(&sigma, &w).generate();
+        let quant = WGenSim::new(&sigma, &wq).generate();
+        let bound = w.n_basis as f32 * fmt.step() / 2.0 + 1e-5;
+        for (a, b) in exact.weights.iter().zip(&quant.weights) {
+            assert!(
+                (a - b).abs() <= bound,
+                "quantisation error {} exceeds bound {bound}",
+                (a - b).abs()
+            );
+        }
+    });
+}
+
+/// Compressed parameter accounting is consistent between the profile
+/// arithmetic and the per-layer hardware form.
+#[test]
+fn alpha_counts_agree_across_modules() {
+    forall("alpha-count-agreement", 10, |rng| {
+        let n_in = 1usize << rng.gen_range(2, 5);
+        let n_out = 1usize << rng.gen_range(2, 5);
+        let rho = *rng.choose(&[0.125, 0.25, 0.5, 1.0]);
+        let hw = HwOvsfWeights::random(rng, n_out, n_in, 3, rho).unwrap();
+        let layer = Layer::conv("x", 14, 14, n_in as u64, n_out as u64, 3, 1, 1, true);
+        assert_eq!(hw.n_alphas() as u64, layer.params_with_rho(rho));
+    });
+}
+
+/// The OVSF generator's FIFO/aligner bit stream drives a TiWGen-equivalent
+/// accumulation that must equal WGenSim's weights — tying the rate-matching
+/// hardware model (§4.2.2) into the generation schedule (Alg. 1). Holds
+/// when T_P is chunk-aligned (the aligner's single-shift regime).
+#[test]
+fn fifo_aligner_stream_reproduces_tiwgen_weights() {
+    use unzipfpga::sim::ovsf_gen::OvsfGenerator;
+    forall("fifo-drives-tiwgen", 10, |rng| {
+        // K=4 (chunk=16), T_P multiple of 16 → pure periodic stream.
+        let n_out = 4usize;
+        let n_in = 2usize;
+        let k = 4usize;
+        let chunk = 16usize;
+        let nb = [2usize, 4, 8][rng.gen_range(0, 2) as usize];
+        let m = [8usize, 16, 48][rng.gen_range(0, 2) as usize];
+        let t_p = 16u64;
+        let t_c = n_out as u64;
+        let mut w =
+            unzipfpga::sim::hw_weights::HwOvsfWeights::random(rng, n_out, n_in, k, 1.0).unwrap();
+        // Truncate to nb basis vectors.
+        let mut alphas = Vec::new();
+        for o in 0..n_out {
+            for c in 0..n_in {
+                for j in 0..nb {
+                    alphas.push(w.alpha(o, c, j));
+                }
+            }
+        }
+        w.n_basis = nb;
+        w.alphas = alphas;
+        let sigma = DesignPoint::new(m as u64, 16, t_p, t_c);
+        let expect = WGenSim::new(&sigma, &w).generate();
+
+        // Re-generate by streaming bits from the FIFO/aligner.
+        let basis = OvsfBasis::new(chunk).unwrap();
+        let p_dim = w.p_dim();
+        let mut weights = vec![0.0f32; p_dim * n_out];
+        let p_tiles = (p_dim as u64).div_ceil(t_p);
+        let subtiles = sigma.subtiles_per_tile();
+        let mut gen = OvsfGenerator::new(&basis, nb, m);
+        let mut buf = Vec::with_capacity(m);
+        for t in 0..p_tiles {
+            for i in 0..subtiles {
+                for j in 0..nb {
+                    gen.emit_into(&mut buf);
+                    for (e, &sign) in buf.iter().enumerate() {
+                        let g = (i as usize) * m + e;
+                        if g >= (t_p * t_c) as usize {
+                            break;
+                        }
+                        let o = g / t_p as usize;
+                        let p = (t as usize) * t_p as usize + g % t_p as usize;
+                        if o >= n_out || p >= p_dim {
+                            continue;
+                        }
+                        let c = p / chunk;
+                        weights[p * n_out + o] += w.alpha(o, c, j) * sign as f32;
+                    }
+                }
+            }
+        }
+        for (i, (a, b)) in weights.iter().zip(&expect.weights).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "idx {i}: FIFO-stream {a} vs TiWGen {b} (M={m}, nb={nb})"
+            );
+        }
+    });
+}
+
+/// Simulator ≡ analytical model on RANDOM layer shapes and design points —
+/// not just the benchmark networks.
+#[test]
+fn sim_equals_model_on_random_layers() {
+    use unzipfpga::sim::engine::LayerSim;
+    forall("sim-vs-model-random", 30, |rng| {
+        let plat = Platform::z7045();
+        let bw = *rng.choose(&[1u32, 2, 4]);
+        let sigma = DesignPoint::new(
+            1 << rng.gen_range(3, 8),
+            1 << rng.gen_range(4, 9),
+            1 << rng.gen_range(2, 6),
+            1 << rng.gen_range(3, 8),
+        );
+        let layer = Layer::conv(
+            "rand",
+            rng.gen_range(7, 120),
+            rng.gen_range(7, 120),
+            1 << rng.gen_range(3, 9),
+            rng.gen_range(8, 600),
+            *rng.choose(&[1u64, 3]),
+            *rng.choose(&[1u64, 2]),
+            1,
+            true,
+        );
+        let rho = *rng.choose(&[0.25, 0.5, 1.0]);
+        let model = PerfModel::new(plat.clone(), bw);
+        let perf = model.layer_perf(
+            &sigma,
+            &layer,
+            unzipfpga::perf::model::WeightsSource::OnTheFly { rho },
+        );
+        let sim = LayerSim::new(&sigma, &plat, bw);
+        let wgen_cycles = layer.basis_per_chunk(rho)
+            * sigma.subtiles_per_tile()
+            * unzipfpga::util::ceil_div(layer.gemm().p, sigma.t_p);
+        let trace = sim.run_timing(&layer, Some(wgen_cycles));
+        let rel = (trace.total_cycles as f64 - perf.total_cycles).abs()
+            / perf.total_cycles.max(1.0);
+        assert!(
+            rel < 0.02,
+            "sim {} vs model {} ({rel:.4}) at {sigma}, layer {:?}",
+            trace.total_cycles,
+            perf.total_cycles,
+            layer.gemm()
+        );
+    });
+}
