@@ -10,6 +10,7 @@ use unzipfpga::accuracy::AccuracyModel;
 use unzipfpga::arch::Platform;
 use unzipfpga::autotune::autotune;
 use unzipfpga::dse::search::DseConfig;
+use unzipfpga::engine::{BackendKind, Engine};
 use unzipfpga::workload::{Network, RatioProfile};
 
 fn main() -> unzipfpga::Result<()> {
@@ -55,10 +56,26 @@ fn main() -> unzipfpga::Result<()> {
             r.initial_inf_per_s, r.final_inf_per_s
         );
         println!(
-            "  modelled top-1         : {:.1}% → {:.1}% (+{:.1}pp at zero cost)\n",
+            "  modelled top-1         : {:.1}% → {:.1}% (+{:.1}pp at zero cost)",
             acc.top1(&net, &initial),
             acc.top1(&net, &r.profile),
             acc.top1(&net, &r.profile) - acc.top1(&net, &initial)
+        );
+        // Confirm the tuned profile on the unified Engine: the cycle-level
+        // simulator backend must reproduce the preserved throughput.
+        let mut engine = Engine::builder()
+            .platform(plat.clone())
+            .bandwidth(bw)
+            .design_point(r.sigma)
+            .network(net.clone())
+            .profile(r.profile.clone())
+            .backend(BackendKind::Simulator)
+            .build()?;
+        let report = engine.infer_timing()?;
+        println!(
+            "  engine[{}] check: {:.1} inf/s\n",
+            report.backend,
+            report.inf_per_s()
         );
     }
     Ok(())

@@ -11,6 +11,7 @@ use unzipfpga::arch::Platform;
 use unzipfpga::baselines::faithful::evaluate_faithful;
 use unzipfpga::baselines::pruning::TaylorPruner;
 use unzipfpga::dse::search::{optimise, sweep, DseConfig};
+use unzipfpga::engine::{BackendKind, Engine};
 use unzipfpga::workload::{Network, RatioProfile};
 
 fn main() -> unzipfpga::Result<()> {
@@ -72,5 +73,37 @@ fn main() -> unzipfpga::Result<()> {
             "#".repeat((inf / 2.0) as usize)
         );
     }
+
+    // Cross-validate the 1× optimum on the unified Engine: analytical vs
+    // cycle-level simulator backends must agree (DMA burst rounding only).
+    // The sweep above already evaluated every feasible point — take its
+    // argmax instead of re-running the DSE.
+    let Some(best) = points
+        .iter()
+        .max_by(|a, b| a.inf_per_s.partial_cmp(&b.inf_per_s).unwrap())
+    else {
+        return Ok(());
+    };
+    let builder = Engine::builder()
+        .platform(plat)
+        .bandwidth(1)
+        .design_point(best.sigma)
+        .network(net)
+        .profile(profile);
+    let ana = builder
+        .clone()
+        .backend(BackendKind::Analytical)
+        .build()?
+        .infer_timing()?;
+    let sim = builder
+        .backend(BackendKind::Simulator)
+        .build()?
+        .infer_timing()?;
+    println!(
+        "\nengine cross-check @ 1x, σ = {}: analytical {:.1} inf/s vs simulator {:.1} inf/s",
+        best.sigma,
+        ana.inf_per_s(),
+        sim.inf_per_s()
+    );
     Ok(())
 }

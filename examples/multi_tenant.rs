@@ -3,6 +3,10 @@
 //! weights generation is what keeps throughput usable as per-tenant
 //! bandwidth shrinks.
 //!
+//! Each co-location point is evaluated through the unified `Engine` API
+//! (DSE picks σ, the analytical backend executes the plan) — see
+//! `coordinator::multi_tenant::co_location_sweep`.
+//!
 //! ```sh
 //! cargo run --release --example multi_tenant [network] [platform]
 //! ```

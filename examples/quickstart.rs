@@ -10,6 +10,7 @@ use unzipfpga::accuracy::AccuracyModel;
 use unzipfpga::arch::Platform;
 use unzipfpga::baselines::faithful::evaluate_faithful;
 use unzipfpga::dse::search::{optimise, DseConfig};
+use unzipfpga::engine::{BackendKind, Engine};
 use unzipfpga::workload::{resnet, RatioProfile};
 
 fn main() -> unzipfpga::Result<()> {
@@ -44,6 +45,7 @@ fn main() -> unzipfpga::Result<()> {
     );
 
     // 3. The Optimiser explores the design space per bandwidth budget.
+    let mut best_sigma = None;
     for bw in [1u32, 2, 4] {
         let unzip = optimise(&DseConfig::default(), &platform, bw, &net, &profile, true)?;
         let baseline = evaluate_faithful(&platform, bw, &net)?;
@@ -53,6 +55,28 @@ fn main() -> unzipfpga::Result<()> {
             unzip.perf.inf_per_s,
             baseline.perf.inf_per_s,
             unzip.perf.inf_per_s / baseline.perf.inf_per_s
+        );
+        best_sigma = Some(unzip.sigma);
+    }
+
+    // 4. The unified Engine executes the chosen design on interchangeable
+    //    backends — here the analytical model and the cycle-level
+    //    simulator cross-validate each other through one API.
+    let builder = Engine::builder()
+        .platform(platform)
+        .bandwidth(4)
+        .design_point(best_sigma.expect("DSE ran"))
+        .network(net)
+        .profile(profile);
+    println!();
+    for kind in [BackendKind::Analytical, BackendKind::Simulator] {
+        let mut engine = builder.clone().backend(kind).build()?;
+        let report = engine.infer_timing()?;
+        println!(
+            "engine[{:<10}] : {:>10.0} cycles/inf = {:>6.1} inf/s",
+            report.backend,
+            report.total_cycles,
+            report.inf_per_s()
         );
     }
     Ok(())

@@ -25,6 +25,12 @@ impl Metrics {
         self.latencies_us.len()
     }
 
+    /// Fold another collector's samples into this one (used to aggregate
+    /// per-worker metrics across a server pool).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+    }
+
     /// Mean latency in microseconds.
     pub fn mean_us(&self) -> f64 {
         stats::mean(&self.latencies_us)

@@ -2,13 +2,23 @@
 //! accelerator, drives the PJRT runtime for real-numerics execution, and
 //! serves a request stream with metrics — the role the Arm host CPU plays
 //! on the paper's boards (§7.1).
+//!
+//! Serving goes through [`pool::ServerPool`]: N worker threads behind a
+//! bounded submission queue with request batching, fed by non-blocking
+//! `submit() → ResponseHandle`. The old single-worker
+//! [`server::InferenceServer`] remains as a deprecated shim over a
+//! one-worker pool. Engines (any
+//! [`ExecutionBackend`](crate::engine::ExecutionBackend)) plug in via
+//! [`EngineBuilder::build_pool`](crate::engine::EngineBuilder::build_pool).
 
 pub mod metrics;
 pub mod multi_model;
 pub mod multi_tenant;
+pub mod pool;
 pub mod scheduler;
 pub mod server;
 
 pub use metrics::Metrics;
+pub use pool::{PoolConfig, PoolMetrics, RequestExecutor, ResponseHandle, ServerPool};
 pub use scheduler::InferencePlan;
-pub use server::{InferenceServer, Request, Response};
+pub use server::{Request, Response};

@@ -11,6 +11,7 @@
 
 use crate::arch::{DesignPoint, Platform};
 use crate::coordinator::scheduler::InferencePlan;
+use crate::engine::Engine;
 use crate::error::{Error, Result};
 use crate::workload::{Network, RatioProfile};
 use std::collections::HashMap;
@@ -54,10 +55,18 @@ impl MultiModelManager {
         }
     }
 
-    /// Register a network with a ratio profile. The same σ serves all
-    /// models — no fabric reconfiguration.
-    pub fn register(&mut self, net: &Network, profile: &RatioProfile) {
-        let plan = InferencePlan::build(&self.platform, self.bw_mult, self.sigma, net, profile);
+    /// Register a network with a ratio profile, validated through the
+    /// unified [`Engine`] builder. The same σ serves all models — no
+    /// fabric reconfiguration.
+    pub fn register(&mut self, net: &Network, profile: &RatioProfile) -> Result<()> {
+        let plan = Engine::builder()
+            .platform(self.platform.clone())
+            .bandwidth(self.bw_mult)
+            .design_point(self.sigma)
+            .network(net.clone())
+            .profile(profile.clone())
+            .plan()?
+            .schedule;
         let alpha_words: u64 = net
             .layers
             .iter()
@@ -73,6 +82,7 @@ impl MultiModelManager {
                 served: 0,
             },
         );
+        Ok(())
     }
 
     /// Cycles to load a model's α set (16-bit words over the input stream).
@@ -137,8 +147,8 @@ mod tests {
         );
         let r18 = resnet::resnet18();
         let sqn = squeezenet::squeezenet1_1();
-        mm.register(&r18, &RatioProfile::ovsf50(&r18));
-        mm.register(&sqn, &RatioProfile::ovsf50(&sqn));
+        mm.register(&r18, &RatioProfile::ovsf50(&r18)).unwrap();
+        mm.register(&sqn, &RatioProfile::ovsf50(&sqn)).unwrap();
         mm
     }
 

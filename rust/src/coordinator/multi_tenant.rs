@@ -13,6 +13,7 @@
 use crate::arch::Platform;
 use crate::baselines::faithful::evaluate_faithful;
 use crate::dse::search::{optimise, DseConfig};
+use crate::engine::{BackendKind, Engine};
 use crate::error::Result;
 use crate::workload::{Network, RatioProfile};
 
@@ -52,7 +53,18 @@ pub fn co_location_sweep(
         // engine keeps the fabric (the contended resource is the memory).
         let bw = (total_bw_mult / n).max(1);
         let baseline = evaluate_faithful(platform, bw, net)?.perf.inf_per_s;
-        let unzip = optimise(&cfg, platform, bw, net, &profile, true)?.perf.inf_per_s;
+        // DSE picks σ for this bandwidth point; throughput comes from the
+        // unified Engine running the analytical backend on that design.
+        let sigma = optimise(&cfg, platform, bw, net, &profile, true)?.sigma;
+        let mut engine = Engine::builder()
+            .platform(platform.clone())
+            .bandwidth(bw)
+            .design_point(sigma)
+            .network(net.clone())
+            .profile(profile.clone())
+            .backend(BackendKind::Analytical)
+            .build()?;
+        let unzip = engine.infer_timing()?.inf_per_s();
         out.push(TenantReport {
             tenants: n,
             bw_per_tenant: bw,

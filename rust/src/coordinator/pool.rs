@@ -1,0 +1,637 @@
+//! Multi-worker batched inference serving — the scalable replacement for
+//! the single-worker, batch-1 `InferenceServer`.
+//!
+//! Architecture (all std, no async runtime in the offline crate set):
+//!
+//! * a **bounded submission queue** (mutex + condvars) applies
+//!   backpressure: [`ServerPool::submit`] blocks while full,
+//!   [`ServerPool::try_submit`] fails fast with
+//!   [`Error::QueueFull`](crate::Error::QueueFull);
+//! * **N worker threads** pop *batches*: up to `max_batch` requests,
+//!   waiting at most `linger` after the first request of a batch — the
+//!   standard throughput/latency knob of serving systems;
+//! * executors are built **inside** each worker thread by a factory
+//!   closure (PJRT clients are not `Send`), one executor per worker;
+//! * [`ServerPool::submit`] is non-blocking w.r.t. execution: it returns a
+//!   [`ResponseHandle`] future immediately; callers join on
+//!   [`ResponseHandle::wait`].
+//!
+//! Worker death is observable: when the last worker exits (panic or
+//! shutdown) the queue closes, pending jobs are dropped and every waiting
+//! handle resolves to an error instead of hanging.
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::scheduler::InferencePlan;
+use crate::coordinator::server::{Request, Response};
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Sizing of a [`ServerPool`].
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Worker threads (each owns a private executor).
+    pub workers: usize,
+    /// Capacity of the bounded submission queue.
+    pub queue_depth: usize,
+    /// Maximum requests per executed batch.
+    pub max_batch: usize,
+    /// How long a worker waits for more requests after the first request
+    /// of a batch arrives.
+    pub linger: Duration,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            queue_depth: 256,
+            max_batch: 8,
+            linger: Duration::from_millis(1),
+        }
+    }
+}
+
+impl PoolConfig {
+    /// The legacy `InferenceServer` shape: one worker, batch 1, no linger.
+    pub fn single_worker() -> Self {
+        Self {
+            workers: 1,
+            queue_depth: 64,
+            max_batch: 1,
+            linger: Duration::ZERO,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.workers == 0 || self.queue_depth == 0 || self.max_batch == 0 {
+            return Err(Error::InvalidConfig(format!(
+                "PoolConfig: workers ({}), queue_depth ({}) and max_batch ({}) must all be ≥ 1",
+                self.workers, self.queue_depth, self.max_batch
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A per-worker request executor, constructed inside the worker thread by
+/// the pool's factory. Closures `FnMut(&Request) -> Vec<f32>` implement it
+/// out of the box; batch-aware executors override
+/// [`execute_batch`](Self::execute_batch).
+pub trait RequestExecutor {
+    /// Execute one request, returning its output activations.
+    fn execute(&mut self, req: &Request) -> Result<Vec<f32>>;
+
+    /// Execute a batch (default: per-request loop, one result per request
+    /// in order).
+    fn execute_batch(&mut self, batch: &[Request]) -> Vec<Result<Vec<f32>>> {
+        batch.iter().map(|r| self.execute(r)).collect()
+    }
+}
+
+impl<F: FnMut(&Request) -> Vec<f32>> RequestExecutor for F {
+    fn execute(&mut self, req: &Request) -> Result<Vec<f32>> {
+        Ok(self(req))
+    }
+}
+
+/// A pending response: returned by [`ServerPool::submit`] immediately,
+/// resolved by a worker when the request's batch completes.
+pub struct ResponseHandle {
+    rx: mpsc::Receiver<Result<Response>>,
+}
+
+impl ResponseHandle {
+    /// Block until the response arrives (or the serving worker died).
+    pub fn wait(self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Coordinator("no response (worker gone)".into()))?
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<Response>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(Error::Coordinator("no response (worker gone)".into())))
+            }
+        }
+    }
+}
+
+struct Job {
+    req: Request,
+    reply: mpsc::Sender<Result<Response>>,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+struct PoolShared {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    alive_workers: AtomicUsize,
+}
+
+fn lock_state(shared: &PoolShared) -> MutexGuard<'_, QueueState> {
+    // Keep serving through poisoning: a panicking worker must not take the
+    // whole pool down with it (its own AliveGuard handles accounting).
+    shared
+        .state
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Per-worker serving statistics.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    /// Request latencies recorded by this worker.
+    pub metrics: Metrics,
+    /// Batches executed.
+    pub batches: u64,
+    /// Largest batch executed.
+    pub max_batch: usize,
+}
+
+/// Aggregated pool statistics returned by [`ServerPool::shutdown`].
+#[derive(Clone, Debug)]
+pub struct PoolMetrics {
+    /// One report per worker that exited cleanly.
+    pub per_worker: Vec<WorkerReport>,
+    /// Workers that panicked instead of reporting.
+    pub panicked_workers: usize,
+}
+
+impl PoolMetrics {
+    /// All workers' latencies merged into one collector.
+    pub fn merged(&self) -> Metrics {
+        let mut m = Metrics::new();
+        for w in &self.per_worker {
+            m.merge(&w.metrics);
+        }
+        m
+    }
+
+    /// Requests served across the pool.
+    pub fn total_requests(&self) -> usize {
+        self.per_worker.iter().map(|w| w.metrics.count()).sum()
+    }
+
+    /// Batches executed across the pool.
+    pub fn total_batches(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.batches).sum()
+    }
+
+    /// Largest batch any worker executed.
+    pub fn max_batch(&self) -> usize {
+        self.per_worker.iter().map(|w| w.max_batch).max().unwrap_or(0)
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "workers={} {} batches={} max_batch={}",
+            self.per_worker.len(),
+            self.merged().summary(),
+            self.total_batches(),
+            self.max_batch()
+        )
+    }
+}
+
+/// The multi-worker batched inference server.
+pub struct ServerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<WorkerReport>>,
+    /// The schedule this pool serves (admission-time costing).
+    plan: InferencePlan,
+}
+
+impl ServerPool {
+    /// Start `cfg.workers` threads serving `plan`. `factory(worker_id)` is
+    /// called once *inside* each worker thread to build its executor, so
+    /// non-`Send` executors (PJRT) work.
+    pub fn start<F, E>(plan: InferencePlan, cfg: PoolConfig, factory: F) -> Result<Self>
+    where
+        F: Fn(usize) -> E + Send + Sync + 'static,
+        E: RequestExecutor + 'static,
+    {
+        cfg.validate()?;
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::with_capacity(cfg.queue_depth),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: cfg.queue_depth,
+            alive_workers: AtomicUsize::new(cfg.workers),
+        });
+        let factory = Arc::new(factory);
+        let device_latency_s = plan.latency_s;
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for worker_id in 0..cfg.workers {
+            let shared = Arc::clone(&shared);
+            let factory = Arc::clone(&factory);
+            let max_batch = cfg.max_batch;
+            let linger = cfg.linger;
+            workers.push(std::thread::spawn(move || {
+                let guard = AliveGuard { shared };
+                let mut exec = factory(worker_id);
+                worker_loop(&guard.shared, &mut exec, device_latency_s, max_batch, linger)
+            }));
+        }
+        Ok(Self {
+            shared,
+            workers,
+            plan,
+        })
+    }
+
+    /// The schedule this pool serves.
+    pub fn plan(&self) -> &InferencePlan {
+        &self.plan
+    }
+
+    /// Enqueue a request, blocking while the queue is full (backpressure),
+    /// and return a handle to its future response. Does **not** wait for
+    /// execution.
+    pub fn submit(&self, req: Request) -> Result<ResponseHandle> {
+        let (reply, rx) = mpsc::channel();
+        let mut st = lock_state(&self.shared);
+        while st.jobs.len() >= self.shared.capacity && !st.closed {
+            st = self
+                .shared
+                .not_full
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+        if st.closed {
+            return Err(Error::Coordinator("pool is shut down (workers gone)".into()));
+        }
+        st.jobs.push_back(Job { req, reply });
+        drop(st);
+        self.shared.not_empty.notify_one();
+        Ok(ResponseHandle { rx })
+    }
+
+    /// Enqueue without blocking: [`Error::QueueFull`] when the bounded
+    /// queue is at capacity.
+    pub fn try_submit(&self, req: Request) -> Result<ResponseHandle> {
+        let (reply, rx) = mpsc::channel();
+        let mut st = lock_state(&self.shared);
+        if st.closed {
+            return Err(Error::Coordinator("pool is shut down (workers gone)".into()));
+        }
+        if st.jobs.len() >= self.shared.capacity {
+            return Err(Error::QueueFull);
+        }
+        st.jobs.push_back(Job { req, reply });
+        drop(st);
+        self.shared.not_empty.notify_one();
+        Ok(ResponseHandle { rx })
+    }
+
+    /// Current queue occupancy (diagnostics; racy by nature).
+    pub fn queue_len(&self) -> usize {
+        lock_state(&self.shared).jobs.len()
+    }
+
+    /// Close the queue, let the workers drain every already-accepted
+    /// request (in-flight batches complete), join them and return the
+    /// aggregated metrics.
+    pub fn shutdown(mut self) -> Result<PoolMetrics> {
+        self.close();
+        let mut per_worker = Vec::with_capacity(self.workers.len());
+        let mut panicked_workers = 0usize;
+        for h in self.workers.drain(..) {
+            match h.join() {
+                Ok(report) => per_worker.push(report),
+                Err(_) => panicked_workers += 1,
+            }
+        }
+        if per_worker.is_empty() && panicked_workers > 0 {
+            return Err(Error::Coordinator("every pool worker panicked".into()));
+        }
+        Ok(PoolMetrics {
+            per_worker,
+            panicked_workers,
+        })
+    }
+
+    fn close(&self) {
+        let mut st = lock_state(&self.shared);
+        st.closed = true;
+        drop(st);
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+}
+
+impl Drop for ServerPool {
+    fn drop(&mut self) {
+        self.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Decrements the live-worker count on thread exit — including panics —
+/// and closes/drains the queue when the last worker goes, so waiting
+/// clients error out instead of hanging.
+struct AliveGuard {
+    shared: Arc<PoolShared>,
+}
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        if self.shared.alive_workers.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let mut st = lock_state(&self.shared);
+            st.closed = true;
+            // Dropping pending jobs drops their reply senders: every
+            // outstanding ResponseHandle resolves to an error.
+            st.jobs.clear();
+            drop(st);
+            self.shared.not_empty.notify_all();
+            self.shared.not_full.notify_all();
+        }
+    }
+}
+
+/// Pop a batch: block for the first request, then gather up to
+/// `max_batch − 1` more within `linger`. `None` once the queue is closed
+/// *and* drained.
+fn pop_batch(shared: &PoolShared, max_batch: usize, linger: Duration) -> Option<Vec<Job>> {
+    let mut st = lock_state(shared);
+    loop {
+        if let Some(first) = st.jobs.pop_front() {
+            let mut batch = vec![first];
+            let deadline = Instant::now() + linger;
+            while batch.len() < max_batch {
+                if let Some(next) = st.jobs.pop_front() {
+                    batch.push(next);
+                    continue;
+                }
+                if st.closed {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) = shared
+                    .not_empty
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(PoisonError::into_inner);
+                st = guard;
+                if timeout.timed_out() && st.jobs.is_empty() {
+                    break;
+                }
+            }
+            drop(st);
+            shared.not_full.notify_all();
+            return Some(batch);
+        }
+        if st.closed {
+            return None;
+        }
+        st = shared
+            .not_empty
+            .wait(st)
+            .unwrap_or_else(PoisonError::into_inner);
+    }
+}
+
+fn worker_loop<E: RequestExecutor>(
+    shared: &PoolShared,
+    exec: &mut E,
+    device_latency_s: f64,
+    max_batch: usize,
+    linger: Duration,
+) -> WorkerReport {
+    let mut metrics = Metrics::new();
+    let mut batches = 0u64;
+    let mut largest = 0usize;
+    while let Some(jobs) = pop_batch(shared, max_batch, linger) {
+        let n = jobs.len();
+        let (reqs, replies): (Vec<Request>, Vec<mpsc::Sender<Result<Response>>>) =
+            jobs.into_iter().map(|j| (j.req, j.reply)).unzip();
+        let start = Instant::now();
+        let mut outs = exec.execute_batch(&reqs).into_iter();
+        let per_req = start.elapsed() / n as u32;
+        batches += 1;
+        largest = largest.max(n);
+        for (req, reply) in reqs.iter().zip(replies) {
+            metrics.record(per_req);
+            let msg = match outs.next() {
+                Some(Ok(output)) => Ok(Response {
+                    id: req.id,
+                    device_latency_s,
+                    host_latency_s: per_req.as_secs_f64(),
+                    output,
+                    batch: n,
+                }),
+                Some(Err(e)) => Err(e),
+                None => Err(Error::Coordinator(
+                    "executor returned too few outputs for its batch".into(),
+                )),
+            };
+            // Ignore send failure: the client may have dropped its handle.
+            let _ = reply.send(msg);
+        }
+    }
+    WorkerReport {
+        metrics,
+        batches,
+        max_batch: largest,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{DesignPoint, Platform};
+    use crate::workload::{resnet, RatioProfile};
+
+    fn plan() -> InferencePlan {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        InferencePlan::build(
+            &Platform::z7045(),
+            4,
+            DesignPoint::new(64, 64, 16, 48),
+            &net,
+            &profile,
+        )
+    }
+
+    fn echo_executor(_worker: usize) -> impl FnMut(&Request) -> Vec<f32> {
+        |req: &Request| vec![req.id as f32]
+    }
+
+    #[test]
+    fn single_worker_serves_in_order() {
+        let pool = ServerPool::start(plan(), PoolConfig::single_worker(), echo_executor).unwrap();
+        let handles: Vec<_> = (0..10u64)
+            .map(|id| pool.submit(Request { id, input: vec![] }).unwrap())
+            .collect();
+        for (id, h) in handles.into_iter().enumerate() {
+            let resp = h.wait().unwrap();
+            assert_eq!(resp.id, id as u64);
+            assert_eq!(resp.output, vec![id as f32]);
+            assert_eq!(resp.batch, 1);
+            assert!(resp.device_latency_s > 0.0);
+        }
+        let pm = pool.shutdown().unwrap();
+        assert_eq!(pm.total_requests(), 10);
+        assert_eq!(pm.panicked_workers, 0);
+    }
+
+    #[test]
+    fn batches_form_under_load() {
+        let cfg = PoolConfig {
+            workers: 1,
+            queue_depth: 64,
+            max_batch: 8,
+            linger: Duration::from_millis(20),
+        };
+        let pool = ServerPool::start(plan(), cfg, echo_executor).unwrap();
+        let handles: Vec<_> = (0..32u64)
+            .map(|id| pool.submit(Request { id, input: vec![] }).unwrap())
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let pm = pool.shutdown().unwrap();
+        assert_eq!(pm.total_requests(), 32);
+        assert!(
+            pm.max_batch() > 1,
+            "32 queued requests should batch: max_batch = {}",
+            pm.max_batch()
+        );
+        assert!(pm.total_batches() < 32);
+    }
+
+    #[test]
+    fn try_submit_applies_backpressure() {
+        // Gate the single worker so the queue can only drain on release.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        let cfg = PoolConfig {
+            workers: 1,
+            queue_depth: 2,
+            max_batch: 1,
+            linger: Duration::ZERO,
+        };
+        let pool = ServerPool::start(plan(), cfg, move |_| {
+            let gate = Arc::clone(&g2);
+            move |req: &Request| {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                vec![req.id as f32]
+            }
+        })
+        .unwrap();
+        // One in flight (popped by the worker) + 2 filling the queue.
+        let mut handles = vec![];
+        for id in 0..3u64 {
+            handles.push(pool.submit(Request { id, input: vec![] }).unwrap());
+        }
+        // Queue (depth 2) must eventually be full while the worker is gated.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match pool.try_submit(Request { id: 99, input: vec![] }) {
+                Err(Error::QueueFull) => break,
+                Ok(h) => handles.push(h),
+                Err(e) => panic!("unexpected: {e}"),
+            }
+            assert!(Instant::now() < deadline, "backpressure never engaged");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Release the gate: everything drains.
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        for h in handles {
+            h.wait().unwrap();
+        }
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_requests() {
+        let cfg = PoolConfig {
+            workers: 2,
+            queue_depth: 64,
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+        };
+        let pool = ServerPool::start(plan(), cfg, |_| {
+            |req: &Request| {
+                std::thread::sleep(Duration::from_millis(2));
+                vec![req.id as f32]
+            }
+        })
+        .unwrap();
+        let handles: Vec<_> = (0..20u64)
+            .map(|id| pool.submit(Request { id, input: vec![] }).unwrap())
+            .collect();
+        // Shut down immediately: accepted requests must still complete.
+        let pm = pool.shutdown().unwrap();
+        assert_eq!(pm.total_requests(), 20, "accepted requests were dropped");
+        for (id, h) in handles.into_iter().enumerate() {
+            let resp = h.wait().unwrap();
+            assert_eq!(resp.id, id as u64);
+        }
+    }
+
+    #[test]
+    fn worker_death_surfaces_as_errors_not_hangs() {
+        let pool = ServerPool::start(plan(), PoolConfig::single_worker(), |_| {
+            |req: &Request| {
+                if req.id == 3 {
+                    panic!("injected worker failure");
+                }
+                vec![req.id as f32]
+            }
+        })
+        .unwrap();
+        for id in 0..3u64 {
+            assert!(pool.submit(Request { id, input: vec![] }).unwrap().wait().is_ok());
+        }
+        let poisoned = pool.submit(Request { id: 3, input: vec![] }).unwrap();
+        assert!(poisoned.wait().is_err(), "dead worker must surface as Err");
+        // The pool is dead: further submissions fail, shutdown reports it.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match pool.submit(Request { id: 4, input: vec![] }) {
+                Err(_) => break,
+                Ok(h) => assert!(h.wait().is_err()),
+            }
+            assert!(Instant::now() < deadline, "pool never noticed worker death");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(pool.shutdown().is_err());
+    }
+
+    #[test]
+    fn drop_does_not_hang() {
+        let pool = ServerPool::start(plan(), PoolConfig::default(), echo_executor).unwrap();
+        drop(pool);
+    }
+}

@@ -1,8 +1,15 @@
 //! Per-layer inference planning: maps a network + ratio profile onto a
 //! design point, precomputing each layer's weights-generation budget and
-//! pipeline stage estimates. The plan is what the server executes per
-//! request (simulated cycles) and what the e2e example replays against the
-//! PJRT artifacts for real numerics.
+//! pipeline stage estimates. The plan is the admission-time schedule inside
+//! every [`EnginePlan`](crate::engine::EnginePlan): the
+//! [`ServerPool`](crate::coordinator::pool::ServerPool) serves it per
+//! request, and backends charge its per-layer costs when they do not walk
+//! their own (simulator traces, PJRT passthrough layers).
+//!
+//! Construct plans through
+//! [`Engine::builder()`](crate::engine::Engine::builder)`.plan()`, which
+//! validates the configuration first; `InferencePlan::build` stays as the
+//! unchecked primitive.
 
 use crate::arch::{DesignPoint, Platform};
 use crate::perf::model::{PerfModel, WeightsSource};

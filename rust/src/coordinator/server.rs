@@ -1,14 +1,14 @@
-//! Threaded inference request loop (batch = 1, the paper's embedded
-//! setting). The offline crate set has no tokio; a worker thread + mpsc
-//! channels implement the same accept → execute → respond loop the Arm
-//! host runs on the boards.
+//! Request/response types plus the legacy single-worker server, now a thin
+//! deprecated shim over [`ServerPool`](crate::coordinator::pool::ServerPool)
+//! (one worker, batch 1 — the paper's embedded setting). New code should
+//! use `ServerPool` directly, or build one through
+//! [`EngineBuilder::build_pool`](crate::engine::EngineBuilder::build_pool).
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::{PoolConfig, ServerPool};
 use crate::coordinator::scheduler::InferencePlan;
 use crate::error::{Error, Result};
-use std::sync::mpsc;
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::sync::Mutex;
 
 /// An inference request: an opaque input id plus (optionally) activations
 /// for real-numerics execution.
@@ -27,23 +27,25 @@ pub struct Response {
     pub id: u64,
     /// Simulated on-accelerator latency (seconds).
     pub device_latency_s: f64,
-    /// Host wall-clock latency for the request.
+    /// Host wall-clock latency for the request (batch time ÷ batch size).
     pub host_latency_s: f64,
     /// Output activations (empty for timing-only requests).
     pub output: Vec<f32>,
-}
-
-enum Msg {
-    Work(Request, mpsc::Sender<Response>),
-    Shutdown,
+    /// Size of the batch this request was served in (1 without batching).
+    pub batch: usize,
 }
 
 /// A single-worker inference server executing an [`InferencePlan`].
+#[deprecated(
+    since = "0.2.0",
+    note = "use coordinator::pool::ServerPool (multi-worker, batched) or \
+            engine::EngineBuilder::build_pool"
+)]
 pub struct InferenceServer {
-    tx: mpsc::Sender<Msg>,
-    worker: Option<JoinHandle<Metrics>>,
+    pool: ServerPool,
 }
 
+#[allow(deprecated)]
 impl InferenceServer {
     /// Spawn the worker. `factory` is called *inside* the worker thread to
     /// build the executor (PJRT clients are not `Send`, so the executor —
@@ -52,72 +54,40 @@ impl InferenceServer {
     pub fn spawn<F, E>(plan: InferencePlan, factory: F) -> Self
     where
         F: FnOnce() -> E + Send + 'static,
-        E: FnMut(&Request) -> Vec<f32>,
+        E: FnMut(&Request) -> Vec<f32> + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let worker = std::thread::spawn(move || {
-            let mut execute = factory();
-            let mut metrics = Metrics::new();
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    Msg::Work(req, reply) => {
-                        let start = Instant::now();
-                        let output = execute(&req);
-                        let host = start.elapsed();
-                        metrics.record(host);
-                        // Ignore send failure: client may have dropped.
-                        let _ = reply.send(Response {
-                            id: req.id,
-                            device_latency_s: plan.latency_s,
-                            host_latency_s: host.as_secs_f64(),
-                            output,
-                        });
-                    }
-                    Msg::Shutdown => break,
-                }
-            }
-            metrics
-        });
-        Self {
-            tx,
-            worker: Some(worker),
-        }
+        // ServerPool factories are `Fn` (one call per worker); with a single
+        // worker the legacy `FnOnce` factory is consumed exactly once.
+        let once = Mutex::new(Some(factory));
+        let pool = ServerPool::start(plan, PoolConfig::single_worker(), move |_worker| {
+            let f = once
+                .lock()
+                .expect("factory lock")
+                .take()
+                .expect("single-worker factory called once");
+            f()
+        })
+        .expect("single-worker pool config is valid");
+        Self { pool }
     }
 
     /// Submit a request and wait for its response.
     pub fn infer(&self, req: Request) -> Result<Response> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Work(req, reply_tx))
-            .map_err(|_| Error::Coordinator("worker gone".into()))?;
-        reply_rx
-            .recv()
-            .map_err(|_| Error::Coordinator("no response".into()))
+        self.pool.submit(req)?.wait()
     }
 
     /// Stop the worker and collect the metrics.
-    pub fn shutdown(mut self) -> Result<Metrics> {
-        self.tx
-            .send(Msg::Shutdown)
-            .map_err(|_| Error::Coordinator("worker gone".into()))?;
-        self.worker
-            .take()
-            .expect("worker present")
-            .join()
-            .map_err(|_| Error::Coordinator("worker panicked".into()))
-    }
-}
-
-impl Drop for InferenceServer {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+    pub fn shutdown(self) -> Result<Metrics> {
+        let pm = self.pool.shutdown()?;
+        if pm.panicked_workers > 0 {
+            return Err(Error::Coordinator("worker panicked".into()));
         }
+        Ok(pm.merged())
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::arch::{DesignPoint, Platform};
@@ -147,6 +117,7 @@ mod tests {
                 .unwrap();
             assert_eq!(resp.id, id);
             assert_eq!(resp.output, vec![id as f32]);
+            assert_eq!(resp.batch, 1, "legacy shim serves batch-1");
             assert!(resp.device_latency_s > 0.0);
         }
         let metrics = server.shutdown().unwrap();

@@ -1,0 +1,87 @@
+//! [`AnalyticalBackend`] — executes the plan on the closed-form performance
+//! model (Eqs. 5–8). Timing only; no numerics.
+
+use crate::engine::backend::{
+    EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome,
+};
+use crate::error::{Error, Result};
+use crate::perf::model::{NetworkPerf, PerfModel};
+
+/// Backend over [`PerfModel`]: per-layer costs are the analytical model's
+/// closed forms, evaluated once at [`plan`](ExecutionBackend::plan) time.
+#[derive(Default)]
+pub struct AnalyticalBackend {
+    state: Option<State>,
+    executed: Vec<LayerCost>,
+}
+
+struct State {
+    perf: NetworkPerf,
+    clock_hz: f64,
+}
+
+impl AnalyticalBackend {
+    /// New, unplanned backend.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn state(&self) -> Result<&State> {
+        self.state
+            .as_ref()
+            .ok_or_else(|| Error::InvalidConfig("backend used before plan()".into()))
+    }
+}
+
+impl ExecutionBackend for AnalyticalBackend {
+    fn name(&self) -> &'static str {
+        "analytical"
+    }
+
+    fn plan(&mut self, plan: &EnginePlan) -> Result<()> {
+        let model = PerfModel::new(plan.platform.clone(), plan.bw_mult);
+        let perf = model.network_perf(&plan.sigma, &plan.network, &plan.profile);
+        self.state = Some(State {
+            perf,
+            clock_hz: plan.platform.clock_hz,
+        });
+        self.executed.clear();
+        Ok(())
+    }
+
+    fn execute_layer(&mut self, idx: usize, _input: &[f32]) -> Result<LayerOutcome> {
+        let (name, cycles, bound) = {
+            let st = self.state()?;
+            let lp = st.perf.layers.get(idx).ok_or_else(|| {
+                Error::InvalidConfig(format!(
+                    "layer index {idx} out of range ({} layers)",
+                    st.perf.layers.len()
+                ))
+            })?;
+            (lp.name.clone(), lp.total_cycles, lp.bound)
+        };
+        self.executed.push(LayerCost {
+            name: name.clone(),
+            cycles,
+            bound,
+        });
+        Ok(LayerOutcome {
+            name,
+            cycles,
+            bound,
+            output: None,
+        })
+    }
+
+    fn finish(&mut self) -> Result<ExecutionReport> {
+        let clock_hz = self.state()?.clock_hz;
+        let layers = std::mem::take(&mut self.executed);
+        let total_cycles: f64 = layers.iter().map(|l| l.cycles).sum();
+        Ok(ExecutionReport {
+            backend: self.name(),
+            layers,
+            total_cycles,
+            latency_s: total_cycles / clock_hz,
+        })
+    }
+}

@@ -1,0 +1,119 @@
+//! The [`ExecutionBackend`] abstraction: one contract for the three ways
+//! the repro can execute an inference — the analytical model, the
+//! cycle-level simulator and the PJRT runtime.
+//!
+//! Lifecycle per backend instance:
+//!
+//! 1. [`plan`](ExecutionBackend::plan) — called once with the validated
+//!    [`EnginePlan`]; the backend sizes its internal state (compiles
+//!    artifacts, precomputes per-layer costs, …).
+//! 2. [`execute_layer`](ExecutionBackend::execute_layer) — called once per
+//!    network layer per inference, in layer order.
+//! 3. [`finish`](ExecutionBackend::finish) — closes the inference and
+//!    emits the cost/trace report; the backend resets for the next request.
+
+use crate::arch::{DesignPoint, Platform};
+use crate::coordinator::scheduler::InferencePlan;
+use crate::error::Result;
+use crate::perf::Bound;
+use crate::workload::{Network, RatioProfile};
+
+/// The fully validated execution context shared by every backend: the
+/// platform + bandwidth operating point, the design point σ, the workload
+/// and its OVSF ratio profile, plus the admission-time schedule derived
+/// from them.
+#[derive(Clone, Debug)]
+pub struct EnginePlan {
+    /// Target platform.
+    pub platform: Platform,
+    /// Off-chip bandwidth multiplier.
+    pub bw_mult: u32,
+    /// Design point executed.
+    pub sigma: DesignPoint,
+    /// The CNN workload.
+    pub network: Network,
+    /// Per-layer OVSF ratio profile.
+    pub profile: RatioProfile,
+    /// Admission-time per-layer schedule (analytical costing).
+    pub schedule: InferencePlan,
+}
+
+impl EnginePlan {
+    /// Number of network layers.
+    pub fn n_layers(&self) -> usize {
+        self.network.layers.len()
+    }
+}
+
+/// Outcome of executing one layer on a backend.
+#[derive(Clone, Debug)]
+pub struct LayerOutcome {
+    /// Layer name.
+    pub name: String,
+    /// Charged cycles for the layer on this backend.
+    pub cycles: f64,
+    /// Dominating pipeline stage.
+    pub bound: Bound,
+    /// Output activations, if the backend produces numerics (`None` for
+    /// timing-only backends and passthrough layers).
+    pub output: Option<Vec<f32>>,
+}
+
+/// Per-layer cost entry of an [`ExecutionReport`].
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    /// Layer name.
+    pub name: String,
+    /// Charged cycles.
+    pub cycles: f64,
+    /// Dominating pipeline stage.
+    pub bound: Bound,
+}
+
+/// The cost/trace output a backend emits when an inference finishes.
+#[derive(Clone, Debug)]
+pub struct ExecutionReport {
+    /// Backend that produced the report.
+    pub backend: &'static str,
+    /// Per-layer costs in execution order.
+    pub layers: Vec<LayerCost>,
+    /// Total cycles for the inference.
+    pub total_cycles: f64,
+    /// Latency in seconds at the platform clock.
+    pub latency_s: f64,
+}
+
+impl ExecutionReport {
+    /// Throughput implied by the report (inferences/second).
+    pub fn inf_per_s(&self) -> f64 {
+        if self.latency_s == 0.0 {
+            0.0
+        } else {
+            1.0 / self.latency_s
+        }
+    }
+}
+
+/// A pluggable execution path behind the [`Engine`](crate::engine::Engine)
+/// facade. Implementations wrap the analytical model, the cycle-level
+/// simulator or the PJRT runtime — and external code can provide custom
+/// backends (e.g. remote devices) without touching the engine.
+pub trait ExecutionBackend {
+    /// Stable backend name (reports, logs, registries).
+    fn name(&self) -> &'static str;
+
+    /// Accept the validated plan and prepare internal state. Called exactly
+    /// once, before any [`execute_layer`](Self::execute_layer) call.
+    fn plan(&mut self, plan: &EnginePlan) -> Result<()>;
+
+    /// Execute layer `idx` of the planned network. `input` carries the
+    /// current activations (the request input for layer 0, the previous
+    /// layer's output afterwards); timing-only backends ignore it and
+    /// return `output: None`.
+    fn execute_layer(&mut self, idx: usize, input: &[f32]) -> Result<LayerOutcome>;
+
+    /// Complete one inference: flush per-request state and emit the
+    /// cost/trace report. The backend must be ready for the next request
+    /// afterwards.
+    fn finish(&mut self) -> Result<ExecutionReport>;
+}

@@ -1,0 +1,388 @@
+//! The unified execution engine (tentpole of the API redesign).
+//!
+//! The paper's system is *one* engine with interchangeable weight paths;
+//! this module makes the repro match: a single [`Engine`] facade drives any
+//! [`ExecutionBackend`] — the analytical model ([`AnalyticalBackend`]), the
+//! cycle-level simulator ([`SimBackend`]) or the PJRT runtime
+//! ([`PjrtBackend`]) — through the same `plan → execute_layer → finish`
+//! contract, so the three execution paths stay comparable by construction.
+//!
+//! ```no_run
+//! use unzipfpga::engine::{BackendKind, Engine};
+//! use unzipfpga::arch::{DesignPoint, Platform};
+//! use unzipfpga::workload::{resnet, RatioProfile};
+//!
+//! let net = resnet::resnet18();
+//! let profile = RatioProfile::ovsf50(&net);
+//! let mut engine = Engine::builder()
+//!     .platform(Platform::z7045())
+//!     .bandwidth(4)
+//!     .design_point(DesignPoint::new(64, 64, 16, 48))
+//!     .network(net)
+//!     .profile(profile)
+//!     .backend(BackendKind::Simulator)
+//!     .build()?;
+//! let report = engine.infer_timing()?;
+//! println!("{:.1} inf/s on {}", report.inf_per_s(), report.backend);
+//! # Ok::<(), unzipfpga::Error>(())
+//! ```
+//!
+//! For serving, [`EngineBuilder::build_pool`] stands up a multi-worker
+//! [`ServerPool`](crate::coordinator::pool::ServerPool) in which every
+//! worker owns its own `Engine` (PJRT clients are not `Send`).
+
+pub mod analytical;
+pub mod backend;
+pub mod pjrt;
+pub mod sim;
+
+pub use analytical::AnalyticalBackend;
+pub use backend::{EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome};
+pub use pjrt::{PjrtBackend, PjrtConfig};
+pub use sim::SimBackend;
+
+use crate::arch::{DesignPoint, Platform};
+use crate::coordinator::pool::{PoolConfig, RequestExecutor, ServerPool};
+use crate::coordinator::scheduler::InferencePlan;
+use crate::coordinator::server::Request;
+use crate::dse::search::{optimise, DseConfig};
+use crate::error::{Error, Result};
+use crate::workload::{Network, RatioProfile};
+
+/// Which built-in backend an [`EngineBuilder`] should instantiate.
+#[derive(Clone, Debug)]
+pub enum BackendKind {
+    /// Closed-form analytical model (Eqs. 5–8).
+    Analytical,
+    /// Cycle-level simulator (tile-walked schedules).
+    Simulator,
+    /// PJRT runtime executing an AOT artifact (real numerics).
+    Pjrt(PjrtConfig),
+}
+
+/// The unified execution facade: a validated [`EnginePlan`] plus the
+/// backend that executes it.
+pub struct Engine {
+    plan: EnginePlan,
+    backend: Box<dyn ExecutionBackend>,
+}
+
+/// Result of one inference through an [`Engine`].
+#[derive(Clone, Debug)]
+pub struct InferenceOutcome {
+    /// Cost/trace report from the backend.
+    pub report: ExecutionReport,
+    /// Output activations (empty for timing-only backends).
+    pub output: Vec<f32>,
+}
+
+impl Engine {
+    /// Start building an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Construct an engine from a validated plan and a backend kind. The
+    /// backend's `plan` hook runs here (artifact compilation, cost
+    /// precomputation).
+    pub fn from_plan(plan: EnginePlan, kind: &BackendKind) -> Result<Self> {
+        let mut backend: Box<dyn ExecutionBackend> = match kind {
+            BackendKind::Analytical => Box::new(AnalyticalBackend::new()),
+            BackendKind::Simulator => Box::new(SimBackend::new()),
+            BackendKind::Pjrt(cfg) => Box::new(PjrtBackend::new(cfg.clone())?),
+        };
+        backend.plan(&plan)?;
+        Ok(Self { plan, backend })
+    }
+
+    /// Construct an engine from a validated plan and a caller-provided
+    /// backend (the extension point for custom execution paths).
+    pub fn with_backend(plan: EnginePlan, mut backend: Box<dyn ExecutionBackend>) -> Result<Self> {
+        backend.plan(&plan)?;
+        Ok(Self { plan, backend })
+    }
+
+    /// The validated plan this engine executes.
+    pub fn plan(&self) -> &EnginePlan {
+        &self.plan
+    }
+
+    /// The active backend's name.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Run one inference: walk every layer through the backend, threading
+    /// activations between layers, then collect the cost/trace report.
+    pub fn infer(&mut self, input: &[f32]) -> Result<InferenceOutcome> {
+        let n = self.plan.n_layers();
+        let mut current: Vec<f32> = Vec::new();
+        let mut produced = false;
+        for idx in 0..n {
+            let layer_input = if produced { current.as_slice() } else { input };
+            let outcome = self.backend.execute_layer(idx, layer_input)?;
+            if let Some(out) = outcome.output {
+                current = out;
+                produced = true;
+            }
+        }
+        let report = self.backend.finish()?;
+        Ok(InferenceOutcome {
+            report,
+            output: if produced { current } else { Vec::new() },
+        })
+    }
+
+    /// Timing-only inference (no activations), returning just the report.
+    pub fn infer_timing(&mut self) -> Result<ExecutionReport> {
+        self.infer(&[]).map(|o| o.report)
+    }
+}
+
+/// Builder for [`Engine`]s (and engine-backed server pools).
+///
+/// Required: [`network`](Self::network). Everything else has defaults:
+/// platform Z7045, bandwidth 4×, OVSF50 profile, analytical backend, and a
+/// design point chosen by the DSE when none is given.
+#[derive(Clone, Debug, Default)]
+pub struct EngineBuilder {
+    platform: Option<Platform>,
+    bw_mult: Option<u32>,
+    sigma: Option<DesignPoint>,
+    network: Option<Network>,
+    profile: Option<RatioProfile>,
+    backend: Option<BackendKind>,
+}
+
+impl EngineBuilder {
+    /// Target platform (default: Z7045).
+    pub fn platform(mut self, platform: Platform) -> Self {
+        self.platform = Some(platform);
+        self
+    }
+
+    /// Off-chip bandwidth multiplier (default: 4).
+    pub fn bandwidth(mut self, bw_mult: u32) -> Self {
+        self.bw_mult = Some(bw_mult);
+        self
+    }
+
+    /// Design point σ (default: run the DSE and take the optimum).
+    pub fn design_point(mut self, sigma: DesignPoint) -> Self {
+        self.sigma = Some(sigma);
+        self
+    }
+
+    /// The CNN workload (required).
+    pub fn network(mut self, network: Network) -> Self {
+        self.network = Some(network);
+        self
+    }
+
+    /// Per-layer OVSF ratio profile (default: OVSF50 for the network).
+    pub fn profile(mut self, profile: RatioProfile) -> Self {
+        self.profile = Some(profile);
+        self
+    }
+
+    /// Execution backend (default: [`BackendKind::Analytical`]).
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Validate the configuration into an [`EnginePlan`] without
+    /// instantiating a backend (useful for admission control and tests).
+    pub fn plan(&self) -> Result<EnginePlan> {
+        let network = self
+            .network
+            .clone()
+            .ok_or_else(|| Error::InvalidConfig("EngineBuilder: network is required".into()))?;
+        let platform = self.platform.clone().unwrap_or_else(Platform::z7045);
+        let bw_mult = self.bw_mult.unwrap_or(4);
+        if bw_mult == 0 {
+            return Err(Error::InvalidConfig(
+                "EngineBuilder: bandwidth multiplier must be ≥ 1".into(),
+            ));
+        }
+        if bw_mult > platform.peak_bw_mult {
+            return Err(Error::InvalidConfig(format!(
+                "EngineBuilder: bandwidth {bw_mult}× exceeds {} peak ({}×)",
+                platform.name, platform.peak_bw_mult
+            )));
+        }
+        let profile = self
+            .profile
+            .clone()
+            .unwrap_or_else(|| RatioProfile::ovsf50(&network));
+        if profile.len() != network.layers.len() {
+            return Err(Error::InvalidConfig(format!(
+                "EngineBuilder: profile '{}' has {} entries for {} layers of {}",
+                profile.name,
+                profile.len(),
+                network.layers.len(),
+                network.name
+            )));
+        }
+        let sigma = match self.sigma {
+            Some(s) => s,
+            None => {
+                optimise(
+                    &DseConfig::default(),
+                    &platform,
+                    bw_mult,
+                    &network,
+                    &profile,
+                    true,
+                )?
+                .sigma
+            }
+        };
+        if sigma.t_r == 0 || sigma.t_p == 0 || sigma.t_c == 0 {
+            return Err(Error::InvalidConfig(format!(
+                "EngineBuilder: degenerate design point {sigma}"
+            )));
+        }
+        let has_ovsf = network.layers.iter().any(|l| l.ovsf);
+        if has_ovsf && !sigma.has_wgen() {
+            return Err(Error::InvalidConfig(format!(
+                "EngineBuilder: {sigma} disables CNN-WGen (M = 0) but {} has OVSF layers",
+                network.name
+            )));
+        }
+        let schedule = InferencePlan::build(&platform, bw_mult, sigma, &network, &profile);
+        Ok(EnginePlan {
+            platform,
+            bw_mult,
+            sigma,
+            network,
+            profile,
+            schedule,
+        })
+    }
+
+    /// Validate and construct the [`Engine`].
+    pub fn build(self) -> Result<Engine> {
+        let plan = self.plan()?;
+        let kind = self.backend.unwrap_or(BackendKind::Analytical);
+        Engine::from_plan(plan, &kind)
+    }
+
+    /// Validate once, then stand up a multi-worker
+    /// [`ServerPool`](crate::coordinator::pool::ServerPool) in which every
+    /// worker thread owns a private `Engine` built from this configuration
+    /// (backends need not be `Send`; PJRT clients are not).
+    pub fn build_pool(self, cfg: PoolConfig) -> Result<ServerPool> {
+        let plan = self.plan()?;
+        let kind = self.backend.unwrap_or(BackendKind::Analytical);
+        // Fail fast on the caller thread: a broken backend (missing
+        // artifact, stub runtime) should error here, not inside a worker.
+        match &kind {
+            BackendKind::Pjrt(pjrt) => {
+                // Probe the client and the artifact file only — each worker
+                // compiles its own copy of the artifact anyway, so a full
+                // throwaway compile here would be paid twice. HLO compile
+                // errors still surface as worker startup failure.
+                if !cfg!(feature = "pjrt") {
+                    return Err(Error::RuntimeUnavailable);
+                }
+                let reg = crate::runtime::ArtifactRegistry::new(pjrt.artifacts_dir.clone())?;
+                if !reg.has(&pjrt.artifact) {
+                    return Err(Error::MissingArtifact {
+                        path: reg.path_of(&pjrt.artifact).display().to_string(),
+                        source: std::io::Error::new(
+                            std::io::ErrorKind::NotFound,
+                            "no such file",
+                        ),
+                    });
+                }
+            }
+            // Analytical/simulator backends are cheap to construct.
+            _ => drop(Engine::from_plan(plan.clone(), &kind)?),
+        }
+        let schedule = plan.schedule.clone();
+        ServerPool::start(schedule, cfg, move |_worker| EngineExecutor {
+            engine: Engine::from_plan(plan.clone(), &kind)
+                .expect("backend validated on the caller thread"),
+        })
+    }
+}
+
+/// Pool executor adapter: one engine per worker thread.
+struct EngineExecutor {
+    engine: Engine,
+}
+
+impl RequestExecutor for EngineExecutor {
+    fn execute(&mut self, req: &Request) -> Result<Vec<f32>> {
+        self.engine.infer(&req.input).map(|o| o.output)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::resnet;
+
+    fn builder() -> EngineBuilder {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        Engine::builder()
+            .platform(Platform::z7045())
+            .bandwidth(4)
+            .design_point(DesignPoint::new(64, 64, 16, 48))
+            .network(net)
+            .profile(profile)
+    }
+
+    #[test]
+    fn analytical_engine_matches_perf_model() {
+        use crate::perf::model::PerfModel;
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let expect = PerfModel::new(Platform::z7045(), 4)
+            .network_perf(&DesignPoint::new(64, 64, 16, 48), &net, &profile);
+        let mut engine = builder().backend(BackendKind::Analytical).build().unwrap();
+        let report = engine.infer_timing().unwrap();
+        assert_eq!(report.backend, "analytical");
+        assert_eq!(report.layers.len(), net.layers.len());
+        assert!((report.total_cycles - expect.total_cycles).abs() < 1e-6);
+        assert!((report.inf_per_s() - expect.inf_per_s).abs() < 1e-9 * expect.inf_per_s);
+    }
+
+    #[test]
+    fn engine_is_reusable_across_requests() {
+        let mut engine = builder().backend(BackendKind::Simulator).build().unwrap();
+        let a = engine.infer_timing().unwrap();
+        let b = engine.infer_timing().unwrap();
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.layers.len(), b.layers.len());
+    }
+
+    #[test]
+    fn pjrt_backend_fails_cleanly_without_artifacts() {
+        let cfg = PjrtConfig::new("/nonexistent-artifacts", "model_fwd", vec![1]);
+        let err = builder()
+            .backend(BackendKind::Pjrt(cfg))
+            .build()
+            .err()
+            .expect("must fail: no artifacts");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("make artifacts") || msg.contains("pjrt"),
+            "actionable: {msg}"
+        );
+    }
+
+    #[test]
+    fn dse_picks_sigma_when_not_given() {
+        let net = resnet::resnet18();
+        let engine = Engine::builder()
+            .platform(Platform::z7045())
+            .bandwidth(1)
+            .network(net)
+            .build()
+            .unwrap();
+        assert!(engine.plan().sigma.engine_macs() > 0);
+    }
+}

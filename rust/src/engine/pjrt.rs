@@ -1,0 +1,144 @@
+//! [`PjrtBackend`] — executes requests on the PJRT runtime via the
+//! AOT-compiled HLO artifacts ([`ArtifactRegistry`]).
+//!
+//! The artifacts are whole-model programs (e.g. `model_fwd`), not per-layer
+//! kernels, so the backend runs the artifact once per inference — at layer
+//! 0, where the request activations are available — and reports the
+//! remaining layers as passthrough, charged with their admission-time
+//! (analytical) cycle estimates from the [`EnginePlan`] schedule. This
+//! keeps the cost/trace contract of [`ExecutionBackend`] while the
+//! numerics come from the real compiled model.
+//!
+//! PJRT clients are not `Send`: construct this backend (or the
+//! [`Engine`](crate::engine::Engine) owning it) inside the thread that
+//! serves it — the [`ServerPool`](crate::coordinator::pool::ServerPool)
+//! worker factory does exactly that.
+
+use crate::engine::backend::{
+    EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome,
+};
+use crate::error::{Error, Result};
+use crate::runtime::ArtifactRegistry;
+use std::path::PathBuf;
+
+/// One extra (non-request) input buffer fed to the artifact.
+pub type ParamBuffer = (Vec<f32>, Vec<usize>);
+
+/// Configuration of a [`PjrtBackend`]: which artifact to run and how the
+/// request input + parameter buffers map onto its arguments.
+#[derive(Clone, Debug)]
+pub struct PjrtConfig {
+    /// Artifact directory (see [`crate::runtime::artifacts_dir`]).
+    pub artifacts_dir: PathBuf,
+    /// Artifact name (`<dir>/<name>.hlo.txt`).
+    pub artifact: String,
+    /// Dimensions of the request input buffer (argument 0).
+    pub input_dims: Vec<usize>,
+    /// Parameter buffers appended after the request input, in order.
+    pub params: Vec<ParamBuffer>,
+}
+
+impl PjrtConfig {
+    /// Config for an artifact taking only the request input.
+    pub fn new(
+        artifacts_dir: impl Into<PathBuf>,
+        artifact: impl Into<String>,
+        input_dims: Vec<usize>,
+    ) -> Self {
+        Self {
+            artifacts_dir: artifacts_dir.into(),
+            artifact: artifact.into(),
+            input_dims,
+            params: Vec::new(),
+        }
+    }
+}
+
+/// Backend over the PJRT runtime.
+pub struct PjrtBackend {
+    cfg: PjrtConfig,
+    registry: ArtifactRegistry,
+    schedule: Vec<LayerCost>,
+    clock_hz: f64,
+    executed: Vec<LayerCost>,
+}
+
+impl PjrtBackend {
+    /// Create the backend (opens the PJRT client; artifact compilation
+    /// happens at [`plan`](ExecutionBackend::plan) time).
+    pub fn new(cfg: PjrtConfig) -> Result<Self> {
+        let registry = ArtifactRegistry::new(cfg.artifacts_dir.clone())?;
+        Ok(Self {
+            cfg,
+            registry,
+            schedule: Vec::new(),
+            clock_hz: 1.0,
+            executed: Vec::new(),
+        })
+    }
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn plan(&mut self, plan: &EnginePlan) -> Result<()> {
+        // Compile (or fail fast: missing artifact / stub runtime).
+        self.registry.get(&self.cfg.artifact)?;
+        self.schedule = plan
+            .schedule
+            .layers
+            .iter()
+            .map(|l| LayerCost {
+                name: l.name.clone(),
+                cycles: l.cycles,
+                bound: l.bound,
+            })
+            .collect();
+        self.clock_hz = plan.platform.clock_hz;
+        self.executed.clear();
+        Ok(())
+    }
+
+    fn execute_layer(&mut self, idx: usize, input: &[f32]) -> Result<LayerOutcome> {
+        let cost = self.schedule.get(idx).cloned().ok_or_else(|| {
+            Error::InvalidConfig(format!(
+                "layer index {idx} out of range ({} layers)",
+                self.schedule.len()
+            ))
+        })?;
+        let output = if idx == 0 {
+            // The whole-model artifact consumes the request activations here.
+            let exe = self.registry.get(&self.cfg.artifact)?;
+            let mut inputs: Vec<(&[f32], &[usize])> =
+                vec![(input, self.cfg.input_dims.as_slice())];
+            for (data, dims) in &self.cfg.params {
+                inputs.push((data.as_slice(), dims.as_slice()));
+            }
+            let mut out = exe.run_f32(&inputs)?;
+            let first = if out.is_empty() { Vec::new() } else { out.swap_remove(0) };
+            Some(first)
+        } else {
+            None
+        };
+        self.executed.push(cost.clone());
+        Ok(LayerOutcome {
+            name: cost.name,
+            cycles: cost.cycles,
+            bound: cost.bound,
+            output,
+        })
+    }
+
+    fn finish(&mut self) -> Result<ExecutionReport> {
+        let layers = std::mem::take(&mut self.executed);
+        let total_cycles: f64 = layers.iter().map(|l| l.cycles).sum();
+        Ok(ExecutionReport {
+            backend: self.name(),
+            layers,
+            total_cycles,
+            latency_s: total_cycles / self.clock_hz,
+        })
+    }
+}

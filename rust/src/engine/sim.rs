@@ -1,0 +1,89 @@
+//! [`SimBackend`] — executes the plan on the cycle-level simulator
+//! ([`LayerSim`] walking the tile schedule, with the OVSF generator's
+//! Alg. 1 cycle counts for on-the-fly layers). Timing only; the numeric
+//! TiWGen/PE-array path stays available through `sim::LayerSim` directly.
+
+use crate::engine::backend::{
+    EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome,
+};
+use crate::error::{Error, Result};
+use crate::sim::engine::LayerSim;
+use crate::util::ceil_div;
+
+/// Backend over [`LayerSim`]: each layer's tile schedule is walked with
+/// deterministic cycle counters at `execute_layer` time.
+#[derive(Default)]
+pub struct SimBackend {
+    plan: Option<EnginePlan>,
+    executed: Vec<LayerCost>,
+}
+
+impl SimBackend {
+    /// New, unplanned backend.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn planned(&self) -> Result<&EnginePlan> {
+        self.plan
+            .as_ref()
+            .ok_or_else(|| Error::InvalidConfig("backend used before plan()".into()))
+    }
+}
+
+impl ExecutionBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "simulator"
+    }
+
+    fn plan(&mut self, plan: &EnginePlan) -> Result<()> {
+        self.plan = Some(plan.clone());
+        self.executed.clear();
+        Ok(())
+    }
+
+    fn execute_layer(&mut self, idx: usize, _input: &[f32]) -> Result<LayerOutcome> {
+        let plan = self.planned()?;
+        let layer = plan.network.layers.get(idx).ok_or_else(|| {
+            Error::InvalidConfig(format!(
+                "layer index {idx} out of range ({} layers)",
+                plan.network.layers.len()
+            ))
+        })?;
+        let sim = LayerSim::new(&plan.sigma, &plan.platform, plan.bw_mult);
+        // Cycle count per Alg. 1 without materialising weights:
+        // n_basis · subtiles · p_tiles (validated == WGenSim walk).
+        let trace = if layer.ovsf && plan.sigma.has_wgen() {
+            let cycles = layer.basis_per_chunk(plan.profile.rho(idx))
+                * plan.sigma.subtiles_per_tile()
+                * ceil_div(layer.gemm().p, plan.sigma.t_p);
+            sim.run_timing(layer, Some(cycles))
+        } else {
+            sim.run_timing(layer, None)
+        };
+        let outcome = LayerOutcome {
+            name: trace.name.clone(),
+            cycles: trace.total_cycles as f64,
+            bound: trace.bound,
+            output: None,
+        };
+        self.executed.push(LayerCost {
+            name: trace.name,
+            cycles: trace.total_cycles as f64,
+            bound: trace.bound,
+        });
+        Ok(outcome)
+    }
+
+    fn finish(&mut self) -> Result<ExecutionReport> {
+        let clock_hz = self.planned()?.platform.clock_hz;
+        let layers = std::mem::take(&mut self.executed);
+        let total_cycles: f64 = layers.iter().map(|l| l.cycles).sum();
+        Ok(ExecutionReport {
+            backend: self.name(),
+            layers,
+            total_cycles,
+            latency_s: total_cycles / clock_hz,
+        })
+    }
+}

@@ -1,27 +1,24 @@
 //! Unified error type for the unzipFPGA crate.
-
-use thiserror::Error;
+//!
+//! Hand-rolled `Display`/`Error` impls: the build environment is offline,
+//! so derive crates (`thiserror`) are unavailable.
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Errors raised across the unzipFPGA stack.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A requested OVSF basis length is not a power of two.
-    #[error("OVSF basis length must be a power of two, got {0}")]
     InvalidBasisLength(usize),
 
     /// Shape mismatch when reconstructing or decomposing tensors.
-    #[error("shape mismatch: {0}")]
     ShapeMismatch(String),
 
     /// A design point violates the platform's resource constraints.
-    #[error("infeasible design point: {0}")]
     Infeasible(String),
 
     /// The design-space exploration found no feasible configuration.
-    #[error("DSE found no feasible design for {network} on {platform}")]
     NoFeasibleDesign {
         /// Target network name.
         network: String,
@@ -30,34 +27,102 @@ pub enum Error {
     },
 
     /// Invalid configuration supplied by the caller.
-    #[error("invalid configuration: {0}")]
     InvalidConfig(String),
 
     /// An artifact file (AOT-compiled HLO) is missing.
-    #[error("missing artifact {path}: run `make artifacts` first ({source})")]
     MissingArtifact {
         /// Path that was attempted.
         path: String,
         /// Underlying I/O error.
-        #[source]
         source: std::io::Error,
     },
 
     /// Errors bubbled up from the XLA/PJRT runtime.
-    #[error("XLA runtime error: {0}")]
     Xla(String),
 
+    /// The PJRT runtime was requested but the crate was built without the
+    /// `pjrt` feature (the `xla` dependency is not vendored).
+    RuntimeUnavailable,
+
     /// Plain I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Coordinator/server errors (channel shutdowns etc.).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
+
+    /// A bounded submission queue rejected a request (backpressure).
+    QueueFull,
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidBasisLength(n) => {
+                write!(f, "OVSF basis length must be a power of two, got {n}")
+            }
+            Error::ShapeMismatch(s) => write!(f, "shape mismatch: {s}"),
+            Error::Infeasible(s) => write!(f, "infeasible design point: {s}"),
+            Error::NoFeasibleDesign { network, platform } => {
+                write!(f, "DSE found no feasible design for {network} on {platform}")
+            }
+            Error::InvalidConfig(s) => write!(f, "invalid configuration: {s}"),
+            Error::MissingArtifact { path, source } => {
+                write!(f, "missing artifact {path}: run `make artifacts` first ({source})")
+            }
+            Error::Xla(s) => write!(f, "XLA runtime error: {s}"),
+            Error::RuntimeUnavailable => write!(
+                f,
+                "PJRT runtime unavailable: built without the `pjrt` feature \
+                 (vendor the `xla` crate and enable it)"
+            ),
+            Error::Io(e) => e.fmt(f),
+            Error::Coordinator(s) => write!(f, "coordinator error: {s}"),
+            Error::QueueFull => write!(f, "server pool queue is full (backpressure applied)"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::MissingArtifact { source, .. } => Some(source),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_are_actionable() {
+        let e = Error::MissingArtifact {
+            path: "artifacts/x.hlo.txt".into(),
+            source: std::io::Error::new(std::io::ErrorKind::NotFound, "no such file"),
+        };
+        assert!(e.to_string().contains("make artifacts"));
+        assert!(Error::RuntimeUnavailable.to_string().contains("pjrt"));
+        assert!(Error::QueueFull.to_string().contains("backpressure"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_expose_source() {
+        let e: Error = std::io::Error::other("boom").into();
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -23,9 +23,15 @@
 //!   and static prior-work rows.
 //! * [`accuracy`] — paper-anchored accuracy model for ρ-profiles.
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX/Pallas
-//!   artifacts (HLO text) and executes them.
-//! * [`coordinator`] — the inference driver: per-layer scheduling, request
-//!   loop and metrics.
+//!   artifacts (HLO text) and executes them (stubbed without the `pjrt`
+//!   feature).
+//! * [`engine`] — the unified execution facade: one `Engine` driving any
+//!   [`ExecutionBackend`](engine::ExecutionBackend) — analytical model,
+//!   cycle-level simulator or PJRT runtime — through the same
+//!   `plan → execute_layer → finish` contract.
+//! * [`coordinator`] — the inference driver: per-layer scheduling, the
+//!   multi-worker batched [`ServerPool`](coordinator::pool::ServerPool)
+//!   and metrics.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 
@@ -37,6 +43,7 @@ pub mod autotune;
 pub mod baselines;
 pub mod coordinator;
 pub mod dse;
+pub mod engine;
 pub mod error;
 pub mod ovsf;
 pub mod perf;
@@ -52,7 +59,9 @@ pub use error::{Error, Result};
 /// Commonly used items.
 pub mod prelude {
     pub use crate::arch::{DesignPoint, Platform};
+    pub use crate::coordinator::pool::{PoolConfig, ServerPool};
     pub use crate::dse::search::DseResult;
+    pub use crate::engine::{BackendKind, Engine, EngineBuilder, ExecutionBackend};
     pub use crate::error::{Error, Result};
     pub use crate::ovsf::codes::OvsfBasis;
     pub use crate::perf::model::{LayerPerf, PerfModel};

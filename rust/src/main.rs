@@ -13,12 +13,12 @@
 
 use unzipfpga::arch::Platform;
 use unzipfpga::autotune::autotune;
-use unzipfpga::coordinator::scheduler::InferencePlan;
-use unzipfpga::coordinator::server::{InferenceServer, Request};
+use unzipfpga::coordinator::pool::PoolConfig;
+use unzipfpga::coordinator::server::Request;
 use unzipfpga::dse::search::{optimise, DseConfig};
+use unzipfpga::engine::{BackendKind, Engine};
 use unzipfpga::error::Result;
 use unzipfpga::report::{figures, tables};
-use unzipfpga::sim::engine::simulate_network_timing;
 use unzipfpga::workload::{Network, RatioProfile};
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
@@ -163,6 +163,8 @@ FLAGS:
   --bw        bandwidth multiplier 1|2|4|12                 (default 4)
   --profile   ovsf50 | ovsf25 | uniform1                    (default ovsf50)
   --requests  request count for `serve`                     (default 100)
+  --workers   server-pool worker threads for `serve`        (default 4)
+  --batch     server-pool max batch size for `serve`        (default 8)
 ";
 
 fn print_table(t: unzipfpga::util::table::Table) -> Result<()> {
@@ -254,24 +256,39 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let net = args.network()?;
     let plat = args.platform();
     let profile = args.profile(&net);
-    let r = optimise(&DseConfig::default(), &plat, args.bw(), &net, &profile, true)?;
-    let traces = simulate_network_timing(&r.sigma, &plat, args.bw(), true, &net, &profile);
+    // The unified Engine runs the same plan on both execution paths: the
+    // cycle-level simulator for the walk, the analytical model to validate.
+    let builder = Engine::builder()
+        .platform(plat.clone())
+        .bandwidth(args.bw())
+        .network(net.clone())
+        .profile(profile);
+    let mut sim = builder.clone().backend(BackendKind::Simulator).build()?;
+    let mut ana = builder.backend(BackendKind::Analytical).build()?;
     println!(
         "cycle-level simulation of {} on {} ({}x, σ = {}):",
         net.name,
         plat.name,
         args.bw(),
-        r.sigma
+        sim.plan().sigma
     );
-    let mut total = 0u64;
-    for t in &traces {
-        println!("  {}", t.summary());
-        total += t.total_cycles;
+    let report = sim.infer_timing()?;
+    for l in &report.layers {
+        println!(
+            "  {:<24} cycles={:>10.0} bound={}",
+            l.name,
+            l.cycles,
+            l.bound.label()
+        );
     }
-    let inf_s = plat.clock_hz / total as f64;
-    println!("simulated total : {total} cycles = {inf_s:.2} inf/s");
-    println!("analytical model: {:.2} inf/s", r.perf.inf_per_s);
-    let dev = (inf_s - r.perf.inf_per_s).abs() / r.perf.inf_per_s;
+    let model = ana.infer_timing()?;
+    println!(
+        "simulated total : {:.0} cycles = {:.2} inf/s",
+        report.total_cycles,
+        report.inf_per_s()
+    );
+    println!("analytical model: {:.2} inf/s", model.inf_per_s());
+    let dev = (report.inf_per_s() - model.inf_per_s()).abs() / model.inf_per_s();
     println!("deviation       : {:.2}% (DMA burst rounding)", dev * 100.0);
     Ok(())
 }
@@ -285,25 +302,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .get("requests")
         .and_then(|s| s.parse().ok())
         .unwrap_or(100);
-    let r = optimise(&DseConfig::default(), &plat, args.bw(), &net, &profile, true)?;
-    let plan = InferencePlan::build(&plat, args.bw(), r.sigma, &net, &profile);
+    let workers: usize = args
+        .flags
+        .get("workers")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let max_batch: usize = args
+        .flags
+        .get("batch")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let pool = Engine::builder()
+        .platform(plat.clone())
+        .bandwidth(args.bw())
+        .network(net)
+        .profile(profile)
+        .backend(BackendKind::Analytical)
+        .build_pool(PoolConfig {
+            workers,
+            max_batch,
+            ..PoolConfig::default()
+        })?;
+    let device_latency = pool.plan().latency_s;
     println!(
-        "serving {} on {} (σ = {}, device latency {:.2} ms)",
-        plan.network,
+        "serving {} on {} (σ = {}, device latency {:.2} ms, {workers} workers, batch ≤ {max_batch})",
+        pool.plan().network,
         plat.name,
-        plan.sigma,
-        plan.latency_s * 1e3
+        pool.plan().sigma,
+        device_latency * 1e3
     );
-    let device_latency = plan.latency_s;
-    let server = InferenceServer::spawn(plan, || {
-        // Timing-only serving: the device time is simulated; the host loop
-        // measures coordination overhead.
-        |_req: &Request| vec![]
-    });
-    for id in 0..n_req {
-        server.infer(Request { id, input: vec![] })?;
+    // Non-blocking submission: enqueue everything, then join the handles.
+    let handles: Vec<_> = (0..n_req)
+        .map(|id| pool.submit(Request { id, input: vec![] }))
+        .collect::<Result<_>>()?;
+    for h in handles {
+        h.wait()?;
     }
-    let metrics = server.shutdown()?;
+    let metrics = pool.shutdown()?;
     println!("host loop : {}", metrics.summary());
     println!(
         "device    : {:.2} ms/inf => {:.2} inf/s",

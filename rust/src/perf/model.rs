@@ -120,7 +120,14 @@ impl PerfModel {
     /// for the baseline).
     pub fn t_mem_in(&self, sigma: &DesignPoint, layer: &Layer, extra_bytes: f64) -> f64 {
         let g = layer.gemm();
-        let bytes = sigma.t_r.min(g.r) as f64 * g.p as f64 * self.wl_bytes + extra_bytes;
+        self.t_mem_in_tile(layer, sigma.t_r.min(g.r), extra_bytes)
+    }
+
+    /// Eq. 6 (input side) for a tile with an explicit row count — edge row
+    /// strips (`R % T_R ≠ 0`) stream fewer activations than a full tile.
+    pub fn t_mem_in_tile(&self, layer: &Layer, rows: u64, extra_bytes: f64) -> f64 {
+        let g = layer.gemm();
+        let bytes = rows as f64 * g.p as f64 * self.wl_bytes + extra_bytes;
         bytes / self.bpc_in()
     }
 
@@ -138,7 +145,14 @@ impl PerfModel {
     /// column tiles pass their actual width here.
     pub fn t_eng_cols(&self, sigma: &DesignPoint, layer: &Layer, cols: u64) -> f64 {
         let g = layer.gemm();
-        let t_r = sigma.t_r.min(g.r) as f64;
+        self.t_eng_tile(sigma, layer, sigma.t_r.min(g.r), cols)
+    }
+
+    /// Engine cycles for a tile with explicit `rows` and `cols` — edge row
+    /// and column tiles pass their actual extents here.
+    pub fn t_eng_tile(&self, sigma: &DesignPoint, layer: &Layer, rows: u64, cols: u64) -> f64 {
+        let g = layer.gemm();
+        let t_r = rows as f64;
         let p_tiles = ceil_div(g.p, sigma.t_p) as f64;
         let plain = t_r * p_tiles;
         if !self.selective_pes || cols >= sigma.t_c {
@@ -164,12 +178,15 @@ impl PerfModel {
 
     /// Full per-layer evaluation for a weights source.
     ///
-    /// Column tiles are evaluated in two groups — full-width tiles and the
-    /// remainder (edge) tile, whose narrower width both shortens the output
-    /// drain and lets the input-selective PEs steal work (Eq. 7). The
-    /// reported stage times/bound are those of the dominant (full-width)
-    /// group; `total_cycles` sums both groups, so it can be below
-    /// `II·tiles` when an edge tile exists.
+    /// Tiles are evaluated in up to four groups — the cross product of
+    /// {full-height, remainder} row strips and {full-width, remainder}
+    /// column tiles. Edge column tiles are narrower, which both shortens
+    /// the output drain and lets the input-selective PEs steal work
+    /// (Eq. 7); edge row strips (`R % T_R ≠ 0`) stream fewer activations
+    /// and occupy the PE array for fewer cycles. The reported stage
+    /// times/bound are those of the dominant (full-height, full-width)
+    /// group; `total_cycles` sums all groups, so it can be below
+    /// `II·tiles` when edge tiles exist.
     pub fn layer_perf(
         &self,
         sigma: &DesignPoint,
@@ -180,17 +197,27 @@ impl PerfModel {
         let row_tiles = ceil_div(g.r, sigma.t_r);
         let col_tiles = ceil_div(g.c, sigma.t_c);
         let tiles = row_tiles * col_tiles;
-        let rows = sigma.t_r.min(g.r) as f64;
+
+        // Row-strip groups: (count, live rows).
+        let full_rows = g.r / sigma.t_r;
+        let r_rem = g.r % sigma.t_r;
+        let mut row_groups: Vec<(u64, u64)> = Vec::with_capacity(2);
+        if full_rows > 0 {
+            row_groups.push((full_rows, sigma.t_r));
+        }
+        if r_rem > 0 {
+            row_groups.push((1, r_rem));
+        }
 
         // Column-tile groups: (count, live columns).
         let full_cols = g.c / sigma.t_c;
         let c_rem = g.c % sigma.t_c;
-        let mut groups: Vec<(u64, u64)> = Vec::with_capacity(2);
+        let mut col_groups: Vec<(u64, u64)> = Vec::with_capacity(2);
         if full_cols > 0 {
-            groups.push((full_cols, sigma.t_c));
+            col_groups.push((full_cols, sigma.t_c));
         }
         if c_rem > 0 {
-            groups.push((1, c_rem));
+            col_groups.push((1, c_rem));
         }
 
         let wgen_cycles = match src {
@@ -200,29 +227,31 @@ impl PerfModel {
 
         let mut total = 0.0f64;
         let mut dominant: Option<(f64, f64, f64, f64, f64)> = None;
-        for (gi, &(count, cols)) in groups.iter().enumerate() {
-            let extra_in_bytes = match src {
-                WeightsSource::OnTheFly { .. } if layer.ovsf => 0.0,
-                // Dense weights stream per tile (baseline / non-OVSF layer).
-                WeightsSource::OnTheFly { .. } | WeightsSource::OffChip => {
-                    (g.p * cols) as f64 * self.wl_bytes
+        for (ri, &(rcount, rows)) in row_groups.iter().enumerate() {
+            for (ci, &(ccount, cols)) in col_groups.iter().enumerate() {
+                let extra_in_bytes = match src {
+                    WeightsSource::OnTheFly { .. } if layer.ovsf => 0.0,
+                    // Dense weights stream per tile (baseline / non-OVSF layer).
+                    WeightsSource::OnTheFly { .. } | WeightsSource::OffChip => {
+                        (g.p * cols) as f64 * self.wl_bytes
+                    }
+                    WeightsSource::OnChip => {
+                        // Fetched once per inference; amortise over all tiles.
+                        (g.p * g.c) as f64 * self.wl_bytes / tiles as f64
+                    }
+                };
+                let t_mem_in = self.t_mem_in_tile(layer, rows, extra_in_bytes);
+                let t_eng = self.t_eng_tile(sigma, layer, rows, cols);
+                let t_mem_out = (rows * cols) as f64 * self.wl_bytes / self.bpc_out();
+                let ii = t_mem_in.max(wgen_cycles).max(t_eng).max(t_mem_out);
+                total += ii * (rcount * ccount) as f64;
+                if ri == 0 && ci == 0 {
+                    dominant = Some((t_mem_in, wgen_cycles, t_eng, t_mem_out, ii));
                 }
-                WeightsSource::OnChip => {
-                    // Fetched once per inference; amortise over all tiles.
-                    (g.p * g.c) as f64 * self.wl_bytes / tiles as f64
-                }
-            };
-            let t_mem_in = self.t_mem_in(sigma, layer, extra_in_bytes);
-            let t_eng = self.t_eng_cols(sigma, layer, cols);
-            let t_mem_out = rows * cols as f64 * self.wl_bytes / self.bpc_out();
-            let ii = t_mem_in.max(wgen_cycles).max(t_eng).max(t_mem_out);
-            total += ii * (row_tiles * count) as f64;
-            if gi == 0 {
-                dominant = Some((t_mem_in, wgen_cycles, t_eng, t_mem_out, ii));
             }
         }
         let (t_mem_in, t_wgen, t_eng, t_mem_out, ii) =
-            dominant.expect("at least one column-tile group");
+            dominant.expect("at least one tile group");
         LayerPerf {
             name: layer.name.clone(),
             t_mem_in,
@@ -378,6 +407,25 @@ mod tests {
         assert!(
             with.total_cycles <= without.total_cycles,
             "selective PEs must help on the edge tile when compute-bound"
+        );
+    }
+
+    #[test]
+    fn edge_row_strips_accounted() {
+        // R = 784 with T_R = 64: 12 full strips + one 16-row edge strip.
+        // Every stage of the edge strip is cheaper (fewer rows), so the
+        // layer total falls strictly below II·tiles.
+        let m = PerfModel::new(Platform::z7045(), 4);
+        let sigma = DesignPoint::new(64, 64, 16, 48);
+        let layer = Layer::conv("t", 28, 28, 128, 128, 3, 1, 1, true);
+        let g = layer.gemm();
+        assert_ne!(g.r % sigma.t_r, 0);
+        let p = m.layer_perf(&sigma, &layer, WeightsSource::OffChip);
+        assert!(
+            p.total_cycles < p.ii * p.tiles as f64,
+            "edge row strip must be cheaper: total {} vs II·tiles {}",
+            p.total_cycles,
+            p.ii * p.tiles as f64
         );
     }
 

@@ -4,6 +4,10 @@
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md). All artifacts are
 //! lowered with `return_tuple=True`, so results unwrap with `to_tuple`.
+//!
+//! Without the `pjrt` feature the loader performs the same existence checks
+//! (so "missing artifact" errors stay actionable) but compilation and
+//! execution return [`Error::RuntimeUnavailable`].
 
 use crate::error::{Error, Result};
 use crate::runtime::client::RuntimeClient;
@@ -12,6 +16,7 @@ use std::path::{Path, PathBuf};
 
 /// A compiled PJRT executable loaded from an HLO-text artifact.
 pub struct LoadedExecutable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     /// Artifact path (diagnostics).
     pub path: PathBuf,
@@ -26,6 +31,11 @@ impl LoadedExecutable {
                 source: std::io::Error::new(std::io::ErrorKind::NotFound, "no such file"),
             });
         }
+        Self::compile(client, path)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn compile(client: &RuntimeClient, path: &Path) -> Result<Self> {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str()
                 .ok_or_else(|| Error::InvalidConfig(format!("non-utf8 path {path:?}")))?,
@@ -38,9 +48,15 @@ impl LoadedExecutable {
         })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    fn compile(_client: &RuntimeClient, _path: &Path) -> Result<Self> {
+        Err(Error::RuntimeUnavailable)
+    }
+
     /// Execute with f32 buffers: each input is `(data, dims)`. The artifact
     /// must return a tuple; all tuple elements are returned as flat f32
     /// vectors with their dimensions.
+    #[cfg(feature = "pjrt")]
     pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
         let literals: Vec<xla::Literal> = inputs
             .iter()
@@ -57,6 +73,13 @@ impl LoadedExecutable {
             out.push(t.to_vec::<f32>()?);
         }
         Ok(out)
+    }
+
+    /// Execute with f32 buffers (stub: always
+    /// [`Error::RuntimeUnavailable`]).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        Err(Error::RuntimeUnavailable)
     }
 }
 
@@ -124,5 +147,17 @@ mod tests {
             PathBuf::from("/tmp/unzipfpga-test-artifacts/model.hlo.txt")
         );
         assert!(!reg.has("definitely-not-there"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn present_artifact_without_pjrt_reports_runtime_unavailable() {
+        let dir = std::env::temp_dir().join("unzipfpga-stub-artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("present.hlo.txt");
+        std::fs::write(&path, "HloModule present").unwrap();
+        let client = RuntimeClient::cpu().unwrap();
+        let err = LoadedExecutable::load(&client, &path).err().expect("stub must refuse");
+        assert!(matches!(err, Error::RuntimeUnavailable));
     }
 }

@@ -1,6 +1,12 @@
 //! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text,
 //! see `python/compile/aot.py`) and executes them on the XLA CPU client.
 //! Python never runs on this path — the artifacts are self-contained.
+//!
+//! The `xla` crate behind the client is gated by the `pjrt` feature (it
+//! cannot be resolved in the offline build). Without the feature, the same
+//! API compiles as inert stubs whose execution paths return
+//! [`Error::RuntimeUnavailable`](crate::Error::RuntimeUnavailable), so the
+//! rest of the stack (engine, pool, tests) keeps working and skips loudly.
 
 pub mod client;
 pub mod executable;

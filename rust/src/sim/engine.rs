@@ -53,16 +53,19 @@ impl<'a> LayerSim<'a> {
         let row_tiles = ceil_div(g.r, self.sigma.t_r);
         let col_tiles = ceil_div(g.c, self.sigma.t_c);
         let p_tiles = ceil_div(g.p, self.sigma.t_p);
-        let rows = g.r.min(self.sigma.t_r);
 
         let mut total = 0u64;
         let mut ii_steady = 0u64;
         let (mut t_in_s, mut t_wg_s, mut t_eng_s, mut t_out_s) = (0u64, 0u64, 0u64, 0u64);
-        for _rt in 0..row_tiles {
+        for rt in 0..row_tiles {
+            // The trailing row strip is narrower when R % T_R ≠ 0: it moves
+            // fewer activation/output bytes and occupies the PE array for
+            // fewer cycles than a full-height strip.
+            let rows = (g.r - rt * self.sigma.t_r).min(self.sigma.t_r);
             for ct in 0..col_tiles {
                 // Edge column tiles are narrower than T_C.
                 let cols = (g.c - ct * self.sigma.t_c).min(self.sigma.t_c);
-                // Stage 1a: input strip T_R×P (+ weights when streamed).
+                // Stage 1a: input strip rows×P (+ weights when streamed).
                 let mut in_bytes = rows * g.p * self.wl_bytes;
                 if wgen_cycles_per_tile.is_none() {
                     in_bytes += g.p * cols * self.wl_bytes;
@@ -76,9 +79,9 @@ impl<'a> LayerSim<'a> {
                 let t_out = dma_out.transfer(rows * cols * self.wl_bytes);
                 let ii = t_in.max(t_wg).max(t_eng).max(t_out);
                 total += ii;
-                // Steady-state reporting tracks the dominant (full-width)
-                // column-tile group — the first column tile.
-                if ct == 0 {
+                // Steady-state reporting tracks the dominant (full-height,
+                // full-width) tile group — the first tile.
+                if rt == 0 && ct == 0 {
                     ii_steady = ii;
                     t_in_s = t_in;
                     t_wg_s = t_wg;
@@ -258,13 +261,48 @@ mod tests {
         let sim = LayerSim::new(&sigma, &platform, 4);
         let trace = sim.run_timing(&layer, Some(100));
         let g = layer.gemm();
-        let tiles = ceil_div(g.r, sigma.t_r) * ceil_div(g.c, sigma.t_c);
-        assert_eq!(
-            trace.bytes_in,
-            tiles * sigma.t_r.min(g.r) * g.p * 2,
-            "input strip per tile"
+        // Edge tiles are narrowed in both dimensions, so the per-tile sums
+        // telescope to exact totals: every activation row streams once per
+        // column tile, every output element drains exactly once.
+        let col_tiles = ceil_div(g.c, sigma.t_c);
+        assert_eq!(trace.bytes_in, g.r * g.p * 2 * col_tiles, "input strips");
+        assert_eq!(trace.bytes_out, g.r * g.c * 2, "each output element once");
+    }
+
+    #[test]
+    fn trailing_row_tile_not_overcounted() {
+        // Regression: R = 14·14 = 196 on T_R = 32 leaves a 4-row edge strip
+        // (196 = 6·32 + 4). The simulator used to charge it full T_R DMA
+        // bytes and PE cycles; it must agree with the analytical model.
+        let platform = Platform::z7045();
+        let sigma = DesignPoint::new(32, 32, 8, 16);
+        let layer = Layer::conv("t", 14, 14, 32, 32, 3, 1, 1, true);
+        let g = layer.gemm();
+        assert_ne!(g.r % sigma.t_r, 0, "test layer must have a row remainder");
+
+        let rho = 0.5;
+        let wgen_cycles = layer.basis_per_chunk(rho)
+            * sigma.subtiles_per_tile()
+            * ceil_div(g.p, sigma.t_p);
+        let sim = LayerSim::new(&sigma, &platform, 4);
+        let trace = sim.run_timing(&layer, Some(wgen_cycles));
+
+        let model = PerfModel::new(platform, 4);
+        let perf = model.layer_perf(
+            &sigma,
+            &layer,
+            crate::perf::model::WeightsSource::OnTheFly { rho },
         );
-        assert_eq!(trace.bytes_out, tiles * sigma.t_r.min(g.r) * sigma.t_c.min(g.c) * 2);
+        let rel = (trace.total_cycles as f64 - perf.total_cycles).abs() / perf.total_cycles;
+        assert!(
+            rel < 0.01,
+            "sim {} vs model {} ({rel:.4}) on a non-divisible layer",
+            trace.total_cycles,
+            perf.total_cycles
+        );
+        // The exact-traffic invariant only holds with narrowed edge strips.
+        assert_eq!(trace.bytes_in, g.r * g.p * 2 * ceil_div(g.c, sigma.t_c));
+        assert_eq!(trace.bytes_out, g.r * g.c * 2);
     }
 
     #[test]

@@ -48,7 +48,10 @@ fn wrong_input_arity_is_an_error_not_a_crash() {
         return;
     }
     let mut reg = ArtifactRegistry::new(dir).unwrap();
-    let exe = reg.get("gemm").unwrap();
+    let Ok(exe) = reg.get("gemm") else {
+        eprintln!("SKIP: PJRT unavailable — build with `--features pjrt`");
+        return;
+    };
     // gemm expects two buffers; give it one.
     let a = vec![0.0f32; 64 * 144];
     let r = exe.run_f32(&[(&a, &[64, 144])]);
@@ -64,10 +67,11 @@ fn registry_missing_artifact_error_is_actionable() {
 }
 
 #[test]
-fn server_survives_panicking_worker_shutdown() {
+fn pool_survives_panicking_worker_shutdown() {
     use unzipfpga::arch::{DesignPoint, Platform};
+    use unzipfpga::coordinator::pool::{PoolConfig, ServerPool};
     use unzipfpga::coordinator::scheduler::InferencePlan;
-    use unzipfpga::coordinator::server::{InferenceServer, Request};
+    use unzipfpga::coordinator::server::Request;
     use unzipfpga::workload::{resnet, RatioProfile};
 
     let net = resnet::resnet18();
@@ -79,27 +83,31 @@ fn server_survives_panicking_worker_shutdown() {
         &net,
         &profile,
     );
-    // Worker panics on request id 3.
-    let server = InferenceServer::spawn(plan, || {
+    // The single worker panics on request id 3.
+    let pool = ServerPool::start(plan, PoolConfig::single_worker(), |_worker| {
         |req: &Request| {
             if req.id == 3 {
                 panic!("injected worker failure");
             }
             vec![req.id as f32]
         }
-    });
+    })
+    .unwrap();
     for id in 0..3u64 {
-        assert!(server.infer(Request { id, input: vec![] }).is_ok());
+        assert!(pool.submit(Request { id, input: vec![] }).unwrap().wait().is_ok());
     }
     // The poisoned request: the client sees an error, not a hang.
-    let r = server.infer(Request {
+    let r = pool.submit(Request {
         id: 3,
         input: vec![],
     });
-    assert!(r.is_err(), "dead worker must surface as Err");
-    // Shutdown still terminates (worker is gone; shutdown reports error
-    // or joins — it must not hang or panic the caller).
-    let _ = server.shutdown();
+    match r {
+        Ok(handle) => assert!(handle.wait().is_err(), "dead worker must surface as Err"),
+        Err(_) => {} // pool already noticed the death — equally fine
+    }
+    // Shutdown still terminates (worker is gone; shutdown reports the
+    // panic — it must not hang or panic the caller).
+    let _ = pool.shutdown();
 }
 
 #[test]

@@ -1,12 +1,27 @@
 //! Integration: the coordinator serves a request stream where each request
 //! executes REAL numerics through the PJRT runtime (the AOT model forward)
-//! — Python is nowhere on this path.
+//! — Python is nowhere on this path. Serving goes through the multi-worker
+//! `ServerPool` (the `InferenceServer` shim is covered by its own unit
+//! tests).
 
 use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::coordinator::pool::{PoolConfig, ServerPool};
 use unzipfpga::coordinator::scheduler::InferencePlan;
-use unzipfpga::coordinator::server::{InferenceServer, Request};
+use unzipfpga::coordinator::server::Request;
 use unzipfpga::runtime::{artifacts_dir, ArtifactRegistry};
 use unzipfpga::workload::{resnet, RatioProfile};
+
+fn plan() -> InferencePlan {
+    let net = resnet::resnet18();
+    let profile = RatioProfile::ovsf50(&net);
+    InferencePlan::build(
+        &Platform::z7045(),
+        4,
+        DesignPoint::new(64, 64, 16, 48),
+        &net,
+        &profile,
+    )
+}
 
 #[test]
 fn serve_requests_through_pjrt() {
@@ -15,21 +30,27 @@ fn serve_requests_through_pjrt() {
         eprintln!("SKIP: artifacts missing — run `make artifacts`");
         return;
     }
-    let net = resnet::resnet18();
-    let profile = RatioProfile::ovsf50(&net);
-    let plan = InferencePlan::build(
-        &Platform::z7045(),
-        4,
-        DesignPoint::new(64, 64, 16, 48),
-        &net,
-        &profile,
-    );
+    {
+        // Also needs the real runtime, not the stub.
+        let mut probe = ArtifactRegistry::new(dir.clone()).expect("client");
+        if probe.get("ovsf_conv").is_err() {
+            eprintln!("SKIP: PJRT unavailable — build with `--features pjrt`");
+            return;
+        }
+    }
 
-    // The worker builds its own registry: PJRT clients are not Send.
+    // Each worker builds its own registry: PJRT clients are not Send.
     let mut rng = unzipfpga::util::prng::Xoshiro256::seed_from_u64(11);
-    let alphas = rng.normal_vec(16 * 8 * 32);
-    let server = InferenceServer::spawn(plan, move || {
-        let mut reg = ArtifactRegistry::new(dir).expect("client");
+    let alphas = std::sync::Arc::new(rng.normal_vec(16 * 8 * 32));
+    let cfg = PoolConfig {
+        workers: 2,
+        queue_depth: 32,
+        max_batch: 4,
+        linger: std::time::Duration::from_millis(1),
+    };
+    let pool = ServerPool::start(plan(), cfg, move |_worker| {
+        let alphas = std::sync::Arc::clone(&alphas);
+        let mut reg = ArtifactRegistry::new(artifacts_dir()).expect("client");
         reg.get("ovsf_conv").expect("precompile");
         move |req: &Request| {
             let exe = reg.get("ovsf_conv").expect("cached");
@@ -41,14 +62,20 @@ fn serve_requests_through_pjrt() {
                 .expect("PJRT execution");
             out.into_iter().next().unwrap()
         }
-    });
+    })
+    .unwrap();
 
     let mut rng2 = unzipfpga::util::prng::Xoshiro256::seed_from_u64(12);
+    let handles: Vec<_> = (0..8u64)
+        .map(|id| {
+            let input = rng2.normal_vec(16 * 16 * 16);
+            pool.submit(Request { id, input }).unwrap()
+        })
+        .collect();
     let mut outputs = Vec::new();
-    for id in 0..8u64 {
-        let input = rng2.normal_vec(16 * 16 * 16);
-        let resp = server.infer(Request { id, input }).unwrap();
-        assert_eq!(resp.id, id);
+    for (id, h) in handles.into_iter().enumerate() {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.id, id as u64);
         assert_eq!(resp.output.len(), 16 * 16 * 32);
         assert!(resp.output.iter().all(|v| v.is_finite()));
         assert!(resp.host_latency_s > 0.0);
@@ -57,29 +84,33 @@ fn serve_requests_through_pjrt() {
     // Different inputs ⇒ different outputs (the runtime is really running).
     assert_ne!(outputs[0], outputs[1]);
 
-    let metrics = server.shutdown().unwrap();
-    assert_eq!(metrics.count(), 8);
-    assert!(metrics.mean_us() > 0.0);
+    let metrics = pool.shutdown().unwrap();
+    assert_eq!(metrics.total_requests(), 8);
+    assert!(metrics.merged().mean_us() > 0.0);
 }
 
 #[test]
-fn identical_requests_are_deterministic() {
+fn identical_requests_are_deterministic_across_workers() {
     let dir = artifacts_dir();
     if !dir.join("ovsf_wgen.hlo.txt").exists() {
         eprintln!("SKIP: artifacts missing — run `make artifacts`");
         return;
     }
-    let net = resnet::resnet18();
-    let profile = RatioProfile::ovsf50(&net);
-    let plan = InferencePlan::build(
-        &Platform::z7045(),
-        4,
-        DesignPoint::new(64, 64, 16, 48),
-        &net,
-        &profile,
-    );
-    let server = InferenceServer::spawn(plan, move || {
-        let mut reg = ArtifactRegistry::new(dir).expect("client");
+    {
+        let mut probe = ArtifactRegistry::new(dir.clone()).expect("client");
+        if probe.get("ovsf_wgen").is_err() {
+            eprintln!("SKIP: PJRT unavailable — build with `--features pjrt`");
+            return;
+        }
+    }
+    let cfg = PoolConfig {
+        workers: 2,
+        queue_depth: 16,
+        max_batch: 1,
+        linger: std::time::Duration::ZERO,
+    };
+    let pool = ServerPool::start(plan(), cfg, move |_worker| {
+        let mut reg = ArtifactRegistry::new(artifacts_dir()).expect("client");
         reg.get("ovsf_wgen").expect("precompile");
         move |req: &Request| {
             let exe = reg.get("ovsf_wgen").expect("cached");
@@ -89,16 +120,23 @@ fn identical_requests_are_deterministic() {
                 .next()
                 .unwrap()
         }
-    });
+    })
+    .unwrap();
     let mut rng = unzipfpga::util::prng::Xoshiro256::seed_from_u64(3);
     let input = rng.normal_vec(16 * 8 * 32);
-    let a = server
-        .infer(Request {
+    let a = pool
+        .submit(Request {
             id: 0,
             input: input.clone(),
         })
+        .unwrap()
+        .wait()
         .unwrap();
-    let b = server.infer(Request { id: 1, input }).unwrap();
+    let b = pool
+        .submit(Request { id: 1, input })
+        .unwrap()
+        .wait()
+        .unwrap();
     assert_eq!(a.output, b.output, "PJRT execution must be deterministic");
-    server.shutdown().unwrap();
+    pool.shutdown().unwrap();
 }

@@ -1,0 +1,267 @@
+//! Integration tests for the unified `Engine`/`ExecutionBackend` API and
+//! the multi-worker batched `ServerPool`:
+//!
+//! * builder validation errors,
+//! * cross-backend agreement (analytical vs cycle-level simulator),
+//! * pool ordering/backpressure under concurrent submitters,
+//! * clean shutdown with in-flight batches,
+//! * the acceptance check: ≥ 4 workers serving ≥ 100 requests with
+//!   per-request responses matching the single-worker path.
+
+use std::sync::Arc;
+use std::time::Duration;
+use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::coordinator::pool::{PoolConfig, ServerPool};
+use unzipfpga::coordinator::scheduler::InferencePlan;
+use unzipfpga::coordinator::server::Request;
+use unzipfpga::engine::{BackendKind, Engine};
+use unzipfpga::workload::{resnet, squeezenet, RatioProfile};
+use unzipfpga::Error;
+
+fn builder() -> unzipfpga::engine::EngineBuilder {
+    let net = resnet::resnet18();
+    let profile = RatioProfile::ovsf50(&net);
+    Engine::builder()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(64, 64, 16, 48))
+        .network(net)
+        .profile(profile)
+}
+
+fn plan() -> InferencePlan {
+    builder().plan().unwrap().schedule
+}
+
+#[test]
+fn builder_validation_errors() {
+    // Missing network.
+    let err = Engine::builder().build().err().expect("network is required");
+    assert!(matches!(err, Error::InvalidConfig(_)), "{err}");
+
+    // Profile/network length mismatch.
+    let net = resnet::resnet18();
+    let wrong = RatioProfile::ovsf50(&squeezenet::squeezenet1_1());
+    let err = Engine::builder()
+        .network(net.clone())
+        .profile(wrong)
+        .build()
+        .err()
+        .expect("mismatched profile");
+    assert!(err.to_string().contains("entries"), "{err}");
+
+    // Zero bandwidth.
+    let err = Engine::builder()
+        .network(net.clone())
+        .bandwidth(0)
+        .build()
+        .err()
+        .expect("bw 0");
+    assert!(matches!(err, Error::InvalidConfig(_)));
+
+    // Bandwidth beyond the platform peak.
+    let err = Engine::builder()
+        .platform(Platform::z7045())
+        .bandwidth(99)
+        .network(net.clone())
+        .build()
+        .err()
+        .expect("bw beyond peak");
+    assert!(err.to_string().contains("peak"), "{err}");
+
+    // A wgen-less design point cannot serve an OVSF profile.
+    let err = Engine::builder()
+        .network(net.clone())
+        .design_point(DesignPoint::new(0, 64, 16, 48))
+        .build()
+        .err()
+        .expect("no wgen");
+    assert!(err.to_string().contains("CNN-WGen"), "{err}");
+
+    // Degenerate tile sizes.
+    let err = Engine::builder()
+        .network(net)
+        .design_point(DesignPoint::new(64, 0, 16, 48))
+        .build()
+        .err()
+        .expect("degenerate sigma");
+    assert!(matches!(err, Error::InvalidConfig(_)));
+}
+
+#[test]
+fn cross_backend_agreement_on_resnet18() {
+    // The simulator walks the same schedules the closed forms describe:
+    // totals agree within DMA burst rounding (< 1%), layer by layer.
+    let mut ana = builder().backend(BackendKind::Analytical).build().unwrap();
+    let mut sim = builder().backend(BackendKind::Simulator).build().unwrap();
+    let ra = ana.infer_timing().unwrap();
+    let rs = sim.infer_timing().unwrap();
+    assert_eq!(ra.layers.len(), rs.layers.len());
+    let rel = (ra.total_cycles - rs.total_cycles).abs() / ra.total_cycles;
+    assert!(
+        rel < 0.01,
+        "backends disagree: analytical {} vs simulator {} ({rel:.4})",
+        ra.total_cycles,
+        rs.total_cycles
+    );
+    for (a, s) in ra.layers.iter().zip(&rs.layers) {
+        assert_eq!(a.name, s.name);
+        let lrel = (a.cycles - s.cycles).abs() / a.cycles.max(1.0);
+        assert!(lrel < 0.02, "{}: {} vs {} ({lrel:.4})", a.name, a.cycles, s.cycles);
+    }
+}
+
+#[test]
+fn pool_ordering_under_concurrent_submitters() {
+    // Many submitter threads against a small bounded queue: every request
+    // is served exactly once with its own id, and a single worker preserves
+    // FIFO order per submission (ids are unique across submitters).
+    let cfg = PoolConfig {
+        workers: 1,
+        queue_depth: 4,
+        max_batch: 2,
+        linger: Duration::from_micros(200),
+    };
+    let pool = Arc::new(
+        ServerPool::start(plan(), cfg, |_| |req: &Request| vec![req.id as f32 * 2.0]).unwrap(),
+    );
+    let mut joins = Vec::new();
+    for t in 0..8u64 {
+        let pool = Arc::clone(&pool);
+        joins.push(std::thread::spawn(move || {
+            let mut got = Vec::new();
+            for i in 0..20u64 {
+                let id = t * 100 + i;
+                let resp = pool
+                    .submit(Request { id, input: vec![] })
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                assert_eq!(resp.id, id);
+                assert_eq!(resp.output, vec![id as f32 * 2.0]);
+                got.push(resp.id);
+            }
+            got
+        }));
+    }
+    let mut all = Vec::new();
+    for j in joins {
+        all.extend(j.join().unwrap());
+    }
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len(), 160, "each request served exactly once");
+    let pool = Arc::into_inner(pool).expect("all submitters joined");
+    let pm = pool.shutdown().unwrap();
+    assert_eq!(pm.total_requests(), 160);
+}
+
+#[test]
+fn clean_shutdown_with_in_flight_batches() {
+    let cfg = PoolConfig {
+        workers: 3,
+        queue_depth: 128,
+        max_batch: 8,
+        linger: Duration::from_millis(2),
+    };
+    let pool = ServerPool::start(plan(), cfg, |_| {
+        |req: &Request| {
+            std::thread::sleep(Duration::from_millis(1));
+            vec![req.id as f32]
+        }
+    })
+    .unwrap();
+    let handles: Vec<_> = (0..60u64)
+        .map(|id| pool.submit(Request { id, input: vec![] }).unwrap())
+        .collect();
+    // Shut down while batches are still in flight: every accepted request
+    // must complete, none may hang or be dropped.
+    let pm = pool.shutdown().unwrap();
+    assert_eq!(pm.panicked_workers, 0);
+    assert_eq!(pm.total_requests(), 60);
+    for (id, h) in handles.into_iter().enumerate() {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.id, id as u64);
+        assert_eq!(resp.output, vec![id as f32]);
+    }
+}
+
+/// Acceptance: a ≥4-worker pool serving ≥100 requests produces, per
+/// request, exactly the response the single-worker path produces.
+#[test]
+fn multi_worker_pool_matches_single_worker_path() {
+    fn executor(_worker: usize) -> impl FnMut(&Request) -> Vec<f32> {
+        // Deterministic function of the request.
+        |req: &Request| vec![req.id as f32, (req.id * 7 % 13) as f32]
+    }
+    let n_req = 120u64;
+
+    // Reference: single worker, batch 1.
+    let single = ServerPool::start(plan(), PoolConfig::single_worker(), executor).unwrap();
+    let mut expect = Vec::new();
+    for id in 0..n_req {
+        let resp = single.submit(Request { id, input: vec![] }).unwrap().wait().unwrap();
+        expect.push((resp.id, resp.output));
+    }
+    single.shutdown().unwrap();
+
+    // Subject: 4 workers, batched.
+    let cfg = PoolConfig {
+        workers: 4,
+        queue_depth: 32,
+        max_batch: 8,
+        linger: Duration::from_micros(500),
+    };
+    let pool = ServerPool::start(plan(), cfg, executor).unwrap();
+    let handles: Vec<_> = (0..n_req)
+        .map(|id| pool.submit(Request { id, input: vec![] }).unwrap())
+        .collect();
+    let mut got: Vec<(u64, Vec<f32>)> = handles
+        .into_iter()
+        .map(|h| {
+            let r = h.wait().unwrap();
+            (r.id, r.output)
+        })
+        .collect();
+    let pm = pool.shutdown().unwrap();
+
+    got.sort_by_key(|(id, _)| *id);
+    assert_eq!(got, expect, "multi-worker responses diverge from single-worker");
+    assert_eq!(pm.total_requests(), n_req as usize);
+    assert_eq!(pm.per_worker.len(), 4);
+}
+
+/// The same acceptance shape through the Engine facade: an engine-backed
+/// pool (analytical backend per worker) serves timing-only requests whose
+/// device latency matches a directly-built engine's report.
+#[test]
+fn engine_pool_serves_through_unified_api() {
+    let mut reference = builder().backend(BackendKind::Analytical).build().unwrap();
+    let expect_latency = reference.infer_timing().unwrap().latency_s;
+
+    let pool = builder()
+        .backend(BackendKind::Analytical)
+        .build_pool(PoolConfig {
+            workers: 4,
+            queue_depth: 64,
+            max_batch: 8,
+            linger: Duration::from_micros(500),
+        })
+        .unwrap();
+    let handles: Vec<_> = (0..100u64)
+        .map(|id| pool.submit(Request { id, input: vec![] }).unwrap())
+        .collect();
+    for (id, h) in handles.into_iter().enumerate() {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.id, id as u64);
+        assert!(resp.output.is_empty(), "analytical backend is timing-only");
+        assert!(
+            (resp.device_latency_s - expect_latency).abs() < 1e-12,
+            "pool device latency {} != engine latency {}",
+            resp.device_latency_s,
+            expect_latency
+        );
+    }
+    let pm = pool.shutdown().unwrap();
+    assert_eq!(pm.total_requests(), 100);
+}

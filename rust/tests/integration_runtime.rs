@@ -14,7 +14,12 @@ fn registry() -> Option<ArtifactRegistry> {
         eprintln!("SKIP: artifacts missing — run `make artifacts`");
         return None;
     }
-    Some(ArtifactRegistry::new(dir).expect("PJRT client"))
+    let mut reg = ArtifactRegistry::new(dir).expect("PJRT client");
+    if let Err(e) = reg.get("ovsf_wgen") {
+        eprintln!("SKIP: PJRT runtime unavailable ({e}) — build with `--features pjrt`");
+        return None;
+    }
+    Some(reg)
 }
 
 fn load_f32(path: &std::path::Path) -> Vec<f32> {

@@ -83,8 +83,9 @@ fn throughput_monotone_nonincreasing_in_rho() {
     });
 }
 
-/// The II decomposition is consistent: total cycles of a layer equal
-/// II × tiles, and II is attained by at least one stage.
+/// The II decomposition is consistent: total cycles of a layer are bounded
+/// by II × tiles (exactly equal when the layer tiles evenly — edge row and
+/// column strips are cheaper), and II is attained by at least one stage.
 #[test]
 fn ii_decomposition_consistent() {
     forall("ii-decomposition", 24, |rng| {
@@ -112,7 +113,14 @@ fn ii_decomposition_consistent() {
             &layer,
             unzipfpga::perf::model::WeightsSource::OnTheFly { rho: 0.5 },
         );
-        assert!((p.total_cycles - p.ii * p.tiles as f64).abs() < 1e-6);
+        assert!(p.total_cycles <= p.ii * p.tiles as f64 + 1e-6);
+        assert!(p.total_cycles > 0.0);
+        let g = layer.gemm();
+        let tiles_evenly =
+            g.r % sigma.t_r == 0 && (g.c % sigma.t_c == 0 || g.c < sigma.t_c);
+        if tiles_evenly {
+            assert!((p.total_cycles - p.ii * p.tiles as f64).abs() < 1e-6);
+        }
         let stages = [p.t_mem_in, p.t_wgen, p.t_eng, p.t_mem_out];
         assert!(stages.iter().any(|&s| (s - p.ii).abs() < 1e-9));
         assert!(stages.iter().all(|&s| s <= p.ii + 1e-9));
