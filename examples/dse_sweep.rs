@@ -64,7 +64,7 @@ fn main() -> unzipfpga::Result<()> {
         let share = p.sigma.m * 100 / (p.sigma.m + p.sigma.engine_macs());
         let bucket = share / 5 * 5;
         let e = best_by_share.entry(bucket).or_insert(0.0);
-        *e = e.max(p.inf_per_s);
+        *e = e.max(p.inf_per_s());
     }
     for (share, inf) in best_by_share {
         println!(
@@ -80,7 +80,7 @@ fn main() -> unzipfpga::Result<()> {
     // argmax instead of re-running the DSE.
     let Some(best) = points
         .iter()
-        .max_by(|a, b| a.inf_per_s.partial_cmp(&b.inf_per_s).unwrap())
+        .max_by(|a, b| a.inf_per_s().partial_cmp(&b.inf_per_s()).unwrap())
     else {
         return Ok(());
     };

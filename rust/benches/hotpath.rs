@@ -4,21 +4,225 @@
 //! * full DSE sweep (feasible-point enumeration rate)
 //! * cycle-level network simulation
 //! * TiWGen numeric weight generation
-//! * OVSF reconstruction algebra
+//! * OVSF reconstruction algebra (matrix-free FWHT path)
 //! * autotuner end-to-end
+//!
+//! The OVSF weights-generation section additionally measures ResNet-18/50
+//! layer shapes against the dense-matrix baseline and emits a
+//! machine-readable `BENCH_ovsf.json` (path override: `BENCH_OVSF_JSON`)
+//! so the perf trajectory is tracked across PRs. `BENCH_SMOKE=1` clamps
+//! budgets for CI.
 
 use unzipfpga::arch::{DesignPoint, Platform};
 use unzipfpga::autotune::autotune;
 use unzipfpga::dse::search::{optimise, sweep, DseConfig};
+use unzipfpga::ovsf::basis::{select, BasisSelection, SelectedBasis};
 use unzipfpga::ovsf::codes::OvsfBasis;
+use unzipfpga::ovsf::reconstruct::{Filter3x3Mode, OvsfLayer};
 use unzipfpga::perf::model::PerfModel;
 use unzipfpga::sim::engine::simulate_network_timing;
 use unzipfpga::sim::hw_weights::HwOvsfWeights;
 use unzipfpga::sim::ovsf_gen::OvsfGenerator;
 use unzipfpga::sim::wgen::WGenSim;
-use unzipfpga::util::bench::bench_auto;
+use unzipfpga::util::bench::{bench_auto, smoke_mode};
 use unzipfpga::util::prng::Xoshiro256;
 use unzipfpga::workload::{resnet, RatioProfile};
+
+/// Dense Sylvester materialisation — the pre-rewrite O(L²) baseline the
+/// matrix-free path is compared against (production code no longer builds
+/// this; the bench keeps its own copy for the before/after numbers).
+fn dense_sylvester(len: usize) -> Vec<i8> {
+    let mut codes = vec![1i8];
+    let mut cur = 1usize;
+    while cur < len {
+        let next = cur * 2;
+        let mut out = vec![0i8; next * next];
+        for r in 0..cur {
+            for c in 0..cur {
+                let v = codes[r * cur + c];
+                out[r * next + c] = v;
+                out[r * next + cur + c] = v;
+                out[(cur + r) * next + c] = v;
+                out[(cur + r) * next + cur + c] = -v;
+            }
+        }
+        codes = out;
+        cur = next;
+    }
+    codes
+}
+
+/// Dense-matrix per-filter regression + reconstruction (the old
+/// `from_weights`/`reconstruct` inner loop): L dot products + |sel|·L
+/// accumulation.
+fn dense_filter_roundtrip(dense: &[i8], l: usize, target: &[f32], rho: f64) -> f32 {
+    let inv_l = 1.0f64 / l as f64;
+    let alphas: Vec<f32> = (0..l)
+        .map(|j| {
+            let mut acc = 0.0f64;
+            for (t, &v) in target.iter().enumerate() {
+                acc += v as f64 * dense[j * l + t] as f64;
+            }
+            (acc * inv_l) as f32
+        })
+        .collect();
+    let basis = OvsfBasis::new(l).unwrap();
+    let sel: SelectedBasis = select(BasisSelection::IterativeDrop, &basis, &alphas, rho);
+    let mut out = vec![0.0f32; l];
+    for (k, &j) in sel.indices.iter().enumerate() {
+        let a = sel.alphas[k];
+        for (t, o) in out.iter_mut().enumerate() {
+            *o += a * dense[j * l + t] as f32;
+        }
+    }
+    out[0]
+}
+
+struct OvsfRow {
+    name: String,
+    shape: String,
+    l: usize,
+    rho: f64,
+    /// Dense-matrix baseline, when one was actually measured (`None` for
+    /// paths that have no dense counterpart — no fabricated speedups).
+    before_ns_per_layer: Option<f64>,
+    after_ns_per_layer: f64,
+    layers_per_s: f64,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_bench_json(rows: &[OvsfRow]) {
+    let path =
+        std::env::var("BENCH_OVSF_JSON").unwrap_or_else(|_| "BENCH_ovsf.json".to_string());
+    let mut out = String::from("{\n  \"bench\": \"ovsf-weights-generation\",\n");
+    out.push_str(&format!("  \"smoke\": {},\n  \"entries\": [\n", smoke_mode()));
+    for (i, r) in rows.iter().enumerate() {
+        let before = match r.before_ns_per_layer {
+            Some(b) if r.after_ns_per_layer > 0.0 => format!(
+                "\"before_ns_per_layer\": {:.1}, \"speedup\": {:.2}, ",
+                b,
+                b / r.after_ns_per_layer
+            ),
+            _ => String::new(),
+        };
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"shape\": \"{}\", \"l\": {}, \"rho\": {}, \
+             {}\"after_ns_per_layer\": {:.1}, \"layers_per_s\": {:.3}}}{}\n",
+            json_escape(&r.name),
+            json_escape(&r.shape),
+            r.l,
+            r.rho,
+            before,
+            r.after_ns_per_layer,
+            r.layers_per_s,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(&path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// OVSF weights-generation hot path at real layer shapes: the FWHT
+/// `from_weights` + `reconstruct` roundtrip and the TiWGen walk, with the
+/// dense-matrix baseline extrapolated from a few filters (running it for
+/// all N_out would take minutes at L=8192 — that was the point).
+fn bench_ovsf_weights_generation() -> Vec<OvsfRow> {
+    println!("-- OVSF weights generation (ResNet layer shapes) --");
+    let rho = 0.5;
+    // (label, n_out, n_in) at K=3: ResNet-18 stage-1, stage-3, and the
+    // ResNet-18/50 worst case 512×512 (L = 512·16 = 8192).
+    let shapes: [(&str, usize, usize); 3] =
+        [("64x64x3x3", 64, 64), ("256x256x3x3", 256, 256), ("512x512x3x3", 512, 512)];
+    let mut rows = Vec::new();
+    for (label, n_out, n_in) in shapes {
+        let k = 3usize;
+        let k_ovsf = 4usize;
+        let l = n_in * k_ovsf * k_ovsf;
+        let mut rng = Xoshiro256::seed_from_u64(0xb0b0 ^ l as u64);
+        let weights = rng.normal_vec(n_out * n_in * k * k);
+
+        // After: matrix-free FWHT path, full layer.
+        let fwht = bench_auto(
+            &format!("ovsf: from_weights+reconstruct {label} (FWHT)"),
+            600,
+            || {
+                let layer = OvsfLayer::from_weights(
+                    &weights,
+                    n_out,
+                    n_in,
+                    k,
+                    rho,
+                    BasisSelection::IterativeDrop,
+                    Filter3x3Mode::Crop,
+                )
+                .unwrap();
+                layer.reconstruct().unwrap()[0]
+            },
+        );
+
+        // Before: dense-matrix baseline, measured on a few filters and
+        // extrapolated to the full layer (linear in N_out).
+        let dense = dense_sylvester(l);
+        let bench_filters = if l >= 4096 { 2usize } else { 8 };
+        let dense_r = bench_auto(
+            &format!("ovsf: {bench_filters}-filter roundtrip {label} (dense baseline)"),
+            400,
+            || {
+                let mut acc = 0.0f32;
+                for o in 0..bench_filters {
+                    let target = &weights[o * n_in * k * k..(o + 1) * n_in * k * k];
+                    // Zero-pad the 3×3 filter into the K'×K' frame.
+                    let mut frame = vec![0.0f32; l];
+                    for c in 0..n_in {
+                        for kh in 0..k {
+                            for kw in 0..k {
+                                frame[(c * k_ovsf + kh) * k_ovsf + kw] =
+                                    target[(c * k + kh) * k + kw];
+                            }
+                        }
+                    }
+                    acc += dense_filter_roundtrip(&dense, l, &frame, rho);
+                }
+                acc
+            },
+        );
+        let before_ns = dense_r.mean_ns * n_out as f64 / bench_filters as f64;
+        rows.push(OvsfRow {
+            name: "from_weights+reconstruct".into(),
+            shape: label.into(),
+            l,
+            rho,
+            before_ns_per_layer: Some(before_ns),
+            after_ns_per_layer: fwht.mean_ns,
+            layers_per_s: 1e9 / fwht.mean_ns,
+        });
+
+        // TiWGen numeric generation at the same shape (chunk-basis form).
+        let hw = HwOvsfWeights::random(&mut rng, n_out, n_in, k, rho).unwrap();
+        let sigma = DesignPoint::new(64, 64, 16, 64);
+        let wg = bench_auto(
+            &format!("sim: TiWGen generate {label} (ρ=.5)"),
+            500,
+            || WGenSim::new(&sigma, &hw).generate().vector_macs,
+        );
+        rows.push(OvsfRow {
+            name: "wgen_generate".into(),
+            shape: label.into(),
+            l,
+            rho,
+            before_ns_per_layer: None, // no dense counterpart for the walk
+            after_ns_per_layer: wg.mean_ns,
+            layers_per_s: 1e9 / wg.mean_ns,
+        });
+    }
+    rows
+}
 
 fn main() {
     println!("== L3 hot-path microbenches ==");
@@ -48,13 +252,6 @@ fn main() {
         simulate_network_timing(&sigma, &plat, 4, true, &net, &profile).len()
     });
 
-    let mut rng = Xoshiro256::seed_from_u64(1);
-    let hw = HwOvsfWeights::random(&mut rng, 64, 64, 3, 0.5).unwrap();
-    let wg_sigma = DesignPoint::new(64, 64, 16, 64);
-    bench_auto("sim: TiWGen generate 64×64×3×3 (ρ=.5)", 900, || {
-        WGenSim::new(&wg_sigma, &hw).generate().vector_macs
-    });
-
     let basis = OvsfBasis::new(16).unwrap();
     bench_auto("sim: OVSF FIFO/aligner 10k emits (M=48)", 400, || {
         let mut g = OvsfGenerator::new(&basis, 8, 48);
@@ -70,16 +267,14 @@ fn main() {
     let basis256 = OvsfBasis::new(256).unwrap();
     let mut rng2 = Xoshiro256::seed_from_u64(2);
     let target = rng2.normal_vec(256);
-    bench_auto("ovsf: project+reconstruct L=256", 400, || {
+    bench_auto("ovsf: project+reconstruct L=256 (FWHT)", 400, || {
         let alphas = unzipfpga::ovsf::regress::project(&basis256, &target);
-        let sel = unzipfpga::ovsf::basis::select(
-            unzipfpga::ovsf::basis::BasisSelection::IterativeDrop,
-            &basis256,
-            &alphas,
-            0.5,
-        );
+        let sel = select(BasisSelection::IterativeDrop, &basis256, &alphas, 0.5);
         unzipfpga::ovsf::regress::reconstruct_vec(&basis256, &sel)[0]
     });
+
+    let rows = bench_ovsf_weights_generation();
+    write_bench_json(&rows);
 
     bench_auto("autotune: ResNet18 @ 2x end-to-end", 2000, || {
         autotune(&cfg, &plat, 2, &net).unwrap().final_inf_per_s

@@ -44,6 +44,11 @@ impl Default for DseConfig {
 }
 
 impl DseConfig {
+    /// Size of the raw candidate grid, without materialising it.
+    pub fn n_candidates(&self) -> usize {
+        self.m.len() * self.t_r.len() * self.t_p.len() * self.t_c.len()
+    }
+
     /// Enumerate the raw candidate grid.
     pub fn candidates(&self) -> Vec<DesignPoint> {
         let mut out =
@@ -81,10 +86,18 @@ pub struct DseResult {
 pub struct SweepPoint {
     /// The design point.
     pub sigma: DesignPoint,
-    /// Throughput in inf/s.
-    pub inf_per_s: f64,
+    /// Full predicted performance (per-layer figures included), so the
+    /// sweep's argmax can be returned without re-running the model.
+    pub perf: NetworkPerf,
     /// Resource usage.
     pub usage: ResourceUsage,
+}
+
+impl SweepPoint {
+    /// Throughput in inf/s (shorthand for `perf.inf_per_s`).
+    pub fn inf_per_s(&self) -> f64 {
+        self.perf.inf_per_s
+    }
 }
 
 /// Evaluate every feasible candidate; returns all of them (unsorted).
@@ -128,7 +141,7 @@ pub fn sweep(
                     let p = perf.network_perf(&sigma, net, profile);
                     local.push(SweepPoint {
                         sigma,
-                        inf_per_s: p.inf_per_s,
+                        perf: p,
                         usage,
                     });
                 }
@@ -151,22 +164,22 @@ pub fn optimise(
     profile: &RatioProfile,
     selective_pes: bool,
 ) -> Result<DseResult> {
-    let explored = cfg.candidates().len();
+    // One enumeration: the grid size is computed without materialising the
+    // candidates a second time, and the winner's NetworkPerf rides along in
+    // its SweepPoint — no re-evaluation of the argmax.
+    let explored = cfg.n_candidates();
     let points = sweep(cfg, platform, bw_mult, net, profile, selective_pes);
     let feasible = points.len();
     let best = points
         .into_iter()
-        .max_by(|a, b| a.inf_per_s.partial_cmp(&b.inf_per_s).unwrap())
+        .max_by(|a, b| a.inf_per_s().partial_cmp(&b.inf_per_s()).unwrap())
         .ok_or_else(|| Error::NoFeasibleDesign {
             network: net.name.clone(),
             platform: platform.name.to_string(),
         })?;
-    let mut perf_model = PerfModel::new(platform.clone(), bw_mult);
-    perf_model.selective_pes = selective_pes;
-    let perf = perf_model.network_perf(&best.sigma, net, profile);
     Ok(DseResult {
         sigma: best.sigma,
-        perf,
+        perf: best.perf,
         usage: best.usage,
         explored,
         feasible,
@@ -177,6 +190,12 @@ pub fn optimise(
 mod tests {
     use super::*;
     use crate::workload::resnet;
+
+    #[test]
+    fn n_candidates_matches_enumeration() {
+        let cfg = DseConfig::default();
+        assert_eq!(cfg.n_candidates(), cfg.candidates().len());
+    }
 
     #[test]
     fn finds_feasible_optimum_on_z7045() {
@@ -207,7 +226,7 @@ mod tests {
         let pts = sweep(&cfg, &Platform::z7045(), 4, &net, &profile, true);
         let best_sweep = pts
             .iter()
-            .map(|p| p.inf_per_s)
+            .map(|p| p.inf_per_s())
             .fold(f64::MIN, f64::max);
         let r = optimise(&cfg, &Platform::z7045(), 4, &net, &profile, true).unwrap();
         assert!((r.perf.inf_per_s - best_sweep).abs() < 1e-9);

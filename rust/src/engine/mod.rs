@@ -35,11 +35,15 @@ pub mod analytical;
 pub mod backend;
 pub mod pjrt;
 pub mod sim;
+pub mod wcache;
 
 pub use analytical::AnalyticalBackend;
 pub use backend::{EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome};
 pub use pjrt::{PjrtBackend, PjrtConfig};
 pub use sim::SimBackend;
+pub use wcache::{WeightsCache, WeightsKey};
+
+use std::sync::Arc;
 
 use crate::arch::{DesignPoint, Platform};
 use crate::coordinator::pool::{PoolConfig, RequestExecutor, ServerPool};
@@ -84,15 +88,11 @@ impl Engine {
 
     /// Construct an engine from a validated plan and a backend kind. The
     /// backend's `plan` hook runs here (artifact compilation, cost
-    /// precomputation).
+    /// precomputation). The simulator backend gets a private weights
+    /// cache; use [`EngineBuilder::weights_cache`] to share one.
     pub fn from_plan(plan: EnginePlan, kind: &BackendKind) -> Result<Self> {
-        let mut backend: Box<dyn ExecutionBackend> = match kind {
-            BackendKind::Analytical => Box::new(AnalyticalBackend::new()),
-            BackendKind::Simulator => Box::new(SimBackend::new()),
-            BackendKind::Pjrt(cfg) => Box::new(PjrtBackend::new(cfg.clone())?),
-        };
-        backend.plan(&plan)?;
-        Ok(Self { plan, backend })
+        let backend = make_backend(kind, &Arc::new(WeightsCache::new()))?;
+        Self::with_backend(plan, backend)
     }
 
     /// Construct an engine from a validated plan and a caller-provided
@@ -152,6 +152,19 @@ pub struct EngineBuilder {
     network: Option<Network>,
     profile: Option<RatioProfile>,
     backend: Option<BackendKind>,
+    weights_cache: Option<Arc<WeightsCache>>,
+}
+
+/// Instantiate a backend of `kind`, wiring the simulator onto `cache`.
+fn make_backend(
+    kind: &BackendKind,
+    cache: &Arc<WeightsCache>,
+) -> Result<Box<dyn ExecutionBackend>> {
+    Ok(match kind {
+        BackendKind::Analytical => Box::new(AnalyticalBackend::new()),
+        BackendKind::Simulator => Box::new(SimBackend::with_cache(Arc::clone(cache))),
+        BackendKind::Pjrt(cfg) => Box::new(PjrtBackend::new(cfg.clone())?),
+    })
 }
 
 impl EngineBuilder {
@@ -188,6 +201,14 @@ impl EngineBuilder {
     /// Execution backend (default: [`BackendKind::Analytical`]).
     pub fn backend(mut self, backend: BackendKind) -> Self {
         self.backend = Some(backend);
+        self
+    }
+
+    /// Share a generated-weights cache across every engine built from this
+    /// builder (default: [`build`](Self::build) gets a private cache;
+    /// [`build_pool`](Self::build_pool) always shares one across workers).
+    pub fn weights_cache(mut self, cache: Arc<WeightsCache>) -> Self {
+        self.weights_cache = Some(cache);
         self
     }
 
@@ -265,7 +286,10 @@ impl EngineBuilder {
     pub fn build(self) -> Result<Engine> {
         let plan = self.plan()?;
         let kind = self.backend.unwrap_or(BackendKind::Analytical);
-        Engine::from_plan(plan, &kind)
+        let cache = self
+            .weights_cache
+            .unwrap_or_else(|| Arc::new(WeightsCache::new()));
+        Engine::with_backend(plan, make_backend(&kind, &cache)?)
     }
 
     /// Validate once, then stand up a multi-worker
@@ -300,9 +324,16 @@ impl EngineBuilder {
             // Analytical/simulator backends are cheap to construct.
             _ => drop(Engine::from_plan(plan.clone(), &kind)?),
         }
+        // One generated-weights cache for the whole pool: every worker's
+        // simulator backend shares it, so each layer's weights are
+        // reconstructed at most once per process, not once per worker.
+        let cache = self
+            .weights_cache
+            .unwrap_or_else(|| Arc::new(WeightsCache::new()));
         let schedule = plan.schedule.clone();
         ServerPool::start(schedule, cfg, move |_worker| EngineExecutor {
-            engine: Engine::from_plan(plan.clone(), &kind)
+            engine: make_backend(&kind, &cache)
+                .and_then(|backend| Engine::with_backend(plan.clone(), backend))
                 .expect("backend validated on the caller thread"),
         })
     }
@@ -372,6 +403,26 @@ mod tests {
             msg.contains("make artifacts") || msg.contains("pjrt"),
             "actionable: {msg}"
         );
+    }
+
+    #[test]
+    fn builder_shares_weights_cache_across_engines() {
+        let cache = Arc::new(WeightsCache::new());
+        let b = builder()
+            .backend(BackendKind::Simulator)
+            .weights_cache(Arc::clone(&cache));
+        let net = resnet::resnet18();
+        let n_ovsf = net.layers.iter().filter(|l| l.ovsf).count() as u64;
+        let mut e1 = b.clone().build().unwrap();
+        let mut e2 = b.build().unwrap();
+        e1.infer_timing().unwrap();
+        assert_eq!(cache.misses(), n_ovsf);
+        e2.infer_timing().unwrap();
+        e1.infer_timing().unwrap();
+        assert_eq!(cache.misses(), n_ovsf, "one reconstruction per layer");
+        // e2's cold walk hit the shared cache; e1's warm walk short-circuits
+        // on its own per-layer Arc without touching the lock.
+        assert_eq!(cache.hits(), n_ovsf);
     }
 
     #[test]

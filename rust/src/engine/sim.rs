@@ -1,33 +1,93 @@
 //! [`SimBackend`] — executes the plan on the cycle-level simulator
 //! ([`LayerSim`] walking the tile schedule, with the OVSF generator's
-//! Alg. 1 cycle counts for on-the-fly layers). Timing only; the numeric
-//! TiWGen/PE-array path stays available through `sim::LayerSim` directly.
+//! Alg. 1 cycle counts for on-the-fly layers) and realises each OVSF
+//! layer's numeric weights through the engine-level
+//! [`WeightsCache`](crate::engine::wcache::WeightsCache): the dense GEMM
+//! weights a layer's α's reconstruct to are generated at most once per
+//! `(model, layer, σ, ρ)` and shared across requests (and, via
+//! [`EngineBuilder::build_pool`](crate::engine::EngineBuilder::build_pool),
+//! across pool workers).
+
+use std::sync::Arc;
 
 use crate::engine::backend::{
     EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome,
 };
+use crate::engine::wcache::{WeightsCache, WeightsKey};
 use crate::error::{Error, Result};
 use crate::sim::engine::LayerSim;
+use crate::sim::hw_weights::HwOvsfWeights;
 use crate::util::ceil_div;
+use crate::util::prng::Xoshiro256;
+use crate::workload::layer::Layer;
 
 /// Backend over [`LayerSim`]: each layer's tile schedule is walked with
-/// deterministic cycle counters at `execute_layer` time.
+/// deterministic cycle counters at `execute_layer` time; OVSF layers
+/// additionally materialise their generated weights through the cache.
 #[derive(Default)]
 pub struct SimBackend {
     plan: Option<EnginePlan>,
     executed: Vec<LayerCost>,
+    cache: Arc<WeightsCache>,
+    /// Per-layer handle onto the cached generated weights (engine `P×C`
+    /// GEMM layout), populated lazily on first walk of each OVSF layer.
+    generated: Vec<Option<Arc<Vec<f32>>>>,
 }
 
 impl SimBackend {
-    /// New, unplanned backend.
+    /// New backend with a private weights cache.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// New backend over a shared weights cache (one cache across all pool
+    /// workers ⇒ each layer's weights are reconstructed once per process).
+    pub fn with_cache(cache: Arc<WeightsCache>) -> Self {
+        Self {
+            cache,
+            ..Self::default()
+        }
+    }
+
+    /// The weights cache this backend generates through.
+    pub fn cache(&self) -> &Arc<WeightsCache> {
+        &self.cache
+    }
+
+    /// Generated weights of layer `idx` (engine `P×C` layout), if the
+    /// layer is OVSF and has been executed at least once.
+    pub fn generated_weights(&self, idx: usize) -> Option<Arc<Vec<f32>>> {
+        self.generated.get(idx).and_then(|w| w.clone())
     }
 
     fn planned(&self) -> Result<&EnginePlan> {
         self.plan
             .as_ref()
             .ok_or_else(|| Error::InvalidConfig("backend used before plan()".into()))
+    }
+
+    /// Deterministic α's for a layer (the repro has no trained ImageNet
+    /// checkpoints; every worker must agree on the synthetic weights so the
+    /// cache is coherent) reconstructed to dense GEMM weights through the
+    /// matrix-free OVSF path.
+    fn reconstruct_layer(model: &str, idx: usize, layer: &Layer, rho: f64) -> Vec<f32> {
+        let mut seed: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in model.bytes().chain(layer.name.bytes()) {
+            seed ^= b as u64;
+            seed = seed.wrapping_mul(0x1000_0000_01b3);
+        }
+        seed ^= (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let hw = HwOvsfWeights::random(
+            &mut rng,
+            layer.n_out as usize,
+            layer.n_in as usize,
+            layer.k as usize,
+            rho,
+        )
+        .expect("layer geometry validated at plan time");
+        hw.dense_gemm()
+            .expect("chunk geometry validated at plan time")
     }
 }
 
@@ -37,6 +97,7 @@ impl ExecutionBackend for SimBackend {
     }
 
     fn plan(&mut self, plan: &EnginePlan) -> Result<()> {
+        self.generated = vec![None; plan.n_layers()];
         self.plan = Some(plan.clone());
         self.executed.clear();
         Ok(())
@@ -51,9 +112,10 @@ impl ExecutionBackend for SimBackend {
             ))
         })?;
         let sim = LayerSim::new(&plan.sigma, &plan.platform, plan.bw_mult);
+        let on_the_fly = layer.ovsf && plan.sigma.has_wgen();
         // Cycle count per Alg. 1 without materialising weights:
         // n_basis · subtiles · p_tiles (validated == WGenSim walk).
-        let trace = if layer.ovsf && plan.sigma.has_wgen() {
+        let trace = if on_the_fly {
             let cycles = layer.basis_per_chunk(plan.profile.rho(idx))
                 * plan.sigma.subtiles_per_tile()
                 * ceil_div(layer.gemm().p, plan.sigma.t_p);
@@ -61,12 +123,31 @@ impl ExecutionBackend for SimBackend {
         } else {
             sim.run_timing(layer, None)
         };
+        // Realise the generated weights through the cache: at most one
+        // reconstruction per (model, layer, σ, ρ) across every request —
+        // and every worker, when the cache is shared. Once this backend
+        // holds the Arc, repeat requests are lock- and allocation-free.
+        let weights = if on_the_fly && self.generated[idx].is_none() {
+            let rho = plan.profile.rho(idx);
+            let shape = (layer.n_in, layer.n_out, layer.k);
+            let key = WeightsKey::new(plan.network.name.clone(), idx, shape, plan.sigma, rho);
+            let model = &plan.network.name;
+            Some(
+                self.cache
+                    .get_or_generate(key, || Self::reconstruct_layer(model, idx, layer, rho)),
+            )
+        } else {
+            None
+        };
         let outcome = LayerOutcome {
             name: trace.name.clone(),
             cycles: trace.total_cycles as f64,
             bound: trace.bound,
             output: None,
         };
+        if let Some(w) = weights {
+            self.generated[idx] = Some(w);
+        }
         self.executed.push(LayerCost {
             name: trace.name,
             cycles: trace.total_cycles as f64,
@@ -85,5 +166,98 @@ impl ExecutionBackend for SimBackend {
             total_cycles,
             latency_s: total_cycles / clock_hz,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{DesignPoint, Platform};
+    use crate::engine::Engine;
+    use crate::workload::{resnet, RatioProfile};
+
+    fn test_plan() -> EnginePlan {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        Engine::builder()
+            .platform(Platform::z7045())
+            .bandwidth(4)
+            .design_point(DesignPoint::new(64, 64, 16, 48))
+            .network(net)
+            .profile(profile)
+            .plan()
+            .unwrap()
+    }
+
+    fn run_all_layers(backend: &mut SimBackend, plan: &EnginePlan) {
+        for idx in 0..plan.n_layers() {
+            backend.execute_layer(idx, &[]).unwrap();
+        }
+        backend.finish().unwrap();
+    }
+
+    #[test]
+    fn reconstructs_each_layer_at_most_once_across_requests() {
+        let plan = test_plan();
+        let n_ovsf = plan.network.layers.iter().filter(|l| l.ovsf).count() as u64;
+        assert!(n_ovsf > 0);
+        let mut backend = SimBackend::new();
+        backend.plan(&plan).unwrap();
+        run_all_layers(&mut backend, &plan);
+        assert_eq!(backend.cache().misses(), n_ovsf, "first request generates");
+        assert_eq!(backend.cache().hits(), 0);
+        for _ in 0..3 {
+            run_all_layers(&mut backend, &plan);
+        }
+        assert_eq!(
+            backend.cache().misses(),
+            n_ovsf,
+            "repeat requests must not regenerate"
+        );
+        // Warm requests short-circuit on the backend's own Arc — they never
+        // even touch the shared cache lock.
+        assert_eq!(backend.cache().hits(), 0);
+    }
+
+    #[test]
+    fn generated_weights_have_gemm_shape_and_dense_layers_none() {
+        let plan = test_plan();
+        let mut backend = SimBackend::new();
+        backend.plan(&plan).unwrap();
+        run_all_layers(&mut backend, &plan);
+        for (idx, layer) in plan.network.layers.iter().enumerate() {
+            match backend.generated_weights(idx) {
+                Some(w) => {
+                    assert!(layer.ovsf);
+                    let g = layer.gemm();
+                    assert_eq!(w.len() as u64, g.p * g.c, "layer {}", layer.name);
+                }
+                None => assert!(!layer.ovsf, "OVSF layer {} not generated", layer.name),
+            }
+        }
+        assert!(backend.cache().resident_bytes() > 0);
+    }
+
+    #[test]
+    fn shared_cache_spans_backends_like_pool_workers() {
+        let plan = test_plan();
+        let n_ovsf = plan.network.layers.iter().filter(|l| l.ovsf).count() as u64;
+        let cache = Arc::new(WeightsCache::new());
+        let mut a = SimBackend::with_cache(Arc::clone(&cache));
+        let mut b = SimBackend::with_cache(Arc::clone(&cache));
+        a.plan(&plan).unwrap();
+        b.plan(&plan).unwrap();
+        run_all_layers(&mut a, &plan);
+        run_all_layers(&mut b, &plan);
+        assert_eq!(cache.misses(), n_ovsf, "second worker reuses the cache");
+        assert_eq!(cache.hits(), n_ovsf);
+        // Both workers see identical weights (deterministic synthesis).
+        for idx in 0..plan.n_layers() {
+            match (a.generated_weights(idx), b.generated_weights(idx)) {
+                (Some(x), Some(y)) => assert!(Arc::ptr_eq(&x, &y)),
+                (None, None) => {}
+                _ => panic!("workers disagree on layer {idx}"),
+            }
+        }
     }
 }

@@ -1,0 +1,199 @@
+//! Generated-weights cache for the engine (paper's on-the-fly generation,
+//! amortised across serving).
+//!
+//! CNN-WGen regenerates weights *per tile* in hardware; in the software
+//! engine the equivalent reconstruction used to be redone for every
+//! request that walked a layer. The cache keys the reconstructed dense
+//! GEMM weights by `(model, layer, design point, ρ)` so a layer's weights
+//! are generated exactly once per configuration — across repeated requests
+//! *and* across [`ServerPool`](crate::coordinator::pool::ServerPool)
+//! workers sharing the cache through an `Arc`.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::arch::DesignPoint;
+
+/// Identity of one generated-weights entry. `(model, layer, shape, ρ)`
+/// determine the numerics (TiWGen tiling is numerics-invariant — a tested
+/// property); σ is part of the key per the engine's (model, layer, design
+/// point) cache contract, which means engines differing *only* in σ do not
+/// share entries — a deliberate trade of some duplication for per-plan
+/// identity. The layer shape is part of the key so two same-named networks
+/// with different geometry can never alias each other's weights.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct WeightsKey {
+    /// Network name (the model identity).
+    pub model: String,
+    /// Layer index within the network.
+    pub layer: usize,
+    /// Layer geometry `(n_in, n_out, k)`.
+    pub shape: (u64, u64, u64),
+    /// Design point σ the weights are generated for.
+    pub sigma: DesignPoint,
+    /// Layer OVSF ratio ρ, as raw f64 bits (`f64` is not `Eq`/`Hash`).
+    pub rho_bits: u64,
+}
+
+impl WeightsKey {
+    /// Build a key from the plain configuration values.
+    pub fn new(
+        model: impl Into<String>,
+        layer: usize,
+        shape: (u64, u64, u64),
+        sigma: DesignPoint,
+        rho: f64,
+    ) -> Self {
+        Self {
+            model: model.into(),
+            layer,
+            shape,
+            sigma,
+            rho_bits: rho.to_bits(),
+        }
+    }
+}
+
+/// One cache slot: filled exactly once, readable lock-free afterwards.
+type Slot = Arc<OnceLock<Arc<Vec<f32>>>>;
+
+/// Thread-safe generated-weights cache with hit/miss accounting.
+#[derive(Debug, Default)]
+pub struct WeightsCache {
+    entries: Mutex<HashMap<WeightsKey, Slot>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl WeightsCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the weights for `key`, running `generate` only if absent.
+    ///
+    /// The map lock is held only to resolve the key to its slot;
+    /// generation runs outside it, so pool workers warming *different*
+    /// layers proceed in parallel while racers on the *same* key block on
+    /// that key's `OnceLock` — each layer is still reconstructed at most
+    /// once per key.
+    pub fn get_or_generate(
+        &self,
+        key: WeightsKey,
+        generate: impl FnOnce() -> Vec<f32>,
+    ) -> Arc<Vec<f32>> {
+        let (slot, fresh) = {
+            let mut map = self.entries.lock().expect("weights cache poisoned");
+            match map.entry(key) {
+                Entry::Occupied(e) => (Arc::clone(e.get()), false),
+                Entry::Vacant(v) => (Arc::clone(v.insert(Arc::new(OnceLock::new()))), true),
+            }
+        };
+        if fresh {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        Arc::clone(slot.get_or_init(|| Arc::new(generate())))
+    }
+
+    /// Lookups served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to generate (== number of reconstructions run).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of resident entries.
+    pub fn len(&self) -> usize {
+        self.entries.lock().expect("weights cache poisoned").len()
+    }
+
+    /// `true` when nothing has been generated yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes of weight data held by the cache (in-flight slots count 0).
+    pub fn resident_bytes(&self) -> usize {
+        self.entries
+            .lock()
+            .expect("weights cache poisoned")
+            .values()
+            .filter_map(|slot| slot.get())
+            .map(|w| w.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
+
+    /// Drop every entry (counters are preserved).
+    pub fn clear(&self) {
+        self.entries.lock().expect("weights cache poisoned").clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(layer: usize) -> WeightsKey {
+        WeightsKey::new("net", layer, (4, 8, 3), DesignPoint::new(8, 16, 4, 4), 0.5)
+    }
+
+    #[test]
+    fn generates_once_per_key() {
+        let cache = WeightsCache::new();
+        let mut calls = 0;
+        for _ in 0..3 {
+            let v = cache.get_or_generate(key(0), || {
+                calls += 1;
+                vec![1.0, 2.0]
+            });
+            assert_eq!(v.as_slice(), &[1.0, 2.0]);
+        }
+        assert_eq!(calls, 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.resident_bytes(), 8);
+    }
+
+    #[test]
+    fn distinct_keys_are_distinct_entries() {
+        let cache = WeightsCache::new();
+        cache.get_or_generate(key(0), || vec![0.0]);
+        cache.get_or_generate(key(1), || vec![1.0]);
+        let mut k = key(0);
+        k.rho_bits = 0.25f64.to_bits();
+        cache.get_or_generate(k, || vec![2.0]);
+        // Same name/index/σ/ρ but different geometry ⇒ distinct entry.
+        let mut k = key(0);
+        k.shape = (8, 8, 3);
+        cache.get_or_generate(k, || vec![3.0]);
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.misses(), 4);
+        assert_eq!(cache.hits(), 0);
+    }
+
+    #[test]
+    fn shared_across_threads_generates_once() {
+        let cache = Arc::new(WeightsCache::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = Arc::clone(&cache);
+            handles.push(std::thread::spawn(move || {
+                c.get_or_generate(key(7), || vec![7.0]).len()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 1);
+        }
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 3);
+    }
+}

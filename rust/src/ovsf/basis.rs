@@ -73,23 +73,19 @@ pub fn select(
         BasisSelection::IterativeDrop => {
             // Dropping the smallest |α| one at a time is equivalent to
             // keeping the `keep` largest |α| (orthogonality ⇒ no re-fit
-            // needed between drops), but we still implement it iteratively
-            // to mirror the paper's procedure and to keep ties stable.
-            let mut live: Vec<usize> = (0..l).collect();
-            while live.len() > keep {
-                let (pos, _) = live
-                    .iter()
-                    .enumerate()
-                    .min_by(|(_, &a), (_, &b)| {
-                        alphas[a]
-                            .abs()
-                            .partial_cmp(&alphas[b].abs())
-                            .unwrap()
-                            .then(b.cmp(&a)) // tie: drop the later index
-                    })
-                    .expect("non-empty");
-                live.remove(pos);
-            }
+            // needed between drops), with the iterative tie rule — equal
+            // |α| drops the later index first — mapping to "prefer the
+            // earlier index". One O(L log L) sort instead of the former
+            // O(L²) scan-and-remove loop (the §Perf regression-stage fix).
+            let mut order: Vec<usize> = (0..l).collect();
+            order.sort_unstable_by(|&a, &b| {
+                alphas[b]
+                    .abs()
+                    .partial_cmp(&alphas[a].abs())
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            let mut live = order[..keep].to_vec();
             live.sort_unstable();
             SelectedBasis {
                 alphas: live.iter().map(|&i| alphas[i]).collect(),
@@ -106,20 +102,9 @@ pub fn residual_energy(
     sel: &SelectedBasis,
     target: &[f32],
 ) -> f64 {
-    let l = basis.len();
-    assert_eq!(target.len(), l);
-    let mut recon = vec![0.0f64; l];
-    for (k, &j) in sel.indices.iter().enumerate() {
-        let a = sel.alphas[k] as f64;
-        for (t, r) in recon.iter_mut().enumerate() {
-            *r += a * basis.at(j, t) as f64;
-        }
-    }
-    target
-        .iter()
-        .zip(&recon)
-        .map(|(&v, &r)| (v as f64 - r).powi(2))
-        .sum()
+    // Selection-aware: `E = n · mse` via the single-FWHT analytic form —
+    // no O(L·|sel|) dense accumulation.
+    crate::ovsf::regress::mse(basis, sel, target) * target.len() as f64
 }
 
 #[cfg(test)]
@@ -136,6 +121,45 @@ mod tests {
         let s = select(BasisSelection::Sequential, &b, &alphas, 0.5);
         assert_eq!(s.indices, vec![0, 1, 2, 3]);
         assert_eq!(s.alphas, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    /// The paper's literal procedure: drop the smallest |α| one at a time
+    /// (tie: later index first). Oracle for the sort-based fast path.
+    fn iterative_drop_reference(alphas: &[f32], keep: usize) -> Vec<usize> {
+        let mut live: Vec<usize> = (0..alphas.len()).collect();
+        while live.len() > keep {
+            let (pos, _) = live
+                .iter()
+                .enumerate()
+                .min_by(|(_, &a), (_, &b)| {
+                    alphas[a]
+                        .abs()
+                        .partial_cmp(&alphas[b].abs())
+                        .unwrap()
+                        .then(b.cmp(&a))
+                })
+                .expect("non-empty");
+            live.remove(pos);
+        }
+        live.sort_unstable();
+        live
+    }
+
+    #[test]
+    fn sort_based_drop_matches_iterative_reference() {
+        forall("select-sort-vs-iterative", 48, |rng| {
+            let l = 1usize << rng.gen_range(2, 7); // 4..64
+            let b = OvsfBasis::new(l).unwrap();
+            // Quantised α's to exercise the tie rule frequently.
+            let alphas: Vec<f32> = (0..l)
+                .map(|_| (rng.gen_range(0, 6) as f32 - 3.0) * 0.5)
+                .collect();
+            let rho = *rng.choose(&[0.25, 0.5, 0.75, 1.0]);
+            let fast = select(BasisSelection::IterativeDrop, &b, &alphas, rho);
+            let keep = crate::util::n_basis(rho, l);
+            let expect = iterative_drop_reference(&alphas, keep);
+            assert_eq!(fast.indices, expect, "L={l} ρ={rho} α={alphas:?}");
+        });
     }
 
     #[test]

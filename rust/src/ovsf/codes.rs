@@ -1,49 +1,38 @@
-//! OVSF code construction (paper Eq. 1).
+//! OVSF code construction (paper Eq. 1) — matrix-free.
 //!
 //! `H_1 = [1]`, `H_{2k} = H_2 ⊗ H_k` (Sylvester construction). Each row of
 //! `H_L` is an OVSF code of length `L = 2^k`: binary (±1) and mutually
 //! orthogonal, so the `L` rows form a basis of `R^L`.
 //!
-//! Two representations are kept: `i8` (±1) rows for numerics, and bit-packed
-//! `u64` blocks (1 ⇒ +1, 0 ⇒ −1) mirroring how the hardware OVSF FIFO
-//! stores codes on-chip (1 bit/element).
+//! The Sylvester recursion closes to `H[j][t] = (−1)^popcount(j & t)`, so
+//! no `L×L` matrix is ever materialised: [`OvsfBasis::new`] is O(1) and
+//! element access [`OvsfBasis::sign`] is a single popcount. The former
+//! dense construction (64 MB of i8 at L=8192) survives only as the
+//! `#[cfg(test)]` oracle [`OvsfBasis::dense_codes`] that cross-checks the
+//! closed form.
+//!
+//! Two on-demand representations are emitted: `i8` (±1) rows for numerics,
+//! and bit-packed `u64` blocks (1 ⇒ +1, 0 ⇒ −1) mirroring how the hardware
+//! OVSF FIFO stores codes on-chip (1 bit/element).
 
 use crate::error::{Error, Result};
 use crate::util::is_pow2;
 
-/// A full OVSF basis of length `L` (all `L` codes).
-#[derive(Clone, Debug)]
+/// A full OVSF basis of length `L` (all `L` codes), represented implicitly:
+/// only `L` is stored; every element is computed on demand.
+#[derive(Clone, Copy, Debug)]
 pub struct OvsfBasis {
     len: usize,
-    /// Row-major ±1 entries: `codes[j*len + t]` is element `t` of code `j`.
-    codes: Vec<i8>,
 }
 
 impl OvsfBasis {
     /// Construct the length-`len` OVSF basis. `len` must be a power of two.
+    /// O(1): nothing is materialised.
     pub fn new(len: usize) -> Result<Self> {
         if !is_pow2(len) {
             return Err(Error::InvalidBasisLength(len));
         }
-        // Sylvester expansion, iteratively doubling.
-        let mut codes = vec![1i8];
-        let mut cur = 1usize;
-        while cur < len {
-            let next = cur * 2;
-            let mut out = vec![0i8; next * next];
-            for r in 0..cur {
-                for c in 0..cur {
-                    let v = codes[r * cur + c];
-                    out[r * next + c] = v; // top-left
-                    out[r * next + cur + c] = v; // top-right
-                    out[(cur + r) * next + c] = v; // bottom-left
-                    out[(cur + r) * next + cur + c] = -v; // bottom-right
-                }
-            }
-            codes = out;
-            cur = next;
-        }
-        Ok(Self { len, codes })
+        Ok(Self { len })
     }
 
     /// Basis length `L` (= number of codes).
@@ -56,37 +45,69 @@ impl OvsfBasis {
         self.len == 0
     }
 
-    /// The `j`-th code as a ±1 slice.
-    pub fn code(&self, j: usize) -> &[i8] {
+    /// Sign of code `j` at position `t` without bounds checks on the basis
+    /// geometry: `(−1)^popcount(j & t)` (Sylvester closed form).
+    #[inline(always)]
+    pub fn sign(j: usize, t: usize) -> i8 {
+        1 - 2 * ((j & t).count_ones() & 1) as i8
+    }
+
+    /// The `j`-th code as a ±1 vector (emitted on demand).
+    pub fn code(&self, j: usize) -> Vec<i8> {
         assert!(j < self.len, "code index {j} out of range (L={})", self.len);
-        &self.codes[j * self.len..(j + 1) * self.len]
+        (0..self.len).map(|t| Self::sign(j, t)).collect()
     }
 
     /// Element `(j, t)` — sign of code `j` at position `t`.
     #[inline]
     pub fn at(&self, j: usize, t: usize) -> i8 {
-        self.codes[j * self.len + t]
+        debug_assert!(j < self.len && t < self.len);
+        Self::sign(j, t)
     }
 
-    /// Inner product of two codes (orthogonality: `L·δ_ij`).
+    /// Inner product of two codes (orthogonality: `L·δ_ij`), computed on
+    /// the packed-u64 representation: agreements vs disagreements fall out
+    /// of `popcount(packed_i XOR packed_j)` per 64-element block.
     pub fn dot(&self, i: usize, j: usize) -> i64 {
+        assert!(i < self.len && j < self.len);
+        let pi = self.packed(i);
+        let pj = self.packed(j);
+        // packed() leaves bits ≥ len zero, so the tail word needs no mask:
+        // the xor's high bits are already 0.
+        let disagree: u32 = pi.iter().zip(&pj).map(|(&a, &b)| (a ^ b).count_ones()).sum();
+        self.len as i64 - 2 * disagree as i64
+    }
+
+    /// Scalar reference for [`dot`](Self::dot): the i8-by-i8 O(L) loop.
+    /// Kept for the equivalence test.
+    #[cfg(test)]
+    fn dot_scalar(&self, i: usize, j: usize) -> i64 {
         self.code(i)
             .iter()
             .zip(self.code(j))
-            .map(|(&a, &b)| (a as i64) * (b as i64))
+            .map(|(&a, b)| (a as i64) * (b as i64))
             .sum()
     }
 
     /// Bit-packed form of code `j`: bit `t` of the result is 1 iff the
     /// element is +1. This is the on-chip storage format of the hardware
-    /// OVSF FIFO (paper §4.2.2): 1 bit per element.
+    /// OVSF FIFO (paper §4.2.2): 1 bit per element. Emitted without
+    /// materialising the ±1 row.
     pub fn packed(&self, j: usize) -> Vec<u64> {
-        let words = (self.len + 63) / 64;
+        assert!(j < self.len, "code index {j} out of range (L={})", self.len);
+        let words = self.len.div_ceil(64);
         let mut out = vec![0u64; words];
-        for (t, &v) in self.code(j).iter().enumerate() {
-            if v > 0 {
-                out[t / 64] |= 1u64 << (t % 64);
+        for (w, word) in out.iter_mut().enumerate() {
+            let base = w * 64;
+            let bits = (self.len - base).min(64);
+            let mut acc = 0u64;
+            for b in 0..bits {
+                // +1 ⇔ even parity of j & t.
+                if (j & (base + b)).count_ones() & 1 == 0 {
+                    acc |= 1u64 << b;
+                }
             }
+            *word = acc;
         }
         out
     }
@@ -141,6 +162,35 @@ impl OvsfBasis {
         }
         Ok(code)
     }
+
+    /// Dense Sylvester materialisation — the O(L²) oracle the matrix-free
+    /// closed form is verified against. Test-only: production code must
+    /// never materialise the basis.
+    #[cfg(test)]
+    pub(crate) fn dense_codes(len: usize) -> Result<Vec<i8>> {
+        if !is_pow2(len) {
+            return Err(Error::InvalidBasisLength(len));
+        }
+        // Sylvester expansion, iteratively doubling.
+        let mut codes = vec![1i8];
+        let mut cur = 1usize;
+        while cur < len {
+            let next = cur * 2;
+            let mut out = vec![0i8; next * next];
+            for r in 0..cur {
+                for c in 0..cur {
+                    let v = codes[r * cur + c];
+                    out[r * next + c] = v; // top-left
+                    out[r * next + cur + c] = v; // top-right
+                    out[(cur + r) * next + c] = v; // bottom-left
+                    out[(cur + r) * next + cur + c] = -v; // bottom-right
+                }
+            }
+            codes = out;
+            cur = next;
+        }
+        Ok(codes)
+    }
 }
 
 #[cfg(test)]
@@ -157,17 +207,34 @@ mod tests {
     #[test]
     fn h2_matches_paper() {
         let b = OvsfBasis::new(2).unwrap();
-        assert_eq!(b.code(0), &[1, 1]);
-        assert_eq!(b.code(1), &[1, -1]);
+        assert_eq!(b.code(0), vec![1, 1]);
+        assert_eq!(b.code(1), vec![1, -1]);
     }
 
     #[test]
     fn h4_matches_kronecker() {
         let b = OvsfBasis::new(4).unwrap();
-        assert_eq!(b.code(0), &[1, 1, 1, 1]);
-        assert_eq!(b.code(1), &[1, -1, 1, -1]);
-        assert_eq!(b.code(2), &[1, 1, -1, -1]);
-        assert_eq!(b.code(3), &[1, -1, -1, 1]);
+        assert_eq!(b.code(0), vec![1, 1, 1, 1]);
+        assert_eq!(b.code(1), vec![1, -1, 1, -1]);
+        assert_eq!(b.code(2), vec![1, 1, -1, -1]);
+        assert_eq!(b.code(3), vec![1, -1, -1, 1]);
+    }
+
+    #[test]
+    fn closed_form_matches_dense_sylvester_oracle() {
+        for l in [1usize, 2, 4, 16, 64, 256] {
+            let dense = OvsfBasis::dense_codes(l).unwrap();
+            let b = OvsfBasis::new(l).unwrap();
+            for j in 0..l {
+                for t in 0..l {
+                    assert_eq!(
+                        b.at(j, t),
+                        dense[j * l + t],
+                        "sign mismatch at (j={j}, t={t}), L={l}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -185,6 +252,17 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn packed_dot_matches_scalar_dot() {
+        forall("ovsf-dot-packed-vs-scalar", 64, |rng| {
+            let l = 1usize << rng.gen_range(0, 9); // 1..512
+            let b = OvsfBasis::new(l).unwrap();
+            let i = rng.gen_range(0, l as u64 - 1) as usize;
+            let j = rng.gen_range(0, l as u64 - 1) as usize;
+            assert_eq!(b.dot(i, j), b.dot_scalar(i, j), "L={l} i={i} j={j}");
+        });
     }
 
     #[test]
@@ -211,12 +289,23 @@ mod tests {
     }
 
     #[test]
+    fn packed_emission_spans_multiple_words() {
+        // L = 128 ⇒ two u64 words per code; cross-check against code().
+        let b = OvsfBasis::new(128).unwrap();
+        for j in [0usize, 1, 63, 64, 127] {
+            let packed = b.packed(j);
+            assert_eq!(packed.len(), 2);
+            assert_eq!(OvsfBasis::unpack(&packed, 128), b.code(j), "j={j}");
+        }
+    }
+
+    #[test]
     fn tree_construction_spans_same_set() {
         // The tree codes are a permutation of the Sylvester rows.
         for l in [2usize, 4, 8, 16] {
             let b = OvsfBasis::new(l).unwrap();
             let sylvester: std::collections::HashSet<Vec<i8>> =
-                (0..l).map(|j| b.code(j).to_vec()).collect();
+                (0..l).map(|j| b.code(j)).collect();
             let tree: std::collections::HashSet<Vec<i8>> = (0..l)
                 .map(|j| OvsfBasis::tree_code(l, j).unwrap())
                 .collect();
@@ -228,5 +317,14 @@ mod tests {
     fn storage_matches_bit_count() {
         let b = OvsfBasis::new(16).unwrap();
         assert_eq!(b.storage_bits(), 256);
+    }
+
+    #[test]
+    fn construction_is_instant_at_resnet_scale() {
+        // The whole point: L=8192 used to materialise 64 MB; now O(1).
+        let b = OvsfBasis::new(8192).unwrap();
+        assert_eq!(b.len(), 8192);
+        assert_eq!(b.at(0, 0), 1);
+        assert_eq!(b.at(8191, 8191), OvsfBasis::sign(8191, 8191));
     }
 }

@@ -3,6 +3,11 @@
 //! OVSF codes are the rows of Sylvester–Hadamard matrices; a layer's filters
 //! are reconstructed at run time as a learned linear combination of
 //! `⌊ρ·L⌉` codes of length `L = N_in·K·K`.
+//!
+//! The whole module is **matrix-free**: code elements come from the closed
+//! form `(−1)^popcount(j & t)` ([`codes`]), and projection/reconstruction
+//! are O(L log L) fast Walsh–Hadamard transforms ([`regress`]) — the L×L
+//! matrix is never materialised outside test oracles.
 
 pub mod basis;
 pub mod codes;

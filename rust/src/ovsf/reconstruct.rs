@@ -10,8 +10,26 @@
 use crate::error::{Error, Result};
 use crate::ovsf::basis::{select, BasisSelection, SelectedBasis};
 use crate::ovsf::codes::OvsfBasis;
-use crate::ovsf::regress::{project, reconstruct_vec};
+use crate::ovsf::regress::{project_into, reconstruct_into};
 use crate::util::{is_pow2, next_pow2};
+
+/// Worker threads for per-filter batch regression/reconstruction. Filters
+/// are independent, so the batch is sharded with `std::thread::scope`
+/// (zero-dep constraint: no rayon). Small batches stay single-threaded —
+/// the scratch-buffer reuse dominates there and spawn overhead would not
+/// amortise.
+fn filter_threads(n_filters: usize, code_len: usize) -> usize {
+    // ~2^18 butterfly-ops per shard keeps spawn cost < 5% of useful work.
+    let work = n_filters.saturating_mul(code_len.max(1));
+    if work < (1 << 18) {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(n_filters)
+        .min(16)
+}
 
 /// How to obtain a `3×3` (generally non-pow2 `K×K`) filter from the
 /// power-of-two OVSF reconstruction.
@@ -96,23 +114,44 @@ impl OvsfLayer {
         let k_ovsf = if is_pow2(k) { k } else { next_pow2(k) };
         let l = n_in * k_ovsf * k_ovsf;
         let basis = OvsfBasis::new(l)?;
-        let mut filters = Vec::with_capacity(n_out);
-        for o in 0..n_out {
-            // Embed the K×K filter into the K'×K' frame (zero padding at the
-            // right/bottom) so the projection targets the OVSF geometry.
-            let mut target = vec![0.0f32; l];
-            for c in 0..n_in {
-                for kh in 0..k {
-                    for kw in 0..k {
-                        let src = ((o * n_in + c) * k + kh) * k + kw;
-                        let dst = (c * k_ovsf + kh) * k_ovsf + kw;
-                        target[dst] = weights[src];
+        let n_threads = filter_threads(n_out, l);
+        let shard_len = n_out.div_ceil(n_threads);
+        let mut filters: Vec<SelectedBasis> = Vec::with_capacity(n_out);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n_threads);
+            for shard in 0..n_threads {
+                let lo = (shard * shard_len).min(n_out);
+                let hi = ((shard + 1) * shard_len).min(n_out);
+                handles.push(scope.spawn(move || {
+                    // One scratch set per worker, reused across its filters.
+                    let mut target = vec![0.0f32; l];
+                    let mut scratch: Vec<f64> = Vec::with_capacity(l);
+                    let mut alphas: Vec<f32> = Vec::with_capacity(l);
+                    let mut local = Vec::with_capacity(hi - lo);
+                    for o in lo..hi {
+                        // Embed the K×K filter into the K'×K' frame (zero
+                        // padding at the right/bottom) so the projection
+                        // targets the OVSF geometry.
+                        target.iter_mut().for_each(|x| *x = 0.0);
+                        for c in 0..n_in {
+                            for kh in 0..k {
+                                for kw in 0..k {
+                                    let src = ((o * n_in + c) * k + kh) * k + kw;
+                                    let dst = (c * k_ovsf + kh) * k_ovsf + kw;
+                                    target[dst] = weights[src];
+                                }
+                            }
+                        }
+                        project_into(&basis, &target, &mut scratch, &mut alphas);
+                        local.push(select(strategy, &basis, &alphas, rho));
                     }
-                }
+                    local
+                }));
             }
-            let alphas = project(&basis, &target);
-            filters.push(select(strategy, &basis, &alphas, rho));
-        }
+            for h in handles {
+                filters.extend(h.join().expect("regression worker panicked"));
+            }
+        });
         Ok(Self {
             n_out,
             n_in,
@@ -157,17 +196,34 @@ impl OvsfLayer {
     /// Reconstruct the dense `n_out·n_in·k·k` weights (the software oracle
     /// of what CNN-WGen produces in hardware).
     pub fn reconstruct(&self) -> Result<Vec<f32>> {
-        let basis = OvsfBasis::new(self.code_len())?;
-        let mut out = vec![0.0f32; self.n_out * self.n_in * self.k * self.k];
-        for (o, sel) in self.filters.iter().enumerate() {
-            let full = reconstruct_vec(&basis, sel); // n_in × k' × k'
-            for c in 0..self.n_in {
-                let plane = &full[c * self.k_ovsf * self.k_ovsf..(c + 1) * self.k_ovsf * self.k_ovsf];
-                let extracted = extract_kxk(plane, self.k_ovsf, self.k, self.mode);
-                let dst = ((o * self.n_in) + c) * self.k * self.k;
-                out[dst..dst + self.k * self.k].copy_from_slice(&extracted);
+        let l = self.code_len();
+        let basis = OvsfBasis::new(l)?;
+        let filter_stride = self.n_in * self.k * self.k;
+        let mut out = vec![0.0f32; self.n_out * filter_stride];
+        let n_threads = filter_threads(self.n_out, l);
+        let shard_len = self.n_out.div_ceil(n_threads);
+        std::thread::scope(|scope| {
+            // Each worker owns a disjoint slice of the output (contiguous
+            // filter shard) plus scratch buffers reused across its filters.
+            let shard_elems = (shard_len * filter_stride).max(1);
+            for (shard, out_shard) in out.chunks_mut(shard_elems).enumerate() {
+                let sels = &self.filters[shard * shard_len..];
+                scope.spawn(move || {
+                    let mut scratch: Vec<f64> = Vec::with_capacity(l);
+                    let mut full: Vec<f32> = Vec::with_capacity(l);
+                    let frame = self.k_ovsf * self.k_ovsf;
+                    for (sel, dst) in sels.iter().zip(out_shard.chunks_mut(filter_stride)) {
+                        reconstruct_into(&basis, sel, &mut scratch, &mut full); // n_in × k' × k'
+                        for c in 0..self.n_in {
+                            let plane = &full[c * frame..(c + 1) * frame];
+                            let extracted = extract_kxk(plane, self.k_ovsf, self.k, self.mode);
+                            dst[c * self.k * self.k..(c + 1) * self.k * self.k]
+                                .copy_from_slice(&extracted);
+                        }
+                    }
+                });
             }
-        }
+        });
         Ok(out)
     }
 }

@@ -3,52 +3,118 @@
 //! `α* = argmin_α ‖Σ_j α_j b_j − f̂‖²`. With the full orthogonal basis the
 //! solution is the exact projection `α_j = ⟨f̂, b_j⟩ / L`. The paper uses
 //! this to initialise OVSF models from pre-trained CNNs (ImageNet setting).
+//!
+//! Because the OVSF basis is the Sylvester–Hadamard matrix, the projection
+//! is a Walsh–Hadamard transform: [`project`] runs one in-place O(L log L)
+//! [`fwht`] instead of `L` dense dot products, and [`reconstruct_vec`] is a
+//! sparse scatter of the kept α's followed by one inverse FWHT (`H` is
+//! symmetric with `H² = L·I`, so the inverse transform *is* the forward
+//! butterfly). [`mse`] exploits orthogonality to avoid materialising the
+//! reconstruction at all.
 
 use crate::ovsf::basis::SelectedBasis;
 use crate::ovsf::codes::OvsfBasis;
 
-/// Exact projection of `target` onto the full basis: one α per code.
-pub fn project(basis: &OvsfBasis, target: &[f32]) -> Vec<f32> {
-    let l = basis.len();
-    assert_eq!(target.len(), l, "target length must equal basis length");
-    let inv_l = 1.0f64 / l as f64;
-    (0..l)
-        .map(|j| {
-            // Slice-wise walk (no per-element bounds re-check via `at`).
-            let code = basis.code(j);
-            let mut acc = 0.0f64;
-            for (&v, &s) in target.iter().zip(code) {
-                acc += v as f64 * s as f64;
+/// In-place fast Walsh–Hadamard transform in natural (Hadamard) order:
+/// `data ← H_L · data` with `H[j][t] = (−1)^popcount(j & t)`. O(L log L)
+/// butterflies; `data.len()` must be a power of two (or 0/1, a no-op).
+pub fn fwht(data: &mut [f64]) {
+    let n = data.len();
+    debug_assert!(n == 0 || n.is_power_of_two(), "FWHT length must be 2^k");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let x = data[j];
+                let y = data[j + h];
+                data[j] = x + y;
+                data[j + h] = x - y;
             }
-            (acc * inv_l) as f32
-        })
-        .collect()
+            i += 2 * h;
+        }
+        h *= 2;
+    }
 }
 
-/// Reconstruct a vector from a (possibly partial) selection.
-pub fn reconstruct_vec(basis: &OvsfBasis, sel: &SelectedBasis) -> Vec<f32> {
-    let l = basis.len();
-    let mut out = vec![0.0f32; l];
-    for (k, &j) in sel.indices.iter().enumerate() {
-        let a = sel.alphas[k];
-        let code = basis.code(j);
-        for (o, &c) in out.iter_mut().zip(code) {
-            *o += a * c as f32;
-        }
-    }
+/// Exact projection of `target` onto the full basis: one α per code, via a
+/// single FWHT (`α = H·f̂ / L`).
+pub fn project(basis: &OvsfBasis, target: &[f32]) -> Vec<f32> {
+    let mut scratch = Vec::new();
+    let mut out = Vec::new();
+    project_into(basis, target, &mut scratch, &mut out);
     out
 }
 
+/// Allocation-reusing variant of [`project`]: `scratch` and `out` are
+/// cleared and refilled (hot path for per-filter batch regression).
+pub fn project_into(
+    basis: &OvsfBasis,
+    target: &[f32],
+    scratch: &mut Vec<f64>,
+    out: &mut Vec<f32>,
+) {
+    let l = basis.len();
+    assert_eq!(target.len(), l, "target length must equal basis length");
+    scratch.clear();
+    scratch.extend(target.iter().map(|&v| v as f64));
+    fwht(scratch);
+    let inv_l = 1.0f64 / l as f64;
+    out.clear();
+    out.extend(scratch.iter().map(|&a| (a * inv_l) as f32));
+}
+
+/// Reconstruct a vector from a (possibly partial) selection: scatter the
+/// α's to their code indices, then one inverse FWHT (`f = H·α`).
+pub fn reconstruct_vec(basis: &OvsfBasis, sel: &SelectedBasis) -> Vec<f32> {
+    let mut scratch = Vec::new();
+    let mut out = Vec::new();
+    reconstruct_into(basis, sel, &mut scratch, &mut out);
+    out
+}
+
+/// Allocation-reusing variant of [`reconstruct_vec`].
+pub fn reconstruct_into(
+    basis: &OvsfBasis,
+    sel: &SelectedBasis,
+    scratch: &mut Vec<f64>,
+    out: &mut Vec<f32>,
+) {
+    let l = basis.len();
+    scratch.clear();
+    scratch.resize(l, 0.0);
+    for (k, &j) in sel.indices.iter().enumerate() {
+        debug_assert!(j < l, "selected index {j} out of range (L={l})");
+        scratch[j] = sel.alphas[k] as f64;
+    }
+    fwht(scratch);
+    out.clear();
+    out.extend(scratch.iter().map(|&v| v as f32));
+}
+
 /// Mean squared reconstruction error for a selection against a target.
+///
+/// Selection-aware: by orthogonality,
+/// `‖t − Σ α_j b_j‖² = ‖t‖² − 2L·Σ α_j p_j + L·Σ α_j²` where `p = H·t/L`
+/// is the full projection — one O(L log L) transform plus O(|sel|) work,
+/// never materialising the reconstruction.
 pub fn mse(basis: &OvsfBasis, sel: &SelectedBasis, target: &[f32]) -> f64 {
-    let recon = reconstruct_vec(basis, sel);
-    let n = target.len() as f64;
-    target
-        .iter()
-        .zip(&recon)
-        .map(|(&t, &r)| ((t - r) as f64).powi(2))
-        .sum::<f64>()
-        / n
+    let l = basis.len();
+    assert_eq!(target.len(), l);
+    let energy: f64 = target.iter().map(|&t| (t as f64).powi(2)).sum();
+    let mut scratch: Vec<f64> = target.iter().map(|&v| v as f64).collect();
+    fwht(&mut scratch);
+    let lf = l as f64;
+    let mut cross = 0.0f64; // Σ α_j · ⟨t, b_j⟩
+    let mut alpha_sq = 0.0f64; // Σ α_j²
+    for (k, &j) in sel.indices.iter().enumerate() {
+        let a = sel.alphas[k] as f64;
+        cross += a * scratch[j];
+        alpha_sq += a * a;
+    }
+    // Cancellation can drive the analytic form slightly negative at exact
+    // reconstruction; clamp to the mathematically valid range.
+    ((energy - 2.0 * cross + lf * alpha_sq) / lf).max(0.0)
 }
 
 #[cfg(test)]
@@ -56,6 +122,88 @@ mod tests {
     use super::*;
     use crate::ovsf::basis::{select, BasisSelection};
     use crate::util::check::forall;
+
+    /// Dense-matrix oracle of the projection (the pre-FWHT implementation).
+    fn project_dense(basis: &OvsfBasis, target: &[f32]) -> Vec<f32> {
+        let l = basis.len();
+        let dense = OvsfBasis::dense_codes(l).unwrap();
+        let inv_l = 1.0f64 / l as f64;
+        (0..l)
+            .map(|j| {
+                let mut acc = 0.0f64;
+                for (t, &v) in target.iter().enumerate() {
+                    acc += v as f64 * dense[j * l + t] as f64;
+                }
+                (acc * inv_l) as f32
+            })
+            .collect()
+    }
+
+    /// Dense-matrix oracle of the reconstruction.
+    fn reconstruct_dense(basis: &OvsfBasis, sel: &SelectedBasis) -> Vec<f32> {
+        let l = basis.len();
+        let dense = OvsfBasis::dense_codes(l).unwrap();
+        let mut out = vec![0.0f32; l];
+        for (k, &j) in sel.indices.iter().enumerate() {
+            let a = sel.alphas[k];
+            for (t, o) in out.iter_mut().enumerate() {
+                *o += a * dense[j * l + t] as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fwht_matches_dense_hadamard_multiply() {
+        forall("fwht-vs-dense", 32, |rng| {
+            let l = 1usize << rng.gen_range(0, 9); // 1..256
+            let dense = OvsfBasis::dense_codes(l).unwrap();
+            let v = rng.normal_vec(l);
+            let mut data: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+            fwht(&mut data);
+            for j in 0..l {
+                let expect: f64 = (0..l)
+                    .map(|t| v[t] as f64 * dense[j * l + t] as f64)
+                    .sum();
+                assert!(
+                    (data[j] - expect).abs() < 1e-9 * expect.abs().max(1.0),
+                    "row {j} of L={l}: {} vs {expect}",
+                    data[j]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn project_matches_dense_oracle() {
+        forall("project-fwht-vs-dense", 24, |rng| {
+            let l = 1usize << rng.gen_range(1, 9); // 2..256
+            let b = OvsfBasis::new(l).unwrap();
+            let target = rng.normal_vec(l);
+            let fast = project(&b, &target);
+            let slow = project_dense(&b, &target);
+            for (j, (a, e)) in fast.iter().zip(&slow).enumerate() {
+                assert!((a - e).abs() < 1e-4, "α_{j} mismatch: {a} vs {e} (L={l})");
+            }
+        });
+    }
+
+    #[test]
+    fn reconstruct_matches_dense_oracle() {
+        forall("reconstruct-fwht-vs-dense", 24, |rng| {
+            let l = 1usize << rng.gen_range(1, 9);
+            let b = OvsfBasis::new(l).unwrap();
+            let target = rng.normal_vec(l);
+            let alphas = project(&b, &target);
+            let rho = *rng.choose(&[0.25, 0.5, 1.0]);
+            let sel = select(BasisSelection::IterativeDrop, &b, &alphas, rho);
+            let fast = reconstruct_vec(&b, &sel);
+            let slow = reconstruct_dense(&b, &sel);
+            for (t, (a, e)) in fast.iter().zip(&slow).enumerate() {
+                assert!((a - e).abs() < 1e-4, "t={t}: {a} vs {e} (L={l}, ρ={rho})");
+            }
+        });
+    }
 
     #[test]
     fn full_projection_reconstructs_exactly() {
@@ -85,6 +233,35 @@ mod tests {
                 assert!(a.abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn mse_matches_explicit_reconstruction() {
+        forall("mse-analytic-vs-explicit", 32, |rng| {
+            let l = 1usize << rng.gen_range(1, 8);
+            let b = OvsfBasis::new(l).unwrap();
+            let target = rng.normal_vec(l);
+            let mut alphas = project(&b, &target);
+            // Perturb so the selection-aware path sees non-projection α's.
+            if rng.gen_range(0, 1) == 1 {
+                let k = rng.gen_range(0, l as u64 - 1) as usize;
+                alphas[k] += 0.25;
+            }
+            let rho = *rng.choose(&[0.25, 0.5, 1.0]);
+            let sel = select(BasisSelection::IterativeDrop, &b, &alphas, rho);
+            let analytic = mse(&b, &sel, &target);
+            let recon = reconstruct_vec(&b, &sel);
+            let explicit: f64 = target
+                .iter()
+                .zip(&recon)
+                .map(|(&t, &r)| ((t - r) as f64).powi(2))
+                .sum::<f64>()
+                / l as f64;
+            assert!(
+                (analytic - explicit).abs() < 1e-6 * explicit.max(1.0),
+                "mse {analytic} vs explicit {explicit} (L={l}, ρ={rho})"
+            );
+        });
     }
 
     #[test]

@@ -85,25 +85,24 @@ impl HwOvsfWeights {
         let k_ovsf = if is_pow2(k) { k } else { next_pow2(k) };
         let chunk = k_ovsf * k_ovsf;
         let nb = n_basis(rho, chunk);
-        let basis = OvsfBasis::new(chunk)?;
+        OvsfBasis::new(chunk)?; // validate the chunk geometry
         let mut alphas = Vec::with_capacity(n_out * n_in * nb);
-        let mut frame = vec![0.0f32; chunk];
+        // One FWHT over the zero-padded K'×K' frame yields all chunk α's at
+        // once (O(chunk log chunk) per (o, c) instead of nb dense dots);
+        // the hardware's Sequential layout keeps the first nb.
+        let mut frame = vec![0.0f64; chunk];
+        let inv = 1.0f64 / chunk as f64;
         for o in 0..n_out {
             for c in 0..n_in {
                 frame.iter_mut().for_each(|x| *x = 0.0);
                 for kh in 0..k {
                     for kw in 0..k {
-                        frame[kh * k_ovsf + kw] = weights[((o * n_in + c) * k + kh) * k + kw];
+                        frame[kh * k_ovsf + kw] =
+                            weights[((o * n_in + c) * k + kh) * k + kw] as f64;
                     }
                 }
-                let inv = 1.0f64 / chunk as f64;
-                for j in 0..nb {
-                    let mut acc = 0.0f64;
-                    for (t, &v) in frame.iter().enumerate() {
-                        acc += v as f64 * basis.at(j, t) as f64;
-                    }
-                    alphas.push((acc * inv) as f32);
-                }
+                crate::ovsf::regress::fwht(&mut frame);
+                alphas.extend(frame[..nb].iter().map(|&a| (a * inv) as f32));
             }
         }
         Ok(Self {
@@ -129,16 +128,31 @@ impl HwOvsfWeights {
     pub fn dense_gemm(&self) -> Result<Vec<f32>> {
         let chunk = self.chunk_len();
         let ek = self.engine_chunk();
-        let basis = OvsfBasis::new(chunk)?;
+        OvsfBasis::new(chunk)?; // validate the chunk geometry
         let p_dim = self.p_dim();
         let mut out = vec![0.0f32; p_dim * self.n_out];
+        // Matrix-free signs, hoisted as packed u64 words per basis vector
+        // over the cropped engine positions (one word for every paper
+        // kernel: K ≤ 8 ⇒ ek ≤ 64; larger kernels take more words).
+        let sign_words = ek.div_ceil(64).max(1);
+        let mut packed = vec![0u64; self.n_basis * sign_words];
+        for j in 0..self.n_basis {
+            for kpos in 0..ek {
+                if OvsfBasis::sign(j, self.frame_pos(kpos)) > 0 {
+                    packed[j * sign_words + (kpos >> 6)] |= 1u64 << (kpos & 63);
+                }
+            }
+        }
         for o in 0..self.n_out {
             for c in 0..self.n_in {
+                let base = (o * self.n_in + c) * self.n_basis;
+                let alphas = &self.alphas[base..base + self.n_basis];
                 for kpos in 0..ek {
-                    let pos = self.frame_pos(kpos);
+                    let (word, bit) = (kpos >> 6, kpos & 63);
                     let mut acc = 0.0f32;
-                    for j in 0..self.n_basis {
-                        acc += self.alpha(o, c, j) * basis.at(j, pos) as f32;
+                    for (j, &a) in alphas.iter().enumerate() {
+                        let row = packed[j * sign_words + word];
+                        acc += if row >> bit & 1 == 1 { a } else { -a };
                     }
                     out[(c * ek + kpos) * self.n_out + o] = acc;
                 }

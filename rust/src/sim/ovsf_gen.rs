@@ -41,7 +41,9 @@ pub struct OvsfGenerator {
 
 impl OvsfGenerator {
     /// Build the generator for a layer: `n_basis` codes of length `chunk`
-    /// from the OVSF basis, output width `m`.
+    /// from the OVSF basis, output width `m`. The packed words are emitted
+    /// straight from the matrix-free closed form — loading the FIFO never
+    /// materialises the basis.
     pub fn new(basis: &OvsfBasis, n_basis: usize, m: usize) -> Self {
         let chunk = basis.len();
         assert!(

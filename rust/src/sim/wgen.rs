@@ -47,9 +47,7 @@ impl<'a> WGenSim<'a> {
     /// (engine layout); non-pow2 kernels read the cropped frame positions
     /// of the `K'²`-length codes via the aligner's per-layer shift options.
     pub fn generate(&self) -> WGenResult {
-        let chunk = self.w.chunk_len();
         let ek = self.w.engine_chunk();
-        let basis = OvsfBasis::new(chunk).expect("chunk is a power of two");
         let p_dim = self.w.p_dim();
         let c_dim = self.w.n_out;
         let (m, t_p, t_c) = (
@@ -67,15 +65,21 @@ impl<'a> WGenSim<'a> {
         let mut vector_macs = 0u64;
 
         // Hoisted lookups (§Perf): the basis sign at engine position
-        // `p % K²` does not depend on the tile walk — precompute one
-        // cropped sign row per basis vector...
-        let signs: Vec<Vec<f32>> = (0..n_basis)
-            .map(|j| {
-                (0..ek)
-                    .map(|kpos| basis.at(j, self.w.frame_pos(kpos)) as f32)
-                    .collect()
-            })
-            .collect();
+        // `p % K²` does not depend on the tile walk — pack one cropped sign
+        // row per basis vector into u64 words (bit `kpos` ⇔ +1), mirroring
+        // the 1-bit on-chip FIFO format. One word covers every evaluated
+        // kernel (K ≤ 8 ⇒ K² ≤ 64); larger kernels just take more words.
+        // Signs come from the matrix-free popcount closed form — no basis
+        // materialisation.
+        let sign_words = ek.div_ceil(64).max(1);
+        let mut packed_signs = vec![0u64; n_basis * sign_words];
+        for j in 0..n_basis {
+            for kpos in 0..ek {
+                if OvsfBasis::sign(j, self.w.frame_pos(kpos)) > 0 {
+                    packed_signs[j * sign_words + (kpos >> 6)] |= 1u64 << (kpos & 63);
+                }
+            }
+        }
 
         let col_tiles = ceil_div(c_dim as u64, t_c as u64);
         let n_basis_stride = self.w.n_basis;
@@ -120,17 +124,18 @@ impl<'a> WGenSim<'a> {
                         }
                     }
                     peak_ports = peak_ports.max(ports.len());
-                    for (j, sign_row) in signs.iter().enumerate() {
+                    for (j, sign_row) in packed_signs.chunks_exact(sign_words).enumerate() {
                         // basis vectors loop (line 4) — PIPELINE (1 cycle)
                         if ct == 0 {
                             cycles_one_tile += 1;
                         }
                         for &(w_idx, a_base, kpos) in &lanes {
                             // inner M-wide loop (line 5) — UNROLL:
-                            // multiplier array → adder array accumulation
-                            weights[w_idx as usize] += self.w.alphas
-                                [a_base as usize + j]
-                                * sign_row[kpos as usize];
+                            // ±1 sign application is a bit test on the
+                            // packed word (add/sub select, no multiply)
+                            let a = self.w.alphas[a_base as usize + j];
+                            let bit = sign_row[(kpos >> 6) as usize] >> (kpos & 63) & 1;
+                            weights[w_idx as usize] += if bit == 1 { a } else { -a };
                         }
                         vector_macs += lanes.len() as u64;
                     }

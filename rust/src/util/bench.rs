@@ -75,8 +75,30 @@ pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -
     r
 }
 
-/// Auto-calibrating variant: picks an iteration count that runs ~`budget_ms`.
+/// `true` when the `BENCH_SMOKE` environment variable requests a reduced
+/// CI smoke run (any non-empty value other than `0`). Smoke mode clamps
+/// every auto-calibrated budget so the bench harness exercises all paths
+/// without burning CI minutes.
+pub fn smoke_mode() -> bool {
+    std::env::var("BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+/// The effective measurement budget: `requested` normally, clamped to
+/// ~25 ms per bench under [`smoke_mode`].
+pub fn effective_budget_ms(requested: u64) -> u64 {
+    if smoke_mode() {
+        requested.min(25)
+    } else {
+        requested
+    }
+}
+
+/// Auto-calibrating variant: picks an iteration count that runs ~`budget_ms`
+/// (clamped by [`effective_budget_ms`] in smoke mode).
 pub fn bench_auto<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchResult {
+    let budget_ms = effective_budget_ms(budget_ms);
     // One probe iteration sizes the loop.
     let t = Instant::now();
     std::hint::black_box(f());
@@ -115,5 +137,12 @@ mod tests {
     fn auto_calibrates() {
         let r = bench_auto("tiny", 5, || 42u8);
         assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn smoke_budget_never_exceeds_request() {
+        // Holds with or without BENCH_SMOKE in the environment.
+        assert!(effective_budget_ms(1000) <= 1000);
+        assert!(effective_budget_ms(10) <= 10);
     }
 }

@@ -1,0 +1,211 @@
+//! FWHT-path properties: the matrix-free O(L log L) OVSF kernel must be
+//! numerically indistinguishable (≤1e-4) from the dense-matrix oracle the
+//! repo used before the rewrite, across ResNet-relevant lengths, ratios
+//! and both 3×3-extraction modes — plus exactness regressions at ρ=1.
+//!
+//! The dense Sylvester oracle is re-implemented here (test-only): building
+//! the full L×L ±1 matrix and running O(L²) projections is precisely what
+//! production code is no longer allowed to do.
+
+use unzipfpga::ovsf::basis::{select, BasisSelection, SelectedBasis};
+use unzipfpga::ovsf::codes::OvsfBasis;
+use unzipfpga::ovsf::regress::{fwht, mse, project, reconstruct_vec};
+use unzipfpga::ovsf::reconstruct::{extract_kxk, Filter3x3Mode, OvsfLayer};
+use unzipfpga::util::check::forall;
+use unzipfpga::util::prng::Xoshiro256;
+
+/// Dense Sylvester materialisation (the pre-rewrite construction).
+fn dense_sylvester(len: usize) -> Vec<i8> {
+    assert!(len.is_power_of_two());
+    let mut codes = vec![1i8];
+    let mut cur = 1usize;
+    while cur < len {
+        let next = cur * 2;
+        let mut out = vec![0i8; next * next];
+        for r in 0..cur {
+            for c in 0..cur {
+                let v = codes[r * cur + c];
+                out[r * next + c] = v;
+                out[r * next + cur + c] = v;
+                out[(cur + r) * next + c] = v;
+                out[(cur + r) * next + cur + c] = -v;
+            }
+        }
+        codes = out;
+        cur = next;
+    }
+    codes
+}
+
+/// Dense-matrix projection oracle: `α_j = ⟨t, b_j⟩ / L` via L dot products.
+fn project_dense(dense: &[i8], l: usize, target: &[f32]) -> Vec<f32> {
+    let inv_l = 1.0f64 / l as f64;
+    (0..l)
+        .map(|j| {
+            let mut acc = 0.0f64;
+            for (t, &v) in target.iter().enumerate() {
+                acc += v as f64 * dense[j * l + t] as f64;
+            }
+            (acc * inv_l) as f32
+        })
+        .collect()
+}
+
+/// Dense-matrix reconstruction oracle.
+fn reconstruct_dense(dense: &[i8], l: usize, sel: &SelectedBasis) -> Vec<f32> {
+    let mut out = vec![0.0f32; l];
+    for (k, &j) in sel.indices.iter().enumerate() {
+        let a = sel.alphas[k] as f64;
+        for (t, o) in out.iter_mut().enumerate() {
+            *o += (a * dense[j * l + t] as f64) as f32;
+        }
+    }
+    out
+}
+
+fn check_length(l: usize, rho: f64, rng: &mut Xoshiro256) {
+    let basis = OvsfBasis::new(l).unwrap();
+    let dense = dense_sylvester(l);
+    let target = rng.normal_vec(l);
+    let fast_alphas = project(&basis, &target);
+    let slow_alphas = project_dense(&dense, l, &target);
+    for (j, (a, e)) in fast_alphas.iter().zip(&slow_alphas).enumerate() {
+        assert!(
+            (a - e).abs() < 1e-4,
+            "α_{j}: FWHT {a} vs dense {e} (L={l}, ρ={rho})"
+        );
+    }
+    for strategy in [BasisSelection::Sequential, BasisSelection::IterativeDrop] {
+        let sel = select(strategy, &basis, &fast_alphas, rho);
+        let fast = reconstruct_vec(&basis, &sel);
+        let slow = reconstruct_dense(&dense, l, &sel);
+        for (t, (a, e)) in fast.iter().zip(&slow).enumerate() {
+            assert!(
+                (a - e).abs() < 1e-4,
+                "recon[{t}]: FWHT {a} vs dense {e} (L={l}, ρ={rho}, {strategy})"
+            );
+        }
+        // Selection-aware mse agrees with the dense reconstruction error.
+        let analytic = mse(&basis, &sel, &target);
+        let explicit: f64 = target
+            .iter()
+            .zip(&slow)
+            .map(|(&t, &r)| ((t - r) as f64).powi(2))
+            .sum::<f64>()
+            / l as f64;
+        assert!(
+            (analytic - explicit).abs() < 1e-4 * explicit.max(1.0),
+            "mse {analytic} vs dense {explicit} (L={l}, ρ={rho}, {strategy})"
+        );
+    }
+}
+
+#[test]
+fn fwht_matches_dense_oracle_small_lengths() {
+    forall("fwht-vs-dense-small", 40, |rng| {
+        let l = 1usize << rng.gen_range(1, 10); // 2..1024
+        let rho = *rng.choose(&[0.25, 0.5, 1.0]);
+        check_length(l, rho, rng);
+    });
+}
+
+#[test]
+fn fwht_matches_dense_oracle_resnet_scale() {
+    // L = 4096 (256-ch) and L = 8192 (512-ch 3×3, the ResNet-50 worst
+    // case): one deterministic case each — the dense oracle is O(L²).
+    let mut rng = Xoshiro256::seed_from_u64(0x0f57);
+    check_length(4096, 0.5, &mut rng);
+    check_length(8192, 0.25, &mut rng);
+}
+
+#[test]
+fn fwht_involution_recovers_input() {
+    // H² = L·I: transforming twice and dividing by L is the identity.
+    forall("fwht-involution", 24, |rng| {
+        let l = 1usize << rng.gen_range(0, 13); // 1..8192
+        let v = rng.normal_vec(l);
+        let mut data: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+        fwht(&mut data);
+        fwht(&mut data);
+        for (orig, twice) in v.iter().zip(&data) {
+            let back = twice / l as f64;
+            assert!((*orig as f64 - back).abs() < 1e-9, "L={l}");
+        }
+    });
+}
+
+#[test]
+fn layer_roundtrip_matches_oracle_both_modes() {
+    // OvsfLayer::from_weights + reconstruct against a per-filter dense
+    // oracle, for both 3×3-extraction strategies and partial ρ.
+    forall("ovsf-layer-fwht-vs-dense", 10, |rng| {
+        let n_in = 1usize << rng.gen_range(1, 4); // 2..8
+        let n_out = rng.gen_range(1, 4) as usize;
+        let k = 3usize;
+        let k_ovsf = 4usize;
+        let l = n_in * k_ovsf * k_ovsf;
+        let rho = *rng.choose(&[0.25, 0.5, 1.0]);
+        let mode = *rng.choose(&[Filter3x3Mode::Crop, Filter3x3Mode::AdaptivePool]);
+        let strategy = *rng.choose(&[BasisSelection::Sequential, BasisSelection::IterativeDrop]);
+        let w = rng.normal_vec(n_out * n_in * k * k);
+        let layer =
+            OvsfLayer::from_weights(&w, n_out, n_in, k, rho, strategy, mode).unwrap();
+        let fast = layer.reconstruct().unwrap();
+
+        // Dense oracle: project each zero-padded filter on the dense
+        // matrix, select with the same strategy, reconstruct, extract.
+        let dense = dense_sylvester(l);
+        let basis = OvsfBasis::new(l).unwrap();
+        for o in 0..n_out {
+            let mut target = vec![0.0f32; l];
+            for c in 0..n_in {
+                for kh in 0..k {
+                    for kw in 0..k {
+                        target[(c * k_ovsf + kh) * k_ovsf + kw] =
+                            w[((o * n_in + c) * k + kh) * k + kw];
+                    }
+                }
+            }
+            let alphas = project_dense(&dense, l, &target);
+            let sel = select(strategy, &basis, &alphas, rho);
+            let full = reconstruct_dense(&dense, l, &sel);
+            for c in 0..n_in {
+                let plane = &full[c * k_ovsf * k_ovsf..(c + 1) * k_ovsf * k_ovsf];
+                let expect = extract_kxk(plane, k_ovsf, k, mode);
+                for (pos, e) in expect.iter().enumerate() {
+                    let got = fast[(o * n_in + c) * k * k + pos];
+                    assert!(
+                        (got - e).abs() < 1e-4,
+                        "o={o} c={c} pos={pos}: {got} vs {e} (ρ={rho}, {mode}, {strategy})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn rho_one_reconstruction_stays_exact_after_rewrite() {
+    // Regression: the FWHT rewrite must preserve ρ=1 exactness — pow2
+    // kernels directly, K=3 via the zero-padded frame + crop.
+    forall("fwht-rho1-exact", 12, |rng| {
+        let n_in = 1usize << rng.gen_range(1, 4);
+        let n_out = rng.gen_range(1, 5) as usize;
+        let k = *rng.choose(&[2usize, 3, 4]);
+        let w = rng.normal_vec(n_out * n_in * k * k);
+        let layer = OvsfLayer::from_weights(
+            &w,
+            n_out,
+            n_in,
+            k,
+            1.0,
+            BasisSelection::IterativeDrop,
+            Filter3x3Mode::Crop,
+        )
+        .unwrap();
+        let r = layer.reconstruct().unwrap();
+        for (a, b) in w.iter().zip(&r) {
+            assert!((a - b).abs() < 1e-4, "ρ=1 no longer exact: {a} vs {b}");
+        }
+    });
+}
