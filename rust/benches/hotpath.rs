@@ -10,12 +10,18 @@
 //! The OVSF weights-generation section additionally measures ResNet-18/50
 //! layer shapes against the dense-matrix baseline and emits a
 //! machine-readable `BENCH_ovsf.json` (path override: `BENCH_OVSF_JSON`)
-//! so the perf trajectory is tracked across PRs. `BENCH_SMOKE=1` clamps
-//! budgets for CI.
+//! so the perf trajectory is tracked across PRs. The end-to-end numeric
+//! `Engine::infer` section measures tile-streamed inference throughput and
+//! peak resident generated-weight bytes on ResNet-18/50 and emits
+//! `BENCH_infer.json` (override: `BENCH_INFER_JSON`). `BENCH_SMOKE=1`
+//! clamps budgets for CI.
+
+use std::sync::Arc;
 
 use unzipfpga::arch::{DesignPoint, Platform};
 use unzipfpga::autotune::autotune;
 use unzipfpga::dse::search::{optimise, sweep, DseConfig};
+use unzipfpga::engine::{BackendKind, Engine, SlabCache};
 use unzipfpga::ovsf::basis::{select, BasisSelection, SelectedBasis};
 use unzipfpga::ovsf::codes::OvsfBasis;
 use unzipfpga::ovsf::reconstruct::{Filter3x3Mode, OvsfLayer};
@@ -24,7 +30,7 @@ use unzipfpga::sim::engine::simulate_network_timing;
 use unzipfpga::sim::hw_weights::HwOvsfWeights;
 use unzipfpga::sim::ovsf_gen::OvsfGenerator;
 use unzipfpga::sim::wgen::WGenSim;
-use unzipfpga::util::bench::{bench_auto, smoke_mode};
+use unzipfpga::util::bench::{bench, bench_auto, smoke_mode};
 use unzipfpga::util::prng::Xoshiro256;
 use unzipfpga::workload::{resnet, RatioProfile};
 
@@ -224,6 +230,113 @@ fn bench_ovsf_weights_generation() -> Vec<OvsfRow> {
     rows
 }
 
+struct InferRow {
+    network: String,
+    input_len: usize,
+    slab_budget_bytes: usize,
+    peak_resident_weight_bytes: usize,
+    dense_ovsf_weight_bytes: u64,
+    ns_per_infer: f64,
+    inf_per_s: f64,
+}
+
+fn write_infer_json(rows: &[InferRow]) {
+    let path =
+        std::env::var("BENCH_INFER_JSON").unwrap_or_else(|_| "BENCH_infer.json".to_string());
+    let mut out = String::from("{\n  \"bench\": \"engine-infer-tile-streamed\",\n");
+    out.push_str(&format!("  \"smoke\": {},\n  \"entries\": [\n", smoke_mode()));
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"network\": \"{}\", \"input_len\": {}, \"slab_budget_bytes\": {}, \
+             \"peak_resident_weight_bytes\": {}, \"dense_ovsf_weight_bytes\": {}, \
+             \"ns_per_infer\": {:.1}, \"inf_per_s\": {:.4}}}{}\n",
+            json_escape(&r.network),
+            r.input_len,
+            r.slab_budget_bytes,
+            r.peak_resident_weight_bytes,
+            r.dense_ovsf_weight_bytes,
+            r.ns_per_infer,
+            r.inf_per_s,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(&path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// End-to-end numeric `Engine::infer` on the simulator backend: real
+/// activations through the PE array with per-tile on-the-fly weights
+/// generation under a bounded slab budget. Reports throughput plus the
+/// memory-footprint comparison (full dense materialisation vs measured
+/// peak resident slab bytes).
+fn bench_engine_infer() -> Vec<InferRow> {
+    println!("-- end-to-end Engine::infer (tile-streamed numerics) --");
+    let budget = 8usize << 20; // 8 MiB — a fraction of any ImageNet model
+    let mut rows = Vec::new();
+    for net in [resnet::resnet18(), resnet::resnet50()] {
+        let profile = RatioProfile::ovsf50(&net);
+        let dense_ovsf_weight_bytes: u64 = net
+            .layers
+            .iter()
+            .filter(|l| l.ovsf)
+            .map(|l| {
+                let g = l.gemm();
+                g.p * g.c * std::mem::size_of::<f32>() as u64
+            })
+            .sum();
+        let cache = Arc::new(SlabCache::with_budget(budget));
+        let mut engine = Engine::builder()
+            .platform(Platform::z7045())
+            .bandwidth(4)
+            .design_point(DesignPoint::new(64, 64, 16, 48))
+            .network(net.clone())
+            .profile(profile)
+            .backend(BackendKind::Simulator)
+            .weights_cache(Arc::clone(&cache))
+            .build()
+            .unwrap();
+        let l0 = &net.layers[0];
+        let input_len = (l0.h * l0.w * l0.n_in) as usize;
+        let mut rng = Xoshiro256::seed_from_u64(0x1f3);
+        let input = rng.normal_vec(input_len);
+        // A full ImageNet inference is seconds of scalar GEMM: size the
+        // iteration count directly instead of auto-calibrating (the probe
+        // iteration alone would blow the smoke budget).
+        let iters = if smoke_mode() { 1 } else { 3 };
+        let r = bench(
+            &format!("engine: {} numeric infer (slab budget 8 MiB)", net.name),
+            0,
+            iters,
+            || engine.infer(&input).unwrap().output[0],
+        );
+        let peak = cache.peak_resident_bytes();
+        assert!(
+            peak <= budget,
+            "{}: peak resident weights {peak} exceed the {budget}-byte budget",
+            net.name
+        );
+        println!(
+            "   {}: dense OVSF weights {:.1} MiB vs peak resident {:.2} MiB (budget 8 MiB)",
+            net.name,
+            dense_ovsf_weight_bytes as f64 / (1 << 20) as f64,
+            peak as f64 / (1 << 20) as f64
+        );
+        rows.push(InferRow {
+            network: net.name.clone(),
+            input_len,
+            slab_budget_bytes: budget,
+            peak_resident_weight_bytes: peak,
+            dense_ovsf_weight_bytes,
+            ns_per_infer: r.mean_ns,
+            inf_per_s: 1e9 / r.mean_ns,
+        });
+    }
+    rows
+}
+
 fn main() {
     println!("== L3 hot-path microbenches ==");
     let net = resnet::resnet18();
@@ -275,6 +388,9 @@ fn main() {
 
     let rows = bench_ovsf_weights_generation();
     write_bench_json(&rows);
+
+    let infer_rows = bench_engine_infer();
+    write_infer_json(&infer_rows);
 
     bench_auto("autotune: ResNet18 @ 2x end-to-end", 2000, || {
         autotune(&cfg, &plat, 2, &net).unwrap().final_inf_per_s

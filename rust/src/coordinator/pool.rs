@@ -19,6 +19,16 @@
 //! Worker death is observable: when the last worker exits (panic or
 //! shutdown) the queue closes, pending jobs are dropped and every waiting
 //! handle resolves to an error instead of hanging.
+//!
+//! Engine-backed pools
+//! ([`EngineBuilder::build_pool`](crate::engine::EngineBuilder::build_pool))
+//! serve **real numerics**:
+//! a request whose `input` carries the first layer's `h·w·c_in` NHWC
+//! activations gets back the network's output activations, computed
+//! tile-streamed with on-the-fly generated weights on the simulator
+//! backend (every worker shares one bounded slab cache). An empty `input`
+//! remains a timing-only request; a wrong-length input resolves that
+//! request's handle to an error without disturbing the worker.
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::InferencePlan;

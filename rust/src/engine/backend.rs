@@ -55,7 +55,7 @@ pub struct LayerOutcome {
     /// Dominating pipeline stage.
     pub bound: Bound,
     /// Output activations, if the backend produces numerics (`None` for
-    /// timing-only backends and passthrough layers).
+    /// timing-only backends and timing-only — empty-input — requests).
     pub output: Option<Vec<f32>>,
 }
 
@@ -108,8 +108,10 @@ pub trait ExecutionBackend {
 
     /// Execute layer `idx` of the planned network. `input` carries the
     /// current activations (the request input for layer 0, the previous
-    /// layer's output afterwards); timing-only backends ignore it and
-    /// return `output: None`.
+    /// layer's output afterwards). An **empty** `input` marks a
+    /// timing-only request: numeric backends skip the datapath (and any
+    /// weights generation) and return `output: None`, exactly like
+    /// timing-only backends always do.
     fn execute_layer(&mut self, idx: usize, input: &[f32]) -> Result<LayerOutcome>;
 
     /// Complete one inference: flush per-request state and emit the

@@ -41,7 +41,7 @@ pub use analytical::AnalyticalBackend;
 pub use backend::{EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome};
 pub use pjrt::{PjrtBackend, PjrtConfig};
 pub use sim::SimBackend;
-pub use wcache::{WeightsCache, WeightsKey};
+pub use wcache::{SlabCache, SlabKey, WeightsKey};
 
 use std::sync::Arc;
 
@@ -76,7 +76,8 @@ pub struct Engine {
 pub struct InferenceOutcome {
     /// Cost/trace report from the backend.
     pub report: ExecutionReport,
-    /// Output activations (empty for timing-only backends).
+    /// Output activations (empty for timing-only backends and timing-only
+    /// requests).
     pub output: Vec<f32>,
 }
 
@@ -91,7 +92,7 @@ impl Engine {
     /// precomputation). The simulator backend gets a private weights
     /// cache; use [`EngineBuilder::weights_cache`] to share one.
     pub fn from_plan(plan: EnginePlan, kind: &BackendKind) -> Result<Self> {
-        let backend = make_backend(kind, &Arc::new(WeightsCache::new()))?;
+        let backend = make_backend(kind, &Arc::new(SlabCache::new()))?;
         Self::with_backend(plan, backend)
     }
 
@@ -114,13 +115,47 @@ impl Engine {
 
     /// Run one inference: walk every layer through the backend, threading
     /// activations between layers, then collect the cost/trace report.
+    ///
+    /// A non-empty `input` must be exactly the first layer's `h·w·c_in`
+    /// NHWC activations ([`Error::InvalidConfig`] otherwise); on the
+    /// simulator backend the output then carries real numerics computed
+    /// tile-by-tile with on-the-fly generated weights. An empty `input` is
+    /// a timing-only request (the
+    /// [`Request`](crate::coordinator::server::Request) convention): no
+    /// numerics are computed and no weights are generated.
     pub fn infer(&mut self, input: &[f32]) -> Result<InferenceOutcome> {
+        if !input.is_empty() {
+            if let Some(l0) = self.plan.network.layers.first() {
+                let expect = (l0.h * l0.w * l0.n_in) as usize;
+                if input.len() != expect {
+                    return Err(Error::InvalidConfig(format!(
+                        "input length {} does not match first layer '{}' \
+                         h·w·c_in = {}·{}·{} = {expect}",
+                        input.len(),
+                        l0.name,
+                        l0.h,
+                        l0.w,
+                        l0.n_in
+                    )));
+                }
+            }
+        }
         let n = self.plan.n_layers();
         let mut current: Vec<f32> = Vec::new();
         let mut produced = false;
         for idx in 0..n {
             let layer_input = if produced { current.as_slice() } else { input };
-            let outcome = self.backend.execute_layer(idx, layer_input)?;
+            let outcome = match self.backend.execute_layer(idx, layer_input) {
+                Ok(o) => o,
+                Err(e) => {
+                    // Flush the backend's per-request state (partial layer
+                    // costs, threading shape) so the next request over this
+                    // engine starts clean instead of inheriting the failed
+                    // request's layers in its report.
+                    let _ = self.backend.finish();
+                    return Err(e);
+                }
+            };
             if let Some(out) = outcome.output {
                 current = out;
                 produced = true;
@@ -152,13 +187,14 @@ pub struct EngineBuilder {
     network: Option<Network>,
     profile: Option<RatioProfile>,
     backend: Option<BackendKind>,
-    weights_cache: Option<Arc<WeightsCache>>,
+    weights_cache: Option<Arc<SlabCache>>,
+    slab_budget: Option<usize>,
 }
 
 /// Instantiate a backend of `kind`, wiring the simulator onto `cache`.
 fn make_backend(
     kind: &BackendKind,
-    cache: &Arc<WeightsCache>,
+    cache: &Arc<SlabCache>,
 ) -> Result<Box<dyn ExecutionBackend>> {
     Ok(match kind {
         BackendKind::Analytical => Box::new(AnalyticalBackend::new()),
@@ -204,12 +240,35 @@ impl EngineBuilder {
         self
     }
 
-    /// Share a generated-weights cache across every engine built from this
-    /// builder (default: [`build`](Self::build) gets a private cache;
+    /// Share a generated-weights slab cache across every engine built from
+    /// this builder (default: [`build`](Self::build) gets a private cache;
     /// [`build_pool`](Self::build_pool) always shares one across workers).
-    pub fn weights_cache(mut self, cache: Arc<WeightsCache>) -> Self {
+    /// A shared cache keeps its own byte budget —
+    /// [`slab_budget`](Self::slab_budget) only sizes builder-created
+    /// caches.
+    pub fn weights_cache(mut self, cache: Arc<SlabCache>) -> Self {
         self.weights_cache = Some(cache);
         self
+    }
+
+    /// Byte budget for the generated-weights slab cache the builder
+    /// creates (default: [`SlabCache::DEFAULT_BUDGET`]). Peak resident
+    /// generated weights stay under this budget — the knob trading
+    /// regeneration work for memory, per the paper's on-the-fly premise.
+    pub fn slab_budget(mut self, bytes: usize) -> Self {
+        self.slab_budget = Some(bytes);
+        self
+    }
+
+    /// The slab cache this builder will wire into engines: the shared one
+    /// if given, else a fresh cache sized by the configured budget.
+    fn make_cache(&self) -> Arc<SlabCache> {
+        self.weights_cache.clone().unwrap_or_else(|| {
+            Arc::new(match self.slab_budget {
+                Some(b) => SlabCache::with_budget(b),
+                None => SlabCache::new(),
+            })
+        })
     }
 
     /// Validate the configuration into an [`EnginePlan`] without
@@ -224,6 +283,11 @@ impl EngineBuilder {
         if bw_mult == 0 {
             return Err(Error::InvalidConfig(
                 "EngineBuilder: bandwidth multiplier must be ≥ 1".into(),
+            ));
+        }
+        if self.slab_budget == Some(0) {
+            return Err(Error::InvalidConfig(
+                "EngineBuilder: slab budget must be ≥ 1 byte".into(),
             ));
         }
         if bw_mult > platform.peak_bw_mult {
@@ -285,10 +349,8 @@ impl EngineBuilder {
     /// Validate and construct the [`Engine`].
     pub fn build(self) -> Result<Engine> {
         let plan = self.plan()?;
+        let cache = self.make_cache();
         let kind = self.backend.unwrap_or(BackendKind::Analytical);
-        let cache = self
-            .weights_cache
-            .unwrap_or_else(|| Arc::new(WeightsCache::new()));
         Engine::with_backend(plan, make_backend(&kind, &cache)?)
     }
 
@@ -298,6 +360,12 @@ impl EngineBuilder {
     /// (backends need not be `Send`; PJRT clients are not).
     pub fn build_pool(self, cfg: PoolConfig) -> Result<ServerPool> {
         let plan = self.plan()?;
+        // One bounded slab cache for the whole pool: every worker's
+        // simulator backend shares it, so a hot slab is generated at most
+        // once per process and the byte budget bounds the pool's *cached*
+        // generated weights (each worker additionally pins at most the one
+        // slab it is currently streaming).
+        let cache = self.make_cache();
         let kind = self.backend.unwrap_or(BackendKind::Analytical);
         // Fail fast on the caller thread: a broken backend (missing
         // artifact, stub runtime) should error here, not inside a worker.
@@ -324,12 +392,6 @@ impl EngineBuilder {
             // Analytical/simulator backends are cheap to construct.
             _ => drop(Engine::from_plan(plan.clone(), &kind)?),
         }
-        // One generated-weights cache for the whole pool: every worker's
-        // simulator backend shares it, so each layer's weights are
-        // reconstructed at most once per process, not once per worker.
-        let cache = self
-            .weights_cache
-            .unwrap_or_else(|| Arc::new(WeightsCache::new()));
         let schedule = plan.schedule.clone();
         ServerPool::start(schedule, cfg, move |_worker| EngineExecutor {
             engine: make_backend(&kind, &cache)
@@ -405,24 +467,132 @@ mod tests {
         );
     }
 
+    fn tiny_builder() -> EngineBuilder {
+        let net = crate::workload::Network {
+            name: "tiny".into(),
+            layers: vec![
+                crate::workload::Layer::conv("stem", 8, 8, 4, 8, 3, 1, 1, false),
+                crate::workload::Layer::conv("b.conv1", 8, 8, 8, 8, 3, 1, 1, true),
+                crate::workload::Layer::conv("b.conv2", 8, 8, 8, 16, 3, 2, 1, true),
+            ],
+        };
+        let profile = RatioProfile::uniform(&net, 0.5);
+        Engine::builder()
+            .platform(Platform::z7045())
+            .bandwidth(4)
+            .design_point(DesignPoint::new(8, 4, 8, 4))
+            .network(net)
+            .profile(profile)
+    }
+
     #[test]
     fn builder_shares_weights_cache_across_engines() {
-        let cache = Arc::new(WeightsCache::new());
-        let b = builder()
+        let cache = Arc::new(SlabCache::new());
+        let b = tiny_builder()
             .backend(BackendKind::Simulator)
             .weights_cache(Arc::clone(&cache));
-        let net = resnet::resnet18();
-        let n_ovsf = net.layers.iter().filter(|l| l.ovsf).count() as u64;
         let mut e1 = b.clone().build().unwrap();
         let mut e2 = b.build().unwrap();
+        let input = vec![0.5f32; 8 * 8 * 4];
+        // Timing-only requests never generate.
         e1.infer_timing().unwrap();
-        assert_eq!(cache.misses(), n_ovsf);
-        e2.infer_timing().unwrap();
-        e1.infer_timing().unwrap();
-        assert_eq!(cache.misses(), n_ovsf, "one reconstruction per layer");
-        // e2's cold walk hit the shared cache; e1's warm walk short-circuits
-        // on its own per-layer Arc without touching the lock.
-        assert_eq!(cache.hits(), n_ovsf);
+        assert!(cache.is_empty());
+        // Numeric requests stream slabs through the shared cache: 2 + 4
+        // column tiles at T_C = 4.
+        let o1 = e1.infer(&input).unwrap();
+        assert_eq!(cache.misses(), 6);
+        let o2 = e2.infer(&input).unwrap();
+        assert_eq!(cache.misses(), 6, "second engine reuses every slab");
+        assert_eq!(cache.hits(), 6);
+        assert_eq!(o1.output, o2.output, "engines agree on the numerics");
+        assert!(!o1.output.is_empty());
+    }
+
+    #[test]
+    fn infer_validates_input_length() {
+        let mut engine = tiny_builder()
+            .backend(BackendKind::Simulator)
+            .build()
+            .unwrap();
+        let err = engine.infer(&[0.0; 7]).err().expect("wrong length");
+        assert!(matches!(err, Error::InvalidConfig(_)), "{err}");
+        assert!(err.to_string().contains("h·w·c_in"), "{err}");
+        // The exact length and the timing-only (empty) convention both pass.
+        engine.infer(&vec![0.0; 8 * 8 * 4]).unwrap();
+        engine.infer(&[]).unwrap();
+    }
+
+    /// Backend that errors once at layer 2, then serves normally — for
+    /// checking that `Engine::infer` flushes per-request backend state on
+    /// failure instead of leaking it into the next request's report.
+    struct FailOnce {
+        failed: bool,
+        executed: Vec<LayerCost>,
+    }
+
+    impl ExecutionBackend for FailOnce {
+        fn name(&self) -> &'static str {
+            "fail-once"
+        }
+
+        fn plan(&mut self, _plan: &EnginePlan) -> Result<()> {
+            Ok(())
+        }
+
+        fn execute_layer(&mut self, idx: usize, _input: &[f32]) -> Result<LayerOutcome> {
+            if !self.failed && idx == 2 {
+                self.failed = true;
+                return Err(Error::ShapeMismatch("injected mid-request failure".into()));
+            }
+            self.executed.push(LayerCost {
+                name: format!("l{idx}"),
+                cycles: 1.0,
+                bound: crate::perf::Bound::Compute,
+            });
+            Ok(LayerOutcome {
+                name: format!("l{idx}"),
+                cycles: 1.0,
+                bound: crate::perf::Bound::Compute,
+                output: None,
+            })
+        }
+
+        fn finish(&mut self) -> Result<ExecutionReport> {
+            let layers = std::mem::take(&mut self.executed);
+            let total_cycles: f64 = layers.iter().map(|l| l.cycles).sum();
+            Ok(ExecutionReport {
+                backend: "fail-once",
+                layers,
+                total_cycles,
+                latency_s: 0.0,
+            })
+        }
+    }
+
+    #[test]
+    fn failed_request_does_not_leak_layers_into_the_next_report() {
+        let plan = tiny_builder().plan().unwrap();
+        let n = plan.n_layers();
+        let backend = FailOnce {
+            failed: false,
+            executed: Vec::new(),
+        };
+        let mut engine = Engine::with_backend(plan, Box::new(backend)).unwrap();
+        assert!(engine.infer_timing().is_err(), "first request must fail");
+        let report = engine.infer_timing().unwrap();
+        assert_eq!(
+            report.layers.len(),
+            n,
+            "failed request's partial layers leaked into the next report"
+        );
+        assert!((report.total_cycles - n as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slab_budget_must_be_positive() {
+        let built = tiny_builder().slab_budget(0).build();
+        let err = built.err().expect("budget 0 must be rejected");
+        assert!(matches!(err, Error::InvalidConfig(_)), "{err}");
     }
 
     #[test]

@@ -61,7 +61,7 @@ pub mod prelude {
     pub use crate::arch::{DesignPoint, Platform};
     pub use crate::coordinator::pool::{PoolConfig, ServerPool};
     pub use crate::dse::search::DseResult;
-    pub use crate::engine::{BackendKind, Engine, EngineBuilder, ExecutionBackend, WeightsCache};
+    pub use crate::engine::{BackendKind, Engine, EngineBuilder, ExecutionBackend, SlabCache};
     pub use crate::error::{Error, Result};
     pub use crate::ovsf::codes::OvsfBasis;
     pub use crate::perf::model::{LayerPerf, PerfModel};

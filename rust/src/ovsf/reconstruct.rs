@@ -193,11 +193,57 @@ impl OvsfLayer {
         })
     }
 
-    /// Reconstruct the dense `n_out·n_in·k·k` weights (the software oracle
-    /// of what CNN-WGen produces in hardware).
-    pub fn reconstruct(&self) -> Result<Vec<f32>> {
+    /// Tile-granular reconstruction: filters `[o0, o1)` only — one column
+    /// slab of the layer in GEMM terms — written into the caller's `out`
+    /// (`(o1−o0)·n_in·k·k` dense layout), with `scratch`/`frame` reused
+    /// across calls. This is the bounded-memory unit the streaming engine
+    /// consumes: a caller walking slabs never holds more than one slab of
+    /// dense weights plus the O(L) scratch.
+    pub fn reconstruct_filters_into(
+        &self,
+        o0: usize,
+        o1: usize,
+        scratch: &mut Vec<f64>,
+        frame: &mut Vec<f32>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if o0 >= o1 || o1 > self.n_out {
+            return Err(Error::ShapeMismatch(format!(
+                "filter slab [{o0}, {o1}) out of range for n_out = {}",
+                self.n_out
+            )));
+        }
         let l = self.code_len();
         let basis = OvsfBasis::new(l)?;
+        let filter_stride = self.n_in * self.k * self.k;
+        if out.len() != (o1 - o0) * filter_stride {
+            return Err(Error::ShapeMismatch(format!(
+                "slab output length {} != {}·{filter_stride}",
+                out.len(),
+                o1 - o0
+            )));
+        }
+        let chunk = self.k_ovsf * self.k_ovsf;
+        let sels = self.filters[o0..o1].iter();
+        for (sel, dst) in sels.zip(out.chunks_mut(filter_stride)) {
+            reconstruct_into(&basis, sel, scratch, frame); // n_in × k' × k'
+            for c in 0..self.n_in {
+                let plane = &frame[c * chunk..(c + 1) * chunk];
+                let extracted = extract_kxk(plane, self.k_ovsf, self.k, self.mode);
+                dst[c * self.k * self.k..(c + 1) * self.k * self.k]
+                    .copy_from_slice(&extracted);
+            }
+        }
+        Ok(())
+    }
+
+    /// Reconstruct the dense `n_out·n_in·k·k` weights (the software oracle
+    /// of what CNN-WGen produces in hardware). Sharded across threads, each
+    /// worker streaming its contiguous filter slab through
+    /// [`reconstruct_filters_into`](Self::reconstruct_filters_into).
+    pub fn reconstruct(&self) -> Result<Vec<f32>> {
+        let l = self.code_len();
+        OvsfBasis::new(l)?; // validate geometry before spawning workers
         let filter_stride = self.n_in * self.k * self.k;
         let mut out = vec![0.0f32; self.n_out * filter_stride];
         let n_threads = filter_threads(self.n_out, l);
@@ -207,20 +253,13 @@ impl OvsfLayer {
             // filter shard) plus scratch buffers reused across its filters.
             let shard_elems = (shard_len * filter_stride).max(1);
             for (shard, out_shard) in out.chunks_mut(shard_elems).enumerate() {
-                let sels = &self.filters[shard * shard_len..];
                 scope.spawn(move || {
                     let mut scratch: Vec<f64> = Vec::with_capacity(l);
-                    let mut full: Vec<f32> = Vec::with_capacity(l);
-                    let frame = self.k_ovsf * self.k_ovsf;
-                    for (sel, dst) in sels.iter().zip(out_shard.chunks_mut(filter_stride)) {
-                        reconstruct_into(&basis, sel, &mut scratch, &mut full); // n_in × k' × k'
-                        for c in 0..self.n_in {
-                            let plane = &full[c * frame..(c + 1) * frame];
-                            let extracted = extract_kxk(plane, self.k_ovsf, self.k, self.mode);
-                            dst[c * self.k * self.k..(c + 1) * self.k * self.k]
-                                .copy_from_slice(&extracted);
-                        }
-                    }
+                    let mut frame: Vec<f32> = Vec::with_capacity(l);
+                    let o0 = shard * shard_len;
+                    let o1 = (o0 + shard_len).min(self.n_out);
+                    self.reconstruct_filters_into(o0, o1, &mut scratch, &mut frame, out_shard)
+                        .expect("shard bounds derive from n_out");
                 });
             }
         });
@@ -351,6 +390,45 @@ mod tests {
             assert!(err <= prev + 1e-9, "error not monotone at ρ={rho}");
             prev = err;
         }
+    }
+
+    #[test]
+    fn filter_slabs_match_full_reconstruction() {
+        forall("ovsf-filter-slabs", 8, |rng| {
+            let (n_out, n_in, k) = (5usize, 4usize, 3usize);
+            let w = rand_weights(rng, n_out * n_in * k * k);
+            let layer = OvsfLayer::from_weights(
+                &w,
+                n_out,
+                n_in,
+                k,
+                *rng.choose(&[0.5, 1.0]),
+                BasisSelection::IterativeDrop,
+                Filter3x3Mode::Crop,
+            )
+            .unwrap();
+            let full = layer.reconstruct().unwrap();
+            let stride = n_in * k * k;
+            let slab_w = rng.gen_range(1, n_out as u64 + 1) as usize;
+            let mut scratch = Vec::new();
+            let mut frame = Vec::new();
+            for o0 in (0..n_out).step_by(slab_w) {
+                let o1 = (o0 + slab_w).min(n_out);
+                let mut slab = vec![0.0f32; (o1 - o0) * stride];
+                layer
+                    .reconstruct_filters_into(o0, o1, &mut scratch, &mut frame, &mut slab)
+                    .unwrap();
+                assert_eq!(slab, full[o0 * stride..o1 * stride].to_vec());
+            }
+            // Bad ranges and lengths are rejected.
+            let mut bad = vec![0.0f32; stride];
+            assert!(layer
+                .reconstruct_filters_into(n_out, n_out + 1, &mut scratch, &mut frame, &mut bad)
+                .is_err());
+            assert!(layer
+                .reconstruct_filters_into(0, 2, &mut scratch, &mut frame, &mut bad)
+                .is_err());
+        });
     }
 
     #[test]

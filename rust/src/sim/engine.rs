@@ -136,6 +136,60 @@ impl<'a> LayerSim<'a> {
         let trace = self.run_timing(layer, Some(wg.cycles_per_output_tile));
         (trace, r.out)
     }
+
+    /// Full numeric execution of an OVSF layer **without ever
+    /// materialising the dense weights**: one `P×T_C` slab is generated
+    /// per column tile ([`HwOvsfWeights::slab_into`]) and streamed through
+    /// the PE array row-strip by row-strip
+    /// ([`PeArraySim::execute_strip`]) — the software mirror of the
+    /// paper's on-chip dataflow. Peak live dense weights are one slab.
+    /// Output matches [`execute_ovsf`](Self::execute_ovsf) up to FWHT
+    /// rounding. This is the *uncached* reference form of the loop the
+    /// engine's `SimBackend::forward_layer` drives (which adds the slab
+    /// cache and activation refitting); the test below keeps the two
+    /// dataflows honest against the full-materialisation path.
+    pub fn execute_ovsf_streamed(
+        &self,
+        layer: &Layer,
+        w: &HwOvsfWeights,
+        act: &[f32],
+    ) -> (LayerTrace, Vec<f32>) {
+        let g = layer.gemm();
+        assert_eq!(act.len(), (g.r * g.p) as usize, "activations shape");
+        assert_eq!(w.p_dim() as u64, g.p, "hw weights match layer P");
+        assert_eq!(w.n_out as u64, g.c, "hw weights match layer C");
+        let (r, p, c) = (g.r as usize, g.p as usize, g.c as usize);
+        let (t_r, t_c) = (self.sigma.t_r as usize, self.sigma.t_c as usize);
+        let pe = PeArraySim::new(self.sigma, self.selective);
+        let mut out = vec![0.0f32; r * c];
+        let mut scratch = Vec::new();
+        let mut slab = Vec::new();
+        for c0 in (0..c).step_by(t_c) {
+            let c1 = (c0 + t_c).min(c);
+            w.slab_into(c0, c1, &mut scratch, &mut slab)
+                .expect("column range derives from C");
+            for r0 in (0..r).step_by(t_r) {
+                let r1 = (r0 + t_r).min(r);
+                pe.execute_strip(
+                    &act[r0 * p..r1 * p],
+                    &slab,
+                    r1 - r0,
+                    p,
+                    c1 - c0,
+                    &mut out[r0 * c..r1 * c],
+                    c,
+                    c0,
+                );
+            }
+        }
+        // Alg. 1's per-tile generation cycles: `w.n_basis` is exactly the
+        // layer's ⌊ρ·K'²⌉ basis count.
+        let wg_cycles = w.n_basis as u64
+            * self.sigma.subtiles_per_tile()
+            * ceil_div(g.p, self.sigma.t_p);
+        let trace = self.run_timing(layer, Some(wg_cycles));
+        (trace, out)
+    }
 }
 
 /// Simulate a whole network (timing only) under on-the-fly execution.
@@ -250,6 +304,27 @@ mod tests {
         }
         for (o, e) in out.iter().zip(&expect) {
             assert!((o - e).abs() < 1e-3 * e.abs().max(1.0), "{o} vs {e}");
+        }
+    }
+
+    #[test]
+    fn streamed_execution_matches_full_materialisation() {
+        // Slab-streamed numerics and cycle counts must agree with the
+        // full-weights TiWGen path (up to FWHT rounding on the weights).
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        let layer = Layer::conv("small", 6, 6, 4, 10, 3, 1, 1, true);
+        let g = layer.gemm();
+        let w = HwOvsfWeights::random(&mut rng, 10, 4, 3, 0.5).unwrap();
+        let act = rng.normal_vec((g.r * g.p) as usize);
+        let sigma = DesignPoint::new(16, 8, 8, 4); // T_C=4 ⇒ 3 slabs, edge tile
+        let platform = Platform::z7045();
+        let sim = LayerSim::new(&sigma, &platform, 4);
+        let (trace_full, out_full) = sim.execute_ovsf(&layer, &w, &act);
+        let (trace_streamed, out_streamed) = sim.execute_ovsf_streamed(&layer, &w, &act);
+        assert_eq!(trace_full.total_cycles, trace_streamed.total_cycles);
+        assert_eq!(out_full.len(), out_streamed.len());
+        for (a, b) in out_full.iter().zip(&out_streamed) {
+            assert!((a - b).abs() < 1e-3 * a.abs().max(1.0), "{a} vs {b}");
         }
     }
 

@@ -3,7 +3,9 @@
 //! equivalent to the paper's length-`L` formulation).
 
 use crate::error::{Error, Result};
+use crate::ovsf::basis::SelectedBasis;
 use crate::ovsf::codes::OvsfBasis;
+use crate::ovsf::regress::reconstruct_into;
 use crate::util::{is_pow2, n_basis, next_pow2};
 use crate::util::prng::Xoshiro256;
 
@@ -165,6 +167,52 @@ impl HwOvsfWeights {
     pub fn n_alphas(&self) -> usize {
         self.alphas.len()
     }
+
+    /// Tile-granular generation: reconstruct weight columns `[c0, c1)` of
+    /// the engine `P×C` GEMM matrix — one `P×(c1−c0)` slab, row-major
+    /// `out[p·cols + (o−c0)]` — into caller scratch via the FWHT
+    /// [`reconstruct_into`] path (one inverse transform per `(o, c)`
+    /// chunk). This is the unit the engine's
+    /// [`SlabCache`](crate::engine::wcache::SlabCache) stores: peak
+    /// resident generated weights stay O(slab), never O(layer).
+    pub fn slab_into(
+        &self,
+        c0: usize,
+        c1: usize,
+        scratch: &mut Vec<f64>,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        if c0 >= c1 || c1 > self.n_out {
+            return Err(Error::ShapeMismatch(format!(
+                "slab columns [{c0}, {c1}) out of range for C = {}",
+                self.n_out
+            )));
+        }
+        let chunk = self.chunk_len();
+        let basis = OvsfBasis::new(chunk)?;
+        let ek = self.engine_chunk();
+        let cols = c1 - c0;
+        out.clear();
+        out.resize(self.p_dim() * cols, 0.0);
+        // The hardware's Sequential layout keeps codes 0..n_basis; reuse
+        // one SelectedBasis, swapping each chunk's α's in.
+        let mut sel = SelectedBasis {
+            indices: (0..self.n_basis).collect(),
+            alphas: vec![0.0f32; self.n_basis],
+        };
+        let mut frame: Vec<f32> = Vec::with_capacity(chunk);
+        for (oi, o) in (c0..c1).enumerate() {
+            for c in 0..self.n_in {
+                let base = (o * self.n_in + c) * self.n_basis;
+                sel.alphas.copy_from_slice(&self.alphas[base..base + self.n_basis]);
+                reconstruct_into(&basis, &sel, scratch, &mut frame);
+                for kpos in 0..ek {
+                    out[(c * ek + kpos) * cols + oi] = frame[self.frame_pos(kpos)];
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -203,6 +251,49 @@ mod tests {
         assert_eq!(hw.k_ovsf, 4);
         assert_eq!(hw.n_basis, 8); // ⌊0.5·16⌉
         assert_eq!(hw.n_alphas(), 8 * 4 * 8);
+    }
+
+    #[test]
+    fn slab_into_matches_dense_gemm_columns() {
+        // The tile-granular slabs, stitched together at any column-tile
+        // width, must reproduce the dense oracle exactly.
+        forall("hw-weights-slabs", 16, |rng| {
+            let n_out = rng.gen_range(2, 10) as usize;
+            let n_in = 1usize << rng.gen_range(0, 3);
+            let k = *rng.choose(&[1usize, 2, 3, 4]);
+            let rho = *rng.choose(&[0.25, 0.5, 1.0]);
+            let hw = HwOvsfWeights::random(rng, n_out, n_in, k, rho).unwrap();
+            let dense = hw.dense_gemm().unwrap();
+            let t_c = rng.gen_range(1, n_out as u64 + 2) as usize;
+            let mut scratch = Vec::new();
+            let mut slab = Vec::new();
+            let p_dim = hw.p_dim();
+            for c0 in (0..n_out).step_by(t_c) {
+                let c1 = (c0 + t_c).min(n_out);
+                hw.slab_into(c0, c1, &mut scratch, &mut slab).unwrap();
+                assert_eq!(slab.len(), p_dim * (c1 - c0));
+                for p in 0..p_dim {
+                    for (oi, o) in (c0..c1).enumerate() {
+                        let got = slab[p * (c1 - c0) + oi];
+                        let expect = dense[p * n_out + o];
+                        assert!(
+                            (got - expect).abs() < 1e-4,
+                            "p={p} o={o}: {got} vs {expect}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn slab_into_rejects_bad_ranges() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let hw = HwOvsfWeights::random(&mut rng, 4, 2, 3, 0.5).unwrap();
+        let (mut s, mut o) = (Vec::new(), Vec::new());
+        assert!(hw.slab_into(0, 5, &mut s, &mut o).is_err());
+        assert!(hw.slab_into(2, 2, &mut s, &mut o).is_err());
+        assert!(hw.slab_into(3, 4, &mut s, &mut o).is_ok());
     }
 
     #[test]

@@ -10,36 +10,47 @@ use crate::workload::layer::Layer;
 /// Lower one NHWC feature map (`h×w×c_in`, batch 1) to the layer's `R×P`
 /// GEMM activations with SAME-style padding described by the layer.
 pub fn im2col(layer: &Layer, x: &[f32]) -> Vec<f32> {
+    let r = (layer.out_h() * layer.out_w()) as usize;
+    let mut out = Vec::new();
+    im2col_strip_into(layer, x, 0, r, &mut out);
+    out
+}
+
+/// Lower only patch rows `[r0, r1)` — one activation row-strip of the
+/// `R×P` GEMM view — into caller scratch (`out` is cleared and refilled to
+/// `(r1−r0)·P`). The tile-streamed engine builds activations a `T_R`-strip
+/// at a time with this entry point, so activation lowering never costs
+/// more scratch than one strip.
+pub fn im2col_strip_into(layer: &Layer, x: &[f32], r0: usize, r1: usize, out: &mut Vec<f32>) {
     let (h, w, c_in) = (layer.h as usize, layer.w as usize, layer.n_in as usize);
     assert_eq!(x.len(), h * w * c_in, "input must be h·w·c_in NHWC");
+    let out_w = layer.out_w() as usize;
+    let r_dim = layer.out_h() as usize * out_w;
+    assert!(r0 < r1 && r1 <= r_dim, "strip [{r0}, {r1}) out of R = {r_dim}");
     let k = layer.k as usize;
     let s = layer.stride as usize;
     let pad = layer.pad as usize;
-    let out_h = layer.out_h() as usize;
-    let out_w = layer.out_w() as usize;
     let p_dim = c_in * k * k;
-    let mut out = vec![0.0f32; out_h * out_w * p_dim];
-    for oy in 0..out_h {
-        for ox in 0..out_w {
-            let r = oy * out_w + ox;
-            for c in 0..c_in {
-                for kh in 0..k {
-                    for kw in 0..k {
-                        let iy = (oy * s + kh) as isize - pad as isize;
-                        let ix = (ox * s + kw) as isize - pad as isize;
-                        let v = if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w
-                        {
-                            x[(iy as usize * w + ix as usize) * c_in + c]
-                        } else {
-                            0.0 // zero padding
-                        };
-                        out[r * p_dim + c * k * k + kh * k + kw] = v;
-                    }
+    out.clear();
+    out.resize((r1 - r0) * p_dim, 0.0);
+    for r in r0..r1 {
+        let (oy, ox) = (r / out_w, r % out_w);
+        let row = &mut out[(r - r0) * p_dim..(r - r0 + 1) * p_dim];
+        for c in 0..c_in {
+            for kh in 0..k {
+                for kw in 0..k {
+                    let iy = (oy * s + kh) as isize - pad as isize;
+                    let ix = (ox * s + kw) as isize - pad as isize;
+                    let v = if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w {
+                        x[(iy as usize * w + ix as usize) * c_in + c]
+                    } else {
+                        0.0 // zero padding
+                    };
+                    row[c * k * k + kh * k + kw] = v;
                 }
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -79,6 +90,24 @@ mod tests {
         let g = layer.gemm();
         assert_eq!(m.len(), (g.r * g.p) as usize);
         assert_eq!(g.r, 16); // 4×4 outputs
+    }
+
+    #[test]
+    fn strips_tile_the_full_lowering() {
+        let layer = Layer::conv("c", 6, 6, 2, 4, 3, 1, 1, false);
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(7);
+        let x = rng.normal_vec(6 * 6 * 2);
+        let full = im2col(&layer, &x);
+        let g = layer.gemm();
+        let p = g.p as usize;
+        let mut strip = Vec::new();
+        for t_r in [1usize, 4, 7, g.r as usize] {
+            for r0 in (0..g.r as usize).step_by(t_r) {
+                let r1 = (r0 + t_r).min(g.r as usize);
+                im2col_strip_into(&layer, &x, r0, r1, &mut strip);
+                assert_eq!(strip.as_slice(), &full[r0 * p..r1 * p], "T_R={t_r} r0={r0}");
+            }
+        }
     }
 
     #[test]

@@ -64,36 +64,90 @@ impl<'a> PeArraySim<'a> {
         refined.max(floor).min(plain)
     }
 
+    /// Streamed tile-GEMM entry point: multiply one activation row-strip
+    /// (`act`, `rows×p` row-major) by one weight *slab* (`slab`, `p×cols`
+    /// row-major — columns `[col_offset, col_offset+cols)` of the layer's
+    /// `P×C` weights) and accumulate into the matching columns of the
+    /// output strip `out` (`rows×out_stride` row-major). This is what the
+    /// engine backend drives per `(row strip, weight slab)` pair while
+    /// slabs are generated on the fly, so dense weights never need to
+    /// exist beyond one slab.
+    ///
+    /// Returns the engine cycles charged for this strip×slab pass under
+    /// the active schedule (plain, or input-selective work-stealing when
+    /// the slab has fewer live columns than `T_C`). Numerics are identical
+    /// under both schedules — only the cycle count differs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_strip(
+        &self,
+        act: &[f32],
+        slab: &[f32],
+        rows: usize,
+        p: usize,
+        cols: usize,
+        out: &mut [f32],
+        out_stride: usize,
+        col_offset: usize,
+    ) -> u64 {
+        assert_eq!(act.len(), rows * p, "activation strip shape");
+        assert_eq!(slab.len(), p * cols, "weight slab shape");
+        assert_eq!(out.len(), rows * out_stride, "output strip shape");
+        assert!(col_offset + cols <= out_stride, "slab overruns output");
+        let t_p = self.sigma.t_p as usize;
+        // Output-stationary depth walk: partial sums stay in the strip
+        // accumulators across the `⌈p/T_P⌉` depth tiles. The inner loop
+        // runs axpy-style over the slab columns so it vectorises.
+        for p0 in (0..p).step_by(t_p) {
+            let p1 = (p0 + t_p).min(p);
+            for ri in 0..rows {
+                let arow = &act[ri * p..(ri + 1) * p];
+                let obase = ri * out_stride + col_offset;
+                let orow = &mut out[obase..obase + cols];
+                for pi in p0..p1 {
+                    let a = arow[pi];
+                    let wrow = &slab[pi * cols..(pi + 1) * cols];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += a * wv;
+                    }
+                }
+            }
+        }
+        let p_tiles = (p as u64).div_ceil(self.sigma.t_p);
+        self.tile_cycles(rows as u64, p_tiles, cols as u64)
+    }
+
     /// Full numeric execution of one layer's GEMM
     /// (`act`: `R×P` row-major, `weights`: `P×C` row-major) with exact tile
-    /// walking. Returns the output and the steady-state tile cycle count.
+    /// walking — a driver looping [`execute_strip`](Self::execute_strip)
+    /// over every `(row strip, column tile)` pair. Returns the output and
+    /// the steady-state tile cycle count.
     pub fn execute(&self, act: &[f32], weights: &[f32], r: usize, p: usize, c: usize) -> PeArrayResult {
         assert_eq!(act.len(), r * p);
         assert_eq!(weights.len(), p * c);
         let t_r = self.sigma.t_r as usize;
-        let t_p = self.sigma.t_p as usize;
         let t_c = self.sigma.t_c as usize;
         let mut out = vec![0.0f32; r * c];
-        let mut macs = 0u64;
-        // Tile walk: output-stationary — partial sums stay in the tile
-        // accumulators across the depth (P) loop.
-        for r0 in (0..r).step_by(t_r) {
-            let r1 = (r0 + t_r).min(r);
-            for c0 in (0..c).step_by(t_c) {
-                let c1 = (c0 + t_c).min(c);
-                for p0 in (0..p).step_by(t_p) {
-                    let p1 = (p0 + t_p).min(p);
-                    for ri in r0..r1 {
-                        for ci in c0..c1 {
-                            let mut acc = 0.0f32;
-                            for pi in p0..p1 {
-                                acc += act[ri * p + pi] * weights[pi * c + ci];
-                                macs += 1;
-                            }
-                            out[ri * c + ci] += acc;
-                        }
-                    }
-                }
+        let mut slab = Vec::new();
+        for c0 in (0..c).step_by(t_c) {
+            let c1 = (c0 + t_c).min(c);
+            // Slice the column tile out of the dense matrix — standing in
+            // for a generated slab.
+            slab.clear();
+            for row in weights.chunks_exact(c) {
+                slab.extend_from_slice(&row[c0..c1]);
+            }
+            for r0 in (0..r).step_by(t_r) {
+                let r1 = (r0 + t_r).min(r);
+                self.execute_strip(
+                    &act[r0 * p..r1 * p],
+                    &slab,
+                    r1 - r0,
+                    p,
+                    c1 - c0,
+                    &mut out[r0 * c..r1 * c],
+                    c,
+                    c0,
+                );
             }
         }
         let p_tiles = (p as u64).div_ceil(self.sigma.t_p);
@@ -102,7 +156,7 @@ impl<'a> PeArraySim<'a> {
         PeArrayResult {
             out,
             cycles_per_tile,
-            macs,
+            macs: (r * p * c) as u64,
         }
     }
 
@@ -239,6 +293,53 @@ mod tests {
         let sel = sim.tile_cycles(128, 1, 96);
         let gain = plain as f64 / sel as f64;
         assert!(gain > 1.05 && gain < 1.4, "gain {gain}");
+    }
+
+    #[test]
+    fn strip_entry_point_matches_reference_and_schedules_agree_numerically() {
+        forall("pe-strip-gemm", 16, |rng| {
+            let rows = rng.gen_range(1, 12) as usize;
+            let p = rng.gen_range(2, 20) as usize;
+            let c = rng.gen_range(1, 10) as usize;
+            let act = rng.normal_vec(rows * p);
+            let dense = rng.normal_vec(p * c);
+            // T_C > C so the input-selective schedule actually engages.
+            let sigma = DesignPoint::new(8, 16, rng.gen_range(2, 6), c as u64 + 4);
+            let plain = PeArraySim::new(&sigma, false);
+            let selective = PeArraySim::new(&sigma, true);
+            let mut out_p = vec![0.0f32; rows * c];
+            let mut out_s = vec![0.0f32; rows * c];
+            let cyc_p = plain.execute_strip(&act, &dense, rows, p, c, &mut out_p, c, 0);
+            let cyc_s = selective.execute_strip(&act, &dense, rows, p, c, &mut out_s, c, 0);
+            assert_eq!(out_p, out_s, "schedules must not change numerics");
+            assert!(cyc_s <= cyc_p, "work stealing can only help");
+            let expect = ref_matmul(&act, &dense, rows, p, c);
+            for (g, e) in out_p.iter().zip(&expect) {
+                assert!((g - e).abs() < 1e-3 * e.abs().max(1.0), "{g} vs {e}");
+            }
+        });
+    }
+
+    #[test]
+    fn strip_accumulates_at_column_offset() {
+        // Two slabs written at their offsets reproduce the full GEMM.
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let (rows, p, c) = (4usize, 6usize, 5usize);
+        let act = rng.normal_vec(rows * p);
+        let dense = rng.normal_vec(p * c);
+        let sigma = DesignPoint::new(8, 4, 4, 3);
+        let sim = PeArraySim::new(&sigma, true);
+        let mut out = vec![0.0f32; rows * c];
+        for (c0, c1) in [(0usize, 3usize), (3, 5)] {
+            let slab: Vec<f32> = (0..p)
+                .flat_map(|pi| dense[pi * c + c0..pi * c + c1].to_vec())
+                .collect();
+            sim.execute_strip(&act, &slab, rows, p, c1 - c0, &mut out, c, c0);
+        }
+        let expect = ref_matmul(&act, &dense, rows, p, c);
+        for (g, e) in out.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-4 * e.abs().max(1.0));
+        }
     }
 
     #[test]
