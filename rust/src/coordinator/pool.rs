@@ -26,9 +26,14 @@
 //! a request whose `input` carries the first layer's `h·w·c_in` NHWC
 //! activations gets back the network's output activations, computed
 //! tile-streamed with on-the-fly generated weights on the simulator
-//! backend (every worker shares one bounded slab cache). An empty `input`
-//! remains a timing-only request; a wrong-length input resolves that
-//! request's handle to an error without disturbing the worker.
+//! backend (every worker shares one bounded slab cache). Numeric requests
+//! that land in the same popped batch **fold their batch dimension into
+//! GEMM rows** (`Engine::infer_batch` via the executor's
+//! [`execute_batch`](RequestExecutor::execute_batch) override), so each
+//! generated weight slab is amortised across the whole batch — slab-cache
+//! misses do not scale with batch size. An empty `input` remains a
+//! timing-only request; a wrong-length input resolves that request's
+//! handle to an error without disturbing the worker or its batchmates.
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::InferencePlan;
@@ -96,7 +101,10 @@ pub trait RequestExecutor {
     fn execute(&mut self, req: &Request) -> Result<Vec<f32>>;
 
     /// Execute a batch (default: per-request loop, one result per request
-    /// in order).
+    /// in order). Batch-aware executors override this to amortise
+    /// per-batch work — the engine executor folds same-shape numeric
+    /// requests into one batched inference so weight slabs are generated
+    /// once per layer pass for the whole batch.
     fn execute_batch(&mut self, batch: &[Request]) -> Vec<Result<Vec<f32>>> {
         batch.iter().map(|r| self.execute(r)).collect()
     }

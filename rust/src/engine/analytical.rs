@@ -2,7 +2,7 @@
 //! model (Eqs. 5–8). Timing only; no numerics.
 
 use crate::engine::backend::{
-    EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome,
+    EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome, OverlapTelemetry,
 };
 use crate::error::{Error, Result};
 use crate::perf::model::{NetworkPerf, PerfModel};
@@ -64,12 +64,14 @@ impl ExecutionBackend for AnalyticalBackend {
             name: name.clone(),
             cycles,
             bound,
+            overlap: OverlapTelemetry::default(),
         });
         Ok(LayerOutcome {
             name,
             cycles,
             bound,
             output: None,
+            overlap: OverlapTelemetry::default(),
         })
     }
 

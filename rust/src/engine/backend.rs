@@ -45,6 +45,43 @@ impl EnginePlan {
     }
 }
 
+/// Wall-clock overlap telemetry for one layer pass on a numeric backend:
+/// how much of the weights-generation (prefetch) time was hidden behind PE
+/// compute. All zeros on timing-only backends/requests and on the serial
+/// datapath's `hidden_ns`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OverlapTelemetry {
+    /// Nanoseconds the generation stage spent producing this layer's weight
+    /// slabs (cache hits cost ~0; includes inline generation on the serial
+    /// path).
+    pub gen_ns: u64,
+    /// Nanoseconds the compute stage spent multiplying strips by slabs.
+    pub compute_ns: u64,
+    /// Generation nanoseconds hidden behind compute: `gen_ns` minus the
+    /// time the compute stage actually stalled waiting for a slab
+    /// (saturating). Always 0 on the serial datapath.
+    pub hidden_ns: u64,
+}
+
+impl OverlapTelemetry {
+    /// Accumulate another layer's (or tile's) telemetry into this one.
+    pub fn accumulate(&mut self, other: &OverlapTelemetry) {
+        self.gen_ns += other.gen_ns;
+        self.compute_ns += other.compute_ns;
+        self.hidden_ns += other.hidden_ns;
+    }
+
+    /// Fraction of generation time hidden behind compute (0 when no
+    /// generation ran).
+    pub fn hidden_frac(&self) -> f64 {
+        if self.gen_ns == 0 {
+            0.0
+        } else {
+            self.hidden_ns as f64 / self.gen_ns as f64
+        }
+    }
+}
+
 /// Outcome of executing one layer on a backend.
 #[derive(Clone, Debug)]
 pub struct LayerOutcome {
@@ -57,6 +94,10 @@ pub struct LayerOutcome {
     /// Output activations, if the backend produces numerics (`None` for
     /// timing-only backends and timing-only — empty-input — requests).
     pub output: Option<Vec<f32>>,
+    /// Generation/compute overlap telemetry for this layer pass. For
+    /// batched execution every per-image outcome carries the whole batch
+    /// pass's telemetry (the pass runs once for the batch).
+    pub overlap: OverlapTelemetry,
 }
 
 /// Per-layer cost entry of an [`ExecutionReport`].
@@ -68,6 +109,8 @@ pub struct LayerCost {
     pub cycles: f64,
     /// Dominating pipeline stage.
     pub bound: Bound,
+    /// Generation/compute overlap telemetry (zeros on timing-only paths).
+    pub overlap: OverlapTelemetry,
 }
 
 /// The cost/trace output a backend emits when an inference finishes.
@@ -92,6 +135,15 @@ impl ExecutionReport {
             1.0 / self.latency_s
         }
     }
+
+    /// Aggregate generation/compute overlap telemetry across all layers.
+    pub fn overlap(&self) -> OverlapTelemetry {
+        let mut total = OverlapTelemetry::default();
+        for l in &self.layers {
+            total.accumulate(&l.overlap);
+        }
+        total
+    }
 }
 
 /// A pluggable execution path behind the [`Engine`](crate::engine::Engine)
@@ -113,6 +165,23 @@ pub trait ExecutionBackend {
     /// weights generation) and return `output: None`, exactly like
     /// timing-only backends always do.
     fn execute_layer(&mut self, idx: usize, input: &[f32]) -> Result<LayerOutcome>;
+
+    /// Execute layer `idx` for a whole batch of activations at once — the
+    /// entry point that lets a backend amortise per-layer work (e.g. weight
+    /// slab generation) across the batch by folding the batch dimension
+    /// into GEMM rows. Every input must be non-empty and the outcomes are
+    /// returned in input order.
+    ///
+    /// The default loops [`execute_layer`](Self::execute_layer) per input —
+    /// correct only for backends without cross-layer per-request state.
+    /// Backends that thread state between layers (shape tracking etc.) must
+    /// override this to process the batch in one pass.
+    fn execute_layer_batch(&mut self, idx: usize, inputs: &[&[f32]]) -> Result<Vec<LayerOutcome>> {
+        inputs
+            .iter()
+            .map(|input| self.execute_layer(idx, input))
+            .collect()
+    }
 
     /// Complete one inference: flush per-request state and emit the
     /// cost/trace report. The backend must be ready for the next request

@@ -38,7 +38,9 @@ pub mod sim;
 pub mod wcache;
 
 pub use analytical::AnalyticalBackend;
-pub use backend::{EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome};
+pub use backend::{
+    EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome, OverlapTelemetry,
+};
 pub use pjrt::{PjrtBackend, PjrtConfig};
 pub use sim::SimBackend;
 pub use wcache::{SlabCache, SlabKey, WeightsKey};
@@ -171,6 +173,82 @@ impl Engine {
     /// Timing-only inference (no activations), returning just the report.
     pub fn infer_timing(&mut self) -> Result<ExecutionReport> {
         self.infer(&[]).map(|o| o.report)
+    }
+
+    /// Run one **batched** inference: every input walks the network
+    /// together, layer by layer, through
+    /// [`ExecutionBackend::execute_layer_batch`] — on the simulator backend
+    /// the batch dimension folds into GEMM rows, so each weight slab is
+    /// generated once per layer pass and multiplied against the whole
+    /// batch. Outputs are bit-identical to running [`infer`](Self::infer)
+    /// per input.
+    ///
+    /// Every input must be non-empty and exactly the first layer's
+    /// `h·w·c_in` activations (timing-only requests don't batch — use
+    /// [`infer_timing`](Self::infer_timing)). The report charges each
+    /// layer once with the whole batch's cycles. Inputs are taken by value:
+    /// they seed the activation threading directly, with no internal copy.
+    pub fn infer_batch(
+        &mut self,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<(Vec<Vec<f32>>, ExecutionReport)> {
+        if inputs.is_empty() {
+            return Err(Error::InvalidConfig(
+                "infer_batch needs at least one input".into(),
+            ));
+        }
+        if let Some(l0) = self.plan.network.layers.first() {
+            let expect = (l0.h * l0.w * l0.n_in) as usize;
+            for (i, input) in inputs.iter().enumerate() {
+                if input.len() != expect {
+                    return Err(Error::InvalidConfig(format!(
+                        "batch input {i} has length {} but first layer '{}' \
+                         expects h·w·c_in = {expect}",
+                        input.len(),
+                        l0.name
+                    )));
+                }
+            }
+        }
+        let n = self.plan.n_layers();
+        let batch_size = inputs.len();
+        let mut current: Vec<Vec<f32>> = inputs;
+        let mut produced = false;
+        for idx in 0..n {
+            let refs: Vec<&[f32]> = current.iter().map(|v| v.as_slice()).collect();
+            let outcomes = match self.backend.execute_layer_batch(idx, &refs) {
+                Ok(o) => o,
+                Err(e) => {
+                    // Same flush discipline as `infer`: the failed
+                    // request's partial layer costs must not leak into the
+                    // next report.
+                    let _ = self.backend.finish();
+                    return Err(e);
+                }
+            };
+            if outcomes.len() != current.len() {
+                let _ = self.backend.finish();
+                return Err(Error::InvalidConfig(format!(
+                    "backend returned {} outcomes for a batch of {}",
+                    outcomes.len(),
+                    current.len()
+                )));
+            }
+            if outcomes.iter().all(|o| o.output.is_some()) {
+                current = outcomes
+                    .into_iter()
+                    .map(|o| o.output.expect("checked is_some"))
+                    .collect();
+                produced = true;
+            }
+        }
+        let report = self.backend.finish()?;
+        let outputs = if produced {
+            current
+        } else {
+            vec![Vec::new(); batch_size]
+        };
+        Ok((outputs, report))
     }
 }
 
@@ -401,7 +479,11 @@ impl EngineBuilder {
     }
 }
 
-/// Pool executor adapter: one engine per worker thread.
+/// Pool executor adapter: one engine per worker thread. Numeric requests
+/// popped in the same pool batch fold into one [`Engine::infer_batch`]
+/// call, so each generated weight slab is amortised across the whole
+/// batch; timing-only and malformed requests fall back to per-request
+/// execution (a bad input errors its own handle only).
 struct EngineExecutor {
     engine: Engine,
 }
@@ -409,6 +491,53 @@ struct EngineExecutor {
 impl RequestExecutor for EngineExecutor {
     fn execute(&mut self, req: &Request) -> Result<Vec<f32>> {
         self.engine.infer(&req.input).map(|o| o.output)
+    }
+
+    fn execute_batch(&mut self, batch: &[Request]) -> Vec<Result<Vec<f32>>> {
+        let expect = self
+            .engine
+            .plan()
+            .network
+            .layers
+            .first()
+            .map(|l| (l.h * l.w * l.n_in) as usize)
+            .unwrap_or(0);
+        let foldable: Vec<usize> = batch
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| expect > 0 && r.input.len() == expect)
+            .map(|(i, _)| i)
+            .collect();
+        if foldable.len() < 2 {
+            return batch.iter().map(|r| self.execute(r)).collect();
+        }
+        // One clone per request (requests are borrowed); `infer_batch`
+        // takes ownership, so no further copies happen.
+        let inputs: Vec<Vec<f32>> = foldable.iter().map(|&i| batch[i].input.clone()).collect();
+        let mut results: Vec<Option<Result<Vec<f32>>>> =
+            (0..batch.len()).map(|_| None).collect();
+        match self.engine.infer_batch(inputs) {
+            Ok((outs, _report)) => {
+                for (&i, out) in foldable.iter().zip(outs) {
+                    results[i] = Some(Ok(out));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batched inference failed: {e}");
+                for &i in &foldable {
+                    results[i] = Some(Err(Error::Coordinator(msg.clone())));
+                }
+            }
+        }
+        for (i, slot) in results.iter_mut().enumerate() {
+            if slot.is_none() {
+                *slot = Some(self.execute(&batch[i]));
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every batch slot filled"))
+            .collect()
     }
 }
 
@@ -548,12 +677,14 @@ mod tests {
                 name: format!("l{idx}"),
                 cycles: 1.0,
                 bound: crate::perf::Bound::Compute,
+                overlap: OverlapTelemetry::default(),
             });
             Ok(LayerOutcome {
                 name: format!("l{idx}"),
                 cycles: 1.0,
                 bound: crate::perf::Bound::Compute,
                 output: None,
+                overlap: OverlapTelemetry::default(),
             })
         }
 
@@ -586,6 +717,39 @@ mod tests {
             "failed request's partial layers leaked into the next report"
         );
         assert!((report.total_cycles - n as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infer_batch_matches_per_request_and_amortises_slabs() {
+        // Budget of exactly one slab (P×T_C×4 = 72·4·4 bytes for both OVSF
+        // layers): nothing survives between layer passes, so the miss count
+        // discriminates real batch folding — per-image execution would
+        // regenerate every slab per image (4 × 6 misses), while one folded
+        // pass generates each slab exactly once.
+        let cache = Arc::new(SlabCache::with_budget(72 * 4 * 4));
+        let b = tiny_builder()
+            .backend(BackendKind::Simulator)
+            .weights_cache(Arc::clone(&cache));
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(7);
+        let inputs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(8 * 8 * 4)).collect();
+        // Per-request reference on a separate engine with its own cache.
+        let mut solo = tiny_builder().backend(BackendKind::Simulator).build().unwrap();
+        let expect: Vec<Vec<f32>> = inputs
+            .iter()
+            .map(|input| solo.infer(input).unwrap().output)
+            .collect();
+        let mut engine = b.build().unwrap();
+        let (outs, report) = engine.infer_batch(inputs.clone()).unwrap();
+        assert_eq!(outs, expect, "batched outputs must match per-request");
+        // 2 + 4 column tiles at T_C = 4, generated once for the whole
+        // batch despite the one-slab budget.
+        assert_eq!(cache.misses(), 6, "slab misses must not scale with batch");
+        assert_eq!(report.layers.len(), engine.plan().network.layers.len());
+        // Shape validation rejects a bad batch member.
+        let mut bad = inputs.clone();
+        bad[2] = vec![0.0; 7];
+        assert!(engine.infer_batch(bad).is_err());
+        assert!(engine.infer_batch(Vec::new()).is_err());
     }
 
     #[test]

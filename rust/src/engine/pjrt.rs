@@ -15,7 +15,7 @@
 //! worker factory does exactly that.
 
 use crate::engine::backend::{
-    EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome,
+    EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome, OverlapTelemetry,
 };
 use crate::error::{Error, Result};
 use crate::runtime::ArtifactRegistry;
@@ -94,6 +94,7 @@ impl ExecutionBackend for PjrtBackend {
                 name: l.name.clone(),
                 cycles: l.cycles,
                 bound: l.bound,
+                overlap: OverlapTelemetry::default(),
             })
             .collect();
         self.clock_hz = plan.platform.clock_hz;
@@ -128,6 +129,7 @@ impl ExecutionBackend for PjrtBackend {
             cycles: cost.cycles,
             bound: cost.bound,
             output,
+            overlap: OverlapTelemetry::default(),
         })
     }
 

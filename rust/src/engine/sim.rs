@@ -6,22 +6,39 @@
 //! generator's Alg. 1 cycle counts for on-the-fly layers), exactly as
 //! before.
 //!
-//! Numerics: a non-empty request input is threaded layer-to-layer. Each
-//! layer is lowered to its GEMM view one `T_R×P` row-strip at a time
-//! ([`im2col_strip_into`]) and multiplied slab-by-slab on the PE array
-//! ([`PeArraySim::execute_strip`]): OVSF layers generate one `P×T_C`
-//! weight slab at a time through the shared bounded
-//! [`SlabCache`](crate::engine::wcache::SlabCache) (the paper's on-chip
-//! generation discipline — dense weights never exist beyond the slab
-//! budget), while non-OVSF layers (stem, downsamples, classifier) stream
-//! deterministic synthetic dense weights one slab at a time into scratch.
-//! An empty input keeps the request timing-only — the serving convention
-//! of [`Request`](crate::coordinator::server::Request).
+//! Numerics — the **pipelined slab-prefetch datapath** (the software
+//! analogue of the paper's weights generator running concurrently with the
+//! compute engine): a persistent background worker generates weight slab
+//! `ct+1` — OVSF slabs through the shared bounded
+//! [`SlabCache`](crate::engine::wcache::SlabCache), dense (stem /
+//! downsample / classifier) slabs into fresh scratch — while the compute
+//! stage multiplies slab `ct` across every activation row strip
+//! ([`im2col_strip_into`] + the register-blocked
+//! [`PeArraySim::execute_strip`], row strips sharded over the process
+//! [`ThreadPool`]). Double buffering holds exactly one slab in flight
+//! beyond the cache budget, generation is deterministic, and the compute
+//! order is the serial schedule's — so the pipelined path is **bit
+//! identical** to the serial one (`pipelined = false`), which survives as
+//! the comparison baseline. Per-layer overlap telemetry (`gen_ns`,
+//! `compute_ns`, `hidden_ns`) is surfaced through
+//! [`LayerOutcome`]/[`ExecutionReport`].
+//!
+//! Batched execution ([`execute_layer_batch`](ExecutionBackend::execute_layer_batch))
+//! folds the batch dimension into GEMM rows: each generated slab is
+//! multiplied against every image's row strips before the next slab
+//! arrives, so a [`ServerPool`](crate::coordinator::pool::ServerPool)
+//! batch amortises each slab across the whole batch.
+//!
+//! An empty input keeps a request timing-only — the serving convention of
+//! [`Request`](crate::coordinator::server::Request).
 
-use std::sync::Arc;
+use std::borrow::Cow;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::engine::backend::{
-    EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome,
+    EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome, OverlapTelemetry,
 };
 use crate::engine::wcache::{SlabCache, SlabKey, WeightsKey};
 use crate::error::{Error, Result};
@@ -29,8 +46,10 @@ use crate::sim::engine::LayerSim;
 use crate::sim::hw_weights::HwOvsfWeights;
 use crate::sim::im2col::im2col_strip_into;
 use crate::sim::pe_array::PeArraySim;
+use crate::sim::trace::LayerTrace;
 use crate::util::ceil_div;
 use crate::util::prng::Xoshiro256;
+use crate::util::threadpool::{ScopedTask, ThreadPool};
 use crate::workload::layer::Layer;
 
 /// Deterministic per-layer seed: the repro has no trained ImageNet
@@ -153,8 +172,131 @@ pub fn refit_activations(
     out
 }
 
+/// One slab-generation job for the prefetch stage. Jobs are self-contained
+/// (shared state travels as `Arc`s / clones) so the background worker needs
+/// no access to the backend.
+enum SlabJob {
+    /// OVSF slab, routed through the shared bounded cache.
+    Ovsf {
+        cache: Arc<SlabCache>,
+        key: SlabKey,
+        hw: Arc<HwOvsfWeights>,
+        c0: usize,
+        c1: usize,
+    },
+    /// Dense (stem / downsample / classifier) slab, synthesised into fresh
+    /// scratch — the DRAM stream stand-in, deliberately uncached.
+    Dense {
+        model: String,
+        idx: usize,
+        layer: Layer,
+        c0: usize,
+        c1: usize,
+    },
+}
+
+/// Run one generation job (shared by the prefetch worker and the serial
+/// datapath, so both produce byte-identical slabs through identical code).
+fn generate_slab(job: SlabJob) -> Result<Arc<Vec<f32>>> {
+    match job {
+        SlabJob::Ovsf {
+            cache,
+            key,
+            hw,
+            c0,
+            c1,
+        } => cache.try_get_or_generate(key, || {
+            let mut scratch = Vec::new();
+            let mut slab = Vec::new();
+            hw.slab_into(c0, c1, &mut scratch, &mut slab)?;
+            Ok(slab)
+        }),
+        SlabJob::Dense {
+            model,
+            idx,
+            layer,
+            c0,
+            c1,
+        } => {
+            let mut slab = Vec::new();
+            synth_dense_slab(&model, idx, &layer, c0, c1, &mut slab);
+            Ok(Arc::new(slab))
+        }
+    }
+}
+
+/// A generated slab (or the generation error) plus the worker-side
+/// generation nanoseconds.
+type PrefetchResult = (u64, Result<Arc<Vec<f32>>>);
+
+/// The persistent background weights-generation worker — the software
+/// CNN-WGen running concurrently with the PE array. One job is in flight
+/// at a time (double buffering): the compute stage collects slab `ct`,
+/// immediately requests `ct+1`, then multiplies — so generation of the
+/// next slab hides behind compute of the current one.
+struct Prefetcher {
+    jobs: Option<mpsc::Sender<SlabJob>>,
+    results: mpsc::Receiver<PrefetchResult>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    fn spawn() -> Self {
+        let (jtx, jrx) = mpsc::channel::<SlabJob>();
+        let (rtx, rrx) = mpsc::channel();
+        let handle = std::thread::Builder::new()
+            .name("slab-prefetch".into())
+            .spawn(move || {
+                while let Ok(job) = jrx.recv() {
+                    let t0 = Instant::now();
+                    let res = generate_slab(job);
+                    let gen_ns = t0.elapsed().as_nanos() as u64;
+                    if rtx.send((gen_ns, res)).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn slab-prefetch worker");
+        Self {
+            jobs: Some(jtx),
+            results: rrx,
+            handle: Some(handle),
+        }
+    }
+
+    fn request(&self, job: SlabJob) -> Result<()> {
+        self.jobs
+            .as_ref()
+            .expect("job channel lives until drop")
+            .send(job)
+            .map_err(|_| Error::Coordinator("slab-prefetch worker is gone".into()))
+    }
+
+    /// Wait for the oldest in-flight job: `(gen_ns, generated slab)`.
+    fn collect(&self) -> Result<PrefetchResult> {
+        self.results
+            .recv()
+            .map_err(|_| Error::Coordinator("slab-prefetch worker is gone".into()))
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Closing the job channel ends the worker loop; joining bounds the
+        // teardown by at most one in-flight generation.
+        self.jobs.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Below this many MACs per slab pass, the strip GEMM stays on the calling
+/// thread — pool sharding would not amortise its task bookkeeping.
+const DEFAULT_PAR_MIN_MACS: usize = 1 << 21;
+
 /// Backend over [`LayerSim`]: deterministic cycle counters per layer, plus
-/// the tile-streamed numeric datapath for non-empty inputs.
+/// the pipelined tile-streamed numeric datapath for non-empty inputs.
 pub struct SimBackend {
     plan: Option<Arc<EnginePlan>>,
     executed: Vec<LayerCost>,
@@ -162,17 +304,26 @@ pub struct SimBackend {
     /// Input-selective PE schedule (paper §4.3). On by default. Numerics
     /// are schedule-invariant — only cycle counts change.
     pub selective: bool,
+    /// Overlap slab generation with PE compute on the background prefetch
+    /// worker (on by default). `false` runs the serial
+    /// generate-then-multiply schedule — numerics are bit-identical either
+    /// way; only wall-clock (and `hidden_ns`) changes.
+    pub pipelined: bool,
+    /// Minimum MACs in one slab×strips pass before the row strips are
+    /// sharded across the process thread pool (tunable for tests).
+    pub par_min_macs: usize,
     /// Per-layer compressed OVSF weights (α's): the resident model state,
     /// O(ρ·model) bytes. Dense OVSF weights only ever exist as cached
     /// slabs.
     hw: Vec<Option<Arc<HwOvsfWeights>>>,
-    /// Scratch: one lowered `T_R×P` activation row-strip.
+    /// Scratch: one lowered `T_R×P` activation row-strip (serial compute
+    /// path; pool tasks own their scratch).
     act: Vec<f32>,
-    /// Scratch: one streamed dense (non-OVSF) weight slab.
-    slab_scratch: Vec<f32>,
     /// NHWC shape of the most recently produced activations (the next
     /// layer's incoming shape for refitting).
     cur_shape: Option<(usize, usize, usize)>,
+    /// Lazily spawned background generation worker.
+    prefetcher: Option<Prefetcher>,
 }
 
 impl Default for SimBackend {
@@ -182,10 +333,12 @@ impl Default for SimBackend {
             executed: Vec::new(),
             cache: Arc::new(SlabCache::new()),
             selective: true,
+            pipelined: true,
+            par_min_macs: DEFAULT_PAR_MIN_MACS,
             hw: Vec::new(),
             act: Vec::new(),
-            slab_scratch: Vec::new(),
             cur_shape: None,
+            prefetcher: None,
         }
     }
 }
@@ -217,56 +370,68 @@ impl SimBackend {
             .ok_or_else(|| Error::InvalidConfig("backend used before plan()".into()))
     }
 
-    /// Fetch (or generate) the weight slab for column tile `ct` of OVSF
-    /// layer `idx` through the bounded cache.
-    fn ovsf_slab(
+    /// Build the self-contained generation job for column tile `ct`
+    /// (`[c0, c1)`) of layer `idx`: OVSF layers route through the shared
+    /// bounded cache, non-OVSF layers synthesise dense slabs.
+    ///
+    /// OVSF layers always compute with their OVSF-reconstructed weights: σ
+    /// only decides whether generation runs on the fly or the same weights
+    /// stream from off-chip (a timing-side distinction, handled in
+    /// `timing_trace`) — the numerics are design-point-invariant.
+    fn slab_job(
         &mut self,
         plan: &EnginePlan,
         idx: usize,
         ct: usize,
         c0: usize,
         c1: usize,
-    ) -> Result<Arc<Vec<f32>>> {
+    ) -> Result<SlabJob> {
         let layer = &plan.network.layers[idx];
-        let rho = plan.profile.rho(idx);
-        if self.hw[idx].is_none() {
-            let hw = synth_hw_weights(&plan.network.name, idx, layer, rho)?;
-            self.hw[idx] = Some(Arc::new(hw));
-        }
-        let hw = Arc::clone(self.hw[idx].as_ref().expect("just populated"));
-        let key = SlabKey {
-            layer: WeightsKey::new(
-                plan.network.name.clone(),
+        if layer.ovsf {
+            let rho = plan.profile.rho(idx);
+            if self.hw[idx].is_none() {
+                let hw = synth_hw_weights(&plan.network.name, idx, layer, rho)?;
+                self.hw[idx] = Some(Arc::new(hw));
+            }
+            let hw = Arc::clone(self.hw[idx].as_ref().expect("just populated"));
+            let key = SlabKey {
+                layer: WeightsKey::new(
+                    plan.network.name.clone(),
+                    idx,
+                    (layer.n_in, layer.n_out, layer.k),
+                    plan.sigma,
+                    rho,
+                ),
+                col_tile: ct as u32,
+            };
+            Ok(SlabJob::Ovsf {
+                cache: Arc::clone(&self.cache),
+                key,
+                hw,
+                c0,
+                c1,
+            })
+        } else {
+            Ok(SlabJob::Dense {
+                model: plan.network.name.clone(),
                 idx,
-                (layer.n_in, layer.n_out, layer.k),
-                plan.sigma,
-                rho,
-            ),
-            col_tile: ct as u32,
-        };
-        self.cache.try_get_or_generate(key, || {
-            let mut scratch = Vec::new();
-            let mut slab = Vec::new();
-            hw.slab_into(c0, c1, &mut scratch, &mut slab)?;
-            Ok(slab)
-        })
+                layer: layer.clone(),
+                c0,
+                c1,
+            })
+        }
     }
 
-    /// The numeric datapath for one layer: refit/validate the incoming
-    /// activations, lower them to the GEMM view, stream `(row strip ×
-    /// weight slab)` pairs through the PE array, and return the output
-    /// activations plus their NHWC shape.
-    fn forward_layer(
-        &mut self,
-        plan: &Arc<EnginePlan>,
-        idx: usize,
-        input: &[f32],
-    ) -> Result<(Vec<f32>, (usize, usize, usize))> {
-        let layer = &plan.network.layers[idx];
+    /// Refit/validate one incoming image against layer `idx`'s geometry
+    /// (the per-image half of the old `forward_layer` preamble).
+    fn prepare_image<'a>(
+        &self,
+        layer: &Layer,
+        input: &'a [f32],
+    ) -> Result<Cow<'a, [f32]>> {
         let to = (layer.h as usize, layer.w as usize, layer.n_in as usize);
         let expect = to.0 * to.1 * to.2;
-        let refitted;
-        let x: &[f32] = match self.cur_shape {
+        match self.cur_shape {
             // Mid-request the recorded incoming shape is authoritative — a
             // coincidental length match (e.g. 4·4·16 arriving at an
             // 8·8·4 layer) must not silently bypass the refit and consume
@@ -280,10 +445,9 @@ impl SimBackend {
                     )));
                 }
                 if from == to {
-                    input
+                    Ok(Cow::Borrowed(input))
                 } else {
-                    refitted = refit_activations(input, from, to);
-                    &refitted
+                    Ok(Cow::Owned(refit_activations(input, from, to)))
                 }
             }
             // First layer of a request (or a direct driver): the input
@@ -297,55 +461,196 @@ impl SimBackend {
                         input.len()
                     )));
                 }
-                input
+                Ok(Cow::Borrowed(input))
             }
-        };
+        }
+    }
+
+    /// Multiply one generated slab against every image's row strips —
+    /// the compute stage of the pipeline. Large passes shard `(image,
+    /// strip)` work items across the process [`ThreadPool`]; small ones
+    /// stay on the calling thread with reused lowering scratch. Either way
+    /// each output element is produced by exactly one strip pass in the
+    /// serial schedule's accumulation order, so the numerics are
+    /// bit-identical across all execution modes.
+    #[allow(clippy::too_many_arguments)]
+    fn compute_slab(
+        pe: &PeArraySim,
+        layer: &Layer,
+        images: &[Cow<'_, [f32]>],
+        outs: &mut [Vec<f32>],
+        slab: &[f32],
+        dims: (usize, usize, usize),
+        t_r: usize,
+        c0: usize,
+        c1: usize,
+        par_min_macs: usize,
+        act_scratch: &mut Vec<f32>,
+    ) {
+        let (r, p, c) = dims;
+        let strips = r.div_ceil(t_r);
+        let macs = r * p * (c1 - c0) * images.len();
+        if macs < par_min_macs || strips * images.len() <= 1 {
+            for (x, out) in images.iter().zip(outs.iter_mut()) {
+                for r0 in (0..r).step_by(t_r) {
+                    let r1 = (r0 + t_r).min(r);
+                    // One activation row-strip at a time: the lowering
+                    // scratch stays T_R×P even for the largest layers.
+                    // Re-lowering a strip once per column tile costs ~1/T_C
+                    // of the GEMM work — the memory-for-recompute trade the
+                    // slab path already makes for weights.
+                    im2col_strip_into(layer, x, r0, r1, act_scratch);
+                    pe.execute_strip(
+                        act_scratch,
+                        slab,
+                        r1 - r0,
+                        p,
+                        c1 - c0,
+                        &mut out[r0 * c..r1 * c],
+                        c,
+                        c0,
+                    );
+                }
+            }
+            return;
+        }
+        let mut tasks: Vec<ScopedTask<'_>> = Vec::with_capacity(strips * images.len());
+        for (x, out) in images.iter().zip(outs.iter_mut()) {
+            let x: &[f32] = &x[..];
+            for (si, chunk) in out.chunks_mut(t_r * c).enumerate() {
+                let r0 = si * t_r;
+                let r1 = (r0 + t_r).min(r);
+                tasks.push(Box::new(move || {
+                    let mut act = Vec::new();
+                    im2col_strip_into(layer, x, r0, r1, &mut act);
+                    pe.execute_strip(&act, slab, r1 - r0, p, c1 - c0, chunk, c, c0);
+                }));
+            }
+        }
+        ThreadPool::global().scope_run(tasks);
+    }
+
+    /// The numeric datapath for one layer over a batch of images:
+    /// refit/validate each image, then stream the layer's weight slabs —
+    /// prefetched on the background worker while the PE compute stage
+    /// multiplies (double-buffered), or generated inline on the serial
+    /// schedule when [`pipelined`](Self::pipelined) is off. Each slab is
+    /// multiplied against **every** image's row strips before the next
+    /// slab is consumed, folding the batch dimension into GEMM rows.
+    /// Returns the per-image outputs, their common NHWC shape, and the
+    /// layer's overlap telemetry.
+    fn forward_layer_batch(
+        &mut self,
+        plan: &Arc<EnginePlan>,
+        idx: usize,
+        inputs: &[&[f32]],
+    ) -> Result<(Vec<Vec<f32>>, (usize, usize, usize), OverlapTelemetry)> {
+        let layer = &plan.network.layers[idx];
+        let mut images: Vec<Cow<'_, [f32]>> = Vec::with_capacity(inputs.len());
+        for &input in inputs {
+            images.push(self.prepare_image(layer, input)?);
+        }
         let g = layer.gemm();
         let (r, p, c) = (g.r as usize, g.p as usize, g.c as usize);
         let t_r = plan.sigma.t_r as usize;
         let t_c = plan.sigma.t_c as usize;
-        // OVSF layers always compute with their OVSF-reconstructed weights:
-        // σ only decides whether generation runs on the fly or the same
-        // weights stream from off-chip (a timing-side distinction, handled
-        // in `execute_layer`) — the numerics are design-point-invariant.
-        let ovsf = layer.ovsf;
         let pe = PeArraySim::new(&plan.sigma, self.selective);
-        let mut out = vec![0.0f32; r * c];
-        for (ct, c0) in (0..c).step_by(t_c).enumerate() {
-            let c1 = (c0 + t_c).min(c);
-            // Column-tile-outer order: each slab is materialised once per
-            // layer pass and every row strip consumes it before the next
-            // slab is generated — the cache never needs more than the live
-            // working set.
-            let slab_arc;
-            let slab: &[f32] = if ovsf {
-                slab_arc = self.ovsf_slab(plan, idx, ct, c0, c1)?;
-                &slab_arc[..]
-            } else {
-                synth_dense_slab(&plan.network.name, idx, layer, c0, c1, &mut self.slab_scratch);
-                &self.slab_scratch
-            };
-            for r0 in (0..r).step_by(t_r) {
-                let r1 = (r0 + t_r).min(r);
-                // One activation row-strip at a time: the lowering scratch
-                // stays T_R×P even for the largest layers. Re-lowering a
-                // strip once per column tile costs ~1/T_C of the GEMM
-                // work — the memory-for-recompute trade the slab path
-                // already makes for weights.
-                im2col_strip_into(layer, x, r0, r1, &mut self.act);
-                pe.execute_strip(
-                    &self.act,
-                    slab,
-                    r1 - r0,
-                    p,
-                    c1 - c0,
-                    &mut out[r0 * c..r1 * c],
-                    c,
+        let mut outs: Vec<Vec<f32>> = images.iter().map(|_| vec![0.0f32; r * c]).collect();
+        let n_tiles = c.div_ceil(t_c);
+        let out_shape = (layer.out_h() as usize, layer.out_w() as usize, c);
+        let mut tel = OverlapTelemetry::default();
+
+        if !self.pipelined {
+            // Serial reference schedule: generate, then multiply — nothing
+            // ever hidden.
+            for ct in 0..n_tiles {
+                let c0 = ct * t_c;
+                let c1 = (c0 + t_c).min(c);
+                let job = self.slab_job(plan, idx, ct, c0, c1)?;
+                let t0 = Instant::now();
+                let slab = generate_slab(job)?;
+                tel.gen_ns += t0.elapsed().as_nanos() as u64;
+                let t0 = Instant::now();
+                Self::compute_slab(
+                    &pe,
+                    layer,
+                    &images,
+                    &mut outs,
+                    &slab,
+                    (r, p, c),
+                    t_r,
                     c0,
+                    c1,
+                    self.par_min_macs,
+                    &mut self.act,
                 );
+                tel.compute_ns += t0.elapsed().as_nanos() as u64;
             }
+            return Ok((outs, out_shape, tel));
         }
-        Ok((out, (layer.out_h() as usize, layer.out_w() as usize, c)))
+
+        // Pipelined schedule: the prefetch worker generates slab ct+1 while
+        // the compute stage multiplies slab ct — double-buffered, so
+        // exactly one slab is in flight beyond the cache budget (the
+        // compute stage additionally pins the one slab it is streaming
+        // through its Arc). On any error the Prefetcher is dropped, which
+        // joins the worker and discards in-flight state — the next request
+        // spawns a fresh one.
+        let mut stall_ns = 0u64;
+        let pf = self.prefetcher.take().unwrap_or_else(Prefetcher::spawn);
+        let first = self.slab_job(plan, idx, 0, 0, t_c.min(c))?;
+        pf.request(first)?;
+        for ct in 0..n_tiles {
+            let c0 = ct * t_c;
+            let c1 = (c0 + t_c).min(c);
+            let wait0 = Instant::now();
+            let (gen_ns, generated) = pf.collect()?;
+            stall_ns += wait0.elapsed().as_nanos() as u64;
+            tel.gen_ns += gen_ns;
+            let slab = generated?;
+            if ct + 1 < n_tiles {
+                let c0n = (ct + 1) * t_c;
+                let c1n = (c0n + t_c).min(c);
+                let job = self.slab_job(plan, idx, ct + 1, c0n, c1n)?;
+                pf.request(job)?;
+            }
+            let t0 = Instant::now();
+            Self::compute_slab(
+                &pe,
+                layer,
+                &images,
+                &mut outs,
+                &slab,
+                (r, p, c),
+                t_r,
+                c0,
+                c1,
+                self.par_min_macs,
+                &mut self.act,
+            );
+            tel.compute_ns += t0.elapsed().as_nanos() as u64;
+        }
+        tel.hidden_ns = tel.gen_ns.saturating_sub(stall_ns);
+        self.prefetcher = Some(pf);
+        Ok((outs, out_shape, tel))
+    }
+
+    /// Cycle-level timing walk for one layer: Alg. 1's per-tile generation
+    /// cycle count for on-the-fly OVSF layers, off-chip weight streaming
+    /// otherwise.
+    fn timing_trace(&self, plan: &EnginePlan, idx: usize, layer: &Layer) -> LayerTrace {
+        let mut sim = LayerSim::new(&plan.sigma, &plan.platform, plan.bw_mult);
+        sim.selective = self.selective;
+        if layer.ovsf && plan.sigma.has_wgen() {
+            // Cycle count per Alg. 1 without materialising weights:
+            // n_basis · subtiles · p_tiles (validated == WGenSim walk).
+            let cycles = layer.basis_per_chunk(plan.profile.rho(idx))
+                * plan.sigma.subtiles_per_tile()
+                * ceil_div(layer.gemm().p, plan.sigma.t_p);
+            sim.run_timing(layer, Some(cycles))
+        } else {
+            sim.run_timing(layer, None)
+        }
     }
 }
 
@@ -370,41 +675,71 @@ impl ExecutionBackend for SimBackend {
                 plan.network.layers.len()
             ))
         })?;
-        let mut sim = LayerSim::new(&plan.sigma, &plan.platform, plan.bw_mult);
-        sim.selective = self.selective;
-        let on_the_fly = layer.ovsf && plan.sigma.has_wgen();
-        // Cycle count per Alg. 1 without materialising weights:
-        // n_basis · subtiles · p_tiles (validated == WGenSim walk).
-        let trace = if on_the_fly {
-            let cycles = layer.basis_per_chunk(plan.profile.rho(idx))
-                * plan.sigma.subtiles_per_tile()
-                * ceil_div(layer.gemm().p, plan.sigma.t_p);
-            sim.run_timing(layer, Some(cycles))
-        } else {
-            sim.run_timing(layer, None)
-        };
+        let trace = self.timing_trace(&plan, idx, layer);
         // Numeric datapath for non-empty inputs; an empty input is the
         // serving convention for a timing-only request, which never touches
         // the weights path at all.
-        let output = if input.is_empty() {
-            None
+        let (output, overlap) = if input.is_empty() {
+            (None, OverlapTelemetry::default())
         } else {
-            let (out, shape) = self.forward_layer(&plan, idx, input)?;
+            let (mut outs, shape, tel) = self.forward_layer_batch(&plan, idx, &[input])?;
             self.cur_shape = Some(shape);
-            Some(out)
+            (Some(outs.swap_remove(0)), tel)
         };
         let outcome = LayerOutcome {
             name: trace.name.clone(),
             cycles: trace.total_cycles as f64,
             bound: trace.bound,
             output,
+            overlap,
         };
         self.executed.push(LayerCost {
             name: trace.name,
             cycles: trace.total_cycles as f64,
             bound: trace.bound,
+            overlap,
         });
         Ok(outcome)
+    }
+
+    fn execute_layer_batch(&mut self, idx: usize, inputs: &[&[f32]]) -> Result<Vec<LayerOutcome>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if inputs.iter().any(|i| i.is_empty()) {
+            return Err(Error::InvalidConfig(
+                "timing-only (empty) inputs cannot fold into a numeric batch".into(),
+            ));
+        }
+        let plan = Arc::clone(self.planned()?);
+        let layer = plan.network.layers.get(idx).ok_or_else(|| {
+            Error::InvalidConfig(format!(
+                "layer index {idx} out of range ({} layers)",
+                plan.network.layers.len()
+            ))
+        })?;
+        let trace = self.timing_trace(&plan, idx, layer);
+        let (outs, shape, tel) = self.forward_layer_batch(&plan, idx, inputs)?;
+        self.cur_shape = Some(shape);
+        // The report charges the batch once per layer: every image pays its
+        // engine cycles, while the layer's slabs were generated once for
+        // the whole batch (the telemetry is the batch pass's).
+        self.executed.push(LayerCost {
+            name: trace.name.clone(),
+            cycles: trace.total_cycles as f64 * outs.len() as f64,
+            bound: trace.bound,
+            overlap: tel,
+        });
+        Ok(outs
+            .into_iter()
+            .map(|o| LayerOutcome {
+                name: trace.name.clone(),
+                cycles: trace.total_cycles as f64,
+                bound: trace.bound,
+                output: Some(o),
+                overlap: tel,
+            })
+            .collect())
     }
 
     fn finish(&mut self) -> Result<ExecutionReport> {
@@ -606,6 +941,115 @@ mod tests {
             outputs[0], outputs[1],
             "numerics must not depend on whether σ instantiates CNN-WGen"
         );
+    }
+
+    #[test]
+    fn pipelined_path_is_bit_identical_to_serial() {
+        let sigma = DesignPoint::new(8, 4, 8, 4);
+        let plan = tiny_plan(sigma);
+        let input = tiny_input();
+        let mut serial = SimBackend::new();
+        serial.pipelined = false;
+        serial.plan(&plan).unwrap();
+        let expect = run_numeric(&mut serial, &plan, &input);
+        let mut piped = SimBackend::new();
+        assert!(piped.pipelined, "prefetch overlap is the default");
+        piped.plan(&plan).unwrap();
+        let got = run_numeric(&mut piped, &plan, &input);
+        assert_eq!(got, expect, "prefetch overlap must not change a single bit");
+    }
+
+    #[test]
+    fn pool_sharded_strips_are_bit_identical_to_serial() {
+        let sigma = DesignPoint::new(8, 4, 8, 4);
+        let plan = tiny_plan(sigma);
+        let input = tiny_input();
+        let mut serial = SimBackend::new();
+        serial.pipelined = false;
+        serial.plan(&plan).unwrap();
+        let expect = run_numeric(&mut serial, &plan, &input);
+        let mut sharded = SimBackend::new();
+        sharded.par_min_macs = 0; // force pool sharding even on tiny shapes
+        sharded.plan(&plan).unwrap();
+        let got = run_numeric(&mut sharded, &plan, &input);
+        assert_eq!(got, expect, "strip sharding must not change a single bit");
+    }
+
+    #[test]
+    fn generation_errors_surface_and_the_next_request_serves() {
+        // An out-of-range layer index mid-stream must error cleanly and
+        // leave the backend (and its prefetch worker) usable.
+        let sigma = DesignPoint::new(8, 4, 8, 4);
+        let plan = tiny_plan(sigma);
+        let input = tiny_input();
+        let mut backend = SimBackend::new();
+        backend.plan(&plan).unwrap();
+        assert!(backend.execute_layer(99, &input).is_err());
+        backend.finish().unwrap();
+        let out = run_numeric(&mut backend, &plan, &input);
+        assert_eq!(out.len(), 10, "backend recovered after the failed request");
+    }
+
+    #[test]
+    fn overlap_telemetry_reports_generation_and_compute() {
+        let sigma = DesignPoint::new(8, 4, 8, 4);
+        let plan = tiny_plan(sigma);
+        let input = tiny_input();
+        let mut backend = SimBackend::new();
+        backend.plan(&plan).unwrap();
+        let mut cur = input.clone();
+        for idx in 0..plan.n_layers() {
+            let o = backend.execute_layer(idx, &cur).unwrap();
+            assert!(
+                o.overlap.hidden_ns <= o.overlap.gen_ns,
+                "cannot hide more generation than ran"
+            );
+            assert!(o.overlap.gen_ns > 0, "cold slabs must charge generation");
+            cur = o.output.expect("numeric path produces activations");
+        }
+        let report = backend.finish().unwrap();
+        let total = report.overlap();
+        assert!(total.gen_ns > 0 && total.compute_ns > 0);
+        assert!(total.hidden_ns <= total.gen_ns);
+        // Timing-only requests carry no telemetry.
+        let o = backend.execute_layer(0, &[]).unwrap();
+        assert_eq!(o.overlap, OverlapTelemetry::default());
+        backend.finish().unwrap();
+    }
+
+    #[test]
+    fn batched_layers_match_per_image_execution() {
+        let sigma = DesignPoint::new(8, 4, 8, 4);
+        let plan = tiny_plan(sigma);
+        let mut rng = Xoshiro256::seed_from_u64(4242);
+        let inputs: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(8 * 8 * 4)).collect();
+        // Per-image reference.
+        let mut reference = SimBackend::new();
+        reference.plan(&plan).unwrap();
+        let expect: Vec<Vec<f32>> = inputs
+            .iter()
+            .map(|input| run_numeric(&mut reference, &plan, input))
+            .collect();
+        // Batched: every layer pass folds the three images.
+        let mut batched = SimBackend::new();
+        batched.plan(&plan).unwrap();
+        let mut cur: Vec<Vec<f32>> = inputs.clone();
+        for idx in 0..plan.n_layers() {
+            let refs: Vec<&[f32]> = cur.iter().map(|v| v.as_slice()).collect();
+            let outcomes = batched.execute_layer_batch(idx, &refs).unwrap();
+            assert_eq!(outcomes.len(), 3);
+            cur = outcomes
+                .into_iter()
+                .map(|o| o.output.expect("numeric batch produces activations"))
+                .collect();
+        }
+        batched.finish().unwrap();
+        assert_eq!(cur, expect, "batch folding must not change the numerics");
+        // Mixed timing-only inputs cannot fold.
+        let empty: &[f32] = &[];
+        let refs: Vec<&[f32]> = vec![inputs[0].as_slice(), empty];
+        assert!(batched.execute_layer_batch(0, &refs).is_err());
+        batched.finish().unwrap();
     }
 
     #[test]

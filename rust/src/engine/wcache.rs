@@ -90,17 +90,26 @@ struct SlabMap {
     entries: HashMap<SlabKey, SlabEntry>,
     /// Monotonic access clock for LRU ordering.
     tick: u64,
-    /// Bytes of slab data currently resident.
-    resident: usize,
 }
 
 /// Thread-safe bounded slab store with hit/miss/eviction accounting.
+///
+/// Metrics discipline: the `lookups`/`hits`/`misses`/`evictions` counters
+/// are lock-free atomics mutated strictly **outside** the map lock (a
+/// counter bump never extends the critical section), and the
+/// `resident`/`peak_resident` byte gauges are atomics updated at the map
+/// mutation points so every metric reads without touching the lock.
+/// Counters reconcile exactly: `hits + misses == lookups` at any quiescent
+/// point (a racer that regenerates an entry counts as a miss — the counter
+/// tracks generation work).
 pub struct SlabCache {
     budget: usize,
     map: Mutex<SlabMap>,
+    lookups: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    resident: AtomicUsize,
     peak_resident: AtomicUsize,
 }
 
@@ -109,7 +118,6 @@ impl Default for SlabMap {
         Self {
             entries: HashMap::new(),
             tick: 0,
-            resident: 0,
         }
     }
 }
@@ -152,9 +160,11 @@ impl SlabCache {
         Self {
             budget,
             map: Mutex::new(SlabMap::default()),
+            lookups: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            resident: AtomicUsize::new(0),
             peak_resident: AtomicUsize::new(0),
         }
     }
@@ -184,66 +194,98 @@ impl SlabCache {
         key: SlabKey,
         generate: impl FnOnce() -> Result<Vec<f32>>,
     ) -> Result<Arc<Vec<f32>>> {
-        {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let found = {
             let mut m = self.lock();
             m.tick += 1;
             let tick = m.tick;
-            if let Some(e) = m.entries.get_mut(&key) {
-                e.last_used = tick;
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return Ok(Arc::clone(&e.data));
+            match m.entries.get_mut(&key) {
+                Some(e) => {
+                    e.last_used = tick;
+                    Some(Arc::clone(&e.data))
+                }
+                None => None,
             }
+        };
+        if let Some(data) = found {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(data);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let data = Arc::new(generate()?);
         let bytes = data.len() * std::mem::size_of::<f32>();
-        let mut m = self.lock();
-        m.tick += 1;
-        let tick = m.tick;
-        if let Some(e) = m.entries.get_mut(&key) {
-            // A racer generated and inserted first; adopt its copy.
-            e.last_used = tick;
-            return Ok(Arc::clone(&e.data));
-        }
-        // Evict-before-insert keeps the resident gauge under the budget at
-        // every instant (given each slab individually fits).
-        while m.resident + bytes > self.budget && !m.entries.is_empty() {
-            let victim = m
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
-                .expect("non-empty map has an LRU entry");
-            let evicted = m.entries.remove(&victim).expect("victim just found");
-            m.resident -= evicted.data.len() * std::mem::size_of::<f32>();
-            self.evictions.fetch_add(1, Ordering::Relaxed);
-        }
-        m.resident += bytes;
-        self.peak_resident.fetch_max(m.resident, Ordering::Relaxed);
-        let entry = SlabEntry {
-            data: Arc::clone(&data),
-            last_used: tick,
+        let mut evicted_count = 0u64;
+        let adopted = {
+            let mut m = self.lock();
+            m.tick += 1;
+            let tick = m.tick;
+            if let Some(e) = m.entries.get_mut(&key) {
+                // A racer generated and inserted first; adopt its copy (the
+                // lookup stays counted as a miss — generation work ran).
+                e.last_used = tick;
+                Some(Arc::clone(&e.data))
+            } else {
+                // Evict-before-insert keeps the resident gauge under the
+                // budget at every instant (given each slab individually
+                // fits). The gauge is only ever mutated by the lock holder,
+                // so reading it here is consistent.
+                while self.resident.load(Ordering::Relaxed) + bytes > self.budget
+                    && !m.entries.is_empty()
+                {
+                    let victim = m
+                        .entries
+                        .iter()
+                        .min_by_key(|(_, e)| e.last_used)
+                        .map(|(k, _)| k.clone())
+                        .expect("non-empty map has an LRU entry");
+                    let evicted = m.entries.remove(&victim).expect("victim just found");
+                    self.resident.fetch_sub(
+                        evicted.data.len() * std::mem::size_of::<f32>(),
+                        Ordering::Relaxed,
+                    );
+                    evicted_count += 1;
+                }
+                let now = self.resident.fetch_add(bytes, Ordering::Relaxed) + bytes;
+                self.peak_resident.fetch_max(now, Ordering::Relaxed);
+                let entry = SlabEntry {
+                    data: Arc::clone(&data),
+                    last_used: tick,
+                };
+                m.entries.insert(key, entry);
+                None
+            }
         };
-        m.entries.insert(key, entry);
-        Ok(data)
+        if evicted_count > 0 {
+            self.evictions.fetch_add(evicted_count, Ordering::Relaxed);
+        }
+        Ok(adopted.unwrap_or(data))
     }
 
     /// Drop every slab of one layer (e.g. on model unload or profile
     /// change). Returns the number of slabs removed.
     pub fn evict_layer(&self, layer: &WeightsKey) -> usize {
-        let mut m = self.lock();
-        let victims: Vec<SlabKey> = m
-            .entries
-            .keys()
-            .filter(|k| &k.layer == layer)
-            .cloned()
-            .collect();
-        for k in &victims {
-            let e = m.entries.remove(k).expect("victim just listed");
-            m.resident -= e.data.len() * std::mem::size_of::<f32>();
-        }
-        self.evictions.fetch_add(victims.len() as u64, Ordering::Relaxed);
-        victims.len()
+        let n_victims = {
+            let mut m = self.lock();
+            let victims: Vec<SlabKey> = m
+                .entries
+                .keys()
+                .filter(|k| &k.layer == layer)
+                .cloned()
+                .collect();
+            for k in &victims {
+                let e = m.entries.remove(k).expect("victim just listed");
+                self.resident
+                    .fetch_sub(e.data.len() * std::mem::size_of::<f32>(), Ordering::Relaxed);
+            }
+            victims.len()
+        };
+        self.evictions.fetch_add(n_victims as u64, Ordering::Relaxed);
+        n_victims
+    }
+
+    /// Total lookups (`hits() + misses()` at any quiescent point).
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
     }
 
     /// Lookups served from the cache.
@@ -272,9 +314,9 @@ impl SlabCache {
         self.len() == 0
     }
 
-    /// Bytes of slab data currently resident.
+    /// Bytes of slab data currently resident (lock-free gauge read).
     pub fn resident_bytes(&self) -> usize {
-        self.lock().resident
+        self.resident.load(Ordering::Relaxed)
     }
 
     /// High-water mark of [`resident_bytes`](Self::resident_bytes) — the
@@ -287,7 +329,7 @@ impl SlabCache {
     pub fn clear(&self) {
         let mut m = self.lock();
         m.entries.clear();
-        m.resident = 0;
+        self.resident.store(0, Ordering::Relaxed);
     }
 }
 
@@ -325,6 +367,7 @@ mod tests {
             assert_eq!(v.as_slice(), &[1.0, 2.0]);
         }
         assert_eq!(calls, 1);
+        assert_eq!(cache.lookups(), 3);
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.hits(), 2);
         assert_eq!(cache.evictions(), 0);
@@ -418,6 +461,45 @@ mod tests {
         assert_eq!(cache.misses(), 1, "the failed generation was attempted");
         // The key is not poisoned: a later generation succeeds.
         assert_eq!(slab(&cache, key(0, 0), 7.0, 2).as_slice(), &[7.0, 7.0]);
+    }
+
+    #[test]
+    fn concurrent_hammer_reconciles_counters() {
+        // 8 threads × 200 lookups over 16 keys under a budget of 5 slabs:
+        // eviction churns constantly, yet the lock-free counters must
+        // reconcile exactly and the byte gauges must respect the budget.
+        let cache = Arc::new(SlabCache::with_budget(5 * 400));
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let c = Arc::clone(&cache);
+            handles.push(std::thread::spawn(move || {
+                let mut state = t.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+                for _ in 0..200 {
+                    state ^= state << 13;
+                    state ^= state >> 7;
+                    state ^= state << 17;
+                    let ct = (state % 16) as u32;
+                    let v = c
+                        .try_get_or_generate(key(0, ct), || Ok(vec![ct as f32; 100]))
+                        .unwrap();
+                    assert_eq!(v[0], ct as f32, "wrong slab adopted for key {ct}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cache.lookups(), 8 * 200);
+        assert_eq!(
+            cache.hits() + cache.misses(),
+            cache.lookups(),
+            "counters must reconcile after concurrent churn"
+        );
+        assert!(cache.evictions() > 0, "the 5-slab budget must have evicted");
+        assert!(cache.len() <= 5);
+        assert_eq!(cache.resident_bytes(), cache.len() * 400);
+        assert!(cache.resident_bytes() <= cache.budget());
+        assert!(cache.peak_resident_bytes() <= cache.budget());
     }
 
     #[test]

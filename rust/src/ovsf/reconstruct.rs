@@ -11,24 +11,24 @@ use crate::error::{Error, Result};
 use crate::ovsf::basis::{select, BasisSelection, SelectedBasis};
 use crate::ovsf::codes::OvsfBasis;
 use crate::ovsf::regress::{project_into, reconstruct_into};
+use crate::util::threadpool::{ScopedTask, ThreadPool};
 use crate::util::{is_pow2, next_pow2};
 
-/// Worker threads for per-filter batch regression/reconstruction. Filters
-/// are independent, so the batch is sharded with `std::thread::scope`
-/// (zero-dep constraint: no rayon). Small batches stay single-threaded —
-/// the scratch-buffer reuse dominates there and spawn overhead would not
-/// amortise.
-fn filter_threads(n_filters: usize, code_len: usize) -> usize {
-    // ~2^18 butterfly-ops per shard keeps spawn cost < 5% of useful work.
+/// Shard count for per-filter batch regression/reconstruction. Filters are
+/// independent, so the batch is sharded over the persistent process
+/// [`ThreadPool`] (zero-dep constraint: no rayon; the pool replaces the
+/// old per-call `std::thread::scope` spawning). Small batches stay
+/// single-threaded — scratch-buffer reuse dominates there and the task
+/// bookkeeping would not amortise.
+fn filter_shards(n_filters: usize, code_len: usize) -> usize {
+    // ~2^18 butterfly-ops per shard keeps scheduling cost < 5% of work.
     let work = n_filters.saturating_mul(code_len.max(1));
     if work < (1 << 18) {
         return 1;
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(n_filters)
-        .min(16)
+    // The caller runs one shard inline, so threads + 1 shards keep the
+    // whole pool and the caller busy.
+    (ThreadPool::global().threads() + 1).min(n_filters)
 }
 
 /// How to obtain a `3×3` (generally non-pow2 `K×K`) filter from the
@@ -114,44 +114,53 @@ impl OvsfLayer {
         let k_ovsf = if is_pow2(k) { k } else { next_pow2(k) };
         let l = n_in * k_ovsf * k_ovsf;
         let basis = OvsfBasis::new(l)?;
-        let n_threads = filter_threads(n_out, l);
-        let shard_len = n_out.div_ceil(n_threads);
-        let mut filters: Vec<SelectedBasis> = Vec::with_capacity(n_out);
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(n_threads);
-            for shard in 0..n_threads {
-                let lo = (shard * shard_len).min(n_out);
-                let hi = ((shard + 1) * shard_len).min(n_out);
-                handles.push(scope.spawn(move || {
-                    // One scratch set per worker, reused across its filters.
-                    let mut target = vec![0.0f32; l];
-                    let mut scratch: Vec<f64> = Vec::with_capacity(l);
-                    let mut alphas: Vec<f32> = Vec::with_capacity(l);
-                    let mut local = Vec::with_capacity(hi - lo);
-                    for o in lo..hi {
-                        // Embed the K×K filter into the K'×K' frame (zero
-                        // padding at the right/bottom) so the projection
-                        // targets the OVSF geometry.
-                        target.iter_mut().for_each(|x| *x = 0.0);
-                        for c in 0..n_in {
-                            for kh in 0..k {
-                                for kw in 0..k {
-                                    let src = ((o * n_in + c) * k + kh) * k + kw;
-                                    let dst = (c * k_ovsf + kh) * k_ovsf + kw;
-                                    target[dst] = weights[src];
-                                }
-                            }
+        // Per-shard worker body: fit filters `[lo, lo+out.len())` into
+        // `out`, reusing one scratch set across the shard.
+        let fit_shard = |lo: usize, out: &mut [SelectedBasis]| {
+            let mut target = vec![0.0f32; l];
+            let mut scratch: Vec<f64> = Vec::with_capacity(l);
+            let mut alphas: Vec<f32> = Vec::with_capacity(l);
+            for (i, slot) in out.iter_mut().enumerate() {
+                let o = lo + i;
+                // Embed the K×K filter into the K'×K' frame (zero padding
+                // at the right/bottom) so the projection targets the OVSF
+                // geometry.
+                target.iter_mut().for_each(|x| *x = 0.0);
+                for c in 0..n_in {
+                    for kh in 0..k {
+                        for kw in 0..k {
+                            let src = ((o * n_in + c) * k + kh) * k + kw;
+                            let dst = (c * k_ovsf + kh) * k_ovsf + kw;
+                            target[dst] = weights[src];
                         }
-                        project_into(&basis, &target, &mut scratch, &mut alphas);
-                        local.push(select(strategy, &basis, &alphas, rho));
                     }
-                    local
-                }));
+                }
+                project_into(&basis, &target, &mut scratch, &mut alphas);
+                *slot = select(strategy, &basis, &alphas, rho);
             }
-            for h in handles {
-                filters.extend(h.join().expect("regression worker panicked"));
-            }
-        });
+        };
+        let n_shards = filter_shards(n_out, l);
+        let mut filters: Vec<SelectedBasis> = vec![
+            SelectedBasis {
+                indices: Vec::new(),
+                alphas: Vec::new(),
+            };
+            n_out
+        ];
+        if n_shards <= 1 {
+            fit_shard(0, filters.as_mut_slice());
+        } else {
+            let shard_len = n_out.div_ceil(n_shards);
+            let fit_shard_ref = &fit_shard;
+            let tasks: Vec<ScopedTask<'_>> = filters
+                .chunks_mut(shard_len)
+                .enumerate()
+                .map(|(shard, out)| {
+                    Box::new(move || fit_shard_ref(shard * shard_len, out)) as ScopedTask<'_>
+                })
+                .collect();
+            ThreadPool::global().scope_run(tasks);
+        }
         Ok(Self {
             n_out,
             n_in,
@@ -238,31 +247,42 @@ impl OvsfLayer {
     }
 
     /// Reconstruct the dense `n_out·n_in·k·k` weights (the software oracle
-    /// of what CNN-WGen produces in hardware). Sharded across threads, each
-    /// worker streaming its contiguous filter slab through
+    /// of what CNN-WGen produces in hardware). Sharded over the persistent
+    /// process [`ThreadPool`], each task streaming its contiguous filter
+    /// slab through
     /// [`reconstruct_filters_into`](Self::reconstruct_filters_into).
     pub fn reconstruct(&self) -> Result<Vec<f32>> {
         let l = self.code_len();
-        OvsfBasis::new(l)?; // validate geometry before spawning workers
+        OvsfBasis::new(l)?; // validate geometry before sharding
         let filter_stride = self.n_in * self.k * self.k;
         let mut out = vec![0.0f32; self.n_out * filter_stride];
-        let n_threads = filter_threads(self.n_out, l);
-        let shard_len = self.n_out.div_ceil(n_threads);
-        std::thread::scope(|scope| {
-            // Each worker owns a disjoint slice of the output (contiguous
-            // filter shard) plus scratch buffers reused across its filters.
-            let shard_elems = (shard_len * filter_stride).max(1);
-            for (shard, out_shard) in out.chunks_mut(shard_elems).enumerate() {
-                scope.spawn(move || {
+        let n_shards = filter_shards(self.n_out, l);
+        let shard_len = self.n_out.div_ceil(n_shards);
+        if n_shards <= 1 {
+            let mut scratch: Vec<f64> = Vec::with_capacity(l);
+            let mut frame: Vec<f32> = Vec::with_capacity(l);
+            self.reconstruct_filters_into(0, self.n_out, &mut scratch, &mut frame, &mut out)
+                .expect("full range derives from n_out");
+            return Ok(out);
+        }
+        // Each task owns a disjoint slice of the output (contiguous filter
+        // shard) plus scratch buffers reused across its filters.
+        let shard_elems = (shard_len * filter_stride).max(1);
+        let tasks: Vec<ScopedTask<'_>> = out
+            .chunks_mut(shard_elems)
+            .enumerate()
+            .map(|(shard, out_shard)| {
+                Box::new(move || {
                     let mut scratch: Vec<f64> = Vec::with_capacity(l);
                     let mut frame: Vec<f32> = Vec::with_capacity(l);
                     let o0 = shard * shard_len;
                     let o1 = (o0 + shard_len).min(self.n_out);
                     self.reconstruct_filters_into(o0, o1, &mut scratch, &mut frame, out_shard)
                         .expect("shard bounds derive from n_out");
-                });
-            }
-        });
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        ThreadPool::global().scope_run(tasks);
         Ok(out)
     }
 }

@@ -145,9 +145,10 @@ impl<'a> LayerSim<'a> {
     /// paper's on-chip dataflow. Peak live dense weights are one slab.
     /// Output matches [`execute_ovsf`](Self::execute_ovsf) up to FWHT
     /// rounding. This is the *uncached* reference form of the loop the
-    /// engine's `SimBackend::forward_layer` drives (which adds the slab
-    /// cache and activation refitting); the test below keeps the two
-    /// dataflows honest against the full-materialisation path.
+    /// engine's `SimBackend` pipelined datapath drives (which adds the
+    /// slab cache, prefetch overlap and activation refitting); the test
+    /// below keeps the two dataflows honest against the
+    /// full-materialisation path.
     pub fn execute_ovsf_streamed(
         &self,
         layer: &Layer,
@@ -326,6 +327,48 @@ mod tests {
         for (a, b) in out_full.iter().zip(&out_streamed) {
             assert!((a - b).abs() < 1e-3 * a.abs().max(1.0), "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn overlapped_accounting_charges_max_of_wgen_and_engine() {
+        // Memory-wall regime: a generation-dominated layer (small M ⇒ many
+        // subtile passes per weight tile) must be charged
+        // `max(t_wgen, t_eng)` per tile — the paper's pipelined timing
+        // model, where CNN-WGen runs concurrently with the PE array — and
+        // never their sum.
+        let platform = Platform::z7045();
+        let sigma = DesignPoint::new(4, 8, 8, 8); // M = 4 ⇒ 16 subtiles/tile
+        let layer = Layer::conv("wbound", 8, 8, 16, 16, 3, 1, 1, true);
+        let g = layer.gemm();
+        let wgen = layer.basis_per_chunk(1.0)
+            * sigma.subtiles_per_tile()
+            * ceil_div(g.p, sigma.t_p);
+        let pe = PeArraySim::new(&sigma, true);
+        let t_eng =
+            pe.tile_cycles(sigma.t_r.min(g.r), ceil_div(g.p, sigma.t_p), sigma.t_c.min(g.c));
+        assert!(wgen > t_eng, "test layer must be wgen-dominated");
+        let sim = LayerSim::new(&sigma, &platform, 4);
+        let trace = sim.run_timing(&layer, Some(wgen));
+        assert_eq!(trace.t_wgen, wgen);
+        assert_eq!(trace.bound, Bound::WGen);
+        assert_eq!(
+            trace.ii,
+            trace
+                .t_mem_in
+                .max(trace.t_wgen)
+                .max(trace.t_eng)
+                .max(trace.t_mem_out),
+            "II is the stage max (Eq. 8), not a stage sum"
+        );
+        assert_eq!(trace.ii, wgen, "t_wgen dominates every stage here");
+        // Per-tile charge is exactly the max: the engine time hides fully
+        // behind generation, so the layer total pins to wgen·tiles and an
+        // additive model would overcharge by t_eng·tiles.
+        assert_eq!(trace.total_cycles, wgen * trace.tiles);
+        assert!(
+            trace.total_cycles < (wgen + t_eng) * trace.tiles,
+            "generation and compute must overlap, not add"
+        );
     }
 
     #[test]

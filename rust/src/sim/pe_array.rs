@@ -93,10 +93,34 @@ impl<'a> PeArraySim<'a> {
         assert_eq!(slab.len(), p * cols, "weight slab shape");
         assert_eq!(out.len(), rows * out_stride, "output strip shape");
         assert!(col_offset + cols <= out_stride, "slab overruns output");
+        gemm_strip(act, slab, rows, p, cols, out, out_stride, col_offset);
+        let p_tiles = (p as u64).div_ceil(self.sigma.t_p);
+        self.tile_cycles(rows as u64, p_tiles, cols as u64)
+    }
+
+    /// The original scalar depth-tiled inner loop, kept as the numerics
+    /// oracle for the register-blocked microkernel: every output element
+    /// accumulates its products in ascending-`p` order starting from the
+    /// incoming `out` value, which is exactly the order the microkernel
+    /// preserves — the two must agree **bit-for-bit**.
+    #[cfg(test)]
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn execute_strip_reference(
+        &self,
+        act: &[f32],
+        slab: &[f32],
+        rows: usize,
+        p: usize,
+        cols: usize,
+        out: &mut [f32],
+        out_stride: usize,
+        col_offset: usize,
+    ) -> u64 {
+        assert_eq!(act.len(), rows * p, "activation strip shape");
+        assert_eq!(slab.len(), p * cols, "weight slab shape");
+        assert_eq!(out.len(), rows * out_stride, "output strip shape");
+        assert!(col_offset + cols <= out_stride, "slab overruns output");
         let t_p = self.sigma.t_p as usize;
-        // Output-stationary depth walk: partial sums stay in the strip
-        // accumulators across the `⌈p/T_P⌉` depth tiles. The inner loop
-        // runs axpy-style over the slab columns so it vectorises.
         for p0 in (0..p).step_by(t_p) {
             let p1 = (p0 + t_p).min(p);
             for ri in 0..rows {
@@ -127,14 +151,18 @@ impl<'a> PeArraySim<'a> {
         let t_r = self.sigma.t_r as usize;
         let t_c = self.sigma.t_c as usize;
         let mut out = vec![0.0f32; r * c];
-        let mut slab = Vec::new();
+        // One preallocated scratch slab, sized for the widest (first)
+        // column tile and refilled per tile with straight row copies — no
+        // per-row growth bookkeeping in the oracle path.
+        let mut slab = vec![0.0f32; p * t_c.min(c)];
         for c0 in (0..c).step_by(t_c) {
             let c1 = (c0 + t_c).min(c);
+            let cols = c1 - c0;
             // Slice the column tile out of the dense matrix — standing in
             // for a generated slab.
-            slab.clear();
-            for row in weights.chunks_exact(c) {
-                slab.extend_from_slice(&row[c0..c1]);
+            slab.truncate(p * cols);
+            for (dst, row) in slab.chunks_exact_mut(cols).zip(weights.chunks_exact(c)) {
+                dst.copy_from_slice(&row[c0..c1]);
             }
             for r0 in (0..r).step_by(t_r) {
                 let r1 = (r0 + t_r).min(r);
@@ -184,6 +212,128 @@ impl<'a> PeArraySim<'a> {
             cycles += (remaining as u64).div_ceil(t_c);
         }
         cycles.max((rows * c_cols).div_ceil(t_c))
+    }
+}
+
+/// Microkernel row blocking: rows of output accumulated per register block.
+const MR: usize = 4;
+/// Microkernel column blocking: output columns per register block — with
+/// `MR`, a 4×8 f32 accumulator tile that fits the vector register file and
+/// autovectorises on any 128/256-bit SIMD target.
+const NR: usize = 8;
+
+/// Register-blocked strip GEMM: `out[r][col_offset + c] += Σ_p act[r][p] ·
+/// slab[p][c]` over `rows×cols`, walked in `MR×NR` register tiles with the
+/// depth loop innermost-but-one so the `MR·NR` accumulators stay live in
+/// registers across the whole `p` reduction.
+///
+/// Numerics contract: every output element starts from its incoming value
+/// and accumulates its products in ascending-`p` order — the same f32
+/// operation sequence as the scalar reference loop, so results are
+/// bit-identical regardless of blocking (edge blocks fall back to the
+/// same-order generic kernel).
+#[allow(clippy::too_many_arguments)]
+fn gemm_strip(
+    act: &[f32],
+    slab: &[f32],
+    rows: usize,
+    p: usize,
+    cols: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    col_offset: usize,
+) {
+    let mut r0 = 0;
+    while r0 < rows {
+        let mr = MR.min(rows - r0);
+        if mr == MR {
+            let mut c0 = 0;
+            while c0 + NR <= cols {
+                block_mrxnr(act, slab, r0, p, cols, c0, out, out_stride, col_offset);
+                c0 += NR;
+            }
+            if c0 < cols {
+                block_generic(
+                    act, slab, r0, MR, p, cols, c0, out, out_stride, col_offset,
+                );
+            }
+        } else {
+            block_generic(act, slab, r0, mr, p, cols, 0, out, out_stride, col_offset);
+        }
+        r0 += mr;
+    }
+}
+
+/// One full `MR×NR` register block at rows `[r0, r0+MR)`, columns
+/// `[c0, c0+NR)` of the slab.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn block_mrxnr(
+    act: &[f32],
+    slab: &[f32],
+    r0: usize,
+    p: usize,
+    cols: usize,
+    c0: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    col_offset: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (i, row) in acc.iter_mut().enumerate() {
+        let ob = (r0 + i) * out_stride + col_offset + c0;
+        row.copy_from_slice(&out[ob..ob + NR]);
+    }
+    let a0 = &act[r0 * p..(r0 + 1) * p];
+    let a1 = &act[(r0 + 1) * p..(r0 + 2) * p];
+    let a2 = &act[(r0 + 2) * p..(r0 + 3) * p];
+    let a3 = &act[(r0 + 3) * p..(r0 + 4) * p];
+    for pi in 0..p {
+        let base = pi * cols + c0;
+        let w: &[f32; NR] = slab[base..base + NR]
+            .try_into()
+            .expect("slab block is NR wide");
+        let (x0, x1, x2, x3) = (a0[pi], a1[pi], a2[pi], a3[pi]);
+        for j in 0..NR {
+            let wv = w[j];
+            acc[0][j] += x0 * wv;
+            acc[1][j] += x1 * wv;
+            acc[2][j] += x2 * wv;
+            acc[3][j] += x3 * wv;
+        }
+    }
+    for (i, row) in acc.iter().enumerate() {
+        let ob = (r0 + i) * out_stride + col_offset + c0;
+        out[ob..ob + NR].copy_from_slice(row);
+    }
+}
+
+/// Edge kernel for partial row/column blocks — same ascending-`p`
+/// accumulation order per element as the register block.
+#[allow(clippy::too_many_arguments)]
+fn block_generic(
+    act: &[f32],
+    slab: &[f32],
+    r0: usize,
+    mr: usize,
+    p: usize,
+    cols: usize,
+    c0: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    col_offset: usize,
+) {
+    let width = cols - c0;
+    for i in 0..mr {
+        let arow = &act[(r0 + i) * p..(r0 + i + 1) * p];
+        let ob = (r0 + i) * out_stride + col_offset + c0;
+        let orow = &mut out[ob..ob + width];
+        for (pi, &a) in arow.iter().enumerate() {
+            let wrow = &slab[pi * cols + c0..pi * cols + cols];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += a * wv;
+            }
+        }
     }
 }
 
@@ -340,6 +490,36 @@ mod tests {
         for (g, e) in out.iter().zip(&expect) {
             assert!((g - e).abs() < 1e-4 * e.abs().max(1.0));
         }
+    }
+
+    #[test]
+    fn microkernel_is_bit_identical_to_the_scalar_reference() {
+        // The register-blocked kernel must reproduce the retired scalar
+        // loop bit-for-bit (same ascending-p accumulation order per output
+        // element), across row/column tails and offset output windows,
+        // starting from nonzero incoming accumulators.
+        forall("pe-microkernel-bitexact", 24, |rng| {
+            let rows = rng.gen_range(1, 20) as usize; // covers MR tails
+            let p = rng.gen_range(1, 40) as usize;
+            let cols = rng.gen_range(1, 24) as usize; // covers NR tails
+            let act = rng.normal_vec(rows * p);
+            let slab = rng.normal_vec(p * cols);
+            let pad = rng.gen_range(0, 4) as usize;
+            let out_stride = cols + pad;
+            let col_offset = rng.gen_range(0, pad as u64 + 1) as usize;
+            let sigma = DesignPoint::new(8, 32, rng.gen_range(2, 8), 8);
+            let sim = PeArraySim::new(&sigma, true);
+            let base = rng.normal_vec(rows * out_stride);
+            let mut a = base.clone();
+            let mut b = base;
+            let cyc_a =
+                sim.execute_strip(&act, &slab, rows, p, cols, &mut a, out_stride, col_offset);
+            let cyc_b = sim.execute_strip_reference(
+                &act, &slab, rows, p, cols, &mut b, out_stride, col_offset,
+            );
+            assert_eq!(a, b, "microkernel must be bit-identical to the oracle");
+            assert_eq!(cyc_a, cyc_b, "cycle accounting must not change");
+        });
     }
 
     #[test]

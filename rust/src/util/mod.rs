@@ -8,6 +8,7 @@ pub mod fixed;
 pub mod prng;
 pub mod stats;
 pub mod table;
+pub mod threadpool;
 
 /// Ceiling division for unsigned integers.
 #[inline]

@@ -1,0 +1,336 @@
+//! Persistent scoped thread pool (zero-dep; no rayon in the offline crate
+//! set).
+//!
+//! The hot paths that shard data-parallel work — OVSF filter regression /
+//! reconstruction and the engine's per-slab row-strip GEMM — used to spawn
+//! fresh OS threads per call through `std::thread::scope`. Under serving
+//! load that is one `clone(2)` per layer per request; this pool spawns its
+//! workers once per process and reuses them for every scoped batch.
+//!
+//! [`ThreadPool::scope_run`] is the only submission surface: it runs the
+//! first task inline on the caller (the caller is a worker too), queues the
+//! rest, and blocks until *every* task of the batch has finished — so tasks
+//! may safely borrow from the caller's stack, exactly like
+//! `std::thread::scope`. Panics in any task are re-raised on the caller
+//! after the whole batch has drained (no borrow outlives the unwinding
+//! frame).
+//!
+//! Do **not** call [`scope_run`](ThreadPool::scope_run) from inside a pool
+//! task: a worker waiting on a nested batch could starve the pool.
+//! (Current callers — `OvsfLayer` sharding and the engine's strip GEMM —
+//! never nest.)
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A task borrowing from the caller's stack, valid for `'scope`.
+pub type ScopedTask<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+struct Queue {
+    tasks: VecDeque<Task>,
+    closed: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    available: Condvar,
+}
+
+fn lock_queue(shared: &Shared) -> std::sync::MutexGuard<'_, Queue> {
+    // A panicking task is caught inside its wrapper, so the queue mutex is
+    // only poisoned by a panic in the pool itself; keep serving regardless.
+    shared.queue.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Completion latch for one scoped batch.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Self {
+        Self {
+            state: Mutex::new(LatchState {
+                remaining,
+                panicked: false,
+            }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, ok: bool) {
+        let mut s = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        s.remaining -= 1;
+        if !ok {
+            s.panicked = true;
+        }
+        let finished = s.remaining == 0;
+        drop(s);
+        if finished {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until the batch drains; returns whether any task panicked.
+    fn wait(&self) -> bool {
+        let mut s = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        while s.remaining > 0 {
+            s = self.done.wait(s).unwrap_or_else(PoisonError::into_inner);
+        }
+        s.panicked
+    }
+}
+
+fn worker(shared: &Shared) {
+    loop {
+        let task = {
+            let mut q = lock_queue(shared);
+            loop {
+                if let Some(t) = q.tasks.pop_front() {
+                    break t;
+                }
+                if q.closed {
+                    return;
+                }
+                q = shared
+                    .available
+                    .wait(q)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        // Every queued task is a scope_run wrapper that catches its own
+        // panic, so the worker loop never unwinds.
+        task();
+    }
+}
+
+/// A fixed-size pool of persistent worker threads executing scoped batches.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` persistent workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue {
+                tasks: VecDeque::new(),
+                closed: false,
+            }),
+            available: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let shared = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name("unzipfpga-pool".into())
+                    .spawn(move || worker(&shared))
+                    .expect("spawn pool worker"),
+            );
+        }
+        Self {
+            shared,
+            handles,
+            threads,
+        }
+    }
+
+    /// The process-wide shared pool, sized to the available parallelism
+    /// (capped at 16), spawned lazily on first use.
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(16);
+            ThreadPool::new(n)
+        })
+    }
+
+    /// Number of worker threads (the useful shard count is `threads + 1`:
+    /// the caller runs one task inline).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn submit(&self, task: Task) {
+        let mut q = lock_queue(&self.shared);
+        q.tasks.push_back(task);
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Run a batch of tasks that may borrow from the caller's stack and
+    /// block until all of them have finished. The first task runs inline on
+    /// the caller; the rest are distributed over the workers. If any task
+    /// panics, the panic is re-raised here once the whole batch has
+    /// drained.
+    pub fn scope_run<'scope>(&self, mut tasks: Vec<ScopedTask<'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let inline = tasks.remove(0);
+        let latch = Arc::new(Latch::new(tasks.len()));
+        for task in tasks {
+            // SAFETY: the latch guarantees this function does not return —
+            // not even by unwinding, `wait` runs on both paths below —
+            // until every queued task has completed, so the 'scope borrows
+            // inside `task` are live for as long as the task can run. The
+            // transmute only erases that lifetime; the closure layout is
+            // unchanged.
+            let task: Task = unsafe {
+                std::mem::transmute::<ScopedTask<'scope>, Task>(task)
+            };
+            let latch = Arc::clone(&latch);
+            self.submit(Box::new(move || {
+                let ok =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)).is_ok();
+                latch.complete(ok);
+            }));
+        }
+        let inline_ok =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(inline)).is_ok();
+        let queued_panicked = latch.wait();
+        if !inline_ok || queued_panicked {
+            panic!("ThreadPool::scope_run: a scoped task panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = lock_queue(&self.shared);
+            q.closed = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = ThreadPool::new(3);
+        let hits = AtomicUsize::new(0);
+        let hits_ref = &hits;
+        let tasks: Vec<ScopedTask<'_>> = (0..17)
+            .map(|_| {
+                Box::new(move || {
+                    hits_ref.fetch_add(1, Ordering::SeqCst);
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool.scope_run(tasks);
+        assert_eq!(hits.load(Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    fn tasks_may_borrow_disjoint_output_chunks() {
+        let pool = ThreadPool::new(2);
+        let mut out = vec![0usize; 24];
+        let tasks: Vec<ScopedTask<'_>> = out
+            .chunks_mut(7)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = i * 100 + j;
+                    }
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool.scope_run(tasks);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i / 7) * 100 + i % 7);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let pool = ThreadPool::new(1);
+        pool.scope_run(Vec::new());
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_batch() {
+        let pool = ThreadPool::new(2);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let tasks: Vec<ScopedTask<'_>> = (0..4)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("injected task failure");
+                        }
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            pool.scope_run(tasks);
+        }));
+        assert!(outcome.is_err(), "the task panic must propagate");
+        // The pool still serves the next batch.
+        let hits = AtomicUsize::new(0);
+        let hits_ref = &hits;
+        let tasks: Vec<ScopedTask<'_>> = (0..4)
+            .map(|_| {
+                Box::new(move || {
+                    hits_ref.fetch_add(1, Ordering::SeqCst);
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool.scope_run(tasks);
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn concurrent_scopes_share_the_workers() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    let tasks: Vec<ScopedTask<'_>> = (0..8)
+                        .map(|_| {
+                            let total = Arc::clone(&total);
+                            Box::new(move || {
+                                total.fetch_add(1, Ordering::SeqCst);
+                            }) as ScopedTask<'_>
+                        })
+                        .collect();
+                    pool.scope_run(tasks);
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = ThreadPool::global();
+        let b = ThreadPool::global();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.threads() >= 1);
+    }
+}

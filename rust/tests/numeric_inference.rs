@@ -249,6 +249,144 @@ fn pool_responses_carry_real_numerics() {
     pool.shutdown().unwrap();
 }
 
+fn block_engine_with(
+    rho: f64,
+    selective: bool,
+    pipelined: bool,
+    cache: Arc<SlabCache>,
+) -> Engine {
+    let net = resnet18_block();
+    let profile = RatioProfile::uniform(&net, rho);
+    let plan = Engine::builder()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(64, 16, 16, 48))
+        .network(net)
+        .profile(profile)
+        .plan()
+        .unwrap();
+    let mut backend = SimBackend::with_cache(cache);
+    backend.selective = selective;
+    backend.pipelined = pipelined;
+    Engine::with_backend(plan, Box::new(backend)).unwrap()
+}
+
+/// Acceptance: the pipelined prefetch datapath is **bit-identical** to the
+/// serial generate-then-multiply schedule — same seeds, same outputs — for
+/// ρ ∈ {0.25, 1.0} under both PE schedules, with nonzero generation/compute
+/// telemetry and hidden time never exceeding generation time.
+#[test]
+fn pipelined_datapath_is_bit_identical_to_serial() {
+    let input = block_input();
+    for rho in [0.25, 1.0] {
+        for selective in [true, false] {
+            let mut serial =
+                block_engine_with(rho, selective, false, Arc::new(SlabCache::new()));
+            let expect = serial.infer(&input).unwrap();
+            let mut piped =
+                block_engine_with(rho, selective, true, Arc::new(SlabCache::new()));
+            let got = piped.infer(&input).unwrap();
+            assert_eq!(
+                got.output, expect.output,
+                "pipelined output differs from serial (ρ={rho}, selective={selective})"
+            );
+            let overlap = got.report.overlap();
+            assert!(overlap.gen_ns > 0, "cold OVSF slabs must charge generation");
+            assert!(overlap.compute_ns > 0, "PE compute must be timed");
+            assert!(
+                overlap.hidden_ns <= overlap.gen_ns,
+                "cannot hide more generation than ran"
+            );
+            assert_eq!(
+                expect.report.overlap().hidden_ns,
+                0,
+                "the serial schedule overlaps nothing"
+            );
+        }
+    }
+}
+
+/// Batched numeric serving: a `ServerPool` run with `max_batch > 1` must
+/// return outputs identical to per-request serial inference, and the
+/// shared slab cache's misses must not scale with the batch size — each
+/// layer's slabs are generated once for the whole run.
+#[test]
+fn batched_pool_serving_matches_serial_and_amortises_slab_misses() {
+    use unzipfpga::coordinator::pool::PoolConfig;
+    use unzipfpga::coordinator::server::Request;
+
+    let net = resnet18_block();
+    let profile = RatioProfile::uniform(&net, 0.25);
+    let builder = Engine::builder()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(64, 16, 16, 48))
+        .network(net.clone())
+        .profile(profile)
+        .backend(BackendKind::Simulator);
+
+    // Distinct inputs per request so batching cannot hide behind identical
+    // tensors.
+    let mut rng = Xoshiro256::seed_from_u64(0xba7c);
+    let inputs: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(14 * 14 * 64)).collect();
+    let mut reference = builder.clone().build().unwrap();
+    let expect: Vec<Vec<f32>> = inputs
+        .iter()
+        .map(|input| reference.infer(input).unwrap().output)
+        .collect();
+
+    // Budget of exactly one slab (P×T_C×4 = 576·48·4 bytes): nothing
+    // survives between layer passes, so the miss count discriminates real
+    // batch folding — per-request execution would regenerate all 4 slabs
+    // for every request, while a folded batch generates 4 per *batch*.
+    let cache = Arc::new(SlabCache::with_budget(576 * 48 * 4));
+    let pool = builder
+        .weights_cache(Arc::clone(&cache))
+        .build_pool(PoolConfig {
+            workers: 1, // deterministic batching: one worker pops the queue
+            queue_depth: 16,
+            max_batch: 4,
+            linger: std::time::Duration::from_millis(20),
+        })
+        .unwrap();
+    let handles: Vec<_> = inputs
+        .iter()
+        .enumerate()
+        .map(|(id, input)| {
+            pool.submit(Request {
+                id: id as u64,
+                input: input.clone(),
+            })
+            .unwrap()
+        })
+        .collect();
+    for (h, want) in handles.into_iter().zip(&expect) {
+        let resp = h.wait().unwrap();
+        assert_eq!(
+            &resp.output, want,
+            "batched pool numerics diverge from per-request serial inference"
+        );
+    }
+    let misses = cache.misses();
+    let pm = pool.shutdown().unwrap();
+    assert_eq!(pm.total_requests(), 8);
+    assert!(
+        pm.max_batch() > 1,
+        "the run must actually have batched: max batch {}",
+        pm.max_batch()
+    );
+    // Both OVSF layers have C = 64 on T_C = 48 ⇒ 2 column tiles each: a
+    // folded batch generates exactly 4 slabs regardless of how many
+    // requests it carries, so misses are bounded by 4·batches — without
+    // folding, under the one-slab budget, they would be 4·requests = 32.
+    assert!(
+        misses <= 4 * pm.total_batches(),
+        "slab misses must scale with batches, not requests: {misses} misses \
+         over {} batches",
+        pm.total_batches()
+    );
+}
+
 /// Byte-budget/eviction property: under arbitrary access patterns the
 /// cache never holds more than the budget, counters reconcile, and every
 /// fetch returns the key's own data.
