@@ -169,7 +169,7 @@ fn main() -> unzipfpga::Result<()> {
     let handles: Vec<_> = (0..n_req)
         .map(|id| {
             let input = rng2.normal_vec(8 * 16 * 16 * 3);
-            pool.submit(Request { id, input })
+            pool.submit(Request::numeric(id, input))
         })
         .collect::<unzipfpga::Result<_>>()?;
     for h in handles {

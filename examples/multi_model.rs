@@ -1,0 +1,99 @@
+//! Multi-model serving quickstart: the compile-once / serve-many
+//! lifecycle on one shared computation engine.
+//!
+//! 1. **Compile** each CNN into an immutable `CompiledModel` artifact
+//!    (plan + schedule + weights-key namespace + pre-fitted OVSF α sets).
+//!    One `Compiler` pins a single design point σ — the paper's premise:
+//!    the fabric is never reconfigured between models.
+//! 2. **Register** the artifacts in a `ModelRegistry` under string ids.
+//!    All models' generated weight slabs share ONE bounded cache — they
+//!    compete for resident bytes like co-resident models compete for
+//!    on-chip BRAM.
+//! 3. **Submit** model-named requests to a registry-routed `ServerPool`:
+//!    batches never mix models, workers swap plans on model switch, and
+//!    unknown ids / wrong shapes fail fast with typed errors.
+//!
+//! ```sh
+//! cargo run --release --example multi_model [network,network,...]
+//! ```
+
+use std::sync::Arc;
+use unzipfpga::arch::Platform;
+use unzipfpga::coordinator::pool::{PoolConfig, ServerPool};
+use unzipfpga::coordinator::registry::ModelRegistry;
+use unzipfpga::coordinator::server::Request;
+use unzipfpga::engine::{BackendKind, Compiler};
+use unzipfpga::workload::{Network, RatioProfile};
+use unzipfpga::Error;
+
+fn main() -> unzipfpga::Result<()> {
+    let names = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "resnet18,squeezenet".into());
+    let nets: Vec<Network> = Network::by_names(&names)?;
+
+    // 1. Compile: one σ (DSE optimum of the first model) for every model.
+    let compiler = Compiler::new().platform(Platform::z7045()).bandwidth(4);
+    let registry = Arc::new(ModelRegistry::with_budget(8 << 20));
+    for net in &nets {
+        let profile = RatioProfile::ovsf50(net);
+        let artifact = compiler.compile(net.clone(), profile)?;
+        let compiled = registry.register(net.name.clone(), artifact)?;
+        println!(
+            "compiled '{}': σ = {}, {} OVSF layers, {:.1}M α words, \
+             in/out = {}/{} activations, device latency {:.2} ms",
+            net.name,
+            compiled.sigma(),
+            compiled.weights_keys().len(),
+            compiled.alpha_words() as f64 / 1e6,
+            compiled.input_len(),
+            compiled.output_len(),
+            compiled.latency_s() * 1e3
+        );
+    }
+
+    // 2./3. Serve interleaved traffic across all registered models.
+    let pool = ServerPool::serve(
+        Arc::clone(&registry),
+        BackendKind::Analytical,
+        PoolConfig::default(),
+    )?;
+    let per_model = 40u64;
+    let mut handles = Vec::new();
+    let mut id = 0u64;
+    for _ in 0..per_model {
+        for net in &nets {
+            handles.push(pool.submit(Request::for_model(id, net.name.clone(), vec![]))?);
+            id += 1;
+        }
+    }
+    for h in handles {
+        let resp = h.wait()?;
+        assert!(!resp.model.is_empty(), "responses carry the routed model id");
+    }
+
+    // Typed fail-fast admission: unknown ids and bad shapes never queue.
+    match pool.submit(Request::for_model(9999, "not-a-model", vec![])) {
+        Err(Error::UnknownModel(m)) => println!("\nrejected unknown model id: '{m}'"),
+        Err(e) => panic!("expected a typed UnknownModel error, got {e}"),
+        Ok(_) => panic!("expected a typed UnknownModel error, got Ok"),
+    }
+    match pool.submit(Request::for_model(9999, nets[0].name.clone(), vec![0.0; 3])) {
+        Err(Error::ShapeMismatch(_)) => println!("rejected wrong-length input (typed)"),
+        Err(e) => panic!("expected a typed ShapeMismatch error, got {e}"),
+        Ok(_) => panic!("expected a typed ShapeMismatch error, got Ok"),
+    }
+
+    // Runtime eviction: the model unregisters and its resident slabs leave
+    // the shared cache; later requests for it fail typed.
+    let evicted = registry.evict(&nets[0].name)?;
+    println!("evicted '{}' at runtime", evicted.network_name());
+    assert!(matches!(
+        pool.submit(Request::for_model(10000, nets[0].name.clone(), vec![])),
+        Err(Error::UnknownModel(_))
+    ));
+
+    let metrics = pool.shutdown()?;
+    println!("\npool: {}", metrics.summary());
+    Ok(())
+}

@@ -3,43 +3,72 @@
 //! weights generation is what keeps throughput usable as per-tenant
 //! bandwidth shrinks.
 //!
-//! Each co-location point is evaluated through the unified `Engine` API
-//! (DSE picks σ, the analytical backend executes the plan) — see
-//! `coordinator::multi_tenant::co_location_sweep`.
+//! Every co-location level runs on the **real serving stack**: the models
+//! are compiled once (`Compiler`, one DSE-pinned σ per level), registered
+//! in a `ModelRegistry` under one shared slab-cache budget, and served
+//! interleaved through a registry-routed `ServerPool` on the simulator
+//! backend — including real numeric inferences through the tile-streamed
+//! datapath (see `coordinator::multi_tenant::co_location_sweep`).
 //!
 //! ```sh
-//! cargo run --release --example multi_tenant [network] [platform]
+//! cargo run --release --example multi_tenant [network[,network...]] [platform]
 //! ```
+//!
+//! `EXAMPLES_SMOKE=1` shrinks the sweep for CI.
 
 use unzipfpga::arch::Platform;
-use unzipfpga::coordinator::multi_tenant::co_location_sweep;
+use unzipfpga::coordinator::multi_tenant::{co_location_sweep, CoLocationConfig};
 use unzipfpga::workload::Network;
 
 fn main() -> unzipfpga::Result<()> {
-    let name = std::env::args().nth(1).unwrap_or_else(|| "resnet18".into());
-    let net = Network::by_name(&name)
-        .ok_or_else(|| unzipfpga::Error::InvalidConfig(format!("unknown network {name}")))?;
+    let names = std::env::args().nth(1).unwrap_or_else(|| "resnet18".into());
+    let nets: Vec<Network> = Network::by_names(&names)?;
     let plat = match std::env::args().nth(2).as_deref() {
         Some("z7045") => Platform::z7045(),
         _ => Platform::zu7ev(),
     };
+    let smoke = std::env::var("EXAMPLES_SMOKE").is_ok();
+    let cfg = CoLocationConfig {
+        max_tenants: if smoke { 2 } else { 6 },
+        timing_requests: 4,
+        numeric_requests: 1,
+        ..CoLocationConfig::default()
+    };
     println!(
-        "co-location study: {} on {} ({}x total bandwidth shared with co-located apps)\n",
-        net.name, plat.name, plat.peak_bw_mult
+        "co-location study: {} on {} ({}x total bandwidth shared with co-located apps)",
+        names, plat.name, plat.peak_bw_mult
     );
     println!(
-        "{:<8} {:>10} {:>14} {:>14} {:>9}",
-        "tenants", "bw/tenant", "baseline inf/s", "unzip inf/s", "speedup"
+        "each level serves {} timing + {} numeric requests per model through one \
+         registry-routed pool\n",
+        cfg.timing_requests, cfg.numeric_requests
     );
-    let reports = co_location_sweep(&plat, plat.peak_bw_mult, &net, 6)?;
+    println!(
+        "{:<8} {:>10} {:<14} {:>14} {:>14} {:>9}",
+        "tenants", "bw/tenant", "model", "baseline inf/s", "unzip inf/s", "speedup"
+    );
+    let reports = co_location_sweep(&plat, plat.peak_bw_mult, &nets, &cfg)?;
     for r in &reports {
+        for m in &r.models {
+            println!(
+                "{:<8} {:>9}x {:<14} {:>14.1} {:>14.1} {:>8.2}x",
+                r.tenants,
+                r.bw_per_tenant,
+                m.model,
+                m.baseline_inf_s,
+                m.unzip_inf_s,
+                m.speedup()
+            );
+        }
         println!(
-            "{:<8} {:>9}x {:>14.1} {:>14.1} {:>8.2}x",
-            r.tenants,
-            r.bw_per_tenant,
-            r.baseline_inf_s,
-            r.unzip_inf_s,
-            r.speedup()
+            "         served {} requests ({} model switches); slab cache: {} hits / {} \
+             misses / {} evictions, peak resident {:.1} KiB",
+            r.requests_served,
+            r.model_switches,
+            r.cache_hits,
+            r.cache_misses,
+            r.cache_evictions,
+            r.peak_resident_bytes as f64 / 1024.0
         );
     }
     let first = reports.first().unwrap().speedup();

@@ -8,7 +8,7 @@
 //! * **multi-tenant** bandwidth contention (the paper's conclusion).
 
 use unzipfpga::arch::{DesignPoint, Platform};
-use unzipfpga::coordinator::multi_tenant::co_location_sweep;
+use unzipfpga::coordinator::multi_tenant::{co_location_sweep, CoLocationConfig};
 use unzipfpga::dse::greedy::greedy_optimise;
 use unzipfpga::dse::search::{optimise, DseConfig};
 use unzipfpga::perf::dataflow::{max_affordable_rho, Dataflow};
@@ -93,15 +93,23 @@ fn main() {
     );
 
     println!("\n== ablation 5: multi-tenant bandwidth contention ==");
-    let reports = co_location_sweep(&Platform::zu7ev(), 12, &resnet::resnet18(), 4).unwrap();
+    let cfg = CoLocationConfig {
+        max_tenants: 4,
+        timing_requests: 1,
+        workers: 1,
+        ..CoLocationConfig::default()
+    };
+    let reports =
+        co_location_sweep(&Platform::zu7ev(), 12, &[resnet::resnet18()], &cfg).unwrap();
     for r in &reports {
+        let m = &r.models[0];
         println!(
             "  {} tenant(s) @ {}x/tenant: baseline {:>6.1} vs unzipFPGA {:>6.1} inf/s  ({:.2}x)",
             r.tenants,
             r.bw_per_tenant,
-            r.baseline_inf_s,
-            r.unzip_inf_s,
-            r.speedup()
+            m.baseline_inf_s,
+            m.unzip_inf_s,
+            m.speedup()
         );
     }
 }

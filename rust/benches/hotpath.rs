@@ -17,7 +17,11 @@
 //! generated-weight bytes) and emits `BENCH_infer.json` (override:
 //! `BENCH_INFER_JSON`); `BENCH_WRITE_BASELINE=1` additionally refreshes
 //! the committed `BENCH_baseline.json` the CI regression gate reads.
-//! `BENCH_SMOKE=1` clamps budgets for CI.
+//! The multi-model section serves ResNet-18 + SqueezeNet interleaved
+//! through one registry-routed `ServerPool` under a shared slab budget
+//! and emits `BENCH_multimodel.json` (override: `BENCH_MULTIMODEL_JSON`)
+//! — per-model latency percentiles, model-switch counts and shared-cache
+//! contention counters. `BENCH_SMOKE=1` clamps budgets for CI.
 
 use std::sync::Arc;
 
@@ -393,6 +397,123 @@ fn bench_microkernel() -> f64 {
     speedup
 }
 
+/// Two-model interleaved-traffic serving bench: ResNet-18 + SqueezeNet
+/// compiled onto one σ, registered in one `ModelRegistry` under a shared
+/// 8 MiB slab budget, served through one registry-routed `ServerPool` with
+/// strictly alternating numeric requests — the adversarial multi-model
+/// pattern (every batch boundary is a model switch). Emits
+/// `BENCH_multimodel.json` (override: `BENCH_MULTIMODEL_JSON`).
+fn bench_multimodel() {
+    use unzipfpga::coordinator::pool::{PoolConfig, ServerPool};
+    use unzipfpga::coordinator::registry::ModelRegistry;
+    use unzipfpga::coordinator::server::Request;
+    use unzipfpga::engine::{BackendKind, Compiler};
+    use unzipfpga::workload::squeezenet;
+
+    println!("-- multi-model serving (ResNet18 + SqueezeNet, interleaved) --");
+    let budget = 8usize << 20;
+    let nets = [resnet::resnet18(), squeezenet::squeezenet1_1()];
+    let compiler = Compiler::new()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(64, 64, 16, 48));
+    let registry = Arc::new(ModelRegistry::with_budget(budget));
+    let mut inputs = Vec::new();
+    let mut rng = Xoshiro256::seed_from_u64(0x2d0d);
+    for net in &nets {
+        let profile = RatioProfile::ovsf50(net);
+        let artifact = compiler.compile(net.clone(), profile).unwrap();
+        let compiled = registry.register(net.name.clone(), artifact).unwrap();
+        inputs.push(rng.normal_vec(compiled.input_len()));
+    }
+    let per_model = if smoke_mode() { 2u64 } else { 6 };
+    let pool = ServerPool::serve(
+        Arc::clone(&registry),
+        BackendKind::Simulator,
+        PoolConfig {
+            workers: 2,
+            queue_depth: 64,
+            max_batch: 4,
+            linger: std::time::Duration::from_micros(200),
+        },
+    )
+    .unwrap();
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    let mut id = 0u64;
+    for _ in 0..per_model {
+        for (net, input) in nets.iter().zip(&inputs) {
+            handles.push(
+                pool.submit(Request::for_model(id, net.name.clone(), input.clone()))
+                    .unwrap(),
+            );
+            id += 1;
+        }
+    }
+    for h in handles {
+        let resp = h.wait().unwrap();
+        assert!(!resp.output.is_empty(), "numeric responses carry data");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let pm = pool.shutdown().unwrap();
+    let cache = registry.cache();
+    let total = pm.total_requests();
+    assert!(
+        cache.peak_resident_bytes() <= budget,
+        "peak resident {} exceeds the shared budget {budget}",
+        cache.peak_resident_bytes()
+    );
+    println!(
+        "   {total} interleaved requests over 2 models in {wall_s:.2}s \
+         ({:.2} req/s); {} model switches, cache {} hits / {} misses / {} \
+         evictions, peak resident {:.2} MiB / {:.0} MiB budget",
+        total as f64 / wall_s,
+        pm.model_switches(),
+        cache.hits(),
+        cache.misses(),
+        cache.evictions(),
+        cache.peak_resident_bytes() as f64 / (1 << 20) as f64,
+        budget as f64 / (1 << 20) as f64
+    );
+    let merged = pm.merged();
+    let path = std::env::var("BENCH_MULTIMODEL_JSON")
+        .unwrap_or_else(|_| "BENCH_multimodel.json".to_string());
+    let mut out = String::from("{\n  \"bench\": \"multi-model-interleaved-serving\",\n");
+    out.push_str(&format!(
+        "  \"smoke\": {},\n  \"requests\": {},\n  \"wall_s\": {:.3},\n  \
+         \"req_per_s\": {:.3},\n  \"model_switches\": {},\n  \
+         \"slab_budget_bytes\": {},\n  \"peak_resident_weight_bytes\": {},\n  \
+         \"cache_hits\": {},\n  \"cache_misses\": {},\n  \"cache_evictions\": {},\n  \
+         \"models\": [\n",
+        smoke_mode(),
+        total,
+        wall_s,
+        total as f64 / wall_s,
+        pm.model_switches(),
+        budget,
+        cache.peak_resident_bytes(),
+        cache.hits(),
+        cache.misses(),
+        cache.evictions()
+    ));
+    for (i, net) in nets.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"model\": \"{}\", \"requests\": {}, \"p50_us\": {:.1}, \
+             \"p99_us\": {:.1}}}{}\n",
+            json_escape(&net.name),
+            merged.model_count(&net.name),
+            merged.model_percentile_us(&net.name, 50.0),
+            merged.model_percentile_us(&net.name, 99.0),
+            if i + 1 < nets.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(&path, &out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 fn build_infer_engine(net: &Network, pipelined: bool, cache: Arc<SlabCache>) -> Engine {
     let profile = RatioProfile::ovsf50(net);
     let plan = Engine::builder()
@@ -556,6 +677,8 @@ fn main() {
     let infer_rows = bench_engine_infer();
     write_infer_json(&infer_rows, kernel_speedup);
     maybe_write_baseline(&infer_rows);
+
+    bench_multimodel();
 
     bench_auto("autotune: ResNet18 @ 2x end-to-end", 2000, || {
         autotune(&cfg, &plat, 2, &net).unwrap().final_inf_per_s

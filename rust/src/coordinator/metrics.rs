@@ -1,12 +1,17 @@
-//! Latency/throughput metrics for the request loop.
+//! Latency/throughput metrics for the request loop, with per-model
+//! breakdowns for multi-model serving.
 
 use crate::util::stats;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
-/// Collected request metrics.
+/// Collected request metrics: one global latency series plus a per-model
+/// series for every routed model id (requests with an empty model id —
+/// unrouted legacy pools — only count globally).
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     latencies_us: Vec<f64>,
+    per_model: BTreeMap<String, Vec<f64>>,
 }
 
 impl Metrics {
@@ -15,9 +20,20 @@ impl Metrics {
         Self::default()
     }
 
-    /// Record one request latency.
+    /// Record one request latency (no model attribution).
     pub fn record(&mut self, d: Duration) {
         self.latencies_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    /// Record one request latency for a routed model. An empty `model`
+    /// records globally only.
+    pub fn record_model(&mut self, model: &str, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.latencies_us.push(us);
+        if !model.is_empty() {
+            let series = self.per_model.entry(model.to_string()).or_default();
+            series.push(us);
+        }
     }
 
     /// Requests recorded.
@@ -25,10 +41,40 @@ impl Metrics {
         self.latencies_us.len()
     }
 
+    /// Model ids with recorded requests (sorted).
+    pub fn models(&self) -> Vec<&str> {
+        self.per_model.keys().map(String::as_str).collect()
+    }
+
+    /// Requests recorded for one model.
+    pub fn model_count(&self, model: &str) -> usize {
+        self.per_model.get(model).map(Vec::len).unwrap_or(0)
+    }
+
+    /// Mean latency for one model (µs); 0 when unseen.
+    pub fn model_mean_us(&self, model: &str) -> f64 {
+        self.per_model
+            .get(model)
+            .map(|v| stats::mean(v))
+            .unwrap_or(0.0)
+    }
+
+    /// Latency percentile for one model (µs); 0 when unseen.
+    pub fn model_percentile_us(&self, model: &str, p: f64) -> f64 {
+        self.per_model
+            .get(model)
+            .map(|v| stats::percentile(v, p))
+            .unwrap_or(0.0)
+    }
+
     /// Fold another collector's samples into this one (used to aggregate
     /// per-worker metrics across a server pool).
     pub fn merge(&mut self, other: &Metrics) {
         self.latencies_us.extend_from_slice(&other.latencies_us);
+        for (model, v) in &other.per_model {
+            let series = self.per_model.entry(model.clone()).or_default();
+            series.extend_from_slice(v);
+        }
     }
 
     /// Mean latency in microseconds.
@@ -51,16 +97,25 @@ impl Metrics {
         }
     }
 
-    /// One-line summary.
+    /// One-line summary (global, then one clause per routed model).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "n={} mean={:.1}µs p50={:.1}µs p99={:.1}µs throughput={:.1}/s",
             self.count(),
             self.mean_us(),
             self.percentile_us(50.0),
             self.percentile_us(99.0),
             self.throughput()
-        )
+        );
+        for (model, v) in &self.per_model {
+            s.push_str(&format!(
+                " | {model}: n={} p50={:.1}µs p99={:.1}µs",
+                v.len(),
+                stats::percentile(v, 50.0),
+                stats::percentile(v, 99.0)
+            ));
+        }
+        s
     }
 }
 
@@ -79,5 +134,30 @@ mod tests {
         assert!(m.percentile_us(50.0) >= 100.0);
         assert!(m.throughput() > 0.0);
         assert!(m.summary().contains("n=3"));
+        assert!(m.models().is_empty());
+    }
+
+    #[test]
+    fn per_model_series_and_merge() {
+        let mut a = Metrics::new();
+        a.record_model("r18", Duration::from_micros(100));
+        a.record_model("r18", Duration::from_micros(300));
+        a.record_model("sqn", Duration::from_micros(50));
+        a.record_model("", Duration::from_micros(999)); // unrouted: global only
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.models(), vec!["r18", "sqn"]);
+        assert_eq!(a.model_count("r18"), 2);
+        assert_eq!(a.model_count("sqn"), 1);
+        assert_eq!(a.model_count("missing"), 0);
+        assert!((a.model_mean_us("r18") - 200.0).abs() < 1.0);
+        assert!(a.model_percentile_us("r18", 99.0) >= a.model_percentile_us("r18", 50.0));
+
+        let mut b = Metrics::new();
+        b.record_model("sqn", Duration::from_micros(70));
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.model_count("sqn"), 2);
+        let s = a.summary();
+        assert!(s.contains("r18:") && s.contains("sqn:"), "{s}");
     }
 }

@@ -3,22 +3,28 @@
 //! serves a request stream with metrics — the role the Arm host CPU plays
 //! on the paper's boards (§7.1).
 //!
-//! Serving goes through [`pool::ServerPool`]: N worker threads behind a
-//! bounded submission queue with request batching, fed by non-blocking
-//! `submit() → ResponseHandle`. The old single-worker
-//! [`server::InferenceServer`] remains as a deprecated shim over a
-//! one-worker pool. Engines (any
-//! [`ExecutionBackend`](crate::engine::ExecutionBackend)) plug in via
-//! [`EngineBuilder::build_pool`](crate::engine::EngineBuilder::build_pool).
+//! Serving is **model-routed**: [`CompiledModel`](crate::engine::compile::CompiledModel)
+//! artifacts are registered in a [`registry::ModelRegistry`] (all sharing
+//! one bounded generated-weights slab cache), and a
+//! [`pool::ServerPool`] started with
+//! [`serve`](pool::ServerPool::serve) — N worker threads behind a bounded
+//! submission queue — batches same-model requests together, swaps each
+//! worker's active backend plan on model switch, and fails bad requests
+//! fast with typed errors. Single-model engines use
+//! [`EngineBuilder::build_pool`](crate::engine::EngineBuilder::build_pool),
+//! a thin adapter over the same path; custom executors use
+//! [`pool::ServerPool::start`].
 
 pub mod metrics;
 pub mod multi_model;
 pub mod multi_tenant;
 pub mod pool;
+pub mod registry;
 pub mod scheduler;
 pub mod server;
 
 pub use metrics::Metrics;
 pub use pool::{PoolConfig, PoolMetrics, RequestExecutor, ResponseHandle, ServerPool};
+pub use registry::ModelRegistry;
 pub use scheduler::InferencePlan;
 pub use server::{Request, Response};

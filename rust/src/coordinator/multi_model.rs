@@ -1,38 +1,39 @@
-//! Multi-model time-sharing — the defining property of single computation
-//! engines (paper §1: "the accelerator's resources are reused across both
-//! layers and CNN models, without the need to reconfigure the fabric").
+//! Legacy analytical multi-model time-sharing — now a **thin adapter**
+//! over the first-class multi-model serving API
+//! ([`Compiler`](crate::engine::compile::Compiler) +
+//! [`ModelRegistry`](crate::coordinator::registry::ModelRegistry)).
 //!
-//! One engine configuration `σ` serves several CNNs. Switching models
-//! costs only the α-coefficient (re)load for the incoming model's OVSF
-//! layers — dense weights never move because they are generated on-chip;
-//! a conventional engine would re-stream its entire weights at first use
-//! of every layer regardless. The manager tracks which model's α set is
-//! resident and charges switch cycles accordingly.
+//! The manager keeps only what the new API deliberately does not model:
+//! closed-form α-reload switch-cost accounting (switching models costs
+//! only the incoming model's α set — dense weights never move because
+//! they are generated on-chip; a conventional engine would re-stream its
+//! entire weights). Everything else — validation, compilation, the model
+//! table — delegates to the registry. For actually *serving* several
+//! models (real numerics, batching, shared slab budget), use
+//! [`ServerPool::serve`](crate::coordinator::pool::ServerPool::serve).
+
+#![allow(deprecated)]
 
 use crate::arch::{DesignPoint, Platform};
-use crate::coordinator::scheduler::InferencePlan;
-use crate::engine::Engine;
-use crate::error::{Error, Result};
+use crate::coordinator::registry::ModelRegistry;
+use crate::engine::compile::Compiler;
+use crate::error::Result;
 use crate::workload::{Network, RatioProfile};
 use std::collections::HashMap;
 
-/// A registered model: plan + α volume.
-#[derive(Clone, Debug)]
-pub struct RegisteredModel {
-    /// Inference plan on the shared engine configuration.
-    pub plan: InferencePlan,
-    /// α words that must be resident for this model.
-    pub alpha_words: u64,
-    /// Inference count served.
-    pub served: u64,
-}
-
-/// Time-sharing manager for one engine configuration.
+/// Analytical time-sharing cost model for one engine configuration.
+#[deprecated(
+    since = "0.3.0",
+    note = "use engine::compile::Compiler + coordinator::registry::ModelRegistry \
+            + ServerPool::serve for real multi-model serving; this adapter only \
+            keeps the closed-form α-reload switch accounting"
+)]
 pub struct MultiModelManager {
     platform: Platform,
-    sigma: DesignPoint,
     bw_mult: u32,
-    models: HashMap<String, RegisteredModel>,
+    compiler: Compiler,
+    registry: ModelRegistry,
+    served: HashMap<String, u64>,
     /// Name of the model whose α set is currently resident.
     resident: Option<String>,
     /// Cumulative cycles spent on model switches (α reload).
@@ -45,43 +46,26 @@ impl MultiModelManager {
     /// Manager over a fixed engine configuration.
     pub fn new(platform: Platform, bw_mult: u32, sigma: DesignPoint) -> Self {
         Self {
+            compiler: Compiler::new()
+                .platform(platform.clone())
+                .bandwidth(bw_mult)
+                .design_point(sigma),
+            registry: ModelRegistry::new(),
             platform,
-            sigma,
             bw_mult,
-            models: HashMap::new(),
+            served: HashMap::new(),
             resident: None,
             switch_cycles: 0.0,
             inference_cycles: 0.0,
         }
     }
 
-    /// Register a network with a ratio profile, validated through the
-    /// unified [`Engine`] builder. The same σ serves all models — no
-    /// fabric reconfiguration.
+    /// Compile and register a network under its own name. The same σ
+    /// serves all models — no fabric reconfiguration.
     pub fn register(&mut self, net: &Network, profile: &RatioProfile) -> Result<()> {
-        let plan = Engine::builder()
-            .platform(self.platform.clone())
-            .bandwidth(self.bw_mult)
-            .design_point(self.sigma)
-            .network(net.clone())
-            .profile(profile.clone())
-            .plan()?
-            .schedule;
-        let alpha_words: u64 = net
-            .layers
-            .iter()
-            .enumerate()
-            .filter(|(_, l)| l.ovsf)
-            .map(|(i, l)| l.n_in * l.n_out * l.basis_per_chunk(profile.rho(i)))
-            .sum();
-        self.models.insert(
-            net.name.clone(),
-            RegisteredModel {
-                plan,
-                alpha_words,
-                served: 0,
-            },
-        );
+        let compiled = self.compiler.compile(net.clone(), profile.clone())?;
+        self.registry.register(net.name.clone(), compiled)?;
+        self.served.insert(net.name.clone(), 0);
         Ok(())
     }
 
@@ -91,24 +75,21 @@ impl MultiModelManager {
         (words * 2) as f64 / (bw.bw_in() / self.platform.clock_hz)
     }
 
-    /// Serve one inference of `model`; returns the charged cycles
-    /// (switch + inference).
+    /// Serve one inference of `model` analytically; returns the charged
+    /// cycles (switch + inference).
     pub fn infer(&mut self, model: &str) -> Result<f64> {
-        let m = self
-            .models
-            .get(model)
-            .ok_or_else(|| Error::Coordinator(format!("model '{model}' not registered")))?
-            .clone();
+        let m = self.registry.get(model)?;
         let mut cycles = 0.0;
         if self.resident.as_deref() != Some(model) {
-            let sw = self.alpha_load_cycles(m.alpha_words);
+            let sw = self.alpha_load_cycles(m.alpha_words());
             self.switch_cycles += sw;
             cycles += sw;
             self.resident = Some(model.to_string());
         }
-        cycles += m.plan.total_cycles;
-        self.inference_cycles += m.plan.total_cycles;
-        self.models.get_mut(model).unwrap().served += 1;
+        let inference = m.plan().schedule.total_cycles;
+        cycles += inference;
+        self.inference_cycles += inference;
+        *self.served.entry(model.to_string()).or_insert(0) += 1;
         Ok(cycles)
     }
 
@@ -124,11 +105,8 @@ impl MultiModelManager {
 
     /// Per-model served counts.
     pub fn served(&self) -> Vec<(String, u64)> {
-        let mut v: Vec<(String, u64)> = self
-            .models
-            .iter()
-            .map(|(k, m)| (k.clone(), m.served))
-            .collect();
+        let mut v: Vec<(String, u64)> =
+            self.served.iter().map(|(k, n)| (k.clone(), *n)).collect();
         v.sort();
         v
     }
@@ -178,8 +156,8 @@ mod tests {
     #[test]
     fn batched_scheduling_amortises_switches() {
         // Round-robin (A B A B ...) pays a switch per request; batching
-        // (A A A A B B B B) pays two — the scheduling insight time-shared
-        // engines rely on.
+        // (A A A A B B B B) pays two — the scheduling insight the model-pure
+        // batcher of `ServerPool::serve` exploits.
         let mut rr = manager();
         for _ in 0..4 {
             rr.infer("ResNet18").unwrap();
@@ -202,9 +180,10 @@ mod tests {
     }
 
     #[test]
-    fn unknown_model_is_an_error() {
+    fn unknown_model_is_a_typed_error() {
         let mut mm = manager();
-        assert!(mm.infer("VGG19").is_err());
+        let err = mm.infer("VGG19").err().expect("unregistered model");
+        assert!(matches!(err, crate::Error::UnknownModel(_)), "{err}");
     }
 
     #[test]

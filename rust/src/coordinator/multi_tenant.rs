@@ -9,67 +9,196 @@
 //! bandwidth. On-the-fly weights generation removes the weight traffic, so
 //! its advantage *grows* with tenant count — the claim this module
 //! quantifies.
+//!
+//! The sweep runs on the **real serving stack**, not an analytical
+//! shortcut: at every co-location level the models are compiled through
+//! the [`Compiler`](crate::engine::compile::Compiler) (one DSE-pinned σ
+//! per level — a single fabric serves all co-located CNNs), registered in
+//! a [`ModelRegistry`](crate::coordinator::registry::ModelRegistry) under
+//! one shared slab-cache byte budget, and served interleaved through a
+//! registry-routed [`ServerPool`] on the **simulator backend** — numeric
+//! requests stream real activations through the tile-streamed datapath
+//! with on-the-fly weights generation; timing-only requests exercise the
+//! routing, batching and switch accounting without the GEMM cost.
+
+use std::sync::Arc;
 
 use crate::arch::Platform;
 use crate::baselines::faithful::evaluate_faithful;
-use crate::dse::search::{optimise, DseConfig};
-use crate::engine::{BackendKind, Engine};
+use crate::coordinator::pool::{PoolConfig, ServerPool};
+use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::server::Request;
+use crate::engine::compile::Compiler;
+use crate::engine::BackendKind;
 use crate::error::Result;
+use crate::util::prng::Xoshiro256;
 use crate::workload::{Network, RatioProfile};
 
-/// Per-tenant outcome of a co-location scenario.
+/// Shape of one co-location sweep.
+#[derive(Clone, Debug)]
+pub struct CoLocationConfig {
+    /// Evaluate 1..=`max_tenants` co-located replicas.
+    pub max_tenants: u32,
+    /// Timing-only requests submitted per model per co-location level
+    /// (cheap: routing + batching + admission costing, no GEMM).
+    pub timing_requests: u64,
+    /// Full numeric requests per model per level (real activations through
+    /// the tile-streamed datapath; costs one inference each).
+    pub numeric_requests: u64,
+    /// Shared slab-cache byte budget all co-located models compete under.
+    pub slab_budget: usize,
+    /// Pool workers serving each level.
+    pub workers: usize,
+    /// Pool max batch size.
+    pub max_batch: usize,
+}
+
+impl Default for CoLocationConfig {
+    fn default() -> Self {
+        Self {
+            max_tenants: 4,
+            timing_requests: 4,
+            numeric_requests: 0,
+            slab_budget: 8 << 20,
+            workers: 2,
+            max_batch: 4,
+        }
+    }
+}
+
+/// One co-located model's analytical throughput comparison at a level.
+#[derive(Clone, Debug)]
+pub struct ModelColocation {
+    /// Model id (network name).
+    pub model: String,
+    /// Per-tenant throughput with the conventional engine (inf/s).
+    pub baseline_inf_s: f64,
+    /// Per-tenant throughput with unzipFPGA on the shared engine (inf/s).
+    pub unzip_inf_s: f64,
+}
+
+impl ModelColocation {
+    /// unzipFPGA's advantage for this model at this co-location level.
+    pub fn speedup(&self) -> f64 {
+        self.unzip_inf_s / self.baseline_inf_s
+    }
+}
+
+/// Outcome of one co-location level: per-model throughput comparison plus
+/// the observed serving statistics of the shared registry pool.
 #[derive(Clone, Debug)]
 pub struct TenantReport {
     /// Number of co-located tenants.
     pub tenants: u32,
     /// Per-tenant bandwidth multiplier after the split.
     pub bw_per_tenant: u32,
-    /// Per-tenant throughput with the conventional engine (inf/s).
-    pub baseline_inf_s: f64,
-    /// Per-tenant throughput with unzipFPGA OVSF50 (inf/s).
-    pub unzip_inf_s: f64,
+    /// Per co-located model: baseline vs unzipFPGA throughput.
+    pub models: Vec<ModelColocation>,
+    /// Requests actually served through the registry pool at this level.
+    pub requests_served: usize,
+    /// Model switches (plan swaps) the pool's workers performed.
+    pub model_switches: u64,
+    /// Shared slab-cache hits at this level.
+    pub cache_hits: u64,
+    /// Shared slab-cache misses (slab generations run).
+    pub cache_misses: u64,
+    /// Slabs evicted under the shared byte budget.
+    pub cache_evictions: u64,
+    /// Peak resident generated-weight bytes (must stay ≤ the budget).
+    pub peak_resident_bytes: usize,
 }
 
 impl TenantReport {
-    /// unzipFPGA's advantage under this co-location level.
+    /// Mean unzipFPGA advantage across the co-located models.
     pub fn speedup(&self) -> f64 {
-        self.unzip_inf_s / self.baseline_inf_s
+        if self.models.is_empty() {
+            return 0.0;
+        }
+        self.models.iter().map(ModelColocation::speedup).sum::<f64>() / self.models.len() as f64
     }
 }
 
-/// Evaluate a network under 1..=max_tenants co-located replicas on a
-/// platform whose total bandwidth is `total_bw_mult`.
+/// Evaluate `nets` under 1..=`cfg.max_tenants` co-located replicas on a
+/// platform whose total bandwidth is `total_bw_mult`, serving every level
+/// through a registry-routed simulator pool (see module docs).
 pub fn co_location_sweep(
     platform: &Platform,
     total_bw_mult: u32,
-    net: &Network,
-    max_tenants: u32,
+    nets: &[Network],
+    cfg: &CoLocationConfig,
 ) -> Result<Vec<TenantReport>> {
-    let profile = RatioProfile::ovsf50(net);
-    let cfg = DseConfig::default();
     let mut out = Vec::new();
-    for n in 1..=max_tenants {
+    for n in 1..=cfg.max_tenants {
         // Bandwidth splits evenly among the co-located applications; the
         // engine keeps the fabric (the contended resource is the memory).
         let bw = (total_bw_mult / n).max(1);
-        let baseline = evaluate_faithful(platform, bw, net)?.perf.inf_per_s;
-        // DSE picks σ for this bandwidth point; throughput comes from the
-        // unified Engine running the analytical backend on that design.
-        let sigma = optimise(&cfg, platform, bw, net, &profile, true)?.sigma;
-        let mut engine = Engine::builder()
-            .platform(platform.clone())
-            .bandwidth(bw)
-            .design_point(sigma)
-            .network(net.clone())
-            .profile(profile.clone())
-            .backend(BackendKind::Analytical)
-            .build()?;
-        let unzip = engine.infer_timing()?.inf_per_s();
+        // One compiler per level: the DSE runs once (for the first model at
+        // this bandwidth point) and its σ is pinned for every co-located
+        // model — a single computation engine serves them all.
+        let compiler = Compiler::new().platform(platform.clone()).bandwidth(bw);
+        let registry = Arc::new(ModelRegistry::with_budget(cfg.slab_budget));
+        let mut models = Vec::with_capacity(nets.len());
+        for net in nets {
+            let profile = RatioProfile::ovsf50(net);
+            let artifact = compiler.compile(net.clone(), profile)?;
+            let compiled = registry.register(net.name.clone(), artifact)?;
+            models.push(ModelColocation {
+                model: net.name.clone(),
+                baseline_inf_s: evaluate_faithful(platform, bw, net)?.perf.inf_per_s,
+                unzip_inf_s: 1.0 / compiled.latency_s(),
+            });
+        }
+        let pool = ServerPool::serve(
+            Arc::clone(&registry),
+            BackendKind::Simulator,
+            PoolConfig {
+                workers: cfg.workers,
+                queue_depth: 256,
+                max_batch: cfg.max_batch,
+                linger: std::time::Duration::from_micros(200),
+            },
+        )?;
+        // Interleaved traffic: round-robin across the co-located models so
+        // the pool's model-pure batcher and switch accounting are
+        // exercised the way adversarial multi-tenant traffic would.
+        let mut handles = Vec::new();
+        let mut id = 0u64;
+        for _ in 0..cfg.timing_requests {
+            for net in nets {
+                handles.push(pool.submit(Request::for_model(id, net.name.clone(), vec![]))?);
+                id += 1;
+            }
+        }
+        let mut rng = Xoshiro256::seed_from_u64(0xc010 ^ n as u64);
+        let input_lens: Vec<usize> = nets
+            .iter()
+            .map(|net| registry.get(&net.name).map(|m| m.input_len()))
+            .collect::<Result<_>>()?;
+        for _ in 0..cfg.numeric_requests {
+            for (net, &input_len) in nets.iter().zip(&input_lens) {
+                handles.push(pool.submit(Request::for_model(
+                    id,
+                    net.name.clone(),
+                    rng.normal_vec(input_len),
+                ))?);
+                id += 1;
+            }
+        }
+        for h in handles {
+            h.wait()?;
+        }
+        let pm = pool.shutdown()?;
+        let cache = registry.cache();
         out.push(TenantReport {
             tenants: n,
             bw_per_tenant: bw,
-            baseline_inf_s: baseline,
-            unzip_inf_s: unzip,
+            models,
+            requests_served: pm.total_requests(),
+            model_switches: pm.model_switches(),
+            cache_hits: cache.hits(),
+            cache_misses: cache.misses(),
+            cache_evictions: cache.evictions(),
+            peak_resident_bytes: cache.peak_resident_bytes(),
         });
     }
     Ok(out)
@@ -78,14 +207,22 @@ pub fn co_location_sweep(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::resnet;
+    use crate::workload::{resnet, Layer};
 
     #[test]
     fn advantage_grows_with_colocation() {
         // The paper's concluding claim: reduced per-tenant bandwidth is
-        // where on-the-fly generation matters most.
+        // where on-the-fly generation matters most. Timing-only traffic
+        // keeps the level evaluation cheap while still serving through the
+        // registry pool.
         let net = resnet::resnet18();
-        let reports = co_location_sweep(&Platform::zu7ev(), 12, &net, 4).unwrap();
+        let cfg = CoLocationConfig {
+            max_tenants: 4,
+            timing_requests: 2,
+            workers: 1,
+            ..CoLocationConfig::default()
+        };
+        let reports = co_location_sweep(&Platform::zu7ev(), 12, &[net], &cfg).unwrap();
         assert_eq!(reports.len(), 4);
         let s1 = reports[0].speedup();
         let s4 = reports[3].speedup();
@@ -93,17 +230,77 @@ mod tests {
             s4 > s1,
             "speedup must grow with tenants: 1-tenant {s1:.2} vs 4-tenant {s4:.2}"
         );
+        for r in &reports {
+            assert_eq!(r.requests_served, 2, "every submitted request is served");
+            assert_eq!(r.cache_misses, 0, "timing-only traffic never generates");
+        }
     }
 
     #[test]
     fn throughput_degrades_gracefully() {
         let net = resnet::resnet18();
-        let reports = co_location_sweep(&Platform::zu7ev(), 12, &net, 3).unwrap();
+        let cfg = CoLocationConfig {
+            max_tenants: 3,
+            timing_requests: 1,
+            workers: 1,
+            ..CoLocationConfig::default()
+        };
+        let reports = co_location_sweep(&Platform::zu7ev(), 12, &[net], &cfg).unwrap();
         for w in reports.windows(2) {
             assert!(
-                w[1].unzip_inf_s < w[0].unzip_inf_s,
+                w[1].models[0].unzip_inf_s < w[0].models[0].unzip_inf_s,
                 "per-tenant throughput must fall as tenants rise"
             );
+        }
+    }
+
+    #[test]
+    fn co_located_models_serve_numerics_through_one_pool() {
+        // Two tiny co-located CNNs with real numeric traffic: the sweep
+        // must route through the tile-streamed datapath (cache misses,
+        // switches) under the shared budget.
+        let a = Network {
+            name: "tiny-a".into(),
+            layers: vec![
+                Layer::conv("stem", 8, 8, 4, 8, 3, 1, 1, false),
+                Layer::conv("c1", 8, 8, 8, 8, 3, 1, 1, true),
+                Layer::fc("fc", 8, 5),
+            ],
+        };
+        let b = Network {
+            name: "tiny-b".into(),
+            layers: vec![
+                Layer::conv("stem", 8, 8, 4, 16, 3, 1, 1, false),
+                Layer::conv("c1", 8, 8, 16, 16, 3, 1, 1, true),
+                Layer::fc("fc", 16, 3),
+            ],
+        };
+        let cfg = CoLocationConfig {
+            max_tenants: 2,
+            timing_requests: 1,
+            numeric_requests: 2,
+            // Below the two models' combined OVSF weight bytes (11.5 KiB)
+            // but above any single slab: cross-model eviction must run
+            // while the cache invariant (peak ≤ budget) holds.
+            slab_budget: 10 << 10,
+            // One worker: it must serve both models, so interleaved
+            // traffic deterministically forces plan switches.
+            workers: 1,
+            max_batch: 4,
+        };
+        let reports = co_location_sweep(&Platform::z7045(), 4, &[a, b], &cfg).unwrap();
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            assert_eq!(r.models.len(), 2);
+            assert_eq!(r.requests_served, 2 * (1 + 2));
+            assert!(r.cache_misses > 0, "numeric traffic must generate slabs");
+            assert!(
+                r.peak_resident_bytes <= cfg.slab_budget,
+                "peak {} over budget {}",
+                r.peak_resident_bytes,
+                cfg.slab_budget
+            );
+            assert!(r.model_switches > 0, "interleaved traffic must switch");
         }
     }
 }

@@ -1,5 +1,4 @@
-//! Multi-worker batched inference serving — the scalable replacement for
-//! the single-worker, batch-1 `InferenceServer`.
+//! Multi-worker batched inference serving with model routing.
 //!
 //! Architecture (all std, no async runtime in the offline crate set):
 //!
@@ -9,33 +8,45 @@
 //!   [`Error::QueueFull`](crate::Error::QueueFull);
 //! * **N worker threads** pop *batches*: up to `max_batch` requests,
 //!   waiting at most `linger` after the first request of a batch — the
-//!   standard throughput/latency knob of serving systems;
+//!   standard throughput/latency knob of serving systems. Batches are
+//!   **model-pure**: a request for a different model ends the batch (it
+//!   stays queued, FIFO order preserved), so a batch never mixes two
+//!   models' GEMMs;
 //! * executors are built **inside** each worker thread by a factory
 //!   closure (PJRT clients are not `Send`), one executor per worker;
 //! * [`ServerPool::submit`] is non-blocking w.r.t. execution: it returns a
 //!   [`ResponseHandle`] future immediately; callers join on
 //!   [`ResponseHandle::wait`].
 //!
-//! Worker death is observable: when the last worker exits (panic or
-//! shutdown) the queue closes, pending jobs are dropped and every waiting
-//! handle resolves to an error instead of hanging.
+//! **Multi-model serving** goes through [`ServerPool::serve`] (defined in
+//! [`registry`](crate::coordinator::registry)): every request names a
+//! model id registered in a shared
+//! [`ModelRegistry`](crate::coordinator::registry::ModelRegistry), `submit`
+//! fails fast with a typed error for unknown ids
+//! ([`Error::UnknownModel`](crate::Error::UnknownModel)) or wrong input
+//! lengths ([`Error::ShapeMismatch`](crate::Error::ShapeMismatch)), and
+//! each worker swaps its backend's active plan when consecutive batches
+//! name different models (counted as
+//! [`PoolMetrics::model_switches`]). All models' generated weight slabs
+//! share one [`SlabCache`](crate::engine::wcache::SlabCache) byte budget —
+//! the software analogue of several CNNs sharing one chip's BRAM.
 //!
-//! Engine-backed pools
-//! ([`EngineBuilder::build_pool`](crate::engine::EngineBuilder::build_pool))
-//! serve **real numerics**:
-//! a request whose `input` carries the first layer's `h·w·c_in` NHWC
-//! activations gets back the network's output activations, computed
-//! tile-streamed with on-the-fly generated weights on the simulator
-//! backend (every worker shares one bounded slab cache). Numeric requests
-//! that land in the same popped batch **fold their batch dimension into
-//! GEMM rows** (`Engine::infer_batch` via the executor's
+//! Worker death and shutdown are observable and typed: when the last
+//! worker exits (panic or shutdown) the queue closes and every pending
+//! request — whatever model it names — resolves to
+//! [`Error::PoolShutdown`](crate::Error::PoolShutdown) instead of hanging.
+//!
+//! Numeric requests that land in the same popped batch **fold their batch
+//! dimension into GEMM rows** (`Engine::infer_batch` via the executor's
 //! [`execute_batch`](RequestExecutor::execute_batch) override), so each
 //! generated weight slab is amortised across the whole batch — slab-cache
 //! misses do not scale with batch size. An empty `input` remains a
-//! timing-only request; a wrong-length input resolves that request's
-//! handle to an error without disturbing the worker or its batchmates.
+//! timing-only request; a wrong-length input on an unrouted (legacy
+//! [`start`](ServerPool::start)) pool resolves that request's handle to an
+//! error without disturbing the worker or its batchmates.
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::scheduler::InferencePlan;
 use crate::coordinator::server::{Request, Response};
 use crate::error::{Error, Result};
@@ -71,7 +82,7 @@ impl Default for PoolConfig {
 }
 
 impl PoolConfig {
-    /// The legacy `InferenceServer` shape: one worker, batch 1, no linger.
+    /// The minimal serving shape: one worker, batch 1, no linger.
     pub fn single_worker() -> Self {
         Self {
             workers: 1,
@@ -95,18 +106,33 @@ impl PoolConfig {
 /// A per-worker request executor, constructed inside the worker thread by
 /// the pool's factory. Closures `FnMut(&Request) -> Vec<f32>` implement it
 /// out of the box; batch-aware executors override
-/// [`execute_batch`](Self::execute_batch).
+/// [`execute_batch`](Self::execute_batch); model-routing executors
+/// additionally override [`device_latency_s`](Self::device_latency_s) and
+/// [`model_switches`](Self::model_switches).
 pub trait RequestExecutor {
     /// Execute one request, returning its output activations.
     fn execute(&mut self, req: &Request) -> Result<Vec<f32>>;
 
     /// Execute a batch (default: per-request loop, one result per request
-    /// in order). Batch-aware executors override this to amortise
-    /// per-batch work — the engine executor folds same-shape numeric
-    /// requests into one batched inference so weight slabs are generated
-    /// once per layer pass for the whole batch.
+    /// in order). Batches are model-pure by construction. Batch-aware
+    /// executors override this to amortise per-batch work — the registry
+    /// executor folds same-shape numeric requests into one batched
+    /// inference so weight slabs are generated once per layer pass for the
+    /// whole batch.
     fn execute_batch(&mut self, batch: &[Request]) -> Vec<Result<Vec<f32>>> {
         batch.iter().map(|r| self.execute(r)).collect()
+    }
+
+    /// Per-request device latency estimate for the response. `None` (the
+    /// default) uses the pool-level plan latency; model-routing executors
+    /// return the routed model's own admission-time latency.
+    fn device_latency_s(&self, _req: &Request) -> Option<f64> {
+        None
+    }
+
+    /// Model switches (active-plan swaps) this executor has performed.
+    fn model_switches(&self) -> u64 {
+        0
     }
 }
 
@@ -123,11 +149,11 @@ pub struct ResponseHandle {
 }
 
 impl ResponseHandle {
-    /// Block until the response arrives (or the serving worker died).
+    /// Block until the response arrives. Resolves to
+    /// [`Error::PoolShutdown`] when the serving worker died before
+    /// answering.
     pub fn wait(self) -> Result<Response> {
-        self.rx
-            .recv()
-            .map_err(|_| Error::Coordinator("no response (worker gone)".into()))?
+        self.rx.recv().map_err(|_| Error::PoolShutdown)?
     }
 
     /// Non-blocking poll: `None` while the request is still in flight.
@@ -135,9 +161,7 @@ impl ResponseHandle {
         match self.rx.try_recv() {
             Ok(r) => Some(r),
             Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => {
-                Some(Err(Error::Coordinator("no response (worker gone)".into())))
-            }
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(Error::PoolShutdown)),
         }
     }
 }
@@ -172,12 +196,14 @@ fn lock_state(shared: &PoolShared) -> MutexGuard<'_, QueueState> {
 /// Per-worker serving statistics.
 #[derive(Clone, Debug)]
 pub struct WorkerReport {
-    /// Request latencies recorded by this worker.
+    /// Request latencies recorded by this worker (with per-model series).
     pub metrics: Metrics,
     /// Batches executed.
     pub batches: u64,
     /// Largest batch executed.
     pub max_batch: usize,
+    /// Model switches (active-plan swaps) this worker performed.
+    pub model_switches: u64,
 }
 
 /// Aggregated pool statistics returned by [`ServerPool::shutdown`].
@@ -190,7 +216,8 @@ pub struct PoolMetrics {
 }
 
 impl PoolMetrics {
-    /// All workers' latencies merged into one collector.
+    /// All workers' latencies merged into one collector (global and
+    /// per-model series).
     pub fn merged(&self) -> Metrics {
         let mut m = Metrics::new();
         for w in &self.per_worker {
@@ -214,14 +241,22 @@ impl PoolMetrics {
         self.per_worker.iter().map(|w| w.max_batch).max().unwrap_or(0)
     }
 
-    /// One-line summary.
+    /// Model switches (active-plan swaps) across the pool — the multi-model
+    /// time-sharing cost the scheduler amortises by batching same-model
+    /// requests.
+    pub fn model_switches(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.model_switches).sum()
+    }
+
+    /// One-line summary (global + per-model latencies, batching, switches).
     pub fn summary(&self) -> String {
         format!(
-            "workers={} {} batches={} max_batch={}",
+            "workers={} {} batches={} max_batch={} model_switches={}",
             self.per_worker.len(),
             self.merged().summary(),
             self.total_batches(),
-            self.max_batch()
+            self.max_batch(),
+            self.model_switches()
         )
     }
 }
@@ -230,15 +265,35 @@ impl PoolMetrics {
 pub struct ServerPool {
     shared: Arc<PoolShared>,
     workers: Vec<JoinHandle<WorkerReport>>,
-    /// The schedule this pool serves (admission-time costing).
-    plan: InferencePlan,
+    /// The single schedule this pool serves (legacy [`start`](Self::start)
+    /// pools; `None` for registry-routed pools, which cost per model).
+    plan: Option<InferencePlan>,
+    /// The model registry this pool routes over, when registry-backed.
+    registry: Option<Arc<ModelRegistry>>,
 }
 
 impl ServerPool {
-    /// Start `cfg.workers` threads serving `plan`. `factory(worker_id)` is
-    /// called once *inside* each worker thread to build its executor, so
-    /// non-`Send` executors (PJRT) work.
+    /// Start `cfg.workers` threads serving the single schedule `plan` with
+    /// a caller-provided executor. `factory(worker_id)` is called once
+    /// *inside* each worker thread to build its executor, so non-`Send`
+    /// executors (PJRT) work. Requests on such a pool may leave
+    /// `Request::model` empty; no admission-time model validation runs.
+    ///
+    /// Multi-model pools are started with [`serve`](Self::serve) instead.
     pub fn start<F, E>(plan: InferencePlan, cfg: PoolConfig, factory: F) -> Result<Self>
+    where
+        F: Fn(usize) -> E + Send + Sync + 'static,
+        E: RequestExecutor + 'static,
+    {
+        Self::start_inner(Some(plan), None, cfg, factory)
+    }
+
+    pub(crate) fn start_inner<F, E>(
+        plan: Option<InferencePlan>,
+        registry: Option<Arc<ModelRegistry>>,
+        cfg: PoolConfig,
+        factory: F,
+    ) -> Result<Self>
     where
         F: Fn(usize) -> E + Send + Sync + 'static,
         E: RequestExecutor + 'static,
@@ -255,7 +310,7 @@ impl ServerPool {
             alive_workers: AtomicUsize::new(cfg.workers),
         });
         let factory = Arc::new(factory);
-        let device_latency_s = plan.latency_s;
+        let fallback_latency_s = plan.as_ref().map(|p| p.latency_s).unwrap_or(0.0);
         let mut workers = Vec::with_capacity(cfg.workers);
         for worker_id in 0..cfg.workers {
             let shared = Arc::clone(&shared);
@@ -265,25 +320,59 @@ impl ServerPool {
             workers.push(std::thread::spawn(move || {
                 let guard = AliveGuard { shared };
                 let mut exec = factory(worker_id);
-                worker_loop(&guard.shared, &mut exec, device_latency_s, max_batch, linger)
+                worker_loop(&guard.shared, &mut exec, fallback_latency_s, max_batch, linger)
             }));
         }
         Ok(Self {
             shared,
             workers,
             plan,
+            registry,
         })
     }
 
-    /// The schedule this pool serves.
-    pub fn plan(&self) -> &InferencePlan {
-        &self.plan
+    /// The single schedule this pool serves (`None` for registry-routed
+    /// pools — ask the [`registry`](Self::registry) per model instead).
+    pub fn plan(&self) -> Option<&InferencePlan> {
+        self.plan.as_ref()
+    }
+
+    /// The model registry this pool routes over (`None` for legacy
+    /// single-plan pools).
+    pub fn registry(&self) -> Option<&Arc<ModelRegistry>> {
+        self.registry.as_ref()
+    }
+
+    /// Admission control for registry-routed pools: resolve the model id
+    /// (rewriting the default route to the concrete id so the batcher can
+    /// group on it) and check the input length against the compiled
+    /// artifact. Fail-fast typed errors:
+    /// [`Error::UnknownModel`](crate::Error::UnknownModel) /
+    /// [`Error::ShapeMismatch`](crate::Error::ShapeMismatch).
+    fn admit(&self, req: &mut Request) -> Result<()> {
+        let Some(reg) = &self.registry else {
+            return Ok(());
+        };
+        let (id, model) = reg.resolve(&req.model)?;
+        if !req.input.is_empty() && req.input.len() != model.input_len() {
+            return Err(Error::ShapeMismatch(format!(
+                "model '{id}': request {} carries {} input activations, expected {} \
+                 (first layer h·w·c_in)",
+                req.id,
+                req.input.len(),
+                model.input_len()
+            )));
+        }
+        req.model = id;
+        Ok(())
     }
 
     /// Enqueue a request, blocking while the queue is full (backpressure),
     /// and return a handle to its future response. Does **not** wait for
-    /// execution.
-    pub fn submit(&self, req: Request) -> Result<ResponseHandle> {
+    /// execution. On registry-routed pools the request is validated first
+    /// (typed errors for unknown model ids and wrong input lengths).
+    pub fn submit(&self, mut req: Request) -> Result<ResponseHandle> {
+        self.admit(&mut req)?;
         let (reply, rx) = mpsc::channel();
         let mut st = lock_state(&self.shared);
         while st.jobs.len() >= self.shared.capacity && !st.closed {
@@ -294,7 +383,7 @@ impl ServerPool {
                 .unwrap_or_else(PoisonError::into_inner);
         }
         if st.closed {
-            return Err(Error::Coordinator("pool is shut down (workers gone)".into()));
+            return Err(Error::PoolShutdown);
         }
         st.jobs.push_back(Job { req, reply });
         drop(st);
@@ -304,11 +393,12 @@ impl ServerPool {
 
     /// Enqueue without blocking: [`Error::QueueFull`] when the bounded
     /// queue is at capacity.
-    pub fn try_submit(&self, req: Request) -> Result<ResponseHandle> {
+    pub fn try_submit(&self, mut req: Request) -> Result<ResponseHandle> {
+        self.admit(&mut req)?;
         let (reply, rx) = mpsc::channel();
         let mut st = lock_state(&self.shared);
         if st.closed {
-            return Err(Error::Coordinator("pool is shut down (workers gone)".into()));
+            return Err(Error::PoolShutdown);
         }
         if st.jobs.len() >= self.shared.capacity {
             return Err(Error::QueueFull);
@@ -325,8 +415,10 @@ impl ServerPool {
     }
 
     /// Close the queue, let the workers drain every already-accepted
-    /// request (in-flight batches complete), join them and return the
-    /// aggregated metrics.
+    /// request (in-flight batches complete; requests whose model was
+    /// evicted meanwhile fail with
+    /// [`Error::UnknownModel`](crate::Error::UnknownModel)), join them and
+    /// return the aggregated metrics.
     pub fn shutdown(mut self) -> Result<PoolMetrics> {
         self.close();
         let mut per_worker = Vec::with_capacity(self.workers.len());
@@ -365,8 +457,9 @@ impl Drop for ServerPool {
 }
 
 /// Decrements the live-worker count on thread exit — including panics —
-/// and closes/drains the queue when the last worker goes, so waiting
-/// clients error out instead of hanging.
+/// and, when the last worker goes, closes the queue and **fails every
+/// pending request with the typed [`Error::PoolShutdown`]** (whatever
+/// model it names), so waiting clients error out instead of hanging.
 struct AliveGuard {
     shared: Arc<PoolShared>,
 }
@@ -376,9 +469,11 @@ impl Drop for AliveGuard {
         if self.shared.alive_workers.fetch_sub(1, Ordering::SeqCst) == 1 {
             let mut st = lock_state(&self.shared);
             st.closed = true;
-            // Dropping pending jobs drops their reply senders: every
-            // outstanding ResponseHandle resolves to an error.
-            st.jobs.clear();
+            // Drain pending jobs with a typed error (dropping the senders
+            // alone would also resolve the handles, but anonymously).
+            for job in st.jobs.drain(..) {
+                let _ = job.reply.send(Err(Error::PoolShutdown));
+            }
             drop(st);
             self.shared.not_empty.notify_all();
             self.shared.not_full.notify_all();
@@ -386,8 +481,11 @@ impl Drop for AliveGuard {
     }
 }
 
-/// Pop a batch: block for the first request, then gather up to
-/// `max_batch − 1` more within `linger`. `None` once the queue is closed
+/// Pop a **model-pure** batch: block for the first request, then gather up
+/// to `max_batch − 1` more of the *same model id* within `linger`. A
+/// queued request for a different model ends the batch immediately (it
+/// stays at the queue head — FIFO order across models is preserved, so a
+/// minority model cannot be starved). `None` once the queue is closed
 /// *and* drained.
 fn pop_batch(shared: &PoolShared, max_batch: usize, linger: Duration) -> Option<Vec<Job>> {
     let mut st = lock_state(shared);
@@ -396,9 +494,20 @@ fn pop_batch(shared: &PoolShared, max_batch: usize, linger: Duration) -> Option<
             let mut batch = vec![first];
             let deadline = Instant::now() + linger;
             while batch.len() < max_batch {
-                if let Some(next) = st.jobs.pop_front() {
-                    batch.push(next);
-                    continue;
+                let head_matches = st
+                    .jobs
+                    .front()
+                    .map(|next| next.req.model == batch[0].req.model);
+                match head_matches {
+                    Some(true) => {
+                        let job = st.jobs.pop_front().expect("front just observed");
+                        batch.push(job);
+                        continue;
+                    }
+                    // A different model at the head: the batch must not mix
+                    // models — leave it queued and execute what we have.
+                    Some(false) => break,
+                    None => {}
                 }
                 if st.closed {
                     break;
@@ -433,7 +542,7 @@ fn pop_batch(shared: &PoolShared, max_batch: usize, linger: Duration) -> Option<
 fn worker_loop<E: RequestExecutor>(
     shared: &PoolShared,
     exec: &mut E,
-    device_latency_s: f64,
+    fallback_latency_s: f64,
     max_batch: usize,
     linger: Duration,
 ) -> WorkerReport {
@@ -450,11 +559,12 @@ fn worker_loop<E: RequestExecutor>(
         batches += 1;
         largest = largest.max(n);
         for (req, reply) in reqs.iter().zip(replies) {
-            metrics.record(per_req);
+            metrics.record_model(&req.model, per_req);
             let msg = match outs.next() {
                 Some(Ok(output)) => Ok(Response {
                     id: req.id,
-                    device_latency_s,
+                    model: req.model.clone(),
+                    device_latency_s: exec.device_latency_s(req).unwrap_or(fallback_latency_s),
                     host_latency_s: per_req.as_secs_f64(),
                     output,
                     batch: n,
@@ -472,6 +582,7 @@ fn worker_loop<E: RequestExecutor>(
         metrics,
         batches,
         max_batch: largest,
+        model_switches: exec.model_switches(),
     }
 }
 
@@ -501,7 +612,7 @@ mod tests {
     fn single_worker_serves_in_order() {
         let pool = ServerPool::start(plan(), PoolConfig::single_worker(), echo_executor).unwrap();
         let handles: Vec<_> = (0..10u64)
-            .map(|id| pool.submit(Request { id, input: vec![] }).unwrap())
+            .map(|id| pool.submit(Request::timing(id)).unwrap())
             .collect();
         for (id, h) in handles.into_iter().enumerate() {
             let resp = h.wait().unwrap();
@@ -513,6 +624,7 @@ mod tests {
         let pm = pool.shutdown().unwrap();
         assert_eq!(pm.total_requests(), 10);
         assert_eq!(pm.panicked_workers, 0);
+        assert_eq!(pm.model_switches(), 0, "single-plan pools never switch");
     }
 
     #[test]
@@ -525,7 +637,7 @@ mod tests {
         };
         let pool = ServerPool::start(plan(), cfg, echo_executor).unwrap();
         let handles: Vec<_> = (0..32u64)
-            .map(|id| pool.submit(Request { id, input: vec![] }).unwrap())
+            .map(|id| pool.submit(Request::timing(id)).unwrap())
             .collect();
         for h in handles {
             h.wait().unwrap();
@@ -538,6 +650,91 @@ mod tests {
             pm.max_batch()
         );
         assert!(pm.total_batches() < 32);
+    }
+
+    #[test]
+    fn batches_are_model_pure() {
+        // A gated single worker lets the queue fill with runs of two model
+        // ids; on release, every executed batch must contain one model only
+        // and the run lengths must be preserved.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let batches: Arc<Mutex<Vec<Vec<String>>>> = Arc::new(Mutex::new(Vec::new()));
+        let g2 = Arc::clone(&gate);
+        let b2 = Arc::clone(&batches);
+        struct Recording {
+            gate: Arc<(Mutex<bool>, Condvar)>,
+            batches: Arc<Mutex<Vec<Vec<String>>>>,
+        }
+        impl RequestExecutor for Recording {
+            fn execute(&mut self, _req: &Request) -> Result<Vec<f32>> {
+                unreachable!("execute_batch is overridden")
+            }
+            fn execute_batch(&mut self, batch: &[Request]) -> Vec<Result<Vec<f32>>> {
+                let (lock, cv) = &*self.gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                drop(open);
+                self.batches
+                    .lock()
+                    .unwrap()
+                    .push(batch.iter().map(|r| r.model.clone()).collect());
+                batch.iter().map(|r| Ok(vec![r.id as f32])).collect()
+            }
+        }
+        let cfg = PoolConfig {
+            workers: 1,
+            queue_depth: 64,
+            max_batch: 4,
+            linger: Duration::from_millis(5),
+        };
+        let pool = ServerPool::start(plan(), cfg, move |_| Recording {
+            gate: Arc::clone(&g2),
+            batches: Arc::clone(&b2),
+        })
+        .unwrap();
+        // A sentinel under a different model id: whenever the worker pops
+        // it, its batch is [w] alone (the next model differs), and it then
+        // blocks on the gate until every later request is queued — making
+        // the subsequent batch boundaries deterministic.
+        let sentinel = pool.submit(Request::for_model(999, "w", vec![])).unwrap();
+        // Runs: a a a | b b | a (interleaved traffic with bursts).
+        let seq = ["a", "a", "a", "b", "b", "a"];
+        let handles: Vec<_> = seq
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                pool.submit(Request::for_model(i as u64, *m, vec![])).unwrap()
+            })
+            .collect();
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        sentinel.wait().unwrap();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let pm = pool.shutdown().unwrap();
+        let recorded = batches.lock().unwrap().clone();
+        assert_eq!(recorded[0], vec!["w"], "sentinel batch must not absorb 'a'");
+        let expect: Vec<Vec<String>> = vec![
+            vec!["a".into(), "a".into(), "a".into()],
+            vec!["b".into(), "b".into()],
+            vec!["a".into()],
+        ];
+        assert_eq!(
+            recorded[1..].to_vec(),
+            expect,
+            "bursts must batch model-pure, FIFO across models"
+        );
+        let merged = pm.merged();
+        assert_eq!(merged.model_count("a"), 4);
+        assert_eq!(merged.model_count("b"), 2);
+        assert_eq!(merged.model_count("w"), 1);
+        assert!(pm.summary().contains("model_switches="));
     }
 
     #[test]
@@ -566,12 +763,12 @@ mod tests {
         // One in flight (popped by the worker) + 2 filling the queue.
         let mut handles = vec![];
         for id in 0..3u64 {
-            handles.push(pool.submit(Request { id, input: vec![] }).unwrap());
+            handles.push(pool.submit(Request::timing(id)).unwrap());
         }
         // Queue (depth 2) must eventually be full while the worker is gated.
         let deadline = Instant::now() + Duration::from_secs(5);
         loop {
-            match pool.try_submit(Request { id: 99, input: vec![] }) {
+            match pool.try_submit(Request::timing(99)) {
                 Err(Error::QueueFull) => break,
                 Ok(h) => handles.push(h),
                 Err(e) => panic!("unexpected: {e}"),
@@ -607,7 +804,7 @@ mod tests {
         })
         .unwrap();
         let handles: Vec<_> = (0..20u64)
-            .map(|id| pool.submit(Request { id, input: vec![] }).unwrap())
+            .map(|id| pool.submit(Request::timing(id)).unwrap())
             .collect();
         // Shut down immediately: accepted requests must still complete.
         let pm = pool.shutdown().unwrap();
@@ -619,7 +816,7 @@ mod tests {
     }
 
     #[test]
-    fn worker_death_surfaces_as_errors_not_hangs() {
+    fn worker_death_surfaces_as_typed_errors_not_hangs() {
         let pool = ServerPool::start(plan(), PoolConfig::single_worker(), |_| {
             |req: &Request| {
                 if req.id == 3 {
@@ -630,16 +827,23 @@ mod tests {
         })
         .unwrap();
         for id in 0..3u64 {
-            assert!(pool.submit(Request { id, input: vec![] }).unwrap().wait().is_ok());
+            assert!(pool.submit(Request::timing(id)).unwrap().wait().is_ok());
         }
-        let poisoned = pool.submit(Request { id: 3, input: vec![] }).unwrap();
-        assert!(poisoned.wait().is_err(), "dead worker must surface as Err");
+        let poisoned = pool.submit(Request::timing(3)).unwrap();
+        let err = poisoned.wait().err().expect("dead worker must surface as Err");
+        assert!(matches!(err, Error::PoolShutdown), "typed: {err}");
         // The pool is dead: further submissions fail, shutdown reports it.
         let deadline = Instant::now() + Duration::from_secs(5);
         loop {
-            match pool.submit(Request { id: 4, input: vec![] }) {
-                Err(_) => break,
-                Ok(h) => assert!(h.wait().is_err()),
+            match pool.submit(Request::timing(4)) {
+                Err(e) => {
+                    assert!(matches!(e, Error::PoolShutdown), "typed: {e}");
+                    break;
+                }
+                Ok(h) => {
+                    let err = h.wait().err().expect("dead pool must fail requests");
+                    assert!(matches!(err, Error::PoolShutdown), "typed: {err}");
+                }
             }
             assert!(Instant::now() < deadline, "pool never noticed worker death");
             std::thread::sleep(Duration::from_millis(1));

@@ -1,0 +1,493 @@
+//! [`ModelRegistry`] — runtime registration of [`CompiledModel`] artifacts
+//! under string ids, all sharing **one** bounded
+//! [`SlabCache`](crate::engine::wcache::SlabCache) — plus
+//! [`ServerPool::serve`], the registry-routed serving entry point.
+//!
+//! This is the paper's multi-model premise made operational: a single
+//! computation engine (one design point σ, one pool of workers, one
+//! generated-weights byte budget) serves several CNNs concurrently.
+//! Resident weight slabs from different models compete under the shared
+//! budget exactly like co-resident models would compete for on-chip BRAM;
+//! switching the model a worker serves swaps only the plan and the
+//! compiled α state (dense weights are re-generated on the fly), mirroring
+//! the α-reload-only switch cost of the time-shared engine.
+//!
+//! Lifecycle:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use unzipfpga::coordinator::pool::{PoolConfig, ServerPool};
+//! use unzipfpga::coordinator::registry::ModelRegistry;
+//! use unzipfpga::coordinator::server::Request;
+//! use unzipfpga::engine::{BackendKind, Compiler};
+//! use unzipfpga::workload::{resnet, squeezenet, RatioProfile};
+//!
+//! let compiler = Compiler::new();
+//! let registry = Arc::new(ModelRegistry::with_budget(8 << 20));
+//! let r18 = resnet::resnet18();
+//! let sqn = squeezenet::squeezenet1_1();
+//! registry.register("resnet18", compiler.compile(r18.clone(), RatioProfile::ovsf50(&r18))?)?;
+//! registry.register("squeezenet", compiler.compile(sqn.clone(), RatioProfile::ovsf50(&sqn))?)?;
+//! let pool = ServerPool::serve(Arc::clone(&registry), BackendKind::Simulator, PoolConfig::default())?;
+//! let handle = pool.submit(Request::for_model(0, "resnet18", vec![]))?;
+//! let _response = handle.wait()?;
+//! # Ok::<(), unzipfpga::Error>(())
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use crate::coordinator::pool::{PoolConfig, RequestExecutor, ServerPool};
+use crate::coordinator::server::Request;
+use crate::engine::compile::CompiledModel;
+use crate::engine::wcache::SlabCache;
+use crate::engine::{BackendKind, Engine};
+use crate::error::{Error, Result};
+
+/// Thread-safe registry of compiled models sharing one slab cache.
+/// Registration and eviction are runtime operations: a model can be added
+/// to (or removed from) a live [`ServerPool`] between requests.
+pub struct ModelRegistry {
+    cache: Arc<SlabCache>,
+    models: Mutex<BTreeMap<String, Arc<CompiledModel>>>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for ModelRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelRegistry")
+            .field("models", &self.ids())
+            .field("cache", &self.cache)
+            .finish()
+    }
+}
+
+impl ModelRegistry {
+    /// Registry over a fresh slab cache with the default byte budget.
+    pub fn new() -> Self {
+        Self::with_cache(Arc::new(SlabCache::new()))
+    }
+
+    /// Registry over a fresh slab cache bounded to `bytes` — the single
+    /// budget every registered model's generated weights compete under.
+    pub fn with_budget(bytes: usize) -> Self {
+        Self::with_cache(Arc::new(SlabCache::with_budget(bytes)))
+    }
+
+    /// Registry over an existing (possibly already shared) slab cache.
+    pub fn with_cache(cache: Arc<SlabCache>) -> Self {
+        Self {
+            cache,
+            models: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<String, Arc<CompiledModel>>> {
+        self.models.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// The shared slab cache all registered models generate through.
+    pub fn cache(&self) -> &Arc<SlabCache> {
+        &self.cache
+    }
+
+    /// Register a compiled model under `id`. Errors on an empty id, a
+    /// duplicate id, or a duplicate *network name*
+    /// ([`evict`](Self::evict) first to replace a model): generated-weight
+    /// slabs are keyed by network name, so two resident models sharing one
+    /// name could alias each other's cached slabs. Returns the shared
+    /// handle to the registered artifact.
+    pub fn register(
+        &self,
+        id: impl Into<String>,
+        model: CompiledModel,
+    ) -> Result<Arc<CompiledModel>> {
+        let id = id.into();
+        if id.is_empty() {
+            return Err(Error::InvalidConfig(
+                "ModelRegistry: model id must be non-empty".into(),
+            ));
+        }
+        let mut m = self.lock();
+        if m.contains_key(&id) {
+            return Err(Error::InvalidConfig(format!(
+                "ModelRegistry: model id '{id}' is already registered (evict it first)"
+            )));
+        }
+        let clash = m
+            .iter()
+            .find(|(_, v)| v.network_name() == model.network_name());
+        if let Some((other, _)) = clash {
+            return Err(Error::InvalidConfig(format!(
+                "ModelRegistry: network '{}' is already registered under id \
+                 '{other}' — weight slabs are keyed by network name, so two \
+                 resident models may not share one",
+                model.network_name()
+            )));
+        }
+        let model = Arc::new(model);
+        m.insert(id, Arc::clone(&model));
+        Ok(model)
+    }
+
+    /// Evict a model: unregister it and drop its resident weight slabs
+    /// from the shared cache (the bytes are immediately reusable by the
+    /// remaining models). Requests already queued for the id fail with
+    /// [`Error::UnknownModel`] when a worker reaches them; a batch already
+    /// **executing** the model completes (it holds the artifact `Arc`) and
+    /// may re-insert some of its slabs after the purge — those stragglers
+    /// are not orphaned, they age out through normal LRU pressure under
+    /// the shared budget. Returns the evicted artifact.
+    pub fn evict(&self, id: &str) -> Result<Arc<CompiledModel>> {
+        let model = self
+            .lock()
+            .remove(id)
+            .ok_or_else(|| Error::UnknownModel(id.to_string()))?;
+        for key in model.weights_keys() {
+            self.cache.evict_layer(key);
+        }
+        Ok(model)
+    }
+
+    /// Look up a registered model.
+    pub fn get(&self, id: &str) -> Result<Arc<CompiledModel>> {
+        self.lock()
+            .get(id)
+            .map(Arc::clone)
+            .ok_or_else(|| Error::UnknownModel(id.to_string()))
+    }
+
+    /// Resolve a request's model id to a concrete `(id, model)` pair. An
+    /// empty id is the default route: valid only while exactly one model
+    /// is registered.
+    pub fn resolve(&self, id: &str) -> Result<(String, Arc<CompiledModel>)> {
+        let m = self.lock();
+        if id.is_empty() {
+            return match m.len() {
+                1 => {
+                    let (k, v) = m.iter().next().expect("len checked");
+                    Ok((k.clone(), Arc::clone(v)))
+                }
+                n => Err(Error::UnknownModel(format!(
+                    "(default route: {n} models registered, name one of them)"
+                ))),
+            };
+        }
+        m.get(id)
+            .map(|v| (id.to_string(), Arc::clone(v)))
+            .ok_or_else(|| Error::UnknownModel(id.to_string()))
+    }
+
+    /// Registered model ids (sorted).
+    pub fn ids(&self) -> Vec<String> {
+        self.lock().keys().cloned().collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// `true` when no model is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Reconstruct a typed copy of an activation error so every request of a
+/// batch can carry it (Error is not `Clone`).
+fn clone_typed(e: &Error) -> Error {
+    match e {
+        Error::UnknownModel(m) => Error::UnknownModel(m.clone()),
+        Error::PoolShutdown => Error::PoolShutdown,
+        Error::InvalidConfig(s) => Error::InvalidConfig(s.clone()),
+        Error::ShapeMismatch(s) => Error::ShapeMismatch(s.clone()),
+        other => Error::Coordinator(other.to_string()),
+    }
+}
+
+/// Per-worker model-routing executor: one backend instance serves every
+/// registered model, re-planned (and handed the compiled α state) whenever
+/// consecutive batches name different models. The batch path folds
+/// same-shape numeric requests into one `Engine::infer_batch` call so each
+/// generated weight slab is amortised across the whole (model-pure) batch.
+struct RegistryExecutor {
+    registry: Arc<ModelRegistry>,
+    kind: BackendKind,
+    engine: Option<Engine>,
+    active: Option<(String, Arc<CompiledModel>)>,
+    switches: u64,
+}
+
+impl RegistryExecutor {
+    /// Route `id`: re-resolve against the registry (an evicted model must
+    /// fail typed even if it is still the active plan), swap the backend's
+    /// active plan when the model — or its re-registered artifact —
+    /// changed, and return the serving engine.
+    fn activate(&mut self, id: &str) -> Result<&mut Engine> {
+        let model = self.registry.get(id)?;
+        let current = matches!(
+            &self.active,
+            Some((aid, am)) if aid == id && Arc::ptr_eq(am, &model)
+        );
+        if !current {
+            // A PJRT backend executes one fixed AOT artifact: re-planning
+            // it for a different model would silently serve the wrong
+            // network's numerics, so refuse the switch with a typed error
+            // (ServerPool::serve also rejects multi-model PJRT up front;
+            // this guards models registered after the pool started).
+            // Guard on the engine, not `active`: even after a failed swap
+            // cleared `active`, a planned PJRT backend must never be
+            // re-planned onto another model.
+            if self.engine.is_some() && matches!(self.kind, BackendKind::Pjrt(_)) {
+                return Err(Error::InvalidConfig(format!(
+                    "PJRT pools serve a single fixed artifact; cannot re-plan the \
+                     worker's backend for model '{id}'"
+                )));
+            }
+            // The backend's state is indeterminate while the swap runs: a
+            // failed `plan`/`preload` must not leave `active` naming the
+            // old model over a half-swapped backend, so clear it first —
+            // on error the next activation re-plans from scratch.
+            let was_active = self.active.take().is_some();
+            match self.engine.as_mut() {
+                Some(e) => e.activate(&model)?,
+                None => {
+                    self.engine = Some(Engine::from_compiled(
+                        &model,
+                        &self.kind,
+                        self.registry.cache(),
+                    )?);
+                }
+            }
+            if was_active {
+                self.switches += 1;
+            }
+            self.active = Some((id.to_string(), model));
+        }
+        Ok(self.engine.as_mut().expect("engine built on activation"))
+    }
+}
+
+impl RequestExecutor for RegistryExecutor {
+    fn execute(&mut self, req: &Request) -> Result<Vec<f32>> {
+        let engine = self.activate(&req.model)?;
+        engine.infer(&req.input).map(|o| o.output)
+    }
+
+    fn execute_batch(&mut self, batch: &[Request]) -> Vec<Result<Vec<f32>>> {
+        let Some(first) = batch.first() else {
+            return Vec::new();
+        };
+        // Batches are model-pure by construction: route once per batch.
+        debug_assert!(batch.iter().all(|r| r.model == first.model));
+        let engine = match self.activate(&first.model) {
+            Ok(e) => e,
+            Err(e) => return batch.iter().map(|_| Err(clone_typed(&e))).collect(),
+        };
+        let expect = engine
+            .plan()
+            .network
+            .layers
+            .first()
+            .map(|l| (l.h * l.w * l.n_in) as usize)
+            .unwrap_or(0);
+        let foldable: Vec<usize> = batch
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| expect > 0 && r.input.len() == expect)
+            .map(|(i, _)| i)
+            .collect();
+        if foldable.len() < 2 {
+            return batch
+                .iter()
+                .map(|r| engine.infer(&r.input).map(|o| o.output))
+                .collect();
+        }
+        // One clone per request (requests are borrowed); `infer_batch`
+        // takes ownership, so no further copies happen.
+        let inputs: Vec<Vec<f32>> = foldable.iter().map(|&i| batch[i].input.clone()).collect();
+        let mut results: Vec<Option<Result<Vec<f32>>>> =
+            (0..batch.len()).map(|_| None).collect();
+        match engine.infer_batch(inputs) {
+            Ok((outs, _report)) => {
+                for (&i, out) in foldable.iter().zip(outs) {
+                    results[i] = Some(Ok(out));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batched inference failed: {e}");
+                for &i in &foldable {
+                    results[i] = Some(Err(Error::Coordinator(msg.clone())));
+                }
+            }
+        }
+        for (i, slot) in results.iter_mut().enumerate() {
+            if slot.is_none() {
+                *slot = Some(engine.infer(&batch[i].input).map(|o| o.output));
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every batch slot filled"))
+            .collect()
+    }
+
+    fn device_latency_s(&self, req: &Request) -> Option<f64> {
+        // The batch that produced this response activated its model, so
+        // the common case reads the held handle — no registry lock on the
+        // per-response path (and an eviction racing the response still
+        // reports the latency the request was actually served at).
+        match &self.active {
+            Some((id, model)) if id == &req.model => Some(model.latency_s()),
+            _ => self.registry.get(&req.model).ok().map(|m| m.latency_s()),
+        }
+    }
+
+    fn model_switches(&self) -> u64 {
+        self.switches
+    }
+}
+
+impl ServerPool {
+    /// Start a **registry-routed** pool: `cfg.workers` threads serving
+    /// every model registered in `registry` (now or later) on `kind`
+    /// backends. Each worker owns one backend and swaps its active plan on
+    /// model switch; all workers generate weight slabs through the
+    /// registry's shared bounded cache. `submit` validates requests
+    /// against the registry (typed fail-fast errors for unknown ids and
+    /// wrong input lengths).
+    pub fn serve(
+        registry: Arc<ModelRegistry>,
+        kind: BackendKind,
+        cfg: PoolConfig,
+    ) -> Result<Self> {
+        // Fail fast on the caller thread: a broken runtime should error
+        // here, not inside a worker. (Compiled models were validated at
+        // compile time; analytical/simulator backends cannot fail to
+        // construct.)
+        if let BackendKind::Pjrt(pjrt) = &kind {
+            // A PJRT backend runs one fixed AOT artifact — it cannot route
+            // between models (workers also refuse switches at runtime).
+            if registry.len() > 1 {
+                return Err(Error::InvalidConfig(format!(
+                    "PJRT pools serve a single fixed artifact, but {} models are \
+                     registered",
+                    registry.len()
+                )));
+            }
+            if !cfg!(feature = "pjrt") {
+                return Err(Error::RuntimeUnavailable);
+            }
+            let reg = crate::runtime::ArtifactRegistry::new(pjrt.artifacts_dir.clone())?;
+            if !reg.has(&pjrt.artifact) {
+                return Err(Error::MissingArtifact {
+                    path: reg.path_of(&pjrt.artifact).display().to_string(),
+                    source: std::io::Error::new(std::io::ErrorKind::NotFound, "no such file"),
+                });
+            }
+        }
+        let factory_registry = Arc::clone(&registry);
+        ServerPool::start_inner(None, Some(registry), cfg, move |_worker| RegistryExecutor {
+            registry: Arc::clone(&factory_registry),
+            kind: kind.clone(),
+            engine: None,
+            active: None,
+            switches: 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{DesignPoint, Platform};
+    use crate::engine::Compiler;
+    use crate::workload::{Layer, Network, RatioProfile};
+
+    fn tiny_net(name: &str) -> Network {
+        Network {
+            name: name.into(),
+            layers: vec![
+                Layer::conv("stem", 8, 8, 4, 8, 3, 1, 1, false),
+                Layer::conv("b.conv1", 8, 8, 8, 8, 3, 1, 1, true),
+                Layer::fc("fc", 8, 5),
+            ],
+        }
+    }
+
+    fn compiler() -> Compiler {
+        Compiler::new()
+            .platform(Platform::z7045())
+            .bandwidth(4)
+            .design_point(DesignPoint::new(8, 4, 8, 4))
+    }
+
+    fn compile(name: &str) -> CompiledModel {
+        let net = tiny_net(name);
+        let profile = RatioProfile::uniform(&net, 0.5);
+        compiler().compile(net, profile).unwrap()
+    }
+
+    #[test]
+    fn register_get_evict_lifecycle() {
+        let reg = ModelRegistry::with_budget(1 << 20);
+        assert!(reg.is_empty());
+        reg.register("a", compile("a")).unwrap();
+        reg.register("b", compile("b")).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.ids(), vec!["a".to_string(), "b".to_string()]);
+        assert!(reg.get("a").is_ok());
+        // Duplicate ids, duplicate network names (the slab-cache
+        // namespace) and empty ids are rejected.
+        assert!(reg.register("a", compile("a")).is_err());
+        assert!(reg.register("alias", compile("a")).is_err());
+        assert!(reg.register("", compile("x")).is_err());
+        // Unknown lookups are typed.
+        let err = reg.get("zzz").err().expect("unknown id");
+        assert!(matches!(err, Error::UnknownModel(_)), "{err}");
+        // Eviction removes the model; a second evict is typed too.
+        let evicted = reg.evict("a").unwrap();
+        assert_eq!(evicted.network_name(), "a");
+        assert!(matches!(reg.evict("a"), Err(Error::UnknownModel(_))));
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn evict_purges_resident_slabs_from_the_shared_cache() {
+        let reg = ModelRegistry::with_budget(1 << 20);
+        let model = reg.register("a", compile("a")).unwrap();
+        // Generate one slab under the model's namespace.
+        let key = crate::engine::SlabKey {
+            layer: model.weights_keys()[0].clone(),
+            col_tile: 0,
+        };
+        reg.cache()
+            .try_get_or_generate(key, || Ok(vec![1.0; 16]))
+            .unwrap();
+        assert_eq!(reg.cache().len(), 1);
+        reg.evict("a").unwrap();
+        assert_eq!(reg.cache().len(), 0, "eviction must purge the model's slabs");
+        assert!(reg.cache().evictions() >= 1);
+    }
+
+    #[test]
+    fn resolve_handles_the_default_route() {
+        let reg = ModelRegistry::new();
+        // Empty registry: nothing to route to.
+        assert!(matches!(reg.resolve(""), Err(Error::UnknownModel(_))));
+        reg.register("only", compile("only")).unwrap();
+        let (id, m) = reg.resolve("").unwrap();
+        assert_eq!(id, "only");
+        assert_eq!(m.network_name(), "only");
+        reg.register("second", compile("second")).unwrap();
+        // Ambiguous default route once two models are registered.
+        assert!(matches!(reg.resolve(""), Err(Error::UnknownModel(_))));
+        assert!(reg.resolve("second").is_ok());
+    }
+}

@@ -1,139 +1,94 @@
-//! Request/response types plus the legacy single-worker server, now a thin
-//! deprecated shim over [`ServerPool`](crate::coordinator::pool::ServerPool)
-//! (one worker, batch 1 — the paper's embedded setting). New code should
-//! use `ServerPool` directly, or build one through
-//! [`EngineBuilder::build_pool`](crate::engine::EngineBuilder::build_pool).
+//! Request/response types of the serving API.
+//!
+//! Every [`Request`] names the **model id** it targets (the string a
+//! [`CompiledModel`](crate::engine::compile::CompiledModel) was registered
+//! under in the
+//! [`ModelRegistry`](crate::coordinator::registry::ModelRegistry)); an
+//! empty id is the *default route*, valid only on pools serving exactly
+//! one model. Serving goes through
+//! [`ServerPool`](crate::coordinator::pool::ServerPool) —
+//! [`serve`](crate::coordinator::pool::ServerPool::serve) for
+//! registry-routed multi-model pools,
+//! [`start`](crate::coordinator::pool::ServerPool::start) for custom
+//! single-plan executors.
+//!
+//! The legacy single-worker `InferenceServer` shim is gone: spawn a
+//! one-worker pool with
+//! [`PoolConfig::single_worker`](crate::coordinator::pool::PoolConfig::single_worker)
+//! instead (see README § Multi-model serving for migration notes).
 
-use crate::coordinator::metrics::Metrics;
-use crate::coordinator::pool::{PoolConfig, ServerPool};
-use crate::coordinator::scheduler::InferencePlan;
-use crate::error::{Error, Result};
-use std::sync::Mutex;
-
-/// An inference request: an opaque input id plus (optionally) activations
-/// for real-numerics execution.
-#[derive(Debug)]
+/// An inference request: an opaque id, the target model id, and
+/// (optionally) input activations for real-numerics execution.
+#[derive(Clone, Debug)]
 pub struct Request {
     /// Request identifier.
     pub id: u64,
+    /// Target model id (the registry key). Empty = default route — only
+    /// valid when the pool serves exactly one model.
+    pub model: String,
     /// Flat input activations (empty for timing-only requests).
     pub input: Vec<f32>,
 }
 
+impl Request {
+    /// A timing-only request on the default route (no activations).
+    pub fn timing(id: u64) -> Self {
+        Self {
+            id,
+            model: String::new(),
+            input: Vec::new(),
+        }
+    }
+
+    /// A numeric request on the default route.
+    pub fn numeric(id: u64, input: Vec<f32>) -> Self {
+        Self {
+            id,
+            model: String::new(),
+            input,
+        }
+    }
+
+    /// A request routed to a named model (empty `input` = timing-only).
+    pub fn for_model(id: u64, model: impl Into<String>, input: Vec<f32>) -> Self {
+        Self {
+            id,
+            model: model.into(),
+            input,
+        }
+    }
+}
+
 /// The server's reply.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct Response {
     /// Request identifier.
     pub id: u64,
-    /// Simulated on-accelerator latency (seconds).
+    /// The model id that served this request (the concrete registry key,
+    /// even when the request used the default route).
+    pub model: String,
+    /// Simulated on-accelerator latency for the serving model (seconds).
     pub device_latency_s: f64,
     /// Host wall-clock latency for the request (batch time ÷ batch size).
     pub host_latency_s: f64,
     /// Output activations (empty for timing-only requests).
     pub output: Vec<f32>,
-    /// Size of the batch this request was served in (1 without batching).
+    /// Size of the (model-pure) batch this request was served in.
     pub batch: usize,
 }
 
-/// A single-worker inference server executing an [`InferencePlan`].
-#[deprecated(
-    since = "0.2.0",
-    note = "use coordinator::pool::ServerPool (multi-worker, batched) or \
-            engine::EngineBuilder::build_pool"
-)]
-pub struct InferenceServer {
-    pool: ServerPool,
-}
-
-#[allow(deprecated)]
-impl InferenceServer {
-    /// Spawn the worker. `factory` is called *inside* the worker thread to
-    /// build the executor (PJRT clients are not `Send`, so the executor —
-    /// which maps a request's input to output activations — must be
-    /// constructed where it runs).
-    pub fn spawn<F, E>(plan: InferencePlan, factory: F) -> Self
-    where
-        F: FnOnce() -> E + Send + 'static,
-        E: FnMut(&Request) -> Vec<f32> + 'static,
-    {
-        // ServerPool factories are `Fn` (one call per worker); with a single
-        // worker the legacy `FnOnce` factory is consumed exactly once.
-        let once = Mutex::new(Some(factory));
-        let pool = ServerPool::start(plan, PoolConfig::single_worker(), move |_worker| {
-            let f = once
-                .lock()
-                .expect("factory lock")
-                .take()
-                .expect("single-worker factory called once");
-            f()
-        })
-        .expect("single-worker pool config is valid");
-        Self { pool }
-    }
-
-    /// Submit a request and wait for its response.
-    pub fn infer(&self, req: Request) -> Result<Response> {
-        self.pool.submit(req)?.wait()
-    }
-
-    /// Stop the worker and collect the metrics.
-    pub fn shutdown(self) -> Result<Metrics> {
-        let pm = self.pool.shutdown()?;
-        if pm.panicked_workers > 0 {
-            return Err(Error::Coordinator("worker panicked".into()));
-        }
-        Ok(pm.merged())
-    }
-}
-
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
-    use crate::arch::{DesignPoint, Platform};
-    use crate::workload::{resnet, RatioProfile};
-
-    fn plan() -> InferencePlan {
-        let net = resnet::resnet18();
-        let profile = RatioProfile::ovsf50(&net);
-        InferencePlan::build(
-            &Platform::z7045(),
-            4,
-            DesignPoint::new(64, 64, 16, 48),
-            &net,
-            &profile,
-        )
-    }
 
     #[test]
-    fn serves_requests_in_order() {
-        let server = InferenceServer::spawn(plan(), || |req: &Request| vec![req.id as f32]);
-        for id in 0..10u64 {
-            let resp = server
-                .infer(Request {
-                    id,
-                    input: vec![],
-                })
-                .unwrap();
-            assert_eq!(resp.id, id);
-            assert_eq!(resp.output, vec![id as f32]);
-            assert_eq!(resp.batch, 1, "legacy shim serves batch-1");
-            assert!(resp.device_latency_s > 0.0);
-        }
-        let metrics = server.shutdown().unwrap();
-        assert_eq!(metrics.count(), 10);
-    }
-
-    #[test]
-    fn shutdown_is_clean_without_requests() {
-        let server = InferenceServer::spawn(plan(), || |_: &Request| vec![]);
-        let metrics = server.shutdown().unwrap();
-        assert_eq!(metrics.count(), 0);
-    }
-
-    #[test]
-    fn drop_does_not_hang() {
-        let server = InferenceServer::spawn(plan(), || |_: &Request| vec![]);
-        drop(server);
+    fn request_constructors_route_and_default() {
+        let t = Request::timing(1);
+        assert!(t.model.is_empty() && t.input.is_empty());
+        let n = Request::numeric(2, vec![1.0]);
+        assert!(n.model.is_empty());
+        assert_eq!(n.input, vec![1.0]);
+        let m = Request::for_model(3, "resnet18", vec![]);
+        assert_eq!(m.model, "resnet18");
     }
 }

@@ -12,8 +12,11 @@
 //! 3. [`finish`](ExecutionBackend::finish) — closes the inference and
 //!    emits the cost/trace report; the backend resets for the next request.
 
+use std::sync::Arc;
+
 use crate::arch::{DesignPoint, Platform};
 use crate::coordinator::scheduler::InferencePlan;
+use crate::engine::compile::CompiledModel;
 use crate::error::Result;
 use crate::perf::Bound;
 use crate::workload::{Network, RatioProfile};
@@ -154,9 +157,25 @@ pub trait ExecutionBackend {
     /// Stable backend name (reports, logs, registries).
     fn name(&self) -> &'static str;
 
-    /// Accept the validated plan and prepare internal state. Called exactly
-    /// once, before any [`execute_layer`](Self::execute_layer) call.
+    /// Accept the validated plan and prepare internal state. Called before
+    /// any [`execute_layer`](Self::execute_layer) call — and called again
+    /// (between requests) when a serving worker swaps the active model onto
+    /// this backend: the backend must drop all per-model state and be ready
+    /// to execute the new plan.
     fn plan(&mut self, plan: &EnginePlan) -> Result<()>;
+
+    /// Adopt a compiled model artifact. Called after [`plan`](Self::plan)
+    /// with the artifact whose `plan()` was just installed — the
+    /// compile-once/serve-many hook: backends that fit or synthesise
+    /// per-layer weight state take the artifact's (fitted once per
+    /// artifact, shared via `Arc` across workers and switches) instead of
+    /// redoing the work per backend instance. Implementations must keep
+    /// timing-only traffic cheap: hold the handle, defer the α fit to
+    /// first numeric use ([`CompiledModel::hw`] caches it). The default
+    /// ignores the artifact (timing-only backends hold no weight state).
+    fn preload(&mut self, _model: &Arc<CompiledModel>) -> Result<()> {
+        Ok(())
+    }
 
     /// Execute layer `idx` of the planned network. `input` carries the
     /// current activations (the request input for layer 0, the previous

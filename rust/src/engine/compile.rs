@@ -1,0 +1,349 @@
+//! The compile-once / serve-many split: [`Compiler`] turns a
+//! (network, profile) pair into an immutable [`CompiledModel`] artifact,
+//! and serving layers ([`ModelRegistry`](crate::coordinator::registry::ModelRegistry),
+//! [`ServerPool::serve`](crate::coordinator::pool::ServerPool::serve))
+//! route requests onto those artifacts without re-validating or re-fitting
+//! anything per request.
+//!
+//! A `CompiledModel` is everything that used to be scattered across
+//! `EngineBuilder::plan`, the scheduler and the simulator backend's lazy
+//! per-layer weight synthesis:
+//!
+//! * the validated [`EnginePlan`] (platform + bandwidth operating point,
+//!   design point σ, workload, ρ profile, admission-time schedule);
+//! * the model's [`WeightsKey`] namespace — one key per OVSF layer, the
+//!   identity its generated weight slabs live under in the shared
+//!   [`SlabCache`](crate::engine::wcache::SlabCache);
+//! * the per-layer synthetic-checkpoint seeds and the **per-artifact
+//!   compressed OVSF α sets** (the resident model state the slab generator
+//!   reads; fitted once, lazily on first numeric use), so model switches
+//!   on a serving worker adopt the artifact's α's instead of re-fitting
+//!   them — and timing-only pools never pay the fit;
+//! * the expected input/output activation lengths, checked at admission so
+//!   a malformed request fails fast at `submit` with a typed error.
+//!
+//! The `Compiler` pins the design point after its first compile: every
+//! model compiled through one `Compiler` shares one σ — the single
+//! computation engine the paper serves all CNNs from, with only the
+//! per-model α state differing (unzipFPGA §1: resources reused across
+//! layers *and* CNN models without reconfiguring the fabric).
+
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+use crate::arch::{DesignPoint, Platform};
+use crate::engine::backend::EnginePlan;
+use crate::engine::sim::{layer_seed, synth_hw_weights};
+use crate::engine::wcache::WeightsKey;
+use crate::engine::Engine;
+use crate::error::Result;
+use crate::sim::hw_weights::HwOvsfWeights;
+use crate::workload::{Network, RatioProfile};
+
+/// An immutable, shareable model artifact: the output of
+/// [`Compiler::compile`], the unit a
+/// [`ModelRegistry`](crate::coordinator::registry::ModelRegistry) holds.
+pub struct CompiledModel {
+    plan: EnginePlan,
+    input_len: usize,
+    output_len: usize,
+    alpha_words: u64,
+    weights_keys: Vec<WeightsKey>,
+    weight_seeds: Vec<u64>,
+    /// Fitted once per artifact, on first use by a numeric backend —
+    /// timing-only (analytical) pools never pay the fit.
+    hw: OnceLock<Vec<Option<Arc<HwOvsfWeights>>>>,
+}
+
+impl std::fmt::Debug for CompiledModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompiledModel")
+            .field("network", &self.plan.network.name)
+            .field("sigma", &self.plan.sigma)
+            .field("input_len", &self.input_len)
+            .field("output_len", &self.output_len)
+            .field("alpha_words", &self.alpha_words)
+            .field("ovsf_layers", &self.weights_keys.len())
+            .finish()
+    }
+}
+
+impl CompiledModel {
+    /// Compile an already-validated plan into an artifact: derive the
+    /// weights-key namespace, the per-layer synthetic-checkpoint seeds and
+    /// the α-volume accounting. The compressed OVSF α sets themselves are
+    /// fitted once per artifact, lazily on first use by a numeric backend
+    /// (see [`hw`](Self::hw)).
+    pub fn from_plan(plan: EnginePlan) -> Result<Self> {
+        let n = plan.n_layers();
+        let mut weights_keys = Vec::new();
+        let mut weight_seeds = Vec::with_capacity(n);
+        let mut alpha_words = 0u64;
+        for (idx, layer) in plan.network.layers.iter().enumerate() {
+            weight_seeds.push(layer_seed(&plan.network.name, idx, layer));
+            if layer.ovsf {
+                let rho = plan.profile.rho(idx);
+                alpha_words += layer.n_in * layer.n_out * layer.basis_per_chunk(rho);
+                weights_keys.push(WeightsKey::new(
+                    plan.network.name.clone(),
+                    idx,
+                    (layer.n_in, layer.n_out, layer.k),
+                    plan.sigma,
+                    rho,
+                ));
+            }
+        }
+        let input_len = plan
+            .network
+            .layers
+            .first()
+            .map(|l| (l.h * l.w * l.n_in) as usize)
+            .unwrap_or(0);
+        let output_len = plan
+            .network
+            .layers
+            .last()
+            .map(|l| {
+                let g = l.gemm();
+                (g.r * g.c) as usize
+            })
+            .unwrap_or(0);
+        Ok(Self {
+            plan,
+            input_len,
+            output_len,
+            alpha_words,
+            weights_keys,
+            weight_seeds,
+            hw: OnceLock::new(),
+        })
+    }
+
+    /// The validated plan this artifact executes.
+    pub fn plan(&self) -> &EnginePlan {
+        &self.plan
+    }
+
+    /// The compiled network's name (the conventional registry id).
+    pub fn network_name(&self) -> &str {
+        &self.plan.network.name
+    }
+
+    /// Design point σ the model was compiled for.
+    pub fn sigma(&self) -> DesignPoint {
+        self.plan.sigma
+    }
+
+    /// Expected request input length: the first layer's `h·w·c_in` NHWC
+    /// activations. Admission control rejects other non-empty lengths.
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    /// Output activation length a numeric request returns (the last
+    /// layer's `R·C`).
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    /// α words that must be resident for this model — the state (and the
+    /// only weight traffic) a model switch moves.
+    pub fn alpha_words(&self) -> u64 {
+        self.alpha_words
+    }
+
+    /// The model's generated-weights namespace: one [`WeightsKey`] per
+    /// OVSF layer. Evicting the model drops these from the shared cache.
+    pub fn weights_keys(&self) -> &[WeightsKey] {
+        &self.weights_keys
+    }
+
+    /// Deterministic per-layer synthetic-checkpoint seeds (the repro's
+    /// stand-in for trained weights identity).
+    pub fn weight_seeds(&self) -> &[u64] {
+        &self.weight_seeds
+    }
+
+    /// The artifact's compressed OVSF α sets, one entry per layer (`None`
+    /// for dense layers) — the resident model state the slab generator
+    /// reads. Fitted deterministically on first call and cached in the
+    /// artifact, so model switches adopt shared `Arc`s instead of
+    /// re-fitting, while timing-only pools never pay the fit. Backends
+    /// adopt these via
+    /// [`ExecutionBackend::preload`](crate::engine::ExecutionBackend::preload).
+    pub fn hw(&self) -> Result<&[Option<Arc<HwOvsfWeights>>]> {
+        if let Some(fitted) = self.hw.get() {
+            return Ok(fitted);
+        }
+        let mut fitted = Vec::with_capacity(self.plan.n_layers());
+        for (idx, layer) in self.plan.network.layers.iter().enumerate() {
+            if layer.ovsf {
+                let rho = self.plan.profile.rho(idx);
+                let h = synth_hw_weights(&self.plan.network.name, idx, layer, rho)?;
+                fitted.push(Some(Arc::new(h)));
+            } else {
+                fitted.push(None);
+            }
+        }
+        // A racer may have fitted concurrently; both fits are
+        // deterministic and identical, so whichever landed first wins.
+        Ok(self.hw.get_or_init(|| fitted))
+    }
+
+    /// Admission-time device latency per inference (seconds).
+    pub fn latency_s(&self) -> f64 {
+        self.plan.schedule.latency_s
+    }
+}
+
+/// Compiles (network, ρ-profile) pairs into [`CompiledModel`] artifacts
+/// for one engine configuration. The design point is pinned on the first
+/// compile (explicitly via [`design_point`](Self::design_point), or by the
+/// DSE optimum of the first model), so every artifact from one `Compiler`
+/// targets the same fabric.
+pub struct Compiler {
+    platform: Option<Platform>,
+    bw_mult: Option<u32>,
+    sigma: Mutex<Option<DesignPoint>>,
+}
+
+impl Default for Compiler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compiler {
+    /// Compiler with builder defaults (Z7045, 4× bandwidth, DSE-chosen σ).
+    pub fn new() -> Self {
+        Self {
+            platform: None,
+            bw_mult: None,
+            sigma: Mutex::new(None),
+        }
+    }
+
+    /// Target platform (default: Z7045).
+    pub fn platform(mut self, platform: Platform) -> Self {
+        self.platform = Some(platform);
+        self
+    }
+
+    /// Off-chip bandwidth multiplier (default: 4).
+    pub fn bandwidth(mut self, bw_mult: u32) -> Self {
+        self.bw_mult = Some(bw_mult);
+        self
+    }
+
+    fn pinned(&self) -> std::sync::MutexGuard<'_, Option<DesignPoint>> {
+        self.sigma.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Pin the design point σ up front (default: the first compile runs
+    /// the DSE and pins its optimum for every later compile).
+    pub fn design_point(self, sigma: DesignPoint) -> Self {
+        *self.pinned() = Some(sigma);
+        self
+    }
+
+    /// The pinned design point, once one exists.
+    pub fn sigma(&self) -> Option<DesignPoint> {
+        *self.pinned()
+    }
+
+    /// Validate and compile one model. Runs the plan validation
+    /// (`EngineBuilder::plan`), derives the schedule, fits the synthetic
+    /// OVSF α sets, and freezes the result into a [`CompiledModel`].
+    pub fn compile(&self, network: Network, profile: RatioProfile) -> Result<CompiledModel> {
+        let mut b = Engine::builder().network(network).profile(profile);
+        if let Some(p) = self.platform.clone() {
+            b = b.platform(p);
+        }
+        if let Some(bw) = self.bw_mult {
+            b = b.bandwidth(bw);
+        }
+        if let Some(s) = self.sigma() {
+            b = b.design_point(s);
+        }
+        let plan = b.plan()?;
+        // One fabric for every model compiled here: pin the (possibly
+        // DSE-chosen) design point for all subsequent compiles.
+        *self.pinned() = Some(plan.sigma);
+        CompiledModel::from_plan(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{resnet, squeezenet, Layer};
+
+    fn tiny_net() -> Network {
+        Network {
+            name: "tiny".into(),
+            layers: vec![
+                Layer::conv("stem", 8, 8, 4, 8, 3, 1, 1, false),
+                Layer::conv("b.conv1", 8, 8, 8, 8, 3, 1, 1, true),
+                Layer::conv("b.conv2", 8, 8, 8, 16, 3, 2, 1, true),
+                Layer::fc("fc", 16, 10),
+            ],
+        }
+    }
+
+    #[test]
+    fn compiled_model_carries_shapes_keys_and_alphas() {
+        let net = tiny_net();
+        let profile = RatioProfile::uniform(&net, 0.5);
+        let compiler = Compiler::new()
+            .platform(Platform::z7045())
+            .bandwidth(4)
+            .design_point(DesignPoint::new(8, 4, 8, 4));
+        let m = compiler.compile(net.clone(), profile).unwrap();
+        assert_eq!(m.network_name(), "tiny");
+        assert_eq!(m.input_len(), 8 * 8 * 4);
+        assert_eq!(m.output_len(), 10);
+        assert_eq!(m.weights_keys().len(), 2, "one key per OVSF layer");
+        assert_eq!(m.weight_seeds().len(), net.layers.len());
+        assert!(m.alpha_words() > 0);
+        assert!(m.latency_s() > 0.0);
+        // Per-layer α state exists exactly for the OVSF layers and matches
+        // the simulator's own lazy synthesis (same seeds, same fit).
+        let fitted = m.hw().unwrap();
+        assert_eq!(fitted.len(), net.layers.len());
+        for (idx, layer) in net.layers.iter().enumerate() {
+            match &fitted[idx] {
+                Some(hw) => {
+                    assert!(layer.ovsf);
+                    let lazy = synth_hw_weights("tiny", idx, layer, 0.5).unwrap();
+                    assert_eq!(hw.alphas, lazy.alphas, "compiled α ≠ lazy fit");
+                }
+                None => assert!(!layer.ovsf),
+            }
+        }
+    }
+
+    #[test]
+    fn compiler_pins_sigma_across_models() {
+        let r18 = resnet::resnet18();
+        let sqn = squeezenet::squeezenet1_1();
+        let compiler = Compiler::new().platform(Platform::zu7ev()).bandwidth(12);
+        assert!(compiler.sigma().is_none());
+        let a = compiler
+            .compile(r18.clone(), RatioProfile::ovsf50(&r18))
+            .unwrap();
+        let pinned = compiler.sigma().expect("first compile pins σ");
+        assert_eq!(a.sigma(), pinned);
+        let b = compiler
+            .compile(sqn.clone(), RatioProfile::ovsf50(&sqn))
+            .unwrap();
+        assert_eq!(b.sigma(), pinned, "one fabric serves every model");
+    }
+
+    #[test]
+    fn compile_rejects_invalid_configs() {
+        let net = tiny_net();
+        let profile = RatioProfile::uniform(&net, 0.5);
+        // A wgen-less σ cannot serve an OVSF model.
+        let compiler = Compiler::new().design_point(DesignPoint::new(0, 4, 8, 4));
+        assert!(compiler.compile(net, profile).is_err());
+    }
+}

@@ -27,12 +27,19 @@
 //! # Ok::<(), unzipfpga::Error>(())
 //! ```
 //!
-//! For serving, [`EngineBuilder::build_pool`] stands up a multi-worker
-//! [`ServerPool`](crate::coordinator::pool::ServerPool) in which every
-//! worker owns its own `Engine` (PJRT clients are not `Send`).
+//! For serving, the API splits **compile-once / serve-many**: a
+//! [`Compiler`] produces immutable [`CompiledModel`] artifacts, a
+//! [`ModelRegistry`](crate::coordinator::registry::ModelRegistry) holds
+//! them under string ids over one shared slab cache, and
+//! [`ServerPool::serve`](crate::coordinator::pool::ServerPool::serve)
+//! routes model-named requests onto backend workers that swap plans on
+//! model switch (PJRT clients are not `Send`, so each worker builds its
+//! backend in-thread). [`EngineBuilder::build_pool`] remains as the
+//! single-model convenience over that path.
 
 pub mod analytical;
 pub mod backend;
+pub mod compile;
 pub mod pjrt;
 pub mod sim;
 pub mod wcache;
@@ -41,6 +48,7 @@ pub use analytical::AnalyticalBackend;
 pub use backend::{
     EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome, OverlapTelemetry,
 };
+pub use compile::{CompiledModel, Compiler};
 pub use pjrt::{PjrtBackend, PjrtConfig};
 pub use sim::SimBackend;
 pub use wcache::{SlabCache, SlabKey, WeightsKey};
@@ -48,9 +56,9 @@ pub use wcache::{SlabCache, SlabKey, WeightsKey};
 use std::sync::Arc;
 
 use crate::arch::{DesignPoint, Platform};
-use crate::coordinator::pool::{PoolConfig, RequestExecutor, ServerPool};
+use crate::coordinator::pool::{PoolConfig, ServerPool};
+use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::scheduler::InferencePlan;
-use crate::coordinator::server::Request;
 use crate::dse::search::{optimise, DseConfig};
 use crate::error::{Error, Result};
 use crate::workload::{Network, RatioProfile};
@@ -103,6 +111,36 @@ impl Engine {
     pub fn with_backend(plan: EnginePlan, mut backend: Box<dyn ExecutionBackend>) -> Result<Self> {
         backend.plan(&plan)?;
         Ok(Self { plan, backend })
+    }
+
+    /// Construct an engine serving a [`CompiledModel`]: the backend is
+    /// planned with the artifact's plan and handed the artifact
+    /// ([`ExecutionBackend::preload`]; α state is adopted on first numeric
+    /// use), generating slabs through `cache`.
+    pub fn from_compiled(
+        model: &Arc<CompiledModel>,
+        kind: &BackendKind,
+        cache: &Arc<SlabCache>,
+    ) -> Result<Self> {
+        let mut backend = make_backend(kind, cache)?;
+        backend.plan(model.plan())?;
+        backend.preload(model)?;
+        Ok(Self {
+            plan: model.plan().clone(),
+            backend,
+        })
+    }
+
+    /// Swap the active model on this engine **between requests**: re-plan
+    /// the backend with the artifact's plan and hand it the artifact.
+    /// This is the model-switch primitive of multi-model serving — the
+    /// fabric (backend instance, shared slab cache) stays, only the plan
+    /// and the (lazily adopted) α state move.
+    pub fn activate(&mut self, model: &Arc<CompiledModel>) -> Result<()> {
+        self.backend.plan(model.plan())?;
+        self.backend.preload(model)?;
+        self.plan = model.plan().clone();
+        Ok(())
     }
 
     /// The validated plan this engine executes.
@@ -432,10 +470,15 @@ impl EngineBuilder {
         Engine::with_backend(plan, make_backend(&kind, &cache)?)
     }
 
-    /// Validate once, then stand up a multi-worker
-    /// [`ServerPool`](crate::coordinator::pool::ServerPool) in which every
-    /// worker thread owns a private `Engine` built from this configuration
-    /// (backends need not be `Send`; PJRT clients are not).
+    /// Validate once, compile the model, and stand up a **registry-routed**
+    /// [`ServerPool`](crate::coordinator::pool::ServerPool) serving it as
+    /// the sole registered model (under the network's name; requests may
+    /// use the default route). This is now a thin adapter over the
+    /// multi-model path — [`Compiler`] +
+    /// [`ModelRegistry`](crate::coordinator::registry::ModelRegistry) +
+    /// [`ServerPool::serve`](crate::coordinator::pool::ServerPool::serve) —
+    /// with one bounded slab cache shared by every worker. Register more
+    /// models on the returned pool's registry at any time.
     pub fn build_pool(self, cfg: PoolConfig) -> Result<ServerPool> {
         let plan = self.plan()?;
         // One bounded slab cache for the whole pool: every worker's
@@ -445,99 +488,11 @@ impl EngineBuilder {
         // slab it is currently streaming).
         let cache = self.make_cache();
         let kind = self.backend.unwrap_or(BackendKind::Analytical);
-        // Fail fast on the caller thread: a broken backend (missing
-        // artifact, stub runtime) should error here, not inside a worker.
-        match &kind {
-            BackendKind::Pjrt(pjrt) => {
-                // Probe the client and the artifact file only — each worker
-                // compiles its own copy of the artifact anyway, so a full
-                // throwaway compile here would be paid twice. HLO compile
-                // errors still surface as worker startup failure.
-                if !cfg!(feature = "pjrt") {
-                    return Err(Error::RuntimeUnavailable);
-                }
-                let reg = crate::runtime::ArtifactRegistry::new(pjrt.artifacts_dir.clone())?;
-                if !reg.has(&pjrt.artifact) {
-                    return Err(Error::MissingArtifact {
-                        path: reg.path_of(&pjrt.artifact).display().to_string(),
-                        source: std::io::Error::new(
-                            std::io::ErrorKind::NotFound,
-                            "no such file",
-                        ),
-                    });
-                }
-            }
-            // Analytical/simulator backends are cheap to construct.
-            _ => drop(Engine::from_plan(plan.clone(), &kind)?),
-        }
-        let schedule = plan.schedule.clone();
-        ServerPool::start(schedule, cfg, move |_worker| EngineExecutor {
-            engine: make_backend(&kind, &cache)
-                .and_then(|backend| Engine::with_backend(plan.clone(), backend))
-                .expect("backend validated on the caller thread"),
-        })
-    }
-}
-
-/// Pool executor adapter: one engine per worker thread. Numeric requests
-/// popped in the same pool batch fold into one [`Engine::infer_batch`]
-/// call, so each generated weight slab is amortised across the whole
-/// batch; timing-only and malformed requests fall back to per-request
-/// execution (a bad input errors its own handle only).
-struct EngineExecutor {
-    engine: Engine,
-}
-
-impl RequestExecutor for EngineExecutor {
-    fn execute(&mut self, req: &Request) -> Result<Vec<f32>> {
-        self.engine.infer(&req.input).map(|o| o.output)
-    }
-
-    fn execute_batch(&mut self, batch: &[Request]) -> Vec<Result<Vec<f32>>> {
-        let expect = self
-            .engine
-            .plan()
-            .network
-            .layers
-            .first()
-            .map(|l| (l.h * l.w * l.n_in) as usize)
-            .unwrap_or(0);
-        let foldable: Vec<usize> = batch
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| expect > 0 && r.input.len() == expect)
-            .map(|(i, _)| i)
-            .collect();
-        if foldable.len() < 2 {
-            return batch.iter().map(|r| self.execute(r)).collect();
-        }
-        // One clone per request (requests are borrowed); `infer_batch`
-        // takes ownership, so no further copies happen.
-        let inputs: Vec<Vec<f32>> = foldable.iter().map(|&i| batch[i].input.clone()).collect();
-        let mut results: Vec<Option<Result<Vec<f32>>>> =
-            (0..batch.len()).map(|_| None).collect();
-        match self.engine.infer_batch(inputs) {
-            Ok((outs, _report)) => {
-                for (&i, out) in foldable.iter().zip(outs) {
-                    results[i] = Some(Ok(out));
-                }
-            }
-            Err(e) => {
-                let msg = format!("batched inference failed: {e}");
-                for &i in &foldable {
-                    results[i] = Some(Err(Error::Coordinator(msg.clone())));
-                }
-            }
-        }
-        for (i, slot) in results.iter_mut().enumerate() {
-            if slot.is_none() {
-                *slot = Some(self.execute(&batch[i]));
-            }
-        }
-        results
-            .into_iter()
-            .map(|r| r.expect("every batch slot filled"))
-            .collect()
+        let compiled = CompiledModel::from_plan(plan)?;
+        let registry = Arc::new(ModelRegistry::with_cache(cache));
+        let id = compiled.network_name().to_string();
+        registry.register(id, compiled)?;
+        ServerPool::serve(registry, kind, cfg)
     }
 }
 

@@ -54,8 +54,10 @@ use crate::workload::layer::Layer;
 
 /// Deterministic per-layer seed: the repro has no trained ImageNet
 /// checkpoints, so every worker must agree on the synthetic weights for
-/// the shared slab cache to be coherent.
-fn layer_seed(model: &str, idx: usize, layer: &Layer) -> u64 {
+/// the shared slab cache to be coherent. Public so
+/// [`CompiledModel`](crate::engine::compile::CompiledModel) can carry the
+/// seed namespace as part of the artifact.
+pub fn layer_seed(model: &str, idx: usize, layer: &Layer) -> u64 {
     let mut seed: u64 = 0xcbf2_9ce4_8422_2325;
     for b in model.bytes().chain(layer.name.bytes()) {
         seed ^= b as u64;
@@ -316,6 +318,11 @@ pub struct SimBackend {
     /// O(ρ·model) bytes. Dense OVSF weights only ever exist as cached
     /// slabs.
     hw: Vec<Option<Arc<HwOvsfWeights>>>,
+    /// The compiled artifact serving this plan, when one was preloaded:
+    /// its per-artifact α sets are adopted on first numeric use (shared
+    /// `Arc`s — fitted once per artifact across all workers and switches;
+    /// timing-only traffic never triggers the fit).
+    artifact: Option<Arc<crate::engine::compile::CompiledModel>>,
     /// Scratch: one lowered `T_R×P` activation row-strip (serial compute
     /// path; pool tasks own their scratch).
     act: Vec<f32>,
@@ -336,6 +343,7 @@ impl Default for SimBackend {
             pipelined: true,
             par_min_macs: DEFAULT_PAR_MIN_MACS,
             hw: Vec::new(),
+            artifact: None,
             act: Vec::new(),
             cur_shape: None,
             prefetcher: None,
@@ -390,8 +398,15 @@ impl SimBackend {
         if layer.ovsf {
             let rho = plan.profile.rho(idx);
             if self.hw[idx].is_none() {
-                let hw = synth_hw_weights(&plan.network.name, idx, layer, rho)?;
-                self.hw[idx] = Some(Arc::new(hw));
+                // First numeric use: adopt the compiled artifact's α sets
+                // (fitted once per artifact, shared across workers and
+                // switches), else fit this layer's locally.
+                if let Some(artifact) = &self.artifact {
+                    self.hw = artifact.hw()?.to_vec();
+                } else {
+                    let hw = synth_hw_weights(&plan.network.name, idx, layer, rho)?;
+                    self.hw[idx] = Some(Arc::new(hw));
+                }
             }
             let hw = Arc::clone(self.hw[idx].as_ref().expect("just populated"));
             let key = SlabKey {
@@ -661,9 +676,35 @@ impl ExecutionBackend for SimBackend {
 
     fn plan(&mut self, plan: &EnginePlan) -> Result<()> {
         self.hw = vec![None; plan.n_layers()];
+        // A stale artifact must not leak α state into an unrelated plan;
+        // preload re-installs it right after when the plan came from one.
+        self.artifact = None;
         self.plan = Some(Arc::new(plan.clone()));
         self.executed.clear();
         self.cur_shape = None;
+        Ok(())
+    }
+
+    fn preload(&mut self, model: &Arc<crate::engine::compile::CompiledModel>) -> Result<()> {
+        {
+            let plan = self.planned()?;
+            if plan.network.name != model.plan().network.name
+                || plan.n_layers() != model.plan().n_layers()
+            {
+                return Err(Error::InvalidConfig(format!(
+                    "preload: compiled model '{}' ({} layers) does not match the \
+                     planned network '{}' ({} layers)",
+                    model.plan().network.name,
+                    model.plan().n_layers(),
+                    plan.network.name,
+                    plan.n_layers()
+                )));
+            }
+        }
+        // Hold the handle only: the artifact's α sets are adopted on first
+        // numeric use (`slab_job`), so timing-only traffic never pays the
+        // fit and switches stay O(1).
+        self.artifact = Some(Arc::clone(model));
         Ok(())
     }
 

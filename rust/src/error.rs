@@ -52,6 +52,16 @@ pub enum Error {
 
     /// A bounded submission queue rejected a request (backpressure).
     QueueFull,
+
+    /// A request could not be routed to a model: the id is not registered
+    /// (never registered, or evicted while the request was queued), or the
+    /// empty default route is ambiguous because the pool serves more than
+    /// one model.
+    UnknownModel(String),
+
+    /// The server pool is shut down (or every worker died): the request was
+    /// drained without execution instead of hanging.
+    PoolShutdown,
 }
 
 impl std::fmt::Display for Error {
@@ -78,6 +88,15 @@ impl std::fmt::Display for Error {
             Error::Io(e) => e.fmt(f),
             Error::Coordinator(s) => write!(f, "coordinator error: {s}"),
             Error::QueueFull => write!(f, "server pool queue is full (backpressure applied)"),
+            Error::UnknownModel(m) => write!(
+                f,
+                "cannot route to model '{m}' (unknown id, evicted, or ambiguous \
+                 default route)"
+            ),
+            Error::PoolShutdown => write!(
+                f,
+                "server pool is shut down (workers gone); request drained without execution"
+            ),
         }
     }
 }
@@ -118,6 +137,8 @@ mod tests {
         assert!(e.to_string().contains("make artifacts"));
         assert!(Error::RuntimeUnavailable.to_string().contains("pjrt"));
         assert!(Error::QueueFull.to_string().contains("backpressure"));
+        assert!(Error::UnknownModel("r18".into()).to_string().contains("r18"));
+        assert!(Error::PoolShutdown.to_string().contains("shut down"));
     }
 
     #[test]

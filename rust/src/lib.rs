@@ -28,10 +28,14 @@
 //! * [`engine`] — the unified execution facade: one `Engine` driving any
 //!   [`ExecutionBackend`](engine::ExecutionBackend) — analytical model,
 //!   cycle-level simulator or PJRT runtime — through the same
-//!   `plan → execute_layer → finish` contract.
+//!   `plan → execute_layer → finish` contract, plus the
+//!   compile-once/serve-many split
+//!   ([`Compiler`](engine::Compiler) → [`CompiledModel`](engine::CompiledModel)).
 //! * [`coordinator`] — the inference driver: per-layer scheduling, the
-//!   multi-worker batched [`ServerPool`](coordinator::pool::ServerPool)
-//!   and metrics.
+//!   [`ModelRegistry`](coordinator::registry::ModelRegistry) of compiled
+//!   models over one shared slab budget, the model-routed multi-worker
+//!   batched [`ServerPool`](coordinator::pool::ServerPool) and per-model
+//!   metrics.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 
@@ -60,8 +64,12 @@ pub use error::{Error, Result};
 pub mod prelude {
     pub use crate::arch::{DesignPoint, Platform};
     pub use crate::coordinator::pool::{PoolConfig, ServerPool};
+    pub use crate::coordinator::registry::ModelRegistry;
+    pub use crate::coordinator::server::{Request, Response};
     pub use crate::dse::search::DseResult;
-    pub use crate::engine::{BackendKind, Engine, EngineBuilder, ExecutionBackend, SlabCache};
+    pub use crate::engine::{
+        BackendKind, CompiledModel, Compiler, Engine, EngineBuilder, ExecutionBackend, SlabCache,
+    };
     pub use crate::error::{Error, Result};
     pub use crate::ovsf::codes::OvsfBasis;
     pub use crate::perf::model::{LayerPerf, PerfModel};

@@ -65,6 +65,16 @@ impl Args {
         })
     }
 
+    /// `--network` as a comma-separated list (multi-model serving).
+    fn networks(&self) -> Result<Vec<Network>> {
+        Network::by_names(
+            self.flags
+                .get("network")
+                .map(String::as_str)
+                .unwrap_or("resnet18"),
+        )
+    }
+
     fn platform(&self) -> Platform {
         match self
             .flags
@@ -148,7 +158,8 @@ COMMANDS:
   dse            design-space exploration (Eq. 10) for a CNN-platform pair
   autotune       hardware-aware OVSF ratio tuning (paper §6.2)
   simulate       cycle-level simulation of the selected design
-  serve          run the inference request loop on the planned design
+  serve          multi-model request loop (compile → register → submit);
+                 --network takes a comma-separated list, traffic interleaves
   multi-tenant   co-location study: bandwidth shared with other apps
   analyse        per-layer breakdown (GEMM view, stage times, bound, util)
   runtime-check  load + execute the AOT PJRT artifacts (needs `make artifacts`)
@@ -158,7 +169,8 @@ COMMANDS:
 
 FLAGS:
   --network   resnet18|resnet34|resnet50|squeezenet|vgg16|mobilenetv1
-              (default resnet18)
+              (default resnet18; `serve` accepts a comma-separated list,
+              e.g. --network resnet18,squeezenet)
   --platform  z7045 | zu7ev                                 (default z7045)
   --bw        bandwidth multiplier 1|2|4|12                 (default 4)
   --profile   ovsf50 | ovsf25 | uniform1                    (default ovsf50)
@@ -294,9 +306,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let net = args.network()?;
+    use std::sync::Arc;
+    use unzipfpga::coordinator::registry::ModelRegistry;
+    use unzipfpga::coordinator::ServerPool;
+    use unzipfpga::engine::Compiler;
+
+    let nets = args.networks()?;
     let plat = args.platform();
-    let profile = args.profile(&net);
     let n_req: u64 = args
         .flags
         .get("requests")
@@ -312,39 +328,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .get("batch")
         .and_then(|s| s.parse().ok())
         .unwrap_or(8);
-    let pool = Engine::builder()
-        .platform(plat.clone())
-        .bandwidth(args.bw())
-        .network(net)
-        .profile(profile)
-        .backend(BackendKind::Analytical)
-        .build_pool(PoolConfig {
+    // Compile once (one DSE-pinned σ — a single engine serves every
+    // model), register into one registry, serve many.
+    let compiler = Compiler::new().platform(plat.clone()).bandwidth(args.bw());
+    let registry = Arc::new(ModelRegistry::new());
+    let mut ids = Vec::with_capacity(nets.len());
+    for net in &nets {
+        let profile = args.profile(net);
+        let artifact = compiler.compile(net.clone(), profile)?;
+        let compiled = registry.register(net.name.clone(), artifact)?;
+        println!(
+            "model '{}': σ = {}, device latency {:.2} ms ({:.2} inf/s)",
+            net.name,
+            compiled.sigma(),
+            compiled.latency_s() * 1e3,
+            1.0 / compiled.latency_s()
+        );
+        ids.push(net.name.clone());
+    }
+    println!(
+        "serving {} model(s) on {} ({workers} workers, batch ≤ {max_batch}, \
+         {n_req} requests per model, interleaved)",
+        ids.len(),
+        plat.name
+    );
+    let pool = ServerPool::serve(
+        Arc::clone(&registry),
+        BackendKind::Analytical,
+        PoolConfig {
             workers,
             max_batch,
             ..PoolConfig::default()
-        })?;
-    let device_latency = pool.plan().latency_s;
-    println!(
-        "serving {} on {} (σ = {}, device latency {:.2} ms, {workers} workers, batch ≤ {max_batch})",
-        pool.plan().network,
-        plat.name,
-        pool.plan().sigma,
-        device_latency * 1e3
-    );
-    // Non-blocking submission: enqueue everything, then join the handles.
-    let handles: Vec<_> = (0..n_req)
-        .map(|id| pool.submit(Request { id, input: vec![] }))
-        .collect::<Result<_>>()?;
+        },
+    )?;
+    // Non-blocking round-robin submission across the registered models:
+    // enqueue everything, then join the handles.
+    let mut handles = Vec::new();
+    let mut id = 0u64;
+    for _ in 0..n_req {
+        for model in &ids {
+            handles.push(pool.submit(Request::for_model(id, model.clone(), vec![]))?);
+            id += 1;
+        }
+    }
     for h in handles {
         h.wait()?;
     }
     let metrics = pool.shutdown()?;
     println!("host loop : {}", metrics.summary());
-    println!(
-        "device    : {:.2} ms/inf => {:.2} inf/s",
-        device_latency * 1e3,
-        1.0 / device_latency
-    );
+    for model in &ids {
+        let m = registry.get(model)?;
+        println!(
+            "device    : {model}: {:.2} ms/inf => {:.2} inf/s",
+            m.latency_s() * 1e3,
+            1.0 / m.latency_s()
+        );
+    }
     Ok(())
 }
 
@@ -365,23 +404,31 @@ fn cmd_analyse(args: &Args) -> Result<()> {
 }
 
 fn cmd_multi_tenant(args: &Args) -> Result<()> {
-    use unzipfpga::coordinator::multi_tenant::co_location_sweep;
-    let net = args.network()?;
+    use unzipfpga::coordinator::multi_tenant::{co_location_sweep, CoLocationConfig};
+    let nets = args.networks()?;
     let plat = args.platform();
-    let reports = co_location_sweep(&plat, plat.peak_bw_mult, &net, 6)?;
+    let cfg = CoLocationConfig {
+        max_tenants: 6,
+        ..CoLocationConfig::default()
+    };
+    let reports = co_location_sweep(&plat, plat.peak_bw_mult, &nets, &cfg)?;
     println!(
-        "{:<8} {:>10} {:>14} {:>14} {:>9}",
-        "tenants", "bw/tenant", "baseline", "unzipFPGA", "speedup"
+        "{:<8} {:>10} {:<14} {:>14} {:>14} {:>9} {:>9}",
+        "tenants", "bw/tenant", "model", "baseline", "unzipFPGA", "speedup", "switches"
     );
     for r in &reports {
-        println!(
-            "{:<8} {:>9}x {:>14.1} {:>14.1} {:>8.2}x",
-            r.tenants,
-            r.bw_per_tenant,
-            r.baseline_inf_s,
-            r.unzip_inf_s,
-            r.speedup()
-        );
+        for m in &r.models {
+            println!(
+                "{:<8} {:>9}x {:<14} {:>14.1} {:>14.1} {:>8.2}x {:>9}",
+                r.tenants,
+                r.bw_per_tenant,
+                m.model,
+                m.baseline_inf_s,
+                m.unzip_inf_s,
+                m.speedup(),
+                r.model_switches
+            );
+        }
     }
     Ok(())
 }

@@ -73,6 +73,22 @@ impl Network {
             .chain(Self::extended())
             .find(|n| n.name.to_lowercase() == lower)
     }
+
+    /// Resolve a comma-separated list of workload names (the multi-model
+    /// serving CLI/example convention), erroring on the first unknown one.
+    pub fn by_names(csv: &str) -> crate::error::Result<Vec<Network>> {
+        csv.split(',')
+            .map(|name| {
+                Self::by_name(name.trim()).ok_or_else(|| {
+                    crate::error::Error::InvalidConfig(format!(
+                        "unknown network '{}' (try \
+                         resnet18/resnet34/resnet50/squeezenet/vgg16/mobilenetv1)",
+                        name.trim()
+                    ))
+                })
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -87,5 +103,13 @@ mod tests {
         assert!(Network::by_name("vgg16").is_some());
         assert!(Network::by_name("MobileNetV1").is_some());
         assert!(Network::by_name("lenet").is_none());
+    }
+
+    #[test]
+    fn csv_lookup() {
+        let nets = Network::by_names("resnet18, squeezenet").unwrap();
+        assert_eq!(nets.len(), 2);
+        assert_eq!(nets[1].name, "SqueezeNet");
+        assert!(Network::by_names("resnet18,lenet").is_err());
     }
 }

@@ -94,13 +94,10 @@ fn pool_survives_panicking_worker_shutdown() {
     })
     .unwrap();
     for id in 0..3u64 {
-        assert!(pool.submit(Request { id, input: vec![] }).unwrap().wait().is_ok());
+        assert!(pool.submit(Request::timing(id)).unwrap().wait().is_ok());
     }
     // The poisoned request: the client sees an error, not a hang.
-    let r = pool.submit(Request {
-        id: 3,
-        input: vec![],
-    });
+    let r = pool.submit(Request::timing(3));
     match r {
         Ok(handle) => assert!(handle.wait().is_err(), "dead worker must surface as Err"),
         Err(_) => {} // pool already noticed the death — equally fine

@@ -1,8 +1,7 @@
 //! Integration: the coordinator serves a request stream where each request
 //! executes REAL numerics through the PJRT runtime (the AOT model forward)
 //! — Python is nowhere on this path. Serving goes through the multi-worker
-//! `ServerPool` (the `InferenceServer` shim is covered by its own unit
-//! tests).
+//! `ServerPool` with caller-provided executors (`ServerPool::start`).
 
 use unzipfpga::arch::{DesignPoint, Platform};
 use unzipfpga::coordinator::pool::{PoolConfig, ServerPool};
@@ -69,7 +68,7 @@ fn serve_requests_through_pjrt() {
     let handles: Vec<_> = (0..8u64)
         .map(|id| {
             let input = rng2.normal_vec(16 * 16 * 16);
-            pool.submit(Request { id, input }).unwrap()
+            pool.submit(Request::numeric(id, input)).unwrap()
         })
         .collect();
     let mut outputs = Vec::new();
@@ -125,15 +124,12 @@ fn identical_requests_are_deterministic_across_workers() {
     let mut rng = unzipfpga::util::prng::Xoshiro256::seed_from_u64(3);
     let input = rng.normal_vec(16 * 8 * 32);
     let a = pool
-        .submit(Request {
-            id: 0,
-            input: input.clone(),
-        })
+        .submit(Request::numeric(0, input.clone()))
         .unwrap()
         .wait()
         .unwrap();
     let b = pool
-        .submit(Request { id: 1, input })
+        .submit(Request::numeric(1, input))
         .unwrap()
         .wait()
         .unwrap();

@@ -132,11 +132,7 @@ fn pool_ordering_under_concurrent_submitters() {
             let mut got = Vec::new();
             for i in 0..20u64 {
                 let id = t * 100 + i;
-                let resp = pool
-                    .submit(Request { id, input: vec![] })
-                    .unwrap()
-                    .wait()
-                    .unwrap();
+                let resp = pool.submit(Request::timing(id)).unwrap().wait().unwrap();
                 assert_eq!(resp.id, id);
                 assert_eq!(resp.output, vec![id as f32 * 2.0]);
                 got.push(resp.id);
@@ -172,7 +168,7 @@ fn clean_shutdown_with_in_flight_batches() {
     })
     .unwrap();
     let handles: Vec<_> = (0..60u64)
-        .map(|id| pool.submit(Request { id, input: vec![] }).unwrap())
+        .map(|id| pool.submit(Request::timing(id)).unwrap())
         .collect();
     // Shut down while batches are still in flight: every accepted request
     // must complete, none may hang or be dropped.
@@ -200,7 +196,7 @@ fn multi_worker_pool_matches_single_worker_path() {
     let single = ServerPool::start(plan(), PoolConfig::single_worker(), executor).unwrap();
     let mut expect = Vec::new();
     for id in 0..n_req {
-        let resp = single.submit(Request { id, input: vec![] }).unwrap().wait().unwrap();
+        let resp = single.submit(Request::timing(id)).unwrap().wait().unwrap();
         expect.push((resp.id, resp.output));
     }
     single.shutdown().unwrap();
@@ -214,7 +210,7 @@ fn multi_worker_pool_matches_single_worker_path() {
     };
     let pool = ServerPool::start(plan(), cfg, executor).unwrap();
     let handles: Vec<_> = (0..n_req)
-        .map(|id| pool.submit(Request { id, input: vec![] }).unwrap())
+        .map(|id| pool.submit(Request::timing(id)).unwrap())
         .collect();
     let mut got: Vec<(u64, Vec<f32>)> = handles
         .into_iter()
@@ -249,14 +245,18 @@ fn engine_pool_serves_through_unified_api() {
         })
         .unwrap();
     let handles: Vec<_> = (0..100u64)
-        .map(|id| pool.submit(Request { id, input: vec![] }).unwrap())
+        .map(|id| pool.submit(Request::timing(id)).unwrap())
         .collect();
     for (id, h) in handles.into_iter().enumerate() {
         let resp = h.wait().unwrap();
         assert_eq!(resp.id, id as u64);
         assert!(resp.output.is_empty(), "analytical backend is timing-only");
+        assert_eq!(
+            resp.model, "ResNet18",
+            "default route resolves to the pool's sole registered model"
+        );
         assert!(
-            (resp.device_latency_s - expect_latency).abs() < 1e-12,
+            (resp.device_latency_s - expect_latency).abs() < 1e-9 * expect_latency,
             "pool device latency {} != engine latency {}",
             resp.device_latency_s,
             expect_latency
@@ -264,4 +264,11 @@ fn engine_pool_serves_through_unified_api() {
     }
     let pm = pool.shutdown().unwrap();
     assert_eq!(pm.total_requests(), 100);
+    let merged = pm.merged();
+    assert_eq!(
+        merged.model_count("ResNet18"),
+        100,
+        "per-model metrics attribute every request to the routed model"
+    );
+    assert_eq!(pm.model_switches(), 0, "one model ⇒ no switches");
 }

@@ -1,0 +1,463 @@
+//! Multi-model serving acceptance tests: ≥ 2 distinct networks through one
+//! `ServerPool` under a single shared slab budget.
+//!
+//! * interleaved requests route to the correct model and match dedicated
+//!   single-model `Engine::infer` **bit-identically**;
+//! * batches never mix models (covered structurally by the pool's unit
+//!   tests; here per-model response routing + metrics pin the behaviour);
+//! * cross-model cache contention: two networks under one small budget
+//!   evict each other's slabs without changing any output bit;
+//! * lifecycle/typed-error guarantees: fail-fast `submit` validation,
+//!   eviction of a model with queued requests fails them typed (no hangs),
+//!   per-model metrics and the `model_switches` counter.
+//!
+//! The two workloads are reduced-geometry profiles of ResNet-18 (stem +
+//! OVSF basic-block convs + classifier) and MobileNetV1 (strided stem +
+//! pointwise + 3×3 + classifier) so the dense-path maths stays cheap in
+//! debug builds; the weights path is spatial-size-invariant.
+
+use std::sync::Arc;
+
+use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::coordinator::pool::{PoolConfig, ServerPool};
+use unzipfpga::coordinator::registry::ModelRegistry;
+use unzipfpga::coordinator::server::Request;
+use unzipfpga::engine::{BackendKind, Compiler, Engine};
+use unzipfpga::util::prng::Xoshiro256;
+use unzipfpga::workload::{Layer, Network, RatioProfile};
+use unzipfpga::Error;
+
+/// Reduced ResNet-18 profile: dense stem, two OVSF block convs (one
+/// strided), folded-pool classifier. Input 8·8·4 = 256, output 10.
+fn resnet_mini() -> Network {
+    Network {
+        name: "resnet18-mini".into(),
+        layers: vec![
+            Layer::conv("stem", 8, 8, 4, 8, 3, 1, 1, false),
+            Layer::conv("block.conv1", 8, 8, 8, 8, 3, 1, 1, true),
+            Layer::conv("block.conv2", 8, 8, 8, 16, 3, 2, 1, true),
+            Layer::fc("fc", 16, 10),
+        ],
+    }
+}
+
+/// Reduced MobileNetV1 profile: strided dense stem, pointwise 1×1, an
+/// OVSF 3×3, pointwise expansion, classifier. Input 10·10·3 = 300 (a
+/// different shape than resnet-mini, so shape validation discriminates),
+/// output 7.
+fn mobilenet_mini() -> Network {
+    Network {
+        name: "mobilenet-mini".into(),
+        layers: vec![
+            Layer::conv("stem", 10, 10, 3, 8, 3, 2, 1, false),
+            Layer::conv("pw1", 5, 5, 8, 16, 1, 1, 0, false),
+            Layer::conv("dw3", 5, 5, 16, 16, 3, 1, 1, true),
+            Layer::conv("pw2", 5, 5, 16, 24, 1, 1, 0, false),
+            Layer::fc("fc", 24, 7),
+        ],
+    }
+}
+
+const SIGMA: DesignPoint = DesignPoint {
+    m: 8,
+    t_r: 4,
+    t_p: 8,
+    t_c: 4,
+};
+
+/// OVSF slab bytes at σ: resnet-mini 2·1152 + 4·1152 = 6912, mobilenet-mini
+/// 4·2304 = 9216 — together 16128, so an 8 KiB budget forces cross-model
+/// eviction while every single slab (≤ 2304 B) still fits.
+const BUDGET: usize = 8 << 10;
+
+fn compiler() -> Compiler {
+    Compiler::new()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(SIGMA)
+}
+
+/// Dedicated single-model reference engine (private cache).
+fn dedicated_engine(net: &Network) -> Engine {
+    Engine::builder()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(SIGMA)
+        .network(net.clone())
+        .profile(RatioProfile::uniform(net, 0.5))
+        .backend(BackendKind::Simulator)
+        .build()
+        .unwrap()
+}
+
+fn registry_with_both() -> Arc<ModelRegistry> {
+    let c = compiler();
+    let registry = Arc::new(ModelRegistry::with_budget(BUDGET));
+    for net in [resnet_mini(), mobilenet_mini()] {
+        let profile = RatioProfile::uniform(&net, 0.5);
+        let id = net.name.clone();
+        registry.register(id, c.compile(net, profile).unwrap()).unwrap();
+    }
+    registry
+}
+
+fn inputs_for(net: &Network, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let l0 = &net.layers[0];
+    let len = (l0.h * l0.w * l0.n_in) as usize;
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n).map(|_| rng.normal_vec(len)).collect()
+}
+
+/// Acceptance: two distinct networks, one pool, interleaved numeric
+/// requests under one shared slab budget — responses route to the correct
+/// model and match dedicated single-model engines bit-identically, while
+/// the shared cache shows real cross-model contention under its budget.
+#[test]
+fn two_models_serve_interleaved_bit_identical_under_one_budget() {
+    let r18 = resnet_mini();
+    let mbn = mobilenet_mini();
+    let r18_inputs = inputs_for(&r18, 3, 0xaaaa);
+    let mbn_inputs = inputs_for(&mbn, 3, 0xbbbb);
+
+    // Dedicated single-model references.
+    let mut r18_engine = dedicated_engine(&r18);
+    let mut mbn_engine = dedicated_engine(&mbn);
+    let r18_expect: Vec<Vec<f32>> = r18_inputs
+        .iter()
+        .map(|x| r18_engine.infer(x).unwrap().output)
+        .collect();
+    let mbn_expect: Vec<Vec<f32>> = mbn_inputs
+        .iter()
+        .map(|x| mbn_engine.infer(x).unwrap().output)
+        .collect();
+    assert_eq!(r18_expect[0].len(), 10);
+    assert_eq!(mbn_expect[0].len(), 7);
+
+    let registry = registry_with_both();
+    let pool = ServerPool::serve(
+        Arc::clone(&registry),
+        BackendKind::Simulator,
+        PoolConfig {
+            workers: 2,
+            queue_depth: 64,
+            max_batch: 4,
+            linger: std::time::Duration::from_micros(200),
+        },
+    )
+    .unwrap();
+
+    // Interleave: r18, mbn, r18, mbn, ... with two rounds of each input
+    // set, so warm slabs, cold slabs and evicted slabs all get exercised.
+    let mut handles = Vec::new();
+    let mut id = 0u64;
+    for _round in 0..2 {
+        for i in 0..3 {
+            handles.push((
+                "resnet18-mini",
+                i,
+                pool.submit(Request::for_model(id, "resnet18-mini", r18_inputs[i].clone()))
+                    .unwrap(),
+            ));
+            id += 1;
+            handles.push((
+                "mobilenet-mini",
+                i,
+                pool.submit(Request::for_model(id, "mobilenet-mini", mbn_inputs[i].clone()))
+                    .unwrap(),
+            ));
+            id += 1;
+        }
+    }
+    for (model, i, h) in handles {
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.model, model, "response routed to the wrong model");
+        let expect = if model == "resnet18-mini" {
+            &r18_expect[i]
+        } else {
+            &mbn_expect[i]
+        };
+        assert_eq!(
+            &resp.output, expect,
+            "pool-served numerics diverge from the dedicated {model} engine"
+        );
+    }
+    let pm = pool.shutdown().unwrap();
+    assert_eq!(pm.total_requests(), 12);
+    let merged = pm.merged();
+    assert_eq!(merged.model_count("resnet18-mini"), 6);
+    assert_eq!(merged.model_count("mobilenet-mini"), 6);
+    assert!(pm.summary().contains("model_switches="), "{}", pm.summary());
+
+    let cache = registry.cache();
+    assert!(
+        cache.peak_resident_bytes() <= BUDGET,
+        "peak resident {} exceeds the shared {BUDGET}-byte budget",
+        cache.peak_resident_bytes()
+    );
+    assert!(
+        cache.evictions() > 0,
+        "16 KiB of cross-model slabs under an 8 KiB budget must evict"
+    );
+    assert_eq!(cache.hits() + cache.misses(), cache.lookups());
+}
+
+/// Cross-model cache contention, deterministically sequenced on one
+/// worker: model A fills the cache, model B evicts A's slabs, A's next
+/// request regenerates — outputs stay bit-identical throughout.
+#[test]
+fn cross_model_contention_evicts_and_regenerates_without_changing_bits() {
+    let r18 = resnet_mini();
+    let mbn = mobilenet_mini();
+    let r18_input = inputs_for(&r18, 1, 0x1).remove(0);
+    let mbn_input = inputs_for(&mbn, 1, 0x2).remove(0);
+    let r18_expect = dedicated_engine(&r18).infer(&r18_input).unwrap().output;
+    let mbn_expect = dedicated_engine(&mbn).infer(&mbn_input).unwrap().output;
+
+    let registry = registry_with_both();
+    let cache = Arc::clone(registry.cache());
+    let pool = ServerPool::serve(
+        Arc::clone(&registry),
+        BackendKind::Simulator,
+        PoolConfig::single_worker(),
+    )
+    .unwrap();
+    let serve = |model: &str, input: &[f32]| {
+        pool.submit(Request::for_model(0, model, input.to_vec()))
+            .unwrap()
+            .wait()
+            .unwrap()
+            .output
+    };
+
+    // A (6912 B of OVSF slabs) fits the 8 KiB budget alone.
+    assert_eq!(serve("resnet18-mini", &r18_input), r18_expect);
+    assert_eq!(cache.evictions(), 0, "A alone must fit the budget");
+    let misses_a = cache.misses();
+    assert!(misses_a > 0);
+
+    // B (9216 B) forces real cross-model eviction.
+    assert_eq!(serve("mobilenet-mini", &mbn_input), mbn_expect);
+    assert!(cache.evictions() > 0, "B must evict A's resident slabs");
+    assert!(cache.peak_resident_bytes() <= BUDGET);
+
+    // A again: its evicted slabs regenerate (misses grow) — and the output
+    // is still bit-identical.
+    let misses_before = cache.misses();
+    assert_eq!(serve("resnet18-mini", &r18_input), r18_expect);
+    assert!(
+        cache.misses() > misses_before,
+        "A's slabs were evicted, so re-serving A must regenerate"
+    );
+    assert_eq!(cache.hits() + cache.misses(), cache.lookups());
+    pool.shutdown().unwrap();
+}
+
+/// Per-model metrics + the model-switch counter: a single worker serving
+/// the FIFO run a a a b b a performs exactly two plan swaps, and every
+/// request lands in its model's latency series.
+#[test]
+fn per_model_metrics_count_requests_and_switches() {
+    let registry = registry_with_both();
+    let pool = ServerPool::serve(
+        Arc::clone(&registry),
+        BackendKind::Simulator,
+        PoolConfig::single_worker(),
+    )
+    .unwrap();
+    // Timing-only requests: routing/switching without the GEMM cost.
+    // Sequential submit+wait keeps the served order exactly a a a b b a.
+    for (id, model) in [
+        "resnet18-mini",
+        "resnet18-mini",
+        "resnet18-mini",
+        "mobilenet-mini",
+        "mobilenet-mini",
+        "resnet18-mini",
+    ]
+    .iter()
+    .enumerate()
+    {
+        let resp = pool
+            .submit(Request::for_model(id as u64, *model, vec![]))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(resp.model, *model);
+        assert!(resp.output.is_empty(), "timing-only requests carry no data");
+        assert!(resp.device_latency_s > 0.0, "per-model device latency");
+    }
+    let pm = pool.shutdown().unwrap();
+    let merged = pm.merged();
+    assert_eq!(merged.model_count("resnet18-mini"), 4);
+    assert_eq!(merged.model_count("mobilenet-mini"), 2);
+    assert_eq!(
+        pm.model_switches(),
+        2,
+        "a a a b b a = two plan swaps (a→b, b→a); first activation is free"
+    );
+    let s = pm.summary();
+    assert!(
+        s.contains("resnet18-mini:") && s.contains("mobilenet-mini:"),
+        "summary must break latencies out per model: {s}"
+    );
+    assert!(s.contains("model_switches=2"), "{s}");
+}
+
+/// Fail-fast typed admission: unknown ids, ambiguous default routes and
+/// wrong input shapes are rejected at `submit`, before queueing.
+#[test]
+fn submit_validates_model_and_shape_with_typed_errors() {
+    let registry = registry_with_both();
+    let pool = ServerPool::serve(
+        Arc::clone(&registry),
+        BackendKind::Simulator,
+        PoolConfig::single_worker(),
+    )
+    .unwrap();
+    // Unknown id.
+    let err = pool
+        .submit(Request::for_model(0, "vgg16", vec![]))
+        .err()
+        .expect("unknown model must be rejected");
+    assert!(matches!(err, Error::UnknownModel(_)), "{err}");
+    // Default route is ambiguous with two models registered.
+    let err = pool.submit(Request::timing(1)).err().expect("ambiguous route");
+    assert!(matches!(err, Error::UnknownModel(_)), "{err}");
+    // Wrong input length for a known model.
+    let err = pool
+        .submit(Request::for_model(2, "resnet18-mini", vec![0.0; 7]))
+        .err()
+        .expect("bad shape must be rejected");
+    assert!(matches!(err, Error::ShapeMismatch(_)), "{err}");
+    // The right shape for the *other* model is still wrong for this one.
+    let err = pool
+        .submit(Request::for_model(3, "resnet18-mini", vec![0.0; 10 * 10 * 3]))
+        .err()
+        .expect("cross-model shape must be rejected");
+    assert!(matches!(err, Error::ShapeMismatch(_)), "{err}");
+    // A valid request still serves.
+    let resp = pool
+        .submit(Request::for_model(4, "resnet18-mini", vec![]))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(resp.model, "resnet18-mini");
+    pool.shutdown().unwrap();
+}
+
+/// A PJRT pool executes one fixed AOT artifact: serving it over a
+/// registry with more than one model is rejected up front with a typed
+/// error instead of silently answering with the wrong network's numerics.
+#[test]
+fn pjrt_pools_refuse_multi_model_routing() {
+    use unzipfpga::engine::PjrtConfig;
+    let registry = registry_with_both();
+    let cfg = PjrtConfig::new("/nonexistent-artifacts", "model_fwd", vec![1]);
+    let err = ServerPool::serve(
+        Arc::clone(&registry),
+        BackendKind::Pjrt(cfg),
+        PoolConfig::single_worker(),
+    )
+    .err()
+    .expect("two registered models must be rejected for a PJRT pool");
+    assert!(
+        matches!(err, Error::InvalidConfig(_)),
+        "typed, and before any runtime probe: {err}"
+    );
+    assert!(err.to_string().contains("PJRT"), "{err}");
+}
+
+/// Regression (shutdown/eviction drain): evicting a model while its
+/// requests are queued fails exactly those requests with the typed
+/// `UnknownModel` error — nothing hangs, and other models keep serving.
+#[test]
+fn evicting_a_model_fails_its_queued_requests_typed() {
+    // A deliberately heavier model keeps the single worker busy long
+    // enough for the eviction (microseconds on this thread) to win the
+    // race against the queued victims.
+    let slow = Network {
+        name: "slow".into(),
+        layers: vec![
+            Layer::conv("stem", 16, 16, 8, 16, 3, 1, 1, false),
+            Layer::conv("c1", 16, 16, 16, 32, 3, 1, 1, true),
+            Layer::fc("fc", 32, 4),
+        ],
+    };
+    let victim = resnet_mini();
+    let c = compiler();
+    let registry = Arc::new(ModelRegistry::with_budget(1 << 20));
+    let slow_model = c.compile(slow.clone(), RatioProfile::uniform(&slow, 0.5)).unwrap();
+    registry.register("slow", slow_model).unwrap();
+    let victim_model = c.compile(victim.clone(), RatioProfile::uniform(&victim, 0.5)).unwrap();
+    registry.register("victim", victim_model).unwrap();
+    let pool = ServerPool::serve(
+        Arc::clone(&registry),
+        BackendKind::Simulator,
+        PoolConfig::single_worker(),
+    )
+    .unwrap();
+
+    // Occupy the worker with a numeric inference, queue victims behind it,
+    // then evict their model while they are still pending.
+    let slow_input = inputs_for(&slow, 1, 0x51).remove(0);
+    let busy = pool
+        .submit(Request::for_model(0, "slow", slow_input))
+        .unwrap();
+    let victims: Vec<_> = (1..=8u64)
+        .map(|id| pool.submit(Request::for_model(id, "victim", vec![])).unwrap())
+        .collect();
+    let evicted = registry.evict("victim").unwrap();
+    assert_eq!(evicted.network_name(), "resnet18-mini");
+
+    assert!(!busy.wait().unwrap().output.is_empty(), "slow request serves");
+    for h in victims {
+        let err = h
+            .wait()
+            .err()
+            .expect("queued request for an evicted model must fail, not hang");
+        assert!(matches!(err, Error::UnknownModel(_)), "typed: {err}");
+    }
+    // New submissions for the evicted id fail fast at admission.
+    let err = pool
+        .submit(Request::for_model(99, "victim", vec![]))
+        .err()
+        .expect("evicted model must be rejected at submit");
+    assert!(matches!(err, Error::UnknownModel(_)), "{err}");
+    // The surviving model still serves.
+    assert!(pool
+        .submit(Request::for_model(100, "slow", vec![]))
+        .unwrap()
+        .wait()
+        .is_ok());
+    pool.shutdown().unwrap();
+}
+
+/// Runtime registration: a model added after the pool started serves
+/// without a restart — the compile-once/serve-many lifecycle end to end.
+#[test]
+fn models_register_into_a_live_pool() {
+    let registry = Arc::new(ModelRegistry::with_budget(BUDGET));
+    let pool = ServerPool::serve(
+        Arc::clone(&registry),
+        BackendKind::Simulator,
+        PoolConfig::single_worker(),
+    )
+    .unwrap();
+    // Nothing registered yet: even the default route is typed-unknown.
+    assert!(matches!(
+        pool.submit(Request::timing(0)),
+        Err(Error::UnknownModel(_))
+    ));
+    let net = resnet_mini();
+    let compiled = compiler()
+        .compile(net.clone(), RatioProfile::uniform(&net, 0.5))
+        .unwrap();
+    registry.register("late", compiled).unwrap();
+    let input = inputs_for(&net, 1, 0x7).remove(0);
+    let expect = dedicated_engine(&net).infer(&input).unwrap().output;
+    // The default route now resolves (single model) — and numerics match.
+    let resp = pool.submit(Request::numeric(1, input)).unwrap().wait().unwrap();
+    assert_eq!(resp.model, "late");
+    assert_eq!(resp.output, expect);
+    pool.shutdown().unwrap();
+}

@@ -227,25 +227,25 @@ fn pool_responses_carry_real_numerics() {
         })
         .unwrap();
     let handles: Vec<_> = (0..6u64)
-        .map(|id| pool.submit(Request { id, input: input.clone() }).unwrap())
+        .map(|id| pool.submit(Request::numeric(id, input.clone())).unwrap())
         .collect();
     for h in handles {
         let resp = h.wait().unwrap();
         assert_eq!(resp.output, expect, "pool numerics diverge from engine");
     }
     // Timing-only (empty-input) requests still serve.
-    let resp = pool
-        .submit(Request { id: 99, input: vec![] })
-        .unwrap()
-        .wait()
-        .unwrap();
+    let resp = pool.submit(Request::timing(99)).unwrap().wait().unwrap();
     assert!(resp.output.is_empty());
-    // Malformed input lengths surface as per-request errors, not panics.
+    // Malformed input lengths fail fast at submit with a typed error —
+    // they never reach a worker.
     let err = pool
-        .submit(Request { id: 100, input: vec![0.0; 13] })
-        .unwrap()
-        .wait();
-    assert!(err.is_err(), "wrong-length input must fail the request");
+        .submit(Request::numeric(100, vec![0.0; 13]))
+        .err()
+        .expect("wrong-length input must be rejected at admission");
+    assert!(
+        matches!(err, unzipfpga::Error::ShapeMismatch(_)),
+        "typed: {err}"
+    );
     pool.shutdown().unwrap();
 }
 
@@ -352,13 +352,7 @@ fn batched_pool_serving_matches_serial_and_amortises_slab_misses() {
     let handles: Vec<_> = inputs
         .iter()
         .enumerate()
-        .map(|(id, input)| {
-            pool.submit(Request {
-                id: id as u64,
-                input: input.clone(),
-            })
-            .unwrap()
-        })
+        .map(|(id, input)| pool.submit(Request::numeric(id as u64, input.clone())).unwrap())
         .collect();
     for (h, want) in handles.into_iter().zip(&expect) {
         let resp = h.wait().unwrap();
