@@ -137,6 +137,7 @@ fn main() -> unzipfpga::Result<()> {
         queue_depth: 128,
         max_batch: 4,
         linger: std::time::Duration::from_millis(1),
+        slo: None,
     };
     let pool = ServerPool::start(plan.schedule.clone(), cfg, move |worker| {
         let params = std::sync::Arc::clone(&params);

@@ -435,6 +435,7 @@ fn bench_multimodel() {
             queue_depth: 64,
             max_batch: 4,
             linger: std::time::Duration::from_micros(200),
+            slo: None,
         },
     )
     .unwrap();

@@ -1,0 +1,361 @@
+//! Serving-under-load benchmark: deterministic traffic vs the SLO-aware
+//! pool.
+//!
+//! Drives a registry-routed `ServerPool` with the `coordinator::traffic`
+//! load generator and reports achieved throughput and latency tails
+//! (p50/p99/p999) against offered load:
+//!
+//! 1. **capacity calibration** — closed loop (one request in flight per
+//!    client) measures the sustainable request rate for the mix;
+//! 2. **offered-load grid** — open-loop Poisson / bursty / diurnal
+//!    streams at low (0.25×), mid (0.5×) and over (1.2×) the calibrated
+//!    capacity, a mixed two-model request stream with a deadline-carrying
+//!    class, all against one pool with a queue-delay SLO;
+//! 3. **warm vs cold model phases** — a warmed single-model stream, then
+//!    a mixed stream whose second model is freshly registered (cold
+//!    slabs);
+//! 4. **overload policy comparison** — the same overload stream against
+//!    an unthrottled FIFO pool (slo = None) and the SLO pool: FIFO lets
+//!    queue delay grow unboundedly, admission control sheds typed
+//!    `Overloaded` and keeps the admitted tail bounded.
+//!
+//! Emits `BENCH_serving.json` (override: `BENCH_SERVING_JSON`). Arrival
+//! schedules are pure functions of the seed — re-runs offer the identical
+//! request streams. `BENCH_SMOKE=1` shrinks stream durations for CI; the
+//! low-load smoke run must complete shed-free and expiry-free (asserted
+//! here, which is what fails CI on an admission-control regression).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::coordinator::pool::{PoolConfig, PoolMetrics, ServerPool};
+use unzipfpga::coordinator::registry::ModelRegistry;
+use unzipfpga::coordinator::traffic::{
+    run_closed_loop, ArrivalProcess, RequestClass, TrafficReport, TrafficSpec,
+};
+use unzipfpga::engine::{BackendKind, Compiler};
+use unzipfpga::util::bench::smoke_mode;
+use unzipfpga::util::prng::Xoshiro256;
+use unzipfpga::workload::tiny::{small_mobilenet, small_resnet};
+use unzipfpga::workload::RatioProfile;
+
+const SEED: u64 = 0x5e21;
+const WORKERS: usize = 2;
+/// Admission threshold expressed in queued requests: the SLO is sized so
+/// shedding starts near this queue depth — safely below `queue_depth`,
+/// so overload surfaces as typed `Overloaded`, not `QueueFull`.
+const SLO_QUEUE_REQUESTS: f64 = 64.0;
+const QUEUE_DEPTH: usize = 256;
+
+fn compiler() -> Compiler {
+    Compiler::new()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(8, 4, 8, 4))
+}
+
+fn pool_config(slo: Option<Duration>) -> PoolConfig {
+    PoolConfig {
+        workers: WORKERS,
+        queue_depth: QUEUE_DEPTH,
+        max_batch: 8,
+        linger: Duration::from_micros(200),
+        slo,
+    }
+}
+
+/// One emitted measurement row.
+struct Row {
+    process: &'static str,
+    level: &'static str,
+    report: TrafficReport,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn row_json(r: &Row) -> String {
+    format!(
+        "    {{\"process\": \"{}\", \"level\": \"{}\", \"offered\": {}, \
+         \"offered_rps\": {:.1}, \"achieved_rps\": {:.1}, \"completed\": {}, \
+         \"shed\": {}, \"queue_full\": {}, \"expired\": {}, \"failed\": {}, \
+         \"p50_us\": {:.1}, \"p99_us\": {:.1}, \"p999_us\": {:.1}}}",
+        json_escape(r.process),
+        json_escape(r.level),
+        r.report.offered,
+        r.report.offered_rps(),
+        r.report.achieved_rps(),
+        r.report.completed,
+        r.report.shed,
+        r.report.queue_full,
+        r.report.expired,
+        r.report.failed,
+        r.report.percentile_us(50.0),
+        r.report.percentile_us(99.0),
+        r.report.percentile_us(99.9),
+    )
+}
+
+fn print_row(r: &Row) {
+    println!("   {:<8} {:<6} {}", r.process, r.level, r.report.summary());
+}
+
+fn main() {
+    println!("== serving under load (traffic harness vs SLO pool) ==");
+    let smoke = smoke_mode();
+    let duration_s = if smoke { 0.2 } else { 1.5 };
+
+    // -- registry: start with one warm model; the second registers later
+    // (cold-phase measurement). Budget fits both models' slabs.
+    let c = compiler();
+    let registry = Arc::new(ModelRegistry::with_budget(1 << 20));
+    let net_a = small_resnet();
+    let net_b = small_mobilenet();
+    let model_a = registry
+        .register(
+            net_a.name.clone(),
+            c.compile(net_a.clone(), RatioProfile::uniform(&net_a, 0.5)).unwrap(),
+        )
+        .unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(SEED);
+    let input_a = rng.normal_vec(model_a.input_len());
+
+    // SLO sized in queued-request units of model A's plan latency.
+    let slo = Duration::from_secs_f64(
+        model_a.latency_s() * SLO_QUEUE_REQUESTS / WORKERS as f64,
+    );
+    println!(
+        "   slo = {:.2} ms (≈{} queued requests at plan latency {:.1} µs)",
+        slo.as_secs_f64() * 1e3,
+        SLO_QUEUE_REQUESTS as u64,
+        model_a.latency_s() * 1e6
+    );
+    let pool = ServerPool::serve(
+        Arc::clone(&registry),
+        BackendKind::Simulator,
+        pool_config(Some(slo)),
+    )
+    .unwrap();
+
+    let class_a = || {
+        RequestClass::timing(net_a.name.clone())
+            .with_input(input_a.clone())
+            .with_weight(1.0)
+    };
+
+    // -- 1. capacity calibration (closed loop, one model, warm slabs).
+    let calib = run_closed_loop(
+        &pool,
+        &[class_a()],
+        2 * WORKERS,
+        if smoke { 50 } else { 400 },
+        SEED,
+    );
+    let capacity_rps = calib.achieved_rps();
+    // Open-loop pacing is sleep-based: beyond ~20 krps the scheduler
+    // cannot honour individual gaps, so clamp the rate the levels scale
+    // from (recorded separately in the JSON).
+    let paced_rps = capacity_rps.min(20_000.0);
+    println!(
+        "   capacity: {:.0} req/s closed-loop ({} clients); pacing from {:.0} req/s",
+        capacity_rps,
+        2 * WORKERS,
+        paced_rps
+    );
+    assert!(capacity_rps > 0.0, "calibration served nothing");
+    assert_eq!(
+        calib.shed + calib.expired,
+        0,
+        "closed loop at {} clients must never trip admission: {}",
+        2 * WORKERS,
+        calib.summary()
+    );
+
+    // -- 2. warm vs cold phases at mid load.
+    let mid = 0.5 * paced_rps;
+    let warm_spec = TrafficSpec {
+        process: ArrivalProcess::Poisson { rate_rps: mid },
+        duration_s,
+        seed: SEED + 1,
+        classes: vec![class_a()],
+    };
+    let mut rows = vec![Row {
+        process: "poisson",
+        level: "warm_single",
+        report: warm_spec.run_open_loop(&pool),
+    }];
+    print_row(&rows[0]);
+
+    let model_b = registry
+        .register(
+            net_b.name.clone(),
+            c.compile(net_b.clone(), RatioProfile::uniform(&net_b, 0.5)).unwrap(),
+        )
+        .unwrap();
+    let input_b = rng.normal_vec(model_b.input_len());
+    let class_b = || {
+        RequestClass::timing(net_b.name.clone())
+            .with_input(input_b.clone())
+            .with_weight(0.5)
+    };
+    let cold_spec = TrafficSpec {
+        process: ArrivalProcess::Poisson { rate_rps: mid },
+        duration_s,
+        seed: SEED + 2,
+        classes: vec![class_a(), class_b()],
+    };
+    rows.push(Row {
+        process: "poisson",
+        level: "cold_mix",
+        report: cold_spec.run_open_loop(&pool),
+    });
+    print_row(rows.last().unwrap());
+
+    // -- 3. offered-load grid: 3 processes × 3 levels, mixed two-model
+    // stream plus a deadline-carrying class (deadline = the SLO itself).
+    let mix = || {
+        vec![
+            class_a().with_weight(0.55),
+            class_b().with_weight(0.3),
+            class_a().with_weight(0.15).with_deadline(slo).with_priority(1),
+        ]
+    };
+    let processes: [(&'static str, Box<dyn Fn(f64) -> ArrivalProcess>); 3] = [
+        (
+            "poisson",
+            Box::new(|r| ArrivalProcess::Poisson { rate_rps: r }),
+        ),
+        (
+            "bursty",
+            Box::new(|r| ArrivalProcess::Bursty {
+                // Same long-run mean r: quiet at r/2, bursts at 5r/2,
+                // one mean burst per three phase lengths.
+                base_rps: 0.5 * r,
+                burst_rps: 2.5 * r,
+                mean_on_s: 0.05,
+                mean_off_s: 0.10,
+            }),
+        ),
+        (
+            "diurnal",
+            Box::new(|r| ArrivalProcess::Diurnal {
+                mean_rps: r,
+                period_s: 0.5,
+                swing: 0.8,
+            }),
+        ),
+    ];
+    let levels: [(&'static str, f64); 3] = [("low", 0.25), ("mid", 0.5), ("over", 1.2)];
+    for (pi, (pname, make)) in processes.iter().enumerate() {
+        for (li, (lname, frac)) in levels.iter().enumerate() {
+            let spec = TrafficSpec {
+                process: make(frac * paced_rps),
+                duration_s,
+                seed: SEED + 10 + (pi * levels.len() + li) as u64,
+                classes: mix(),
+            };
+            let report = spec.run_open_loop(&pool);
+            let row = Row {
+                process: *pname,
+                level: *lname,
+                report,
+            };
+            print_row(&row);
+            if *lname == "low" {
+                // CI gate: a quarter of capacity must never trip
+                // admission control or deadlines — shedding here means
+                // the queue-delay estimate (or EDF expiry sweep) broke.
+                assert_eq!(
+                    row.report.shed, 0,
+                    "{pname}/low shed {} requests: {}",
+                    row.report.shed,
+                    row.report.summary()
+                );
+                assert_eq!(
+                    row.report.expired, 0,
+                    "{pname}/low expired {} requests: {}",
+                    row.report.expired,
+                    row.report.summary()
+                );
+            }
+            rows.push(row);
+        }
+    }
+    let pm = pool.shutdown().unwrap();
+    println!("   grid pool: {}", pm.summary());
+
+    // -- 4. overload policy comparison on fresh pools: FIFO (no SLO)
+    // vs admission control, identical 1.5× overload stream.
+    let over_spec = |seed: u64| TrafficSpec {
+        process: ArrivalProcess::Poisson {
+            rate_rps: 1.5 * paced_rps,
+        },
+        duration_s,
+        seed,
+        classes: mix(),
+    };
+    let run_policy = |slo: Option<Duration>| -> (TrafficReport, PoolMetrics) {
+        let pool = ServerPool::serve(
+            Arc::clone(&registry),
+            BackendKind::Simulator,
+            pool_config(slo),
+        )
+        .unwrap();
+        let report = over_spec(SEED + 99).run_open_loop(&pool);
+        (report, pool.shutdown().unwrap())
+    };
+    let (fifo_report, fifo_pm) = run_policy(None);
+    let (slo_report, slo_pm) = run_policy(Some(slo));
+    let fifo_qd99 = fifo_pm.merged().queue_delay_percentile_us(99.0);
+    let slo_qd99 = slo_pm.merged().queue_delay_percentile_us(99.0);
+    println!(
+        "   overload 1.5×: FIFO queue-delay p99 {:.0} µs (shed {}), \
+         SLO queue-delay p99 {:.0} µs (shed {})",
+        fifo_qd99, fifo_report.shed, slo_qd99, slo_report.shed
+    );
+    assert_eq!(
+        fifo_report.shed, 0,
+        "a pool without an SLO must never shed: {}",
+        fifo_report.summary()
+    );
+
+    // -- JSON artifact.
+    let path = std::env::var("BENCH_SERVING_JSON")
+        .unwrap_or_else(|_| "BENCH_serving.json".to_string());
+    let mut out = String::from("{\n  \"bench\": \"serving-under-load\",\n");
+    out.push_str(&format!(
+        "  \"smoke\": {},\n  \"seed\": {},\n  \"workers\": {},\n  \
+         \"queue_depth\": {},\n  \"slo_ms\": {:.3},\n  \
+         \"capacity_rps\": {:.1},\n  \"paced_rps\": {:.1},\n  \"runs\": [\n",
+        smoke,
+        SEED,
+        WORKERS,
+        QUEUE_DEPTH,
+        slo.as_secs_f64() * 1e3,
+        capacity_rps,
+        paced_rps
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&row_json(r));
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n  \"overload_comparison\": {\n");
+    out.push_str(&format!(
+        "    \"offered_rps\": {:.1},\n    \"fifo_queue_delay_p99_us\": {:.1},\n    \
+         \"slo_queue_delay_p99_us\": {:.1},\n    \"fifo_shed\": {},\n    \
+         \"fifo_queue_full\": {},\n    \"slo_shed\": {},\n    \
+         \"slo_admitted_p99_us\": {:.1},\n    \"fifo_p99_us\": {:.1}\n  }}\n}}\n",
+        fifo_report.offered_rps(),
+        fifo_qd99,
+        slo_qd99,
+        fifo_report.shed,
+        fifo_report.queue_full,
+        slo_report.shed,
+        slo_report.percentile_us(99.0),
+        fifo_report.percentile_us(99.0),
+    ));
+    std::fs::write(&path, &out).expect("write BENCH_serving.json");
+    println!("   wrote {path}");
+}

@@ -7,11 +7,14 @@ use std::time::Duration;
 
 /// Collected request metrics: one global latency series plus a per-model
 /// series for every routed model id (requests with an empty model id —
-/// unrouted legacy pools — only count globally).
+/// unrouted legacy pools — only count globally), plus the queue-delay
+/// series the SLO scheduler is judged by (enqueue → pop, measured by the
+/// popping worker).
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     latencies_us: Vec<f64>,
     per_model: BTreeMap<String, Vec<f64>>,
+    queue_delay_us: Vec<f64>,
 }
 
 impl Metrics {
@@ -67,6 +70,33 @@ impl Metrics {
             .unwrap_or(0.0)
     }
 
+    /// Record the time one request spent queued before a worker popped it
+    /// (the quantity `PoolConfig::slo` bounds).
+    pub fn record_queue_delay(&mut self, d: Duration) {
+        self.queue_delay_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    /// Queue-delay samples recorded.
+    pub fn queue_delay_count(&self) -> usize {
+        self.queue_delay_us.len()
+    }
+
+    /// Mean queue delay (µs); 0 when none recorded.
+    pub fn queue_delay_mean_us(&self) -> f64 {
+        if self.queue_delay_us.is_empty() {
+            return 0.0;
+        }
+        stats::mean(&self.queue_delay_us)
+    }
+
+    /// Queue-delay percentile (µs); 0 when none recorded.
+    pub fn queue_delay_percentile_us(&self, p: f64) -> f64 {
+        if self.queue_delay_us.is_empty() {
+            return 0.0;
+        }
+        stats::percentile(&self.queue_delay_us, p)
+    }
+
     /// Fold another collector's samples into this one (used to aggregate
     /// per-worker metrics across a server pool).
     pub fn merge(&mut self, other: &Metrics) {
@@ -75,6 +105,7 @@ impl Metrics {
             let series = self.per_model.entry(model.clone()).or_default();
             series.extend_from_slice(v);
         }
+        self.queue_delay_us.extend_from_slice(&other.queue_delay_us);
     }
 
     /// Mean latency in microseconds.
@@ -97,7 +128,8 @@ impl Metrics {
         }
     }
 
-    /// One-line summary (global, then one clause per routed model).
+    /// One-line summary (global, queue delay when recorded, then one
+    /// clause per routed model).
     pub fn summary(&self) -> String {
         let mut s = format!(
             "n={} mean={:.1}µs p50={:.1}µs p99={:.1}µs throughput={:.1}/s",
@@ -107,6 +139,13 @@ impl Metrics {
             self.percentile_us(99.0),
             self.throughput()
         );
+        if !self.queue_delay_us.is_empty() {
+            s.push_str(&format!(
+                " qd_p50={:.1}µs qd_p99={:.1}µs",
+                self.queue_delay_percentile_us(50.0),
+                self.queue_delay_percentile_us(99.0)
+            ));
+        }
         for (model, v) in &self.per_model {
             s.push_str(&format!(
                 " | {model}: n={} p50={:.1}µs p99={:.1}µs",
@@ -159,5 +198,25 @@ mod tests {
         assert_eq!(a.model_count("sqn"), 2);
         let s = a.summary();
         assert!(s.contains("r18:") && s.contains("sqn:"), "{s}");
+    }
+
+    #[test]
+    fn queue_delay_series_records_and_merges() {
+        let mut a = Metrics::new();
+        assert_eq!(a.queue_delay_count(), 0);
+        assert_eq!(a.queue_delay_percentile_us(99.0), 0.0);
+        assert!(!a.summary().contains("qd_p50"), "no clause without samples");
+        a.record_queue_delay(Duration::from_micros(100));
+        a.record_queue_delay(Duration::from_micros(300));
+        assert_eq!(a.queue_delay_count(), 2);
+        assert!((a.queue_delay_mean_us() - 200.0).abs() < 1.0);
+        assert!(a.queue_delay_percentile_us(99.0) >= a.queue_delay_percentile_us(50.0));
+        assert!(a.summary().contains("qd_p99"), "{}", a.summary());
+        let mut b = Metrics::new();
+        b.record_queue_delay(Duration::from_micros(500));
+        a.merge(&b);
+        assert_eq!(a.queue_delay_count(), 3);
+        // Latency and queue-delay series stay independent.
+        assert_eq!(a.count(), 0);
     }
 }

@@ -14,17 +14,29 @@
 //! [`EngineBuilder::build_pool`](crate::engine::EngineBuilder::build_pool),
 //! a thin adapter over the same path; custom executors use
 //! [`pool::ServerPool::start`].
+//!
+//! Serving is also **SLO-aware**: requests may carry deadlines and
+//! priorities ([`server::Request`] builder extensions), the pool pops
+//! batches earliest-deadline-first ([`scheduler`]), admission control
+//! sheds load with [`Error::Overloaded`](crate::Error::Overloaded) once
+//! estimated queue delay exceeds [`pool::PoolConfig::slo`], and the
+//! [`traffic`] module generates deterministic open/closed-loop request
+//! streams (Poisson / bursty / diurnal) to measure tail latency under
+//! offered load (`benches/serving.rs` → `BENCH_serving.json`).
 
 pub mod metrics;
 pub mod multi_model;
 pub mod multi_tenant;
+pub mod plan;
 pub mod pool;
 pub mod registry;
 pub mod scheduler;
 pub mod server;
+pub mod traffic;
 
 pub use metrics::Metrics;
+pub use plan::InferencePlan;
 pub use pool::{PoolConfig, PoolMetrics, RequestExecutor, ResponseHandle, ServerPool};
 pub use registry::ModelRegistry;
-pub use scheduler::InferencePlan;
 pub use server::{Request, Response};
+pub use traffic::{ArrivalProcess, RequestClass, TrafficReport, TrafficSpec};

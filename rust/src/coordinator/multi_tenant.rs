@@ -30,7 +30,7 @@ use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::server::Request;
 use crate::engine::compile::Compiler;
 use crate::engine::BackendKind;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::util::prng::Xoshiro256;
 use crate::workload::{Network, RatioProfile};
 
@@ -51,6 +51,13 @@ pub struct CoLocationConfig {
     pub workers: usize,
     /// Pool max batch size.
     pub max_batch: usize,
+    /// Queue-delay SLO applied to every level's pool. When set, the
+    /// sweep's submission loop treats typed
+    /// [`Error::Overloaded`](crate::Error::Overloaded) shedding as an
+    /// expected QoS outcome (counted in [`TenantReport::shed`]) rather
+    /// than a sweep failure. `None` (the default) blocks on a full queue —
+    /// the pre-v0.4 behaviour.
+    pub slo: Option<std::time::Duration>,
 }
 
 impl Default for CoLocationConfig {
@@ -62,6 +69,7 @@ impl Default for CoLocationConfig {
             slab_budget: 8 << 20,
             workers: 2,
             max_batch: 4,
+            slo: None,
         }
     }
 }
@@ -106,6 +114,13 @@ pub struct TenantReport {
     pub cache_evictions: u64,
     /// Peak resident generated-weight bytes (must stay ≤ the budget).
     pub peak_resident_bytes: usize,
+    /// Requests shed by SLO admission control at this level (always 0 when
+    /// [`CoLocationConfig::slo`] is `None`).
+    pub shed: u64,
+    /// Requests failed with a deadline expiry at this level.
+    pub expired: u64,
+    /// p99 queue delay (µs) of the requests actually served at this level.
+    pub queue_delay_p99_us: f64,
 }
 
 impl TenantReport {
@@ -156,16 +171,27 @@ pub fn co_location_sweep(
                 queue_depth: 256,
                 max_batch: cfg.max_batch,
                 linger: std::time::Duration::from_micros(200),
+                slo: cfg.slo,
             },
         )?;
         // Interleaved traffic: round-robin across the co-located models so
         // the pool's model-pure batcher and switch accounting are
         // exercised the way adversarial multi-tenant traffic would.
         let mut handles = Vec::new();
+        // Under an SLO, typed shedding is a QoS outcome of the sweep (the
+        // pool counts it per model), not an error that aborts the level.
+        let mut submit = |req: Request, handles: &mut Vec<_>| -> Result<()> {
+            match pool.submit(req) {
+                Ok(h) => handles.push(h),
+                Err(Error::Overloaded { .. }) | Err(Error::DeadlineExceeded { .. }) => {}
+                Err(e) => return Err(e),
+            }
+            Ok(())
+        };
         let mut id = 0u64;
         for _ in 0..cfg.timing_requests {
             for net in nets {
-                handles.push(pool.submit(Request::for_model(id, net.name.clone(), vec![]))?);
+                submit(Request::for_model(id, net.name.clone(), vec![]), &mut handles)?;
                 id += 1;
             }
         }
@@ -176,11 +202,10 @@ pub fn co_location_sweep(
             .collect::<Result<_>>()?;
         for _ in 0..cfg.numeric_requests {
             for (net, &input_len) in nets.iter().zip(&input_lens) {
-                handles.push(pool.submit(Request::for_model(
-                    id,
-                    net.name.clone(),
-                    rng.normal_vec(input_len),
-                ))?);
+                submit(
+                    Request::for_model(id, net.name.clone(), rng.normal_vec(input_len)),
+                    &mut handles,
+                )?;
                 id += 1;
             }
         }
@@ -199,6 +224,9 @@ pub fn co_location_sweep(
             cache_misses: cache.misses(),
             cache_evictions: cache.evictions(),
             peak_resident_bytes: cache.peak_resident_bytes(),
+            shed: pm.total_shed(),
+            expired: pm.expired,
+            queue_delay_p99_us: pm.merged().queue_delay_percentile_us(99.0),
         });
     }
     Ok(out)
@@ -287,6 +315,7 @@ mod tests {
             // traffic deterministically forces plan switches.
             workers: 1,
             max_batch: 4,
+            slo: None,
         };
         let reports = co_location_sweep(&Platform::z7045(), 4, &[a, b], &cfg).unwrap();
         assert_eq!(reports.len(), 2);
@@ -301,6 +330,35 @@ mod tests {
                 cfg.slab_budget
             );
             assert!(r.model_switches > 0, "interleaved traffic must switch");
+            assert_eq!(r.shed, 0, "no SLO configured ⇒ nothing sheds");
+            assert_eq!(r.expired, 0);
+        }
+    }
+
+    #[test]
+    fn slo_sweep_sheds_typed_and_accounts_every_request() {
+        // A 1 ns queue-delay SLO: any request that arrives while another
+        // is still queued sheds. How many shed depends on worker pacing,
+        // but the accounting identity — every offered request either
+        // served or shed, never lost, never hanging — must hold at every
+        // co-location level, and the sweep itself must not error.
+        let net = resnet::resnet18();
+        let cfg = CoLocationConfig {
+            max_tenants: 2,
+            timing_requests: 8,
+            workers: 1,
+            slo: Some(std::time::Duration::from_nanos(1)),
+            ..CoLocationConfig::default()
+        };
+        let reports = co_location_sweep(&Platform::zu7ev(), 8, &[net], &cfg).unwrap();
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            assert_eq!(
+                r.requests_served as u64 + r.shed,
+                8,
+                "served + shed must cover the 8 offered requests"
+            );
+            assert_eq!(r.expired, 0, "no deadlines in this traffic");
         }
     }
 }

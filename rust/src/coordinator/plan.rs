@@ -1,0 +1,136 @@
+//! Per-layer inference planning: maps a network + ratio profile onto a
+//! design point, precomputing each layer's weights-generation budget and
+//! pipeline stage estimates. The plan is the admission-time schedule inside
+//! every [`EnginePlan`](crate::engine::EnginePlan): the
+//! [`ServerPool`](crate::coordinator::pool::ServerPool) serves it per
+//! request, and backends charge its per-layer costs when they do not walk
+//! their own (simulator traces, PJRT passthrough layers). The plan's
+//! [`latency_s`](InferencePlan::latency_s) is also the admission-control
+//! service estimate the pool's SLO scheduler
+//! ([`scheduler`](crate::coordinator::scheduler)) prices queued requests
+//! with.
+//!
+//! Construct plans through
+//! [`Engine::builder()`](crate::engine::Engine::builder)`.plan()`, which
+//! validates the configuration first; `InferencePlan::build` stays as the
+//! unchecked primitive.
+//!
+//! (Until v0.4 this module was `coordinator::scheduler`; it holds costing,
+//! not scheduling, so it was renamed — the deprecated aliases under the
+//! old path keep external callers compiling.)
+
+use crate::arch::{DesignPoint, Platform};
+use crate::perf::model::{PerfModel, WeightsSource};
+use crate::perf::Bound;
+use crate::workload::{Network, RatioProfile};
+
+/// One planned layer.
+#[derive(Clone, Debug)]
+pub struct PlannedLayer {
+    /// Layer name.
+    pub name: String,
+    /// Weights source at run time.
+    pub source: WeightsSource,
+    /// Estimated total cycles.
+    pub cycles: f64,
+    /// Dominating pipeline stage.
+    pub bound: Bound,
+}
+
+/// A full inference plan for a CNN on a design point.
+#[derive(Clone, Debug)]
+pub struct InferencePlan {
+    /// Network name.
+    pub network: String,
+    /// Design point executed.
+    pub sigma: DesignPoint,
+    /// Ordered layer plans.
+    pub layers: Vec<PlannedLayer>,
+    /// Total estimated cycles per inference.
+    pub total_cycles: f64,
+    /// Estimated latency in seconds at the platform clock.
+    pub latency_s: f64,
+}
+
+impl InferencePlan {
+    /// Build the plan with the analytical model (the host's admission-time
+    /// costing; the simulator/runtime then execute it).
+    pub fn build(
+        platform: &Platform,
+        bw_mult: u32,
+        sigma: DesignPoint,
+        net: &Network,
+        profile: &RatioProfile,
+    ) -> Self {
+        let model = PerfModel::new(platform.clone(), bw_mult);
+        let perf = model.network_perf(&sigma, net, profile);
+        let layers = net
+            .layers
+            .iter()
+            .enumerate()
+            .zip(&perf.layers)
+            .map(|((i, l), lp)| PlannedLayer {
+                name: l.name.clone(),
+                source: if l.ovsf {
+                    WeightsSource::OnTheFly {
+                        rho: profile.rho(i),
+                    }
+                } else {
+                    WeightsSource::OffChip
+                },
+                cycles: lp.total_cycles,
+                bound: lp.bound,
+            })
+            .collect();
+        InferencePlan {
+            network: net.name.clone(),
+            sigma,
+            layers,
+            total_cycles: perf.total_cycles,
+            latency_s: perf.total_cycles / platform.clock_hz,
+        }
+    }
+
+    /// Layers generated on the fly.
+    pub fn n_otf_layers(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.source, WeightsSource::OnTheFly { .. }))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::resnet;
+
+    #[test]
+    fn plan_covers_all_layers() {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let plan = InferencePlan::build(
+            &Platform::z7045(),
+            4,
+            DesignPoint::new(64, 64, 16, 48),
+            &net,
+            &profile,
+        );
+        assert_eq!(plan.layers.len(), net.layers.len());
+        assert!(plan.total_cycles > 0.0);
+        assert!(plan.latency_s > 0.0);
+        // All 16 block convs are on-the-fly.
+        assert_eq!(plan.n_otf_layers(), 16);
+    }
+
+    #[test]
+    fn latency_consistent_with_cycles() {
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf25(&net);
+        let plat = Platform::z7045();
+        let plan = InferencePlan::build(&plat, 2, DesignPoint::new(64, 64, 16, 48), &net, &profile);
+        assert!((plan.latency_s * plat.clock_hz - plan.total_cycles).abs() < 1.0);
+        let sum: f64 = plan.layers.iter().map(|l| l.cycles).sum();
+        assert!((sum - plan.total_cycles).abs() < 1e-6 * plan.total_cycles);
+    }
+}

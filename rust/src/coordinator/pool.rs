@@ -44,14 +44,31 @@
 //! timing-only request; a wrong-length input on an unrouted (legacy
 //! [`start`](ServerPool::start)) pool resolves that request's handle to an
 //! error without disturbing the worker or its batchmates.
+//!
+//! **SLO-aware scheduling** (see
+//! [`scheduler`](crate::coordinator::scheduler) for the policy): requests
+//! may carry a deadline and a priority; batches pop highest-priority /
+//! earliest-deadline-first (model-purity preserved — the batch is the
+//! maximal same-model *prefix* of the sorted queue, so nothing is skipped
+//! over); a queued request whose deadline passes is failed fast with
+//! [`Error::DeadlineExceeded`](crate::Error::DeadlineExceeded) instead of
+//! occupying a batch slot; and when [`PoolConfig::slo`] is set, `submit`
+//! sheds with [`Error::Overloaded`](crate::Error::Overloaded) once the
+//! estimated queue delay (queued per-model
+//! [`latency_s`](crate::coordinator::plan::InferencePlan::latency_s)
+//! estimates ÷ workers) exceeds it — bounding the tail latency of
+//! *admitted* requests instead of letting queue delay grow without bound.
+//! Requests with no deadline/priority on a pool with no SLO behave exactly
+//! as before v0.4 (FIFO, block-on-full).
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::plan::InferencePlan;
 use crate::coordinator::registry::ModelRegistry;
-use crate::coordinator::scheduler::InferencePlan;
+use crate::coordinator::scheduler::{self, SchedKey};
 use crate::coordinator::server::{Request, Response};
 use crate::error::{Error, Result};
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -68,6 +85,16 @@ pub struct PoolConfig {
     /// How long a worker waits for more requests after the first request
     /// of a batch arrives.
     pub linger: Duration,
+    /// Queue-delay SLO for admission control. When set, `submit` /
+    /// `try_submit` shed with
+    /// [`Error::Overloaded`](crate::Error::Overloaded) once the estimated
+    /// queue delay — the sum of queued requests' per-model service
+    /// estimates ([`InferencePlan::latency_s`]) divided by `workers` —
+    /// exceeds this bound, so the tail latency of *admitted* requests
+    /// stays bounded under overload. `None` (the default) disables
+    /// shedding: the pool blocks on a full queue, exactly the pre-v0.4
+    /// behaviour.
+    pub slo: Option<Duration>,
 }
 
 impl Default for PoolConfig {
@@ -77,6 +104,7 @@ impl Default for PoolConfig {
             queue_depth: 256,
             max_batch: 8,
             linger: Duration::from_millis(1),
+            slo: None,
         }
     }
 }
@@ -89,6 +117,7 @@ impl PoolConfig {
             queue_depth: 64,
             max_batch: 1,
             linger: Duration::ZERO,
+            slo: None,
         }
     }
 
@@ -98,6 +127,13 @@ impl PoolConfig {
                 "PoolConfig: workers ({}), queue_depth ({}) and max_batch ({}) must all be ≥ 1",
                 self.workers, self.queue_depth, self.max_batch
             )));
+        }
+        if self.slo == Some(Duration::ZERO) {
+            return Err(Error::InvalidConfig(
+                "PoolConfig: slo must be > 0 when set (use None to disable \
+                 admission control)"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -169,11 +205,33 @@ impl ResponseHandle {
 struct Job {
     req: Request,
     reply: mpsc::Sender<Result<Response>>,
+    /// Admission-time service estimate for this request (seconds) — the
+    /// routed model's plan latency. Summed into `QueueState::est_s` while
+    /// queued so admission control can estimate queue delay.
+    est_s: f64,
+    /// When the request entered the queue (queue-delay observability).
+    enqueued_at: Instant,
+    /// Arrival sequence number — the FIFO tie-breaker of [`SchedKey`].
+    seq: u64,
+}
+
+impl Job {
+    fn key(&self) -> SchedKey {
+        SchedKey {
+            priority: self.req.priority,
+            deadline: self.req.deadline,
+            seq: self.seq,
+        }
+    }
 }
 
 struct QueueState {
     jobs: VecDeque<Job>,
     closed: bool,
+    /// Sum of queued jobs' service estimates (seconds). Kept incrementally
+    /// (clamped ≥ 0 against float drift) so admission is O(1).
+    est_s: f64,
+    next_seq: u64,
 }
 
 struct PoolShared {
@@ -181,7 +239,13 @@ struct PoolShared {
     not_empty: Condvar,
     not_full: Condvar,
     capacity: usize,
+    workers: usize,
     alive_workers: AtomicUsize,
+    /// Requests shed by admission control, keyed by concrete model id
+    /// (`"(default)"` for unrouted requests).
+    shed: Mutex<BTreeMap<String, u64>>,
+    /// Requests whose deadline had already expired at submission.
+    submit_expired: AtomicU64,
 }
 
 fn lock_state(shared: &PoolShared) -> MutexGuard<'_, QueueState> {
@@ -204,6 +268,10 @@ pub struct WorkerReport {
     pub max_batch: usize,
     /// Model switches (active-plan swaps) this worker performed.
     pub model_switches: u64,
+    /// Queued requests this worker failed fast with
+    /// [`Error::DeadlineExceeded`](crate::Error::DeadlineExceeded) because
+    /// their deadline passed before they were popped.
+    pub expired: u64,
 }
 
 /// Aggregated pool statistics returned by [`ServerPool::shutdown`].
@@ -213,6 +281,14 @@ pub struct PoolMetrics {
     pub per_worker: Vec<WorkerReport>,
     /// Workers that panicked instead of reporting.
     pub panicked_workers: usize,
+    /// Requests shed by SLO admission control, per concrete model id
+    /// (`"(default)"` = unrouted). Empty when [`PoolConfig::slo`] is
+    /// `None` or the pool never saturated.
+    pub shed_by_model: BTreeMap<String, u64>,
+    /// Requests failed with
+    /// [`Error::DeadlineExceeded`](crate::Error::DeadlineExceeded):
+    /// already expired at submission, or expired while queued.
+    pub expired: u64,
 }
 
 impl PoolMetrics {
@@ -248,15 +324,23 @@ impl PoolMetrics {
         self.per_worker.iter().map(|w| w.model_switches).sum()
     }
 
-    /// One-line summary (global + per-model latencies, batching, switches).
+    /// Requests shed by SLO admission control, across all models.
+    pub fn total_shed(&self) -> u64 {
+        self.shed_by_model.values().sum()
+    }
+
+    /// One-line summary (global + per-model latencies, batching, switches,
+    /// SLO shed/expired counts).
     pub fn summary(&self) -> String {
         format!(
-            "workers={} {} batches={} max_batch={} model_switches={}",
+            "workers={} {} batches={} max_batch={} model_switches={} shed={} expired={}",
             self.per_worker.len(),
             self.merged().summary(),
             self.total_batches(),
             self.max_batch(),
-            self.model_switches()
+            self.model_switches(),
+            self.total_shed(),
+            self.expired
         )
     }
 }
@@ -270,6 +354,11 @@ pub struct ServerPool {
     plan: Option<InferencePlan>,
     /// The model registry this pool routes over, when registry-backed.
     registry: Option<Arc<ModelRegistry>>,
+    /// Queue-delay SLO for admission control (`None` = never shed).
+    slo: Option<Duration>,
+    /// Service estimate for requests on legacy single-plan pools (the
+    /// plan's latency; registry pools estimate per routed model).
+    fallback_latency_s: f64,
 }
 
 impl ServerPool {
@@ -303,11 +392,16 @@ impl ServerPool {
             state: Mutex::new(QueueState {
                 jobs: VecDeque::with_capacity(cfg.queue_depth),
                 closed: false,
+                est_s: 0.0,
+                next_seq: 0,
             }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             capacity: cfg.queue_depth,
+            workers: cfg.workers,
             alive_workers: AtomicUsize::new(cfg.workers),
+            shed: Mutex::new(BTreeMap::new()),
+            submit_expired: AtomicU64::new(0),
         });
         let factory = Arc::new(factory);
         let fallback_latency_s = plan.as_ref().map(|p| p.latency_s).unwrap_or(0.0);
@@ -328,6 +422,8 @@ impl ServerPool {
             workers,
             plan,
             registry,
+            slo: cfg.slo,
+            fallback_latency_s,
         })
     }
 
@@ -348,10 +444,13 @@ impl ServerPool {
     /// group on it) and check the input length against the compiled
     /// artifact. Fail-fast typed errors:
     /// [`Error::UnknownModel`](crate::Error::UnknownModel) /
-    /// [`Error::ShapeMismatch`](crate::Error::ShapeMismatch).
-    fn admit(&self, req: &mut Request) -> Result<()> {
+    /// [`Error::ShapeMismatch`](crate::Error::ShapeMismatch). Returns the
+    /// request's service estimate (seconds) — the routed model's plan
+    /// latency, or the pool plan's latency on legacy pools — which feeds
+    /// the SLO queue-delay estimate.
+    fn admit(&self, req: &mut Request) -> Result<f64> {
         let Some(reg) = &self.registry else {
-            return Ok(());
+            return Ok(self.fallback_latency_s);
         };
         let (id, model) = reg.resolve(&req.model)?;
         if !req.input.is_empty() && req.input.len() != model.input_len() {
@@ -364,17 +463,65 @@ impl ServerPool {
             )));
         }
         req.model = id;
+        Ok(model.latency_s())
+    }
+
+    /// Fail fast when the request's deadline has already passed, counting
+    /// it as expired.
+    fn reject_expired(&self, req: &Request) -> Result<()> {
+        if let Some(d) = req.deadline {
+            let now = Instant::now();
+            if now >= d {
+                self.shared.submit_expired.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::DeadlineExceeded {
+                    late_by: now.saturating_duration_since(d),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// SLO admission check under the queue lock: `Err(Overloaded)` when
+    /// the estimated queue delay exceeds the configured SLO. Checked
+    /// *before* any block-on-full wait — an overloaded pool sheds
+    /// immediately rather than parking the client.
+    fn check_slo(&self, st: &QueueState, model: &str) -> Result<()> {
+        let Some(slo) = self.slo else {
+            return Ok(());
+        };
+        let queue_delay = scheduler::estimated_queue_delay(st.est_s, self.shared.workers);
+        if queue_delay > slo {
+            let key = if model.is_empty() {
+                "(default)".to_string()
+            } else {
+                model.to_string()
+            };
+            let mut shed = self
+                .shared
+                .shed
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            *shed.entry(key).or_insert(0) += 1;
+            return Err(Error::Overloaded { queue_delay, slo });
+        }
         Ok(())
     }
 
     /// Enqueue a request, blocking while the queue is full (backpressure),
     /// and return a handle to its future response. Does **not** wait for
     /// execution. On registry-routed pools the request is validated first
-    /// (typed errors for unknown model ids and wrong input lengths).
+    /// (typed errors for unknown model ids and wrong input lengths); a
+    /// request whose deadline already passed fails fast with
+    /// [`Error::DeadlineExceeded`](crate::Error::DeadlineExceeded); and
+    /// when [`PoolConfig::slo`] is set, admission control sheds with
+    /// [`Error::Overloaded`](crate::Error::Overloaded) instead of
+    /// blocking once the estimated queue delay exceeds the SLO.
     pub fn submit(&self, mut req: Request) -> Result<ResponseHandle> {
-        self.admit(&mut req)?;
+        let est_s = self.admit(&mut req)?;
+        self.reject_expired(&req)?;
         let (reply, rx) = mpsc::channel();
         let mut st = lock_state(&self.shared);
+        self.check_slo(&st, &req.model)?;
         while st.jobs.len() >= self.shared.capacity && !st.closed {
             st = self
                 .shared
@@ -385,25 +532,29 @@ impl ServerPool {
         if st.closed {
             return Err(Error::PoolShutdown);
         }
-        st.jobs.push_back(Job { req, reply });
+        push_job(&mut st, req, reply, est_s);
         drop(st);
         self.shared.not_empty.notify_one();
         Ok(ResponseHandle { rx })
     }
 
     /// Enqueue without blocking: [`Error::QueueFull`] when the bounded
-    /// queue is at capacity.
+    /// queue is at capacity,
+    /// [`Error::Overloaded`](crate::Error::Overloaded) when the SLO
+    /// admission check sheds first.
     pub fn try_submit(&self, mut req: Request) -> Result<ResponseHandle> {
-        self.admit(&mut req)?;
+        let est_s = self.admit(&mut req)?;
+        self.reject_expired(&req)?;
         let (reply, rx) = mpsc::channel();
         let mut st = lock_state(&self.shared);
         if st.closed {
             return Err(Error::PoolShutdown);
         }
+        self.check_slo(&st, &req.model)?;
         if st.jobs.len() >= self.shared.capacity {
             return Err(Error::QueueFull);
         }
-        st.jobs.push_back(Job { req, reply });
+        push_job(&mut st, req, reply, est_s);
         drop(st);
         self.shared.not_empty.notify_one();
         Ok(ResponseHandle { rx })
@@ -432,9 +583,19 @@ impl ServerPool {
         if per_worker.is_empty() && panicked_workers > 0 {
             return Err(Error::Coordinator("every pool worker panicked".into()));
         }
+        let shed_by_model = self
+            .shared
+            .shed
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone();
+        let expired = self.shared.submit_expired.load(Ordering::Relaxed)
+            + per_worker.iter().map(|w| w.expired).sum::<u64>();
         Ok(PoolMetrics {
             per_worker,
             panicked_workers,
+            shed_by_model,
+            expired,
         })
     }
 
@@ -481,32 +642,103 @@ impl Drop for AliveGuard {
     }
 }
 
-/// Pop a **model-pure** batch: block for the first request, then gather up
-/// to `max_batch − 1` more of the *same model id* within `linger`. A
-/// queued request for a different model ends the batch immediately (it
-/// stays at the queue head — FIFO order across models is preserved, so a
-/// minority model cannot be starved). `None` once the queue is closed
-/// *and* drained.
-fn pop_batch(shared: &PoolShared, max_batch: usize, linger: Duration) -> Option<Vec<Job>> {
+/// Append a job to the queue, assigning its arrival sequence number and
+/// folding its service estimate into the admission-control sum.
+fn push_job(st: &mut QueueState, req: Request, reply: mpsc::Sender<Result<Response>>, est_s: f64) {
+    let seq = st.next_seq;
+    st.next_seq += 1;
+    st.est_s += est_s.max(0.0);
+    st.jobs.push_back(Job {
+        req,
+        reply,
+        est_s,
+        enqueued_at: Instant::now(),
+        seq,
+    });
+}
+
+/// Remove the job at `i`, keeping the queued-service sum consistent.
+fn take_job(st: &mut QueueState, i: usize) -> Job {
+    let job = st.jobs.remove(i).expect("index in range");
+    st.est_s = (st.est_s - job.est_s).max(0.0);
+    job
+}
+
+/// Index of the scheduling-best queued job (smallest [`SchedKey`]:
+/// highest priority, then earliest deadline, then arrival order). For
+/// all-default requests this is always index 0 — plain FIFO.
+fn best_idx(jobs: &VecDeque<Job>) -> Option<usize> {
+    let mut best: Option<(usize, SchedKey)> = None;
+    for (i, j) in jobs.iter().enumerate() {
+        let k = j.key();
+        match best {
+            Some((_, bk)) if bk <= k => {}
+            _ => best = Some((i, k)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Fail every queued job whose deadline has passed with
+/// [`Error::DeadlineExceeded`] — it is cheaper to answer "too late" now
+/// than to spend a batch slot computing an answer nobody is waiting for.
+fn sweep_expired(shared: &PoolShared, st: &mut QueueState, expired: &mut u64) {
+    let now = Instant::now();
+    let mut i = 0;
+    let mut dropped = false;
+    while i < st.jobs.len() {
+        match st.jobs[i].req.deadline {
+            Some(d) if now >= d => {
+                let job = take_job(st, i);
+                *expired += 1;
+                dropped = true;
+                let _ = job.reply.send(Err(Error::DeadlineExceeded {
+                    late_by: now.saturating_duration_since(d),
+                }));
+            }
+            _ => i += 1,
+        }
+    }
+    if dropped {
+        shared.not_full.notify_all();
+    }
+}
+
+/// Pop a **model-pure** batch in scheduling order: expire overdue jobs,
+/// seed the batch with the best-keyed queued job (highest priority /
+/// earliest deadline / FIFO — see [`SchedKey`]), then gather up to
+/// `max_batch − 1` more within `linger`, absorbing the *next-best* job
+/// only while it names the same model. When the next-best job names a
+/// different model the batch ends — that job keeps its place and seeds
+/// the very next batch, so a minority model cannot be starved even under
+/// deadline pressure. For all-default requests the key order *is* arrival
+/// order, making this byte-for-byte the pre-v0.4 FIFO batcher. `None`
+/// once the queue is closed *and* drained.
+fn pop_batch(
+    shared: &PoolShared,
+    max_batch: usize,
+    linger: Duration,
+    expired: &mut u64,
+) -> Option<Vec<Job>> {
     let mut st = lock_state(shared);
     loop {
-        if let Some(first) = st.jobs.pop_front() {
+        sweep_expired(shared, &mut st, expired);
+        if let Some(i) = best_idx(&st.jobs) {
+            let first = take_job(&mut st, i);
             let mut batch = vec![first];
             let deadline = Instant::now() + linger;
             while batch.len() < max_batch {
-                let head_matches = st
-                    .jobs
-                    .front()
-                    .map(|next| next.req.model == batch[0].req.model);
-                match head_matches {
-                    Some(true) => {
-                        let job = st.jobs.pop_front().expect("front just observed");
+                sweep_expired(shared, &mut st, expired);
+                match best_idx(&st.jobs) {
+                    Some(i) if st.jobs[i].req.model == batch[0].req.model => {
+                        let job = take_job(&mut st, i);
                         batch.push(job);
                         continue;
                     }
-                    // A different model at the head: the batch must not mix
-                    // models — leave it queued and execute what we have.
-                    Some(false) => break,
+                    // The next-best job names a different model: the batch
+                    // must not mix models — leave it queued (it seeds the
+                    // next batch) and execute what we have.
+                    Some(_) => break,
                     None => {}
                 }
                 if st.closed {
@@ -549,10 +781,17 @@ fn worker_loop<E: RequestExecutor>(
     let mut metrics = Metrics::new();
     let mut batches = 0u64;
     let mut largest = 0usize;
-    while let Some(jobs) = pop_batch(shared, max_batch, linger) {
+    let mut expired = 0u64;
+    while let Some(jobs) = pop_batch(shared, max_batch, linger, &mut expired) {
+        let popped_at = Instant::now();
         let n = jobs.len();
-        let (reqs, replies): (Vec<Request>, Vec<mpsc::Sender<Result<Response>>>) =
-            jobs.into_iter().map(|j| (j.req, j.reply)).unzip();
+        let mut reqs = Vec::with_capacity(n);
+        let mut replies = Vec::with_capacity(n);
+        for j in jobs {
+            metrics.record_queue_delay(popped_at.saturating_duration_since(j.enqueued_at));
+            reqs.push(j.req);
+            replies.push(j.reply);
+        }
         let start = Instant::now();
         let mut outs = exec.execute_batch(&reqs).into_iter();
         let per_req = start.elapsed() / n as u32;
@@ -583,6 +822,7 @@ fn worker_loop<E: RequestExecutor>(
         batches,
         max_batch: largest,
         model_switches: exec.model_switches(),
+        expired,
     }
 }
 
@@ -634,6 +874,7 @@ mod tests {
             queue_depth: 64,
             max_batch: 8,
             linger: Duration::from_millis(20),
+            slo: None,
         };
         let pool = ServerPool::start(plan(), cfg, echo_executor).unwrap();
         let handles: Vec<_> = (0..32u64)
@@ -688,6 +929,7 @@ mod tests {
             queue_depth: 64,
             max_batch: 4,
             linger: Duration::from_millis(5),
+            slo: None,
         };
         let pool = ServerPool::start(plan(), cfg, move |_| Recording {
             gate: Arc::clone(&g2),
@@ -747,6 +989,7 @@ mod tests {
             queue_depth: 2,
             max_batch: 1,
             linger: Duration::ZERO,
+            slo: None,
         };
         let pool = ServerPool::start(plan(), cfg, move |_| {
             let gate = Arc::clone(&g2);
@@ -795,6 +1038,7 @@ mod tests {
             queue_depth: 64,
             max_batch: 4,
             linger: Duration::from_millis(1),
+            slo: None,
         };
         let pool = ServerPool::start(plan(), cfg, |_| {
             |req: &Request| {
@@ -855,5 +1099,96 @@ mod tests {
     fn drop_does_not_hang() {
         let pool = ServerPool::start(plan(), PoolConfig::default(), echo_executor).unwrap();
         drop(pool);
+    }
+
+    #[test]
+    fn submit_rejects_already_expired_deadline() {
+        let pool = ServerPool::start(plan(), PoolConfig::single_worker(), echo_executor).unwrap();
+        let stale =
+            Request::timing(1).with_deadline(Instant::now() - Duration::from_millis(5));
+        let err = pool.submit(stale).err().expect("expired must be rejected");
+        assert!(matches!(err, Error::DeadlineExceeded { .. }), "typed: {err}");
+        // A live deadline is admitted normally.
+        let ok = pool
+            .submit(Request::timing(2).with_timeout(Duration::from_secs(30)))
+            .unwrap();
+        ok.wait().unwrap();
+        let pm = pool.shutdown().unwrap();
+        assert_eq!(pm.expired, 1, "submission-time expiry must be counted");
+        assert_eq!(pm.total_shed(), 0);
+        assert!(pm.summary().contains("expired=1"), "{}", pm.summary());
+    }
+
+    #[test]
+    fn slo_admission_sheds_overload_with_typed_error() {
+        // Gate the single worker so one request is in flight and one more
+        // sits queued; with an SLO far below the plan latency the third
+        // submission must shed instead of queueing behind it.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        let cfg = PoolConfig {
+            workers: 1,
+            queue_depth: 64,
+            max_batch: 1,
+            linger: Duration::ZERO,
+            slo: Some(Duration::from_nanos(1)),
+        };
+        let pool = ServerPool::start(plan(), cfg, move |_| {
+            let gate = Arc::clone(&g2);
+            move |req: &Request| {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                vec![req.id as f32]
+            }
+        })
+        .unwrap();
+        let h0 = pool.submit(Request::timing(0)).unwrap();
+        // Wait until the worker has popped request 0 (queue empty again):
+        // the queued-service estimate is then exactly zero.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while pool.queue_len() > 0 {
+            assert!(Instant::now() < deadline, "worker never popped");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let h1 = pool.submit(Request::timing(1)).unwrap();
+        let err = pool
+            .submit(Request::timing(2))
+            .err()
+            .expect("third request must shed: queued estimate exceeds 1ns SLO");
+        match err {
+            Error::Overloaded { queue_delay, slo } => {
+                assert!(queue_delay > slo, "{queue_delay:?} vs {slo:?}");
+            }
+            other => panic!("expected Overloaded, got {other}"),
+        }
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        h0.wait().unwrap();
+        h1.wait().unwrap();
+        let pm = pool.shutdown().unwrap();
+        assert_eq!(pm.total_shed(), 1);
+        assert_eq!(pm.shed_by_model.get("(default)"), Some(&1));
+        assert_eq!(pm.expired, 0);
+        assert!(pm.summary().contains("shed=1"), "{}", pm.summary());
+        // Queue delays were recorded for the two served requests.
+        assert_eq!(pm.merged().queue_delay_count(), 2);
+    }
+
+    #[test]
+    fn zero_slo_is_rejected_as_invalid_config() {
+        let cfg = PoolConfig {
+            slo: Some(Duration::ZERO),
+            ..PoolConfig::default()
+        };
+        let err = ServerPool::start(plan(), cfg, echo_executor)
+            .err()
+            .expect("zero SLO must be invalid");
+        assert!(matches!(err, Error::InvalidConfig(_)), "typed: {err}");
     }
 }

@@ -207,6 +207,11 @@ fn clone_typed(e: &Error) -> Error {
         Error::PoolShutdown => Error::PoolShutdown,
         Error::InvalidConfig(s) => Error::InvalidConfig(s.clone()),
         Error::ShapeMismatch(s) => Error::ShapeMismatch(s.clone()),
+        Error::Overloaded { queue_delay, slo } => Error::Overloaded {
+            queue_delay: *queue_delay,
+            slo: *slo,
+        },
+        Error::DeadlineExceeded { late_by } => Error::DeadlineExceeded { late_by: *late_by },
         other => Error::Coordinator(other.to_string()),
     }
 }

@@ -1,128 +1,151 @@
-//! Per-layer inference planning: maps a network + ratio profile onto a
-//! design point, precomputing each layer's weights-generation budget and
-//! pipeline stage estimates. The plan is the admission-time schedule inside
-//! every [`EnginePlan`](crate::engine::EnginePlan): the
-//! [`ServerPool`](crate::coordinator::pool::ServerPool) serves it per
-//! request, and backends charge its per-layer costs when they do not walk
-//! their own (simulator traces, PJRT passthrough layers).
+//! SLO-aware scheduling policy for the serving pool.
 //!
-//! Construct plans through
-//! [`Engine::builder()`](crate::engine::Engine::builder)`.plan()`, which
-//! validates the configuration first; `InferencePlan::build` stays as the
-//! unchecked primitive.
+//! This module defines the *policy* primitives the
+//! [`ServerPool`](crate::coordinator::pool::ServerPool) applies:
+//!
+//! * [`SchedKey`] — the total order the pool pops queued requests in:
+//!   **priority first** (higher [`Request::priority`](crate::coordinator::server::Request)
+//!   wins), then **earliest deadline first** (requests without a deadline
+//!   sort after every request with one), then FIFO arrival order as the
+//!   tie-break. Requests that carry neither a deadline nor a priority
+//!   therefore pop in exactly the pre-v0.4 FIFO order — the default
+//!   behavior is bit-compatible.
+//! * [`estimated_queue_delay`] — the admission-control estimate: the sum
+//!   of the queued requests' per-model service estimates
+//!   ([`InferencePlan::latency_s`](crate::coordinator::plan::InferencePlan)
+//!   for the routed model) divided by the worker count. When a
+//!   [`PoolConfig::slo`](crate::coordinator::pool::PoolConfig) is set and
+//!   this estimate exceeds it, `submit` sheds the request with the typed
+//!   [`Error::Overloaded`](crate::Error::Overloaded) instead of letting
+//!   queue delay grow without bound.
+//!
+//! Model-purity of batches is preserved under EDF: a batch is the maximal
+//! *prefix* of the key-sorted queue that names one model, so a batch never
+//! skips over an earlier-sorted request for another model to gather
+//! batch-mates — which is also what keeps a minority model from starving
+//! under a flood of deadline traffic.
+//!
+//! (Until v0.4 this path hosted the per-layer admission-time costing; that
+//! moved to [`coordinator::plan`](crate::coordinator::plan) — deprecated
+//! aliases below keep old imports compiling.)
 
-use crate::arch::{DesignPoint, Platform};
-use crate::perf::model::{PerfModel, WeightsSource};
-use crate::perf::Bound;
-use crate::workload::{Network, RatioProfile};
+use std::cmp::Ordering;
+use std::time::{Duration, Instant};
 
-/// One planned layer.
-#[derive(Clone, Debug)]
-pub struct PlannedLayer {
-    /// Layer name.
-    pub name: String,
-    /// Weights source at run time.
-    pub source: WeightsSource,
-    /// Estimated total cycles.
-    pub cycles: f64,
-    /// Dominating pipeline stage.
-    pub bound: Bound,
+/// Moved to [`coordinator::plan`](crate::coordinator::plan).
+#[deprecated(since = "0.4.0", note = "moved to coordinator::plan::InferencePlan")]
+pub type InferencePlan = crate::coordinator::plan::InferencePlan;
+
+/// Moved to [`coordinator::plan`](crate::coordinator::plan).
+#[deprecated(since = "0.4.0", note = "moved to coordinator::plan::PlannedLayer")]
+pub type PlannedLayer = crate::coordinator::plan::PlannedLayer;
+
+/// The pop order of the pool's queue: priority ↓, deadline ↑ (`None`
+/// after every `Some`), then arrival sequence ↑. `min` = pop next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedKey {
+    /// Request priority (higher pops first).
+    pub priority: u8,
+    /// Absolute completion deadline, if any (earlier pops first; `None`
+    /// sorts after every concrete deadline).
+    pub deadline: Option<Instant>,
+    /// Arrival sequence number (FIFO tie-break).
+    pub seq: u64,
 }
 
-/// A full inference plan for a CNN on a design point.
-#[derive(Clone, Debug)]
-pub struct InferencePlan {
-    /// Network name.
-    pub network: String,
-    /// Design point executed.
-    pub sigma: DesignPoint,
-    /// Ordered layer plans.
-    pub layers: Vec<PlannedLayer>,
-    /// Total estimated cycles per inference.
-    pub total_cycles: f64,
-    /// Estimated latency in seconds at the platform clock.
-    pub latency_s: f64,
-}
-
-impl InferencePlan {
-    /// Build the plan with the analytical model (the host's admission-time
-    /// costing; the simulator/runtime then execute it).
-    pub fn build(
-        platform: &Platform,
-        bw_mult: u32,
-        sigma: DesignPoint,
-        net: &Network,
-        profile: &RatioProfile,
-    ) -> Self {
-        let model = PerfModel::new(platform.clone(), bw_mult);
-        let perf = model.network_perf(&sigma, net, profile);
-        let layers = net
-            .layers
-            .iter()
-            .enumerate()
-            .zip(&perf.layers)
-            .map(|((i, l), lp)| PlannedLayer {
-                name: l.name.clone(),
-                source: if l.ovsf {
-                    WeightsSource::OnTheFly {
-                        rho: profile.rho(i),
-                    }
-                } else {
-                    WeightsSource::OffChip
-                },
-                cycles: lp.total_cycles,
-                bound: lp.bound,
+impl Ord for SchedKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Higher priority first ⇒ compare reversed.
+        other
+            .priority
+            .cmp(&self.priority)
+            .then_with(|| match (self.deadline, other.deadline) {
+                (Some(a), Some(b)) => a.cmp(&b),
+                (Some(_), None) => Ordering::Less,
+                (None, Some(_)) => Ordering::Greater,
+                (None, None) => Ordering::Equal,
             })
-            .collect();
-        InferencePlan {
-            network: net.name.clone(),
-            sigma,
-            layers,
-            total_cycles: perf.total_cycles,
-            latency_s: perf.total_cycles / platform.clock_hz,
-        }
+            .then_with(|| self.seq.cmp(&other.seq))
     }
+}
 
-    /// Layers generated on the fly.
-    pub fn n_otf_layers(&self) -> usize {
-        self.layers
-            .iter()
-            .filter(|l| matches!(l.source, WeightsSource::OnTheFly { .. }))
-            .count()
+impl PartialOrd for SchedKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
     }
+}
+
+/// Admission-time queue-delay estimate: total estimated service seconds of
+/// the queued requests, spread across the pool's workers.
+pub fn estimated_queue_delay(est_service_s: f64, workers: usize) -> Duration {
+    let s = est_service_s / workers.max(1) as f64;
+    Duration::from_secs_f64(s.max(0.0))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::resnet;
 
-    #[test]
-    fn plan_covers_all_layers() {
-        let net = resnet::resnet18();
-        let profile = RatioProfile::ovsf50(&net);
-        let plan = InferencePlan::build(
-            &Platform::z7045(),
-            4,
-            DesignPoint::new(64, 64, 16, 48),
-            &net,
-            &profile,
-        );
-        assert_eq!(plan.layers.len(), net.layers.len());
-        assert!(plan.total_cycles > 0.0);
-        assert!(plan.latency_s > 0.0);
-        // All 16 block convs are on-the-fly.
-        assert_eq!(plan.n_otf_layers(), 16);
+    fn key(priority: u8, deadline: Option<Instant>, seq: u64) -> SchedKey {
+        SchedKey {
+            priority,
+            deadline,
+            seq,
+        }
     }
 
     #[test]
-    fn latency_consistent_with_cycles() {
-        let net = resnet::resnet18();
-        let profile = RatioProfile::ovsf25(&net);
-        let plat = Platform::z7045();
-        let plan = InferencePlan::build(&plat, 2, DesignPoint::new(64, 64, 16, 48), &net, &profile);
-        assert!((plan.latency_s * plat.clock_hz - plan.total_cycles).abs() < 1.0);
-        let sum: f64 = plan.layers.iter().map(|l| l.cycles).sum();
-        assert!((sum - plan.total_cycles).abs() < 1e-6 * plan.total_cycles);
+    fn default_keys_sort_fifo() {
+        let a = key(0, None, 1);
+        let b = key(0, None, 2);
+        assert!(a < b, "no deadline, equal priority ⇒ FIFO");
+    }
+
+    #[test]
+    fn earliest_deadline_pops_first() {
+        let now = Instant::now();
+        let soon = key(0, Some(now + Duration::from_millis(10)), 5);
+        let late = key(0, Some(now + Duration::from_millis(90)), 1);
+        assert!(soon < late, "EDF beats arrival order");
+        // A deadline always beats deadline-less traffic…
+        let none = key(0, None, 0);
+        assert!(late < none);
+        // …but FIFO still orders the deadline-less tail.
+        assert!(key(0, None, 3) < key(0, None, 4));
+    }
+
+    #[test]
+    fn priority_dominates_deadline() {
+        let now = Instant::now();
+        let urgent = key(2, None, 9);
+        let deadline = key(0, Some(now), 0);
+        assert!(urgent < deadline, "higher priority preempts EDF order");
+    }
+
+    #[test]
+    fn queue_delay_spreads_over_workers() {
+        let d = estimated_queue_delay(4.0, 4);
+        assert!((d.as_secs_f64() - 1.0).abs() < 1e-9);
+        // Degenerate worker counts never divide by zero or go negative.
+        assert_eq!(estimated_queue_delay(-1.0, 0), Duration::ZERO);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_plan_alias_still_resolves() {
+        // External code importing the pre-v0.4 path must keep compiling.
+        fn takes_plan(p: &InferencePlan) -> usize {
+            p.layers.len()
+        }
+        let net = crate::workload::resnet::resnet18();
+        let profile = crate::workload::RatioProfile::ovsf50(&net);
+        let plan = crate::coordinator::plan::InferencePlan::build(
+            &crate::arch::Platform::z7045(),
+            4,
+            crate::arch::DesignPoint::new(64, 64, 16, 48),
+            &net,
+            &profile,
+        );
+        assert_eq!(takes_plan(&plan), net.layers.len());
     }
 }

@@ -17,8 +17,13 @@
 //! [`PoolConfig::single_worker`](crate::coordinator::pool::PoolConfig::single_worker)
 //! instead (see README § Multi-model serving for migration notes).
 
+use std::time::{Duration, Instant};
+
 /// An inference request: an opaque id, the target model id, and
-/// (optionally) input activations for real-numerics execution.
+/// (optionally) input activations for real-numerics execution, plus the
+/// optional SLO fields the pool's scheduler acts on
+/// ([`deadline`](Self::deadline) / [`priority`](Self::priority) — both
+/// default to "none", which reproduces pre-v0.4 FIFO serving exactly).
 #[derive(Clone, Debug)]
 pub struct Request {
     /// Request identifier.
@@ -28,6 +33,15 @@ pub struct Request {
     pub model: String,
     /// Flat input activations (empty for timing-only requests).
     pub input: Vec<f32>,
+    /// Absolute completion deadline. A queued request whose deadline
+    /// passes before a worker pops it fails fast with
+    /// [`Error::DeadlineExceeded`](crate::Error::DeadlineExceeded);
+    /// requests with deadlines are popped earliest-deadline-first.
+    /// `None` (the default) = no deadline, FIFO among its peers.
+    pub deadline: Option<Instant>,
+    /// Scheduling priority: higher pops first, before any deadline
+    /// ordering. Default 0.
+    pub priority: u8,
 }
 
 impl Request {
@@ -37,6 +51,8 @@ impl Request {
             id,
             model: String::new(),
             input: Vec::new(),
+            deadline: None,
+            priority: 0,
         }
     }
 
@@ -46,6 +62,8 @@ impl Request {
             id,
             model: String::new(),
             input,
+            deadline: None,
+            priority: 0,
         }
     }
 
@@ -55,7 +73,26 @@ impl Request {
             id,
             model: model.into(),
             input,
+            deadline: None,
+            priority: 0,
         }
+    }
+
+    /// Set an absolute completion deadline (builder).
+    pub fn with_deadline(mut self, at: Instant) -> Self {
+        self.deadline = Some(at);
+        self
+    }
+
+    /// Set the deadline `timeout` from now (builder convenience).
+    pub fn with_timeout(self, timeout: Duration) -> Self {
+        self.with_deadline(Instant::now() + timeout)
+    }
+
+    /// Set the scheduling priority (builder; higher pops first).
+    pub fn with_priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
     }
 }
 
@@ -85,10 +122,27 @@ mod tests {
     fn request_constructors_route_and_default() {
         let t = Request::timing(1);
         assert!(t.model.is_empty() && t.input.is_empty());
+        assert!(t.deadline.is_none(), "default: no deadline (FIFO serving)");
+        assert_eq!(t.priority, 0, "default: neutral priority");
         let n = Request::numeric(2, vec![1.0]);
         assert!(n.model.is_empty());
         assert_eq!(n.input, vec![1.0]);
         let m = Request::for_model(3, "resnet18", vec![]);
         assert_eq!(m.model, "resnet18");
+    }
+
+    #[test]
+    fn slo_builders_extend_without_disturbing_routing() {
+        let at = Instant::now() + Duration::from_millis(50);
+        let r = Request::for_model(7, "r18", vec![1.0])
+            .with_deadline(at)
+            .with_priority(3);
+        assert_eq!(r.deadline, Some(at));
+        assert_eq!(r.priority, 3);
+        assert_eq!(r.model, "r18");
+        assert_eq!(r.input, vec![1.0]);
+        let t = Request::timing(8).with_timeout(Duration::from_millis(5));
+        let d = t.deadline.expect("timeout sets a deadline");
+        assert!(d > Instant::now() - Duration::from_secs(1));
     }
 }

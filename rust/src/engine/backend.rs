@@ -15,7 +15,7 @@
 use std::sync::Arc;
 
 use crate::arch::{DesignPoint, Platform};
-use crate::coordinator::scheduler::InferencePlan;
+use crate::coordinator::plan::InferencePlan;
 use crate::engine::compile::CompiledModel;
 use crate::error::Result;
 use crate::perf::Bound;

@@ -58,7 +58,7 @@ use std::sync::Arc;
 use crate::arch::{DesignPoint, Platform};
 use crate::coordinator::pool::{PoolConfig, ServerPool};
 use crate::coordinator::registry::ModelRegistry;
-use crate::coordinator::scheduler::InferencePlan;
+use crate::coordinator::plan::InferencePlan;
 use crate::dse::search::{optimise, DseConfig};
 use crate::error::{Error, Result};
 use crate::workload::{Network, RatioProfile};

@@ -963,7 +963,7 @@ mod tests {
         let input = tiny_input();
         let mut outputs = Vec::new();
         for sigma in [with_wgen, without_wgen] {
-            let schedule = crate::coordinator::scheduler::InferencePlan::build(
+            let schedule = crate::coordinator::plan::InferencePlan::build(
                 &platform, 4, sigma, &net, &profile,
             );
             let plan = EnginePlan {

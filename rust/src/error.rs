@@ -62,6 +62,25 @@ pub enum Error {
     /// The server pool is shut down (or every worker died): the request was
     /// drained without execution instead of hanging.
     PoolShutdown,
+
+    /// Admission control shed the request: the pool's estimated queue
+    /// delay (queued service estimates ÷ workers) exceeds the configured
+    /// SLO, so accepting more work would only grow tail latency. Back off
+    /// and retry, or raise `PoolConfig::slo`.
+    Overloaded {
+        /// Estimated queue delay at admission time.
+        queue_delay: std::time::Duration,
+        /// The queue-delay SLO the pool is configured to defend.
+        slo: std::time::Duration,
+    },
+
+    /// The request's deadline expired before a worker started executing
+    /// it (or had already expired at submission): it was failed fast
+    /// instead of wasting a batch slot on an answer nobody is waiting for.
+    DeadlineExceeded {
+        /// How far past the deadline the request was when it was failed.
+        late_by: std::time::Duration,
+    },
 }
 
 impl std::fmt::Display for Error {
@@ -96,6 +115,19 @@ impl std::fmt::Display for Error {
             Error::PoolShutdown => write!(
                 f,
                 "server pool is shut down (workers gone); request drained without execution"
+            ),
+            Error::Overloaded { queue_delay, slo } => write!(
+                f,
+                "server pool overloaded: estimated queue delay {:.1} ms exceeds the \
+                 {:.1} ms SLO; request shed (back off and retry)",
+                queue_delay.as_secs_f64() * 1e3,
+                slo.as_secs_f64() * 1e3
+            ),
+            Error::DeadlineExceeded { late_by } => write!(
+                f,
+                "request deadline exceeded ({:.1} ms past due) before execution; \
+                 failed fast instead of occupying a batch slot",
+                late_by.as_secs_f64() * 1e3
             ),
         }
     }
@@ -139,6 +171,16 @@ mod tests {
         assert!(Error::QueueFull.to_string().contains("backpressure"));
         assert!(Error::UnknownModel("r18".into()).to_string().contains("r18"));
         assert!(Error::PoolShutdown.to_string().contains("shut down"));
+        let over = Error::Overloaded {
+            queue_delay: std::time::Duration::from_millis(42),
+            slo: std::time::Duration::from_millis(10),
+        };
+        assert!(over.to_string().contains("42.0 ms"), "{over}");
+        assert!(over.to_string().contains("10.0 ms SLO"), "{over}");
+        let late = Error::DeadlineExceeded {
+            late_by: std::time::Duration::from_millis(7),
+        };
+        assert!(late.to_string().contains("7.0 ms past due"), "{late}");
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod mobilenet;
 pub mod ratios;
 pub mod resnet;
 pub mod squeezenet;
+pub mod tiny;
 pub mod vgg;
 
 pub use layer::{GemmShape, Layer, LayerKind};

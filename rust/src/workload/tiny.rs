@@ -1,0 +1,121 @@
+//! Reduced-geometry serving workloads.
+//!
+//! Networks with the *structure* of the paper's benchmarks (dense stem →
+//! OVSF convs → classifier) but feature maps shrunk so serving tests and
+//! benches can drive thousands of requests through a real
+//! [`ServerPool`](crate::coordinator::pool::ServerPool) per run — the
+//! scheduling/admission behaviour under test is shape-invariant, so
+//! nothing is lost by shrinking. Two weight classes:
+//!
+//! * [`tiny_resnet`] / [`tiny_mobilenet`] — microsecond-scale (≪ 1 M
+//!   MACs), for debug-build unit/integration tests;
+//! * [`small_resnet`] / [`small_mobilenet`] — millisecond-scale (a few
+//!   M MACs), for `benches/serving.rs`, whose load generator needs
+//!   service times long enough that offered-load levels around the
+//!   pool's capacity are meaningfully paceable.
+//!
+//! Paired nets deliberately disagree on input length so shape validation
+//! and model routing stay observable.
+
+use crate::workload::{Layer, Network};
+
+/// Reduced ResNet-style profile: dense stem, two OVSF block convs (one
+/// strided), folded-pool classifier. Input `8·8·4 = 256`, output 10.
+pub fn tiny_resnet() -> Network {
+    Network {
+        name: "tiny-resnet".into(),
+        layers: vec![
+            Layer::conv("stem", 8, 8, 4, 8, 3, 1, 1, false),
+            Layer::conv("block.conv1", 8, 8, 8, 8, 3, 1, 1, true),
+            Layer::conv("block.conv2", 8, 8, 8, 16, 3, 2, 1, true),
+            Layer::fc("fc", 16, 10),
+        ],
+    }
+}
+
+/// Reduced MobileNet-style profile: strided dense stem, pointwise 1×1,
+/// an OVSF 3×3, pointwise expansion, classifier. Input `10·10·3 = 300`
+/// (a different shape than [`tiny_resnet`], so validation discriminates),
+/// output 7.
+pub fn tiny_mobilenet() -> Network {
+    Network {
+        name: "tiny-mobilenet".into(),
+        layers: vec![
+            Layer::conv("stem", 10, 10, 3, 8, 3, 2, 1, false),
+            Layer::conv("pw1", 5, 5, 8, 16, 1, 1, 0, false),
+            Layer::conv("dw3", 5, 5, 16, 16, 3, 1, 1, true),
+            Layer::conv("pw2", 5, 5, 16, 24, 1, 1, 0, false),
+            Layer::fc("fc", 24, 7),
+        ],
+    }
+}
+
+/// Serving-weight ResNet-style profile (~7 M MACs): millisecond-scale
+/// release-build inference. Input `32·32·8 = 8192`, output 10.
+pub fn small_resnet() -> Network {
+    Network {
+        name: "small-resnet".into(),
+        layers: vec![
+            Layer::conv("stem", 32, 32, 8, 16, 3, 1, 1, false),
+            Layer::conv("block1.conv1", 32, 32, 16, 16, 3, 1, 1, true),
+            Layer::conv("block1.conv2", 32, 32, 16, 32, 3, 2, 1, true),
+            Layer::conv("block2.conv1", 16, 16, 32, 32, 3, 1, 1, true),
+            Layer::fc("fc", 32, 10),
+        ],
+    }
+}
+
+/// Serving-weight MobileNet-style profile (~2 M MACs). Input
+/// `24·24·6 = 3456` (distinct from [`small_resnet`]), output 7.
+pub fn small_mobilenet() -> Network {
+    Network {
+        name: "small-mobilenet".into(),
+        layers: vec![
+            Layer::conv("stem", 24, 24, 6, 16, 3, 2, 1, false),
+            Layer::conv("pw1", 12, 12, 16, 32, 1, 1, 0, false),
+            Layer::conv("dw3", 12, 12, 32, 32, 3, 1, 1, true),
+            Layer::conv("pw2", 12, 12, 32, 48, 1, 1, 0, false),
+            Layer::fc("fc", 48, 7),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_nets_are_small_and_shape_distinct() {
+        let r = tiny_resnet();
+        let m = tiny_mobilenet();
+        assert!(r.macs() < 1_000_000, "tiny nets must stay debug-cheap");
+        assert!(m.macs() < 1_000_000);
+        let r0 = &r.layers[0];
+        let m0 = &m.layers[0];
+        assert_eq!(r0.h * r0.w * r0.n_in, 256);
+        assert_eq!(m0.h * m0.w * m0.n_in, 300);
+        assert!(r.layers.iter().any(|l| l.ovsf), "OVSF path must be exercised");
+        assert!(m.layers.iter().any(|l| l.ovsf));
+    }
+
+    #[test]
+    fn small_nets_sit_in_the_serving_weight_class() {
+        let r = small_resnet();
+        let m = small_mobilenet();
+        assert!(
+            (1_000_000..50_000_000).contains(&r.macs()),
+            "small-resnet {} MACs outside the ms-scale band",
+            r.macs()
+        );
+        assert!(
+            (500_000..50_000_000).contains(&m.macs()),
+            "small-mobilenet {} MACs outside the ms-scale band",
+            m.macs()
+        );
+        let r0 = &r.layers[0];
+        let m0 = &m.layers[0];
+        assert_ne!(r0.h * r0.w * r0.n_in, m0.h * m0.w * m0.n_in);
+        assert!(r.layers.iter().any(|l| l.ovsf));
+        assert!(m.layers.iter().any(|l| l.ovsf));
+    }
+}

@@ -70,7 +70,7 @@ fn registry_missing_artifact_error_is_actionable() {
 fn pool_survives_panicking_worker_shutdown() {
     use unzipfpga::arch::{DesignPoint, Platform};
     use unzipfpga::coordinator::pool::{PoolConfig, ServerPool};
-    use unzipfpga::coordinator::scheduler::InferencePlan;
+    use unzipfpga::coordinator::plan::InferencePlan;
     use unzipfpga::coordinator::server::Request;
     use unzipfpga::workload::{resnet, RatioProfile};
 

@@ -5,7 +5,7 @@
 
 use unzipfpga::arch::{DesignPoint, Platform};
 use unzipfpga::coordinator::pool::{PoolConfig, ServerPool};
-use unzipfpga::coordinator::scheduler::InferencePlan;
+use unzipfpga::coordinator::plan::InferencePlan;
 use unzipfpga::coordinator::server::Request;
 use unzipfpga::runtime::{artifacts_dir, ArtifactRegistry};
 use unzipfpga::workload::{resnet, RatioProfile};
@@ -46,6 +46,7 @@ fn serve_requests_through_pjrt() {
         queue_depth: 32,
         max_batch: 4,
         linger: std::time::Duration::from_millis(1),
+        slo: None,
     };
     let pool = ServerPool::start(plan(), cfg, move |_worker| {
         let alphas = std::sync::Arc::clone(&alphas);
@@ -107,6 +108,7 @@ fn identical_requests_are_deterministic_across_workers() {
         queue_depth: 16,
         max_batch: 1,
         linger: std::time::Duration::ZERO,
+        slo: None,
     };
     let pool = ServerPool::start(plan(), cfg, move |_worker| {
         let mut reg = ArtifactRegistry::new(artifacts_dir()).expect("client");

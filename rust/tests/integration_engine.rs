@@ -12,7 +12,7 @@ use std::sync::Arc;
 use std::time::Duration;
 use unzipfpga::arch::{DesignPoint, Platform};
 use unzipfpga::coordinator::pool::{PoolConfig, ServerPool};
-use unzipfpga::coordinator::scheduler::InferencePlan;
+use unzipfpga::coordinator::plan::InferencePlan;
 use unzipfpga::coordinator::server::Request;
 use unzipfpga::engine::{BackendKind, Engine};
 use unzipfpga::workload::{resnet, squeezenet, RatioProfile};
@@ -121,6 +121,7 @@ fn pool_ordering_under_concurrent_submitters() {
         queue_depth: 4,
         max_batch: 2,
         linger: Duration::from_micros(200),
+        slo: None,
     };
     let pool = Arc::new(
         ServerPool::start(plan(), cfg, |_| |req: &Request| vec![req.id as f32 * 2.0]).unwrap(),
@@ -159,6 +160,7 @@ fn clean_shutdown_with_in_flight_batches() {
         queue_depth: 128,
         max_batch: 8,
         linger: Duration::from_millis(2),
+        slo: None,
     };
     let pool = ServerPool::start(plan(), cfg, |_| {
         |req: &Request| {
@@ -207,6 +209,7 @@ fn multi_worker_pool_matches_single_worker_path() {
         queue_depth: 32,
         max_batch: 8,
         linger: Duration::from_micros(500),
+        slo: None,
     };
     let pool = ServerPool::start(plan(), cfg, executor).unwrap();
     let handles: Vec<_> = (0..n_req)
@@ -242,6 +245,7 @@ fn engine_pool_serves_through_unified_api() {
             queue_depth: 64,
             max_batch: 8,
             linger: Duration::from_micros(500),
+            slo: None,
         })
         .unwrap();
     let handles: Vec<_> = (0..100u64)

@@ -142,6 +142,7 @@ fn two_models_serve_interleaved_bit_identical_under_one_budget() {
             queue_depth: 64,
             max_batch: 4,
             linger: std::time::Duration::from_micros(200),
+            slo: None,
         },
     )
     .unwrap();

@@ -224,6 +224,7 @@ fn pool_responses_carry_real_numerics() {
             queue_depth: 16,
             max_batch: 4,
             linger: std::time::Duration::from_micros(200),
+            slo: None,
         })
         .unwrap();
     let handles: Vec<_> = (0..6u64)
@@ -347,6 +348,7 @@ fn batched_pool_serving_matches_serial_and_amortises_slab_misses() {
             queue_depth: 16,
             max_batch: 4,
             linger: std::time::Duration::from_millis(20),
+            slo: None,
         })
         .unwrap();
     let handles: Vec<_> = inputs

@@ -1,0 +1,449 @@
+//! SLO scheduling acceptance tests for the serving pool.
+//!
+//! * **Backpressure**: `submit` blocks while the bounded queue is full and
+//!   resumes the moment a slot frees; `try_submit` fails fast with the
+//!   typed `Error::QueueFull`.
+//! * **EDF + priority pop order**: queued requests with deadlines pop
+//!   earliest-deadline-first; priority dominates deadline; deadline-less
+//!   traffic keeps FIFO order behind both.
+//! * **No starvation**: under a flood of deadline traffic for one model, a
+//!   deadline-less minority-model request is still served — the model-pure
+//!   batcher never skips over it once it heads the key-sorted queue.
+//! * **Deadline expiry**: a queued request whose deadline passes fails
+//!   fast with the typed `Error::DeadlineExceeded` and is counted.
+//! * **Overload regression**: with a queue-delay SLO configured, admission
+//!   control sheds typed `Error::Overloaded` and the queue delay of
+//!   *admitted* requests stays within the SLO, while the same traffic on
+//!   an unthrottled FIFO pool drives queue delay far past it.
+//!
+//! Determinism idiom (shared with the pool's unit tests): a gated executor
+//! holds the single worker inside `execute` while the test arranges the
+//! queue, so pop order and occupancy are exact, not timing-dependent.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use unzipfpga::arch::DesignPoint;
+use unzipfpga::coordinator::plan::InferencePlan;
+use unzipfpga::coordinator::pool::{PoolConfig, RequestExecutor, ServerPool};
+use unzipfpga::coordinator::server::Request;
+use unzipfpga::{Error, Result};
+
+/// A shared open/closed latch the test-side controls and executors block on.
+type Gate = Arc<(Mutex<bool>, Condvar)>;
+
+fn gate() -> Gate {
+    Arc::new((Mutex::new(false), Condvar::new()))
+}
+
+fn open_gate(g: &Gate) {
+    let (lock, cv) = &**g;
+    *lock.lock().unwrap() = true;
+    cv.notify_all();
+}
+
+fn block_on_gate(g: &Gate) {
+    let (lock, cv) = &**g;
+    let mut open = lock.lock().unwrap();
+    while !*open {
+        open = cv.wait(open).unwrap();
+    }
+}
+
+/// Poll `cond` until it holds, failing the test after a generous timeout so
+/// a scheduling bug reads as an assertion, never as a hung test binary.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// A plan literal with an exact, test-controlled admission-time service
+/// estimate — `InferencePlan`'s fields are public precisely so tests can
+/// pin `latency_s` without routing through the analytical model.
+fn synthetic_plan(latency_s: f64) -> InferencePlan {
+    InferencePlan {
+        network: "synthetic".into(),
+        sigma: DesignPoint::new(8, 4, 8, 4),
+        layers: Vec::new(),
+        total_cycles: latency_s * 1e9,
+        latency_s,
+    }
+}
+
+fn cfg(workers: usize, queue_depth: usize, max_batch: usize, slo: Option<Duration>) -> PoolConfig {
+    PoolConfig {
+        workers,
+        queue_depth,
+        max_batch,
+        linger: Duration::ZERO,
+        slo,
+    }
+}
+
+/// The sentinel id the gated executors block on: the worker pops it first,
+/// then stalls inside `execute` while the test stages the queue.
+const SENTINEL: u64 = 999;
+
+/// Single gated worker recording execution order: pops `SENTINEL`, blocks
+/// until the gate opens, then serves the staged queue one request per
+/// batch. Returns (pool, order).
+fn ordering_pool(g: &Gate) -> (ServerPool, Arc<Mutex<Vec<u64>>>) {
+    let order: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let g2 = Arc::clone(g);
+    let o2 = Arc::clone(&order);
+    let pool = ServerPool::start(synthetic_plan(1e-6), cfg(1, 64, 1, None), move |_| {
+        let gate = Arc::clone(&g2);
+        let order = Arc::clone(&o2);
+        move |req: &Request| {
+            if req.id == SENTINEL {
+                block_on_gate(&gate);
+            }
+            order.lock().unwrap().push(req.id);
+            vec![req.id as f32]
+        }
+    })
+    .unwrap();
+    (pool, order)
+}
+
+#[test]
+fn submit_blocks_on_a_full_queue_until_a_slot_frees() {
+    let g = gate();
+    let g2 = Arc::clone(&g);
+    // Depth-2 queue, single gated worker: one request in flight + two
+    // queued is a deterministically full pool.
+    let pool = ServerPool::start(synthetic_plan(1e-6), cfg(1, 2, 1, None), move |_| {
+        let gate = Arc::clone(&g2);
+        move |req: &Request| {
+            block_on_gate(&gate);
+            vec![req.id as f32]
+        }
+    })
+    .unwrap();
+    let h0 = pool.submit(Request::timing(0)).unwrap();
+    wait_until("worker to pop request 0", || pool.queue_len() == 0);
+    let h1 = pool.submit(Request::timing(1)).unwrap();
+    let h2 = pool.submit(Request::timing(2)).unwrap();
+    assert_eq!(pool.queue_len(), 2, "queue must be at capacity");
+    // Fail-fast path first: the non-blocking probe sees a full queue.
+    match pool.try_submit(Request::timing(90)) {
+        Err(Error::QueueFull) => {}
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    // Blocking path: a submitter parks until the gate opens a slot.
+    let submitted = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let blocked = s.spawn(|| {
+            let h = pool.submit(Request::timing(3));
+            submitted.store(true, Ordering::SeqCst);
+            h
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(
+            !submitted.load(Ordering::SeqCst),
+            "submit must block while the queue is full"
+        );
+        open_gate(&g);
+        let h3 = blocked.join().unwrap().unwrap();
+        assert!(submitted.load(Ordering::SeqCst));
+        for h in [h0, h1, h2, h3] {
+            h.wait().unwrap();
+        }
+    });
+    let pm = pool.shutdown().unwrap();
+    assert_eq!(pm.total_requests(), 4);
+    assert_eq!(pm.total_shed(), 0, "no SLO configured ⇒ nothing sheds");
+}
+
+#[test]
+fn queued_requests_pop_earliest_deadline_first() {
+    let g = gate();
+    let (pool, order) = ordering_pool(&g);
+    let sentinel = pool.submit(Request::timing(SENTINEL)).unwrap();
+    wait_until("worker to pop the sentinel", || pool.queue_len() == 0);
+    let far = Instant::now() + Duration::from_secs(100);
+    let sec = Duration::from_secs(1);
+    // Staged arrival order: a deadline-less request first, then deadlines
+    // out of order — EDF must serve 2, 4, 3, 1 and leave 5 for last.
+    let handles = vec![
+        pool.submit(Request::timing(5)).unwrap(),
+        pool.submit(Request::timing(1).with_deadline(far + 40 * sec)).unwrap(),
+        pool.submit(Request::timing(2).with_deadline(far + 10 * sec)).unwrap(),
+        pool.submit(Request::timing(3).with_deadline(far + 30 * sec)).unwrap(),
+        pool.submit(Request::timing(4).with_deadline(far + 20 * sec)).unwrap(),
+    ];
+    open_gate(&g);
+    sentinel.wait().unwrap();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    pool.shutdown().unwrap();
+    assert_eq!(
+        *order.lock().unwrap(),
+        vec![SENTINEL, 2, 4, 3, 1, 5],
+        "pop order must be earliest-deadline-first, deadline-less last"
+    );
+}
+
+#[test]
+fn priority_dominates_deadline_order() {
+    let g = gate();
+    let (pool, order) = ordering_pool(&g);
+    let sentinel = pool.submit(Request::timing(SENTINEL)).unwrap();
+    wait_until("worker to pop the sentinel", || pool.queue_len() == 0);
+    let far = Instant::now() + Duration::from_secs(100);
+    // Arrival order 1, 2, 3, 4 — but priority tiers pop first, and within
+    // a tier a deadline beats deadline-less traffic.
+    let handles = vec![
+        pool.submit(Request::timing(1).with_deadline(far)).unwrap(), // pri 0 + deadline
+        pool.submit(Request::timing(2).with_priority(3)).unwrap(),   // pri 3
+        pool.submit(Request::timing(3).with_priority(3).with_deadline(far)).unwrap(),
+        pool.submit(Request::timing(4).with_priority(9)).unwrap(), // top priority
+    ];
+    open_gate(&g);
+    sentinel.wait().unwrap();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    pool.shutdown().unwrap();
+    assert_eq!(
+        *order.lock().unwrap(),
+        vec![SENTINEL, 4, 3, 2, 1],
+        "priority tiers pop before any deadline ordering"
+    );
+}
+
+#[test]
+fn minority_model_is_served_under_deadline_pressure() {
+    // A flood of "hot" requests with deadlines vs one deadline-less "cold"
+    // request. EDF sorts every hot ahead of cold, but the model-pure
+    // batcher takes the maximal same-model *prefix* of the sorted queue —
+    // once the hots drain, cold heads the queue and seeds its own batch.
+    let g = gate();
+    let batches: Arc<Mutex<Vec<Vec<(String, u64)>>>> = Arc::new(Mutex::new(Vec::new()));
+    struct Recording {
+        gate: Gate,
+        batches: Arc<Mutex<Vec<Vec<(String, u64)>>>>,
+    }
+    impl RequestExecutor for Recording {
+        fn execute(&mut self, _req: &Request) -> Result<Vec<f32>> {
+            unreachable!("execute_batch is overridden")
+        }
+        fn execute_batch(&mut self, batch: &[Request]) -> Vec<Result<Vec<f32>>> {
+            if batch[0].id == SENTINEL {
+                block_on_gate(&self.gate);
+            }
+            self.batches
+                .lock()
+                .unwrap()
+                .push(batch.iter().map(|r| (r.model.clone(), r.id)).collect());
+            batch.iter().map(|r| Ok(vec![r.id as f32])).collect()
+        }
+    }
+    let g2 = Arc::clone(&g);
+    let b2 = Arc::clone(&batches);
+    let pool = ServerPool::start(
+        synthetic_plan(1e-6),
+        PoolConfig {
+            workers: 1,
+            queue_depth: 64,
+            max_batch: 4,
+            linger: Duration::from_millis(5),
+            slo: None,
+        },
+        move |_| Recording {
+            gate: Arc::clone(&g2),
+            batches: Arc::clone(&b2),
+        },
+    )
+    .unwrap();
+    let sentinel = pool.submit(Request::for_model(SENTINEL, "w", vec![])).unwrap();
+    wait_until("worker to pop the sentinel", || pool.queue_len() == 0);
+    let far = Instant::now() + Duration::from_secs(100);
+    let sec = Duration::from_secs(1);
+    let mut handles = Vec::new();
+    // Three hots with late deadlines…
+    for (id, dl) in [(1u64, 20u32), (2, 21), (3, 22)] {
+        handles.push(
+            pool.submit(Request::for_model(id, "hot", vec![]).with_deadline(far + dl * sec))
+                .unwrap(),
+        );
+    }
+    // …the minority request in the middle of the arrival stream…
+    let cold = pool.submit(Request::for_model(100, "cold", vec![])).unwrap();
+    // …then three more hots with *earlier* deadlines than the first three.
+    for (id, dl) in [(4u64, 10u32), (5, 11), (6, 12)] {
+        handles.push(
+            pool.submit(Request::for_model(id, "hot", vec![]).with_deadline(far + dl * sec))
+                .unwrap(),
+        );
+    }
+    open_gate(&g);
+    sentinel.wait().unwrap();
+    let resp = cold.wait().unwrap();
+    assert_eq!(resp.model, "cold", "minority request must be served");
+    for h in handles {
+        h.wait().unwrap();
+    }
+    pool.shutdown().unwrap();
+    let recorded = batches.lock().unwrap().clone();
+    let ids = |b: &[(String, u64)]| b.iter().map(|(_, id)| *id).collect::<Vec<_>>();
+    assert_eq!(recorded.len(), 4, "sentinel + 2 hot batches + cold: {recorded:?}");
+    assert_eq!(ids(&recorded[0]), vec![SENTINEL]);
+    // EDF across the hots: the late-arriving earlier deadlines pop first.
+    assert_eq!(ids(&recorded[1]), vec![4, 5, 6, 1], "max_batch caps the first batch");
+    assert_eq!(ids(&recorded[2]), vec![2, 3]);
+    assert_eq!(recorded[3], vec![("cold".to_string(), 100)]);
+    for batch in &recorded {
+        let m0 = &batch[0].0;
+        assert!(batch.iter().all(|(m, _)| m == m0), "batch mixes models: {batch:?}");
+    }
+}
+
+#[test]
+fn queued_deadline_expiry_fails_typed_and_is_counted() {
+    let g = gate();
+    let (pool, order) = ordering_pool(&g);
+    let sentinel = pool.submit(Request::timing(SENTINEL)).unwrap();
+    wait_until("worker to pop the sentinel", || pool.queue_len() == 0);
+    let victim = pool
+        .submit(Request::timing(1).with_timeout(Duration::from_millis(25)))
+        .unwrap();
+    let survivor = pool.submit(Request::timing(2)).unwrap();
+    // Hold the worker past the victim's deadline before letting it pop.
+    std::thread::sleep(Duration::from_millis(60));
+    open_gate(&g);
+    sentinel.wait().unwrap();
+    match victim.wait() {
+        Err(Error::DeadlineExceeded { late_by }) => {
+            assert!(late_by > Duration::ZERO, "expired while queued ⇒ late");
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    survivor.wait().unwrap();
+    let pm = pool.shutdown().unwrap();
+    assert_eq!(pm.expired, 1, "queue-side expiry must be counted");
+    assert_eq!(pm.total_shed(), 0);
+    assert_eq!(pm.merged().count(), 2, "sentinel + survivor served");
+    assert!(
+        !order.lock().unwrap().contains(&1),
+        "an expired request must never reach the executor"
+    );
+}
+
+#[test]
+fn shed_counts_key_on_the_request_model() {
+    let g = gate();
+    let g2 = Arc::clone(&g);
+    // 10 ms admission estimate per request vs a 1 ns SLO: any non-empty
+    // queue sheds the next submission.
+    let pool = ServerPool::start(
+        synthetic_plan(0.010),
+        cfg(1, 64, 1, Some(Duration::from_nanos(1))),
+        move |_| {
+            let gate = Arc::clone(&g2);
+            move |req: &Request| {
+                if req.id == 0 {
+                    block_on_gate(&gate);
+                }
+                vec![req.id as f32]
+            }
+        },
+    )
+    .unwrap();
+    let h0 = pool.submit(Request::for_model(0, "hot", vec![])).unwrap();
+    wait_until("worker to pop request 0", || pool.queue_len() == 0);
+    let h1 = pool.submit(Request::for_model(1, "hot", vec![])).unwrap();
+    for (id, model) in [(2u64, "cold"), (3, "hot")] {
+        match pool.submit(Request::for_model(id, model, vec![])) {
+            Err(Error::Overloaded { queue_delay, slo }) => assert!(queue_delay > slo),
+            other => panic!("expected Overloaded for {model}, got {other:?}"),
+        }
+    }
+    open_gate(&g);
+    h0.wait().unwrap();
+    h1.wait().unwrap();
+    let pm = pool.shutdown().unwrap();
+    assert_eq!(pm.total_shed(), 2);
+    assert_eq!(pm.shed_by_model.get("hot"), Some(&1));
+    assert_eq!(pm.shed_by_model.get("cold"), Some(&1));
+}
+
+/// The overload regression the ISSUE pins: identical burst traffic through
+/// an unthrottled FIFO pool and an SLO pool. FIFO queue delay grows with
+/// the backlog (~1 ms of service per queued request, 100 deep); the SLO
+/// pool sheds typed `Overloaded` once its estimated queue delay passes the
+/// SLO, keeping the *admitted* requests' realized queue delay inside it.
+#[test]
+fn slo_bounds_admitted_queue_delay_while_fifo_backlog_grows() {
+    const N: u64 = 100;
+    let service = Duration::from_millis(1);
+    // Admission prices each request at 10 ms on 1 worker; a 50 ms SLO
+    // therefore admits ~5 queued requests and sheds the rest of a burst.
+    let plan = synthetic_plan(0.010);
+    let slo = Duration::from_millis(50);
+    let run = |slo: Option<Duration>| {
+        let pool = ServerPool::start(plan.clone(), cfg(1, 256, 1, slo), move |_| {
+            move |req: &Request| {
+                std::thread::sleep(service);
+                vec![req.id as f32]
+            }
+        })
+        .unwrap();
+        let mut admitted = Vec::new();
+        let mut shed = 0u64;
+        for id in 0..N {
+            match pool.submit(Request::timing(id)) {
+                Ok(h) => admitted.push(h),
+                Err(Error::Overloaded { queue_delay, slo }) => {
+                    assert!(queue_delay > slo, "{queue_delay:?} vs {slo:?}");
+                    shed += 1;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        for h in admitted {
+            h.wait().unwrap();
+        }
+        (pool.shutdown().unwrap(), shed)
+    };
+
+    let (fifo, fifo_shed) = run(None);
+    let (slo_pm, slo_shed) = run(Some(slo));
+
+    // Unthrottled FIFO accepts the whole burst and its tail pays for it.
+    assert_eq!(fifo_shed, 0, "no SLO ⇒ nothing sheds");
+    assert_eq!(fifo.total_shed(), 0);
+    assert_eq!(fifo.merged().count() as u64, N);
+    // The SLO pool sheds most of the burst, typed, without hanging.
+    assert!(slo_shed > 0, "a 100-deep burst must trip the 50 ms SLO");
+    assert_eq!(slo_pm.total_shed(), slo_shed);
+    assert_eq!(
+        slo_pm.merged().count() as u64 + slo_shed,
+        N,
+        "every request is either served or shed — none lost"
+    );
+
+    let fifo_p99 = fifo.merged().queue_delay_percentile_us(99.0);
+    let slo_p99 = slo_pm.merged().queue_delay_percentile_us(99.0);
+    // The i-th of 100 back-to-back 1 ms requests waits ~i ms: the FIFO
+    // p99 sits near 99 ms — far beyond the 50 ms SLO.
+    assert!(
+        fifo_p99 > 60_000.0,
+        "FIFO backlog should push p99 queue delay past 60 ms, got {fifo_p99} µs"
+    );
+    // Admission keeps the backlog ≲ 5 requests ⇒ admitted requests wait
+    // a few ms; the realized p99 must stay inside the SLO itself.
+    assert!(
+        slo_p99 < 50_000.0,
+        "admitted p99 queue delay must stay inside the 50 ms SLO, got {slo_p99} µs"
+    );
+    assert!(
+        slo_p99 * 2.0 < fifo_p99,
+        "SLO pool p99 ({slo_p99} µs) must be well below FIFO ({fifo_p99} µs)"
+    );
+}
