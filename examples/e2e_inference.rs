@@ -138,6 +138,7 @@ fn main() -> unzipfpga::Result<()> {
         max_batch: 4,
         linger: std::time::Duration::from_millis(1),
         slo: None,
+        ..PoolConfig::default()
     };
     let pool = ServerPool::start(plan.schedule.clone(), cfg, move |worker| {
         let params = std::sync::Arc::clone(&params);

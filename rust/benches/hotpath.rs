@@ -28,7 +28,7 @@ use std::sync::Arc;
 use unzipfpga::arch::{DesignPoint, Platform};
 use unzipfpga::autotune::autotune;
 use unzipfpga::dse::search::{optimise, sweep, DseConfig};
-use unzipfpga::engine::{Engine, SimBackend, SlabCache};
+use unzipfpga::engine::{Engine, FaultPlan, FaultyBackend, SimBackend, SlabCache};
 use unzipfpga::ovsf::basis::{select, BasisSelection, SelectedBasis};
 use unzipfpga::ovsf::codes::OvsfBasis;
 use unzipfpga::ovsf::reconstruct::{Filter3x3Mode, OvsfLayer};
@@ -251,6 +251,11 @@ struct InferRow {
     /// Pipelined prefetch datapath (the default).
     ns_per_infer: f64,
     inf_per_s: f64,
+    /// Pipelined datapath behind a zero-probability fault-injection
+    /// wrapper — the before/after row for the fault-tolerance layer's
+    /// fault-free overhead (target: within 3% of `inf_per_s`).
+    guarded_ns_per_infer: f64,
+    guarded_inf_per_s: f64,
     speedup: f64,
     /// Overlap telemetry from a cold (empty-cache) pipelined pass.
     gen_ns: u64,
@@ -272,7 +277,9 @@ fn write_infer_json(rows: &[InferRow], kernel_speedup: f64) {
             "    {{\"network\": \"{}\", \"input_len\": {}, \"slab_budget_bytes\": {}, \
              \"peak_resident_weight_bytes\": {}, \"dense_ovsf_weight_bytes\": {}, \
              \"serial_ns_per_infer\": {:.1}, \"serial_inf_per_s\": {:.4}, \
-             \"ns_per_infer\": {:.1}, \"inf_per_s\": {:.4}, \"speedup\": {:.3}, \
+             \"ns_per_infer\": {:.1}, \"inf_per_s\": {:.4}, \
+             \"guarded_ns_per_infer\": {:.1}, \"guarded_inf_per_s\": {:.4}, \
+             \"speedup\": {:.3}, \
              \"gen_ns\": {}, \"hidden_ns\": {}, \"hidden_frac\": {:.3}}}{}\n",
             json_escape(&r.network),
             r.input_len,
@@ -283,6 +290,8 @@ fn write_infer_json(rows: &[InferRow], kernel_speedup: f64) {
             r.serial_inf_per_s,
             r.ns_per_infer,
             r.inf_per_s,
+            r.guarded_ns_per_infer,
+            r.guarded_inf_per_s,
             r.speedup,
             r.gen_ns,
             r.hidden_ns,
@@ -436,6 +445,7 @@ fn bench_multimodel() {
             max_batch: 4,
             linger: std::time::Duration::from_micros(200),
             slo: None,
+            ..PoolConfig::default()
         },
     )
     .unwrap();
@@ -516,6 +526,22 @@ fn bench_multimodel() {
 }
 
 fn build_infer_engine(net: &Network, pipelined: bool, cache: Arc<SlabCache>) -> Engine {
+    build_infer_engine_inner(net, pipelined, cache, false)
+}
+
+/// Same datapath with the zero-probability [`FaultyBackend`] wrapper in
+/// the backend seat — measures the fault-tolerance layer's fault-free
+/// overhead (one PRNG roll guard per layer call; nothing injected).
+fn build_guarded_engine(net: &Network, pipelined: bool, cache: Arc<SlabCache>) -> Engine {
+    build_infer_engine_inner(net, pipelined, cache, true)
+}
+
+fn build_infer_engine_inner(
+    net: &Network,
+    pipelined: bool,
+    cache: Arc<SlabCache>,
+    guarded: bool,
+) -> Engine {
     let profile = RatioProfile::ovsf50(net);
     let plan = Engine::builder()
         .platform(Platform::z7045())
@@ -527,7 +553,12 @@ fn build_infer_engine(net: &Network, pipelined: bool, cache: Arc<SlabCache>) -> 
         .unwrap();
     let mut backend = SimBackend::with_cache(cache);
     backend.pipelined = pipelined;
-    Engine::with_backend(plan, Box::new(backend)).unwrap()
+    if guarded {
+        let wrapped = FaultyBackend::new(backend, FaultPlan::none());
+        Engine::with_backend(plan, Box::new(wrapped)).unwrap()
+    } else {
+        Engine::with_backend(plan, Box::new(backend)).unwrap()
+    }
 }
 
 /// End-to-end numeric `Engine::infer` on the simulator backend: real
@@ -591,14 +622,31 @@ fn bench_engine_infer() -> Vec<InferRow> {
             "{}: peak resident weights {peak} exceed the {budget}-byte budget",
             net.name
         );
+
+        // Guarded pass: the identical pipelined datapath behind a
+        // zero-probability FaultyBackend — the fault-tolerance layer's
+        // fault-free overhead, measured in the same run.
+        let cache_g = Arc::new(SlabCache::with_budget(budget));
+        let mut guarded = build_guarded_engine(&net, true, Arc::clone(&cache_g));
+        guarded.infer(&input).unwrap();
+        let rg = bench(
+            &format!("engine: {} numeric infer (guarded)", net.name),
+            0,
+            iters,
+            || guarded.infer(&input).unwrap().output[0],
+        );
+
         let speedup = rs.mean_ns / rp.mean_ns;
         println!(
             "   {}: serial {:.2} inf/s → pipelined {:.2} inf/s ({speedup:.2}×); \
+             guarded {:.2} inf/s ({:+.1}% fault-guard overhead); \
              cold pass hid {:.0}% of generation; dense OVSF weights {:.1} MiB vs \
              peak resident {:.2} MiB (budget 8 MiB)",
             net.name,
             1e9 / rs.mean_ns,
             1e9 / rp.mean_ns,
+            1e9 / rg.mean_ns,
+            (rg.mean_ns / rp.mean_ns - 1.0) * 100.0,
             overlap.hidden_frac() * 100.0,
             dense_ovsf_weight_bytes as f64 / (1 << 20) as f64,
             peak as f64 / (1 << 20) as f64
@@ -613,6 +661,8 @@ fn bench_engine_infer() -> Vec<InferRow> {
             serial_inf_per_s: 1e9 / rs.mean_ns,
             ns_per_infer: rp.mean_ns,
             inf_per_s: 1e9 / rp.mean_ns,
+            guarded_ns_per_infer: rg.mean_ns,
+            guarded_inf_per_s: 1e9 / rg.mean_ns,
             speedup,
             gen_ns: overlap.gen_ns,
             hidden_ns: overlap.hidden_ns,

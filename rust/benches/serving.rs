@@ -62,6 +62,7 @@ fn pool_config(slo: Option<Duration>) -> PoolConfig {
         max_batch: 8,
         linger: Duration::from_micros(200),
         slo,
+        ..PoolConfig::default()
     }
 }
 

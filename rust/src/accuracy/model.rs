@@ -73,7 +73,7 @@ impl AccuracyModel {
                 return y0 + (y1 - y0) * (e - x0) / (x1 - x0);
             }
         }
-        a.last().unwrap().1
+        a[a.len() - 1].1
     }
 }
 

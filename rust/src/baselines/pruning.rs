@@ -90,7 +90,7 @@ impl TaylorPruner {
                 return Some(y0 + (y1 - y0) * (k - x0) / (x1 - x0));
             }
         }
-        Some(anchors.last().unwrap().1)
+        Some(anchors[anchors.len() - 1].1)
     }
 }
 
@@ -114,11 +114,13 @@ pub fn iterative_taylor_prune(scores: &[f64], keep: f64) -> Vec<usize> {
     let target = ((n as f64 * keep).round() as usize).clamp(1, n);
     let mut live: Vec<usize> = (0..n).collect();
     while live.len() > target {
-        let (pos, _) = live
+        let Some((pos, _)) = live
             .iter()
             .enumerate()
-            .min_by(|(_, &a), (_, &b)| scores[a].partial_cmp(&scores[b]).unwrap())
-            .unwrap();
+            .min_by(|(_, &a), (_, &b)| scores[a].total_cmp(&scores[b]))
+        else {
+            break; // unreachable: live.len() > target ≥ 1
+        };
         live.remove(pos);
     }
     live

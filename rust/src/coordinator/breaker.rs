@@ -1,0 +1,314 @@
+//! Per-model circuit breakers: closed → open → half-open, keyed by model
+//! id, so one failing model cannot monopolise the pool's workers.
+//!
+//! A model whose requests fail [`failure_threshold`](BreakerConfig::failure_threshold)
+//! times **consecutively** trips its breaker: subsequent submissions are
+//! rejected fast with the typed [`Error::CircuitOpen`] (carrying a
+//! `retry_after` hint) instead of queueing work that will likely fail and
+//! occupy batch slots other models need. After
+//! [`open_for`](BreakerConfig::open_for) the breaker admits requests again
+//! in *half-open* state: [`half_open_probes`](BreakerConfig::half_open_probes)
+//! consecutive successes close it, any failure re-trips it for another
+//! `open_for` window.
+//!
+//! Only *execution* failures count toward tripping (the pool excludes
+//! pre-execution failures like deadline expiry and the breaker's own
+//! rejections — a model must not be punished for the queue's state).
+//! Breakers are opt-in per pool: see `PoolConfig::breaker`.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+/// Tuning for the per-model circuit breakers of one pool.
+#[derive(Clone, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive execution failures that trip a model's breaker open.
+    pub failure_threshold: u32,
+    /// How long a tripped breaker rejects fast before admitting half-open
+    /// probe requests.
+    pub open_for: Duration,
+    /// Consecutive successes in half-open state that close the breaker.
+    pub half_open_probes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self {
+            failure_threshold: 5,
+            open_for: Duration::from_millis(250),
+            half_open_probes: 2,
+        }
+    }
+}
+
+impl BreakerConfig {
+    /// Validate the knobs (zero thresholds would trip or close instantly).
+    pub fn validate(&self) -> Result<()> {
+        if self.failure_threshold == 0 {
+            return Err(Error::InvalidConfig(
+                "BreakerConfig: failure_threshold must be ≥ 1".into(),
+            ));
+        }
+        if self.half_open_probes == 0 {
+            return Err(Error::InvalidConfig(
+                "BreakerConfig: half_open_probes must be ≥ 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One model's breaker state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: requests flow, consecutive failures are counted.
+    Closed,
+    /// Tripped: requests are rejected fast with [`Error::CircuitOpen`].
+    Open,
+    /// Probation: requests flow as probes; successes close the breaker,
+    /// any failure re-trips it.
+    HalfOpen,
+}
+
+impl std::fmt::Display for BreakerState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BreakerState::Closed => write!(f, "closed"),
+            BreakerState::Open => write!(f, "open"),
+            BreakerState::HalfOpen => write!(f, "half-open"),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct ModelBreaker {
+    state: BreakerState,
+    consecutive_failures: u32,
+    opened_at: Instant,
+    probe_successes: u32,
+    trips: u64,
+}
+
+impl ModelBreaker {
+    fn new() -> Self {
+        Self {
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            opened_at: Instant::now(),
+            probe_successes: 0,
+            trips: 0,
+        }
+    }
+
+    fn trip(&mut self) {
+        self.state = BreakerState::Open;
+        self.opened_at = Instant::now();
+        self.probe_successes = 0;
+        self.trips += 1;
+    }
+}
+
+/// The pool-wide set of per-model breakers.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    models: Mutex<HashMap<String, ModelBreaker>>,
+}
+
+impl CircuitBreaker {
+    /// Breakers under `cfg` (call [`BreakerConfig::validate`] first — the
+    /// pool does, at start).
+    pub fn new(cfg: BreakerConfig) -> Self {
+        Self {
+            cfg,
+            models: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, HashMap<String, ModelBreaker>> {
+        self.models.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Admission check for one request of `model`: `Ok` while the breaker
+    /// is closed (or admitting half-open probes), the typed
+    /// [`Error::CircuitOpen`] while it rejects fast. An open breaker whose
+    /// `open_for` window has elapsed transitions to half-open here and
+    /// admits the request as a probe.
+    pub fn check(&self, model: &str) -> Result<()> {
+        let mut m = self.lock();
+        let b = m.entry(model.to_string()).or_insert_with(ModelBreaker::new);
+        match b.state {
+            BreakerState::Closed | BreakerState::HalfOpen => Ok(()),
+            BreakerState::Open => {
+                let elapsed = b.opened_at.elapsed();
+                if elapsed >= self.cfg.open_for {
+                    b.state = BreakerState::HalfOpen;
+                    b.probe_successes = 0;
+                    Ok(())
+                } else {
+                    Err(Error::CircuitOpen {
+                        model: model.to_string(),
+                        retry_after: self.cfg.open_for - elapsed,
+                    })
+                }
+            }
+        }
+    }
+
+    /// Record one successful execution for `model`.
+    pub fn record_success(&self, model: &str) {
+        let mut m = self.lock();
+        let Some(b) = m.get_mut(model) else { return };
+        match b.state {
+            BreakerState::Closed => b.consecutive_failures = 0,
+            BreakerState::HalfOpen => {
+                b.probe_successes += 1;
+                if b.probe_successes >= self.cfg.half_open_probes {
+                    b.state = BreakerState::Closed;
+                    b.consecutive_failures = 0;
+                }
+            }
+            // A success landing while open is a straggler from before the
+            // trip — the half-open probe window decides recovery, not it.
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Record one failed execution for `model` (the pool filters out
+    /// pre-execution failures before calling this).
+    pub fn record_failure(&self, model: &str) {
+        let mut m = self.lock();
+        let b = m.entry(model.to_string()).or_insert_with(ModelBreaker::new);
+        match b.state {
+            BreakerState::Closed => {
+                b.consecutive_failures += 1;
+                if b.consecutive_failures >= self.cfg.failure_threshold {
+                    b.trip();
+                }
+            }
+            // A failed probe re-trips for another full open window.
+            BreakerState::HalfOpen => b.trip(),
+            BreakerState::Open => {}
+        }
+    }
+
+    /// One model's current state ([`BreakerState::Closed`] when unseen).
+    /// Reads do not advance open → half-open; only [`check`](Self::check)
+    /// does.
+    pub fn state(&self, model: &str) -> BreakerState {
+        self.lock()
+            .get(model)
+            .map(|b| b.state)
+            .unwrap_or(BreakerState::Closed)
+    }
+
+    /// Every tracked model's state (sorted by id).
+    pub fn states(&self) -> BTreeMap<String, BreakerState> {
+        self.lock()
+            .iter()
+            .map(|(k, b)| (k.clone(), b.state))
+            .collect()
+    }
+
+    /// Total trips across every model (re-trips from half-open included).
+    pub fn trips(&self) -> u64 {
+        self.lock().values().map(|b| b.trips).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(open_ms: u64) -> BreakerConfig {
+        BreakerConfig {
+            failure_threshold: 3,
+            open_for: Duration::from_millis(open_ms),
+            half_open_probes: 2,
+        }
+    }
+
+    #[test]
+    fn config_validates() {
+        assert!(BreakerConfig::default().validate().is_ok());
+        assert!(BreakerConfig {
+            failure_threshold: 0,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(BreakerConfig {
+            half_open_probes: 0,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn consecutive_failures_trip_and_reject_typed() {
+        let cb = CircuitBreaker::new(cfg(60_000));
+        assert_eq!(cb.state("m"), BreakerState::Closed);
+        cb.record_failure("m");
+        cb.record_failure("m");
+        assert!(cb.check("m").is_ok(), "below threshold stays closed");
+        // A success resets the consecutive count.
+        cb.record_success("m");
+        cb.record_failure("m");
+        cb.record_failure("m");
+        assert_eq!(cb.state("m"), BreakerState::Closed);
+        cb.record_failure("m");
+        assert_eq!(cb.state("m"), BreakerState::Open);
+        assert_eq!(cb.trips(), 1);
+        let err = cb.check("m").err().expect("open must reject");
+        match err {
+            Error::CircuitOpen { model, retry_after } => {
+                assert_eq!(model, "m");
+                assert!(retry_after <= Duration::from_secs(60));
+                assert!(retry_after > Duration::ZERO);
+            }
+            other => panic!("wrong error type: {other}"),
+        }
+        // Other models are unaffected.
+        assert!(cb.check("healthy").is_ok());
+        assert_eq!(cb.state("healthy"), BreakerState::Closed);
+    }
+
+    #[test]
+    fn half_open_probes_close_or_retrip() {
+        let cb = CircuitBreaker::new(cfg(1));
+        for _ in 0..3 {
+            cb.record_failure("m");
+        }
+        assert_eq!(cb.state("m"), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(5));
+        // The elapsed open window admits a probe.
+        assert!(cb.check("m").is_ok());
+        assert_eq!(cb.state("m"), BreakerState::HalfOpen);
+        // One success is not enough at half_open_probes = 2 ...
+        cb.record_success("m");
+        assert_eq!(cb.state("m"), BreakerState::HalfOpen);
+        // ... the second closes it.
+        cb.record_success("m");
+        assert_eq!(cb.state("m"), BreakerState::Closed);
+        assert!(cb.check("m").is_ok());
+
+        // Trip again; a failed probe re-trips for a fresh window.
+        for _ in 0..3 {
+            cb.record_failure("m");
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(cb.check("m").is_ok());
+        cb.record_failure("m");
+        assert_eq!(cb.state("m"), BreakerState::Open);
+        assert_eq!(cb.trips(), 3, "initial trip + re-trip counted per model");
+        assert_eq!(
+            cb.states().get("m").copied(),
+            Some(BreakerState::Open),
+            "states() reflects the live map"
+        );
+    }
+}

@@ -24,6 +24,7 @@
 //! streams (Poisson / bursty / diurnal) to measure tail latency under
 //! offered load (`benches/serving.rs` → `BENCH_serving.json`).
 
+pub mod breaker;
 pub mod metrics;
 pub mod multi_model;
 pub mod multi_tenant;
@@ -34,6 +35,7 @@ pub mod scheduler;
 pub mod server;
 pub mod traffic;
 
+pub use breaker::{BreakerConfig, BreakerState, CircuitBreaker};
 pub use metrics::Metrics;
 pub use plan::InferencePlan;
 pub use pool::{PoolConfig, PoolMetrics, RequestExecutor, ResponseHandle, ServerPool};

@@ -172,6 +172,7 @@ pub fn co_location_sweep(
                 max_batch: cfg.max_batch,
                 linger: std::time::Duration::from_micros(200),
                 slo: cfg.slo,
+                ..PoolConfig::default()
             },
         )?;
         // Interleaved traffic: round-robin across the co-located models so

@@ -60,14 +60,40 @@
 //! *admitted* requests instead of letting queue delay grow without bound.
 //! Requests with no deadline/priority on a pool with no SLO behave exactly
 //! as before v0.4 (FIFO, block-on-full).
+//!
+//! **Fault tolerance** (v0.7): workers are *supervised*. A panic inside an
+//! executor is caught per batch ([`std::panic::catch_unwind`]); a
+//! single-request batch fails its request with the typed
+//! [`Error::WorkerPanic`](crate::Error::WorkerPanic), while a multi-request
+//! batch re-queues **all** of its unanswered jobs *quarantined* — a
+//! quarantined job always re-executes in a batch of one, so a poison
+//! request cannot take fresh neighbours down with it a second time. The
+//! worker that caught the panic discards its (possibly corrupt) executor
+//! and respawns a replacement with a fresh one, up to a pool-wide
+//! [`restart_budget`](PoolConfig::restart_budget) with capped exponential
+//! backoff, so panics cost latency rather than capacity. Failures
+//! classified retryable by
+//! [`Error::is_transient`](crate::Error::is_transient) are retried inside
+//! the worker ([`retries`](PoolConfig::retries) times, jittered backoff,
+//! never sleeping past the request's deadline). Per-model **circuit
+//! breakers** ([`PoolConfig::breaker`], see
+//! [`breaker`](crate::coordinator::breaker)) trip after consecutive
+//! execution failures and reject that model's submissions fast with
+//! [`Error::CircuitOpen`](crate::Error::CircuitOpen) while other models
+//! keep serving. Batch/switch/expiry accounting lives in pool-shared
+//! atomics, so a panicked worker's counts survive into
+//! [`ServerPool::shutdown`].
 
+use crate::coordinator::breaker::{BreakerConfig, BreakerState, CircuitBreaker};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::plan::InferencePlan;
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::scheduler::{self, SchedKey};
 use crate::coordinator::server::{Request, Response};
 use crate::error::{Error, Result};
+use crate::util::prng::Xoshiro256;
 use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
@@ -95,6 +121,33 @@ pub struct PoolConfig {
     /// shedding: the pool blocks on a full queue, exactly the pre-v0.4
     /// behaviour.
     pub slo: Option<Duration>,
+    /// In-worker retry budget per request for failures classified
+    /// retryable by [`Error::is_transient`](crate::Error::is_transient).
+    /// Retries back off exponentially (jittered, capped at 50 ms) from
+    /// [`retry_backoff`](Self::retry_backoff) and never sleep past the
+    /// request's deadline. `0` disables retries.
+    pub retries: u32,
+    /// Base backoff before the first transient retry (doubles per
+    /// attempt, + up to 50% jitter, capped at 50 ms).
+    pub retry_backoff: Duration,
+    /// Pool-wide budget of worker respawns after caught executor panics.
+    /// While it lasts, a panicking worker is replaced by a fresh one (new
+    /// executor) and pool capacity is preserved; once exhausted, further
+    /// panics shrink capacity, and when the last worker dies the queue
+    /// closes and pending requests fail with
+    /// [`Error::PoolShutdown`](crate::Error::PoolShutdown). `0` disables
+    /// supervision respawn entirely (the pre-v0.7 behaviour).
+    pub restart_budget: usize,
+    /// Base startup delay of a respawned worker (doubles per restart,
+    /// + up to 50% jitter, capped at 1 s) — a crash-looping executor must
+    /// not spin the supervisor.
+    pub restart_backoff: Duration,
+    /// Per-model circuit breakers (see
+    /// [`breaker`](crate::coordinator::breaker)): consecutive execution
+    /// failures trip a model open and its submissions are rejected fast
+    /// with [`Error::CircuitOpen`](crate::Error::CircuitOpen) until a
+    /// half-open probe succeeds. `None` (the default) disables breakers.
+    pub breaker: Option<BreakerConfig>,
 }
 
 impl Default for PoolConfig {
@@ -105,6 +158,11 @@ impl Default for PoolConfig {
             max_batch: 8,
             linger: Duration::from_millis(1),
             slo: None,
+            retries: 2,
+            retry_backoff: Duration::from_micros(200),
+            restart_budget: 4,
+            restart_backoff: Duration::from_millis(1),
+            breaker: None,
         }
     }
 }
@@ -117,7 +175,7 @@ impl PoolConfig {
             queue_depth: 64,
             max_batch: 1,
             linger: Duration::ZERO,
-            slo: None,
+            ..Self::default()
         }
     }
 
@@ -134,6 +192,9 @@ impl PoolConfig {
                  admission control)"
                     .into(),
             ));
+        }
+        if let Some(b) = &self.breaker {
+            b.validate()?;
         }
         Ok(())
     }
@@ -213,6 +274,11 @@ struct Job {
     enqueued_at: Instant,
     /// Arrival sequence number — the FIFO tie-breaker of [`SchedKey`].
     seq: u64,
+    /// Set when the job was re-queued after its batch panicked: a
+    /// quarantined job executes in a batch of one (never absorbed, never
+    /// absorbing), so a poison request cannot take fresh co-batched
+    /// requests down with it on re-execution.
+    quarantine: bool,
 }
 
 impl Job {
@@ -223,6 +289,16 @@ impl Job {
             seq: self.seq,
         }
     }
+}
+
+/// The non-request parts of a [`Job`], split off while the request slice
+/// is lent to the executor so a panicked batch can be reassembled and
+/// re-queued without cloning activations.
+struct JobMeta {
+    reply: mpsc::Sender<Result<Response>>,
+    est_s: f64,
+    enqueued_at: Instant,
+    seq: u64,
 }
 
 struct QueueState {
@@ -246,6 +322,29 @@ struct PoolShared {
     shed: Mutex<BTreeMap<String, u64>>,
     /// Requests whose deadline had already expired at submission.
     submit_expired: AtomicU64,
+    /// Queued requests that expired while waiting (worker-side sweeps).
+    /// Pool-shared so a panicked worker's count survives into shutdown.
+    expired: AtomicU64,
+    /// Batches executed, pool-wide (survives worker panics).
+    batches: AtomicU64,
+    /// Largest batch executed, pool-wide.
+    largest_batch: AtomicUsize,
+    /// Model switches, pool-wide (flushed per batch from each executor).
+    model_switches: AtomicU64,
+    /// Executor panics caught by worker supervision.
+    caught_panics: AtomicU64,
+    /// Workers respawned after a caught panic.
+    worker_restarts: AtomicU64,
+    /// Remaining respawns in the pool-wide restart budget.
+    restarts_left: AtomicUsize,
+    /// The configured restart budget (for backoff attempt numbering).
+    restart_budget: usize,
+    /// Live worker join handles. A respawned worker's handle is pushed
+    /// here *before* the dying worker's thread exits, so shutdown's drain
+    /// loop always observes every replacement.
+    handles: Mutex<Vec<JoinHandle<WorkerReport>>>,
+    /// Per-model circuit breakers (`None` = disabled).
+    breaker: Option<CircuitBreaker>,
 }
 
 fn lock_state(shared: &PoolShared) -> MutexGuard<'_, QueueState> {
@@ -255,6 +354,17 @@ fn lock_state(shared: &PoolShared) -> MutexGuard<'_, QueueState> {
         .state
         .lock()
         .unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The breaker map key of a request: the concrete routed model id, or the
+/// same `"(default)"` bucket admission-control shedding uses for unrouted
+/// requests on legacy single-plan pools.
+fn breaker_key(model: &str) -> &str {
+    if model.is_empty() {
+        "(default)"
+    } else {
+        model
+    }
 }
 
 /// Per-worker serving statistics.
@@ -277,10 +387,16 @@ pub struct WorkerReport {
 /// Aggregated pool statistics returned by [`ServerPool::shutdown`].
 #[derive(Clone, Debug)]
 pub struct PoolMetrics {
-    /// One report per worker that exited cleanly.
+    /// One report per worker that exited through its serving loop —
+    /// including workers that caught an executor panic and handed over to
+    /// a respawned replacement (their counts up to the panic are here).
     pub per_worker: Vec<WorkerReport>,
-    /// Workers that panicked instead of reporting.
+    /// Executor panics observed: caught by batch supervision, plus
+    /// workers whose thread died outright (e.g. a panicking factory).
     pub panicked_workers: usize,
+    /// Workers respawned after a caught panic (bounded by
+    /// [`PoolConfig::restart_budget`]).
+    pub worker_restarts: u64,
     /// Requests shed by SLO admission control, per concrete model id
     /// (`"(default)"` = unrouted). Empty when [`PoolConfig::slo`] is
     /// `None` or the pool never saturated.
@@ -289,6 +405,18 @@ pub struct PoolMetrics {
     /// [`Error::DeadlineExceeded`](crate::Error::DeadlineExceeded):
     /// already expired at submission, or expired while queued.
     pub expired: u64,
+    /// Batches executed pool-wide (shared atomic — survives panics).
+    pub batches: u64,
+    /// Largest batch executed pool-wide.
+    pub largest_batch: usize,
+    /// Model switches pool-wide.
+    pub switches: u64,
+    /// Circuit-breaker trips across all models (re-trips included); `0`
+    /// when breakers are disabled.
+    pub breaker_trips: u64,
+    /// Final per-model breaker states (empty when breakers are disabled
+    /// or no model was ever recorded).
+    pub breaker_states: BTreeMap<String, BreakerState>,
 }
 
 impl PoolMetrics {
@@ -307,21 +435,22 @@ impl PoolMetrics {
         self.per_worker.iter().map(|w| w.metrics.count()).sum()
     }
 
-    /// Batches executed across the pool.
+    /// Batches executed across the pool (pool-shared counter, so batches
+    /// executed by workers that later panicked are included).
     pub fn total_batches(&self) -> u64 {
-        self.per_worker.iter().map(|w| w.batches).sum()
+        self.batches
     }
 
     /// Largest batch any worker executed.
     pub fn max_batch(&self) -> usize {
-        self.per_worker.iter().map(|w| w.max_batch).max().unwrap_or(0)
+        self.largest_batch
     }
 
     /// Model switches (active-plan swaps) across the pool — the multi-model
     /// time-sharing cost the scheduler amortises by batching same-model
     /// requests.
     pub fn model_switches(&self) -> u64 {
-        self.per_worker.iter().map(|w| w.model_switches).sum()
+        self.switches
     }
 
     /// Requests shed by SLO admission control, across all models.
@@ -330,17 +459,21 @@ impl PoolMetrics {
     }
 
     /// One-line summary (global + per-model latencies, batching, switches,
-    /// SLO shed/expired counts).
+    /// SLO shed/expired counts, fault-tolerance counters).
     pub fn summary(&self) -> String {
         format!(
-            "workers={} {} batches={} max_batch={} model_switches={} shed={} expired={}",
+            "workers={} {} batches={} max_batch={} model_switches={} shed={} expired={} \
+             panics={} restarts={} breaker_trips={}",
             self.per_worker.len(),
             self.merged().summary(),
             self.total_batches(),
             self.max_batch(),
             self.model_switches(),
             self.total_shed(),
-            self.expired
+            self.expired,
+            self.panicked_workers,
+            self.worker_restarts,
+            self.breaker_trips
         )
     }
 }
@@ -348,7 +481,6 @@ impl PoolMetrics {
 /// The multi-worker batched inference server.
 pub struct ServerPool {
     shared: Arc<PoolShared>,
-    workers: Vec<JoinHandle<WorkerReport>>,
     /// The single schedule this pool serves (legacy [`start`](Self::start)
     /// pools; `None` for registry-routed pools, which cost per model).
     plan: Option<InferencePlan>,
@@ -361,12 +493,26 @@ pub struct ServerPool {
     fallback_latency_s: f64,
 }
 
+/// Per-worker serving parameters, cloned into respawned workers.
+#[derive(Clone)]
+struct WorkerCfg {
+    fallback_latency_s: f64,
+    max_batch: usize,
+    linger: Duration,
+    retries: u32,
+    retry_backoff: Duration,
+    restart_backoff: Duration,
+}
+
 impl ServerPool {
     /// Start `cfg.workers` threads serving the single schedule `plan` with
     /// a caller-provided executor. `factory(worker_id)` is called once
     /// *inside* each worker thread to build its executor, so non-`Send`
-    /// executors (PJRT) work. Requests on such a pool may leave
-    /// `Request::model` empty; no admission-time model validation runs.
+    /// executors (PJRT) work — and called again whenever a respawned
+    /// worker replaces one whose executor panicked, so the factory must be
+    /// re-callable with the same `worker_id`. Requests on such a pool may
+    /// leave `Request::model` empty; no admission-time model validation
+    /// runs.
     ///
     /// Multi-model pools are started with [`serve`](Self::serve) instead.
     pub fn start<F, E>(plan: InferencePlan, cfg: PoolConfig, factory: F) -> Result<Self>
@@ -388,6 +534,7 @@ impl ServerPool {
         E: RequestExecutor + 'static,
     {
         cfg.validate()?;
+        let breaker = cfg.breaker.clone().map(CircuitBreaker::new);
         let shared = Arc::new(PoolShared {
             state: Mutex::new(QueueState {
                 jobs: VecDeque::with_capacity(cfg.queue_depth),
@@ -402,24 +549,32 @@ impl ServerPool {
             alive_workers: AtomicUsize::new(cfg.workers),
             shed: Mutex::new(BTreeMap::new()),
             submit_expired: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            largest_batch: AtomicUsize::new(0),
+            model_switches: AtomicU64::new(0),
+            caught_panics: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            restarts_left: AtomicUsize::new(cfg.restart_budget),
+            restart_budget: cfg.restart_budget,
+            handles: Mutex::new(Vec::with_capacity(cfg.workers)),
+            breaker,
         });
         let factory = Arc::new(factory);
         let fallback_latency_s = plan.as_ref().map(|p| p.latency_s).unwrap_or(0.0);
-        let mut workers = Vec::with_capacity(cfg.workers);
+        let wcfg = WorkerCfg {
+            fallback_latency_s,
+            max_batch: cfg.max_batch,
+            linger: cfg.linger,
+            retries: cfg.retries,
+            retry_backoff: cfg.retry_backoff,
+            restart_backoff: cfg.restart_backoff,
+        };
         for worker_id in 0..cfg.workers {
-            let shared = Arc::clone(&shared);
-            let factory = Arc::clone(&factory);
-            let max_batch = cfg.max_batch;
-            let linger = cfg.linger;
-            workers.push(std::thread::spawn(move || {
-                let guard = AliveGuard { shared };
-                let mut exec = factory(worker_id);
-                worker_loop(&guard.shared, &mut exec, fallback_latency_s, max_batch, linger)
-            }));
+            spawn_worker(&shared, &factory, &wcfg, worker_id, Duration::ZERO);
         }
         Ok(Self {
             shared,
-            workers,
             plan,
             registry,
             slo: cfg.slo,
@@ -437,6 +592,21 @@ impl ServerPool {
     /// single-plan pools).
     pub fn registry(&self) -> Option<&Arc<ModelRegistry>> {
         self.registry.as_ref()
+    }
+
+    /// Workers currently alive. Supervision keeps this at the configured
+    /// worker count across executor panics while the
+    /// [`restart_budget`](PoolConfig::restart_budget) lasts; it only
+    /// shrinks once the budget is exhausted. Racy by nature (a respawn
+    /// momentarily counts both the dying worker and its replacement).
+    pub fn live_workers(&self) -> usize {
+        self.shared.alive_workers.load(Ordering::SeqCst)
+    }
+
+    /// The pool's live circuit breakers (`None` when
+    /// [`PoolConfig::breaker`] was not set).
+    pub fn breaker(&self) -> Option<&CircuitBreaker> {
+        self.shared.breaker.as_ref()
     }
 
     /// Admission control for registry-routed pools: resolve the model id
@@ -481,6 +651,16 @@ impl ServerPool {
         Ok(())
     }
 
+    /// Circuit-breaker admission: reject fast with the typed
+    /// [`Error::CircuitOpen`](crate::Error::CircuitOpen) while the routed
+    /// model's breaker is open (no-op when breakers are disabled).
+    fn check_breaker(&self, model: &str) -> Result<()> {
+        match &self.shared.breaker {
+            Some(b) => b.check(breaker_key(model)),
+            None => Ok(()),
+        }
+    }
+
     /// SLO admission check under the queue lock: `Err(Overloaded)` when
     /// the estimated queue delay exceeds the configured SLO. Checked
     /// *before* any block-on-full wait — an overloaded pool sheds
@@ -512,13 +692,16 @@ impl ServerPool {
     /// execution. On registry-routed pools the request is validated first
     /// (typed errors for unknown model ids and wrong input lengths); a
     /// request whose deadline already passed fails fast with
-    /// [`Error::DeadlineExceeded`](crate::Error::DeadlineExceeded); and
-    /// when [`PoolConfig::slo`] is set, admission control sheds with
+    /// [`Error::DeadlineExceeded`](crate::Error::DeadlineExceeded); a
+    /// request for a model whose circuit breaker is open fails fast with
+    /// [`Error::CircuitOpen`](crate::Error::CircuitOpen); and when
+    /// [`PoolConfig::slo`] is set, admission control sheds with
     /// [`Error::Overloaded`](crate::Error::Overloaded) instead of
     /// blocking once the estimated queue delay exceeds the SLO.
     pub fn submit(&self, mut req: Request) -> Result<ResponseHandle> {
         let est_s = self.admit(&mut req)?;
         self.reject_expired(&req)?;
+        self.check_breaker(&req.model)?;
         let (reply, rx) = mpsc::channel();
         let mut st = lock_state(&self.shared);
         self.check_slo(&st, &req.model)?;
@@ -541,10 +724,13 @@ impl ServerPool {
     /// Enqueue without blocking: [`Error::QueueFull`] when the bounded
     /// queue is at capacity,
     /// [`Error::Overloaded`](crate::Error::Overloaded) when the SLO
-    /// admission check sheds first.
+    /// admission check sheds first,
+    /// [`Error::CircuitOpen`](crate::Error::CircuitOpen) when the routed
+    /// model's breaker rejects.
     pub fn try_submit(&self, mut req: Request) -> Result<ResponseHandle> {
         let est_s = self.admit(&mut req)?;
         self.reject_expired(&req)?;
+        self.check_breaker(&req.model)?;
         let (reply, rx) = mpsc::channel();
         let mut st = lock_state(&self.shared);
         if st.closed {
@@ -569,18 +755,30 @@ impl ServerPool {
     /// request (in-flight batches complete; requests whose model was
     /// evicted meanwhile fail with
     /// [`Error::UnknownModel`](crate::Error::UnknownModel)), join them and
-    /// return the aggregated metrics.
-    pub fn shutdown(mut self) -> Result<PoolMetrics> {
+    /// return the aggregated metrics. Respawned workers are joined too —
+    /// the drain loop keeps popping handles until none remain, so a
+    /// replacement pushed by a dying worker is never leaked.
+    pub fn shutdown(self) -> Result<PoolMetrics> {
         self.close();
-        let mut per_worker = Vec::with_capacity(self.workers.len());
-        let mut panicked_workers = 0usize;
-        for h in self.workers.drain(..) {
+        let mut per_worker = Vec::new();
+        let mut dead_joins = 0usize;
+        loop {
+            let next = {
+                let mut hs = self
+                    .shared
+                    .handles
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner);
+                hs.pop()
+            };
+            let Some(h) = next else { break };
             match h.join() {
                 Ok(report) => per_worker.push(report),
-                Err(_) => panicked_workers += 1,
+                Err(_) => dead_joins += 1,
             }
         }
-        if per_worker.is_empty() && panicked_workers > 0 {
+        let caught = self.shared.caught_panics.load(Ordering::Relaxed) as usize;
+        if per_worker.is_empty() && dead_joins > 0 {
             return Err(Error::Coordinator("every pool worker panicked".into()));
         }
         let shed_by_model = self
@@ -590,12 +788,23 @@ impl ServerPool {
             .unwrap_or_else(PoisonError::into_inner)
             .clone();
         let expired = self.shared.submit_expired.load(Ordering::Relaxed)
-            + per_worker.iter().map(|w| w.expired).sum::<u64>();
+            + self.shared.expired.load(Ordering::Relaxed);
         Ok(PoolMetrics {
             per_worker,
-            panicked_workers,
+            panicked_workers: caught + dead_joins,
+            worker_restarts: self.shared.worker_restarts.load(Ordering::Relaxed),
             shed_by_model,
             expired,
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            largest_batch: self.shared.largest_batch.load(Ordering::Relaxed),
+            switches: self.shared.model_switches.load(Ordering::Relaxed),
+            breaker_trips: self.shared.breaker.as_ref().map_or(0, |b| b.trips()),
+            breaker_states: self
+                .shared
+                .breaker
+                .as_ref()
+                .map(|b| b.states())
+                .unwrap_or_default(),
         })
     }
 
@@ -611,7 +820,16 @@ impl ServerPool {
 impl Drop for ServerPool {
     fn drop(&mut self) {
         self.close();
-        for h in self.workers.drain(..) {
+        loop {
+            let next = {
+                let mut hs = self
+                    .shared
+                    .handles
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner);
+                hs.pop()
+            };
+            let Some(h) = next else { break };
             let _ = h.join();
         }
     }
@@ -621,6 +839,9 @@ impl Drop for ServerPool {
 /// and, when the last worker goes, closes the queue and **fails every
 /// pending request with the typed [`Error::PoolShutdown`]** (whatever
 /// model it names), so waiting clients error out instead of hanging.
+/// A supervised respawn increments `alive_workers` *before* the dying
+/// worker's guard drops, so a mid-handoff pool never observes zero
+/// workers.
 struct AliveGuard {
     shared: Arc<PoolShared>,
 }
@@ -642,6 +863,119 @@ impl Drop for AliveGuard {
     }
 }
 
+/// Spawn one worker thread and register its join handle in the shared
+/// handle list (`startup_delay` > 0 only for supervised respawns).
+fn spawn_worker<F, E>(
+    shared: &Arc<PoolShared>,
+    factory: &Arc<F>,
+    cfg: &WorkerCfg,
+    worker_id: usize,
+    startup_delay: Duration,
+) where
+    F: Fn(usize) -> E + Send + Sync + 'static,
+    E: RequestExecutor + 'static,
+{
+    let shared2 = Arc::clone(shared);
+    let factory2 = Arc::clone(factory);
+    let cfg2 = cfg.clone();
+    let handle = std::thread::spawn(move || {
+        if !startup_delay.is_zero() {
+            std::thread::sleep(startup_delay);
+        }
+        let guard = AliveGuard {
+            shared: Arc::clone(&shared2),
+        };
+        let mut rng = Xoshiro256::seed_from_u64(0x9E37_79B9_7F4A_7C15 ^ worker_id as u64);
+        let mut exec = factory2(worker_id);
+        let (report, panic_detail) = worker_loop(&shared2, &mut exec, &cfg2, &mut rng);
+        if panic_detail.is_some() {
+            // The executor may hold broken invariants after the caught
+            // panic: discard it and hand over to a freshly-built
+            // replacement while this thread's guard still counts as alive.
+            shared2.caught_panics.fetch_add(1, Ordering::Relaxed);
+            maybe_respawn(&shared2, &factory2, &cfg2, worker_id);
+        }
+        drop(guard);
+        report
+    });
+    shared
+        .handles
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .push(handle);
+}
+
+/// Supervision: replace a worker whose executor panicked, if the pool is
+/// still open and the restart budget allows. The replacement is counted
+/// alive *before* the caller's [`AliveGuard`] drops (no zero-worker
+/// window) and starts serving after a capped, jittered exponential
+/// backoff so a crash-looping executor cannot spin the supervisor.
+fn maybe_respawn<F, E>(
+    shared: &Arc<PoolShared>,
+    factory: &Arc<F>,
+    cfg: &WorkerCfg,
+    worker_id: usize,
+) where
+    F: Fn(usize) -> E + Send + Sync + 'static,
+    E: RequestExecutor + 'static,
+{
+    let closed = lock_state(shared).closed;
+    if closed {
+        return;
+    }
+    let claimed = shared
+        .restarts_left
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1));
+    let Ok(before) = claimed else {
+        return; // budget exhausted: capacity shrinks by one
+    };
+    // 1-based restart number pool-wide — drives the exponential backoff.
+    let attempt = (shared.restart_budget - before + 1) as u32;
+    shared.alive_workers.fetch_add(1, Ordering::SeqCst);
+    shared.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    let delay = restart_delay(cfg.restart_backoff, attempt, worker_id);
+    spawn_worker(shared, factory, cfg, worker_id, delay);
+}
+
+/// Capped jittered exponential backoff for the `attempt`-th respawn
+/// (1-based): `base · 2^(attempt−1)`, capped at 1 s, plus up to 50%
+/// deterministic jitter so simultaneous respawns de-correlate.
+fn restart_delay(base: Duration, attempt: u32, worker_id: usize) -> Duration {
+    let exp = base.saturating_mul(1u32 << attempt.saturating_sub(1).min(6));
+    let capped = exp.min(Duration::from_secs(1));
+    if capped.is_zero() {
+        return capped;
+    }
+    let mut rng = Xoshiro256::seed_from_u64(((attempt as u64) << 32) | worker_id as u64);
+    let jitter = rng.next_u64() % (capped.as_nanos() as u64 / 2 + 1);
+    capped + Duration::from_nanos(jitter)
+}
+
+/// Capped jittered exponential backoff before the `attempt`-th transient
+/// retry (1-based): `base · 2^(attempt−1)`, capped at 50 ms, plus up to
+/// 50% jitter from the worker's RNG.
+fn retry_delay(base: Duration, attempt: u32, rng: &mut Xoshiro256) -> Duration {
+    let exp = base.saturating_mul(1u32 << attempt.saturating_sub(1).min(6));
+    let capped = exp.min(Duration::from_millis(50));
+    if capped.is_zero() {
+        return capped;
+    }
+    let jitter = rng.next_u64() % (capped.as_nanos() as u64 / 2 + 1);
+    capped + Duration::from_nanos(jitter)
+}
+
+/// Best-effort rendering of a caught panic payload (`panic!` with a
+/// string literal or a formatted message covers practically all of std).
+fn panic_detail_of(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
 /// Append a job to the queue, assigning its arrival sequence number and
 /// folding its service estimate into the admission-control sum.
 fn push_job(st: &mut QueueState, req: Request, reply: mpsc::Sender<Result<Response>>, est_s: f64) {
@@ -654,14 +988,38 @@ fn push_job(st: &mut QueueState, req: Request, reply: mpsc::Sender<Result<Respon
         est_s,
         enqueued_at: Instant::now(),
         seq,
+        quarantine: false,
     });
 }
 
+/// Return a panicked batch's unanswered jobs to the *front* of the queue,
+/// quarantined (each will re-execute in a batch of one). Capacity is
+/// intentionally ignored — these requests were already admitted once and
+/// must not be dropped because of a neighbour's failure.
+fn requeue_quarantined(shared: &PoolShared, reqs: Vec<Request>, metas: Vec<JobMeta>) {
+    let mut st = lock_state(shared);
+    for (req, meta) in reqs.into_iter().zip(metas).rev() {
+        st.est_s += meta.est_s.max(0.0);
+        st.jobs.push_front(Job {
+            req,
+            reply: meta.reply,
+            est_s: meta.est_s,
+            enqueued_at: meta.enqueued_at,
+            seq: meta.seq,
+            quarantine: true,
+        });
+    }
+    drop(st);
+    shared.not_empty.notify_all();
+}
+
 /// Remove the job at `i`, keeping the queued-service sum consistent.
-fn take_job(st: &mut QueueState, i: usize) -> Job {
-    let job = st.jobs.remove(i).expect("index in range");
+/// `None` only on an out-of-range index (callers pass indices from
+/// [`best_idx`] under the same lock, so this is defensive).
+fn take_job(st: &mut QueueState, i: usize) -> Option<Job> {
+    let job = st.jobs.remove(i)?;
     st.est_s = (st.est_s - job.est_s).max(0.0);
-    job
+    Some(job)
 }
 
 /// Index of the scheduling-best queued job (smallest [`SchedKey`]:
@@ -689,8 +1047,9 @@ fn sweep_expired(shared: &PoolShared, st: &mut QueueState, expired: &mut u64) {
     while i < st.jobs.len() {
         match st.jobs[i].req.deadline {
             Some(d) if now >= d => {
-                let job = take_job(st, i);
+                let Some(job) = take_job(st, i) else { break };
                 *expired += 1;
+                shared.expired.fetch_add(1, Ordering::Relaxed);
                 dropped = true;
                 let _ = job.reply.send(Err(Error::DeadlineExceeded {
                     late_by: now.saturating_duration_since(d),
@@ -711,9 +1070,11 @@ fn sweep_expired(shared: &PoolShared, st: &mut QueueState, expired: &mut u64) {
 /// only while it names the same model. When the next-best job names a
 /// different model the batch ends — that job keeps its place and seeds
 /// the very next batch, so a minority model cannot be starved even under
-/// deadline pressure. For all-default requests the key order *is* arrival
-/// order, making this byte-for-byte the pre-v0.4 FIFO batcher. `None`
-/// once the queue is closed *and* drained.
+/// deadline pressure. A **quarantined** job (re-queued from a panicked
+/// batch) always forms a batch of one: never absorbed, never absorbing.
+/// For all-default requests the key order *is* arrival order, making this
+/// byte-for-byte the pre-v0.4 FIFO batcher. `None` once the queue is
+/// closed *and* drained.
 fn pop_batch(
     shared: &PoolShared,
     max_batch: usize,
@@ -724,20 +1085,32 @@ fn pop_batch(
     loop {
         sweep_expired(shared, &mut st, expired);
         if let Some(i) = best_idx(&st.jobs) {
-            let first = take_job(&mut st, i);
+            let Some(first) = take_job(&mut st, i) else {
+                continue;
+            };
+            if first.quarantine {
+                drop(st);
+                shared.not_full.notify_all();
+                return Some(vec![first]);
+            }
             let mut batch = vec![first];
             let deadline = Instant::now() + linger;
             while batch.len() < max_batch {
                 sweep_expired(shared, &mut st, expired);
                 match best_idx(&st.jobs) {
-                    Some(i) if st.jobs[i].req.model == batch[0].req.model => {
-                        let job = take_job(&mut st, i);
-                        batch.push(job);
+                    Some(i)
+                        if st.jobs[i].req.model == batch[0].req.model
+                            && !st.jobs[i].quarantine =>
+                    {
+                        if let Some(job) = take_job(&mut st, i) {
+                            batch.push(job);
+                        }
                         continue;
                     }
-                    // The next-best job names a different model: the batch
-                    // must not mix models — leave it queued (it seeds the
-                    // next batch) and execute what we have.
+                    // The next-best job names a different model (or is
+                    // quarantined): the batch must not absorb it — leave
+                    // it queued (it seeds the next batch) and execute
+                    // what we have.
                     Some(_) => break,
                     None => {}
                 }
@@ -771,59 +1144,201 @@ fn pop_batch(
     }
 }
 
+/// What became of one popped batch.
+enum BatchOutcome {
+    /// Every job was answered; the worker keeps serving.
+    Served,
+    /// The executor panicked (in `execute_batch` or a retry): unanswered
+    /// co-batched jobs were re-queued quarantined, the offender was failed
+    /// with [`Error::WorkerPanic`], and the worker must exit so the
+    /// supervisor can replace it and its possibly-corrupt executor.
+    Panicked(String),
+}
+
+/// Retry a transiently-failed request inside the worker: up to
+/// `cfg.retries` attempts with jittered exponential backoff, never
+/// sleeping past the request's deadline. Outer `Err(detail)` = the
+/// executor panicked during a retry.
+fn retry_request<E: RequestExecutor>(
+    exec: &mut E,
+    cfg: &WorkerCfg,
+    rng: &mut Xoshiro256,
+    req: &Request,
+    first: Error,
+) -> std::result::Result<Result<Vec<f32>>, String> {
+    let mut last = first;
+    for attempt in 1..=cfg.retries {
+        let backoff = retry_delay(cfg.retry_backoff, attempt, rng);
+        if let Some(d) = req.deadline {
+            let now = Instant::now();
+            if now >= d {
+                return Ok(Err(Error::DeadlineExceeded {
+                    late_by: now.saturating_duration_since(d),
+                }));
+            }
+            if now + backoff >= d {
+                // No time left to back off and try again: surface the
+                // transient error rather than blowing the deadline.
+                return Ok(Err(last));
+            }
+        }
+        std::thread::sleep(backoff);
+        match catch_unwind(AssertUnwindSafe(|| exec.execute(req))) {
+            Ok(Ok(v)) => return Ok(Ok(v)),
+            Ok(Err(e)) if e.is_transient() => last = e,
+            Ok(Err(e)) => return Ok(Err(e)),
+            Err(payload) => return Err(panic_detail_of(payload.as_ref())),
+        }
+    }
+    Ok(Err(last))
+}
+
+/// Execute one popped batch under panic supervision, answer every job
+/// (retrying transients), and record breaker outcomes.
+fn serve_batch<E: RequestExecutor>(
+    shared: &PoolShared,
+    exec: &mut E,
+    cfg: &WorkerCfg,
+    rng: &mut Xoshiro256,
+    jobs: Vec<Job>,
+    metrics: &mut Metrics,
+) -> BatchOutcome {
+    let popped_at = Instant::now();
+    let n = jobs.len();
+    let mut reqs = Vec::with_capacity(n);
+    let mut metas = Vec::with_capacity(n);
+    for j in jobs {
+        metrics.record_queue_delay(popped_at.saturating_duration_since(j.enqueued_at));
+        reqs.push(j.req);
+        metas.push(JobMeta {
+            reply: j.reply,
+            est_s: j.est_s,
+            enqueued_at: j.enqueued_at,
+            seq: j.seq,
+        });
+    }
+    let start = Instant::now();
+    let caught = catch_unwind(AssertUnwindSafe(|| exec.execute_batch(&reqs)));
+    let outs = match caught {
+        Ok(outs) => outs,
+        Err(payload) => {
+            let detail = panic_detail_of(payload.as_ref());
+            if n == 1 {
+                // The sole (possibly quarantined) request *is* the
+                // offender: fail it typed; nothing to re-queue.
+                if let Some(b) = &shared.breaker {
+                    b.record_failure(breaker_key(&reqs[0].model));
+                }
+                let _ = metas[0].reply.send(Err(Error::WorkerPanic {
+                    detail: detail.clone(),
+                }));
+            } else {
+                // Unclear which request poisoned the batch: re-queue all
+                // of them quarantined so each re-executes alone (repeated
+                // panics bisect to the offender at batch size 1).
+                requeue_quarantined(shared, reqs, metas);
+            }
+            return BatchOutcome::Panicked(detail);
+        }
+    };
+    let per_req = start.elapsed() / n as u32;
+    let mut results: Vec<Result<Vec<f32>>> = outs;
+    while results.len() < n {
+        results.push(Err(Error::Coordinator(
+            "executor returned too few outputs for its batch".into(),
+        )));
+    }
+    results.truncate(n);
+    let mut worker_panic: Option<String> = None;
+    for (i, res) in results.into_iter().enumerate() {
+        let resolved = match res {
+            Err(e) if e.is_transient() && cfg.retries > 0 && worker_panic.is_none() => {
+                match retry_request(exec, cfg, rng, &reqs[i], e) {
+                    Ok(r) => r,
+                    Err(detail) => {
+                        worker_panic = Some(detail.clone());
+                        Err(Error::WorkerPanic { detail })
+                    }
+                }
+            }
+            other => other,
+        };
+        if let Some(b) = &shared.breaker {
+            match &resolved {
+                Ok(_) => b.record_success(breaker_key(&reqs[i].model)),
+                // Queue-state outcomes must not punish the model.
+                Err(Error::DeadlineExceeded { .. } | Error::CircuitOpen { .. }) => {}
+                Err(_) => b.record_failure(breaker_key(&reqs[i].model)),
+            }
+        }
+        metrics.record_model(&reqs[i].model, per_req);
+        let msg = resolved.map(|output| Response {
+            id: reqs[i].id,
+            model: reqs[i].model.clone(),
+            device_latency_s: exec
+                .device_latency_s(&reqs[i])
+                .unwrap_or(cfg.fallback_latency_s),
+            host_latency_s: per_req.as_secs_f64(),
+            output,
+            batch: n,
+        });
+        // Ignore send failure: the client may have dropped its handle.
+        let _ = metas[i].reply.send(msg);
+    }
+    match worker_panic {
+        Some(detail) => BatchOutcome::Panicked(detail),
+        None => BatchOutcome::Served,
+    }
+}
+
 fn worker_loop<E: RequestExecutor>(
     shared: &PoolShared,
     exec: &mut E,
-    fallback_latency_s: f64,
-    max_batch: usize,
-    linger: Duration,
-) -> WorkerReport {
+    cfg: &WorkerCfg,
+    rng: &mut Xoshiro256,
+) -> (WorkerReport, Option<String>) {
     let mut metrics = Metrics::new();
     let mut batches = 0u64;
     let mut largest = 0usize;
     let mut expired = 0u64;
-    while let Some(jobs) = pop_batch(shared, max_batch, linger, &mut expired) {
-        let popped_at = Instant::now();
+    let mut switches_seen = 0u64;
+    let mut panic_detail = None;
+    while let Some(jobs) = pop_batch(shared, cfg.max_batch, cfg.linger, &mut expired) {
         let n = jobs.len();
-        let mut reqs = Vec::with_capacity(n);
-        let mut replies = Vec::with_capacity(n);
-        for j in jobs {
-            metrics.record_queue_delay(popped_at.saturating_duration_since(j.enqueued_at));
-            reqs.push(j.req);
-            replies.push(j.reply);
-        }
-        let start = Instant::now();
-        let mut outs = exec.execute_batch(&reqs).into_iter();
-        let per_req = start.elapsed() / n as u32;
-        batches += 1;
-        largest = largest.max(n);
-        for (req, reply) in reqs.iter().zip(replies) {
-            metrics.record_model(&req.model, per_req);
-            let msg = match outs.next() {
-                Some(Ok(output)) => Ok(Response {
-                    id: req.id,
-                    model: req.model.clone(),
-                    device_latency_s: exec.device_latency_s(req).unwrap_or(fallback_latency_s),
-                    host_latency_s: per_req.as_secs_f64(),
-                    output,
-                    batch: n,
-                }),
-                Some(Err(e)) => Err(e),
-                None => Err(Error::Coordinator(
-                    "executor returned too few outputs for its batch".into(),
-                )),
-            };
-            // Ignore send failure: the client may have dropped its handle.
-            let _ = reply.send(msg);
+        match serve_batch(shared, exec, cfg, rng, jobs, &mut metrics) {
+            BatchOutcome::Served => {
+                batches += 1;
+                largest = largest.max(n);
+                shared.batches.fetch_add(1, Ordering::Relaxed);
+                shared.largest_batch.fetch_max(n, Ordering::Relaxed);
+                let total = exec.model_switches();
+                shared
+                    .model_switches
+                    .fetch_add(total.saturating_sub(switches_seen), Ordering::Relaxed);
+                switches_seen = total;
+            }
+            BatchOutcome::Panicked(detail) => {
+                panic_detail = Some(detail);
+                break;
+            }
         }
     }
-    WorkerReport {
-        metrics,
-        batches,
-        max_batch: largest,
-        model_switches: exec.model_switches(),
-        expired,
-    }
+    // Flush the final switch delta so pool-level accounting survives even
+    // when this worker exits through the panic path.
+    let total = exec.model_switches();
+    shared
+        .model_switches
+        .fetch_add(total.saturating_sub(switches_seen), Ordering::Relaxed);
+    (
+        WorkerReport {
+            metrics,
+            batches,
+            max_batch: largest,
+            model_switches: total,
+            expired,
+        },
+        panic_detail,
+    )
 }
 
 #[cfg(test)]
@@ -864,6 +1379,7 @@ mod tests {
         let pm = pool.shutdown().unwrap();
         assert_eq!(pm.total_requests(), 10);
         assert_eq!(pm.panicked_workers, 0);
+        assert_eq!(pm.worker_restarts, 0);
         assert_eq!(pm.model_switches(), 0, "single-plan pools never switch");
     }
 
@@ -874,7 +1390,7 @@ mod tests {
             queue_depth: 64,
             max_batch: 8,
             linger: Duration::from_millis(20),
-            slo: None,
+            ..PoolConfig::default()
         };
         let pool = ServerPool::start(plan(), cfg, echo_executor).unwrap();
         let handles: Vec<_> = (0..32u64)
@@ -929,7 +1445,7 @@ mod tests {
             queue_depth: 64,
             max_batch: 4,
             linger: Duration::from_millis(5),
-            slo: None,
+            ..PoolConfig::default()
         };
         let pool = ServerPool::start(plan(), cfg, move |_| Recording {
             gate: Arc::clone(&g2),
@@ -989,7 +1505,7 @@ mod tests {
             queue_depth: 2,
             max_batch: 1,
             linger: Duration::ZERO,
-            slo: None,
+            ..PoolConfig::default()
         };
         let pool = ServerPool::start(plan(), cfg, move |_| {
             let gate = Arc::clone(&g2);
@@ -1038,7 +1554,7 @@ mod tests {
             queue_depth: 64,
             max_batch: 4,
             linger: Duration::from_millis(1),
-            slo: None,
+            ..PoolConfig::default()
         };
         let pool = ServerPool::start(plan(), cfg, |_| {
             |req: &Request| {
@@ -1060,7 +1576,10 @@ mod tests {
     }
 
     #[test]
-    fn worker_death_surfaces_as_typed_errors_not_hangs() {
+    fn worker_panic_is_isolated_typed_and_the_worker_respawns() {
+        // A panic on request 3 must fail *that* request with the typed
+        // WorkerPanic, and supervision must replace the worker so every
+        // other request — before and after — still serves.
         let pool = ServerPool::start(plan(), PoolConfig::single_worker(), |_| {
             |req: &Request| {
                 if req.id == 3 {
@@ -1073,26 +1592,178 @@ mod tests {
         for id in 0..3u64 {
             assert!(pool.submit(Request::timing(id)).unwrap().wait().is_ok());
         }
-        let poisoned = pool.submit(Request::timing(3)).unwrap();
-        let err = poisoned.wait().err().expect("dead worker must surface as Err");
-        assert!(matches!(err, Error::PoolShutdown), "typed: {err}");
-        // The pool is dead: further submissions fail, shutdown reports it.
-        let deadline = Instant::now() + Duration::from_secs(5);
-        loop {
-            match pool.submit(Request::timing(4)) {
-                Err(e) => {
-                    assert!(matches!(e, Error::PoolShutdown), "typed: {e}");
-                    break;
+        let err = pool
+            .submit(Request::timing(3))
+            .unwrap()
+            .wait()
+            .err()
+            .expect("panicked request must surface as Err");
+        assert!(matches!(err, Error::WorkerPanic { .. }), "typed: {err}");
+        assert!(err.to_string().contains("injected worker failure"), "{err}");
+        // The respawned worker keeps serving: later requests succeed (the
+        // submit queue never closed — capacity was handed over, not lost).
+        for id in 4..8u64 {
+            let resp = pool.submit(Request::timing(id)).unwrap().wait().unwrap();
+            assert_eq!(resp.output, vec![id as f32]);
+        }
+        assert_eq!(pool.live_workers(), 1, "respawn must restore capacity");
+        let pm = pool.shutdown().unwrap();
+        assert_eq!(pm.panicked_workers, 1);
+        assert_eq!(pm.worker_restarts, 1);
+        assert!(pm.summary().contains("restarts=1"), "{}", pm.summary());
+    }
+
+    #[test]
+    fn a_poison_request_cannot_take_its_batchmates_down() {
+        // Batch [1, 666, 2] panics as a whole; all three re-queue
+        // quarantined and re-execute solo: 666 fails typed, 1 and 2
+        // succeed. Two panics → two respawns.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g2 = Arc::clone(&gate);
+        struct Poison {
+            gate: Arc<(Mutex<bool>, Condvar)>,
+        }
+        impl RequestExecutor for Poison {
+            fn execute(&mut self, req: &Request) -> Result<Vec<f32>> {
+                let (lock, cv) = &*self.gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
                 }
-                Ok(h) => {
-                    let err = h.wait().err().expect("dead pool must fail requests");
-                    assert!(matches!(err, Error::PoolShutdown), "typed: {err}");
+                drop(open);
+                if req.id == 666 {
+                    panic!("poison request");
                 }
+                Ok(vec![req.id as f32])
             }
-            assert!(Instant::now() < deadline, "pool never noticed worker death");
+        }
+        let cfg = PoolConfig {
+            workers: 1,
+            queue_depth: 64,
+            max_batch: 4,
+            linger: Duration::from_millis(20),
+            ..PoolConfig::default()
+        };
+        let pool = ServerPool::start(plan(), cfg, move |_| Poison {
+            gate: Arc::clone(&g2),
+        })
+        .unwrap();
+        // Sentinel: the worker pops it alone and blocks on the gate while
+        // the real batch queues up behind it.
+        let sentinel = pool.submit(Request::timing(0)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while pool.queue_len() > 0 {
+            assert!(Instant::now() < deadline, "worker never popped sentinel");
             std::thread::sleep(Duration::from_millis(1));
         }
-        assert!(pool.shutdown().is_err());
+        let h1 = pool.submit(Request::timing(1)).unwrap();
+        let h666 = pool.submit(Request::timing(666)).unwrap();
+        let h2 = pool.submit(Request::timing(2)).unwrap();
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        sentinel.wait().unwrap();
+        assert_eq!(h1.wait().unwrap().output, vec![1.0]);
+        let err = h666.wait().err().expect("poison request must fail");
+        assert!(matches!(err, Error::WorkerPanic { .. }), "typed: {err}");
+        assert_eq!(h2.wait().unwrap().output, vec![2.0]);
+        assert_eq!(pool.live_workers(), 1);
+        let pm = pool.shutdown().unwrap();
+        assert_eq!(pm.panicked_workers, 2, "batch panic + solo re-panic");
+        assert_eq!(pm.worker_restarts, 2);
+    }
+
+    #[test]
+    fn transient_failures_are_retried_within_the_worker() {
+        struct Flaky {
+            calls: u64,
+        }
+        impl RequestExecutor for Flaky {
+            fn execute(&mut self, req: &Request) -> Result<Vec<f32>> {
+                self.calls += 1;
+                if self.calls % 2 == 1 {
+                    Err(Error::Transient("first attempt always hiccups".into()))
+                } else {
+                    Ok(vec![req.id as f32])
+                }
+            }
+        }
+        let cfg = PoolConfig {
+            workers: 1,
+            queue_depth: 64,
+            max_batch: 1,
+            linger: Duration::ZERO,
+            retries: 2,
+            retry_backoff: Duration::from_micros(50),
+            ..PoolConfig::default()
+        };
+        let pool = ServerPool::start(plan(), cfg, |_| Flaky { calls: 0 }).unwrap();
+        for id in 0..4u64 {
+            let resp = pool.submit(Request::timing(id)).unwrap().wait().unwrap();
+            assert_eq!(resp.output, vec![id as f32], "retry must mask the hiccup");
+        }
+        let pm = pool.shutdown().unwrap();
+        assert_eq!(pm.panicked_workers, 0);
+        assert_eq!(pm.total_requests(), 4);
+    }
+
+    #[test]
+    fn breaker_trips_after_consecutive_failures_and_rejects_fast() {
+        struct AlwaysFail;
+        impl RequestExecutor for AlwaysFail {
+            fn execute(&mut self, _req: &Request) -> Result<Vec<f32>> {
+                Err(Error::Coordinator("permanently broken".into()))
+            }
+        }
+        let cfg = PoolConfig {
+            workers: 1,
+            queue_depth: 64,
+            max_batch: 1,
+            linger: Duration::ZERO,
+            retries: 0,
+            breaker: Some(BreakerConfig {
+                failure_threshold: 3,
+                open_for: Duration::from_secs(60),
+                half_open_probes: 1,
+            }),
+            ..PoolConfig::default()
+        };
+        let pool = ServerPool::start(plan(), cfg, |_| AlwaysFail).unwrap();
+        for id in 0..3u64 {
+            let err = pool
+                .submit(Request::timing(id))
+                .unwrap()
+                .wait()
+                .err()
+                .expect("executor always fails");
+            assert!(matches!(err, Error::Coordinator(_)), "typed: {err}");
+        }
+        // Three consecutive failures tripped the (default) breaker:
+        // submission now rejects fast without queueing.
+        let err = pool
+            .submit(Request::timing(99))
+            .err()
+            .expect("open breaker must reject at submission");
+        match err {
+            Error::CircuitOpen { model, retry_after } => {
+                assert_eq!(model, "(default)");
+                assert!(retry_after > Duration::ZERO);
+            }
+            other => panic!("expected CircuitOpen, got {other}"),
+        }
+        assert_eq!(
+            pool.breaker().map(|b| b.state("(default)")),
+            Some(BreakerState::Open)
+        );
+        let pm = pool.shutdown().unwrap();
+        assert_eq!(pm.breaker_trips, 1);
+        assert_eq!(
+            pm.breaker_states.get("(default)").copied(),
+            Some(BreakerState::Open)
+        );
+        assert!(pm.summary().contains("breaker_trips=1"), "{}", pm.summary());
     }
 
     #[test]
@@ -1132,6 +1803,7 @@ mod tests {
             max_batch: 1,
             linger: Duration::ZERO,
             slo: Some(Duration::from_nanos(1)),
+            ..PoolConfig::default()
         };
         let pool = ServerPool::start(plan(), cfg, move |_| {
             let gate = Arc::clone(&g2);
@@ -1189,6 +1861,21 @@ mod tests {
         let err = ServerPool::start(plan(), cfg, echo_executor)
             .err()
             .expect("zero SLO must be invalid");
+        assert!(matches!(err, Error::InvalidConfig(_)), "typed: {err}");
+    }
+
+    #[test]
+    fn invalid_breaker_config_is_rejected_at_start() {
+        let cfg = PoolConfig {
+            breaker: Some(BreakerConfig {
+                failure_threshold: 0,
+                ..BreakerConfig::default()
+            }),
+            ..PoolConfig::default()
+        };
+        let err = ServerPool::start(plan(), cfg, echo_executor)
+            .err()
+            .expect("zero failure_threshold must be invalid");
         assert!(matches!(err, Error::InvalidConfig(_)), "typed: {err}");
     }
 }

@@ -35,6 +35,7 @@
 //! ```
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use crate::coordinator::pool::{PoolConfig, RequestExecutor, ServerPool};
@@ -43,6 +44,12 @@ use crate::engine::compile::CompiledModel;
 use crate::engine::wcache::SlabCache;
 use crate::engine::{BackendKind, Engine};
 use crate::error::{Error, Result};
+
+/// Process-wide registration-generation counter. Generations are unique
+/// across *all* registries because registries can share one `SlabCache`:
+/// two registries must never stamp the same generation onto the same
+/// network name. Generation 0 is reserved for unregistered artifacts.
+static NEXT_GENERATION: AtomicU64 = AtomicU64::new(1);
 
 /// Thread-safe registry of compiled models sharing one slab cache.
 /// Registration and eviction are runtime operations: a model can be added
@@ -105,7 +112,7 @@ impl ModelRegistry {
     pub fn register(
         &self,
         id: impl Into<String>,
-        model: CompiledModel,
+        mut model: CompiledModel,
     ) -> Result<Arc<CompiledModel>> {
         let id = id.into();
         if id.is_empty() {
@@ -130,6 +137,12 @@ impl ModelRegistry {
                 model.network_name()
             )));
         }
+        // Stamp a fresh generation into the artifact's slab identities
+        // before the artifact is shared: slabs generated for any earlier
+        // registration of this network (including stragglers re-inserted
+        // after an evict) live under a different generation and can never
+        // alias this registration's cache entries.
+        model.assign_generation(NEXT_GENERATION.fetch_add(1, Ordering::Relaxed));
         let model = Arc::new(model);
         m.insert(id, Arc::clone(&model));
         Ok(model)
@@ -141,8 +154,10 @@ impl ModelRegistry {
     /// [`Error::UnknownModel`] when a worker reaches them; a batch already
     /// **executing** the model completes (it holds the artifact `Arc`) and
     /// may re-insert some of its slabs after the purge — those stragglers
-    /// are not orphaned, they age out through normal LRU pressure under
-    /// the shared budget. Returns the evicted artifact.
+    /// carry the evicted registration's *generation*, so they can never be
+    /// adopted by a later registration of the same model id, and they age
+    /// out through normal LRU pressure under the shared budget. Returns
+    /// the evicted artifact.
     pub fn evict(&self, id: &str) -> Result<Arc<CompiledModel>> {
         let model = self
             .lock()
@@ -168,13 +183,11 @@ impl ModelRegistry {
     pub fn resolve(&self, id: &str) -> Result<(String, Arc<CompiledModel>)> {
         let m = self.lock();
         if id.is_empty() {
-            return match m.len() {
-                1 => {
-                    let (k, v) = m.iter().next().expect("len checked");
-                    Ok((k.clone(), Arc::clone(v)))
-                }
-                n => Err(Error::UnknownModel(format!(
-                    "(default route: {n} models registered, name one of them)"
+            return match m.iter().next() {
+                Some((k, v)) if m.len() == 1 => Ok((k.clone(), Arc::clone(v))),
+                _ => Err(Error::UnknownModel(format!(
+                    "(default route: {} models registered, name one of them)",
+                    m.len()
                 ))),
             };
         }
@@ -212,6 +225,15 @@ fn clone_typed(e: &Error) -> Error {
             slo: *slo,
         },
         Error::DeadlineExceeded { late_by } => Error::DeadlineExceeded { late_by: *late_by },
+        Error::QueueFull => Error::QueueFull,
+        Error::WorkerPanic { detail } => Error::WorkerPanic {
+            detail: detail.clone(),
+        },
+        Error::CircuitOpen { model, retry_after } => Error::CircuitOpen {
+            model: model.clone(),
+            retry_after: *retry_after,
+        },
+        Error::Transient(s) => Error::Transient(s.clone()),
         other => Error::Coordinator(other.to_string()),
     }
 }
@@ -275,7 +297,9 @@ impl RegistryExecutor {
             }
             self.active = Some((id.to_string(), model));
         }
-        Ok(self.engine.as_mut().expect("engine built on activation"))
+        self.engine.as_mut().ok_or_else(|| {
+            Error::Coordinator("worker backend missing after activation".into())
+        })
     }
 }
 
@@ -339,7 +363,11 @@ impl RequestExecutor for RegistryExecutor {
         }
         results
             .into_iter()
-            .map(|r| r.expect("every batch slot filled"))
+            .map(|r| {
+                r.unwrap_or_else(|| {
+                    Err(Error::Coordinator("batch slot left unfilled".into()))
+                })
+            })
             .collect()
     }
 
@@ -479,6 +507,48 @@ mod tests {
         reg.evict("a").unwrap();
         assert_eq!(reg.cache().len(), 0, "eviction must purge the model's slabs");
         assert!(reg.cache().evictions() >= 1);
+    }
+
+    #[test]
+    fn reregistration_gets_a_fresh_generation_and_stragglers_cannot_alias_it() {
+        // The evict-vs-in-flight race from PR 5: a batch still executing an
+        // evicted model holds the old artifact Arc and may re-insert slabs
+        // *after* the purge. With generation-stamped keys the straggler's
+        // entries live under the old generation, so a re-registered model
+        // with the same id/network name regenerates instead of adopting
+        // stale slabs.
+        let reg = ModelRegistry::with_budget(1 << 20);
+        let old = reg.register("a", compile("a")).unwrap();
+        let g_old = old.generation();
+        assert!(g_old > 0, "registration must stamp a nonzero generation");
+        assert!(
+            old.weights_keys().iter().all(|k| k.generation == g_old),
+            "every weights key carries the registration generation"
+        );
+        reg.evict("a").unwrap();
+        // Straggler: the in-flight batch re-inserts a slab under the OLD key
+        // after the purge.
+        let straggler_key = crate::engine::SlabKey {
+            layer: old.weights_keys()[0].clone(),
+            col_tile: 0,
+        };
+        reg.cache()
+            .try_get_or_generate(straggler_key, || Ok(vec![f32::NAN; 16]))
+            .unwrap();
+        // Re-register the same id + network name.
+        let new = reg.register("a", compile("a")).unwrap();
+        assert!(new.generation() > g_old, "re-registration bumps the generation");
+        let new_key = crate::engine::SlabKey {
+            layer: new.weights_keys()[0].clone(),
+            col_tile: 0,
+        };
+        let hits_before = reg.cache().hits();
+        let v = reg
+            .cache()
+            .try_get_or_generate(new_key, || Ok(vec![1.0; 16]))
+            .unwrap();
+        assert_eq!(reg.cache().hits(), hits_before, "must NOT adopt the straggler");
+        assert_eq!(v.as_slice(), &[1.0; 16], "fresh numerics, not the stale NaNs");
     }
 
     #[test]

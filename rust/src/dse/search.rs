@@ -149,6 +149,11 @@ pub fn sweep(
             }));
         }
         for h in handles {
+            // A DSE worker evaluates a pure analytical model over its grid
+            // shard; a panic there is a modelling bug worth crashing the
+            // sweep for (silently dropping a shard would corrupt the
+            // argmax).
+            #[allow(clippy::expect_used)]
             results.extend(h.join().expect("DSE worker panicked"));
         }
     });
@@ -172,7 +177,7 @@ pub fn optimise(
     let feasible = points.len();
     let best = points
         .into_iter()
-        .max_by(|a, b| a.inf_per_s().partial_cmp(&b.inf_per_s()).unwrap())
+        .max_by(|a, b| a.inf_per_s().total_cmp(&b.inf_per_s()))
         .ok_or_else(|| Error::NoFeasibleDesign {
             network: net.name.clone(),
             platform: platform.name.to_string(),

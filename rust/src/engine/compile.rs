@@ -49,6 +49,10 @@ pub struct CompiledModel {
     alpha_words: u64,
     weights_keys: Vec<WeightsKey>,
     weight_seeds: Vec<u64>,
+    /// Registration generation stamped into every weights key (0 until the
+    /// artifact is registered — see
+    /// [`ModelRegistry::register`](crate::coordinator::registry::ModelRegistry::register)).
+    generation: u64,
     /// Fitted once per artifact, on first use by a numeric backend —
     /// timing-only (analytical) pools never pay the fit.
     hw: OnceLock<Vec<Option<Arc<HwOvsfWeights>>>>,
@@ -114,8 +118,28 @@ impl CompiledModel {
             alpha_words,
             weights_keys,
             weight_seeds,
+            generation: 0,
             hw: OnceLock::new(),
         })
+    }
+
+    /// The registration generation this artifact's slab identities live
+    /// under (0 for unregistered artifacts).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Stamp a registration generation into the artifact and every
+    /// [`WeightsKey`] it owns. Called by
+    /// [`ModelRegistry::register`](crate::coordinator::registry::ModelRegistry::register)
+    /// before the artifact is shared, so slabs generated for an earlier
+    /// (evicted) registration of the same model id can never be adopted by
+    /// this one.
+    pub(crate) fn assign_generation(&mut self, generation: u64) {
+        self.generation = generation;
+        for k in &mut self.weights_keys {
+            k.generation = generation;
+        }
     }
 
     /// The validated plan this artifact executes.

@@ -1,0 +1,408 @@
+//! [`FaultyBackend`] — deterministic, seeded fault injection over any
+//! [`ExecutionBackend`].
+//!
+//! The serving stack's fault-tolerance claims (worker supervision, typed
+//! retryable errors, circuit breakers, slab-integrity checksums) are only
+//! worth anything if every failure mode is *reproducible* under test. This
+//! wrapper applies a [`FaultPlan`] — per-call probabilities of typed
+//! transient errors, permanent errors, latency spikes, worker panics and
+//! slab bit-flips — drawn from a seeded [`Xoshiro256`], so a chaos soak
+//! replays the exact same fault schedule on every run of the same seed.
+//!
+//! Faults are injected **before** delegating to the wrapped backend, so a
+//! call that is not selected for injection executes exactly the code the
+//! production path runs — successful responses stay bit-identical to a
+//! fault-free run. Injected slab bit-flips corrupt the *cache* (via
+//! [`SlabCache::flip_bit`]), not the in-flight computation: the integrity
+//! checksum must catch them on the next hit, which is precisely the
+//! property under test.
+//!
+//! A zero-probability plan (the default) makes the wrapper a transparent
+//! pass-through — the configuration the hotpath bench uses to measure the
+//! fault-tolerance layer's overhead.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::engine::backend::{EnginePlan, ExecutionBackend, ExecutionReport, LayerOutcome};
+use crate::engine::compile::CompiledModel;
+use crate::engine::wcache::SlabCache;
+use crate::error::{Error, Result};
+use crate::util::prng::Xoshiro256;
+
+/// Seeded per-call fault probabilities. Each backend call rolls each class
+/// independently, in a fixed order (panic, latency spike, bit-flip,
+/// transient, permanent), so the schedule is a pure function of the seed
+/// and the call sequence.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// PRNG seed — same seed, same call sequence ⇒ same fault schedule.
+    pub seed: u64,
+    /// Probability of a typed [`Error::Transient`] (retryable) per call.
+    pub transient: f64,
+    /// Probability of a permanent (non-retryable) error per call.
+    pub permanent: f64,
+    /// Probability of a worker panic per call.
+    pub panic_p: f64,
+    /// Probability of a latency spike (sleep of [`spike`](Self::spike)).
+    pub latency_spike: f64,
+    /// Duration of one injected latency spike.
+    pub spike: Duration,
+    /// Probability of flipping one bit of one resident cached slab.
+    pub bitflip: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing — the transparent pass-through used to
+    /// measure the wrapper's fault-free overhead.
+    pub fn none() -> Self {
+        Self {
+            seed: 0,
+            transient: 0.0,
+            permanent: 0.0,
+            panic_p: 0.0,
+            latency_spike: 0.0,
+            spike: Duration::from_millis(1),
+            bitflip: 0.0,
+        }
+    }
+
+    /// The same plan re-seeded for one worker, so a pool of workers sharing
+    /// one logical plan still draw independent (but reproducible) fault
+    /// schedules.
+    #[must_use]
+    pub fn for_worker(mut self, worker: usize) -> Self {
+        self.seed ^= (worker as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self
+    }
+
+    fn validate(&self) {
+        debug_assert!(
+            [
+                self.transient,
+                self.permanent,
+                self.panic_p,
+                self.latency_spike,
+                self.bitflip
+            ]
+            .iter()
+            .all(|p| (0.0..=1.0).contains(p)),
+            "fault probabilities must lie in [0, 1]"
+        );
+    }
+}
+
+/// Lock-free injection counters, shared across backend instances through an
+/// `Arc` so a respawned worker's replacement backend keeps accumulating
+/// into the same tallies (a panicking worker must not lose its stats).
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    transients: AtomicU64,
+    permanents: AtomicU64,
+    panics: AtomicU64,
+    spikes: AtomicU64,
+    bitflips: AtomicU64,
+}
+
+impl FaultStats {
+    /// Injected transient errors.
+    pub fn transients(&self) -> u64 {
+        self.transients.load(Ordering::Relaxed)
+    }
+
+    /// Injected permanent errors.
+    pub fn permanents(&self) -> u64 {
+        self.permanents.load(Ordering::Relaxed)
+    }
+
+    /// Injected worker panics.
+    pub fn panics(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    /// Injected latency spikes.
+    pub fn spikes(&self) -> u64 {
+        self.spikes.load(Ordering::Relaxed)
+    }
+
+    /// Injected slab bit-flips (attempted; a flip on an empty cache is
+    /// still counted as an attempt by the caller rolling it, but only
+    /// successful flips count here).
+    pub fn bitflips(&self) -> u64 {
+        self.bitflips.load(Ordering::Relaxed)
+    }
+
+    /// Total injected faults of every class.
+    pub fn total(&self) -> u64 {
+        self.transients()
+            + self.permanents()
+            + self.panics()
+            + self.spikes()
+            + self.bitflips()
+    }
+}
+
+/// Fault-injecting wrapper over any [`ExecutionBackend`]. Construct with
+/// [`new`](Self::new) (or [`with_cache`](Self::with_cache) to enable slab
+/// bit-flip injection) and hand to
+/// [`Engine::with_backend`](crate::engine::Engine::with_backend) — every
+/// engine/pool path then runs through the fault schedule.
+pub struct FaultyBackend<B: ExecutionBackend> {
+    inner: B,
+    plan: FaultPlan,
+    rng: Xoshiro256,
+    stats: Arc<FaultStats>,
+    /// Cache to corrupt on bit-flip injection (usually the same shared
+    /// cache the wrapped simulator generates through). `None` disables the
+    /// bit-flip class.
+    cache: Option<Arc<SlabCache>>,
+}
+
+impl<B: ExecutionBackend> FaultyBackend<B> {
+    /// Wrap `inner` under `plan` (bit-flip injection disabled — no cache).
+    pub fn new(inner: B, plan: FaultPlan) -> Self {
+        plan.validate();
+        let rng = Xoshiro256::seed_from_u64(plan.seed);
+        Self {
+            inner,
+            plan,
+            rng,
+            stats: Arc::new(FaultStats::default()),
+            cache: None,
+        }
+    }
+
+    /// Wrap `inner` under `plan`, flipping bits in `cache` when the
+    /// bit-flip class fires.
+    pub fn with_cache(inner: B, plan: FaultPlan, cache: Arc<SlabCache>) -> Self {
+        let mut b = Self::new(inner, plan);
+        b.cache = Some(cache);
+        b
+    }
+
+    /// Accumulate injections into an existing stats block (e.g. one shared
+    /// across every worker of a pool, surviving worker respawns).
+    #[must_use]
+    pub fn sharing_stats(mut self, stats: Arc<FaultStats>) -> Self {
+        self.stats = stats;
+        self
+    }
+
+    /// The injection counters (clone the `Arc` to read after the backend
+    /// moved into an engine).
+    pub fn stats(&self) -> Arc<FaultStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// Roll the fault schedule for one backend call. Non-fatal classes
+    /// (spike, bit-flip) apply their side effect and fall through; fatal
+    /// classes return/panic. The roll order is fixed so the schedule is
+    /// seed-deterministic.
+    fn inject(&mut self) -> Result<()> {
+        let p = self.plan.clone();
+        if p.panic_p > 0.0 && self.rng.next_f64() < p.panic_p {
+            self.stats.panics.fetch_add(1, Ordering::Relaxed);
+            panic!("injected worker panic (chaos)");
+        }
+        if p.latency_spike > 0.0 && self.rng.next_f64() < p.latency_spike {
+            self.stats.spikes.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(p.spike);
+        }
+        if p.bitflip > 0.0 && self.rng.next_f64() < p.bitflip {
+            if let Some(cache) = &self.cache {
+                if cache.flip_bit(self.rng.next_u64()) {
+                    self.stats.bitflips.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        if p.transient > 0.0 && self.rng.next_f64() < p.transient {
+            self.stats.transients.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Transient("injected backend hiccup (chaos)".into()));
+        }
+        if p.permanent > 0.0 && self.rng.next_f64() < p.permanent {
+            self.stats.permanents.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Coordinator(
+                "injected permanent fault (chaos)".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl<B: ExecutionBackend> ExecutionBackend for FaultyBackend<B> {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn plan(&mut self, plan: &EnginePlan) -> Result<()> {
+        self.inner.plan(plan)
+    }
+
+    fn preload(&mut self, model: &Arc<CompiledModel>) -> Result<()> {
+        self.inner.preload(model)
+    }
+
+    fn execute_layer(&mut self, idx: usize, input: &[f32]) -> Result<LayerOutcome> {
+        self.inject()?;
+        self.inner.execute_layer(idx, input)
+    }
+
+    fn execute_layer_batch(&mut self, idx: usize, inputs: &[&[f32]]) -> Result<Vec<LayerOutcome>> {
+        self.inject()?;
+        self.inner.execute_layer_batch(idx, inputs)
+    }
+
+    fn finish(&mut self) -> Result<ExecutionReport> {
+        self.inner.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{DesignPoint, Platform};
+    use crate::engine::{Engine, SimBackend};
+    use crate::util::prng::Xoshiro256;
+    use crate::workload::{Layer, Network, RatioProfile};
+
+    fn tiny_plan() -> EnginePlan {
+        let net = Network {
+            name: "tiny".into(),
+            layers: vec![
+                Layer::conv("stem", 8, 8, 4, 8, 3, 1, 1, false),
+                Layer::conv("b.conv1", 8, 8, 8, 8, 3, 1, 1, true),
+                Layer::fc("fc", 8, 5),
+            ],
+        };
+        let profile = RatioProfile::uniform(&net, 0.5);
+        Engine::builder()
+            .platform(Platform::z7045())
+            .bandwidth(4)
+            .design_point(DesignPoint::new(8, 4, 8, 4))
+            .network(net)
+            .profile(profile)
+            .plan()
+            .unwrap()
+    }
+
+    fn tiny_input() -> Vec<f32> {
+        Xoshiro256::seed_from_u64(99).normal_vec(8 * 8 * 4)
+    }
+
+    #[test]
+    fn zero_probability_plan_is_a_transparent_passthrough() {
+        let plan = tiny_plan();
+        let input = tiny_input();
+        let mut bare = Engine::with_backend(plan.clone(), Box::new(SimBackend::new())).unwrap();
+        let expect = bare.infer(&input).unwrap().output;
+        let faulty = FaultyBackend::new(SimBackend::new(), FaultPlan::none());
+        let stats = faulty.stats();
+        let mut guarded = Engine::with_backend(plan, Box::new(faulty)).unwrap();
+        let got = guarded.infer(&input).unwrap().output;
+        assert_eq!(got, expect, "pass-through must not change a single bit");
+        assert_eq!(stats.total(), 0, "nothing may be injected at p = 0");
+    }
+
+    #[test]
+    fn transient_injection_is_typed_and_seed_deterministic() {
+        let run = |seed: u64| -> (Vec<bool>, u64) {
+            let cfg = FaultPlan {
+                seed,
+                transient: 0.5,
+                ..FaultPlan::none()
+            };
+            let mut backend = FaultyBackend::new(SimBackend::new(), cfg);
+            backend.plan(&tiny_plan()).unwrap();
+            let stats = backend.stats();
+            let mut outcomes = Vec::new();
+            for _ in 0..32 {
+                match backend.execute_layer(0, &[]) {
+                    Ok(_) => outcomes.push(true),
+                    Err(e) => {
+                        assert!(
+                            matches!(e, Error::Transient(_)),
+                            "injection must be typed: {e}"
+                        );
+                        assert!(e.is_transient());
+                        outcomes.push(false);
+                    }
+                }
+            }
+            (outcomes, stats.transients())
+        };
+        let (a, n_a) = run(7);
+        let (b, n_b) = run(7);
+        assert_eq!(a, b, "same seed must replay the same fault schedule");
+        assert_eq!(n_a, n_b);
+        assert!(n_a > 0, "p = 0.5 over 32 calls must fire");
+        assert!(a.iter().any(|ok| *ok), "and must not fire every time");
+        let (c, _) = run(8);
+        assert_ne!(a, c, "different seeds draw different schedules");
+    }
+
+    #[test]
+    fn bitflip_injection_corrupts_the_cache_and_checksums_catch_it() {
+        let cache = Arc::new(SlabCache::new());
+        let plan = tiny_plan();
+        let input = tiny_input();
+        // Reference numerics, fault-free.
+        let mut bare = Engine::with_backend(
+            plan.clone(),
+            Box::new(SimBackend::with_cache(Arc::new(SlabCache::new()))),
+        )
+        .unwrap();
+        let expect = bare.infer(&input).unwrap().output;
+        // Flip a cached bit on every call: the checksum path must evict and
+        // regenerate, keeping the numerics bit-identical.
+        let cfg = FaultPlan {
+            seed: 3,
+            bitflip: 1.0,
+            ..FaultPlan::none()
+        };
+        let faulty = FaultyBackend::with_cache(
+            SimBackend::with_cache(Arc::clone(&cache)),
+            cfg,
+            Arc::clone(&cache),
+        );
+        let stats = faulty.stats();
+        let mut guarded = Engine::with_backend(plan, Box::new(faulty)).unwrap();
+        let first = guarded.infer(&input).unwrap().output;
+        let second = guarded.infer(&input).unwrap().output;
+        assert_eq!(first, expect, "corruption must never reach the output");
+        assert_eq!(second, expect, "corruption must never reach the output");
+        assert!(stats.bitflips() > 0, "flips must have been injected");
+        assert!(
+            cache.corruptions() > 0,
+            "checksums must have caught at least one flip"
+        );
+    }
+
+    #[test]
+    fn panic_injection_panics() {
+        let cfg = FaultPlan {
+            seed: 1,
+            panic_p: 1.0,
+            ..FaultPlan::none()
+        };
+        let mut backend = FaultyBackend::new(SimBackend::new(), cfg);
+        backend.plan(&tiny_plan()).unwrap();
+        let stats = backend.stats();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = backend.execute_layer(0, &[]);
+        }));
+        assert!(r.is_err(), "p = 1 must panic");
+        assert_eq!(stats.panics(), 1);
+    }
+}

@@ -40,6 +40,7 @@
 pub mod analytical;
 pub mod backend;
 pub mod compile;
+pub mod fault;
 pub mod pjrt;
 pub mod sim;
 pub mod wcache;
@@ -49,6 +50,7 @@ pub use backend::{
     EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome, OverlapTelemetry,
 };
 pub use compile::{CompiledModel, Compiler};
+pub use fault::{FaultPlan, FaultStats, FaultyBackend};
 pub use pjrt::{PjrtBackend, PjrtConfig};
 pub use sim::SimBackend;
 pub use wcache::{SlabCache, SlabKey, WeightsKey};
@@ -273,10 +275,7 @@ impl Engine {
                 )));
             }
             if outcomes.iter().all(|o| o.output.is_some()) {
-                current = outcomes
-                    .into_iter()
-                    .map(|o| o.output.expect("checked is_some"))
-                    .collect();
+                current = outcomes.into_iter().filter_map(|o| o.output).collect();
                 produced = true;
             }
         }

@@ -243,7 +243,7 @@ struct Prefetcher {
 }
 
 impl Prefetcher {
-    fn spawn() -> Self {
+    fn spawn() -> Result<Self> {
         let (jtx, jrx) = mpsc::channel::<SlabJob>();
         let (rtx, rrx) = mpsc::channel();
         let handle = std::thread::Builder::new()
@@ -258,19 +258,21 @@ impl Prefetcher {
                     }
                 }
             })
-            .expect("spawn slab-prefetch worker");
-        Self {
+            .map_err(|e| {
+                Error::Coordinator(format!("cannot spawn slab-prefetch worker: {e}"))
+            })?;
+        Ok(Self {
             jobs: Some(jtx),
             results: rrx,
             handle: Some(handle),
-        }
+        })
     }
 
     fn request(&self, job: SlabJob) -> Result<()> {
-        self.jobs
-            .as_ref()
-            .expect("job channel lives until drop")
-            .send(job)
+        let Some(jobs) = self.jobs.as_ref() else {
+            return Err(Error::Coordinator("slab-prefetch worker is gone".into()));
+        };
+        jobs.send(job)
             .map_err(|_| Error::Coordinator("slab-prefetch worker is gone".into()))
     }
 
@@ -408,7 +410,18 @@ impl SimBackend {
                     self.hw[idx] = Some(Arc::new(hw));
                 }
             }
-            let hw = Arc::clone(self.hw[idx].as_ref().expect("just populated"));
+            let hw = match self.hw[idx].as_ref() {
+                Some(hw) => Arc::clone(hw),
+                None => {
+                    return Err(Error::Coordinator(format!(
+                        "layer {idx} α state missing after fit"
+                    )))
+                }
+            };
+            // Slab identities carry the artifact's registration generation
+            // (0 for unregistered engines), so a batch outliving its
+            // model's eviction re-inserts under the old generation and can
+            // never alias a re-registered model's slabs.
             let key = SlabKey {
                 layer: WeightsKey::new(
                     plan.network.name.clone(),
@@ -416,7 +429,8 @@ impl SimBackend {
                     (layer.n_in, layer.n_out, layer.k),
                     plan.sigma,
                     rho,
-                ),
+                )
+                .with_generation(self.artifact.as_ref().map_or(0, |a| a.generation())),
                 col_tile: ct as u32,
             };
             Ok(SlabJob::Ovsf {
@@ -612,7 +626,10 @@ impl SimBackend {
         // joins the worker and discards in-flight state — the next request
         // spawns a fresh one.
         let mut stall_ns = 0u64;
-        let pf = self.prefetcher.take().unwrap_or_else(Prefetcher::spawn);
+        let pf = match self.prefetcher.take() {
+            Some(pf) => pf,
+            None => Prefetcher::spawn()?,
+        };
         let first = self.slab_job(plan, idx, 0, 0, t_c.min(c))?;
         pf.request(first)?;
         for ct in 0..n_tiles {

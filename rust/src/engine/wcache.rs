@@ -50,10 +50,20 @@ pub struct WeightsKey {
     pub sigma: DesignPoint,
     /// Layer OVSF ratio ρ, as raw f64 bits (`f64` is not `Eq`/`Hash`).
     pub rho_bits: u64,
+    /// Registration generation. Every
+    /// [`ModelRegistry::register`](crate::coordinator::registry::ModelRegistry::register)
+    /// stamps the artifact's keys with a fresh process-wide generation, so
+    /// a batch still in flight when its model is evicted re-inserts slabs
+    /// under the *old* generation — they can never alias a later
+    /// registration of the same model id (the evict-vs-in-flight
+    /// reinsertion race). Engines without a registry artifact use
+    /// generation 0.
+    pub generation: u64,
 }
 
 impl WeightsKey {
-    /// Build a key from the plain configuration values.
+    /// Build a key from the plain configuration values (generation 0 —
+    /// the unregistered/default generation).
     pub fn new(
         model: impl Into<String>,
         layer: usize,
@@ -67,7 +77,15 @@ impl WeightsKey {
             shape,
             sigma,
             rho_bits: rho.to_bits(),
+            generation: 0,
         }
+    }
+
+    /// The same key under a different registration generation.
+    #[must_use]
+    pub fn with_generation(mut self, generation: u64) -> Self {
+        self.generation = generation;
+        self
     }
 }
 
@@ -84,6 +102,22 @@ pub struct SlabKey {
 struct SlabEntry {
     data: Arc<Vec<f32>>,
     last_used: u64,
+    /// FNV-1a over the slab's `f32` bit patterns, stamped at insert and
+    /// verified on every hit: a corrupted slab is evicted and regenerated
+    /// instead of silently feeding garbage weights to the PE array.
+    checksum: u64,
+}
+
+/// FNV-1a over the slab's raw `f32` bit patterns (word-at-a-time — the
+/// verify cost per hit is a small constant factor of the copy the consumer
+/// does anyway).
+fn slab_checksum(data: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in data {
+        h ^= u64::from(v.to_bits());
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
 }
 
 struct SlabMap {
@@ -109,6 +143,7 @@ pub struct SlabCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    corruptions: AtomicU64,
     resident: AtomicUsize,
     peak_resident: AtomicUsize,
 }
@@ -136,6 +171,7 @@ impl std::fmt::Debug for SlabCache {
             .field("hits", &self.hits())
             .field("misses", &self.misses())
             .field("evictions", &self.evictions())
+            .field("corruptions", &self.corruptions())
             .finish()
     }
 }
@@ -164,6 +200,7 @@ impl SlabCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            corruptions: AtomicU64::new(0),
             resident: AtomicUsize::new(0),
             peak_resident: AtomicUsize::new(0),
         }
@@ -202,14 +239,45 @@ impl SlabCache {
             match m.entries.get_mut(&key) {
                 Some(e) => {
                     e.last_used = tick;
-                    Some(Arc::clone(&e.data))
+                    Some((Arc::clone(&e.data), e.checksum))
                 }
                 None => None,
             }
         };
-        if let Some(data) = found {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(data);
+        if let Some((data, stamped)) = found {
+            // Verify outside the lock (the checksum walk must not extend
+            // the critical section).
+            if slab_checksum(&data) == stamped {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(data);
+            }
+            // Integrity failure: evict the corrupted slab (only if it is
+            // still the *same* Arc — a racer may have replaced it already)
+            // and fall through to regenerate instead of serving garbage.
+            let removed = {
+                let mut m = self.lock();
+                let stale = m
+                    .entries
+                    .get(&key)
+                    .is_some_and(|e| Arc::ptr_eq(&e.data, &data));
+                if stale {
+                    if let Some(e) = m.entries.remove(&key) {
+                        self.resident.fetch_sub(
+                            e.data.len() * std::mem::size_of::<f32>(),
+                            Ordering::Relaxed,
+                        );
+                        true
+                    } else {
+                        false
+                    }
+                } else {
+                    false
+                }
+            };
+            self.corruptions.fetch_add(1, Ordering::Relaxed);
+            if removed {
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let data = Arc::new(generate()?);
@@ -229,27 +297,29 @@ impl SlabCache {
                 // budget at every instant (given each slab individually
                 // fits). The gauge is only ever mutated by the lock holder,
                 // so reading it here is consistent.
-                while self.resident.load(Ordering::Relaxed) + bytes > self.budget
-                    && !m.entries.is_empty()
-                {
-                    let victim = m
+                while self.resident.load(Ordering::Relaxed) + bytes > self.budget {
+                    let Some(victim) = m
                         .entries
                         .iter()
                         .min_by_key(|(_, e)| e.last_used)
                         .map(|(k, _)| k.clone())
-                        .expect("non-empty map has an LRU entry");
-                    let evicted = m.entries.remove(&victim).expect("victim just found");
-                    self.resident.fetch_sub(
-                        evicted.data.len() * std::mem::size_of::<f32>(),
-                        Ordering::Relaxed,
-                    );
-                    evicted_count += 1;
+                    else {
+                        break; // map empty: the slab is admitted alone
+                    };
+                    if let Some(evicted) = m.entries.remove(&victim) {
+                        self.resident.fetch_sub(
+                            evicted.data.len() * std::mem::size_of::<f32>(),
+                            Ordering::Relaxed,
+                        );
+                        evicted_count += 1;
+                    }
                 }
                 let now = self.resident.fetch_add(bytes, Ordering::Relaxed) + bytes;
                 self.peak_resident.fetch_max(now, Ordering::Relaxed);
                 let entry = SlabEntry {
                     data: Arc::clone(&data),
                     last_used: tick,
+                    checksum: slab_checksum(&data),
                 };
                 m.entries.insert(key, entry);
                 None
@@ -273,9 +343,10 @@ impl SlabCache {
                 .cloned()
                 .collect();
             for k in &victims {
-                let e = m.entries.remove(k).expect("victim just listed");
-                self.resident
-                    .fetch_sub(e.data.len() * std::mem::size_of::<f32>(), Ordering::Relaxed);
+                if let Some(e) = m.entries.remove(k) {
+                    self.resident
+                        .fetch_sub(e.data.len() * std::mem::size_of::<f32>(), Ordering::Relaxed);
+                }
             }
             victims.len()
         };
@@ -299,9 +370,48 @@ impl SlabCache {
     }
 
     /// Slabs dropped to stay under the byte budget (plus explicit
-    /// [`evict_layer`](Self::evict_layer) removals).
+    /// [`evict_layer`](Self::evict_layer) removals and corruption
+    /// evictions).
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Checksum mismatches detected on hit: each one evicted the corrupted
+    /// slab and regenerated it on the fly. Nonzero means memory corruption
+    /// (or injected chaos) was caught before it reached the PE array.
+    pub fn corruptions(&self) -> u64 {
+        self.corruptions.load(Ordering::Relaxed)
+    }
+
+    /// Chaos hook: flip one bit of one resident slab's payload *without*
+    /// restamping its checksum, so the next hit on that slab detects the
+    /// corruption. `nth` seeds the (deterministic, given a stable map)
+    /// choice of entry/word/bit. Returns `false` when nothing is resident.
+    /// Used by [`FaultyBackend`](crate::engine::fault::FaultyBackend) and
+    /// the chaos-soak tests; harmless (and useless) in production.
+    pub fn flip_bit(&self, nth: u64) -> bool {
+        let mut m = self.lock();
+        if m.entries.is_empty() {
+            return false;
+        }
+        let idx = (nth as usize) % m.entries.len();
+        let Some(key) = m.entries.keys().nth(idx).cloned() else {
+            return false;
+        };
+        let Some(e) = m.entries.get_mut(&key) else {
+            return false;
+        };
+        if e.data.is_empty() {
+            return false;
+        }
+        let mut data = e.data.as_ref().clone();
+        let word = (nth as usize / 7) % data.len();
+        let bit = (nth % 32) as u32;
+        data[word] = f32::from_bits(data[word].to_bits() ^ (1u32 << bit));
+        // Same length ⇒ the resident gauge is unchanged; the stale
+        // checksum is the point.
+        e.data = Arc::new(data);
+        true
     }
 
     /// Number of resident slabs.
@@ -500,6 +610,66 @@ mod tests {
         assert_eq!(cache.resident_bytes(), cache.len() * 400);
         assert!(cache.resident_bytes() <= cache.budget());
         assert!(cache.peak_resident_bytes() <= cache.budget());
+    }
+
+    #[test]
+    fn bit_flip_is_detected_evicted_and_regenerated() {
+        let cache = SlabCache::new();
+        slab(&cache, key(0, 0), 3.0, 8);
+        assert!(cache.flip_bit(12345), "a resident slab must be flippable");
+        let mut calls = 0;
+        let v = cache
+            .try_get_or_generate(key(0, 0), || {
+                calls += 1;
+                Ok(vec![3.0; 8])
+            })
+            .unwrap();
+        assert_eq!(calls, 1, "corrupted slab must regenerate, not hit");
+        assert_eq!(v.as_slice(), &[3.0; 8], "regenerated numerics are clean");
+        assert_eq!(cache.corruptions(), 1);
+        assert_eq!(cache.evictions(), 1, "the corrupted slab was evicted");
+        assert_eq!(cache.hits(), 0);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(
+            cache.hits() + cache.misses(),
+            cache.lookups(),
+            "counters still reconcile through a corruption"
+        );
+        // The regenerated slab now hits cleanly.
+        slab(&cache, key(0, 0), 3.0, 8);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.corruptions(), 1);
+    }
+
+    #[test]
+    fn flip_bit_on_empty_cache_is_a_noop() {
+        let cache = SlabCache::new();
+        assert!(!cache.flip_bit(0));
+        assert_eq!(cache.corruptions(), 0);
+    }
+
+    #[test]
+    fn generations_are_distinct_cache_entries() {
+        // The evict-vs-in-flight reinsertion race: a straggler batch for an
+        // evicted registration re-inserts under the OLD generation and must
+        // never be served to the NEW registration of the same model id.
+        let cache = SlabCache::new();
+        let old = SlabKey {
+            layer: layer_key(0).with_generation(1),
+            col_tile: 0,
+        };
+        let new = SlabKey {
+            layer: layer_key(0).with_generation(2),
+            col_tile: 0,
+        };
+        slab(&cache, old.clone(), 1.0, 4); // straggler reinsertion
+        let v = slab(&cache, new, 2.0, 4); // fresh registration's lookup
+        assert_eq!(v.as_slice(), &[2.0; 4], "new generation must regenerate");
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 0);
+        // Evicting the old generation leaves the new one resident.
+        assert_eq!(cache.evict_layer(&layer_key(0).with_generation(1)), 1);
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

@@ -81,6 +81,32 @@ pub enum Error {
         /// How far past the deadline the request was when it was failed.
         late_by: std::time::Duration,
     },
+
+    /// A worker thread panicked while executing this request. The pool
+    /// caught the panic, failed the offending request with this error,
+    /// re-queued any co-batched requests and (budget permitting)
+    /// respawned the worker — the panic costs one request, not pool
+    /// capacity.
+    WorkerPanic {
+        /// Panic payload rendered to text (when it was a string).
+        detail: String,
+    },
+
+    /// The per-model circuit breaker is open: the model's recent requests
+    /// failed consecutively, so new requests are rejected fast instead of
+    /// occupying workers that would likely fail too. Retry after
+    /// `retry_after`, when the breaker admits half-open probes.
+    CircuitOpen {
+        /// Model id whose breaker is open.
+        model: String,
+        /// Time until the breaker starts admitting probe requests.
+        retry_after: std::time::Duration,
+    },
+
+    /// A transient backend fault (momentary DMA/link hiccup, injected
+    /// chaos, ...): retrying the same request is expected to succeed.
+    /// The pool retries these automatically with jittered backoff.
+    Transient(String),
 }
 
 impl std::fmt::Display for Error {
@@ -129,7 +155,33 @@ impl std::fmt::Display for Error {
                  failed fast instead of occupying a batch slot",
                 late_by.as_secs_f64() * 1e3
             ),
+            Error::WorkerPanic { detail } => write!(
+                f,
+                "worker panicked while executing this request ({detail}); \
+                 co-batched requests were re-queued and the worker respawned"
+            ),
+            Error::CircuitOpen { model, retry_after } => write!(
+                f,
+                "circuit breaker open for model '{model}' after consecutive \
+                 failures; rejecting fast — retry in {:.1} ms",
+                retry_after.as_secs_f64() * 1e3
+            ),
+            Error::Transient(s) => write!(f, "transient backend fault (retryable): {s}"),
         }
+    }
+}
+
+impl Error {
+    /// Whether retrying the same request is expected to succeed — used by
+    /// the server pool's deadline-aware retry loop. Transient backend
+    /// faults, backpressure and load shedding qualify; shape/config/model
+    /// errors and panics do not (retrying would fail identically or hide
+    /// a real bug).
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            Error::Transient(_) | Error::QueueFull | Error::Overloaded { .. }
+        )
     }
 }
 
@@ -181,6 +233,38 @@ mod tests {
             late_by: std::time::Duration::from_millis(7),
         };
         assert!(late.to_string().contains("7.0 ms past due"), "{late}");
+        let wp = Error::WorkerPanic {
+            detail: "index out of bounds".into(),
+        };
+        assert!(wp.to_string().contains("index out of bounds"), "{wp}");
+        assert!(wp.to_string().contains("re-queued"), "{wp}");
+        let open = Error::CircuitOpen {
+            model: "r18".into(),
+            retry_after: std::time::Duration::from_millis(250),
+        };
+        assert!(open.to_string().contains("r18"), "{open}");
+        assert!(open.to_string().contains("250.0 ms"), "{open}");
+        let t = Error::Transient("injected DMA hiccup".into());
+        assert!(t.to_string().contains("retryable"), "{t}");
+    }
+
+    #[test]
+    fn transient_classification() {
+        assert!(Error::Transient("x".into()).is_transient());
+        assert!(Error::QueueFull.is_transient());
+        assert!(Error::Overloaded {
+            queue_delay: std::time::Duration::from_millis(5),
+            slo: std::time::Duration::from_millis(1),
+        }
+        .is_transient());
+        assert!(!Error::PoolShutdown.is_transient());
+        assert!(!Error::WorkerPanic { detail: "p".into() }.is_transient());
+        assert!(!Error::CircuitOpen {
+            model: "m".into(),
+            retry_after: std::time::Duration::from_millis(1),
+        }
+        .is_transient());
+        assert!(!Error::ShapeMismatch("bad".into()).is_transient());
     }
 
     #[test]

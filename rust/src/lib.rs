@@ -40,6 +40,11 @@
 //!   evaluation section.
 
 #![warn(missing_docs)]
+// Production code must not have un-typed crash points: every `unwrap` /
+// `expect` in non-test code is either converted to a typed error path or
+// carries an explicit `#[allow]` with its invariant argued at the site.
+// (Tests keep their unwraps — a panicking test is a failing test.)
+#![cfg_attr(not(test), warn(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod accuracy;
 pub mod arch;

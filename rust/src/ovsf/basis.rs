@@ -79,11 +79,7 @@ pub fn select(
             // O(L²) scan-and-remove loop (the §Perf regression-stage fix).
             let mut order: Vec<usize> = (0..l).collect();
             order.sort_unstable_by(|&a, &b| {
-                alphas[b]
-                    .abs()
-                    .partial_cmp(&alphas[a].abs())
-                    .unwrap()
-                    .then(a.cmp(&b))
+                alphas[b].abs().total_cmp(&alphas[a].abs()).then(a.cmp(&b))
             });
             let mut live = order[..keep].to_vec();
             live.sort_unstable();

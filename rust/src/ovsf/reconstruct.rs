@@ -261,6 +261,9 @@ impl OvsfLayer {
         if n_shards <= 1 {
             let mut scratch: Vec<f64> = Vec::with_capacity(l);
             let mut frame: Vec<f32> = Vec::with_capacity(l);
+            // Invariant: the 0..n_out range and `out` sizing come from the
+            // same fields three lines up.
+            #[allow(clippy::expect_used)]
             self.reconstruct_filters_into(0, self.n_out, &mut scratch, &mut frame, &mut out)
                 .expect("full range derives from n_out");
             return Ok(out);
@@ -277,6 +280,9 @@ impl OvsfLayer {
                     let mut frame: Vec<f32> = Vec::with_capacity(l);
                     let o0 = shard * shard_len;
                     let o1 = (o0 + shard_len).min(self.n_out);
+                    // Invariant: o0..o1 is clamped to n_out and out_shard
+                    // is the matching chunk of the output buffer.
+                    #[allow(clippy::expect_used)]
                     self.reconstruct_filters_into(o0, o1, &mut scratch, &mut frame, out_shard)
                         .expect("shard bounds derive from n_out");
                 }) as ScopedTask<'_>

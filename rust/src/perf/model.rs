@@ -250,6 +250,9 @@ impl PerfModel {
                 }
             }
         }
+        // Invariant: the loop above runs at least once for any validated
+        // layer geometry (rcount/ccount ≥ 1), so `dominant` was set.
+        #[allow(clippy::expect_used)]
         let (t_mem_in, t_wgen, t_eng, t_mem_out, ii) =
             dominant.expect("at least one tile group");
         LayerPerf {

@@ -80,6 +80,9 @@ impl AlphaBufferSim {
     /// filters. Panics if two requested filters collide on a bank — the
     /// hardware guarantee the banking scheme exists to provide.
     pub fn fetch(&mut self, layer_id: usize, filters: &[usize], c: usize, j: usize) -> Vec<f32> {
+        // Documented contract (see doc comment): fetching an unloaded
+        // layer is a simulator-driver bug, panicking is the spec.
+        #[allow(clippy::expect_used)]
         let (bases, meta) = self.layer_base.get(&layer_id).expect("layer not loaded");
         let mut used = vec![false; self.n_ports];
         let mut out = Vec::with_capacity(filters.len());

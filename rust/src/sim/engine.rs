@@ -167,6 +167,8 @@ impl<'a> LayerSim<'a> {
         let mut slab = Vec::new();
         for c0 in (0..c).step_by(t_c) {
             let c1 = (c0 + t_c).min(c);
+            // Invariant: c0..c1 is clamped to C three lines up.
+            #[allow(clippy::expect_used)]
             w.slab_into(c0, c1, &mut scratch, &mut slab)
                 .expect("column range derives from C");
             for r0 in (0..r).step_by(t_r) {

@@ -88,6 +88,9 @@ impl OvsfGenerator {
     /// Allocation-free variant of [`emit`](Self::emit): overwrites `out`
     /// (hot path for the benches/simulator).
     pub fn emit_into(&mut self, out: &mut Vec<i8>) {
+        // Invariant: the FIFO is filled at construction and every emit
+        // recycles its entry to the back — it can never drain.
+        #[allow(clippy::expect_used)]
         let entry = self.fifo.pop_front().expect("FIFO empty");
         let bits = entry.bits;
         let k2 = self.chunk;

@@ -290,6 +290,9 @@ fn block_mrxnr(
     let a3 = &act[(r0 + 3) * p..(r0 + 4) * p];
     for pi in 0..p {
         let base = pi * cols + c0;
+        // Invariant: the slice is exactly NR long by construction of
+        // `base`, so the array conversion cannot fail.
+        #[allow(clippy::expect_used)]
         let w: &[f32; NR] = slab[base..base + NR]
             .try_into()
             .expect("slab block is NR wide");

@@ -31,7 +31,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
     s[rank.min(s.len() - 1)]
 }

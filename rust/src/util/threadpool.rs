@@ -134,6 +134,10 @@ impl ThreadPool {
         let mut handles = Vec::with_capacity(threads);
         for _ in 0..threads {
             let shared = Arc::clone(&shared);
+            // Thread spawn fails only on OS resource exhaustion, at which
+            // point there is no useful degraded mode for a compute pool —
+            // crashing with the spawn error is the honest outcome.
+            #[allow(clippy::expect_used)]
             handles.push(
                 std::thread::Builder::new()
                     .name("unzipfpga-pool".into())

@@ -73,6 +73,7 @@ fn pool_survives_panicking_worker_shutdown() {
     use unzipfpga::coordinator::plan::InferencePlan;
     use unzipfpga::coordinator::server::Request;
     use unzipfpga::workload::{resnet, RatioProfile};
+    use unzipfpga::Error;
 
     let net = resnet::resnet18();
     let profile = RatioProfile::ovsf50(&net);
@@ -96,15 +97,29 @@ fn pool_survives_panicking_worker_shutdown() {
     for id in 0..3u64 {
         assert!(pool.submit(Request::timing(id)).unwrap().wait().is_ok());
     }
-    // The poisoned request: the client sees an error, not a hang.
-    let r = pool.submit(Request::timing(3));
-    match r {
-        Ok(handle) => assert!(handle.wait().is_err(), "dead worker must surface as Err"),
-        Err(_) => {} // pool already noticed the death — equally fine
+    // The poisoned request fails with the typed panic error — not a hang,
+    // not an opaque disconnect.
+    let err = pool
+        .submit(Request::timing(3))
+        .unwrap()
+        .wait()
+        .err()
+        .expect("panicking request must surface as Err");
+    assert!(
+        matches!(err, Error::WorkerPanic { .. }),
+        "expected WorkerPanic, got: {err}"
+    );
+    // Supervision: the panic consumed one worker thread, the supervisor
+    // respawned a replacement, and later requests are served normally.
+    for id in 4..8u64 {
+        let resp = pool.submit(Request::timing(id)).unwrap().wait().unwrap();
+        assert_eq!(resp.output, vec![id as f32]);
     }
-    // Shutdown still terminates (worker is gone; shutdown reports the
-    // panic — it must not hang or panic the caller).
-    let _ = pool.shutdown();
+    assert_eq!(pool.live_workers(), 1, "capacity restored after respawn");
+    let pm = pool.shutdown().expect("respawned pool shuts down cleanly");
+    assert_eq!(pm.panicked_workers, 1);
+    assert_eq!(pm.worker_restarts, 1);
+    assert_eq!(pm.total_requests(), 7, "3 before + 4 after the panic");
 }
 
 #[test]

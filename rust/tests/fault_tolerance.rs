@@ -1,0 +1,388 @@
+//! Seeded chaos soak: bursty traffic through a supervised pool whose
+//! backend injects panics, transient errors, latency spikes and slab
+//! bit-flips from a deterministic [`FaultPlan`]. The fault-tolerance
+//! claims under test:
+//!
+//! * **No hangs, no silent drops** — every submitted request settles with
+//!   a response or a *typed* error; the traffic accounting identity holds.
+//! * **Bit-identical numerics** — a request that succeeds under chaos
+//!   returns exactly the fault-free engine's output (injection happens
+//!   before delegation; slab corruption is caught by checksums and
+//!   regenerated, never served).
+//! * **Capacity is restored** — every injected worker panic is answered
+//!   by a supervisor respawn, so the pool ends the soak with its full
+//!   configured worker count.
+//! * **Breaker transitions are deterministic** — a scripted failure
+//!   sequence drives closed → open → half-open → closed with exact trip
+//!   counts and typed fast rejections.
+//!
+//! Set `CHAOS_SOAK=1` for a longer run (CI does); the default is sized
+//! for the regular test suite.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::coordinator::breaker::{BreakerConfig, BreakerState};
+use unzipfpga::coordinator::plan::InferencePlan;
+use unzipfpga::coordinator::pool::{PoolConfig, RequestExecutor, ServerPool};
+use unzipfpga::coordinator::server::Request;
+use unzipfpga::engine::fault::{FaultPlan, FaultStats, FaultyBackend};
+use unzipfpga::engine::{Engine, SimBackend, SlabCache};
+use unzipfpga::error::{Error, Result};
+use unzipfpga::util::prng::Xoshiro256;
+use unzipfpga::workload::{Layer, Network, RatioProfile};
+
+/// Small 3-layer network: big enough to exercise the slab cache across
+/// layer passes, small enough that a soak of hundreds of requests stays
+/// inside the regular suite's time budget.
+fn tiny_net() -> Network {
+    Network {
+        name: "chaos-tiny".into(),
+        layers: vec![
+            Layer::conv("stem", 8, 8, 4, 8, 3, 1, 1, false),
+            Layer::conv("b.conv1", 8, 8, 8, 8, 3, 1, 1, true),
+            Layer::fc("fc", 8, 5),
+        ],
+    }
+}
+
+fn engine_plan() -> unzipfpga::engine::EnginePlan {
+    let net = tiny_net();
+    let profile = RatioProfile::uniform(&net, 0.5);
+    Engine::builder()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(8, 4, 8, 4))
+        .network(net)
+        .profile(profile)
+        .plan()
+        .unwrap()
+}
+
+fn pool_plan() -> InferencePlan {
+    let net = tiny_net();
+    let profile = RatioProfile::uniform(&net, 0.5);
+    InferencePlan::build(
+        &Platform::z7045(),
+        4,
+        DesignPoint::new(8, 4, 8, 4),
+        &net,
+        &profile,
+    )
+}
+
+fn chaos_input() -> Vec<f32> {
+    Xoshiro256::seed_from_u64(2024).normal_vec(8 * 8 * 4)
+}
+
+/// Pool executor that runs a real engine per request — the production
+/// shape, with the fault wrapper in the backend seat.
+struct ChaosExec {
+    engine: Engine,
+}
+
+impl RequestExecutor for ChaosExec {
+    fn execute(&mut self, req: &Request) -> Result<Vec<f32>> {
+        Ok(self.engine.infer(&req.input)?.output)
+    }
+}
+
+#[test]
+fn chaos_soak_types_every_failure_and_restores_capacity() {
+    let soak = std::env::var("CHAOS_SOAK").is_ok();
+    let (bursts, per_burst) = if soak { (40, 25) } else { (10, 20) };
+
+    // Fault-free reference: the bit-identical target for every request
+    // that succeeds under chaos.
+    let input = chaos_input();
+    let mut reference = Engine::with_backend(
+        engine_plan(),
+        Box::new(SimBackend::with_cache(Arc::new(SlabCache::new()))),
+    )
+    .unwrap();
+    let expect = reference.infer(&input).unwrap().output;
+    assert!(!expect.is_empty());
+
+    // One shared slab cache (so bit-flips corrupt state other workers
+    // read) and one shared stats block (so a respawned worker's
+    // replacement backend keeps accumulating).
+    let cache = Arc::new(SlabCache::new());
+    let stats = Arc::new(FaultStats::default());
+    let fault_plan = FaultPlan {
+        seed: 0xC0FFEE,
+        transient: 0.04,
+        permanent: 0.0,
+        panic_p: 0.004,
+        latency_spike: 0.01,
+        spike: Duration::from_micros(200),
+        bitflip: 0.05,
+    };
+
+    let workers = 2;
+    let cfg = PoolConfig {
+        workers,
+        queue_depth: 256,
+        max_batch: 4,
+        linger: Duration::from_micros(200),
+        retries: 2,
+        retry_backoff: Duration::from_micros(100),
+        restart_budget: 64,
+        restart_backoff: Duration::from_micros(200),
+        ..PoolConfig::default()
+    };
+    let eplan = engine_plan();
+    let pool = ServerPool::start(pool_plan(), cfg, {
+        let cache = Arc::clone(&cache);
+        let stats = Arc::clone(&stats);
+        let fault_plan = fault_plan.clone();
+        move |worker| {
+            let backend = FaultyBackend::with_cache(
+                SimBackend::with_cache(Arc::clone(&cache)),
+                fault_plan.clone().for_worker(worker),
+                Arc::clone(&cache),
+            )
+            .sharing_stats(Arc::clone(&stats));
+            ChaosExec {
+                engine: Engine::with_backend(eplan.clone(), Box::new(backend)).unwrap(),
+            }
+        }
+    })
+    .unwrap();
+
+    // Bursty offered load: a burst of submissions, a quiet gap, repeat.
+    let mut handles = Vec::new();
+    let mut id = 0u64;
+    for burst in 0..bursts {
+        for _ in 0..per_burst {
+            handles.push(pool.submit(Request::numeric(id, input.clone())).unwrap());
+            id += 1;
+        }
+        if burst % 2 == 1 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    let offered = handles.len();
+
+    // Every handle settles — a hang here fails the suite's timeout — and
+    // every outcome is either the bit-identical output or a typed error
+    // from the fault-tolerance taxonomy.
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for h in handles {
+        match h.wait() {
+            Ok(resp) => {
+                assert_eq!(
+                    resp.output, expect,
+                    "a successful response under chaos must be bit-identical \
+                     to the fault-free run"
+                );
+                completed += 1;
+            }
+            Err(e) => {
+                assert!(
+                    matches!(
+                        e,
+                        Error::WorkerPanic { .. }
+                            | Error::Transient(_)
+                            | Error::Coordinator(_)
+                    ),
+                    "every chaos failure must be typed, got: {e}"
+                );
+                failed += 1;
+            }
+        }
+    }
+    assert_eq!(completed + failed, offered, "no request may vanish");
+    assert!(completed > 0, "the soak must make forward progress");
+    assert!(
+        stats.total() > 0,
+        "the seeded plan must have injected something"
+    );
+
+    // Capacity restored: every panic was answered by a respawn.
+    assert_eq!(
+        pool.live_workers(),
+        workers,
+        "supervisor must have respawned every panicked worker \
+         (injected panics: {})",
+        stats.panics()
+    );
+
+    let pm = pool.shutdown().unwrap();
+    // total_requests counts every request an executor settled (success or
+    // typed failure); panic-path replies bypass the executor metrics.
+    assert!(
+        pm.total_requests() >= completed && pm.total_requests() <= completed + failed,
+        "settled {} outside [{completed}, {}]",
+        pm.total_requests(),
+        completed + failed
+    );
+    assert_eq!(
+        pm.panicked_workers as u64, pm.worker_restarts,
+        "each caught panic must map to exactly one respawn"
+    );
+    assert!(
+        pm.worker_restarts <= 64,
+        "restart budget bounds respawns"
+    );
+    // Slab integrity: the injected bit-flips were caught by checksums
+    // (corruptions counted, slabs regenerated) — the bit-identical
+    // assertion above proves none reached an output.
+    if stats.bitflips() > 0 {
+        assert!(
+            cache.corruptions() > 0,
+            "checksum verification must catch injected slab corruption \
+             ({} flips injected)",
+            stats.bitflips()
+        );
+    }
+}
+
+#[test]
+fn open_loop_traffic_identity_holds_under_chaos() {
+    use unzipfpga::coordinator::traffic::{ArrivalProcess, RequestClass, TrafficSpec};
+
+    let cache = Arc::new(SlabCache::new());
+    let stats = Arc::new(FaultStats::default());
+    let fault_plan = FaultPlan {
+        seed: 7,
+        transient: 0.03,
+        permanent: 0.0,
+        panic_p: 0.003,
+        latency_spike: 0.0,
+        spike: Duration::from_millis(1),
+        bitflip: 0.02,
+    };
+    let cfg = PoolConfig {
+        workers: 2,
+        queue_depth: 128,
+        max_batch: 4,
+        linger: Duration::from_micros(200),
+        retries: 1,
+        restart_budget: 32,
+        restart_backoff: Duration::from_micros(200),
+        ..PoolConfig::default()
+    };
+    let eplan = engine_plan();
+    let pool = ServerPool::start(pool_plan(), cfg, {
+        let cache = Arc::clone(&cache);
+        let stats = Arc::clone(&stats);
+        move |worker| {
+            let backend = FaultyBackend::with_cache(
+                SimBackend::with_cache(Arc::clone(&cache)),
+                fault_plan.clone().for_worker(worker),
+                Arc::clone(&cache),
+            )
+            .sharing_stats(Arc::clone(&stats));
+            ChaosExec {
+                engine: Engine::with_backend(eplan.clone(), Box::new(backend)).unwrap(),
+            }
+        }
+    })
+    .unwrap();
+
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Bursty {
+            base_rps: 300.0,
+            burst_rps: 2500.0,
+            mean_on_s: 0.02,
+            mean_off_s: 0.05,
+        },
+        duration_s: 0.25,
+        seed: 99,
+        classes: vec![RequestClass::timing("").with_input(chaos_input())],
+    };
+    let report = spec.run_open_loop(&pool);
+    assert!(report.offered > 0);
+    // Full identity: every offered arrival is completed or typed away.
+    assert_eq!(
+        report.offered,
+        report.completed + report.shed + report.queue_full + report.expired + report.failed,
+        "every arrival must be accounted under chaos: {}",
+        report.summary()
+    );
+    assert_eq!(report.harness_failures, 0, "{}", report.summary());
+    assert!(report.completed > 0, "{}", report.summary());
+    assert_eq!(pool.live_workers(), 2, "capacity restored before shutdown");
+    let pm = pool.shutdown().unwrap();
+    assert_eq!(pm.panicked_workers as u64, pm.worker_restarts);
+}
+
+#[test]
+fn breaker_transitions_are_deterministic_under_a_scripted_fault_burst() {
+    /// Fails its first three calls, succeeds afterwards — a scripted
+    /// outage with a sharp recovery edge.
+    struct Scripted {
+        calls: u64,
+    }
+    impl RequestExecutor for Scripted {
+        fn execute(&mut self, req: &Request) -> Result<Vec<f32>> {
+            self.calls += 1;
+            if self.calls <= 3 {
+                Err(Error::Coordinator("scripted outage".into()))
+            } else {
+                Ok(vec![req.id as f32])
+            }
+        }
+    }
+
+    let cfg = PoolConfig {
+        workers: 1,
+        queue_depth: 64,
+        max_batch: 1,
+        linger: Duration::ZERO,
+        retries: 0,
+        breaker: Some(BreakerConfig {
+            failure_threshold: 3,
+            open_for: Duration::from_millis(40),
+            half_open_probes: 2,
+        }),
+        ..PoolConfig::default()
+    };
+    let pool = ServerPool::start(pool_plan(), cfg, |_| Scripted { calls: 0 }).unwrap();
+    let breaker_state =
+        |pool: &ServerPool| pool.breaker().expect("breaker configured").state("(default)");
+
+    // Three consecutive failures: closed → open, exactly one trip.
+    for id in 0..3u64 {
+        let err = pool
+            .submit(Request::timing(id))
+            .unwrap()
+            .wait()
+            .err()
+            .expect("scripted outage must fail");
+        assert!(matches!(err, Error::Coordinator(_)), "got: {err}");
+    }
+    assert_eq!(breaker_state(&pool), BreakerState::Open);
+
+    // While open: fast typed rejection at submission, no queueing.
+    let err = pool.submit(Request::timing(3)).err().expect("must reject");
+    match err {
+        Error::CircuitOpen { model, retry_after } => {
+            assert_eq!(model, "(default)");
+            assert!(retry_after > Duration::ZERO);
+            assert!(retry_after <= Duration::from_millis(40));
+        }
+        other => panic!("expected CircuitOpen, got: {other}"),
+    }
+
+    // After the open window: half-open probes. The scripted executor now
+    // succeeds, so two probes close the breaker deterministically.
+    std::thread::sleep(Duration::from_millis(60));
+    let r = pool.submit(Request::timing(10)).unwrap().wait().unwrap();
+    assert_eq!(r.output, vec![10.0]);
+    assert_eq!(breaker_state(&pool), BreakerState::HalfOpen);
+    let r = pool.submit(Request::timing(11)).unwrap().wait().unwrap();
+    assert_eq!(r.output, vec![11.0]);
+    assert_eq!(breaker_state(&pool), BreakerState::Closed);
+
+    let pm = pool.shutdown().unwrap();
+    assert_eq!(pm.breaker_trips, 1, "exactly one trip in the script");
+    assert_eq!(
+        pm.breaker_states.get("(default)").copied(),
+        Some(BreakerState::Closed)
+    );
+    assert_eq!(pm.panicked_workers, 0);
+    assert!(pm.summary().contains("breaker_trips=1"), "{}", pm.summary());
+}

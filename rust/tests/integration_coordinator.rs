@@ -47,6 +47,7 @@ fn serve_requests_through_pjrt() {
         max_batch: 4,
         linger: std::time::Duration::from_millis(1),
         slo: None,
+        ..PoolConfig::default()
     };
     let pool = ServerPool::start(plan(), cfg, move |_worker| {
         let alphas = std::sync::Arc::clone(&alphas);
@@ -109,6 +110,7 @@ fn identical_requests_are_deterministic_across_workers() {
         max_batch: 1,
         linger: std::time::Duration::ZERO,
         slo: None,
+        ..PoolConfig::default()
     };
     let pool = ServerPool::start(plan(), cfg, move |_worker| {
         let mut reg = ArtifactRegistry::new(artifacts_dir()).expect("client");

@@ -122,6 +122,7 @@ fn pool_ordering_under_concurrent_submitters() {
         max_batch: 2,
         linger: Duration::from_micros(200),
         slo: None,
+        ..PoolConfig::default()
     };
     let pool = Arc::new(
         ServerPool::start(plan(), cfg, |_| |req: &Request| vec![req.id as f32 * 2.0]).unwrap(),
@@ -161,6 +162,7 @@ fn clean_shutdown_with_in_flight_batches() {
         max_batch: 8,
         linger: Duration::from_millis(2),
         slo: None,
+        ..PoolConfig::default()
     };
     let pool = ServerPool::start(plan(), cfg, |_| {
         |req: &Request| {
@@ -210,6 +212,7 @@ fn multi_worker_pool_matches_single_worker_path() {
         max_batch: 8,
         linger: Duration::from_micros(500),
         slo: None,
+        ..PoolConfig::default()
     };
     let pool = ServerPool::start(plan(), cfg, executor).unwrap();
     let handles: Vec<_> = (0..n_req)
@@ -246,6 +249,7 @@ fn engine_pool_serves_through_unified_api() {
             max_batch: 8,
             linger: Duration::from_micros(500),
             slo: None,
+            ..PoolConfig::default()
         })
         .unwrap();
     let handles: Vec<_> = (0..100u64)

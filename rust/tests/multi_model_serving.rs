@@ -143,6 +143,7 @@ fn two_models_serve_interleaved_bit_identical_under_one_budget() {
             max_batch: 4,
             linger: std::time::Duration::from_micros(200),
             slo: None,
+            ..PoolConfig::default()
         },
     )
     .unwrap();

@@ -225,6 +225,7 @@ fn pool_responses_carry_real_numerics() {
             max_batch: 4,
             linger: std::time::Duration::from_micros(200),
             slo: None,
+            ..PoolConfig::default()
         })
         .unwrap();
     let handles: Vec<_> = (0..6u64)
@@ -349,6 +350,7 @@ fn batched_pool_serving_matches_serial_and_amortises_slab_misses() {
             max_batch: 4,
             linger: std::time::Duration::from_millis(20),
             slo: None,
+            ..PoolConfig::default()
         })
         .unwrap();
     let handles: Vec<_> = inputs

@@ -81,6 +81,7 @@ fn cfg(workers: usize, queue_depth: usize, max_batch: usize, slo: Option<Duratio
         max_batch,
         linger: Duration::ZERO,
         slo,
+        ..PoolConfig::default()
     }
 }
 
@@ -254,6 +255,7 @@ fn minority_model_is_served_under_deadline_pressure() {
             max_batch: 4,
             linger: Duration::from_millis(5),
             slo: None,
+            ..PoolConfig::default()
         },
         move |_| Recording {
             gate: Arc::clone(&g2),
