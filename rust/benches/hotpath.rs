@@ -15,7 +15,11 @@
 //! schedule against the pipelined slab-prefetch datapath on ResNet-18/50
 //! (throughput, speedup, hidden-generation fraction, peak resident
 //! generated-weight bytes) and emits `BENCH_infer.json` (override:
-//! `BENCH_INFER_JSON`); `BENCH_WRITE_BASELINE=1` additionally refreshes
+//! `BENCH_INFER_JSON`); each network is measured at both f32 and i8
+//! precision (the i8 rows carry a `-i8` label suffix plus warm-pass
+//! cache hit-rate columns, and the microkernel section reports the
+//! i8×i8→i32 strip's speedup over the f32 blocked kernel).
+//! `BENCH_WRITE_BASELINE=1` additionally refreshes
 //! the committed `BENCH_baseline.json` the CI regression gate reads.
 //! The multi-model section serves ResNet-18 + SqueezeNet interleaved
 //! through one registry-routed `ServerPool` under a shared slab budget
@@ -28,7 +32,7 @@ use std::sync::Arc;
 use unzipfpga::arch::{DesignPoint, Platform};
 use unzipfpga::autotune::autotune;
 use unzipfpga::dse::search::{optimise, sweep, DseConfig};
-use unzipfpga::engine::{Engine, FaultPlan, FaultyBackend, SimBackend, SlabCache};
+use unzipfpga::engine::{Engine, FaultPlan, FaultyBackend, Precision, SimBackend, SlabCache};
 use unzipfpga::ovsf::basis::{select, BasisSelection, SelectedBasis};
 use unzipfpga::ovsf::codes::OvsfBasis;
 use unzipfpga::ovsf::reconstruct::{Filter3x3Mode, OvsfLayer};
@@ -36,8 +40,10 @@ use unzipfpga::perf::model::PerfModel;
 use unzipfpga::sim::engine::simulate_network_timing;
 use unzipfpga::sim::hw_weights::HwOvsfWeights;
 use unzipfpga::sim::ovsf_gen::OvsfGenerator;
+use unzipfpga::sim::quant::i8_error_bound;
 use unzipfpga::sim::wgen::WGenSim;
 use unzipfpga::util::bench::{bench, bench_auto, smoke_mode};
+use unzipfpga::util::fixed::I8Scheme;
 use unzipfpga::util::prng::Xoshiro256;
 use unzipfpga::workload::{resnet, Network, RatioProfile};
 
@@ -239,10 +245,19 @@ fn bench_ovsf_weights_generation() -> Vec<OvsfRow> {
 
 struct InferRow {
     network: String,
+    precision: Precision,
     input_len: usize,
     slab_budget_bytes: usize,
     peak_resident_weight_bytes: usize,
+    /// Full dense materialisation of the OVSF GEMM weights at this row's
+    /// precision word width (f32: 4 B/word, i8: 1 B/word).
     dense_ovsf_weight_bytes: u64,
+    /// Warm-pass slab-cache telemetry from the pipelined datapath: the i8
+    /// rows hold strictly more slabs per byte, so at a fixed budget their
+    /// hit rate dominates the f32 rows'.
+    cache_hits: u64,
+    cache_misses: u64,
+    hit_rate: f64,
     /// Serial (generate-then-multiply) datapath — the committed-baseline
     /// comparator, measured in the same run so the comparison is
     /// hardware-normalised.
@@ -263,29 +278,37 @@ struct InferRow {
     hidden_frac: f64,
 }
 
-fn write_infer_json(rows: &[InferRow], kernel_speedup: f64) {
+fn write_infer_json(rows: &[InferRow], kernel_speedup: f64, kernel_i8_speedup: f64) {
     let path =
         std::env::var("BENCH_INFER_JSON").unwrap_or_else(|_| "BENCH_infer.json".to_string());
     let mut out = String::from("{\n  \"bench\": \"engine-infer-tile-streamed\",\n");
     out.push_str(&format!(
-        "  \"smoke\": {},\n  \"kernel_speedup\": {:.3},\n  \"entries\": [\n",
+        "  \"smoke\": {},\n  \"kernel_speedup\": {:.3},\n  \
+         \"kernel_i8_speedup\": {:.3},\n  \"entries\": [\n",
         smoke_mode(),
-        kernel_speedup
+        kernel_speedup,
+        kernel_i8_speedup
     ));
     for (i, r) in rows.iter().enumerate() {
         out.push_str(&format!(
-            "    {{\"network\": \"{}\", \"input_len\": {}, \"slab_budget_bytes\": {}, \
+            "    {{\"network\": \"{}\", \"precision\": \"{}\", \"input_len\": {}, \
+             \"slab_budget_bytes\": {}, \
              \"peak_resident_weight_bytes\": {}, \"dense_ovsf_weight_bytes\": {}, \
+             \"cache_hits\": {}, \"cache_misses\": {}, \"hit_rate\": {:.4}, \
              \"serial_ns_per_infer\": {:.1}, \"serial_inf_per_s\": {:.4}, \
              \"ns_per_infer\": {:.1}, \"inf_per_s\": {:.4}, \
              \"guarded_ns_per_infer\": {:.1}, \"guarded_inf_per_s\": {:.4}, \
              \"speedup\": {:.3}, \
              \"gen_ns\": {}, \"hidden_ns\": {}, \"hidden_frac\": {:.3}}}{}\n",
             json_escape(&r.network),
+            r.precision.label(),
             r.input_len,
             r.slab_budget_bytes,
             r.peak_resident_weight_bytes,
             r.dense_ovsf_weight_bytes,
+            r.cache_hits,
+            r.cache_misses,
+            r.hit_rate,
             r.serial_ns_per_infer,
             r.serial_inf_per_s,
             r.ns_per_infer,
@@ -379,8 +402,10 @@ fn scalar_strip_kernel(
 
 /// Microkernel before/after at the ResNet-18 stage-2 tile shape
 /// (`T_R×P×T_C = 64×1152×48`): scalar axpy loop vs the register-blocked
-/// `PeArraySim::execute_strip`. Returns the speedup.
-fn bench_microkernel() -> f64 {
+/// `PeArraySim::execute_strip`, plus the i8×i8→i32 strip on a quantised
+/// twin of the same slab. Returns `(f32_speedup_vs_scalar,
+/// i8_speedup_vs_f32_blocked)`.
+fn bench_microkernel() -> (f64, f64) {
     println!("-- PE strip GEMM microkernel (64×1152×48 tile) --");
     let (rows, p, cols) = (64usize, 1152usize, 48usize);
     let mut rng = Xoshiro256::seed_from_u64(0x5eed);
@@ -403,7 +428,32 @@ fn bench_microkernel() -> f64 {
     assert_eq!(out, out2, "microkernel must be bit-identical to the scalar loop");
     let speedup = before.mean_ns / after.mean_ns;
     println!("   microkernel speedup: {speedup:.2}×");
-    speedup
+
+    // i8 twin: quantise the slab once (as slab generation does), then run
+    // the widened i8×i8→i32 strip on the same activations.
+    let max_w = slab.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scheme = I8Scheme::from_max_abs(max_w);
+    let codes: Vec<i8> = slab.iter().map(|&v| scheme.quantise(v)).collect();
+    let mut out3 = vec![0.0f32; rows * cols];
+    let after_i8 = bench_auto("pe: i8 strip (i8×i8→i32 microkernel)", 400, || {
+        out3.iter_mut().for_each(|v| *v = 0.0);
+        pe.execute_strip_i8(&act, &codes, scheme.scale, rows, p, cols, &mut out3, cols, 0);
+        out3[0]
+    });
+    let max_a = act.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let bound = i8_error_bound(p, max_w, max_a, scheme.scale);
+    let max_err = out2
+        .iter()
+        .zip(&out3)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_err <= bound,
+        "i8 strip error {max_err} exceeds the analytic bound {bound}"
+    );
+    let i8_speedup = after.mean_ns / after_i8.mean_ns;
+    println!("   i8 kernel speedup over f32 blocked: {i8_speedup:.2}×");
+    (speedup, i8_speedup)
 }
 
 /// Two-model interleaved-traffic serving bench: ResNet-18 + SqueezeNet
@@ -525,15 +575,25 @@ fn bench_multimodel() {
     }
 }
 
-fn build_infer_engine(net: &Network, pipelined: bool, cache: Arc<SlabCache>) -> Engine {
-    build_infer_engine_inner(net, pipelined, cache, false)
+fn build_infer_engine(
+    net: &Network,
+    pipelined: bool,
+    cache: Arc<SlabCache>,
+    precision: Precision,
+) -> Engine {
+    build_infer_engine_inner(net, pipelined, cache, false, precision)
 }
 
 /// Same datapath with the zero-probability [`FaultyBackend`] wrapper in
 /// the backend seat — measures the fault-tolerance layer's fault-free
 /// overhead (one PRNG roll guard per layer call; nothing injected).
-fn build_guarded_engine(net: &Network, pipelined: bool, cache: Arc<SlabCache>) -> Engine {
-    build_infer_engine_inner(net, pipelined, cache, true)
+fn build_guarded_engine(
+    net: &Network,
+    pipelined: bool,
+    cache: Arc<SlabCache>,
+    precision: Precision,
+) -> Engine {
+    build_infer_engine_inner(net, pipelined, cache, true, precision)
 }
 
 fn build_infer_engine_inner(
@@ -541,6 +601,7 @@ fn build_infer_engine_inner(
     pipelined: bool,
     cache: Arc<SlabCache>,
     guarded: bool,
+    precision: Precision,
 ) -> Engine {
     let profile = RatioProfile::ovsf50(net);
     let plan = Engine::builder()
@@ -553,6 +614,7 @@ fn build_infer_engine_inner(
         .unwrap();
     let mut backend = SimBackend::with_cache(cache);
     backend.pipelined = pipelined;
+    backend.precision = precision;
     if guarded {
         let wrapped = FaultyBackend::new(backend, FaultPlan::none());
         Engine::with_backend(plan, Box::new(wrapped)).unwrap()
@@ -569,105 +631,131 @@ fn build_infer_engine_inner(
 /// reports the memory-footprint comparison (full dense materialisation vs
 /// measured peak resident slab bytes).
 fn bench_engine_infer() -> Vec<InferRow> {
-    println!("-- end-to-end Engine::infer (serial vs pipelined datapath) --");
+    println!("-- end-to-end Engine::infer (serial vs pipelined, f32 vs i8) --");
     let budget = 8usize << 20; // 8 MiB — a fraction of any ImageNet model
     let mut rows = Vec::new();
     for net in [resnet::resnet18(), resnet::resnet50()] {
-        let dense_ovsf_weight_bytes: u64 = net
-            .layers
-            .iter()
-            .filter(|l| l.ovsf)
-            .map(|l| {
-                let g = l.gemm();
-                g.p * g.c * std::mem::size_of::<f32>() as u64
-            })
-            .sum();
-        let l0 = &net.layers[0];
-        let input_len = (l0.h * l0.w * l0.n_in) as usize;
-        let mut rng = Xoshiro256::seed_from_u64(0x1f3);
-        let input = rng.normal_vec(input_len);
-        // A full ImageNet inference is a lot of GEMM: size the iteration
-        // count directly instead of auto-calibrating (the probe iteration
-        // alone would blow the smoke budget).
-        let iters = if smoke_mode() { 1 } else { 3 };
+        for precision in [Precision::F32, Precision::I8] {
+            // The dense comparator at this row's word width: what full
+            // materialisation of the OVSF GEMM weights would occupy.
+            let dense_ovsf_weight_bytes: u64 = net
+                .layers
+                .iter()
+                .filter(|l| l.ovsf)
+                .map(|l| {
+                    let g = l.gemm();
+                    g.p * g.c * precision.word_bytes() as u64
+                })
+                .sum();
+            let label = match precision {
+                Precision::F32 => net.name.clone(),
+                Precision::I8 => format!("{}-i8", net.name),
+            };
+            let l0 = &net.layers[0];
+            let input_len = (l0.h * l0.w * l0.n_in) as usize;
+            let mut rng = Xoshiro256::seed_from_u64(0x1f3);
+            let input = rng.normal_vec(input_len);
+            // A full ImageNet inference is a lot of GEMM: size the
+            // iteration count directly instead of auto-calibrating (the
+            // probe iteration alone would blow the smoke budget).
+            let iters = if smoke_mode() { 1 } else { 3 };
 
-        // Serial schedule — the pre-pipeline datapath and the committed
-        // baseline's comparator. One warm-up pass fills the slab cache so
-        // both schedules are measured steady-state.
-        let cache_s = Arc::new(SlabCache::with_budget(budget));
-        let mut serial = build_infer_engine(&net, false, Arc::clone(&cache_s));
-        serial.infer(&input).unwrap();
-        let rs = bench(
-            &format!("engine: {} numeric infer (serial)", net.name),
-            0,
-            iters,
-            || serial.infer(&input).unwrap().output[0],
-        );
+            // Serial schedule — the pre-pipeline datapath and the
+            // committed baseline's comparator. One warm-up pass fills the
+            // slab cache so both schedules are measured steady-state.
+            let cache_s = Arc::new(SlabCache::with_budget(budget));
+            let mut serial =
+                build_infer_engine(&net, false, Arc::clone(&cache_s), precision);
+            serial.infer(&input).unwrap();
+            let rs = bench(
+                &format!("engine: {label} numeric infer (serial)"),
+                0,
+                iters,
+                || serial.infer(&input).unwrap().output[0],
+            );
 
-        // Pipelined prefetch datapath. The cold first pass supplies the
-        // overlap telemetry (warm passes hit the cache and generate ~0).
-        let cache_p = Arc::new(SlabCache::with_budget(budget));
-        let mut piped = build_infer_engine(&net, true, Arc::clone(&cache_p));
-        let cold = piped.infer(&input).unwrap();
-        let overlap = cold.report.overlap();
-        let rp = bench(
-            &format!("engine: {} numeric infer (pipelined)", net.name),
-            0,
-            iters,
-            || piped.infer(&input).unwrap().output[0],
-        );
-        let peak = cache_p.peak_resident_bytes();
-        assert!(
-            peak <= budget,
-            "{}: peak resident weights {peak} exceed the {budget}-byte budget",
-            net.name
-        );
+            // Pipelined prefetch datapath. The cold first pass supplies
+            // the overlap telemetry (warm passes hit the cache and
+            // generate ~0). The warm-pass hit/miss counters are this
+            // row's fixed-budget hit-rate figure.
+            let cache_p = Arc::new(SlabCache::with_budget(budget));
+            let mut piped =
+                build_infer_engine(&net, true, Arc::clone(&cache_p), precision);
+            let cold = piped.infer(&input).unwrap();
+            let overlap = cold.report.overlap();
+            let (cold_hits, cold_misses) = (cache_p.hits(), cache_p.misses());
+            let rp = bench(
+                &format!("engine: {label} numeric infer (pipelined)"),
+                0,
+                iters,
+                || piped.infer(&input).unwrap().output[0],
+            );
+            let cache_hits = cache_p.hits() - cold_hits;
+            let cache_misses = cache_p.misses() - cold_misses;
+            let lookups = cache_hits + cache_misses;
+            let hit_rate = if lookups > 0 {
+                cache_hits as f64 / lookups as f64
+            } else {
+                0.0
+            };
+            let peak = cache_p.peak_resident_bytes();
+            assert!(
+                peak <= budget,
+                "{label}: peak resident weights {peak} exceed the {budget}-byte budget"
+            );
 
-        // Guarded pass: the identical pipelined datapath behind a
-        // zero-probability FaultyBackend — the fault-tolerance layer's
-        // fault-free overhead, measured in the same run.
-        let cache_g = Arc::new(SlabCache::with_budget(budget));
-        let mut guarded = build_guarded_engine(&net, true, Arc::clone(&cache_g));
-        guarded.infer(&input).unwrap();
-        let rg = bench(
-            &format!("engine: {} numeric infer (guarded)", net.name),
-            0,
-            iters,
-            || guarded.infer(&input).unwrap().output[0],
-        );
+            // Guarded pass: the identical pipelined datapath behind a
+            // zero-probability FaultyBackend — the fault-tolerance
+            // layer's fault-free overhead, measured in the same run.
+            let cache_g = Arc::new(SlabCache::with_budget(budget));
+            let mut guarded =
+                build_guarded_engine(&net, true, Arc::clone(&cache_g), precision);
+            guarded.infer(&input).unwrap();
+            let rg = bench(
+                &format!("engine: {label} numeric infer (guarded)"),
+                0,
+                iters,
+                || guarded.infer(&input).unwrap().output[0],
+            );
 
-        let speedup = rs.mean_ns / rp.mean_ns;
-        println!(
-            "   {}: serial {:.2} inf/s → pipelined {:.2} inf/s ({speedup:.2}×); \
-             guarded {:.2} inf/s ({:+.1}% fault-guard overhead); \
-             cold pass hid {:.0}% of generation; dense OVSF weights {:.1} MiB vs \
-             peak resident {:.2} MiB (budget 8 MiB)",
-            net.name,
-            1e9 / rs.mean_ns,
-            1e9 / rp.mean_ns,
-            1e9 / rg.mean_ns,
-            (rg.mean_ns / rp.mean_ns - 1.0) * 100.0,
-            overlap.hidden_frac() * 100.0,
-            dense_ovsf_weight_bytes as f64 / (1 << 20) as f64,
-            peak as f64 / (1 << 20) as f64
-        );
-        rows.push(InferRow {
-            network: net.name.clone(),
-            input_len,
-            slab_budget_bytes: budget,
-            peak_resident_weight_bytes: peak,
-            dense_ovsf_weight_bytes,
-            serial_ns_per_infer: rs.mean_ns,
-            serial_inf_per_s: 1e9 / rs.mean_ns,
-            ns_per_infer: rp.mean_ns,
-            inf_per_s: 1e9 / rp.mean_ns,
-            guarded_ns_per_infer: rg.mean_ns,
-            guarded_inf_per_s: 1e9 / rg.mean_ns,
-            speedup,
-            gen_ns: overlap.gen_ns,
-            hidden_ns: overlap.hidden_ns,
-            hidden_frac: overlap.hidden_frac(),
-        });
+            let speedup = rs.mean_ns / rp.mean_ns;
+            println!(
+                "   {label}: serial {:.2} inf/s → pipelined {:.2} inf/s \
+                 ({speedup:.2}×); guarded {:.2} inf/s ({:+.1}% fault-guard \
+                 overhead); cold pass hid {:.0}% of generation; warm hit rate \
+                 {:.1}%; dense OVSF weights {:.1} MiB vs peak resident \
+                 {:.2} MiB (budget 8 MiB)",
+                1e9 / rs.mean_ns,
+                1e9 / rp.mean_ns,
+                1e9 / rg.mean_ns,
+                (rg.mean_ns / rp.mean_ns - 1.0) * 100.0,
+                overlap.hidden_frac() * 100.0,
+                hit_rate * 100.0,
+                dense_ovsf_weight_bytes as f64 / (1 << 20) as f64,
+                peak as f64 / (1 << 20) as f64
+            );
+            rows.push(InferRow {
+                network: label,
+                precision,
+                input_len,
+                slab_budget_bytes: budget,
+                peak_resident_weight_bytes: peak,
+                dense_ovsf_weight_bytes,
+                cache_hits,
+                cache_misses,
+                hit_rate,
+                serial_ns_per_infer: rs.mean_ns,
+                serial_inf_per_s: 1e9 / rs.mean_ns,
+                ns_per_infer: rp.mean_ns,
+                inf_per_s: 1e9 / rp.mean_ns,
+                guarded_ns_per_infer: rg.mean_ns,
+                guarded_inf_per_s: 1e9 / rg.mean_ns,
+                speedup,
+                gen_ns: overlap.gen_ns,
+                hidden_ns: overlap.hidden_ns,
+                hidden_frac: overlap.hidden_frac(),
+            });
+        }
     }
     rows
 }
@@ -724,9 +812,9 @@ fn main() {
     let rows = bench_ovsf_weights_generation();
     write_bench_json(&rows);
 
-    let kernel_speedup = bench_microkernel();
+    let (kernel_speedup, kernel_i8_speedup) = bench_microkernel();
     let infer_rows = bench_engine_infer();
-    write_infer_json(&infer_rows, kernel_speedup);
+    write_infer_json(&infer_rows, kernel_speedup, kernel_i8_speedup);
     maybe_write_baseline(&infer_rows);
 
     bench_multimodel();

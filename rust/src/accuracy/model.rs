@@ -9,6 +9,9 @@
 //! loss curve) is *measured* by training real OVSF models on synthetic data
 //! in `python/compile/train.py`.
 
+use crate::engine::backend::EnginePlan;
+use crate::perf::model::PerfModel;
+use crate::util::fixed::Precision;
 use crate::workload::{Network, RatioProfile};
 
 /// Accuracy anchors for one network: `(effective ρ over OVSF layers,
@@ -77,6 +80,65 @@ impl AccuracyModel {
     }
 }
 
+/// Representative post-training-quantisation top-1 penalty (percentage
+/// points) of a symmetric per-layer int8 weight scheme, per network.
+/// Deeper/over-parameterised residual nets quantise gracefully; the
+/// parameter-starved SqueezeNet is the classic PTQ outlier.
+pub fn i8_top1_penalty(network: &str) -> f64 {
+    match network {
+        "ResNet18" | "ResNet34" => 0.4,
+        "ResNet50" => 0.6,
+        "SqueezeNet" => 1.0,
+        _ => 0.5,
+    }
+}
+
+/// One point on a model's accuracy/throughput trade-off curve — what the
+/// [`Compiler`](crate::engine::compile::Compiler) surfaces per artifact so
+/// a deployment can pick its precision with both axes in view.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrecisionPoint {
+    /// The weight-datapath precision this point describes.
+    pub precision: Precision,
+    /// Modelled ImageNet top-1 (%) at the artifact's ρ profile, including
+    /// the PTQ penalty at `I8`.
+    pub top1: f64,
+    /// Analytical throughput (inf/s) at the plan's platform/bandwidth
+    /// point with the word length set to this precision's byte width.
+    pub inf_per_s: f64,
+    /// Throughput relative to the `F32` point (1.0 for `F32` itself).
+    pub rel_throughput: f64,
+}
+
+/// The accuracy/throughput point of a compiled plan at each supported
+/// precision. Accuracy comes from the paper-anchored [`AccuracyModel`]
+/// minus the per-network [`i8_top1_penalty`]; throughput from the
+/// analytical [`PerfModel`] with `wl_bytes` set per precision — compute
+/// cycles are word-length independent, so the gap is exactly the
+/// memory-wall relief the narrower words buy.
+pub fn precision_tradeoff(plan: &EnginePlan) -> Vec<PrecisionPoint> {
+    let acc = AccuracyModel::for_network(&plan.network);
+    let top1_f32 = acc.top1(&plan.network, &plan.profile);
+    let f32_perf = PerfModel::for_precision(plan.platform.clone(), plan.bw_mult, Precision::F32)
+        .network_perf(&plan.sigma, &plan.network, &plan.profile);
+    let i8_perf = PerfModel::for_precision(plan.platform.clone(), plan.bw_mult, Precision::I8)
+        .network_perf(&plan.sigma, &plan.network, &plan.profile);
+    vec![
+        PrecisionPoint {
+            precision: Precision::F32,
+            top1: top1_f32,
+            inf_per_s: f32_perf.inf_per_s,
+            rel_throughput: 1.0,
+        },
+        PrecisionPoint {
+            precision: Precision::I8,
+            top1: top1_f32 - i8_top1_penalty(&plan.network.name),
+            inf_per_s: i8_perf.inf_per_s,
+            rel_throughput: i8_perf.inf_per_s / f32_perf.inf_per_s,
+        },
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,6 +183,33 @@ mod tests {
         let a25 = m.top1(&net, &RatioProfile::ovsf25(&net));
         let a50 = m.top1(&net, &RatioProfile::ovsf50(&net));
         assert!(a_mid > a25 && a_mid <= a50 + 1e-9, "{a25} < {a_mid} ≤ {a50}");
+    }
+
+    #[test]
+    fn precision_tradeoff_trades_accuracy_for_throughput() {
+        use crate::arch::{DesignPoint, Platform};
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let plan = crate::engine::Engine::builder()
+            .platform(Platform::z7045())
+            .bandwidth(1)
+            .design_point(DesignPoint::new(64, 64, 16, 48))
+            .network(net)
+            .profile(profile)
+            .plan()
+            .unwrap();
+        let points = precision_tradeoff(&plan);
+        assert_eq!(points.len(), 2);
+        let f = points
+            .iter()
+            .find(|p| p.precision == Precision::F32)
+            .unwrap();
+        let i = points.iter().find(|p| p.precision == Precision::I8).unwrap();
+        // i8 gives up the PTQ penalty and buys memory-wall relief.
+        assert!((f.top1 - i.top1 - i8_top1_penalty("ResNet18")).abs() < 1e-9);
+        assert_eq!(f.rel_throughput, 1.0);
+        assert!(i.rel_throughput > 1.0, "i8 must be faster at 1× bandwidth");
+        assert!(i.inf_per_s > f.inf_per_s);
     }
 
     #[test]

@@ -42,7 +42,7 @@ use crate::coordinator::pool::{PoolConfig, RequestExecutor, ServerPool};
 use crate::coordinator::server::Request;
 use crate::engine::compile::CompiledModel;
 use crate::engine::wcache::SlabCache;
-use crate::engine::{BackendKind, Engine};
+use crate::engine::{BackendKind, Engine, Precision};
 use crate::error::{Error, Result};
 
 /// Process-wide registration-generation counter. Generations are unique
@@ -405,8 +405,20 @@ impl ServerPool {
         // compile time; analytical/simulator backends cannot fail to
         // construct.)
         if let BackendKind::Pjrt(pjrt) = &kind {
-            // A PJRT backend runs one fixed AOT artifact — it cannot route
-            // between models (workers also refuse switches at runtime).
+            // A PJRT backend runs one fixed AOT **f32** artifact — it can
+            // neither route between models (workers also refuse switches at
+            // runtime) nor serve a quantised artifact's numerics.
+            for id in registry.ids() {
+                if let Ok(m) = registry.get(&id) {
+                    if m.precision() != Precision::F32 {
+                        return Err(Error::InvalidConfig(format!(
+                            "PJRT pools execute a fixed AOT f32 artifact, but model \
+                             '{id}' is compiled at {}",
+                            m.precision()
+                        )));
+                    }
+                }
+            }
             if registry.len() > 1 {
                 return Err(Error::InvalidConfig(format!(
                     "PJRT pools serve a single fixed artifact, but {} models are \
@@ -501,7 +513,7 @@ mod tests {
             col_tile: 0,
         };
         reg.cache()
-            .try_get_or_generate(key, || Ok(vec![1.0; 16]))
+            .try_get_or_generate(key, || Ok(crate::engine::Slab::F32(vec![1.0; 16])))
             .unwrap();
         assert_eq!(reg.cache().len(), 1);
         reg.evict("a").unwrap();
@@ -533,7 +545,9 @@ mod tests {
             col_tile: 0,
         };
         reg.cache()
-            .try_get_or_generate(straggler_key, || Ok(vec![f32::NAN; 16]))
+            .try_get_or_generate(straggler_key, || {
+                Ok(crate::engine::Slab::F32(vec![f32::NAN; 16]))
+            })
             .unwrap();
         // Re-register the same id + network name.
         let new = reg.register("a", compile("a")).unwrap();
@@ -545,10 +559,50 @@ mod tests {
         let hits_before = reg.cache().hits();
         let v = reg
             .cache()
-            .try_get_or_generate(new_key, || Ok(vec![1.0; 16]))
+            .try_get_or_generate(new_key, || Ok(crate::engine::Slab::F32(vec![1.0; 16])))
             .unwrap();
         assert_eq!(reg.cache().hits(), hits_before, "must NOT adopt the straggler");
-        assert_eq!(v.as_slice(), &[1.0; 16], "fresh numerics, not the stale NaNs");
+        assert_eq!(v.f32_data(), &[1.0; 16], "fresh numerics, not the stale NaNs");
+    }
+
+    #[test]
+    fn serve_rejects_pjrt_pools_holding_i8_models() {
+        let reg = Arc::new(ModelRegistry::new());
+        let net = tiny_net("quant");
+        let profile = RatioProfile::uniform(&net, 0.5);
+        let model = compiler()
+            .precision(Precision::I8)
+            .compile(net, profile)
+            .unwrap();
+        assert_eq!(model.precision(), Precision::I8);
+        reg.register("quant", model).unwrap();
+        let cfg = crate::engine::PjrtConfig::new("/nonexistent", "model_fwd", vec![1]);
+        let err = ServerPool::serve(
+            Arc::clone(&reg),
+            BackendKind::Pjrt(cfg),
+            PoolConfig::default(),
+        )
+        .err()
+        .expect("PJRT cannot serve an i8 artifact");
+        assert!(err.to_string().contains("f32 artifact"), "{err}");
+        // The simulator pool serves the same registry fine.
+        let pool =
+            ServerPool::serve(reg, BackendKind::Simulator, PoolConfig::default()).unwrap();
+        let handle = pool
+            .submit(crate::coordinator::server::Request::for_model(
+                0,
+                "quant",
+                vec![0.5; 8 * 8 * 4],
+            ))
+            .unwrap();
+        let resp = handle.wait().unwrap();
+        assert_eq!(
+            resp.output.len(),
+            5,
+            "i8 model serves numerics through the pool"
+        );
+        assert!(resp.output.iter().all(|v| v.is_finite()));
+        let _ = pool.shutdown();
     }
 
     #[test]

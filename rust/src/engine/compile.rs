@@ -37,6 +37,7 @@ use crate::engine::wcache::WeightsKey;
 use crate::engine::Engine;
 use crate::error::Result;
 use crate::sim::hw_weights::HwOvsfWeights;
+use crate::util::fixed::Precision;
 use crate::workload::{Network, RatioProfile};
 
 /// An immutable, shareable model artifact: the output of
@@ -53,9 +54,14 @@ pub struct CompiledModel {
     /// artifact is registered — see
     /// [`ModelRegistry::register`](crate::coordinator::registry::ModelRegistry::register)).
     generation: u64,
+    /// Numeric precision of the weight datapath this artifact serves at.
+    precision: Precision,
     /// Fitted once per artifact, on first use by a numeric backend —
     /// timing-only (analytical) pools never pay the fit.
     hw: OnceLock<Vec<Option<Arc<HwOvsfWeights>>>>,
+    /// Per-layer α-derived int8 weight scales (`None` for dense layers),
+    /// derived from [`hw`](Self::hw) on first use for `I8` artifacts.
+    i8_scales: OnceLock<Vec<Option<f32>>>,
 }
 
 impl std::fmt::Debug for CompiledModel {
@@ -67,6 +73,7 @@ impl std::fmt::Debug for CompiledModel {
             .field("output_len", &self.output_len)
             .field("alpha_words", &self.alpha_words)
             .field("ovsf_layers", &self.weights_keys.len())
+            .field("precision", &self.precision)
             .finish()
     }
 }
@@ -76,8 +83,18 @@ impl CompiledModel {
     /// weights-key namespace, the per-layer synthetic-checkpoint seeds and
     /// the α-volume accounting. The compressed OVSF α sets themselves are
     /// fitted once per artifact, lazily on first use by a numeric backend
-    /// (see [`hw`](Self::hw)).
+    /// (see [`hw`](Self::hw)). Compiles at the reference `F32` precision;
+    /// use [`from_plan_at`](Self::from_plan_at) (or
+    /// [`Compiler::precision`]) for the int8 datapath.
     pub fn from_plan(plan: EnginePlan) -> Result<Self> {
+        Self::from_plan_at(plan, Precision::F32)
+    }
+
+    /// Compile an already-validated plan at an explicit weight-datapath
+    /// precision. The precision is stamped into every [`WeightsKey`] so an
+    /// f32 and an i8 artifact of the same network can never alias each
+    /// other's slabs in a shared cache.
+    pub fn from_plan_at(plan: EnginePlan, precision: Precision) -> Result<Self> {
         let n = plan.n_layers();
         let mut weights_keys = Vec::new();
         let mut weight_seeds = Vec::with_capacity(n);
@@ -87,13 +104,16 @@ impl CompiledModel {
             if layer.ovsf {
                 let rho = plan.profile.rho(idx);
                 alpha_words += layer.n_in * layer.n_out * layer.basis_per_chunk(rho);
-                weights_keys.push(WeightsKey::new(
-                    plan.network.name.clone(),
-                    idx,
-                    (layer.n_in, layer.n_out, layer.k),
-                    plan.sigma,
-                    rho,
-                ));
+                weights_keys.push(
+                    WeightsKey::new(
+                        plan.network.name.clone(),
+                        idx,
+                        (layer.n_in, layer.n_out, layer.k),
+                        plan.sigma,
+                        rho,
+                    )
+                    .with_precision(precision),
+                );
             }
         }
         let input_len = plan
@@ -119,7 +139,9 @@ impl CompiledModel {
             weights_keys,
             weight_seeds,
             generation: 0,
+            precision,
             hw: OnceLock::new(),
+            i8_scales: OnceLock::new(),
         })
     }
 
@@ -213,6 +235,38 @@ impl CompiledModel {
         Ok(self.hw.get_or_init(|| fitted))
     }
 
+    /// Numeric precision of the weight datapath this artifact serves at.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Per-layer symmetric int8 weight scales (`None` for dense layers),
+    /// derived from the artifact's fitted α sets
+    /// ([`HwOvsfWeights::i8_scale`]: `scale = max Σ|α| / 127`, an upper
+    /// bound on any reconstructed weight — quantisation never clips).
+    /// Computed on first call and cached; forces the lazy α fit.
+    pub fn i8_scales(&self) -> Result<&[Option<f32>]> {
+        if let Some(s) = self.i8_scales.get() {
+            return Ok(s);
+        }
+        let fitted = self.hw()?;
+        let scales: Vec<Option<f32>> = fitted
+            .iter()
+            .map(|h| h.as_ref().map(|hw| hw.i8_scale()))
+            .collect();
+        Ok(self.i8_scales.get_or_init(|| scales))
+    }
+
+    /// The artifact's accuracy/throughput point at each precision — the
+    /// trade-off the `Compiler` surfaces per model: representative post-
+    /// training-quantisation top-1 deltas from
+    /// [`AccuracyModel`](crate::accuracy::model::AccuracyModel) against the
+    /// analytical throughput with the weight word length set to each
+    /// precision's byte width.
+    pub fn precision_tradeoff(&self) -> Vec<crate::accuracy::model::PrecisionPoint> {
+        crate::accuracy::model::precision_tradeoff(&self.plan)
+    }
+
     /// Admission-time device latency per inference (seconds).
     pub fn latency_s(&self) -> f64 {
         self.plan.schedule.latency_s
@@ -227,6 +281,7 @@ impl CompiledModel {
 pub struct Compiler {
     platform: Option<Platform>,
     bw_mult: Option<u32>,
+    precision: Precision,
     sigma: Mutex<Option<DesignPoint>>,
 }
 
@@ -242,6 +297,7 @@ impl Compiler {
         Self {
             platform: None,
             bw_mult: None,
+            precision: Precision::F32,
             sigma: Mutex::new(None),
         }
     }
@@ -255,6 +311,17 @@ impl Compiler {
     /// Off-chip bandwidth multiplier (default: 4).
     pub fn bandwidth(mut self, bw_mult: u32) -> Self {
         self.bw_mult = Some(bw_mult);
+        self
+    }
+
+    /// Weight-datapath precision compiled into every artifact from this
+    /// compiler (default: `F32`). At `I8`, slab generation quantises
+    /// weights during reconstruction and the PE array runs the
+    /// i8×i8→i32 microkernel; use
+    /// [`CompiledModel::precision_tradeoff`] to inspect the
+    /// accuracy/throughput point either choice lands on.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
         self
     }
 
@@ -292,7 +359,7 @@ impl Compiler {
         // One fabric for every model compiled here: pin the (possibly
         // DSE-chosen) design point for all subsequent compiles.
         *self.pinned() = Some(plan.sigma);
-        CompiledModel::from_plan(plan)
+        CompiledModel::from_plan_at(plan, self.precision)
     }
 }
 
@@ -360,6 +427,51 @@ mod tests {
             .compile(sqn.clone(), RatioProfile::ovsf50(&sqn))
             .unwrap();
         assert_eq!(b.sigma(), pinned, "one fabric serves every model");
+    }
+
+    #[test]
+    fn i8_artifact_stamps_keys_and_derives_positive_scales() {
+        let net = tiny_net();
+        let profile = RatioProfile::uniform(&net, 0.5);
+        let compiler = Compiler::new()
+            .platform(Platform::z7045())
+            .bandwidth(4)
+            .design_point(DesignPoint::new(8, 4, 8, 4))
+            .precision(Precision::I8);
+        let m = compiler.compile(net.clone(), profile.clone()).unwrap();
+        assert_eq!(m.precision(), Precision::I8);
+        for k in m.weights_keys() {
+            assert_eq!(k.precision, Precision::I8, "key must carry precision");
+        }
+        // Scales exist exactly for OVSF layers, are positive/finite, and
+        // match a direct derivation from the fitted α sets.
+        let scales = m.i8_scales().unwrap();
+        assert_eq!(scales.len(), net.layers.len());
+        let fitted = m.hw().unwrap();
+        for (idx, s) in scales.iter().enumerate() {
+            match (s, &fitted[idx]) {
+                (Some(scale), Some(hw)) => {
+                    assert!(scale.is_finite() && *scale > 0.0);
+                    assert_eq!(*scale, hw.i8_scale());
+                }
+                (None, None) => assert!(!net.layers[idx].ovsf),
+                _ => panic!("scale/α presence mismatch at layer {idx}"),
+            }
+        }
+        // An F32 twin of the same network lives under different keys.
+        let compiler_f = Compiler::new()
+            .platform(Platform::z7045())
+            .bandwidth(4)
+            .design_point(DesignPoint::new(8, 4, 8, 4));
+        let mf = compiler_f.compile(net, profile).unwrap();
+        assert_eq!(mf.precision(), Precision::F32);
+        for (ki, kf) in m.weights_keys().iter().zip(mf.weights_keys()) {
+            assert_ne!(ki, kf, "precision must split the key namespace");
+        }
+        // Both precisions appear in the surfaced trade-off.
+        let points = m.precision_tradeoff();
+        assert!(points.iter().any(|p| p.precision == Precision::F32));
+        assert!(points.iter().any(|p| p.precision == Precision::I8));
     }
 
     #[test]

@@ -53,11 +53,12 @@ pub use compile::{CompiledModel, Compiler};
 pub use fault::{FaultPlan, FaultStats, FaultyBackend};
 pub use pjrt::{PjrtBackend, PjrtConfig};
 pub use sim::SimBackend;
-pub use wcache::{SlabCache, SlabKey, WeightsKey};
+pub use wcache::{Slab, SlabCache, SlabKey, WeightsKey};
 
 use std::sync::Arc;
 
 use crate::arch::{DesignPoint, Platform};
+pub use crate::util::fixed::Precision;
 use crate::coordinator::pool::{PoolConfig, ServerPool};
 use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::plan::InferencePlan;
@@ -104,7 +105,7 @@ impl Engine {
     /// precomputation). The simulator backend gets a private weights
     /// cache; use [`EngineBuilder::weights_cache`] to share one.
     pub fn from_plan(plan: EnginePlan, kind: &BackendKind) -> Result<Self> {
-        let backend = make_backend(kind, &Arc::new(SlabCache::new()))?;
+        let backend = make_backend(kind, &Arc::new(SlabCache::new()), Precision::F32)?;
         Self::with_backend(plan, backend)
     }
 
@@ -124,7 +125,7 @@ impl Engine {
         kind: &BackendKind,
         cache: &Arc<SlabCache>,
     ) -> Result<Self> {
-        let mut backend = make_backend(kind, cache)?;
+        let mut backend = make_backend(kind, cache, model.precision())?;
         backend.plan(model.plan())?;
         backend.preload(model)?;
         Ok(Self {
@@ -304,17 +305,36 @@ pub struct EngineBuilder {
     backend: Option<BackendKind>,
     weights_cache: Option<Arc<SlabCache>>,
     slab_budget: Option<usize>,
+    precision: Option<Precision>,
 }
 
-/// Instantiate a backend of `kind`, wiring the simulator onto `cache`.
+/// Instantiate a backend of `kind`, wiring the simulator onto `cache` at
+/// the requested weight-datapath precision. Only the simulator has an i8
+/// datapath: the analytical model is precision-neutral (cycle counts are
+/// word-length independent on the modelled fixed-point engine) and the
+/// PJRT runtime executes a fixed AOT-compiled f32 artifact, so `I8` there
+/// is a configuration error.
 fn make_backend(
     kind: &BackendKind,
     cache: &Arc<SlabCache>,
+    precision: Precision,
 ) -> Result<Box<dyn ExecutionBackend>> {
     Ok(match kind {
         BackendKind::Analytical => Box::new(AnalyticalBackend::new()),
-        BackendKind::Simulator => Box::new(SimBackend::with_cache(Arc::clone(cache))),
-        BackendKind::Pjrt(cfg) => Box::new(PjrtBackend::new(cfg.clone())?),
+        BackendKind::Simulator => {
+            let mut b = SimBackend::with_cache(Arc::clone(cache));
+            b.precision = precision;
+            Box::new(b)
+        }
+        BackendKind::Pjrt(cfg) => {
+            if precision != Precision::F32 {
+                return Err(Error::InvalidConfig(format!(
+                    "PJRT backend executes a fixed AOT f32 artifact; it cannot \
+                     serve a {precision} model"
+                )));
+            }
+            Box::new(PjrtBackend::new(cfg.clone())?)
+        }
     })
 }
 
@@ -352,6 +372,16 @@ impl EngineBuilder {
     /// Execution backend (default: [`BackendKind::Analytical`]).
     pub fn backend(mut self, backend: BackendKind) -> Self {
         self.backend = Some(backend);
+        self
+    }
+
+    /// Weight-datapath precision (default: `F32`). At `I8` the simulator
+    /// backend quantises OVSF slabs at emission (4× denser in the slab
+    /// cache) and multiplies them on the i8×i8→i32 microkernel; only the
+    /// simulator supports it. [`build_pool`](Self::build_pool) compiles
+    /// its artifact at this precision.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = Some(precision);
         self
     }
 
@@ -466,7 +496,8 @@ impl EngineBuilder {
         let plan = self.plan()?;
         let cache = self.make_cache();
         let kind = self.backend.unwrap_or(BackendKind::Analytical);
-        Engine::with_backend(plan, make_backend(&kind, &cache)?)
+        let precision = self.precision.unwrap_or_default();
+        Engine::with_backend(plan, make_backend(&kind, &cache, precision)?)
     }
 
     /// Validate once, compile the model, and stand up a **registry-routed**
@@ -487,7 +518,7 @@ impl EngineBuilder {
         // slab it is currently streaming).
         let cache = self.make_cache();
         let kind = self.backend.unwrap_or(BackendKind::Analytical);
-        let compiled = CompiledModel::from_plan(plan)?;
+        let compiled = CompiledModel::from_plan_at(plan, self.precision.unwrap_or_default())?;
         let registry = Arc::new(ModelRegistry::with_cache(cache));
         let id = compiled.network_name().to_string();
         registry.register(id, compiled)?;
@@ -704,6 +735,31 @@ mod tests {
         bad[2] = vec![0.0; 7];
         assert!(engine.infer_batch(bad).is_err());
         assert!(engine.infer_batch(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn builder_precision_reaches_the_datapath_and_rejects_pjrt() {
+        let input = vec![0.5f32; 8 * 8 * 4];
+        let cache = Arc::new(SlabCache::new());
+        let mut engine = tiny_builder()
+            .backend(BackendKind::Simulator)
+            .weights_cache(Arc::clone(&cache))
+            .precision(Precision::I8)
+            .build()
+            .unwrap();
+        let out = engine.infer(&input).unwrap();
+        assert!(!out.output.is_empty());
+        // 6 OVSF slabs, all i8 ⇒ P·T_C bytes each instead of 4·P·T_C.
+        assert_eq!(cache.resident_bytes(), 6 * 72 * 4);
+        // The PJRT runtime executes a fixed f32 AOT artifact.
+        let cfg = PjrtConfig::new("/nonexistent-artifacts", "model_fwd", vec![1]);
+        let err = builder()
+            .backend(BackendKind::Pjrt(cfg))
+            .precision(Precision::I8)
+            .build()
+            .err()
+            .expect("PJRT at i8 must be rejected");
+        assert!(err.to_string().contains("f32 artifact"), "{err}");
     }
 
     #[test]

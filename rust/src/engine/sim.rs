@@ -40,7 +40,7 @@ use std::time::Instant;
 use crate::engine::backend::{
     EnginePlan, ExecutionBackend, ExecutionReport, LayerCost, LayerOutcome, OverlapTelemetry,
 };
-use crate::engine::wcache::{SlabCache, SlabKey, WeightsKey};
+use crate::engine::wcache::{Slab, SlabCache, SlabKey, WeightsKey};
 use crate::error::{Error, Result};
 use crate::sim::engine::LayerSim;
 use crate::sim::hw_weights::HwOvsfWeights;
@@ -48,6 +48,7 @@ use crate::sim::im2col::im2col_strip_into;
 use crate::sim::pe_array::PeArraySim;
 use crate::sim::trace::LayerTrace;
 use crate::util::ceil_div;
+use crate::util::fixed::Precision;
 use crate::util::prng::Xoshiro256;
 use crate::util::threadpool::{ScopedTask, ThreadPool};
 use crate::workload::layer::Layer;
@@ -185,6 +186,10 @@ enum SlabJob {
         hw: Arc<HwOvsfWeights>,
         c0: usize,
         c1: usize,
+        /// Weight-datapath precision the slab is emitted at.
+        precision: Precision,
+        /// Per-layer symmetric i8 weight scale (only read at `I8`).
+        w_scale: f32,
     },
     /// Dense (stem / downsample / classifier) slab, synthesised into fresh
     /// scratch — the DRAM stream stand-in, deliberately uncached.
@@ -199,7 +204,7 @@ enum SlabJob {
 
 /// Run one generation job (shared by the prefetch worker and the serial
 /// datapath, so both produce byte-identical slabs through identical code).
-fn generate_slab(job: SlabJob) -> Result<Arc<Vec<f32>>> {
+fn generate_slab(job: SlabJob) -> Result<Arc<Slab>> {
     match job {
         SlabJob::Ovsf {
             cache,
@@ -207,11 +212,27 @@ fn generate_slab(job: SlabJob) -> Result<Arc<Vec<f32>>> {
             hw,
             c0,
             c1,
+            precision,
+            w_scale,
         } => cache.try_get_or_generate(key, || {
             let mut scratch = Vec::new();
-            let mut slab = Vec::new();
-            hw.slab_into(c0, c1, &mut scratch, &mut slab)?;
-            Ok(slab)
+            match precision {
+                Precision::F32 => {
+                    let mut slab = Vec::new();
+                    hw.slab_into(c0, c1, &mut scratch, &mut slab)?;
+                    Ok(Slab::F32(slab))
+                }
+                // Quantise during reconstruction: the FWHT stays f32,
+                // rounding happens exactly once at slab emission.
+                Precision::I8 => {
+                    let mut codes = Vec::new();
+                    hw.slab_into_i8(c0, c1, w_scale, &mut scratch, &mut codes)?;
+                    Ok(Slab::I8 {
+                        codes,
+                        scale: w_scale,
+                    })
+                }
+            }
         }),
         SlabJob::Dense {
             model,
@@ -222,14 +243,14 @@ fn generate_slab(job: SlabJob) -> Result<Arc<Vec<f32>>> {
         } => {
             let mut slab = Vec::new();
             synth_dense_slab(&model, idx, &layer, c0, c1, &mut slab);
-            Ok(Arc::new(slab))
+            Ok(Arc::new(Slab::F32(slab)))
         }
     }
 }
 
 /// A generated slab (or the generation error) plus the worker-side
 /// generation nanoseconds.
-type PrefetchResult = (u64, Result<Arc<Vec<f32>>>);
+type PrefetchResult = (u64, Result<Arc<Slab>>);
 
 /// The persistent background weights-generation worker — the software
 /// CNN-WGen running concurrently with the PE array. One job is in flight
@@ -316,6 +337,17 @@ pub struct SimBackend {
     /// Minimum MACs in one slab×strips pass before the row strips are
     /// sharded across the process thread pool (tunable for tests).
     pub par_min_macs: usize,
+    /// Weight-datapath precision slabs are generated and consumed at.
+    /// Adopted from the compiled artifact on
+    /// [`preload`](ExecutionBackend::preload); `F32` by default. At `I8`
+    /// the OVSF slabs are quantised at emission and the PE array runs the
+    /// i8×i8→i32 microkernel; dense (stem / downsample / classifier)
+    /// slabs stay f32 — they model the DRAM stream, not generated
+    /// weights.
+    pub precision: Precision,
+    /// Per-layer symmetric i8 weight scales, derived lazily beside the α
+    /// adoption (from the artifact's cached scales when one is preloaded).
+    w_scales: Vec<Option<f32>>,
     /// Per-layer compressed OVSF weights (α's): the resident model state,
     /// O(ρ·model) bytes. Dense OVSF weights only ever exist as cached
     /// slabs.
@@ -344,6 +376,8 @@ impl Default for SimBackend {
             selective: true,
             pipelined: true,
             par_min_macs: DEFAULT_PAR_MIN_MACS,
+            precision: Precision::F32,
+            w_scales: Vec::new(),
             hw: Vec::new(),
             artifact: None,
             act: Vec::new(),
@@ -418,6 +452,29 @@ impl SimBackend {
                     )))
                 }
             };
+            let precision = self.precision;
+            let w_scale = if precision == Precision::I8 {
+                match self.w_scales[idx] {
+                    Some(s) => s,
+                    None => {
+                        // Per-layer scale from the α sets (an upper bound on
+                        // any reconstructed weight — never clips); the
+                        // artifact caches the derivation across workers.
+                        let s = match &self.artifact {
+                            Some(artifact) => artifact.i8_scales()?[idx].ok_or_else(|| {
+                                Error::Coordinator(format!(
+                                    "layer {idx} has α state but no compiled i8 scale"
+                                ))
+                            })?,
+                            None => hw.i8_scale(),
+                        };
+                        self.w_scales[idx] = Some(s);
+                        s
+                    }
+                }
+            } else {
+                0.0
+            };
             // Slab identities carry the artifact's registration generation
             // (0 for unregistered engines), so a batch outliving its
             // model's eviction re-inserts under the old generation and can
@@ -430,7 +487,8 @@ impl SimBackend {
                     plan.sigma,
                     rho,
                 )
-                .with_generation(self.artifact.as_ref().map_or(0, |a| a.generation())),
+                .with_generation(self.artifact.as_ref().map_or(0, |a| a.generation()))
+                .with_precision(precision),
                 col_tile: ct as u32,
             };
             Ok(SlabJob::Ovsf {
@@ -439,6 +497,8 @@ impl SimBackend {
                 hw,
                 c0,
                 c1,
+                precision,
+                w_scale,
             })
         } else {
             Ok(SlabJob::Dense {
@@ -496,19 +556,23 @@ impl SimBackend {
     }
 
     /// Multiply one generated slab against every image's row strips —
-    /// the compute stage of the pipeline. Large passes shard `(image,
+    /// the compute stage of the pipeline. Dispatches on the slab's
+    /// precision: f32 slabs run the 4×8 f32 microkernel, i8 slabs the
+    /// widened i8×i8→i32 one (activations quantised per strip inside
+    /// [`PeArraySim::execute_strip_i8`] — a pure function of the strip, so
+    /// every schedule sees identical codes). Large passes shard `(image,
     /// strip)` work items across the process [`ThreadPool`]; small ones
     /// stay on the calling thread with reused lowering scratch. Either way
     /// each output element is produced by exactly one strip pass in the
     /// serial schedule's accumulation order, so the numerics are
-    /// bit-identical across all execution modes.
+    /// bit-identical across all execution modes at either precision.
     #[allow(clippy::too_many_arguments)]
     fn compute_slab(
         pe: &PeArraySim,
         layer: &Layer,
         images: &[Cow<'_, [f32]>],
         outs: &mut [Vec<f32>],
-        slab: &[f32],
+        slab: &Slab,
         dims: (usize, usize, usize),
         t_r: usize,
         c0: usize,
@@ -519,6 +583,14 @@ impl SimBackend {
         let (r, p, c) = dims;
         let strips = r.div_ceil(t_r);
         let macs = r * p * (c1 - c0) * images.len();
+        let strip_pass = |act: &[f32], rows: usize, chunk: &mut [f32]| match slab {
+            Slab::F32(data) => {
+                pe.execute_strip(act, data, rows, p, c1 - c0, chunk, c, c0);
+            }
+            Slab::I8 { codes, scale } => {
+                pe.execute_strip_i8(act, codes, *scale, rows, p, c1 - c0, chunk, c, c0);
+            }
+        };
         if macs < par_min_macs || strips * images.len() <= 1 {
             for (x, out) in images.iter().zip(outs.iter_mut()) {
                 for r0 in (0..r).step_by(t_r) {
@@ -529,16 +601,7 @@ impl SimBackend {
                     // of the GEMM work — the memory-for-recompute trade the
                     // slab path already makes for weights.
                     im2col_strip_into(layer, x, r0, r1, act_scratch);
-                    pe.execute_strip(
-                        act_scratch,
-                        slab,
-                        r1 - r0,
-                        p,
-                        c1 - c0,
-                        &mut out[r0 * c..r1 * c],
-                        c,
-                        c0,
-                    );
+                    strip_pass(act_scratch, r1 - r0, &mut out[r0 * c..r1 * c]);
                 }
             }
             return;
@@ -552,7 +615,24 @@ impl SimBackend {
                 tasks.push(Box::new(move || {
                     let mut act = Vec::new();
                     im2col_strip_into(layer, x, r0, r1, &mut act);
-                    pe.execute_strip(&act, slab, r1 - r0, p, c1 - c0, chunk, c, c0);
+                    match slab {
+                        Slab::F32(data) => {
+                            pe.execute_strip(&act, data, r1 - r0, p, c1 - c0, chunk, c, c0);
+                        }
+                        Slab::I8 { codes, scale } => {
+                            pe.execute_strip_i8(
+                                &act,
+                                codes,
+                                *scale,
+                                r1 - r0,
+                                p,
+                                c1 - c0,
+                                chunk,
+                                c,
+                                c0,
+                            );
+                        }
+                    }
                 }));
             }
         }
@@ -693,6 +773,7 @@ impl ExecutionBackend for SimBackend {
 
     fn plan(&mut self, plan: &EnginePlan) -> Result<()> {
         self.hw = vec![None; plan.n_layers()];
+        self.w_scales = vec![None; plan.n_layers()];
         // A stale artifact must not leak α state into an unrelated plan;
         // preload re-installs it right after when the plan came from one.
         self.artifact = None;
@@ -720,7 +801,10 @@ impl ExecutionBackend for SimBackend {
         }
         // Hold the handle only: the artifact's α sets are adopted on first
         // numeric use (`slab_job`), so timing-only traffic never pays the
-        // fit and switches stay O(1).
+        // fit and switches stay O(1). The artifact's precision is adopted
+        // eagerly — it decides which microkernel and slab layout every
+        // subsequent request runs.
+        self.precision = model.precision();
         self.artifact = Some(Arc::clone(model));
         Ok(())
     }
@@ -1031,6 +1115,66 @@ mod tests {
         sharded.plan(&plan).unwrap();
         let got = run_numeric(&mut sharded, &plan, &input);
         assert_eq!(got, expect, "strip sharding must not change a single bit");
+    }
+
+    #[test]
+    fn i8_schedules_are_bit_identical_and_slabs_stay_quarter_sized() {
+        let sigma = DesignPoint::new(8, 4, 8, 4);
+        let plan = tiny_plan(sigma);
+        let input = tiny_input();
+        let mut serial = SimBackend::new();
+        serial.precision = Precision::I8;
+        serial.pipelined = false;
+        serial.plan(&plan).unwrap();
+        let expect = run_numeric(&mut serial, &plan, &input);
+        for sharded in [false, true] {
+            let mut piped = SimBackend::new();
+            piped.precision = Precision::I8;
+            if sharded {
+                piped.par_min_macs = 0;
+            }
+            piped.plan(&plan).unwrap();
+            let got = run_numeric(&mut piped, &plan, &input);
+            assert_eq!(
+                got, expect,
+                "i8 pipelined/sharded schedules must not change a bit"
+            );
+            // Every cached slab is an i8 payload charged at 1 byte/word:
+            // both OVSF layers have P = 72, T_C = 4 ⇒ 288 B/slab.
+            assert_eq!(piped.cache().resident_bytes(), 6 * 72 * 4);
+        }
+        // The i8 outputs track the f32 reference loosely (layer-level
+        // bounds are pinned in tests/quantized_datapath.rs) but are not
+        // the same numbers — the quantised kernel really ran.
+        let mut f32b = SimBackend::new();
+        f32b.plan(&plan).unwrap();
+        let reference = run_numeric(&mut f32b, &plan, &input);
+        assert_ne!(expect, reference);
+        assert!(expect.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn mixed_precision_backends_share_a_cache_without_aliasing() {
+        let sigma = DesignPoint::new(8, 4, 8, 4);
+        let plan = tiny_plan(sigma);
+        let input = tiny_input();
+        let cache = Arc::new(SlabCache::new());
+        let mut f32b = SimBackend::with_cache(Arc::clone(&cache));
+        let mut i8b = SimBackend::with_cache(Arc::clone(&cache));
+        i8b.precision = Precision::I8;
+        f32b.plan(&plan).unwrap();
+        i8b.plan(&plan).unwrap();
+        let out_f = run_numeric(&mut f32b, &plan, &input);
+        assert_eq!(cache.misses(), 6);
+        let out_q = run_numeric(&mut i8b, &plan, &input);
+        // The i8 twin generates its own 6 slabs — no cross-precision hits.
+        assert_eq!(cache.misses(), 12, "precisions must not alias");
+        assert_eq!(cache.len(), 12);
+        assert_ne!(out_f, out_q);
+        // Both re-serve warm from the shared cache.
+        run_numeric(&mut f32b, &plan, &input);
+        run_numeric(&mut i8b, &plan, &input);
+        assert_eq!(cache.misses(), 12);
     }
 
     #[test]

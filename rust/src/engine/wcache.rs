@@ -9,6 +9,9 @@
 //! [`HwOvsfWeights::slab_into`](crate::sim::hw_weights::HwOvsfWeights::slab_into)
 //! generates — under a configurable byte budget with LRU eviction, so peak
 //! resident generated weights are O(slab budget) regardless of model size.
+//! Slabs are precision-aware ([`Slab`]): an int8 slab is charged its true
+//! 1-byte word width, so an i8-compiled model keeps ~4× the slabs of its
+//! f32 twin resident under one budget.
 //! The budget (and the [`peak_resident_bytes`](SlabCache::peak_resident_bytes)
 //! gauge) covers the bytes the *cache* holds; a consumer additionally pins
 //! at most the one slab it is currently streaming through its `Arc`
@@ -29,6 +32,7 @@ use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use crate::arch::DesignPoint;
 use crate::error::Result;
+use crate::util::fixed::Precision;
 
 /// Identity of one layer's generated weights. `(model, layer, shape, ρ)`
 /// determine the numerics (TiWGen tiling is numerics-invariant — a tested
@@ -59,6 +63,10 @@ pub struct WeightsKey {
     /// reinsertion race). Engines without a registry artifact use
     /// generation 0.
     pub generation: u64,
+    /// Numeric precision the slabs are generated at. Part of the key so an
+    /// f32 and an i8 compilation of the *same* network can coexist in one
+    /// shared cache without ever aliasing each other's payloads.
+    pub precision: Precision,
 }
 
 impl WeightsKey {
@@ -78,6 +86,7 @@ impl WeightsKey {
             sigma,
             rho_bits: rho.to_bits(),
             generation: 0,
+            precision: Precision::F32,
         }
     }
 
@@ -85,6 +94,13 @@ impl WeightsKey {
     #[must_use]
     pub fn with_generation(mut self, generation: u64) -> Self {
         self.generation = generation;
+        self
+    }
+
+    /// The same key at a different numeric precision.
+    #[must_use]
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
         self
     }
 }
@@ -99,16 +115,116 @@ pub struct SlabKey {
     pub col_tile: u32,
 }
 
+/// Payload of one cached slab, at its generated precision.
+///
+/// The cache charges each variant its **true** byte width against the
+/// budget: an i8 slab costs ¼ the bytes of its f32 twin, so an i8 model
+/// keeps ~4× as many slabs resident under the same budget — the
+/// cache-hit-rate half of the int8 datapath's win.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Slab {
+    /// Reference f32 weight words in the engine `P×T_C` layout.
+    F32(Vec<f32>),
+    /// Symmetric per-layer int8 codes (`real = code · scale`) in the same
+    /// layout. The scale is stamped at generation time from the layer's
+    /// fitted α sets and rides with the payload so a consumer can never
+    /// pair codes with the wrong dequantise factor.
+    I8 {
+        /// Quantised weight codes.
+        codes: Vec<i8>,
+        /// Per-layer dequantise scale (> 0).
+        scale: f32,
+    },
+}
+
+impl Slab {
+    /// The payload's precision.
+    pub fn precision(&self) -> Precision {
+        match self {
+            Slab::F32(_) => Precision::F32,
+            Slab::I8 { .. } => Precision::I8,
+        }
+    }
+
+    /// Number of weight elements (layout positions, not bytes).
+    pub fn len(&self) -> usize {
+        match self {
+            Slab::F32(d) => d.len(),
+            Slab::I8 { codes, .. } => codes.len(),
+        }
+    }
+
+    /// `true` when the slab holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload bytes at the precision's true word width — what the cache
+    /// charges against its budget.
+    pub fn bytes(&self) -> usize {
+        self.len() * self.precision().word_bytes()
+    }
+
+    /// The f32 words, or `None` for an i8 slab.
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Slab::F32(d) => Some(d),
+            Slab::I8 { .. } => None,
+        }
+    }
+
+    /// The i8 codes and their dequantise scale, or `None` for an f32 slab.
+    pub fn as_i8(&self) -> Option<(&[i8], f32)> {
+        match self {
+            Slab::F32(_) => None,
+            Slab::I8 { codes, scale } => Some((codes, *scale)),
+        }
+    }
+
+    /// The f32 words; panics on an i8 slab (test/bench convenience for
+    /// call sites that construct the slab themselves).
+    pub fn f32_data(&self) -> &[f32] {
+        match self {
+            Slab::F32(d) => d,
+            Slab::I8 { .. } => panic!("f32_data() called on an i8 slab"),
+        }
+    }
+
+    /// FNV-1a over the payload (and, for i8, the scale bits): covers
+    /// exactly the bytes a consumer would stream, at either precision.
+    pub fn checksum(&self) -> u64 {
+        match self {
+            Slab::F32(d) => slab_checksum(d),
+            Slab::I8 { codes, scale } => {
+                let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+                for c in codes {
+                    h ^= *c as u8 as u64;
+                    h = h.wrapping_mul(0x0000_0100_0000_01B3);
+                }
+                // The scale is part of the served numerics — cover it too.
+                h ^= u64::from(scale.to_bits());
+                h.wrapping_mul(0x0000_0100_0000_01B3)
+            }
+        }
+    }
+}
+
+impl From<Vec<f32>> for Slab {
+    fn from(data: Vec<f32>) -> Self {
+        Slab::F32(data)
+    }
+}
+
 struct SlabEntry {
-    data: Arc<Vec<f32>>,
+    data: Arc<Slab>,
     last_used: u64,
-    /// FNV-1a over the slab's `f32` bit patterns, stamped at insert and
-    /// verified on every hit: a corrupted slab is evicted and regenerated
-    /// instead of silently feeding garbage weights to the PE array.
+    /// FNV-1a over the slab payload, stamped at insert and verified on
+    /// every hit: a corrupted slab is evicted and regenerated instead of
+    /// silently feeding garbage weights to the PE array.
     checksum: u64,
 }
 
-/// FNV-1a over the slab's raw `f32` bit patterns (word-at-a-time — the
+/// FNV-1a over a slab's raw `f32` bit patterns (word-at-a-time — the
 /// verify cost per hit is a small constant factor of the copy the consumer
 /// does anyway).
 fn slab_checksum(data: &[f32]) -> u64 {
@@ -225,12 +341,14 @@ impl SlabCache {
     /// generation work) and the first insertion wins. Before inserting,
     /// least-recently-used slabs are evicted until the new slab fits the
     /// budget, so resident bytes never exceed `budget` while any other
-    /// entry could still be dropped.
+    /// entry could still be dropped. Each slab is charged its **own**
+    /// precision's byte width ([`Slab::bytes`]), so f32 and i8 slabs
+    /// compete accurately under one budget.
     pub fn try_get_or_generate(
         &self,
         key: SlabKey,
-        generate: impl FnOnce() -> Result<Vec<f32>>,
-    ) -> Result<Arc<Vec<f32>>> {
+        generate: impl FnOnce() -> Result<Slab>,
+    ) -> Result<Arc<Slab>> {
         self.lookups.fetch_add(1, Ordering::Relaxed);
         let found = {
             let mut m = self.lock();
@@ -247,7 +365,7 @@ impl SlabCache {
         if let Some((data, stamped)) = found {
             // Verify outside the lock (the checksum walk must not extend
             // the critical section).
-            if slab_checksum(&data) == stamped {
+            if data.checksum() == stamped {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return Ok(data);
             }
@@ -262,10 +380,7 @@ impl SlabCache {
                     .is_some_and(|e| Arc::ptr_eq(&e.data, &data));
                 if stale {
                     if let Some(e) = m.entries.remove(&key) {
-                        self.resident.fetch_sub(
-                            e.data.len() * std::mem::size_of::<f32>(),
-                            Ordering::Relaxed,
-                        );
+                        self.resident.fetch_sub(e.data.bytes(), Ordering::Relaxed);
                         true
                     } else {
                         false
@@ -281,7 +396,7 @@ impl SlabCache {
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let data = Arc::new(generate()?);
-        let bytes = data.len() * std::mem::size_of::<f32>();
+        let bytes = data.bytes();
         let mut evicted_count = 0u64;
         let adopted = {
             let mut m = self.lock();
@@ -307,10 +422,8 @@ impl SlabCache {
                         break; // map empty: the slab is admitted alone
                     };
                     if let Some(evicted) = m.entries.remove(&victim) {
-                        self.resident.fetch_sub(
-                            evicted.data.len() * std::mem::size_of::<f32>(),
-                            Ordering::Relaxed,
-                        );
+                        self.resident
+                            .fetch_sub(evicted.data.bytes(), Ordering::Relaxed);
                         evicted_count += 1;
                     }
                 }
@@ -319,7 +432,7 @@ impl SlabCache {
                 let entry = SlabEntry {
                     data: Arc::clone(&data),
                     last_used: tick,
-                    checksum: slab_checksum(&data),
+                    checksum: data.checksum(),
                 };
                 m.entries.insert(key, entry);
                 None
@@ -344,8 +457,7 @@ impl SlabCache {
                 .collect();
             for k in &victims {
                 if let Some(e) = m.entries.remove(k) {
-                    self.resident
-                        .fetch_sub(e.data.len() * std::mem::size_of::<f32>(), Ordering::Relaxed);
+                    self.resident.fetch_sub(e.data.bytes(), Ordering::Relaxed);
                 }
             }
             victims.len()
@@ -405,11 +517,20 @@ impl SlabCache {
             return false;
         }
         let mut data = e.data.as_ref().clone();
-        let word = (nth as usize / 7) % data.len();
-        let bit = (nth % 32) as u32;
-        data[word] = f32::from_bits(data[word].to_bits() ^ (1u32 << bit));
-        // Same length ⇒ the resident gauge is unchanged; the stale
-        // checksum is the point.
+        match &mut data {
+            Slab::F32(words) => {
+                let word = (nth as usize / 7) % words.len();
+                let bit = (nth % 32) as u32;
+                words[word] = f32::from_bits(words[word].to_bits() ^ (1u32 << bit));
+            }
+            Slab::I8 { codes, .. } => {
+                let word = (nth as usize / 7) % codes.len();
+                let bit = (nth % 8) as u32;
+                codes[word] = (codes[word] as u8 ^ (1u8 << bit)) as i8;
+            }
+        }
+        // Same length and precision ⇒ the resident gauge is unchanged; the
+        // stale checksum is the point.
         e.data = Arc::new(data);
         true
     }
@@ -458,8 +579,8 @@ mod tests {
         }
     }
 
-    fn slab(cache: &SlabCache, k: SlabKey, val: f32, len: usize) -> Arc<Vec<f32>> {
-        let make = move || Ok(vec![val; len]);
+    fn slab(cache: &SlabCache, k: SlabKey, val: f32, len: usize) -> Arc<Slab> {
+        let make = move || Ok(Slab::F32(vec![val; len]));
         cache.try_get_or_generate(k, make).unwrap()
     }
 
@@ -471,10 +592,10 @@ mod tests {
             let v = cache
                 .try_get_or_generate(key(0, 0), || {
                     calls += 1;
-                    Ok(vec![1.0, 2.0])
+                    Ok(Slab::F32(vec![1.0, 2.0]))
                 })
                 .unwrap();
-            assert_eq!(v.as_slice(), &[1.0, 2.0]);
+            assert_eq!(v.f32_data(), &[1.0, 2.0]);
         }
         assert_eq!(calls, 1);
         assert_eq!(cache.lookups(), 3);
@@ -570,7 +691,7 @@ mod tests {
         assert_eq!(cache.len(), 0);
         assert_eq!(cache.misses(), 1, "the failed generation was attempted");
         // The key is not poisoned: a later generation succeeds.
-        assert_eq!(slab(&cache, key(0, 0), 7.0, 2).as_slice(), &[7.0, 7.0]);
+        assert_eq!(slab(&cache, key(0, 0), 7.0, 2).f32_data(), &[7.0, 7.0]);
     }
 
     #[test]
@@ -590,9 +711,9 @@ mod tests {
                     state ^= state << 17;
                     let ct = (state % 16) as u32;
                     let v = c
-                        .try_get_or_generate(key(0, ct), || Ok(vec![ct as f32; 100]))
+                        .try_get_or_generate(key(0, ct), || Ok(Slab::F32(vec![ct as f32; 100])))
                         .unwrap();
-                    assert_eq!(v[0], ct as f32, "wrong slab adopted for key {ct}");
+                    assert_eq!(v.f32_data()[0], ct as f32, "wrong slab adopted for key {ct}");
                 }
             }));
         }
@@ -621,11 +742,11 @@ mod tests {
         let v = cache
             .try_get_or_generate(key(0, 0), || {
                 calls += 1;
-                Ok(vec![3.0; 8])
+                Ok(Slab::F32(vec![3.0; 8]))
             })
             .unwrap();
         assert_eq!(calls, 1, "corrupted slab must regenerate, not hit");
-        assert_eq!(v.as_slice(), &[3.0; 8], "regenerated numerics are clean");
+        assert_eq!(v.f32_data(), &[3.0; 8], "regenerated numerics are clean");
         assert_eq!(cache.corruptions(), 1);
         assert_eq!(cache.evictions(), 1, "the corrupted slab was evicted");
         assert_eq!(cache.hits(), 0);
@@ -664,7 +785,7 @@ mod tests {
         };
         slab(&cache, old.clone(), 1.0, 4); // straggler reinsertion
         let v = slab(&cache, new, 2.0, 4); // fresh registration's lookup
-        assert_eq!(v.as_slice(), &[2.0; 4], "new generation must regenerate");
+        assert_eq!(v.f32_data(), &[2.0; 4], "new generation must regenerate");
         assert_eq!(cache.misses(), 2);
         assert_eq!(cache.hits(), 0);
         // Evicting the old generation leaves the new one resident.
@@ -679,7 +800,7 @@ mod tests {
         for _ in 0..4 {
             let c = Arc::clone(&cache);
             handles.push(std::thread::spawn(move || {
-                let v = c.try_get_or_generate(key(7, 0), || Ok(vec![7.0]));
+                let v = c.try_get_or_generate(key(7, 0), || Ok(Slab::F32(vec![7.0])));
                 v.unwrap().len()
             }));
         }
@@ -689,5 +810,79 @@ mod tests {
         assert_eq!(cache.len(), 1);
         assert_eq!(cache.hits() + cache.misses(), 4);
         assert!(cache.misses() >= 1);
+    }
+
+    fn i8_slab(cache: &SlabCache, k: SlabKey, code: i8, len: usize) -> Arc<Slab> {
+        let make = move || {
+            Ok(Slab::I8 {
+                codes: vec![code; len],
+                scale: 0.25,
+            })
+        };
+        cache.try_get_or_generate(k, make).unwrap()
+    }
+
+    #[test]
+    fn i8_slab_charges_quarter_bytes_so_four_times_fit() {
+        // Budget of exactly one 100-float f32 slab. At i8 the same element
+        // count costs ¼, so four i8 slabs are resident where one f32 was.
+        let cache = SlabCache::with_budget(400);
+        for ct in 0..4 {
+            let k = SlabKey {
+                layer: layer_key(0).with_precision(Precision::I8),
+                col_tile: ct,
+            };
+            let v = i8_slab(&cache, k, ct as i8, 100);
+            assert_eq!(v.bytes(), 100);
+            assert_eq!(v.precision(), Precision::I8);
+        }
+        assert_eq!(cache.len(), 4, "4 i8 slabs fit one f32 slab's budget");
+        assert_eq!(cache.resident_bytes(), 400);
+        assert_eq!(cache.evictions(), 0);
+        // The f32 twin of one more slab evicts everything but itself.
+        slab(&cache, key(0, 9), 1.0, 100);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.resident_bytes(), 400);
+    }
+
+    #[test]
+    fn mixed_precision_keys_never_alias() {
+        // The SAME (model, layer, σ, ρ, generation, col_tile) at two
+        // precisions must be two distinct entries, each serving its own
+        // payload kind.
+        let cache = SlabCache::new();
+        let f32_key = key(0, 0);
+        let i8_key = SlabKey {
+            layer: layer_key(0).with_precision(Precision::I8),
+            col_tile: 0,
+        };
+        let vf = slab(&cache, f32_key.clone(), 5.0, 8);
+        let vq = i8_slab(&cache, i8_key.clone(), 20, 8);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(vf.as_f32().unwrap(), &[5.0; 8]);
+        let (codes, scale) = vq.as_i8().unwrap();
+        assert_eq!(codes, &[20i8; 8]);
+        assert_eq!(scale, 0.25);
+        // Re-fetching each precision hits its own entry.
+        slab(&cache, f32_key, 5.0, 8);
+        i8_slab(&cache, i8_key, 20, 8);
+        assert_eq!(cache.hits(), 2);
+        assert_eq!(cache.resident_bytes(), 8 * 4 + 8);
+    }
+
+    #[test]
+    fn i8_bit_flip_is_detected_and_regenerated() {
+        let cache = SlabCache::new();
+        let k = SlabKey {
+            layer: layer_key(3).with_precision(Precision::I8),
+            col_tile: 0,
+        };
+        i8_slab(&cache, k.clone(), 7, 16);
+        assert!(cache.flip_bit(999));
+        let v = i8_slab(&cache, k, 7, 16);
+        assert_eq!(cache.corruptions(), 1, "i8 checksum must catch the flip");
+        assert_eq!(v.as_i8().unwrap().0, &[7i8; 16], "regenerated clean");
+        assert_eq!(cache.misses(), 2);
     }
 }

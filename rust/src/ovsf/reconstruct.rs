@@ -246,6 +246,75 @@ impl OvsfLayer {
         Ok(())
     }
 
+    /// Per-layer symmetric int8 weight scale from the selected α sets:
+    /// every reconstructed value is `Σ_j α_j·sign_j` with signs ±1, so the
+    /// largest filter's `Σ_j |α_j|` bounds `|w|`; dividing by 127 gives a
+    /// scale that never clips. Mirrors
+    /// [`HwOvsfWeights::i8_scale`](crate::sim::hw_weights::HwOvsfWeights::i8_scale)
+    /// for the layer-form representation.
+    pub fn i8_scale(&self) -> f32 {
+        let mut max_sum = 0.0f32;
+        for sel in &self.filters {
+            let sum: f32 = sel.alphas.iter().map(|a| a.abs()).sum();
+            max_sum = max_sum.max(sum);
+        }
+        crate::util::fixed::I8Scheme::from_max_abs(max_sum).scale
+    }
+
+    /// Int8 twin of
+    /// [`reconstruct_filters_into`](Self::reconstruct_filters_into): the
+    /// FWHT reconstruction stays f32-exact and each dense weight is rounded
+    /// exactly once as it is emitted into the WL-bit slab, using the
+    /// caller's per-layer `scale` (normally [`i8_scale`](Self::i8_scale)).
+    pub fn reconstruct_filters_into_i8(
+        &self,
+        o0: usize,
+        o1: usize,
+        scale: f32,
+        scratch: &mut Vec<f64>,
+        frame: &mut Vec<f32>,
+        out: &mut [i8],
+    ) -> Result<()> {
+        if o0 >= o1 || o1 > self.n_out {
+            return Err(Error::ShapeMismatch(format!(
+                "filter slab [{o0}, {o1}) out of range for n_out = {}",
+                self.n_out
+            )));
+        }
+        if !(scale > 0.0 && scale.is_finite()) {
+            return Err(Error::ShapeMismatch(format!(
+                "i8 slab scale must be positive and finite, got {scale}"
+            )));
+        }
+        let l = self.code_len();
+        let basis = OvsfBasis::new(l)?;
+        let filter_stride = self.n_in * self.k * self.k;
+        if out.len() != (o1 - o0) * filter_stride {
+            return Err(Error::ShapeMismatch(format!(
+                "slab output length {} != {}·{filter_stride}",
+                out.len(),
+                o1 - o0
+            )));
+        }
+        let scheme = crate::util::fixed::I8Scheme { scale };
+        let chunk = self.k_ovsf * self.k_ovsf;
+        let sels = self.filters[o0..o1].iter();
+        for (sel, dst) in sels.zip(out.chunks_mut(filter_stride)) {
+            reconstruct_into(&basis, sel, scratch, frame); // n_in × k' × k'
+            for c in 0..self.n_in {
+                let plane = &frame[c * chunk..(c + 1) * chunk];
+                let extracted = extract_kxk(plane, self.k_ovsf, self.k, self.mode);
+                for (d, w) in dst[c * self.k * self.k..(c + 1) * self.k * self.k]
+                    .iter_mut()
+                    .zip(&extracted)
+                {
+                    *d = scheme.quantise(*w);
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Reconstruct the dense `n_out·n_in·k·k` weights (the software oracle
     /// of what CNN-WGen produces in hardware). Sharded over the persistent
     /// process [`ThreadPool`], each task streaming its contiguous filter
@@ -453,6 +522,40 @@ mod tests {
                 .is_err());
             assert!(layer
                 .reconstruct_filters_into(0, 2, &mut scratch, &mut frame, &mut bad)
+                .is_err());
+        });
+    }
+
+    #[test]
+    fn i8_filter_slabs_match_quantised_reconstruction() {
+        forall("ovsf-filter-slabs-i8", 8, |rng| {
+            let (n_out, n_in, k) = (5usize, 4usize, 3usize);
+            let layer = OvsfLayer::random(
+                rng,
+                n_out,
+                n_in,
+                k,
+                *rng.choose(&[0.5, 1.0]),
+                Filter3x3Mode::Crop,
+            )
+            .unwrap();
+            let full = layer.reconstruct().unwrap();
+            let scale = layer.i8_scale();
+            assert!(scale > 0.0);
+            let scheme = crate::util::fixed::I8Scheme { scale };
+            let stride = n_in * k * k;
+            let (mut scratch, mut frame) = (Vec::new(), Vec::new());
+            let mut slab = vec![0i8; n_out * stride];
+            layer
+                .reconstruct_filters_into_i8(0, n_out, scale, &mut scratch, &mut frame, &mut slab)
+                .unwrap();
+            for (q, f) in slab.iter().zip(&full) {
+                assert_eq!(*q, scheme.quantise(*f));
+                assert!((scheme.dequantise(*q) - f).abs() <= scheme.max_error() + 1e-6);
+            }
+            let mut bad = vec![0i8; stride];
+            assert!(layer
+                .reconstruct_filters_into_i8(0, 1, 0.0, &mut scratch, &mut frame, &mut bad)
                 .is_err());
         });
     }

@@ -94,6 +94,26 @@ impl PerfModel {
         self
     }
 
+    /// Override the activation/weight word length in bytes (the paper's
+    /// default is 16-bit fixed ⇒ 2).
+    pub fn with_wl_bytes(mut self, wl_bytes: f64) -> Self {
+        self.wl_bytes = wl_bytes;
+        self
+    }
+
+    /// Model with the word length set by a software-datapath
+    /// [`Precision`](crate::util::fixed::Precision): `F32` ⇒ 4 bytes,
+    /// `I8` ⇒ 1 byte. Every memory-bound stage (input strips, baseline
+    /// weight streaming, output drains) scales with this width — the
+    /// analytical counterpart of the i8 slab cache's 4× density.
+    pub fn for_precision(
+        platform: Platform,
+        bw_mult: u32,
+        precision: crate::util::fixed::Precision,
+    ) -> Self {
+        Self::new(platform, bw_mult).with_wl_bytes(precision.word_bytes() as f64)
+    }
+
     /// Input-stream bytes per cycle.
     fn bpc_in(&self) -> f64 {
         self.bw.bw_in() / self.platform.clock_hz
@@ -470,6 +490,28 @@ mod tests {
             );
             prev = speedup;
         }
+    }
+
+    #[test]
+    fn narrower_words_shrink_memory_stages_only() {
+        use crate::util::fixed::Precision;
+        let sigma = DesignPoint::new(64, 64, 16, 48);
+        let layer = Layer::conv("t", 28, 28, 128, 128, 3, 1, 1, true);
+        let f32m = PerfModel::for_precision(Platform::z7045(), 1, Precision::F32);
+        let i8m = PerfModel::for_precision(Platform::z7045(), 1, Precision::I8);
+        assert_eq!(f32m.wl_bytes, 4.0);
+        assert_eq!(i8m.wl_bytes, 1.0);
+        let tf = f32m.t_mem_in(&sigma, &layer, 0.0);
+        let ti = i8m.t_mem_in(&sigma, &layer, 0.0);
+        assert!((tf / ti - 4.0).abs() < 1e-9, "mem-in must scale 4×: {tf} vs {ti}");
+        // Compute cycles are word-length independent (one MAC/PE/cycle).
+        assert_eq!(f32m.t_eng(&sigma, &layer), i8m.t_eng(&sigma, &layer));
+        // Memory-bound at 1× bandwidth: the i8 network point is faster.
+        let net = resnet::resnet18();
+        let profile = RatioProfile::ovsf50(&net);
+        let pf = f32m.network_perf(&sigma, &net, &profile);
+        let pi = i8m.network_perf(&sigma, &net, &profile);
+        assert!(pi.inf_per_s > pf.inf_per_s);
     }
 
     #[test]

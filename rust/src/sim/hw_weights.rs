@@ -213,6 +213,73 @@ impl HwOvsfWeights {
         }
         Ok(())
     }
+
+    /// Per-layer symmetric int8 weight scale, derived from the α sets: a
+    /// reconstructed weight is `Σ_j α_j·sign_j` with signs ±1, so
+    /// `|w| ≤ max_{(o,c)} Σ_j |α_{o,c,j}|`. Dividing that bound by 127
+    /// yields a scale under which quantisation **never clips** — no dense
+    /// reconstruction needed to derive it, which is what lets the
+    /// `Compiler` pick the scale at compile time from the fitted α's
+    /// alone. Degenerate (all-zero) layers fall back to scale 1.0.
+    pub fn i8_scale(&self) -> f32 {
+        let mut max_sum = 0.0f32;
+        for chunk in self.alphas.chunks(self.n_basis.max(1)) {
+            let sum: f32 = chunk.iter().map(|a| a.abs()).sum();
+            max_sum = max_sum.max(sum);
+        }
+        crate::util::fixed::I8Scheme::from_max_abs(max_sum).scale
+    }
+
+    /// Int8 twin of [`slab_into`](Self::slab_into): reconstruct columns
+    /// `[c0, c1)` through the same FWHT path (the transform stays f32-exact)
+    /// and quantise **once at slab emission** with the caller's per-layer
+    /// `scale` — the software analogue of the paper's WL-bit weights buffer
+    /// (§5.2), where rounding happens when the generated word is written,
+    /// not inside the generator. Layout matches `slab_into`.
+    pub fn slab_into_i8(
+        &self,
+        c0: usize,
+        c1: usize,
+        scale: f32,
+        scratch: &mut Vec<f64>,
+        out: &mut Vec<i8>,
+    ) -> Result<()> {
+        if c0 >= c1 || c1 > self.n_out {
+            return Err(Error::ShapeMismatch(format!(
+                "slab columns [{c0}, {c1}) out of range for C = {}",
+                self.n_out
+            )));
+        }
+        if !(scale > 0.0 && scale.is_finite()) {
+            return Err(Error::ShapeMismatch(format!(
+                "i8 slab scale must be positive and finite, got {scale}"
+            )));
+        }
+        let chunk = self.chunk_len();
+        let basis = OvsfBasis::new(chunk)?;
+        let ek = self.engine_chunk();
+        let cols = c1 - c0;
+        let scheme = crate::util::fixed::I8Scheme { scale };
+        out.clear();
+        out.resize(self.p_dim() * cols, 0);
+        let mut sel = SelectedBasis {
+            indices: (0..self.n_basis).collect(),
+            alphas: vec![0.0f32; self.n_basis],
+        };
+        let mut frame: Vec<f32> = Vec::with_capacity(chunk);
+        for (oi, o) in (c0..c1).enumerate() {
+            for c in 0..self.n_in {
+                let base = (o * self.n_in + c) * self.n_basis;
+                sel.alphas.copy_from_slice(&self.alphas[base..base + self.n_basis]);
+                reconstruct_into(&basis, &sel, scratch, &mut frame);
+                for kpos in 0..ek {
+                    out[(c * ek + kpos) * cols + oi] =
+                        scheme.quantise(frame[self.frame_pos(kpos)]);
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -294,6 +361,50 @@ mod tests {
         assert!(hw.slab_into(0, 5, &mut s, &mut o).is_err());
         assert!(hw.slab_into(2, 2, &mut s, &mut o).is_err());
         assert!(hw.slab_into(3, 4, &mut s, &mut o).is_ok());
+    }
+
+    #[test]
+    fn i8_slab_matches_quantised_f32_slab_and_never_clips() {
+        forall("hw-weights-i8-slabs", 16, |rng| {
+            let n_out = rng.gen_range(2, 10) as usize;
+            let n_in = 1usize << rng.gen_range(0, 3);
+            let k = *rng.choose(&[2usize, 3, 4]);
+            let rho = *rng.choose(&[0.25, 0.5, 1.0]);
+            let hw = HwOvsfWeights::random(rng, n_out, n_in, k, rho).unwrap();
+            let scale = hw.i8_scale();
+            assert!(scale > 0.0);
+            let scheme = crate::util::fixed::I8Scheme { scale };
+            let t_c = rng.gen_range(1, n_out as u64 + 2) as usize;
+            let mut scratch = Vec::new();
+            let (mut f_slab, mut q_slab) = (Vec::new(), Vec::new());
+            for c0 in (0..n_out).step_by(t_c) {
+                let c1 = (c0 + t_c).min(n_out);
+                hw.slab_into(c0, c1, &mut scratch, &mut f_slab).unwrap();
+                hw.slab_into_i8(c0, c1, scale, &mut scratch, &mut q_slab)
+                    .unwrap();
+                assert_eq!(q_slab.len(), f_slab.len());
+                for (q, f) in q_slab.iter().zip(&f_slab) {
+                    // Element-wise: the i8 code is exactly the scheme's
+                    // quantisation of the f32 word (rounding at emission,
+                    // nowhere else), and the α-derived scale never clips.
+                    assert_eq!(*q, scheme.quantise(*f));
+                    assert!(
+                        (scheme.dequantise(*q) - f).abs() <= scheme.max_error() + 1e-6,
+                        "q={q} f={f} scale={scale}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn i8_slab_rejects_bad_scale() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let hw = HwOvsfWeights::random(&mut rng, 4, 2, 3, 0.5).unwrap();
+        let (mut s, mut o) = (Vec::new(), Vec::new());
+        assert!(hw.slab_into_i8(0, 2, 0.0, &mut s, &mut o).is_err());
+        assert!(hw.slab_into_i8(0, 2, f32::NAN, &mut s, &mut o).is_err());
+        assert!(hw.slab_into_i8(0, 2, hw.i8_scale(), &mut s, &mut o).is_ok());
     }
 
     #[test]

@@ -140,6 +140,89 @@ impl<'a> PeArraySim<'a> {
         self.tile_cycles(rows as u64, p_tiles, cols as u64)
     }
 
+    /// Int8 strip entry point: the i8×i8→i32 twin of
+    /// [`execute_strip`](Self::execute_strip), driven when the generated
+    /// slab is [`Precision::I8`](crate::util::fixed::Precision).
+    ///
+    /// The f32 activation strip is quantised symmetrically **per strip**
+    /// (scale = max|act|/127 — a pure function of the strip's contents, so
+    /// serial, pipelined and sharded schedules all see identical codes),
+    /// products accumulate exactly in i32 (the DSP-accumulator behaviour
+    /// `sim/quant.rs` models; safe from overflow for `p` up to ~130k at
+    /// ±127 codes), and each output element is dequantised **once** at
+    /// strip end with `acc · (a_scale · w_scale)`. Because slabs span the
+    /// full depth `p`, every output element completes its entire reduction
+    /// inside one strip×slab pass — there is no cross-slab i32 state, so
+    /// the f32 output buffer is the only accumulator that crosses passes.
+    ///
+    /// Cycle accounting is precision-independent (the modelled fixed-point
+    /// hardware retires one MAC per PE per cycle at any WL), so the same
+    /// schedule walk prices both paths; the i8 win in *this* simulator is
+    /// wall-clock (denser registers, ¼ slab bytes) and cache hit rate.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_strip_i8(
+        &self,
+        act: &[f32],
+        slab: &[i8],
+        w_scale: f32,
+        rows: usize,
+        p: usize,
+        cols: usize,
+        out: &mut [f32],
+        out_stride: usize,
+        col_offset: usize,
+    ) -> u64 {
+        assert_eq!(act.len(), rows * p, "activation strip shape");
+        assert_eq!(slab.len(), p * cols, "weight slab shape");
+        assert_eq!(out.len(), rows * out_stride, "output strip shape");
+        assert!(col_offset + cols <= out_stride, "slab overruns output");
+        let max_abs = act.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let a_scheme = crate::util::fixed::I8Scheme::from_max_abs(max_abs);
+        let act_q: Vec<i8> = act.iter().map(|&v| a_scheme.quantise(v)).collect();
+        let deq = a_scheme.scale * w_scale;
+        gemm_strip_i8(&act_q, slab, rows, p, cols, out, out_stride, col_offset, deq);
+        let p_tiles = (p as u64).div_ceil(self.sigma.t_p);
+        self.tile_cycles(rows as u64, p_tiles, cols as u64)
+    }
+
+    /// Scalar i8 oracle for the register-blocked int8 kernel: one i32
+    /// accumulator per output element over the whole `p` reduction, one
+    /// dequantise at the end — integer accumulation is exact, so the
+    /// blocked kernel must agree **bit-for-bit**.
+    #[cfg(test)]
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn execute_strip_i8_reference(
+        &self,
+        act: &[f32],
+        slab: &[i8],
+        w_scale: f32,
+        rows: usize,
+        p: usize,
+        cols: usize,
+        out: &mut [f32],
+        out_stride: usize,
+        col_offset: usize,
+    ) -> u64 {
+        assert_eq!(act.len(), rows * p, "activation strip shape");
+        assert_eq!(slab.len(), p * cols, "weight slab shape");
+        let max_abs = act.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let a_scheme = crate::util::fixed::I8Scheme::from_max_abs(max_abs);
+        let act_q: Vec<i8> = act.iter().map(|&v| a_scheme.quantise(v)).collect();
+        let deq = a_scheme.scale * w_scale;
+        for ri in 0..rows {
+            let arow = &act_q[ri * p..(ri + 1) * p];
+            for ci in 0..cols {
+                let mut acc = 0i32;
+                for (pi, &a) in arow.iter().enumerate() {
+                    acc += a as i32 * slab[pi * cols + ci] as i32;
+                }
+                out[ri * out_stride + col_offset + ci] += acc as f32 * deq;
+            }
+        }
+        let p_tiles = (p as u64).div_ceil(self.sigma.t_p);
+        self.tile_cycles(rows as u64, p_tiles, cols as u64)
+    }
+
     /// Full numeric execution of one layer's GEMM
     /// (`act`: `R×P` row-major, `weights`: `P×C` row-major) with exact tile
     /// walking — a driver looping [`execute_strip`](Self::execute_strip)
@@ -308,6 +391,133 @@ fn block_mrxnr(
     for (i, row) in acc.iter().enumerate() {
         let ob = (r0 + i) * out_stride + col_offset + c0;
         out[ob..ob + NR].copy_from_slice(row);
+    }
+}
+
+/// Int8 microkernel column blocking: i8 codes pack 4× denser than f32, so
+/// the register tile widens to `MR×16` i32 accumulators — the same
+/// register-file budget as the 4×8 f32 tile at twice the output width.
+const NR_I8: usize = 16;
+
+/// Register-blocked int8 strip GEMM: i8×i8 products accumulate exactly in
+/// `MR×NR_I8` i32 register tiles across the whole `p` reduction, then each
+/// element applies one `acc · deq` f32 fused step into `out`. Integer
+/// accumulation is associative-exact, so any blocking of the same products
+/// is bit-identical — the generic edge kernel trivially agrees with the
+/// register block.
+#[allow(clippy::too_many_arguments)]
+fn gemm_strip_i8(
+    act: &[i8],
+    slab: &[i8],
+    rows: usize,
+    p: usize,
+    cols: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    col_offset: usize,
+    deq: f32,
+) {
+    let mut r0 = 0;
+    while r0 < rows {
+        let mr = MR.min(rows - r0);
+        if mr == MR {
+            let mut c0 = 0;
+            while c0 + NR_I8 <= cols {
+                block_mrxnr_i8(act, slab, r0, p, cols, c0, out, out_stride, col_offset, deq);
+                c0 += NR_I8;
+            }
+            if c0 < cols {
+                block_generic_i8(
+                    act, slab, r0, MR, p, cols, c0, out, out_stride, col_offset, deq,
+                );
+            }
+        } else {
+            block_generic_i8(
+                act, slab, r0, mr, p, cols, 0, out, out_stride, col_offset, deq,
+            );
+        }
+        r0 += mr;
+    }
+}
+
+/// One full `MR×NR_I8` int8 register block at rows `[r0, r0+MR)`, columns
+/// `[c0, c0+NR_I8)` of the slab.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn block_mrxnr_i8(
+    act: &[i8],
+    slab: &[i8],
+    r0: usize,
+    p: usize,
+    cols: usize,
+    c0: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    col_offset: usize,
+    deq: f32,
+) {
+    let mut acc = [[0i32; NR_I8]; MR];
+    let a0 = &act[r0 * p..(r0 + 1) * p];
+    let a1 = &act[(r0 + 1) * p..(r0 + 2) * p];
+    let a2 = &act[(r0 + 2) * p..(r0 + 3) * p];
+    let a3 = &act[(r0 + 3) * p..(r0 + 4) * p];
+    for pi in 0..p {
+        let base = pi * cols + c0;
+        // Invariant: the slice is exactly NR_I8 long by construction of
+        // `base`, so the array conversion cannot fail.
+        #[allow(clippy::expect_used)]
+        let w: &[i8; NR_I8] = slab[base..base + NR_I8]
+            .try_into()
+            .expect("slab block is NR_I8 wide");
+        let (x0, x1, x2, x3) = (
+            a0[pi] as i32,
+            a1[pi] as i32,
+            a2[pi] as i32,
+            a3[pi] as i32,
+        );
+        for j in 0..NR_I8 {
+            let wv = w[j] as i32;
+            acc[0][j] += x0 * wv;
+            acc[1][j] += x1 * wv;
+            acc[2][j] += x2 * wv;
+            acc[3][j] += x3 * wv;
+        }
+    }
+    for (i, row) in acc.iter().enumerate() {
+        let ob = (r0 + i) * out_stride + col_offset + c0;
+        for (o, &a) in out[ob..ob + NR_I8].iter_mut().zip(row) {
+            *o += a as f32 * deq;
+        }
+    }
+}
+
+/// Edge kernel for partial int8 row/column blocks — same exact-i32
+/// accumulation + single dequantise per element as the register block.
+#[allow(clippy::too_many_arguments)]
+fn block_generic_i8(
+    act: &[i8],
+    slab: &[i8],
+    r0: usize,
+    mr: usize,
+    p: usize,
+    cols: usize,
+    c0: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    col_offset: usize,
+    deq: f32,
+) {
+    let width = cols - c0;
+    for i in 0..mr {
+        let arow = &act[(r0 + i) * p..(r0 + i + 1) * p];
+        let ob = (r0 + i) * out_stride + col_offset + c0;
+        for ci in 0..width {
+            let mut acc = 0i32;
+            for (pi, &a) in arow.iter().enumerate() {
+                acc += a as i32 * slab[pi * cols + c0 + ci] as i32;
+            }
+            out[ob + ci] += acc as f32 * deq;
+        }
     }
 }
 
@@ -522,6 +732,69 @@ mod tests {
             );
             assert_eq!(a, b, "microkernel must be bit-identical to the oracle");
             assert_eq!(cyc_a, cyc_b, "cycle accounting must not change");
+        });
+    }
+
+    #[test]
+    fn i8_microkernel_is_bit_identical_to_the_scalar_i8_oracle() {
+        // Integer accumulation is exact, so the register-blocked i8 kernel
+        // must agree with the one-accumulator-per-element oracle
+        // bit-for-bit across row/column tails and offset output windows.
+        forall("pe-microkernel-i8-bitexact", 24, |rng| {
+            let rows = rng.gen_range(1, 20) as usize; // covers MR tails
+            let p = rng.gen_range(1, 40) as usize;
+            let cols = rng.gen_range(1, 40) as usize; // covers NR_I8 tails
+            let act = rng.normal_vec(rows * p);
+            let slab: Vec<i8> = (0..p * cols)
+                .map(|_| (rng.gen_range(0, 255) as i32 - 127) as i8)
+                .collect();
+            let w_scale = 0.01 + rng.gen_range(1, 100) as f32 / 1000.0;
+            let pad = rng.gen_range(0, 4) as usize;
+            let out_stride = cols + pad;
+            let col_offset = rng.gen_range(0, pad as u64 + 1) as usize;
+            let sigma = DesignPoint::new(8, 32, rng.gen_range(2, 8), 8);
+            let sim = PeArraySim::new(&sigma, true);
+            let base = rng.normal_vec(rows * out_stride);
+            let mut a = base.clone();
+            let mut b = base;
+            let cyc_a = sim.execute_strip_i8(
+                &act, &slab, w_scale, rows, p, cols, &mut a, out_stride, col_offset,
+            );
+            let cyc_b = sim.execute_strip_i8_reference(
+                &act, &slab, w_scale, rows, p, cols, &mut b, out_stride, col_offset,
+            );
+            assert_eq!(a, b, "i8 microkernel must be bit-identical to the oracle");
+            assert_eq!(cyc_a, cyc_b, "cycle accounting must not change");
+        });
+    }
+
+    #[test]
+    fn i8_strip_tracks_f32_strip_within_quantisation_bound() {
+        // Quantise a random f32 slab with its own max-abs scale, run both
+        // paths on the same strip, and pin the divergence to the analytic
+        // per-element bound p·(max_w·eps_a + max_a·eps_w + eps_a·eps_w).
+        forall("pe-strip-i8-vs-f32", 16, |rng| {
+            let rows = rng.gen_range(1, 10) as usize;
+            let p = rng.gen_range(2, 30) as usize;
+            let cols = rng.gen_range(1, 20) as usize;
+            let act = rng.normal_vec(rows * p);
+            let dense = rng.normal_vec(p * cols);
+            let max_w = dense.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let max_a = act.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let w_scheme = crate::util::fixed::I8Scheme::from_max_abs(max_w);
+            let slab_q: Vec<i8> = dense.iter().map(|&w| w_scheme.quantise(w)).collect();
+            let sigma = DesignPoint::new(8, 16, 4, 8);
+            let sim = PeArraySim::new(&sigma, true);
+            let mut out_f = vec![0.0f32; rows * cols];
+            let mut out_q = vec![0.0f32; rows * cols];
+            sim.execute_strip(&act, &dense, rows, p, cols, &mut out_f, cols, 0);
+            sim.execute_strip_i8(
+                &act, &slab_q, w_scheme.scale, rows, p, cols, &mut out_q, cols, 0,
+            );
+            let bound = crate::sim::quant::i8_error_bound(p, max_w, max_a, w_scheme.scale);
+            for (q, f) in out_q.iter().zip(&out_f) {
+                assert!((q - f).abs() <= bound, "{q} vs {f}, bound {bound}");
+            }
         });
     }
 

@@ -79,6 +79,21 @@ pub fn execute_quantised(
     }
 }
 
+/// Analytic per-element error bound for the **int8** datapath, the i8
+/// counterpart of the budget inside [`execute_quantised`]: each of the `p`
+/// accumulation terms contributes `|w|·εa + |a|·εw + εa·εw`, where the i8
+/// scheme's rounding errors are half a step of each scale. Weights are
+/// rounded exactly once at slab emission (`eps_w = w_scale/2` — no α-path
+/// rounding, the FWHT stays f32) and activations once per strip
+/// (`eps_a ≤ a_scale/2` with `a_scale ≤ max_a/127`); i32 accumulation adds
+/// nothing. `max_w` may be the α-derived upper bound `127·w_scale` when
+/// the true dense maximum is not at hand.
+pub fn i8_error_bound(p: usize, max_w: f32, max_a: f32, w_scale: f32) -> f32 {
+    let eps_w = w_scale / 2.0;
+    let eps_a = crate::util::fixed::I8Scheme::from_max_abs(max_a).max_error();
+    p as f32 * (max_w * eps_a + max_a * eps_w + eps_a * eps_w) + 1e-4
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,9 +1,12 @@
-//! 16-bit fixed-point helpers.
+//! Fixed-point and integer quantisation helpers.
 //!
-//! The paper evaluates all designs at 16-bit fixed-point precision (§7.1).
+//! The paper evaluates all designs at 16-bit fixed-point precision (§7.1)
+//! and notes the weights-buffer word length WL is a free design parameter.
 //! The hardware datapath models quantise α coefficients and activations to
 //! Q(int_bits).(frac_bits); these helpers provide the conversion and the
-//! quantisation-error bound used by the numerics tests.
+//! quantisation-error bound used by the numerics tests. [`Precision`] and
+//! [`I8Scheme`] carry the int8 datapath: a symmetric per-layer scheme whose
+//! scale is derived at compile time from the artifact's fitted α sets.
 
 /// A Q-format specification: 1 sign bit + `int_bits` + `frac_bits` = width.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -61,6 +64,93 @@ impl QFormat {
     }
 }
 
+/// Numeric precision of a compiled model's weight datapath.
+///
+/// `F32` is the reference software datapath; `I8` stores weight slabs as
+/// symmetric per-layer int8 codes (¼ the bytes, so 4× more slabs fit one
+/// cache budget) and multiplies them on the i8×i8→i32 microkernel. The
+/// paper's WL-bit weights buffer (§5.2) makes word length a design knob;
+/// this enum is the software realisation of that knob.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    /// 32-bit float weights (reference numerics).
+    #[default]
+    F32,
+    /// Symmetric per-layer int8 weights, i32 accumulation.
+    I8,
+}
+
+impl Precision {
+    /// Bytes per stored weight word.
+    pub fn word_bytes(&self) -> usize {
+        match self {
+            Precision::F32 => std::mem::size_of::<f32>(),
+            Precision::I8 => std::mem::size_of::<i8>(),
+        }
+    }
+
+    /// Short lowercase label (`"f32"` / `"i8"`) for keys, logs and benches.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::I8 => "i8",
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Largest magnitude an [`I8Scheme`] code can carry. Codes live in
+/// `[-127, 127]`; −128 is never emitted so the scheme stays symmetric.
+pub const I8_QMAX: f32 = 127.0;
+
+/// A symmetric (zero-point-free) int8 quantiser: `real = code · scale`.
+///
+/// Symmetry keeps the i8×i8 product a plain integer multiply (no zero-point
+/// cross terms), which is what lets the strip microkernel accumulate in i32
+/// and apply one `scale_a·scale_w` dequantise per output element at strip
+/// end.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct I8Scheme {
+    /// Real value of one code step; > 0.
+    pub scale: f32,
+}
+
+impl I8Scheme {
+    /// Scheme covering `[-max_abs, max_abs]` exactly (codes ±127). A zero
+    /// or non-finite `max_abs` yields the identity-ish scale 1.0 so an
+    /// all-zero tensor quantises to all-zero codes without dividing by 0.
+    pub fn from_max_abs(max_abs: f32) -> Self {
+        let scale = if max_abs > 0.0 && max_abs.is_finite() {
+            max_abs / I8_QMAX
+        } else {
+            1.0
+        };
+        Self { scale }
+    }
+
+    /// Round-to-nearest, saturating quantise to a code.
+    pub fn quantise(&self, x: f32) -> i8 {
+        (x / self.scale).round().clamp(-I8_QMAX, I8_QMAX) as i8
+    }
+
+    /// Real value of a code.
+    pub fn dequantise(&self, code: i8) -> f32 {
+        code as f32 * self.scale
+    }
+
+    /// Worst-case absolute error for inputs within the covered range
+    /// (half a step; saturation adds nothing when the scale came from the
+    /// true max-abs).
+    pub fn max_error(&self) -> f32 {
+        self.scale / 2.0
+    }
+}
+
 /// Quantise a whole slice in place; returns the max absolute error introduced.
 pub fn quantise_slice(fmt: QFormat, xs: &mut [f32]) -> f32 {
     let mut max_err = 0.0f32;
@@ -110,6 +200,39 @@ mod tests {
             let c = f.to_code(x);
             assert!((f.from_code(c) - f.quantise(x)).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn precision_word_bytes() {
+        assert_eq!(Precision::F32.word_bytes(), 4);
+        assert_eq!(Precision::I8.word_bytes(), 1);
+        assert_eq!(Precision::default(), Precision::F32);
+        assert_eq!(Precision::I8.to_string(), "i8");
+    }
+
+    #[test]
+    fn i8_scheme_round_trip_error_within_half_step() {
+        let s = I8Scheme::from_max_abs(3.7);
+        for i in 0..200 {
+            let x = (i as f32) * 0.037 - 3.7;
+            let q = s.dequantise(s.quantise(x));
+            assert!((q - x).abs() <= s.max_error() + 1e-7, "x={x} q={q}");
+        }
+        // Extremes map to ±127 exactly.
+        assert_eq!(s.quantise(3.7), 127);
+        assert_eq!(s.quantise(-3.7), -127);
+        // Out-of-range saturates symmetrically (never −128).
+        assert_eq!(s.quantise(1e9), 127);
+        assert_eq!(s.quantise(-1e9), -127);
+    }
+
+    #[test]
+    fn i8_scheme_degenerate_inputs() {
+        let s = I8Scheme::from_max_abs(0.0);
+        assert_eq!(s.scale, 1.0);
+        assert_eq!(s.quantise(0.0), 0);
+        let s = I8Scheme::from_max_abs(f32::NAN);
+        assert_eq!(s.scale, 1.0);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use unzipfpga::arch::{DesignPoint, Platform};
 use unzipfpga::engine::sim::{synth_dense_slab, synth_hw_weights};
-use unzipfpga::engine::{BackendKind, Engine, SimBackend, SlabCache, SlabKey, WeightsKey};
+use unzipfpga::engine::{BackendKind, Engine, SimBackend, Slab, SlabCache, SlabKey, WeightsKey};
 use unzipfpga::sim::im2col::im2col;
 use unzipfpga::util::check::forall;
 use unzipfpga::util::prng::Xoshiro256;
@@ -403,10 +403,13 @@ fn slab_cache_byte_budget_property() {
                 col_tile: ct,
             };
             let v = cache
-                .try_get_or_generate(key, || Ok(vec![ct as f32; slab_floats]))
+                .try_get_or_generate(key, || Ok(Slab::F32(vec![ct as f32; slab_floats])))
                 .unwrap();
             assert_eq!(v.len(), slab_floats);
-            assert!(v.iter().all(|&x| x == ct as f32), "wrong slab served");
+            assert!(
+                v.f32_data().iter().all(|&x| x == ct as f32),
+                "wrong slab served"
+            );
             assert!(
                 cache.resident_bytes() <= budget,
                 "resident {} over budget {budget}",

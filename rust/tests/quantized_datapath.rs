@@ -1,0 +1,224 @@
+//! End-to-end properties of the int8 weight datapath.
+//!
+//! Three pillars, mirroring the i8 design's claims:
+//!
+//! * **Parity** — layer by layer, the i8 engine's outputs track the f32
+//!   engine's within the analytic quantisation-error bound
+//!   (`sim::quant::i8_error_bound`), across ρ ∈ {0.25, 1.0} and both PE
+//!   schedules; dense (non-OVSF) layers are bit-identical because they
+//!   stay f32 on either precision (they model the DRAM stream, not
+//!   generated weights).
+//! * **Density** — an i8 slab charges ¼ the byte budget of its f32 twin,
+//!   so the same budget holds 4× the resident slabs and a budget that
+//!   thrashes at f32 serves warm at i8.
+//! * **Coexistence** — f32 and i8 artifacts of the *same* network share
+//!   one slab cache without key aliasing, each serving its own numerics.
+
+use std::sync::Arc;
+
+use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::engine::sim::synth_hw_weights;
+use unzipfpga::engine::{
+    BackendKind, Engine, EnginePlan, ExecutionBackend, Precision, SimBackend, SlabCache,
+};
+use unzipfpga::sim::quant::i8_error_bound;
+use unzipfpga::util::prng::Xoshiro256;
+use unzipfpga::workload::{Layer, Network, RatioProfile};
+
+/// Dense stem, two OVSF convs (one strided, and at T_C = 4 the 8-wide
+/// conv1 exercises multiple column tiles), dense classifier.
+fn tiny_net() -> Network {
+    Network {
+        name: "qtiny".into(),
+        layers: vec![
+            Layer::conv("stem", 8, 8, 4, 8, 3, 1, 1, false),
+            Layer::conv("b.conv1", 8, 8, 8, 8, 3, 1, 1, true),
+            Layer::conv("b.conv2", 8, 8, 8, 16, 3, 2, 1, true),
+            Layer::fc("fc", 16, 10),
+        ],
+    }
+}
+
+fn tiny_plan(rho: f64) -> EnginePlan {
+    let net = tiny_net();
+    let profile = RatioProfile::uniform(&net, rho);
+    Engine::builder()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(8, 4, 8, 4))
+        .network(net)
+        .profile(profile)
+        .plan()
+        .unwrap()
+}
+
+fn tiny_builder(rho: f64) -> unzipfpga::engine::EngineBuilder {
+    let net = tiny_net();
+    let profile = RatioProfile::uniform(&net, rho);
+    Engine::builder()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(8, 4, 8, 4))
+        .network(net)
+        .profile(profile)
+        .backend(BackendKind::Simulator)
+}
+
+fn tiny_input(seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    rng.normal_vec(8 * 8 * 4)
+}
+
+#[test]
+fn i8_layers_stay_within_the_analytic_bound_across_rho_and_schedules() {
+    for rho in [0.25, 1.0] {
+        for selective in [true, false] {
+            let plan = tiny_plan(rho);
+            let input = tiny_input(0x51ab);
+            let mut fb = SimBackend::new();
+            fb.selective = selective;
+            fb.plan(&plan).unwrap();
+            let mut qb = SimBackend::new();
+            qb.selective = selective;
+            qb.precision = Precision::I8;
+            qb.plan(&plan).unwrap();
+            // Walk the layers in lockstep, feeding BOTH engines the f32
+            // path's activations so each layer's error is measured in
+            // isolation (no cross-layer error accumulation to untangle).
+            let mut cur = input;
+            for (idx, layer) in plan.network.layers.iter().enumerate() {
+                let of = fb
+                    .execute_layer(idx, &cur)
+                    .unwrap()
+                    .output
+                    .expect("numeric f32 output");
+                let oq = qb
+                    .execute_layer(idx, &cur)
+                    .unwrap()
+                    .output
+                    .expect("numeric i8 output");
+                assert_eq!(of.len(), oq.len());
+                if layer.ovsf {
+                    let hw = synth_hw_weights("qtiny", idx, layer, rho).unwrap();
+                    let w_scale = hw.i8_scale();
+                    let p = layer.gemm().p as usize;
+                    let max_a = cur.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    // |w| ≤ 127·w_scale: the α-derived scale is an upper
+                    // bound on any reconstructed weight.
+                    let bound = i8_error_bound(p, 127.0 * w_scale, max_a, w_scale);
+                    let max_err = of
+                        .iter()
+                        .zip(&oq)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(
+                        max_err <= bound,
+                        "layer {idx} (ρ={rho}, selective={selective}): \
+                         error {max_err} exceeds bound {bound}"
+                    );
+                    assert!(
+                        max_err > 0.0,
+                        "layer {idx}: the quantised kernel must actually differ"
+                    );
+                } else {
+                    // Dense layers stay f32 on the i8 datapath.
+                    assert_eq!(of, oq, "dense layer {idx} must be bit-identical");
+                }
+                cur = of;
+            }
+            fb.finish().unwrap();
+            qb.finish().unwrap();
+        }
+    }
+}
+
+#[test]
+fn i8_slabs_are_four_times_denser_under_the_same_budget() {
+    // Budget of exactly one f32 slab (P·T_C·4 = 72·4·4 B). The tiny net
+    // streams 6 OVSF slabs of 288 elements each: at f32 only one is ever
+    // resident; at i8 (288 B/slab) four fit.
+    let budget = 72 * 4 * 4;
+    let input = tiny_input(0xd3);
+    for (precision, want_resident) in [(Precision::F32, 1), (Precision::I8, 4)] {
+        let cache = Arc::new(SlabCache::with_budget(budget));
+        let mut engine = tiny_builder(0.5)
+            .weights_cache(Arc::clone(&cache))
+            .precision(precision)
+            .build()
+            .unwrap();
+        engine.infer(&input).unwrap();
+        assert_eq!(
+            cache.len(),
+            want_resident,
+            "{precision}: wrong resident slab count under budget {budget}"
+        );
+        assert!(cache.resident_bytes() <= budget);
+        assert_eq!(cache.misses(), 6);
+    }
+}
+
+#[test]
+fn i8_hit_rate_is_strictly_higher_at_a_budget_that_thrashes_f32() {
+    // Two f32 slabs' worth of budget: f32 cycles 6 slabs through 2 seats
+    // (the LRU scan pattern never hits), while i8 fits all 6 slabs
+    // (6·288 = 1728 B ≤ 2304 B) and the second request is all hits.
+    let budget = 2 * 72 * 4 * 4;
+    let input = tiny_input(0xd4);
+    let mut hits = Vec::new();
+    for precision in [Precision::F32, Precision::I8] {
+        let cache = Arc::new(SlabCache::with_budget(budget));
+        let mut engine = tiny_builder(0.5)
+            .weights_cache(Arc::clone(&cache))
+            .precision(precision)
+            .build()
+            .unwrap();
+        let a = engine.infer(&input).unwrap().output;
+        let b = engine.infer(&input).unwrap().output;
+        assert_eq!(a, b, "{precision}: warm and cold requests must agree");
+        hits.push(cache.hits());
+    }
+    assert_eq!(hits[0], 0, "f32 must thrash at this budget");
+    assert_eq!(hits[1], 6, "i8 must serve the whole second request warm");
+}
+
+#[test]
+fn mixed_precision_engines_share_one_cache_without_aliasing() {
+    let input = tiny_input(0xc0);
+    // Solo references, each on a private cache.
+    let solo_f = tiny_builder(0.5)
+        .build()
+        .unwrap()
+        .infer(&input)
+        .unwrap()
+        .output;
+    let solo_q = tiny_builder(0.5)
+        .precision(Precision::I8)
+        .build()
+        .unwrap()
+        .infer(&input)
+        .unwrap()
+        .output;
+    assert_ne!(solo_f, solo_q);
+    // Same network, both precisions, one shared cache.
+    let cache = Arc::new(SlabCache::new());
+    let mut ef = tiny_builder(0.5)
+        .weights_cache(Arc::clone(&cache))
+        .build()
+        .unwrap();
+    let mut eq = tiny_builder(0.5)
+        .weights_cache(Arc::clone(&cache))
+        .precision(Precision::I8)
+        .build()
+        .unwrap();
+    let out_f = ef.infer(&input).unwrap().output;
+    let out_q = eq.infer(&input).unwrap().output;
+    assert_eq!(out_f, solo_f, "sharing must not alias f32 numerics");
+    assert_eq!(out_q, solo_q, "sharing must not alias i8 numerics");
+    assert_eq!(cache.len(), 12, "6 slabs per precision, no aliasing");
+    assert_eq!(cache.misses(), 12);
+    // Warm re-serves hit their own precision's slabs.
+    ef.infer(&input).unwrap();
+    eq.infer(&input).unwrap();
+    assert_eq!(cache.misses(), 12);
+    assert_eq!(cache.hits(), 12);
+}
