@@ -1,0 +1,253 @@
+//! Replicated-serving benchmark: steady state vs mid-stream replica
+//! failover.
+//!
+//! Drives a [`ReplicaSet`] (N independent registry + pool stacks behind
+//! one dispatcher) with the `coordinator::traffic` load generator through
+//! three phases:
+//!
+//! 1. **steady state** — open-loop Poisson stream against N healthy
+//!    replicas (baseline p50/p99);
+//! 2. **failover** — the same stream while a kill switch permanently
+//!    destroys one replica's sole worker mid-stream (restart budget 0):
+//!    requests caught on the dying replica re-dispatch as failover hedges,
+//!    later arrivals spill past the closed queue, and the supervisor
+//!    rebuilds the replica from the model catalog. Reports the during-
+//!    failover tail and the kill → N-live-replicas recovery time;
+//! 3. **recovered** — a final stream at full restored capacity.
+//!
+//! Emits `BENCH_replica.json` (override: `BENCH_REPLICA_JSON`). Arrival
+//! schedules are pure functions of the seed. `BENCH_SMOKE=1` shrinks
+//! stream durations for CI; the steady-state smoke run must complete
+//! loss-free (asserted here — that is what fails CI on a dispatch or
+//! drain regression).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::coordinator::pool::PoolConfig;
+use unzipfpga::coordinator::registry::BackendWrap;
+use unzipfpga::coordinator::replica::{HedgePolicy, ReplicaConfig, ReplicaSet, ReplicaState};
+use unzipfpga::coordinator::traffic::{
+    ArrivalProcess, RequestClass, TrafficReport, TrafficSpec,
+};
+use unzipfpga::engine::{
+    CompiledModel, Compiler, EnginePlan, ExecutionBackend, ExecutionReport, LayerOutcome,
+};
+use unzipfpga::error::Result;
+use unzipfpga::util::bench::smoke_mode;
+use unzipfpga::util::prng::Xoshiro256;
+use unzipfpga::workload::tiny::small_resnet;
+use unzipfpga::workload::RatioProfile;
+
+const SEED: u64 = 0x9e11;
+const REPLICAS: usize = 3;
+const RATE_RPS: f64 = 300.0;
+
+/// Backend decorator that panics on the next execution once armed — the
+/// bench's "pull the plug on this replica" lever.
+struct KillSwitch {
+    inner: Box<dyn ExecutionBackend>,
+    armed: Arc<AtomicBool>,
+}
+
+impl ExecutionBackend for KillSwitch {
+    fn name(&self) -> &'static str {
+        "kill-switch"
+    }
+
+    fn plan(&mut self, plan: &EnginePlan) -> Result<()> {
+        self.inner.plan(plan)
+    }
+
+    fn preload(&mut self, model: &Arc<CompiledModel>) -> Result<()> {
+        self.inner.preload(model)
+    }
+
+    fn execute_layer(&mut self, idx: usize, input: &[f32]) -> Result<LayerOutcome> {
+        if self.armed.load(Ordering::SeqCst) {
+            panic!("kill switch fired");
+        }
+        self.inner.execute_layer(idx, input)
+    }
+
+    fn finish(&mut self) -> Result<ExecutionReport> {
+        self.inner.finish()
+    }
+}
+
+fn report_json(label: &str, r: &TrafficReport) -> String {
+    format!(
+        "    \"{label}\": {{\"offered\": {}, \"completed\": {}, \"shed\": {}, \
+         \"queue_full\": {}, \"expired\": {}, \"failed\": {}, \
+         \"p50_us\": {:.1}, \"p99_us\": {:.1}}}",
+        r.offered,
+        r.completed,
+        r.shed,
+        r.queue_full,
+        r.expired,
+        r.failed,
+        r.percentile_us(50.0),
+        r.percentile_us(99.0),
+    )
+}
+
+fn accounted(r: &TrafficReport) {
+    assert_eq!(
+        r.offered,
+        r.submitted + r.shed + r.queue_full + r.expired + r.failed,
+        "every arrival must be accounted: {}",
+        r.summary()
+    );
+    assert_eq!(r.harness_failures, 0, "harness must survive: {}", r.summary());
+}
+
+fn main() {
+    println!("== replicated serving: steady state vs mid-stream failover ==");
+    let smoke = smoke_mode();
+    let duration_s = if smoke { 0.25 } else { 1.5 };
+
+    let armed = Arc::new(AtomicBool::new(false));
+    let armed_in_wrap = Arc::clone(&armed);
+    let wrap: BackendWrap = Arc::new(move |backend, _worker| {
+        Box::new(KillSwitch {
+            inner: backend,
+            armed: Arc::clone(&armed_in_wrap),
+        })
+    });
+    let mut wraps: Vec<Option<BackendWrap>> = vec![None; REPLICAS];
+    wraps[0] = Some(wrap);
+
+    let mut cfg = ReplicaConfig::new(REPLICAS);
+    cfg.pool = PoolConfig::single_worker();
+    cfg.pool.queue_depth = 256;
+    // One panic destroys the replica below the replica layer: the bench
+    // measures the *set's* failover, not the pool's respawn path (that is
+    // benches/serving.rs territory).
+    cfg.pool.restart_budget = 0;
+    cfg.pool.retries = 0;
+    cfg.health.supervisor_tick = Duration::from_millis(2);
+    cfg.hedge = Some(HedgePolicy::default());
+    let set = ReplicaSet::start_with_wraps(cfg, wraps).unwrap();
+
+    let net = small_resnet();
+    let model = Compiler::new()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(8, 4, 8, 4))
+        .compile(net.clone(), RatioProfile::uniform(&net, 0.5))
+        .unwrap();
+    let input_len = model.input_len();
+    set.register_model(net.name.clone(), model).unwrap();
+    let input = Xoshiro256::seed_from_u64(SEED).normal_vec(input_len);
+
+    let spec = |seed: u64| TrafficSpec {
+        process: ArrivalProcess::Poisson { rate_rps: RATE_RPS },
+        duration_s,
+        seed,
+        classes: vec![RequestClass::timing(net.name.clone()).with_input(input.clone())],
+    };
+
+    // -- 1. steady state: all replicas healthy, loss-free by contract.
+    let steady = spec(SEED + 1).run_open_loop(&set);
+    accounted(&steady);
+    assert_eq!(
+        steady.failed + steady.shed + steady.expired,
+        0,
+        "steady state must be loss-free: {}",
+        steady.summary()
+    );
+    println!("   steady    {}", steady.summary());
+
+    // -- 2. failover: arm the kill switch a third into the stream, disarm
+    // shortly after (so supervisor rebuilds can succeed), and time the
+    // kill → full-capacity recovery.
+    let (failover, recovery) = std::thread::scope(|s| {
+        let set_ref = &set;
+        let failover_spec = spec(SEED + 2);
+        let stream = s.spawn(move || failover_spec.run_open_loop(set_ref));
+        std::thread::sleep(Duration::from_secs_f64(duration_s / 3.0));
+        armed.store(true, Ordering::SeqCst);
+        let t_kill = Instant::now();
+        // Stay armed until the kill has provably landed (the supervisor
+        // took replica 0 out of Healthy), then let the rebuild succeed.
+        while set_ref.states()[0] == ReplicaState::Healthy {
+            assert!(
+                t_kill.elapsed() < Duration::from_secs(10),
+                "kill switch never fired — no stream request reached replica 0"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        armed.store(false, Ordering::SeqCst);
+        while !(set_ref.rebuilds() >= 1
+            && set_ref.live_replicas() == REPLICAS
+            && set_ref.states()[0] == ReplicaState::Healthy)
+        {
+            assert!(
+                t_kill.elapsed() < Duration::from_secs(10),
+                "supervisor failed to restore capacity within 10 s"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let recovery = t_kill.elapsed();
+        (stream.join().expect("traffic thread"), recovery)
+    });
+    accounted(&failover);
+    assert!(failover.completed > 0, "{}", failover.summary());
+    println!(
+        "   failover  {} (recovered in {:.1} ms, hedges {}, wins {})",
+        failover.summary(),
+        recovery.as_secs_f64() * 1e3,
+        set.hedges(),
+        set.hedge_wins(),
+    );
+
+    // -- 3. recovered: full capacity again, loss-free.
+    let recovered = spec(SEED + 3).run_open_loop(&set);
+    accounted(&recovered);
+    assert_eq!(
+        recovered.failed + recovered.shed + recovered.expired,
+        0,
+        "restored capacity must serve loss-free: {}",
+        recovered.summary()
+    );
+    println!("   recovered {}", recovered.summary());
+
+    let hedges = set.hedges();
+    let hedge_wins = set.hedge_wins();
+    let rebuilds = set.rebuilds();
+    assert!(rebuilds >= 1, "the failover phase must have forced a rebuild");
+    let m = set.shutdown().unwrap();
+    println!(
+        "   shutdown: rebuilds {} hedges {} wins {} panicked_workers {}",
+        rebuilds,
+        hedges,
+        hedge_wins,
+        m.panicked_workers()
+    );
+
+    // -- JSON artifact.
+    let path = std::env::var("BENCH_REPLICA_JSON")
+        .unwrap_or_else(|_| "BENCH_replica.json".to_string());
+    let mut out = String::from("{\n  \"bench\": \"replica-failover\",\n");
+    out.push_str(&format!(
+        "  \"smoke\": {smoke},\n  \"seed\": {SEED},\n  \"replicas\": {REPLICAS},\n  \
+         \"rate_rps\": {RATE_RPS:.1},\n  \"duration_s\": {duration_s},\n  \"phases\": {{\n"
+    ));
+    out.push_str(&report_json("steady", &steady));
+    out.push_str(",\n");
+    out.push_str(&report_json("during_failover", &failover));
+    out.push_str(",\n");
+    out.push_str(&report_json("recovered", &recovered));
+    out.push_str("\n  },\n");
+    out.push_str(&format!(
+        "  \"recovery_ms\": {:.1},\n  \"hedges\": {hedges},\n  \
+         \"hedge_wins\": {hedge_wins},\n  \"rebuilds\": {rebuilds},\n  \
+         \"panicked_workers\": {}\n}}\n",
+        recovery.as_secs_f64() * 1e3,
+        m.panicked_workers(),
+    ));
+    std::fs::write(&path, &out).expect("write BENCH_replica.json");
+    println!("   wrote {path}");
+}

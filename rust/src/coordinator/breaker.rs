@@ -15,6 +15,15 @@
 //! pre-execution failures like deadline expiry and the breaker's own
 //! rejections — a model must not be punished for the queue's state).
 //! Breakers are opt-in per pool: see `PoolConfig::breaker`.
+//!
+//! **Scope:** breakers belong to one pool, and under replicated serving
+//! each replica owns its own pool — so breaker state is deliberately
+//! **replica-scoped**, never shared across a
+//! [`ReplicaSet`](crate::coordinator::replica::ReplicaSet). A model
+//! poisoned on one replica (corrupt slabs, a sick backend) trips only that
+//! replica's breaker; healthy replicas keep serving the same model, and
+//! dispatch routes around the open breaker instead of fast-rejecting
+//! everywhere.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Mutex, MutexGuard, PoisonError};
@@ -216,6 +225,20 @@ impl CircuitBreaker {
     /// Total trips across every model (re-trips from half-open included).
     pub fn trips(&self) -> u64 {
         self.lock().values().map(|b| b.trips).sum()
+    }
+
+    /// Ids of models whose breaker is currently `Open` (sorted). The
+    /// replica health check uses this to tell "one model is sick on this
+    /// replica" from "this replica is sick".
+    pub fn open_models(&self) -> Vec<String> {
+        let mut open: Vec<String> = self
+            .lock()
+            .iter()
+            .filter(|(_, b)| matches!(b.state, BreakerState::Open))
+            .map(|(k, _)| k.clone())
+            .collect();
+        open.sort();
+        open
     }
 }
 

@@ -108,6 +108,17 @@ impl Metrics {
         self.queue_delay_us.extend_from_slice(&other.queue_delay_us);
     }
 
+    /// [`merge`](Self::merge), additionally folding the other collector's
+    /// *global* latency series into a per-model series named `tag` (e.g.
+    /// `"replica0"`). A [`ReplicaSet`](crate::coordinator::replica::ReplicaSet)
+    /// aggregates its replicas' pool metrics this way, so fleet-wide
+    /// percentiles and per-replica breakdowns come out of one collector.
+    pub fn merge_tagged(&mut self, other: &Metrics, tag: &str) {
+        self.merge(other);
+        let series = self.per_model.entry(tag.to_string()).or_default();
+        series.extend_from_slice(&other.latencies_us);
+    }
+
     /// Mean latency in microseconds.
     pub fn mean_us(&self) -> f64 {
         stats::mean(&self.latencies_us)

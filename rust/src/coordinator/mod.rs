@@ -23,6 +23,13 @@
 //! [`traffic`] module generates deterministic open/closed-loop request
 //! streams (Poisson / bursty / diurnal) to measure tail latency under
 //! offered load (`benches/serving.rs` → `BENCH_serving.json`).
+//!
+//! Serving is **replicable**: a [`replica::ReplicaSet`] stands up N
+//! independent registry + pool stacks behind one dispatcher with
+//! model-affinity placement, per-replica health tracking and supervised
+//! rebuilds, administrative drain/rejoin, hedged retries, and
+//! degraded-mode admission ([`Error::DegradedCapacity`](crate::Error::DegradedCapacity))
+//! — see the [`replica`] module docs.
 
 pub mod breaker;
 pub mod metrics;
@@ -31,6 +38,7 @@ pub mod multi_tenant;
 pub mod plan;
 pub mod pool;
 pub mod registry;
+pub mod replica;
 pub mod scheduler;
 pub mod server;
 pub mod traffic;
@@ -39,6 +47,12 @@ pub use breaker::{BreakerConfig, BreakerState, CircuitBreaker};
 pub use metrics::Metrics;
 pub use plan::InferencePlan;
 pub use pool::{PoolConfig, PoolMetrics, RequestExecutor, ResponseHandle, ServerPool};
-pub use registry::ModelRegistry;
+pub use registry::{BackendWrap, ModelRegistry};
+pub use replica::{
+    DegradedPolicy, HealthPolicy, HedgePolicy, ReplicaConfig, ReplicaHandle, ReplicaSet,
+    ReplicaSetMetrics, ReplicaState,
+};
 pub use server::{Request, Response};
-pub use traffic::{ArrivalProcess, RequestClass, TrafficReport, TrafficSpec};
+pub use traffic::{
+    ArrivalProcess, LoadTarget, RequestClass, SettleHandle, TrafficReport, TrafficSpec,
+};

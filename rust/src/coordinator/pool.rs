@@ -331,6 +331,9 @@ struct PoolShared {
     largest_batch: AtomicUsize,
     /// Model switches, pool-wide (flushed per batch from each executor).
     model_switches: AtomicU64,
+    /// Jobs popped by workers and not yet answered or re-queued — the
+    /// in-flight gauge administrative drains quiesce on.
+    executing: AtomicUsize,
     /// Executor panics caught by worker supervision.
     caught_panics: AtomicU64,
     /// Workers respawned after a caught panic.
@@ -553,6 +556,7 @@ impl ServerPool {
             batches: AtomicU64::new(0),
             largest_batch: AtomicUsize::new(0),
             model_switches: AtomicU64::new(0),
+            executing: AtomicUsize::new(0),
             caught_panics: AtomicU64::new(0),
             worker_restarts: AtomicU64::new(0),
             restarts_left: AtomicUsize::new(cfg.restart_budget),
@@ -601,6 +605,33 @@ impl ServerPool {
     /// momentarily counts both the dying worker and its replacement).
     pub fn live_workers(&self) -> usize {
         self.shared.alive_workers.load(Ordering::SeqCst)
+    }
+
+    /// The worker count the pool was configured with (what
+    /// [`live_workers`](Self::live_workers) returns while supervision can
+    /// still hold the line).
+    pub fn configured_workers(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// Respawns left in the pool-wide
+    /// [`restart_budget`](PoolConfig::restart_budget). `0` means the next
+    /// caught executor panic permanently shrinks
+    /// [`live_workers`](Self::live_workers) — the signal replica
+    /// supervision uses to promote a replica to `Unhealthy` before it
+    /// bleeds out worker by worker.
+    pub fn restart_budget_left(&self) -> usize {
+        self.shared.restarts_left.load(Ordering::SeqCst)
+    }
+
+    /// Jobs popped by workers and not yet answered (or re-queued
+    /// quarantined). `queue_len() == 0 && in_flight() == 0` is the
+    /// quiescent condition an administrative drain waits on. Racy by
+    /// nature: a job moves queue → in-flight under the worker's pop, so a
+    /// single snapshot of both gauges can miss a job mid-move — poll until
+    /// both read zero.
+    pub fn in_flight(&self) -> usize {
+        self.shared.executing.load(Ordering::SeqCst)
     }
 
     /// The pool's live circuit breakers (`None` when
@@ -1089,6 +1120,10 @@ fn pop_batch(
                 continue;
             };
             if first.quarantine {
+                // Queue → in-flight must flip under the state lock so a
+                // drain that reads `queue_len` then `in_flight` can never
+                // observe the job in neither gauge.
+                shared.executing.fetch_add(1, Ordering::SeqCst);
                 drop(st);
                 shared.not_full.notify_all();
                 return Some(vec![first]);
@@ -1130,6 +1165,8 @@ fn pop_batch(
                     break;
                 }
             }
+            // Same under-lock handoff as the quarantine path above.
+            shared.executing.fetch_add(batch.len(), Ordering::SeqCst);
             drop(st);
             shared.not_full.notify_all();
             return Some(batch);
@@ -1291,6 +1328,20 @@ fn serve_batch<E: RequestExecutor>(
     }
 }
 
+/// Drops the in-flight gauge by `n` when the batch settles — RAII so the
+/// gauge cannot leak (and wedge an administrative drain) even if serving
+/// unwinds through an uncaught panic.
+struct ExecutingGuard<'a> {
+    shared: &'a PoolShared,
+    n: usize,
+}
+
+impl Drop for ExecutingGuard<'_> {
+    fn drop(&mut self) {
+        self.shared.executing.fetch_sub(self.n, Ordering::SeqCst);
+    }
+}
+
 fn worker_loop<E: RequestExecutor>(
     shared: &PoolShared,
     exec: &mut E,
@@ -1305,6 +1356,11 @@ fn worker_loop<E: RequestExecutor>(
     let mut panic_detail = None;
     while let Some(jobs) = pop_batch(shared, cfg.max_batch, cfg.linger, &mut expired) {
         let n = jobs.len();
+        // `pop_batch` raised the gauge under the state lock; settle it when
+        // this batch is answered or re-queued (a re-queued job is counted
+        // by the queue again, so the brief double-count errs safe — a
+        // drain waits longer, never returns early).
+        let _executing = ExecutingGuard { shared, n };
         match serve_batch(shared, exec, cfg, rng, jobs, &mut metrics) {
             BatchOutcome::Served => {
                 batches += 1;

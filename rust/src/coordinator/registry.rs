@@ -42,8 +42,17 @@ use crate::coordinator::pool::{PoolConfig, RequestExecutor, ServerPool};
 use crate::coordinator::server::Request;
 use crate::engine::compile::CompiledModel;
 use crate::engine::wcache::SlabCache;
-use crate::engine::{BackendKind, Engine, Precision};
+use crate::engine::{BackendKind, Engine, ExecutionBackend, Precision};
 use crate::error::{Error, Result};
+
+/// Decorator applied to each worker's freshly constructed backend before
+/// it is planned: receives the raw backend and the worker index, returns
+/// the backend to serve through. This is the fault seam replicated serving
+/// exposes — chaos tests wrap one replica's backends in
+/// [`FaultyBackend`](crate::engine::fault::FaultyBackend) while production
+/// code pays nothing (the hook is `None`).
+pub type BackendWrap =
+    Arc<dyn Fn(Box<dyn ExecutionBackend>, usize) -> Box<dyn ExecutionBackend> + Send + Sync>;
 
 /// Process-wide registration-generation counter. Generations are unique
 /// across *all* registries because registries can share one `SlabCache`:
@@ -152,17 +161,22 @@ impl ModelRegistry {
     /// from the shared cache (the bytes are immediately reusable by the
     /// remaining models). Requests already queued for the id fail with
     /// [`Error::UnknownModel`] when a worker reaches them; a batch already
-    /// **executing** the model completes (it holds the artifact `Arc`) and
-    /// may re-insert some of its slabs after the purge — those stragglers
-    /// carry the evicted registration's *generation*, so they can never be
-    /// adopted by a later registration of the same model id, and they age
-    /// out through normal LRU pressure under the shared budget. Returns
-    /// the evicted artifact.
+    /// **executing** the model completes (it holds the artifact `Arc`) but
+    /// cannot re-seed the cache after the purge: the registration's
+    /// generation is *retired*
+    /// ([`SlabCache::retire_generation`](crate::engine::wcache::SlabCache::retire_generation))
+    /// before the sweep, so a straggler's insert is refused at the cache —
+    /// under the same lock as the sweep, leaving no window. Returns the
+    /// evicted artifact.
     pub fn evict(&self, id: &str) -> Result<Arc<CompiledModel>> {
         let model = self
             .lock()
             .remove(id)
             .ok_or_else(|| Error::UnknownModel(id.to_string()))?;
+        // Retire FIRST, then sweep: any straggler insert either landed
+        // before the watermark (swept below) or arrives after (refused).
+        self.cache
+            .retire_generation(model.network_name(), model.generation());
         for key in model.weights_keys() {
             self.cache.evict_layer(key);
         }
@@ -234,6 +248,10 @@ fn clone_typed(e: &Error) -> Error {
             retry_after: *retry_after,
         },
         Error::Transient(s) => Error::Transient(s.clone()),
+        Error::DegradedCapacity { live, configured } => Error::DegradedCapacity {
+            live: *live,
+            configured: *configured,
+        },
         other => Error::Coordinator(other.to_string()),
     }
 }
@@ -249,6 +267,10 @@ struct RegistryExecutor {
     engine: Option<Engine>,
     active: Option<(String, Arc<CompiledModel>)>,
     switches: u64,
+    /// This worker's index within its pool (passed to `wrap`).
+    worker: usize,
+    /// Optional backend decorator (the chaos/fault seam).
+    wrap: Option<BackendWrap>,
 }
 
 impl RegistryExecutor {
@@ -285,11 +307,20 @@ impl RegistryExecutor {
             match self.engine.as_mut() {
                 Some(e) => e.activate(&model)?,
                 None => {
-                    self.engine = Some(Engine::from_compiled(
-                        &model,
-                        &self.kind,
-                        self.registry.cache(),
-                    )?);
+                    let engine = match &self.wrap {
+                        Some(wrap) => {
+                            let raw = crate::engine::make_backend(
+                                &self.kind,
+                                self.registry.cache(),
+                                model.precision(),
+                            )?;
+                            Engine::from_compiled_with(&model, wrap(raw, self.worker))?
+                        }
+                        None => {
+                            Engine::from_compiled(&model, &self.kind, self.registry.cache())?
+                        }
+                    };
+                    self.engine = Some(engine);
                 }
             }
             if was_active {
@@ -400,6 +431,20 @@ impl ServerPool {
         kind: BackendKind,
         cfg: PoolConfig,
     ) -> Result<Self> {
+        Self::serve_with_wrap(registry, kind, cfg, None)
+    }
+
+    /// [`serve`](Self::serve) with an optional backend decorator: every
+    /// worker's backend is passed through `wrap` (with its worker index)
+    /// before planning. Replicated serving's chaos tests use this to
+    /// confine injected faults to one replica; `None` is exactly
+    /// [`serve`](Self::serve).
+    pub fn serve_with_wrap(
+        registry: Arc<ModelRegistry>,
+        kind: BackendKind,
+        cfg: PoolConfig,
+        wrap: Option<BackendWrap>,
+    ) -> Result<Self> {
         // Fail fast on the caller thread: a broken runtime should error
         // here, not inside a worker. (Compiled models were validated at
         // compile time; analytical/simulator backends cannot fail to
@@ -438,12 +483,14 @@ impl ServerPool {
             }
         }
         let factory_registry = Arc::clone(&registry);
-        ServerPool::start_inner(None, Some(registry), cfg, move |_worker| RegistryExecutor {
+        ServerPool::start_inner(None, Some(registry), cfg, move |worker| RegistryExecutor {
             registry: Arc::clone(&factory_registry),
             kind: kind.clone(),
             engine: None,
             active: None,
             switches: 0,
+            worker,
+            wrap: wrap.clone(),
         })
     }
 }
@@ -538,8 +585,10 @@ mod tests {
             "every weights key carries the registration generation"
         );
         reg.evict("a").unwrap();
-        // Straggler: the in-flight batch re-inserts a slab under the OLD key
-        // after the purge.
+        // Straggler: the in-flight batch tries to re-insert a slab under
+        // the OLD key after the purge. Eviction retired the old generation,
+        // so the insert is refused at the cache — the straggler still gets
+        // its own copy back, but nothing lands in the map.
         let straggler_key = crate::engine::SlabKey {
             layer: old.weights_keys()[0].clone(),
             col_tile: 0,
@@ -549,6 +598,12 @@ mod tests {
                 Ok(crate::engine::Slab::F32(vec![f32::NAN; 16]))
             })
             .unwrap();
+        assert_eq!(
+            reg.cache().retired_inserts(),
+            1,
+            "the straggler's insert must be refused, not merely aged out"
+        );
+        assert_eq!(reg.cache().len(), 0, "no stale slab may be resident");
         // Re-register the same id + network name.
         let new = reg.register("a", compile("a")).unwrap();
         assert!(new.generation() > g_old, "re-registration bumps the generation");

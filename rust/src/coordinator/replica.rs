@@ -1,0 +1,1567 @@
+//! Replicated serving: N independent engine replicas behind one dispatcher
+//! (the robustness tentpole).
+//!
+//! A [`ReplicaSet`] stands up `replicas` fully independent serving stacks —
+//! each replica owns its **own** [`ModelRegistry`] (and therefore its own
+//! bounded [`SlabCache`](crate::engine::SlabCache)), its own
+//! [`ServerPool`] workers, and its own per-model circuit breakers — so no
+//! failure domain is shared: a poisoned slab cache, a crash-looping
+//! executor, or a tripped breaker is confined to one replica while the
+//! rest keep serving. The paper's single-engine premise is preserved
+//! *inside* each replica; this module is the serving-layer answer to "the
+//! engine is one fault domain".
+//!
+//! **Placement.** Dispatch routes a request to the least-loaded healthy
+//! replica of the model's affinity subset
+//! ([`affinity_subset`](crate::coordinator::scheduler::affinity_subset)):
+//! `affinity_spread` consecutive replicas (mod N) keyed by the model name,
+//! so a hot model warms at most `spread` slab caches instead of churning
+//! all of them. Backpressure ([`Error::QueueFull`] /
+//! [`Error::Overloaded`]) spills to the next-best healthy replica —
+//! inside the subset first, then outside it.
+//!
+//! **Health.** Two signals promote a replica to
+//! [`ReplicaState::Unhealthy`]: a streak of
+//! [`HealthPolicy::failure_threshold`] consecutive sick completions
+//! (worker panics, pool loss, transports) observed through settling
+//! handles, or the supervisor noticing the replica's pool has lost workers
+//! with its restart budget exhausted
+//! ([`ServerPool::restart_budget_left`] `== 0`) — the point after which
+//! the pool can only shrink. The supervisor thread then **rebuilds** the
+//! replica: the old pool is retired (drained and joined; its metrics are
+//! preserved), a fresh registry + pool is built from the model catalog by
+//! re-compiling each [`CompiledModel`] ([`CompiledModel::respin`] — the
+//! compiler is deterministic, so numerics are bit-identical across
+//! incarnations), warmed with one timing request per model, and the
+//! replica rejoins dispatch.
+//!
+//! **Drain / rejoin.** [`ReplicaSet::drain`] administratively quiesces a
+//! replica: new dispatch avoids it, in-flight and queued batches complete
+//! (the pool's queue and in-flight gauges flip under one lock, so the
+//! quiescent check `queue_len() == 0 && in_flight() == 0` cannot miss a
+//! job between the two), then the replica parks in
+//! [`ReplicaState::Drained`] with its pool intact — so
+//! [`ReplicaSet::rejoin`] is instant and the cycle loses zero requests.
+//!
+//! **Hedged retries.** With a [`HedgePolicy`], a request that has not
+//! completed past a fraction of its deadline (or past
+//! [`HedgePolicy::min_wait`] on a replica that is no longer healthy, for
+//! deadline-less requests) is re-dispatched once to a different healthy
+//! replica. First completion wins; the loser's response is discarded
+//! (duplicate-suppressed — the losing leg's channel is simply dropped). A
+//! leg that fails typed while the other is still pending does not settle
+//! the request — the surviving leg does; if the only leg fails typed
+//! before the hedge fired, the hedge fires immediately as a failover
+//! retry. This bounds admitted-request tail latency during a replica
+//! outage.
+//!
+//! **Degraded mode.** When live capacity falls below
+//! [`DegradedPolicy::min_live`], admission sheds requests whose priority
+//! is below [`DegradedPolicy::keep_priority`] with the typed
+//! [`Error::DegradedCapacity`] (and sheds *everything* at zero live
+//! replicas) — load is dropped by priority class instead of letting the
+//! survivors' queues collapse.
+//!
+//! The set implements [`LoadTarget`], so the seeded traffic harness
+//! ([`TrafficConfig`](crate::coordinator::traffic::TrafficConfig)) drives
+//! it exactly like a single pool.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::breaker::BreakerState;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::{PoolConfig, PoolMetrics, ResponseHandle, ServerPool};
+use crate::coordinator::registry::{BackendWrap, ModelRegistry};
+use crate::coordinator::scheduler::affinity_subset;
+use crate::coordinator::server::{Request, Response};
+use crate::coordinator::traffic::{LoadTarget, SettleHandle};
+use crate::engine::{BackendKind, CompiledModel, SlabCache};
+use crate::error::{Error, Result};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Lifecycle state of one replica.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Serving: eligible for dispatch and hedges.
+    Healthy,
+    /// Administratively quiescing: no new dispatch, queued and in-flight
+    /// work completes.
+    Draining,
+    /// Quiesced with its pool intact: [`ReplicaSet::rejoin`] returns it to
+    /// service instantly.
+    Drained,
+    /// Sick (failure streak or restart budget exhausted): the supervisor
+    /// will retire and rebuild it.
+    Unhealthy,
+    /// The supervisor is retiring the old pool and building its
+    /// replacement.
+    Rebuilding,
+}
+
+impl std::fmt::Display for ReplicaState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplicaState::Healthy => write!(f, "healthy"),
+            ReplicaState::Draining => write!(f, "draining"),
+            ReplicaState::Drained => write!(f, "drained"),
+            ReplicaState::Unhealthy => write!(f, "unhealthy"),
+            ReplicaState::Rebuilding => write!(f, "rebuilding"),
+        }
+    }
+}
+
+/// Health-tracking and supervision knobs.
+#[derive(Clone, Debug)]
+pub struct HealthPolicy {
+    /// Consecutive sick completions (observed through settling handles)
+    /// that promote a replica to [`ReplicaState::Unhealthy`].
+    pub failure_threshold: u32,
+    /// Timing requests per registered model a rebuilt replica must serve
+    /// before rejoining dispatch (0 = no warm-up).
+    pub warmup_requests: usize,
+    /// Supervisor poll interval: how often restart-budget exhaustion is
+    /// checked and unhealthy replicas are rebuilt.
+    pub supervisor_tick: Duration,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        Self {
+            failure_threshold: 3,
+            warmup_requests: 1,
+            supervisor_tick: Duration::from_millis(10),
+        }
+    }
+}
+
+/// Degraded-mode admission policy.
+#[derive(Clone, Debug)]
+pub struct DegradedPolicy {
+    /// Live-replica floor: below it, admission sheds by priority class.
+    /// (At zero live replicas everything is shed regardless of policy —
+    /// there is nowhere to dispatch.)
+    pub min_live: usize,
+    /// Requests with `priority <` this are shed while degraded; the rest
+    /// are admitted. 0 (with the default `min_live` of 1) disables
+    /// priority shedding.
+    pub keep_priority: u8,
+}
+
+impl Default for DegradedPolicy {
+    fn default() -> Self {
+        Self {
+            min_live: 1,
+            keep_priority: 0,
+        }
+    }
+}
+
+/// Hedged-retry policy (see the module docs for trigger semantics).
+#[derive(Clone, Debug)]
+pub struct HedgePolicy {
+    /// For requests with a deadline: hedge once this fraction of the
+    /// submission-to-deadline window has elapsed without a completion.
+    pub deadline_fraction: f64,
+    /// Floor on the hedge trigger (and the whole trigger for deadline-less
+    /// requests, which additionally require the primary replica to have
+    /// left [`ReplicaState::Healthy`]).
+    pub min_wait: Duration,
+}
+
+impl Default for HedgePolicy {
+    fn default() -> Self {
+        Self {
+            deadline_fraction: 0.5,
+            min_wait: Duration::from_millis(1),
+        }
+    }
+}
+
+/// Configuration of a [`ReplicaSet`].
+#[derive(Clone, Debug)]
+pub struct ReplicaConfig {
+    /// Number of replicas (independent registry + pool stacks).
+    pub replicas: usize,
+    /// Pool configuration applied to every replica (workers, queue depth,
+    /// batching, retries, restart budget, breakers — all per replica).
+    pub pool: PoolConfig,
+    /// Backend kind for every replica's workers.
+    pub backend: BackendKind,
+    /// Per-replica slab-cache byte budget.
+    pub slab_budget: usize,
+    /// Model-affinity spread (consecutive replicas per model; 0 or ≥
+    /// `replicas` disables affinity).
+    pub affinity_spread: usize,
+    /// Health tracking and supervision.
+    pub health: HealthPolicy,
+    /// Degraded-mode admission.
+    pub degraded: DegradedPolicy,
+    /// Hedged retries (`None` disables hedging).
+    pub hedge: Option<HedgePolicy>,
+}
+
+impl ReplicaConfig {
+    /// A config with `replicas` replicas and defaults everywhere else
+    /// (simulator backend — the only backend with real numerics and a slab
+    /// cache to replicate).
+    pub fn new(replicas: usize) -> Self {
+        Self {
+            replicas,
+            pool: PoolConfig::default(),
+            backend: BackendKind::Simulator,
+            slab_budget: SlabCache::DEFAULT_BUDGET,
+            affinity_spread: 0,
+            health: HealthPolicy::default(),
+            degraded: DegradedPolicy::default(),
+            hedge: None,
+        }
+    }
+
+    /// Validate the knobs ([`ReplicaSet::start`] calls this).
+    pub fn validate(&self) -> Result<()> {
+        if self.replicas == 0 {
+            return Err(Error::InvalidConfig(
+                "ReplicaConfig: at least one replica is required".into(),
+            ));
+        }
+        if self.degraded.min_live > self.replicas {
+            return Err(Error::InvalidConfig(format!(
+                "ReplicaConfig: degraded.min_live ({}) exceeds the replica count ({})",
+                self.degraded.min_live, self.replicas
+            )));
+        }
+        if self.health.failure_threshold == 0 {
+            return Err(Error::InvalidConfig(
+                "ReplicaConfig: health.failure_threshold must be ≥ 1".into(),
+            ));
+        }
+        if self.health.supervisor_tick.is_zero() {
+            return Err(Error::InvalidConfig(
+                "ReplicaConfig: health.supervisor_tick must be > 0".into(),
+            ));
+        }
+        if self.slab_budget == 0 {
+            return Err(Error::InvalidConfig(
+                "ReplicaConfig: slab_budget must be ≥ 1 byte".into(),
+            ));
+        }
+        if let Some(h) = &self.hedge {
+            if !(h.deadline_fraction > 0.0 && h.deadline_fraction <= 1.0) {
+                return Err(Error::InvalidConfig(format!(
+                    "ReplicaConfig: hedge.deadline_fraction must be in (0, 1], got {}",
+                    h.deadline_fraction
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One live incarnation of a replica: its private registry (own slab
+/// cache) and the pool serving it.
+struct ReplicaInner {
+    pool: Arc<ServerPool>,
+    registry: Arc<ModelRegistry>,
+}
+
+struct ReplicaSlot {
+    state: Mutex<ReplicaState>,
+    /// `None` only while the supervisor is between retiring the old
+    /// incarnation and installing the new one.
+    inner: Mutex<Option<ReplicaInner>>,
+    consecutive_failures: AtomicU32,
+}
+
+impl ReplicaSlot {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(ReplicaState::Rebuilding),
+            inner: Mutex::new(None),
+            consecutive_failures: AtomicU32::new(0),
+        }
+    }
+}
+
+struct SetShared {
+    cfg: ReplicaConfig,
+    /// Per-replica backend decorators, applied at every (re)build — the
+    /// chaos seam: a test wraps exactly one replica's backends in a
+    /// [`FaultyBackend`](crate::engine::fault::FaultyBackend) and the
+    /// blast radius is provably one replica.
+    wraps: Vec<Option<BackendWrap>>,
+    slots: Vec<ReplicaSlot>,
+    /// Model catalog: the prototype artifacts a rebuild re-compiles from.
+    /// One prototype serves every replica; `replicas` prototypes pin one
+    /// per replica (per-replica design points). Lock order: catalog →
+    /// slot.inner (never the reverse — rebuild drops the inner lock before
+    /// reading the catalog).
+    catalog: Mutex<BTreeMap<String, Vec<Arc<CompiledModel>>>>,
+    /// Round-robin rotation for load tie-breaks.
+    rr: AtomicUsize,
+    hedges: AtomicU64,
+    hedge_wins: AtomicU64,
+    degraded_shed: AtomicU64,
+    rebuilds: AtomicU64,
+    /// Metrics harvested from retired incarnations, folded into the
+    /// shutdown report.
+    retired_metrics: Mutex<Vec<PoolMetrics>>,
+    /// Supervisor wake/stop: `true` = stop.
+    wake: (Mutex<bool>, Condvar),
+}
+
+/// N independent engine replicas behind one dispatcher. See the module
+/// docs for the full lifecycle.
+pub struct ReplicaSet {
+    shared: Arc<SetShared>,
+    supervisor: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+/// Aggregated statistics returned by [`ReplicaSet::shutdown`].
+#[derive(Debug)]
+pub struct ReplicaSetMetrics {
+    /// Final pool metrics per replica slot (`None` when a dispatcher still
+    /// held the pool at shutdown and its metrics could not be harvested).
+    pub per_replica: Vec<Option<PoolMetrics>>,
+    /// Pool metrics of incarnations retired by supervisor rebuilds.
+    pub retired: Vec<PoolMetrics>,
+    /// Hedge legs launched.
+    pub hedges: u64,
+    /// Requests won by their hedge leg.
+    pub hedge_wins: u64,
+    /// Requests shed by degraded-mode admission.
+    pub degraded_shed: u64,
+    /// Supervisor rebuilds completed.
+    pub rebuilds: u64,
+}
+
+impl ReplicaSetMetrics {
+    /// Fold every incarnation's latency series into one collector, tagging
+    /// each live replica's global series as `replica<i>` (and retired
+    /// incarnations as `retired`) via [`Metrics::merge_tagged`].
+    pub fn merged(&self) -> Metrics {
+        let mut m = Metrics::new();
+        for (i, pm) in self.per_replica.iter().enumerate() {
+            if let Some(pm) = pm {
+                m.merge_tagged(&pm.merged(), &format!("replica{i}"));
+            }
+        }
+        for pm in &self.retired {
+            m.merge_tagged(&pm.merged(), "retired");
+        }
+        m
+    }
+
+    /// Executor panics observed across every incarnation.
+    pub fn panicked_workers(&self) -> usize {
+        self.per_replica
+            .iter()
+            .flatten()
+            .chain(&self.retired)
+            .map(|pm| pm.panicked_workers)
+            .sum()
+    }
+}
+
+impl ReplicaSet {
+    /// Stand up `cfg.replicas` replicas and the supervisor thread.
+    pub fn start(cfg: ReplicaConfig) -> Result<Self> {
+        Self::start_with_wraps(cfg, Vec::new())
+    }
+
+    /// [`start`](Self::start) with per-replica backend decorators (empty =
+    /// none; otherwise one entry per replica). Wraps are re-applied at
+    /// every supervisor rebuild of their replica.
+    pub fn start_with_wraps(cfg: ReplicaConfig, wraps: Vec<Option<BackendWrap>>) -> Result<Self> {
+        cfg.validate()?;
+        if !wraps.is_empty() && wraps.len() != cfg.replicas {
+            return Err(Error::InvalidConfig(format!(
+                "ReplicaSet: {} wraps for {} replicas (pass one per replica or none)",
+                wraps.len(),
+                cfg.replicas
+            )));
+        }
+        let shared = Arc::new(SetShared {
+            slots: (0..cfg.replicas).map(|_| ReplicaSlot::new()).collect(),
+            wraps,
+            catalog: Mutex::new(BTreeMap::new()),
+            rr: AtomicUsize::new(0),
+            hedges: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+            degraded_shed: AtomicU64::new(0),
+            rebuilds: AtomicU64::new(0),
+            retired_metrics: Mutex::new(Vec::new()),
+            wake: (Mutex::new(false), Condvar::new()),
+            cfg,
+        });
+        for i in 0..shared.slots.len() {
+            let inner = build_replica(&shared, i)?;
+            *lock(&shared.slots[i].inner) = Some(inner);
+            *lock(&shared.slots[i].state) = ReplicaState::Healthy;
+        }
+        let supervisor = {
+            let s = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("replica-supervisor".into())
+                .spawn(move || supervise(&s))
+                .map_err(|e| Error::Coordinator(format!("failed to spawn supervisor: {e}")))?
+        };
+        Ok(Self {
+            shared,
+            supervisor: Mutex::new(Some(supervisor)),
+        })
+    }
+
+    /// Register `model` on every replica under `id`. Each replica gets its
+    /// own deterministic re-compilation ([`CompiledModel::respin`]) of the
+    /// prototype, so numerics are bit-identical across replicas while
+    /// cache state stays fully independent. Registration is atomic: on any
+    /// replica failing, the model is evicted from the replicas that
+    /// already accepted it.
+    pub fn register_model(&self, id: impl Into<String>, model: CompiledModel) -> Result<()> {
+        self.register_inner(id.into(), vec![model])
+    }
+
+    /// Per-replica design points: register one prototype per replica
+    /// (`models.len()` must equal the replica count) — replica `i` serves
+    /// `models[i]`. The prototypes must share the network (same input
+    /// contract); they may differ in design point σ, which changes tiling
+    /// and latency but not numerics.
+    pub fn register_model_per_replica(
+        &self,
+        id: impl Into<String>,
+        models: Vec<CompiledModel>,
+    ) -> Result<()> {
+        if models.len() != self.shared.slots.len() {
+            return Err(Error::InvalidConfig(format!(
+                "ReplicaSet: {} per-replica models for {} replicas",
+                models.len(),
+                self.shared.slots.len()
+            )));
+        }
+        self.register_inner(id.into(), models)
+    }
+
+    fn register_inner(&self, id: String, protos: Vec<CompiledModel>) -> Result<()> {
+        let shared = &self.shared;
+        let mut catalog = lock(&shared.catalog);
+        if catalog.contains_key(&id) {
+            return Err(Error::InvalidConfig(format!(
+                "ReplicaSet: model '{id}' is already registered"
+            )));
+        }
+        let protos: Vec<Arc<CompiledModel>> = protos.into_iter().map(Arc::new).collect();
+        // The catalog lock is held across per-replica registration so a
+        // concurrent rebuild (which reads the catalog to restock) can
+        // never observe a half-registered model.
+        for i in 0..shared.slots.len() {
+            let registry = lock(&shared.slots[i].inner)
+                .as_ref()
+                .map(|r| Arc::clone(&r.registry));
+            // A replica mid-rebuild restocks from the catalog when its new
+            // registry is built.
+            let Some(registry) = registry else { continue };
+            let res = proto_for(&protos, i)
+                .respin()
+                .and_then(|m| registry.register(id.clone(), m));
+            if let Err(e) = res {
+                for j in 0..i {
+                    if let Some(r) = lock(&shared.slots[j].inner).as_ref() {
+                        let _ = r.registry.evict(&id);
+                    }
+                }
+                return Err(e);
+            }
+        }
+        catalog.insert(id, protos);
+        Ok(())
+    }
+
+    /// Evict `id` from the catalog and every replica's registry.
+    pub fn evict_model(&self, id: &str) -> Result<()> {
+        let mut catalog = lock(&self.shared.catalog);
+        if catalog.remove(id).is_none() {
+            return Err(Error::UnknownModel(id.to_string()));
+        }
+        for slot in &self.shared.slots {
+            if let Some(r) = lock(&slot.inner).as_ref() {
+                let _ = r.registry.evict(id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Registered model ids (sorted).
+    pub fn models(&self) -> Vec<String> {
+        lock(&self.shared.catalog).keys().cloned().collect()
+    }
+
+    /// Submit a request, blocking while the chosen replica's queue is
+    /// full. Routing, degraded admission, and hedging per the module docs.
+    pub fn submit(&self, req: Request) -> Result<ReplicaHandle> {
+        self.dispatch(req, true)
+    }
+
+    /// Non-blocking [`submit`](Self::submit): a full queue spills to the
+    /// next healthy replica and fails typed once every candidate refuses.
+    pub fn try_submit(&self, req: Request) -> Result<ReplicaHandle> {
+        self.dispatch(req, false)
+    }
+
+    /// Administrative pinned submission: bypass routing, degraded
+    /// admission, and hedging, and submit straight to `replica`'s pool.
+    /// This is how tests and operators address one replica (e.g. to probe
+    /// its breakers) regardless of its dispatch state.
+    pub fn submit_to(&self, replica: usize, req: Request) -> Result<ResponseHandle> {
+        self.check_replica(replica)?;
+        let pool = slot_pool(&self.shared, replica).ok_or_else(|| {
+            Error::Coordinator(format!("replica {replica} has no live pool (rebuilding)"))
+        })?;
+        pool.submit(req)
+    }
+
+    fn dispatch(&self, req: Request, blocking: bool) -> Result<ReplicaHandle> {
+        let shared = &self.shared;
+        let configured = shared.slots.len();
+        let live = self.live_replicas();
+        if live == 0 {
+            shared.degraded_shed.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::DegradedCapacity {
+                live: 0,
+                configured,
+            });
+        }
+        let d = &shared.cfg.degraded;
+        if live < d.min_live && req.priority < d.keep_priority {
+            shared.degraded_shed.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::DegradedCapacity { live, configured });
+        }
+        let order = candidate_order(shared, &req.model, &[]);
+        let mut last = None;
+        for idx in order {
+            let Some(pool) = slot_pool(shared, idx) else {
+                continue;
+            };
+            // Each attempt clones the request: a refused submission
+            // consumes its copy, and the original stays available for the
+            // hedge leg.
+            let res = if blocking {
+                pool.submit(req.clone())
+            } else {
+                pool.try_submit(req.clone())
+            };
+            match res {
+                Ok(handle) => {
+                    return Ok(ReplicaHandle::new(Arc::clone(shared), req, handle, idx));
+                }
+                // Backpressure spills to the next candidate, and so does a
+                // closed queue — a dead pool the supervisor has not flipped
+                // to `Unhealthy` yet is a replica-local condition, not a
+                // property of the request. Anything else (unknown model,
+                // expired deadline, open breaker) is deterministic across
+                // replicas and fails fast.
+                Err(
+                    e @ (Error::QueueFull | Error::Overloaded { .. } | Error::PoolShutdown),
+                ) => last = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last.unwrap_or(Error::DegradedCapacity {
+            live: 0,
+            configured,
+        }))
+    }
+
+    /// Quiesce `replica`: stop dispatching to it, then wait (up to
+    /// `timeout`) for its queue and in-flight gauges to reach zero. On
+    /// success the replica parks in [`ReplicaState::Drained`] with its
+    /// pool intact; on timeout it stays [`ReplicaState::Draining`] (still
+    /// excluded from dispatch) and the call fails typed.
+    pub fn drain(&self, replica: usize, timeout: Duration) -> Result<()> {
+        self.check_replica(replica)?;
+        let slot = &self.shared.slots[replica];
+        {
+            let mut st = lock(&slot.state);
+            match *st {
+                ReplicaState::Healthy | ReplicaState::Draining | ReplicaState::Drained => {
+                    *st = ReplicaState::Draining;
+                }
+                other => {
+                    return Err(Error::Coordinator(format!(
+                        "cannot drain replica {replica} in state {other}; \
+                         the supervisor owns sick replicas"
+                    )));
+                }
+            }
+        }
+        let pool = slot_pool(&self.shared, replica).ok_or_else(|| {
+            Error::Coordinator(format!("replica {replica} has no live pool to drain"))
+        })?;
+        let t0 = Instant::now();
+        loop {
+            if pool.queue_len() == 0 && pool.in_flight() == 0 {
+                *lock(&slot.state) = ReplicaState::Drained;
+                return Ok(());
+            }
+            if t0.elapsed() >= timeout {
+                return Err(Error::Coordinator(format!(
+                    "drain of replica {replica} timed out after {timeout:?} \
+                     (queue={}, in_flight={})",
+                    pool.queue_len(),
+                    pool.in_flight()
+                )));
+            }
+            thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Return a drained (or still-draining) replica to dispatch.
+    pub fn rejoin(&self, replica: usize) -> Result<()> {
+        self.check_replica(replica)?;
+        let slot = &self.shared.slots[replica];
+        let mut st = lock(&slot.state);
+        match *st {
+            ReplicaState::Draining | ReplicaState::Drained => {
+                slot.consecutive_failures.store(0, Ordering::Relaxed);
+                *st = ReplicaState::Healthy;
+                Ok(())
+            }
+            other => Err(Error::Coordinator(format!(
+                "cannot rejoin replica {replica} from state {other}; \
+                 only draining/drained replicas rejoin administratively"
+            ))),
+        }
+    }
+
+    fn check_replica(&self, replica: usize) -> Result<()> {
+        if replica >= self.shared.slots.len() {
+            return Err(Error::InvalidConfig(format!(
+                "replica {replica} out of range (set has {})",
+                self.shared.slots.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Configured replica count.
+    pub fn replicas(&self) -> usize {
+        self.shared.slots.len()
+    }
+
+    /// Current state of every replica slot.
+    pub fn states(&self) -> Vec<ReplicaState> {
+        self.shared
+            .slots
+            .iter()
+            .map(|s| *lock(&s.state))
+            .collect()
+    }
+
+    /// Replicas currently [`ReplicaState::Healthy`] (accepting dispatch).
+    pub fn live_replicas(&self) -> usize {
+        self.shared
+            .slots
+            .iter()
+            .filter(|s| *lock(&s.state) == ReplicaState::Healthy)
+            .count()
+    }
+
+    /// One replica's per-model breaker states (`None` when the replica has
+    /// no live pool or breakers are disabled). Replica-scoped by
+    /// construction — each replica owns its pool and therefore its
+    /// breakers.
+    pub fn breaker_states(&self, replica: usize) -> Option<BTreeMap<String, BreakerState>> {
+        let pool = slot_pool(&self.shared, replica)?;
+        pool.breaker().map(|b| b.states())
+    }
+
+    /// Hedge legs launched.
+    pub fn hedges(&self) -> u64 {
+        self.shared.hedges.load(Ordering::Relaxed)
+    }
+
+    /// Requests whose hedge leg completed first.
+    pub fn hedge_wins(&self) -> u64 {
+        self.shared.hedge_wins.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed by degraded-mode admission.
+    pub fn degraded_shed(&self) -> u64 {
+        self.shared.degraded_shed.load(Ordering::Relaxed)
+    }
+
+    /// Supervisor rebuilds completed.
+    pub fn rebuilds(&self) -> u64 {
+        self.shared.rebuilds.load(Ordering::Relaxed)
+    }
+
+    fn stop_supervisor(&self) {
+        {
+            let (stop, cv) = &self.shared.wake;
+            *lock(stop) = true;
+            cv.notify_all();
+        }
+        if let Some(h) = lock(&self.supervisor).take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop the supervisor, retire every replica (joining their workers),
+    /// and return the aggregated statistics. In-flight requests settle
+    /// before their pool joins.
+    pub fn shutdown(self) -> Result<ReplicaSetMetrics> {
+        self.stop_supervisor();
+        let shared = &self.shared;
+        let mut per_replica = Vec::with_capacity(shared.slots.len());
+        for slot in &shared.slots {
+            let inner = lock(&slot.inner).take();
+            per_replica.push(inner.and_then(|r| retire_pool(r.pool)));
+        }
+        let retired = std::mem::take(&mut *lock(&shared.retired_metrics));
+        Ok(ReplicaSetMetrics {
+            per_replica,
+            retired,
+            hedges: shared.hedges.load(Ordering::Relaxed),
+            hedge_wins: shared.hedge_wins.load(Ordering::Relaxed),
+            degraded_shed: shared.degraded_shed.load(Ordering::Relaxed),
+            rebuilds: shared.rebuilds.load(Ordering::Relaxed),
+        })
+    }
+}
+
+impl Drop for ReplicaSet {
+    /// Dropping without [`shutdown`](Self::shutdown) still stops the
+    /// supervisor; each replica's pool closes and joins through
+    /// `ServerPool`'s own `Drop` when the slots release their `Arc`s.
+    fn drop(&mut self) {
+        self.stop_supervisor();
+    }
+}
+
+impl LoadTarget for ReplicaSet {
+    type Handle = ReplicaHandle;
+
+    fn submit(&self, req: Request) -> Result<ReplicaHandle> {
+        self.dispatch(req, true)
+    }
+
+    fn try_submit(&self, req: Request) -> Result<ReplicaHandle> {
+        self.dispatch(req, false)
+    }
+}
+
+/// One dispatch leg of a hedged request.
+struct Leg {
+    handle: ResponseHandle,
+    replica: usize,
+    hedge: bool,
+}
+
+struct HandleState {
+    /// In-flight legs (primary first while it lives).
+    legs: Vec<Leg>,
+    /// Replicas already tried — the hedge routes around them.
+    used: Vec<usize>,
+    /// Whether the (single) hedge shot has been spent.
+    hedged: bool,
+    /// Settled: every later poll fails typed.
+    done: bool,
+    /// Earliest typed failure, reported only if no leg completes.
+    first_err: Option<Error>,
+}
+
+/// Handle to a request dispatched through a [`ReplicaSet`]: drives the
+/// hedge state machine from the waiter's thread (no poller threads — the
+/// same polling discipline as the traffic harness collector). First leg
+/// completion wins; see the module docs.
+pub struct ReplicaHandle {
+    shared: Arc<SetShared>,
+    /// Kept only while a hedge may still fire.
+    req: Option<Request>,
+    submitted: Instant,
+    state: Mutex<HandleState>,
+}
+
+impl ReplicaHandle {
+    fn new(shared: Arc<SetShared>, req: Request, handle: ResponseHandle, replica: usize) -> Self {
+        let hedging = shared.cfg.hedge.is_some();
+        Self {
+            req: hedging.then_some(req),
+            submitted: Instant::now(),
+            state: Mutex::new(HandleState {
+                legs: vec![Leg {
+                    handle,
+                    replica,
+                    hedge: false,
+                }],
+                used: vec![replica],
+                hedged: !hedging,
+                done: false,
+                first_err: None,
+            }),
+            shared,
+        }
+    }
+
+    /// Block until the request settles (first completion wins).
+    pub fn wait(self) -> Result<Response> {
+        loop {
+            if let Some(outcome) = self.poll_once() {
+                return outcome;
+            }
+            thread::sleep(Duration::from_micros(100));
+        }
+    }
+
+    /// Non-blocking settle check; also advances the hedge state machine.
+    pub fn try_wait(&self) -> Option<Result<Response>> {
+        self.poll_once()
+    }
+
+    fn poll_once(&self) -> Option<Result<Response>> {
+        let mut st = lock(&self.state);
+        if st.done {
+            // Already settled (and the outcome was handed out).
+            return Some(Err(Error::PoolShutdown));
+        }
+        let mut i = 0;
+        while i < st.legs.len() {
+            match st.legs[i].handle.try_wait() {
+                Some(outcome) => {
+                    let leg = st.legs.swap_remove(i);
+                    note_outcome(&self.shared, leg.replica, &outcome);
+                    match outcome {
+                        Ok(r) => {
+                            if leg.hedge {
+                                self.shared.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                            }
+                            st.done = true;
+                            // A still-pending loser leg's channel drops
+                            // with this handle — duplicate suppressed.
+                            return Some(Ok(r));
+                        }
+                        Err(e) => {
+                            if st.first_err.is_none() {
+                                st.first_err = Some(e);
+                            }
+                        }
+                    }
+                }
+                None => i += 1,
+            }
+        }
+        self.maybe_hedge(&mut st);
+        if st.legs.is_empty() {
+            st.done = true;
+            return Some(Err(st.first_err.take().unwrap_or(Error::PoolShutdown)));
+        }
+        None
+    }
+
+    fn maybe_hedge(&self, st: &mut HandleState) {
+        if st.hedged {
+            return;
+        }
+        let (Some(policy), Some(req)) = (self.shared.cfg.hedge.as_ref(), self.req.as_ref())
+        else {
+            st.hedged = true;
+            return;
+        };
+        let due = if st.legs.is_empty() {
+            // The only leg already failed typed: fail over immediately.
+            true
+        } else {
+            let elapsed = self.submitted.elapsed();
+            match req.deadline {
+                Some(d) => {
+                    let ttl = d.saturating_duration_since(self.submitted);
+                    elapsed >= policy.min_wait.max(ttl.mul_f64(policy.deadline_fraction))
+                }
+                None => {
+                    elapsed >= policy.min_wait
+                        && st
+                            .legs
+                            .iter()
+                            .all(|l| slot_state(&self.shared, l.replica) != ReplicaState::Healthy)
+                }
+            }
+        };
+        if !due {
+            return;
+        }
+        // One shot, spent even if no healthy target accepts the duplicate.
+        st.hedged = true;
+        let order = candidate_order(&self.shared, &req.model, &st.used);
+        for idx in order {
+            let Some(pool) = slot_pool(&self.shared, idx) else {
+                continue;
+            };
+            if let Ok(handle) = pool.try_submit(req.clone()) {
+                self.shared.hedges.fetch_add(1, Ordering::Relaxed);
+                st.used.push(idx);
+                st.legs.push(Leg {
+                    handle,
+                    replica: idx,
+                    hedge: true,
+                });
+                return;
+            }
+        }
+    }
+}
+
+impl SettleHandle for ReplicaHandle {
+    fn wait(self) -> Result<Response> {
+        ReplicaHandle::wait(self)
+    }
+
+    fn try_wait(&self) -> Option<Result<Response>> {
+        ReplicaHandle::try_wait(self)
+    }
+}
+
+fn proto_for(protos: &[Arc<CompiledModel>], replica: usize) -> &Arc<CompiledModel> {
+    protos.get(replica).unwrap_or(&protos[0])
+}
+
+fn slot_state(shared: &SetShared, replica: usize) -> ReplicaState {
+    *lock(&shared.slots[replica].state)
+}
+
+fn slot_pool(shared: &SetShared, replica: usize) -> Option<Arc<ServerPool>> {
+    let slot = shared.slots.get(replica)?;
+    let inner = lock(&slot.inner);
+    inner.as_ref().map(|r| Arc::clone(&r.pool))
+}
+
+/// Healthy candidates in dispatch order: the model's affinity subset
+/// sorted by load (queued + in-flight, round-robin rotated tie-break),
+/// then the remaining healthy replicas likewise — so backpressure spills
+/// inside the subset first.
+fn candidate_order(shared: &SetShared, model: &str, avoid: &[usize]) -> Vec<usize> {
+    let n = shared.slots.len();
+    let rot = shared.rr.fetch_add(1, Ordering::Relaxed) % n.max(1);
+    let score = |i: usize| -> Option<(usize, usize, usize)> {
+        if avoid.contains(&i) || slot_state(shared, i) != ReplicaState::Healthy {
+            return None;
+        }
+        let pool = slot_pool(shared, i)?;
+        Some((pool.queue_len() + pool.in_flight(), (n + i - rot) % n, i))
+    };
+    let subset: BTreeSet<usize> = affinity_subset(model, n, shared.cfg.affinity_spread)
+        .into_iter()
+        .collect();
+    let mut inside: Vec<_> = subset.iter().filter_map(|&i| score(i)).collect();
+    let mut outside: Vec<_> = (0..n)
+        .filter(|i| !subset.contains(i))
+        .filter_map(score)
+        .collect();
+    inside.sort_unstable();
+    outside.sort_unstable();
+    inside
+        .into_iter()
+        .chain(outside)
+        .map(|(_, _, i)| i)
+        .collect()
+}
+
+/// Errors that indicate the *replica* (not the request) is sick.
+fn is_sick(e: &Error) -> bool {
+    matches!(
+        e,
+        Error::WorkerPanic { .. }
+            | Error::PoolShutdown
+            | Error::Transient(_)
+            | Error::Xla(_)
+            | Error::Coordinator(_)
+    )
+}
+
+fn note_outcome(shared: &SetShared, replica: usize, outcome: &Result<Response>) {
+    let Some(slot) = shared.slots.get(replica) else {
+        return;
+    };
+    match outcome {
+        Ok(_) => slot.consecutive_failures.store(0, Ordering::Relaxed),
+        Err(e) if is_sick(e) => {
+            let streak = slot.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1;
+            if streak >= shared.cfg.health.failure_threshold {
+                let mut st = lock(&slot.state);
+                if *st == ReplicaState::Healthy {
+                    *st = ReplicaState::Unhealthy;
+                }
+            }
+        }
+        // Per-request failures (bad input, expired deadline, open breaker)
+        // say nothing about the replica.
+        Err(_) => {}
+    }
+}
+
+/// Build one replica incarnation: fresh registry (own slab cache), every
+/// cataloged model re-compiled for this replica, fresh pool (wrapped if
+/// the replica has a chaos wrap).
+fn build_replica(shared: &SetShared, replica: usize) -> Result<ReplicaInner> {
+    let registry = Arc::new(ModelRegistry::with_budget(shared.cfg.slab_budget));
+    {
+        let catalog = lock(&shared.catalog);
+        for (id, protos) in catalog.iter() {
+            registry.register(id.clone(), proto_for(protos, replica).respin()?)?;
+        }
+    }
+    let wrap = shared.wraps.get(replica).cloned().flatten();
+    let pool = ServerPool::serve_with_wrap(
+        Arc::clone(&registry),
+        shared.cfg.backend.clone(),
+        shared.cfg.pool.clone(),
+        wrap,
+    )?;
+    Ok(ReplicaInner {
+        pool: Arc::new(pool),
+        registry,
+    })
+}
+
+/// Serve [`HealthPolicy::warmup_requests`] timing requests per model so a
+/// rebuilt replica has planned every model (and proven its workers
+/// execute) before rejoining dispatch.
+fn warm_up(shared: &SetShared, inner: &ReplicaInner) -> Result<()> {
+    for id in inner.registry.ids() {
+        for _ in 0..shared.cfg.health.warmup_requests {
+            inner
+                .pool
+                .submit(Request::for_model(0, id.clone(), Vec::new()))?
+                .wait()?;
+        }
+    }
+    Ok(())
+}
+
+/// Retire a pool incarnation: reclaim sole ownership (dispatchers hold the
+/// `Arc` only across one submission) and shut it down, harvesting its
+/// metrics. If a holdout clone persists, dropping ours lets `ServerPool`'s
+/// `Drop` close + join when the last clone releases — the metrics are
+/// forfeited but every request still settles.
+fn retire_pool(pool: Arc<ServerPool>) -> Option<PoolMetrics> {
+    let mut pool = pool;
+    for _ in 0..200 {
+        match Arc::try_unwrap(pool) {
+            Ok(p) => return p.shutdown().ok(),
+            Err(still_shared) => {
+                pool = still_shared;
+                thread::sleep(Duration::from_micros(500));
+            }
+        }
+    }
+    None
+}
+
+fn rebuild(shared: &SetShared, replica: usize) {
+    let slot = &shared.slots[replica];
+    *lock(&slot.state) = ReplicaState::Rebuilding;
+    // Take the inner out (and drop the lock) before retiring: retire joins
+    // worker threads, and build_replica takes the catalog lock — neither
+    // may happen under the slot lock (lock order: catalog → inner).
+    let old = lock(&slot.inner).take();
+    if let Some(old) = old {
+        if let Some(m) = retire_pool(old.pool) {
+            lock(&shared.retired_metrics).push(m);
+        }
+        // The old registry (and its slab cache) drops here: a rebuilt
+        // replica restarts with a cold, provably uncorrupted cache.
+    }
+    match build_replica(shared, replica) {
+        Ok(inner) => {
+            let warmed = warm_up(shared, &inner);
+            *lock(&slot.inner) = Some(inner);
+            match warmed {
+                Ok(()) => {
+                    slot.consecutive_failures.store(0, Ordering::Relaxed);
+                    *lock(&slot.state) = ReplicaState::Healthy;
+                    shared.rebuilds.fetch_add(1, Ordering::Relaxed);
+                }
+                // Warm-up failed (e.g. the fault is still armed): stay
+                // unhealthy and let the next tick retry the rebuild.
+                Err(_) => *lock(&slot.state) = ReplicaState::Unhealthy,
+            }
+        }
+        Err(_) => *lock(&slot.state) = ReplicaState::Unhealthy,
+    }
+}
+
+fn supervise(shared: &Arc<SetShared>) {
+    loop {
+        {
+            let (stop, cv) = &shared.wake;
+            let mut guard = lock(stop);
+            if !*guard {
+                let (g, _) = cv
+                    .wait_timeout(guard, shared.cfg.health.supervisor_tick)
+                    .unwrap_or_else(PoisonError::into_inner);
+                guard = g;
+            }
+            if *guard {
+                return;
+            }
+        }
+        for i in 0..shared.slots.len() {
+            match slot_state(shared, i) {
+                ReplicaState::Healthy => {
+                    // A pool that has lost workers with no restart budget
+                    // left can only shrink further — retire and rebuild it
+                    // before it hits zero.
+                    if let Some(pool) = slot_pool(shared, i) {
+                        if pool.live_workers() < pool.configured_workers()
+                            && pool.restart_budget_left() == 0
+                        {
+                            *lock(&shared.slots[i].state) = ReplicaState::Unhealthy;
+                            rebuild(shared, i);
+                        }
+                    }
+                }
+                ReplicaState::Unhealthy => rebuild(shared, i),
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{DesignPoint, Platform};
+    use crate::coordinator::breaker::BreakerConfig;
+    use crate::engine::fault::{FaultPlan, FaultyBackend};
+    use crate::engine::{Engine, EnginePlan, Precision};
+    use crate::workload::{Layer, Network, RatioProfile};
+    use std::sync::atomic::AtomicBool;
+
+    fn tiny_plan(name: &str) -> EnginePlan {
+        let net = Network {
+            name: name.into(),
+            layers: vec![
+                Layer::conv("stem", 8, 8, 4, 8, 3, 1, 1, false),
+                Layer::conv("c1", 8, 8, 8, 8, 3, 1, 1, true),
+            ],
+        };
+        let profile = RatioProfile::uniform(&net, 0.5);
+        Engine::builder()
+            .platform(Platform::z7045())
+            .bandwidth(4)
+            .design_point(DesignPoint::new(8, 4, 8, 4))
+            .network(net)
+            .profile(profile)
+            .plan()
+            .unwrap()
+    }
+
+    fn compiled(name: &str) -> CompiledModel {
+        CompiledModel::from_plan_at(tiny_plan(name), Precision::F32).unwrap()
+    }
+
+    fn input() -> Vec<f32> {
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(11);
+        rng.normal_vec(8 * 8 * 4)
+    }
+
+    fn base_cfg(replicas: usize) -> ReplicaConfig {
+        let mut cfg = ReplicaConfig::new(replicas);
+        cfg.pool = PoolConfig::single_worker();
+        cfg.health.supervisor_tick = Duration::from_millis(2);
+        cfg
+    }
+
+    fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+        let t0 = Instant::now();
+        while !cond() {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "timed out waiting for {what}"
+            );
+            thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        assert!(ReplicaConfig::new(0).validate().is_err());
+        let mut cfg = ReplicaConfig::new(2);
+        cfg.degraded.min_live = 3;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ReplicaConfig::new(2);
+        cfg.health.failure_threshold = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ReplicaConfig::new(2);
+        cfg.hedge = Some(HedgePolicy {
+            deadline_fraction: 0.0,
+            ..Default::default()
+        });
+        assert!(cfg.validate().is_err());
+        // Wrap count must match the replica count.
+        let err = ReplicaSet::start_with_wraps(base_cfg(2), vec![None])
+            .err()
+            .expect("wrap count mismatch must be rejected");
+        assert!(err.to_string().contains("1 wraps for 2 replicas"), "{err}");
+    }
+
+    #[test]
+    fn serves_bit_identical_numerics_across_replicas() {
+        let set = ReplicaSet::start(base_cfg(2)).unwrap();
+        set.register_model("tiny", compiled("tiny")).unwrap();
+        assert_eq!(set.models(), vec!["tiny".to_string()]);
+        assert_eq!(set.live_replicas(), 2);
+
+        // Single-engine reference for the same artifact.
+        let proto = Arc::new(compiled("tiny"));
+        let mut reference = Engine::from_compiled(
+            &proto,
+            &BackendKind::Simulator,
+            &Arc::new(SlabCache::new()),
+        )
+        .unwrap();
+        let want = reference.infer(&input()).unwrap().output;
+        assert!(!want.is_empty());
+
+        for i in 0..6u64 {
+            let r = set
+                .submit(Request::for_model(i, "tiny", input()))
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(r.output, want, "request {i} diverged from reference");
+        }
+        // Pinned submission reaches both replicas and agrees too.
+        for replica in 0..2 {
+            let r = set
+                .submit_to(replica, Request::for_model(99, "tiny", input()))
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(r.output, want, "replica {replica} diverged");
+        }
+        let m = set.shutdown().unwrap();
+        assert_eq!(m.rebuilds, 0);
+        assert_eq!(m.hedges, 0);
+        let merged = m.merged();
+        assert_eq!(merged.count(), 8);
+        // Both replicas served: their tagged series are non-empty.
+        assert!(merged.model_count("replica0") > 0);
+        assert!(merged.model_count("replica1") > 0);
+
+        // Duplicate registration is rejected.
+        let set = ReplicaSet::start(base_cfg(1)).unwrap();
+        set.register_model("m", compiled("m")).unwrap();
+        assert!(set.register_model("m", compiled("m")).is_err());
+        set.evict_model("m").unwrap();
+        assert!(set.evict_model("m").is_err(), "already evicted");
+    }
+
+    #[test]
+    fn drain_rejoin_cycle_loses_no_requests() {
+        let set = ReplicaSet::start(base_cfg(2)).unwrap();
+        set.register_model("tiny", compiled("tiny")).unwrap();
+        let mut handles = Vec::new();
+        for i in 0..4u64 {
+            handles.push(set.submit(Request::for_model(i, "tiny", input())).unwrap());
+        }
+        set.drain(0, Duration::from_secs(10)).unwrap();
+        assert_eq!(set.states()[0], ReplicaState::Drained);
+        assert_eq!(set.live_replicas(), 1);
+        // Dispatch avoids the drained replica but keeps serving.
+        for i in 10..14u64 {
+            handles.push(set.submit(Request::for_model(i, "tiny", input())).unwrap());
+        }
+        set.rejoin(0).unwrap();
+        assert_eq!(set.states()[0], ReplicaState::Healthy);
+        assert_eq!(set.live_replicas(), 2);
+        for h in handles {
+            h.wait().expect("drain/rejoin must lose zero requests");
+        }
+        // Draining an out-of-range replica fails typed.
+        assert!(set.drain(7, Duration::from_millis(1)).is_err());
+        assert!(set.rejoin(7).is_err());
+        // Rejoining a healthy replica is a state error.
+        assert!(set.rejoin(0).is_err());
+        set.shutdown().unwrap();
+    }
+
+    #[test]
+    fn degraded_admission_sheds_by_priority_class() {
+        let mut cfg = base_cfg(2);
+        cfg.degraded = DegradedPolicy {
+            min_live: 2,
+            keep_priority: 5,
+        };
+        let set = ReplicaSet::start(cfg).unwrap();
+        set.register_model("tiny", compiled("tiny")).unwrap();
+
+        // Full capacity: everything is admitted.
+        set.submit(Request::for_model(0, "tiny", Vec::new()))
+            .unwrap()
+            .wait()
+            .unwrap();
+
+        // One replica drained ⇒ live 1 < min_live 2: low priority shed.
+        set.drain(0, Duration::from_secs(10)).unwrap();
+        let err = set
+            .submit(Request::for_model(1, "tiny", Vec::new()))
+            .err()
+            .expect("low priority must be shed while degraded");
+        match err {
+            Error::DegradedCapacity { live, configured } => {
+                assert_eq!((live, configured), (1, 2));
+            }
+            other => panic!("wrong error type: {other}"),
+        }
+        assert!(err.is_transient(), "shed requests are retryable");
+        // High priority still flows.
+        set.submit(Request::for_model(2, "tiny", Vec::new()).with_priority(7))
+            .unwrap()
+            .wait()
+            .unwrap();
+
+        // Zero live replicas: everything is shed, even high priority.
+        set.drain(1, Duration::from_secs(10)).unwrap();
+        let err = set
+            .submit(Request::for_model(3, "tiny", Vec::new()).with_priority(200))
+            .err()
+            .expect("no live replica can admit anything");
+        assert!(
+            matches!(err, Error::DegradedCapacity { live: 0, configured: 2 }),
+            "{err}"
+        );
+        assert!(set.degraded_shed() >= 2);
+
+        // Rejoin restores admission.
+        set.rejoin(0).unwrap();
+        set.rejoin(1).unwrap();
+        set.submit(Request::for_model(4, "tiny", Vec::new()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        set.shutdown().unwrap();
+    }
+
+    #[test]
+    fn breaker_state_is_replica_scoped() {
+        let mut cfg = base_cfg(2);
+        cfg.pool.retries = 0;
+        cfg.pool.breaker = Some(BreakerConfig {
+            failure_threshold: 2,
+            open_for: Duration::from_secs(60),
+            half_open_probes: 1,
+        });
+        // Keep the supervisor from rebuilding replica 0 mid-test (pinned
+        // submissions bypass health accounting, but stay conservative).
+        cfg.health.failure_threshold = u32::MAX;
+        // Replica 0's backends fail every execution; replica 1 is clean.
+        let wrap: BackendWrap = Arc::new(|backend, worker| {
+            let plan = FaultPlan {
+                transient: 1.0,
+                ..FaultPlan::none()
+            };
+            Box::new(FaultyBackend::new(backend, plan.for_worker(worker)))
+        });
+        let set = ReplicaSet::start_with_wraps(cfg, vec![Some(wrap), None]).unwrap();
+        set.register_model("tiny", compiled("tiny")).unwrap();
+
+        // Trip replica 0's breaker: two failed executions at threshold 2.
+        for i in 0..2u64 {
+            let err = set
+                .submit_to(0, Request::for_model(i, "tiny", Vec::new()))
+                .unwrap()
+                .wait()
+                .err()
+                .expect("replica 0 must fail every execution");
+            assert!(matches!(err, Error::Transient(_)), "{err}");
+        }
+        // Now the breaker rejects at admission.
+        let err = set
+            .submit_to(0, Request::for_model(9, "tiny", Vec::new()))
+            .err()
+            .expect("replica 0's breaker must be open");
+        assert!(matches!(err, Error::CircuitOpen { .. }), "{err}");
+        assert_eq!(
+            set.breaker_states(0).unwrap().get("tiny").copied(),
+            Some(BreakerState::Open)
+        );
+
+        // Replica 1 serves the same model untouched: breakers are
+        // replica-scoped, not pool-global.
+        set.submit_to(1, Request::for_model(10, "tiny", Vec::new()))
+            .unwrap()
+            .wait()
+            .expect("replica 1 must be unaffected");
+        assert_ne!(
+            set.breaker_states(1).unwrap().get("tiny").copied(),
+            Some(BreakerState::Open),
+            "replica 1's breaker must not share replica 0's state"
+        );
+        set.shutdown().unwrap();
+    }
+
+    #[test]
+    fn supervisor_rebuilds_a_replica_with_exhausted_restart_budget() {
+        let mut cfg = base_cfg(2);
+        cfg.pool.restart_budget = 0;
+        cfg.pool.retries = 0;
+        // While armed, replica 0's (sole) worker panics on every execution.
+        let armed = Arc::new(AtomicBool::new(true));
+        let armed_in_wrap = Arc::clone(&armed);
+        let wrap: BackendWrap = Arc::new(move |backend, worker| {
+            if armed_in_wrap.load(Ordering::SeqCst) {
+                let plan = FaultPlan {
+                    panic_p: 1.0,
+                    ..FaultPlan::none()
+                };
+                Box::new(FaultyBackend::new(backend, plan.for_worker(worker)))
+            } else {
+                backend
+            }
+        });
+        let set = ReplicaSet::start_with_wraps(cfg, vec![Some(wrap), None]).unwrap();
+        set.register_model("tiny", compiled("tiny")).unwrap();
+
+        // Kill replica 0's worker: the panic is caught, the request fails
+        // typed, and with budget 0 the pool permanently shrinks to zero
+        // live workers.
+        let err = set
+            .submit_to(0, Request::for_model(0, "tiny", Vec::new()))
+            .unwrap()
+            .wait()
+            .err()
+            .expect("armed replica must fail the request");
+        assert!(matches!(err, Error::WorkerPanic { .. }), "{err}");
+
+        // Disarm so the rebuilt incarnation is clean, then let the
+        // supervisor notice the dead pool and rebuild it.
+        armed.store(false, Ordering::SeqCst);
+        wait_until("supervisor rebuild of replica 0", || {
+            set.rebuilds() >= 1 && set.states()[0] == ReplicaState::Healthy
+        });
+        assert_eq!(set.live_replicas(), 2);
+
+        // The rebuilt replica serves real numerics again, bit-identical
+        // to the untouched replica.
+        let a = set
+            .submit_to(0, Request::for_model(1, "tiny", input()))
+            .unwrap()
+            .wait()
+            .expect("rebuilt replica must serve");
+        let b = set
+            .submit_to(1, Request::for_model(2, "tiny", input()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(a.output, b.output, "rebuild must preserve numerics");
+
+        let m = set.shutdown().unwrap();
+        assert!(m.rebuilds >= 1);
+        // ≥ 1, not == 1: the supervisor may have attempted a rebuild while
+        // the fault was still armed, retiring extra panicked incarnations.
+        assert!(m.panicked_workers() >= 1, "retired metrics preserved");
+        assert!(!m.retired.is_empty());
+        set_drop_is_clean();
+    }
+
+    /// Dropping a set without shutdown must not hang or leak panics.
+    fn set_drop_is_clean() {
+        let set = ReplicaSet::start(base_cfg(1)).unwrap();
+        set.register_model("tiny", compiled("tiny")).unwrap();
+        set.submit(Request::for_model(0, "tiny", Vec::new()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        drop(set);
+    }
+
+    /// Backend decorator that parks every execution until a gate opens —
+    /// deterministic "stuck replica" for hedging tests.
+    struct GatedBackend {
+        inner: Box<dyn crate::engine::ExecutionBackend>,
+        gate: Arc<(Mutex<bool>, Condvar)>,
+    }
+
+    impl crate::engine::ExecutionBackend for GatedBackend {
+        fn name(&self) -> &'static str {
+            "gated"
+        }
+
+        fn plan(&mut self, plan: &EnginePlan) -> Result<()> {
+            self.inner.plan(plan)
+        }
+
+        fn preload(&mut self, model: &Arc<CompiledModel>) -> Result<()> {
+            self.inner.preload(model)
+        }
+
+        fn execute_layer(
+            &mut self,
+            idx: usize,
+            input: &[f32],
+        ) -> Result<crate::engine::LayerOutcome> {
+            let (open, cv) = &*self.gate;
+            let mut g = lock(open);
+            while !*g {
+                g = cv
+                    .wait_timeout(g, Duration::from_millis(50))
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .0;
+            }
+            drop(g);
+            self.inner.execute_layer(idx, input)
+        }
+
+        fn finish(&mut self) -> Result<crate::engine::ExecutionReport> {
+            self.inner.finish()
+        }
+    }
+
+    #[test]
+    fn hedged_retry_rescues_a_stalled_request() {
+        let mut cfg = base_cfg(2);
+        cfg.hedge = Some(HedgePolicy {
+            deadline_fraction: 0.01,
+            min_wait: Duration::from_millis(1),
+        });
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let gate_in_wrap = Arc::clone(&gate);
+        // Replica 0 stalls every execution until the gate opens.
+        let wrap: BackendWrap = Arc::new(move |backend, _worker| {
+            Box::new(GatedBackend {
+                inner: backend,
+                gate: Arc::clone(&gate_in_wrap),
+            })
+        });
+        let set = ReplicaSet::start_with_wraps(cfg, vec![Some(wrap), None]).unwrap();
+        set.register_model("tiny", compiled("tiny")).unwrap();
+
+        // Both replicas idle ⇒ the load tie-break with rotation 0 picks
+        // replica 0 deterministically for the first dispatch.
+        let handle = set
+            .submit(
+                Request::for_model(0, "tiny", input())
+                    .with_timeout(Duration::from_secs(2)),
+            )
+            .unwrap();
+        let r = handle.wait().expect("the hedge must rescue the request");
+        assert!(!r.output.is_empty());
+        assert_eq!(set.hedges(), 1, "exactly one hedge leg launched");
+        assert_eq!(set.hedge_wins(), 1, "the hedge leg must have won");
+
+        // Release the stalled leg so replica 0's worker can finish (its
+        // response is discarded — the winning leg already settled).
+        {
+            let (open, cv) = &*gate;
+            *lock(open) = true;
+            cv.notify_all();
+        }
+        set.shutdown().unwrap();
+    }
+}

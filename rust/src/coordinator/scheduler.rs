@@ -82,6 +82,30 @@ pub fn estimated_queue_delay(est_service_s: f64, workers: usize) -> Duration {
     Duration::from_secs_f64(s.max(0.0))
 }
 
+/// Model-affinity placement: the (deterministic) subset of `replicas`
+/// replica indices a model's traffic is pinned to. The subset is `spread`
+/// consecutive indices (mod `replicas`) starting from an FNV-1a hash of
+/// the model name, so (a) a hot model's slabs warm at most `spread`
+/// replica caches instead of churning all of them, (b) distinct models
+/// land on rotated subsets that even out load, and (c) every dispatcher
+/// computes the same subset with no coordination. `spread == 0` (or ≥ the
+/// replica count) means no affinity — every replica serves the model.
+pub fn affinity_subset(model: &str, replicas: usize, spread: usize) -> Vec<usize> {
+    if replicas == 0 {
+        return Vec::new();
+    }
+    if spread == 0 || spread >= replicas {
+        return (0..replicas).collect();
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in model.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let primary = (h % replicas as u64) as usize;
+    (0..spread).map(|i| (primary + i) % replicas).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +152,29 @@ mod tests {
         assert!((d.as_secs_f64() - 1.0).abs() < 1e-9);
         // Degenerate worker counts never divide by zero or go negative.
         assert_eq!(estimated_queue_delay(-1.0, 0), Duration::ZERO);
+    }
+
+    #[test]
+    fn affinity_subsets_are_deterministic_and_sized() {
+        let a = affinity_subset("resnet18", 4, 2);
+        let b = affinity_subset("resnet18", 4, 2);
+        assert_eq!(a, b, "placement must be a pure function of the name");
+        assert_eq!(a.len(), 2);
+        assert!(a.iter().all(|&r| r < 4));
+        // Consecutive (mod n) so a replica loss degrades to the neighbour.
+        assert_eq!(a[1], (a[0] + 1) % 4);
+        // spread 0 or >= replicas disables affinity.
+        assert_eq!(affinity_subset("resnet18", 4, 0), vec![0, 1, 2, 3]);
+        assert_eq!(affinity_subset("resnet18", 4, 9), vec![0, 1, 2, 3]);
+        assert!(affinity_subset("resnet18", 0, 2).is_empty());
+        // Different models spread over different primaries (not a proof,
+        // but these three names must not all collide on 8 replicas).
+        let primaries: std::collections::BTreeSet<usize> =
+            ["resnet18", "squeezenet", "vgg16"]
+                .iter()
+                .map(|m| affinity_subset(m, 8, 1)[0])
+                .collect();
+        assert!(primaries.len() > 1, "hash must spread models: {primaries:?}");
     }
 
     #[test]

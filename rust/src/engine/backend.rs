@@ -207,3 +207,34 @@ pub trait ExecutionBackend {
     /// afterwards.
     fn finish(&mut self) -> Result<ExecutionReport>;
 }
+
+/// Forwarding impl so a boxed backend is itself a backend: decorators that
+/// are generic over `B: ExecutionBackend` (e.g.
+/// [`FaultyBackend`](crate::engine::fault::FaultyBackend)) can wrap the
+/// `Box<dyn ExecutionBackend>` a factory hands out — the seam replicated
+/// serving's per-replica chaos wraps are built on.
+impl ExecutionBackend for Box<dyn ExecutionBackend> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn plan(&mut self, plan: &EnginePlan) -> Result<()> {
+        (**self).plan(plan)
+    }
+
+    fn preload(&mut self, model: &Arc<CompiledModel>) -> Result<()> {
+        (**self).preload(model)
+    }
+
+    fn execute_layer(&mut self, idx: usize, input: &[f32]) -> Result<LayerOutcome> {
+        (**self).execute_layer(idx, input)
+    }
+
+    fn execute_layer_batch(&mut self, idx: usize, inputs: &[&[f32]]) -> Result<Vec<LayerOutcome>> {
+        (**self).execute_layer_batch(idx, inputs)
+    }
+
+    fn finish(&mut self) -> Result<ExecutionReport> {
+        (**self).finish()
+    }
+}

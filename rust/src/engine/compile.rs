@@ -151,6 +151,17 @@ impl CompiledModel {
         self.generation
     }
 
+    /// Re-derive a fresh artifact from this one's plan and precision —
+    /// generation 0, lazy α state unfit. Compilation is deterministic (the
+    /// plan embeds σ and the profile; seeds are pure functions of the
+    /// network), so the respin serves **bit-identical numerics**: this is
+    /// how a replica supervisor rebuilds a dead replica's models from the
+    /// survivors' catalog entries. Registering the respin stamps it a new
+    /// generation, so it can never adopt the dead incarnation's slabs.
+    pub fn respin(&self) -> Result<Self> {
+        Self::from_plan_at(self.plan.clone(), self.precision)
+    }
+
     /// Stamp a registration generation into the artifact and every
     /// [`WeightsKey`] it owns. Called by
     /// [`ModelRegistry::register`](crate::coordinator::registry::ModelRegistry::register)

@@ -83,6 +83,16 @@ impl FaultPlan {
         self
     }
 
+    /// The same plan re-seeded for one replica (a different mixing constant
+    /// than [`for_worker`](Self::for_worker), so replica 1's worker 0 and
+    /// replica 0's worker 1 draw decorrelated schedules even though both
+    /// mixes start from the same base seed).
+    #[must_use]
+    pub fn for_replica(mut self, replica: usize) -> Self {
+        self.seed ^= (replica as u64 + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        self
+    }
+
     fn validate(&self) {
         debug_assert!(
             [

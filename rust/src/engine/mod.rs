@@ -134,6 +134,24 @@ impl Engine {
         })
     }
 
+    /// Like [`from_compiled`](Self::from_compiled), but over a
+    /// caller-provided (possibly decorated) backend: the backend is planned
+    /// with the artifact's plan and handed the artifact. This is the seam
+    /// replicated serving uses to wrap a replica's backends (e.g. in
+    /// [`FaultyBackend`](crate::engine::fault::FaultyBackend) for chaos
+    /// testing) without touching the production construction path.
+    pub fn from_compiled_with(
+        model: &Arc<CompiledModel>,
+        mut backend: Box<dyn ExecutionBackend>,
+    ) -> Result<Self> {
+        backend.plan(model.plan())?;
+        backend.preload(model)?;
+        Ok(Self {
+            plan: model.plan().clone(),
+            backend,
+        })
+    }
+
     /// Swap the active model on this engine **between requests**: re-plan
     /// the backend with the artifact's plan and hand it the artifact.
     /// This is the model-switch primitive of multi-model serving — the
@@ -313,8 +331,10 @@ pub struct EngineBuilder {
 /// datapath: the analytical model is precision-neutral (cycle counts are
 /// word-length independent on the modelled fixed-point engine) and the
 /// PJRT runtime executes a fixed AOT-compiled f32 artifact, so `I8` there
-/// is a configuration error.
-fn make_backend(
+/// is a configuration error. `pub(crate)` so the registry's worker
+/// executor can construct a raw backend to decorate (the chaos-wrap seam)
+/// before planning it via [`Engine::from_compiled_with`].
+pub(crate) fn make_backend(
     kind: &BackendKind,
     cache: &Arc<SlabCache>,
     precision: Precision,

@@ -57,11 +57,13 @@ pub struct WeightsKey {
     /// Registration generation. Every
     /// [`ModelRegistry::register`](crate::coordinator::registry::ModelRegistry::register)
     /// stamps the artifact's keys with a fresh process-wide generation, so
-    /// a batch still in flight when its model is evicted re-inserts slabs
-    /// under the *old* generation — they can never alias a later
-    /// registration of the same model id (the evict-vs-in-flight
-    /// reinsertion race). Engines without a registry artifact use
-    /// generation 0.
+    /// a batch still in flight when its model is evicted carries the *old*
+    /// generation — it can never alias a later registration of the same
+    /// model id, and the cache refuses to (re)insert slabs whose
+    /// generation has been retired via
+    /// [`SlabCache::retire_generation`], closing the evict-vs-in-flight
+    /// reinsertion race at insert time. Engines without a registry
+    /// artifact use generation 0 (never retired).
     pub generation: u64,
     /// Numeric precision the slabs are generated at. Part of the key so an
     /// f32 and an i8 compilation of the *same* network can coexist in one
@@ -240,6 +242,14 @@ struct SlabMap {
     entries: HashMap<SlabKey, SlabEntry>,
     /// Monotonic access clock for LRU ordering.
     tick: u64,
+    /// Highest retired registration generation per model name. Inserts
+    /// whose key generation is `<=` the retired watermark are refused
+    /// (the straggler still gets its generated slab back — it just cannot
+    /// re-seed the cache for an evicted model). Lives *inside* the map so
+    /// the retire/insert decision and the map mutation share one lock:
+    /// there is no window where a straggler can slip an old-generation
+    /// slab in between `retire_generation` and the eviction sweep.
+    retired: HashMap<String, u64>,
 }
 
 /// Thread-safe bounded slab store with hit/miss/eviction accounting.
@@ -260,6 +270,9 @@ pub struct SlabCache {
     misses: AtomicU64,
     evictions: AtomicU64,
     corruptions: AtomicU64,
+    /// Inserts refused because the key's generation was retired — each one
+    /// is a straggler batch caught trying to re-seed an evicted model.
+    retired_inserts: AtomicU64,
     resident: AtomicUsize,
     peak_resident: AtomicUsize,
 }
@@ -269,6 +282,7 @@ impl Default for SlabMap {
         Self {
             entries: HashMap::new(),
             tick: 0,
+            retired: HashMap::new(),
         }
     }
 }
@@ -317,6 +331,7 @@ impl SlabCache {
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             corruptions: AtomicU64::new(0),
+            retired_inserts: AtomicU64::new(0),
             resident: AtomicUsize::new(0),
             peak_resident: AtomicUsize::new(0),
         }
@@ -398,6 +413,7 @@ impl SlabCache {
         let data = Arc::new(generate()?);
         let bytes = data.bytes();
         let mut evicted_count = 0u64;
+        let mut refused_retired = false;
         let adopted = {
             let mut m = self.lock();
             m.tick += 1;
@@ -407,6 +423,20 @@ impl SlabCache {
                 // lookup stays counted as a miss — generation work ran).
                 e.last_used = tick;
                 Some(Arc::clone(&e.data))
+            } else if key.layer.generation != 0
+                && m.retired
+                    .get(&key.layer.model)
+                    .is_some_and(|&g| key.layer.generation <= g)
+            {
+                // The model registration this slab belongs to was retired
+                // (evicted) while the generating batch was in flight. Serve
+                // the straggler its own copy but refuse to cache it — an
+                // old-generation slab must never re-seed the cache after
+                // `evict_layer` swept it (the evict-vs-in-flight
+                // reinsertion race). Checked under the same lock that
+                // guards the map, so retire → sweep → refuse is airtight.
+                refused_retired = true;
+                None
             } else {
                 // Evict-before-insert keeps the resident gauge under the
                 // budget at every instant (given each slab individually
@@ -441,7 +471,28 @@ impl SlabCache {
         if evicted_count > 0 {
             self.evictions.fetch_add(evicted_count, Ordering::Relaxed);
         }
+        if refused_retired {
+            self.retired_inserts.fetch_add(1, Ordering::Relaxed);
+        }
         Ok(adopted.unwrap_or(data))
+    }
+
+    /// Retire every registration generation of `model` up to and including
+    /// `generation`: from this call on, a miss-path insert whose key
+    /// carries a generation `<= generation` for this model is refused (the
+    /// generating caller still gets its slab; the cache just won't keep
+    /// it). Call *before* sweeping the model's slabs with
+    /// [`evict_layer`](Self::evict_layer) — the retire watermark and the
+    /// map share one lock, so any straggler insert either lands before the
+    /// watermark (and is swept) or after (and is refused). Watermarks only
+    /// move forward; generation 0 (unregistered engines) is never retired.
+    pub fn retire_generation(&self, model: &str, generation: u64) {
+        if generation == 0 {
+            return;
+        }
+        let mut m = self.lock();
+        let w = m.retired.entry(model.to_string()).or_insert(0);
+        *w = (*w).max(generation);
     }
 
     /// Drop every slab of one layer (e.g. on model unload or profile
@@ -493,6 +544,14 @@ impl SlabCache {
     /// (or injected chaos) was caught before it reached the PE array.
     pub fn corruptions(&self) -> u64 {
         self.corruptions.load(Ordering::Relaxed)
+    }
+
+    /// Miss-path inserts refused because the key's registration generation
+    /// was retired (see [`retire_generation`](Self::retire_generation)).
+    /// Each one is a straggler batch that would otherwise have re-seeded
+    /// slabs for an evicted model.
+    pub fn retired_inserts(&self) -> u64 {
+        self.retired_inserts.load(Ordering::Relaxed)
     }
 
     /// Chaos hook: flip one bit of one resident slab's payload *without*
@@ -791,6 +850,65 @@ mod tests {
         // Evicting the old generation leaves the new one resident.
         assert_eq!(cache.evict_layer(&layer_key(0).with_generation(1)), 1);
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn retired_generation_insert_is_refused_at_insert_time() {
+        // The full evict-vs-in-flight race, closed at insert time: retire
+        // the straggler's generation (as ModelRegistry::evict does) and a
+        // subsequent old-generation insert must NOT land in the cache —
+        // not even transiently, waiting for LRU pressure to age it out.
+        let cache = SlabCache::new();
+        let old = SlabKey {
+            layer: layer_key(0).with_generation(1),
+            col_tile: 0,
+        };
+        cache.retire_generation("net", 1);
+        // The straggler still gets its generated slab back (its batch
+        // completes with correct numerics)...
+        let v = slab(&cache, old.clone(), 1.0, 4);
+        assert_eq!(v.f32_data(), &[1.0; 4]);
+        // ...but the cache refused to keep it.
+        assert_eq!(cache.len(), 0, "retired generation must not be cached");
+        assert_eq!(cache.retired_inserts(), 1);
+        assert_eq!(cache.resident_bytes(), 0);
+        // Every repeat attempt regenerates and is refused again.
+        slab(&cache, old, 1.0, 4);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.retired_inserts(), 2);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 0);
+        // A NEWER generation of the same model inserts normally.
+        let fresh = SlabKey {
+            layer: layer_key(0).with_generation(2),
+            col_tile: 0,
+        };
+        slab(&cache, fresh, 2.0, 4);
+        assert_eq!(cache.len(), 1, "newer generation is admitted");
+        // Watermarks only move forward: retiring an older generation after
+        // a newer one is a no-op for the newer one.
+        cache.retire_generation("net", 1);
+        cache.retire_generation("net", 2);
+        assert_eq!(cache.evict_layer(&layer_key(0).with_generation(2)), 1);
+        let fresh2 = SlabKey {
+            layer: layer_key(0).with_generation(2),
+            col_tile: 1,
+        };
+        slab(&cache, fresh2, 3.0, 4);
+        assert_eq!(cache.len(), 0, "gen 2 is now retired too");
+        assert_eq!(cache.retired_inserts(), 3);
+    }
+
+    #[test]
+    fn generation_zero_is_never_retired() {
+        // Engines without a registry artifact key slabs at generation 0;
+        // retirement must never touch them.
+        let cache = SlabCache::new();
+        cache.retire_generation("net", 0); // no-op by contract
+        cache.retire_generation("net", 5);
+        slab(&cache, key(0, 0), 4.0, 4); // layer_key() is generation 0
+        assert_eq!(cache.len(), 1, "generation-0 slabs are always admitted");
+        assert_eq!(cache.retired_inserts(), 0);
     }
 
     #[test]

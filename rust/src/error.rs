@@ -107,6 +107,18 @@ pub enum Error {
     /// chaos, ...): retrying the same request is expected to succeed.
     /// The pool retries these automatically with jittered backoff.
     Transient(String),
+
+    /// Replicated serving is running below its configured capacity floor
+    /// (replicas unhealthy, draining, or rebuilding) and degraded-mode
+    /// admission shed this request by priority class rather than letting
+    /// queues grow unboundedly on the surviving replicas. Capacity heals
+    /// as the supervisor rebuilds replicas — back off and retry.
+    DegradedCapacity {
+        /// Replicas currently live (healthy and accepting dispatch).
+        live: usize,
+        /// Replicas the set was configured with.
+        configured: usize,
+    },
 }
 
 impl std::fmt::Display for Error {
@@ -167,6 +179,12 @@ impl std::fmt::Display for Error {
                 retry_after.as_secs_f64() * 1e3
             ),
             Error::Transient(s) => write!(f, "transient backend fault (retryable): {s}"),
+            Error::DegradedCapacity { live, configured } => write!(
+                f,
+                "serving capacity degraded: {live} of {configured} replicas live \
+                 (below the admission floor); request shed by priority class — \
+                 back off and retry while the supervisor rebuilds"
+            ),
         }
     }
 }
@@ -180,7 +198,10 @@ impl Error {
     pub fn is_transient(&self) -> bool {
         matches!(
             self,
-            Error::Transient(_) | Error::QueueFull | Error::Overloaded { .. }
+            Error::Transient(_)
+                | Error::QueueFull
+                | Error::Overloaded { .. }
+                | Error::DegradedCapacity { .. }
         )
     }
 }
@@ -246,6 +267,12 @@ mod tests {
         assert!(open.to_string().contains("250.0 ms"), "{open}");
         let t = Error::Transient("injected DMA hiccup".into());
         assert!(t.to_string().contains("retryable"), "{t}");
+        let deg = Error::DegradedCapacity {
+            live: 1,
+            configured: 3,
+        };
+        assert!(deg.to_string().contains("1 of 3 replicas"), "{deg}");
+        assert!(deg.to_string().contains("shed by priority"), "{deg}");
     }
 
     #[test]
@@ -255,6 +282,11 @@ mod tests {
         assert!(Error::Overloaded {
             queue_delay: std::time::Duration::from_millis(5),
             slo: std::time::Duration::from_millis(1),
+        }
+        .is_transient());
+        assert!(Error::DegradedCapacity {
+            live: 0,
+            configured: 2,
         }
         .is_transient());
         assert!(!Error::PoolShutdown.is_transient());

@@ -34,8 +34,10 @@
 //! * [`coordinator`] — the inference driver: per-layer scheduling, the
 //!   [`ModelRegistry`](coordinator::registry::ModelRegistry) of compiled
 //!   models over one shared slab budget, the model-routed multi-worker
-//!   batched [`ServerPool`](coordinator::pool::ServerPool) and per-model
-//!   metrics.
+//!   batched [`ServerPool`](coordinator::pool::ServerPool), per-model
+//!   metrics, and the replicated serving layer
+//!   ([`ReplicaSet`](coordinator::replica::ReplicaSet): health-supervised
+//!   replicas, drain/rejoin, hedged retries, degraded-mode admission).
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section.
 
@@ -70,6 +72,7 @@ pub mod prelude {
     pub use crate::arch::{DesignPoint, Platform};
     pub use crate::coordinator::pool::{PoolConfig, ServerPool};
     pub use crate::coordinator::registry::ModelRegistry;
+    pub use crate::coordinator::replica::{ReplicaConfig, ReplicaSet};
     pub use crate::coordinator::server::{Request, Response};
     pub use crate::dse::search::DseResult;
     pub use crate::engine::{

@@ -386,3 +386,91 @@ fn breaker_transitions_are_deterministic_under_a_scripted_fault_burst() {
     assert_eq!(pm.panicked_workers, 0);
     assert!(pm.summary().contains("breaker_trips=1"), "{}", pm.summary());
 }
+
+#[test]
+fn restart_budget_exhaustion_shrinks_capacity_but_keeps_serving() {
+    /// Panics on a sentinel input, serves everything else.
+    struct PanicOnSentinel;
+    impl RequestExecutor for PanicOnSentinel {
+        fn execute(&mut self, req: &Request) -> Result<Vec<f32>> {
+            if req.input.first() == Some(&999.0) {
+                panic!("sentinel-triggered executor panic");
+            }
+            Ok(vec![req.id as f32])
+        }
+    }
+
+    fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+        let t0 = std::time::Instant::now();
+        while !cond() {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "timed out waiting for {what}"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    let workers = 2;
+    let cfg = PoolConfig {
+        workers,
+        queue_depth: 64,
+        max_batch: 1,
+        linger: Duration::ZERO,
+        retries: 0,
+        restart_budget: 1,
+        restart_backoff: Duration::from_micros(200),
+        ..PoolConfig::default()
+    };
+    let pool = ServerPool::start(pool_plan(), cfg, |_| PanicOnSentinel).unwrap();
+    assert_eq!(pool.configured_workers(), workers);
+    assert_eq!(pool.restart_budget_left(), 1);
+
+    // First panic: typed error, and the budget pays for a respawn.
+    let err = pool
+        .submit(Request::numeric(0, vec![999.0]))
+        .unwrap()
+        .wait()
+        .err()
+        .expect("sentinel must fail the request");
+    assert!(matches!(err, Error::WorkerPanic { .. }), "got: {err}");
+    wait_until("respawn to restore capacity", || {
+        pool.live_workers() == workers
+    });
+    assert_eq!(pool.restart_budget_left(), 0);
+
+    // Second panic: budget exhausted — capacity shrinks permanently.
+    let err = pool
+        .submit(Request::numeric(1, vec![999.0]))
+        .unwrap()
+        .wait()
+        .err()
+        .expect("second sentinel must fail too");
+    assert!(matches!(err, Error::WorkerPanic { .. }), "got: {err}");
+    wait_until("capacity loss to register", || pool.live_workers() == workers - 1);
+    assert_eq!(pool.restart_budget_left(), 0);
+    assert_eq!(
+        pool.configured_workers(),
+        workers,
+        "configured capacity is immutable; only live capacity shrinks"
+    );
+
+    // The shrunken pool neither hangs nor drops: every request is served
+    // by the surviving worker.
+    let handles: Vec<_> = (10..30u64)
+        .map(|id| pool.submit(Request::numeric(id, vec![1.0])).unwrap())
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait().expect("surviving worker must serve");
+        assert_eq!(r.output, vec![(10 + i) as f32]);
+    }
+    // The in-flight gauge settles via RAII just *after* responses are
+    // delivered, so poll rather than asserting a single snapshot.
+    wait_until("gauges to quiesce after every handle settled", || {
+        pool.queue_len() == 0 && pool.in_flight() == 0
+    });
+
+    let pm = pool.shutdown().unwrap();
+    assert_eq!(pm.panicked_workers, 2, "both sentinel panics were caught");
+    assert_eq!(pm.worker_restarts, 1, "exactly the budget's worth of respawns");
+}

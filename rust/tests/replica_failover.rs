@@ -1,0 +1,354 @@
+//! Seeded replica-failover soak: kill one of N replicas mid-stream and
+//! hold the replicated-serving claims:
+//!
+//! * **Every request settles typed-or-correct** — a request caught on the
+//!   dying replica either completes (rescued by a hedge leg) or fails with
+//!   a typed error; nothing hangs, nothing is silently dropped.
+//! * **Bit-identical numerics** — every successful response equals the
+//!   single-engine reference output, across replicas, across the outage,
+//!   and across supervisor rebuilds ([`CompiledModel::respin`] is
+//!   deterministic).
+//! * **Capacity is restored** — the supervisor notices the dead replica
+//!   (restart budget exhausted, live workers below configured), rebuilds
+//!   it from the model catalog, and returns the set to N live replicas.
+//! * **Administrative drain/rejoin loses nothing** — a drain → rejoin
+//!   cycle under open-loop traffic completes with zero failed requests.
+//!
+//! Set `CHAOS_SOAK=1` for a longer run (CI does); the default is sized
+//! for the regular test suite.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::coordinator::pool::PoolConfig;
+use unzipfpga::coordinator::registry::BackendWrap;
+use unzipfpga::coordinator::replica::{
+    HedgePolicy, ReplicaConfig, ReplicaSet, ReplicaState,
+};
+use unzipfpga::coordinator::server::Request;
+use unzipfpga::coordinator::traffic::{ArrivalProcess, RequestClass, TrafficSpec};
+use unzipfpga::engine::fault::{FaultPlan, FaultyBackend};
+use unzipfpga::engine::{
+    BackendKind, CompiledModel, Engine, EnginePlan, ExecutionBackend, ExecutionReport,
+    LayerOutcome, Precision, SlabCache,
+};
+use unzipfpga::error::Result;
+use unzipfpga::util::prng::Xoshiro256;
+use unzipfpga::workload::{Layer, Network, RatioProfile};
+
+fn soak() -> bool {
+    std::env::var("CHAOS_SOAK").as_deref() == Ok("1")
+}
+
+fn tiny_plan(name: &str) -> EnginePlan {
+    let net = Network {
+        name: name.into(),
+        layers: vec![
+            Layer::conv("stem", 8, 8, 4, 8, 3, 1, 1, false),
+            Layer::conv("c1", 8, 8, 8, 8, 3, 1, 1, true),
+        ],
+    };
+    let profile = RatioProfile::uniform(&net, 0.5);
+    Engine::builder()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(8, 4, 8, 4))
+        .network(net)
+        .profile(profile)
+        .plan()
+        .unwrap()
+}
+
+fn compiled(name: &str) -> CompiledModel {
+    CompiledModel::from_plan_at(tiny_plan(name), Precision::F32).unwrap()
+}
+
+fn input() -> Vec<f32> {
+    Xoshiro256::seed_from_u64(11).normal_vec(8 * 8 * 4)
+}
+
+/// The fault-free single-engine output the replicated path must match
+/// bit-for-bit.
+fn reference_output() -> Vec<f32> {
+    let proto = Arc::new(compiled("tiny"));
+    let mut engine =
+        Engine::from_compiled(&proto, &BackendKind::Simulator, &Arc::new(SlabCache::new()))
+            .unwrap();
+    engine.infer(&input()).unwrap().output
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "timed out waiting for {what}"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Backend decorator that panics on the next execution once armed — the
+/// deterministic "pull the plug on this replica" lever.
+struct KillSwitch {
+    inner: Box<dyn ExecutionBackend>,
+    armed: Arc<AtomicBool>,
+}
+
+impl ExecutionBackend for KillSwitch {
+    fn name(&self) -> &'static str {
+        "kill-switch"
+    }
+
+    fn plan(&mut self, plan: &EnginePlan) -> Result<()> {
+        self.inner.plan(plan)
+    }
+
+    fn preload(&mut self, model: &Arc<CompiledModel>) -> Result<()> {
+        self.inner.preload(model)
+    }
+
+    fn execute_layer(&mut self, idx: usize, input: &[f32]) -> Result<LayerOutcome> {
+        if self.armed.load(Ordering::SeqCst) {
+            panic!("kill switch fired");
+        }
+        self.inner.execute_layer(idx, input)
+    }
+
+    fn finish(&mut self) -> Result<ExecutionReport> {
+        self.inner.finish()
+    }
+}
+
+/// The headline acceptance soak: arm a kill switch on replica 0, burst
+/// requests through the set while its sole worker dies with an exhausted
+/// restart budget, and require every burst request to complete with the
+/// reference numerics — requests caught on the dying replica are rescued
+/// by failover hedges, later arrivals spill past the closed queue at
+/// dispatch. Then the supervisor restores all three replicas.
+#[test]
+fn replica_kill_mid_stream_settles_every_request_bit_identically() {
+    let n_steady = if soak() { 60 } else { 12 };
+    let n_burst = if soak() { 120 } else { 24 };
+
+    let mut cfg = ReplicaConfig::new(3);
+    cfg.pool = PoolConfig::single_worker();
+    // A single panic permanently kills the replica's sole worker: the
+    // outage is unrecoverable below the replica layer by construction.
+    cfg.pool.restart_budget = 0;
+    cfg.pool.retries = 0;
+    cfg.health.supervisor_tick = Duration::from_millis(2);
+    cfg.hedge = Some(HedgePolicy {
+        deadline_fraction: 0.25,
+        min_wait: Duration::from_millis(1),
+    });
+
+    let armed = Arc::new(AtomicBool::new(false));
+    let armed_in_wrap = Arc::clone(&armed);
+    let wrap: BackendWrap = Arc::new(move |backend, _worker| {
+        Box::new(KillSwitch {
+            inner: backend,
+            armed: Arc::clone(&armed_in_wrap),
+        })
+    });
+    let set = ReplicaSet::start_with_wraps(cfg, vec![Some(wrap), None, None]).unwrap();
+    set.register_model("tiny", compiled("tiny")).unwrap();
+    let want = reference_output();
+    assert!(!want.is_empty());
+
+    // Phase A — steady state: every response matches the reference.
+    for i in 0..n_steady as u64 {
+        let r = set
+            .submit(Request::for_model(i, "tiny", input()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.output, want, "steady-state request {i} diverged");
+    }
+    assert_eq!(set.hedges(), 0, "no hedges while all replicas are healthy");
+
+    // Phase B — the outage: arm, then burst. All queues are empty, so the
+    // rotation tie-break routes one of the first dispatches to replica 0,
+    // whose first execution panics and (budget 0) closes its queue:
+    // requests queued there settle typed and re-dispatch as failover
+    // hedges; later arrivals spill past the closed queue at submission.
+    armed.store(true, Ordering::SeqCst);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_burst as u64)
+        .map(|i| {
+            set.submit(Request::for_model(1000 + i, "tiny", input()))
+                .unwrap()
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait().unwrap_or_else(|e| {
+            panic!("burst request {i} must be rescued, got typed error: {e}")
+        });
+        assert_eq!(r.output, want, "burst request {i} diverged mid-outage");
+    }
+    let outage_wall = t0.elapsed();
+    assert!(
+        outage_wall < Duration::from_secs(20),
+        "outage burst settled too slowly ({outage_wall:?}) — hedges must \
+         bound the tail, not wait out the dead replica"
+    );
+    assert!(
+        set.hedges() >= 1,
+        "at least one request must have been rescued off the dead replica"
+    );
+    assert!(set.hedge_wins() >= 1, "a hedge leg must have won");
+
+    // Phase C — recovery: disarm, let the supervisor rebuild replica 0
+    // from the catalog, and require full capacity plus intact numerics.
+    armed.store(false, Ordering::SeqCst);
+    wait_until("supervisor to restore 3 live replicas", || {
+        set.rebuilds() >= 1
+            && set.live_replicas() == 3
+            && set.states()[0] == ReplicaState::Healthy
+    });
+    for i in 0..n_steady as u64 {
+        let r = set
+            .submit(Request::for_model(2000 + i, "tiny", input()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.output, want, "post-recovery request {i} diverged");
+    }
+    assert!(
+        set.states().iter().all(|s| *s == ReplicaState::Healthy),
+        "{:?}",
+        set.states()
+    );
+
+    let m = set.shutdown().unwrap();
+    assert!(m.rebuilds >= 1, "the outage must have forced a rebuild");
+    assert!(
+        m.panicked_workers() >= 1,
+        "the kill switch's panic must survive into the retired metrics"
+    );
+    assert!(!m.retired.is_empty());
+}
+
+/// Administrative drain → rejoin cycles under open-loop traffic: the
+/// quiesce must lose zero requests and shed nothing (the other replica
+/// keeps the set above the degraded-mode floor).
+#[test]
+fn drain_rejoin_under_load_completes_with_zero_failures() {
+    let duration_s = if soak() { 1.2 } else { 0.4 };
+    let mut cfg = ReplicaConfig::new(2);
+    cfg.health.supervisor_tick = Duration::from_millis(2);
+    let set = ReplicaSet::start(cfg).unwrap();
+    set.register_model("tiny", compiled("tiny")).unwrap();
+
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Bursty {
+            base_rps: 300.0,
+            burst_rps: 900.0,
+            mean_on_s: 0.05,
+            mean_off_s: 0.1,
+        },
+        duration_s,
+        seed: 77,
+        classes: vec![RequestClass::timing("tiny")],
+    };
+    let report = std::thread::scope(|s| {
+        let set_ref = &set;
+        let stream = s.spawn(move || spec.run_open_loop(set_ref));
+        for cycle in 0..2 {
+            std::thread::sleep(Duration::from_secs_f64(duration_s / 6.0));
+            set_ref
+                .drain(0, Duration::from_secs(10))
+                .unwrap_or_else(|e| panic!("drain cycle {cycle} failed: {e}"));
+            assert_eq!(set_ref.states()[0], ReplicaState::Drained);
+            assert_eq!(set_ref.live_replicas(), 1);
+            std::thread::sleep(Duration::from_millis(10));
+            set_ref.rejoin(0).unwrap();
+            assert_eq!(set_ref.live_replicas(), 2);
+        }
+        stream.join().expect("traffic thread must survive")
+    });
+
+    assert_eq!(
+        report.offered,
+        report.submitted + report.shed + report.queue_full + report.expired + report.failed,
+        "every arrival must be accounted: {}",
+        report.summary()
+    );
+    assert!(report.completed > 0, "{}", report.summary());
+    assert_eq!(report.failed, 0, "drain/rejoin must fail zero requests");
+    assert_eq!(report.completed, report.submitted, "nothing admitted is lost");
+    assert_eq!(report.shed, 0, "one live replica keeps admission open");
+    assert_eq!(report.expired, 0);
+    assert_eq!(report.harness_failures, 0);
+
+    let m = set.shutdown().unwrap();
+    assert_eq!(m.rebuilds, 0, "administrative drain is not a failure");
+    assert_eq!(m.degraded_shed, 0);
+}
+
+/// Seeded chaos across *all* replicas with per-replica decorrelated fault
+/// schedules ([`FaultPlan::for_replica`]): transient errors, latency
+/// spikes and occasional worker panics. The accounting identity holds over
+/// an open-loop stream and the supervisor ends the run at full capacity.
+#[test]
+fn decorrelated_chaos_soak_accounts_every_arrival_and_recovers_capacity() {
+    let duration_s = if soak() { 2.0 } else { 0.5 };
+    let replicas = 3;
+    let mut cfg = ReplicaConfig::new(replicas);
+    cfg.pool.workers = 2;
+    cfg.pool.retries = 1;
+    cfg.pool.restart_budget = 2;
+    cfg.health.supervisor_tick = Duration::from_millis(2);
+    cfg.hedge = Some(HedgePolicy::default());
+
+    let base = FaultPlan {
+        seed: 2026,
+        transient: 0.04,
+        panic_p: 0.01,
+        latency_spike: 0.05,
+        spike: Duration::from_micros(300),
+        ..FaultPlan::none()
+    };
+    let wraps: Vec<Option<BackendWrap>> = (0..replicas)
+        .map(|r| {
+            let plan = base.clone().for_replica(r);
+            let wrap: BackendWrap = Arc::new(move |backend, worker| {
+                Box::new(FaultyBackend::new(backend, plan.clone().for_worker(worker)))
+            });
+            Some(wrap)
+        })
+        .collect();
+    let set = ReplicaSet::start_with_wraps(cfg, wraps).unwrap();
+    set.register_model("tiny", compiled("tiny")).unwrap();
+
+    let spec = TrafficSpec {
+        process: ArrivalProcess::Poisson { rate_rps: 400.0 },
+        duration_s,
+        seed: 4242,
+        classes: vec![RequestClass::timing("tiny").with_input(input())],
+    };
+    let report = spec.run_open_loop(&set);
+
+    assert_eq!(
+        report.offered,
+        report.submitted + report.shed + report.queue_full + report.expired + report.failed,
+        "every arrival must be accounted: {}",
+        report.summary()
+    );
+    assert_eq!(report.harness_failures, 0, "collector must survive chaos");
+    assert!(
+        report.completed > report.offered / 2,
+        "most requests must survive light chaos: {}",
+        report.summary()
+    );
+
+    // Whatever the chaos killed, the supervisor must restore.
+    wait_until("supervisor to restore full capacity", || {
+        set.live_replicas() == replicas
+    });
+    let m = set.shutdown().unwrap();
+    let merged = m.merged();
+    assert!(merged.count() > 0, "merged metrics must cover the stream");
+}
