@@ -1,0 +1,189 @@
+//! Pipeline-parallel serving benchmark: K-stage layer-range pipelines vs
+//! the single-engine baseline.
+//!
+//! Splits ResNet18-small (CIFAR) into K ∈ {1, 2, 4} MACs-balanced stages
+//! ([`Compiler::split_balanced`]) and drives each [`StagePipeline`]
+//! closed-loop with numeric requests (each client keeps one request in
+//! flight, so the achieved rate *is* the pipeline's sustainable
+//! capacity). The baseline is the same model unsplit behind the same
+//! dispatch machinery (a one-replica [`ReplicaSet`]). Reports per-stage
+//! occupancy, bubble fraction, and activation-queue high-water marks —
+//! the knobs that explain where a K-stage split's speedup goes.
+//!
+//! Emits `BENCH_pipeline.json` (override: `BENCH_PIPELINE_JSON`).
+//! `BENCH_SMOKE=1` shrinks the request counts for CI; every run must
+//! complete loss-free with the accounting identity intact, and the K=2
+//! pipeline must sustain at least the single-engine throughput (asserted
+//! here — that is what fails CI on a stage-handoff regression).
+
+use std::time::Instant;
+
+use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::coordinator::pool::PoolConfig;
+use unzipfpga::coordinator::replica::{ReplicaConfig, ReplicaSet};
+use unzipfpga::coordinator::stage::{PipelineConfig, PipelineMetrics, StagePipeline};
+use unzipfpga::coordinator::traffic::{run_closed_loop, RequestClass, TrafficReport};
+use unzipfpga::engine::Compiler;
+use unzipfpga::util::bench::smoke_mode;
+use unzipfpga::util::prng::Xoshiro256;
+use unzipfpga::workload::resnet::resnet18_cifar_small;
+use unzipfpga::workload::RatioProfile;
+
+const SEED: u64 = 0x51a6;
+const CLIENTS: usize = 6;
+
+fn compiler() -> Compiler {
+    Compiler::new()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(8, 4, 8, 4))
+}
+
+fn accounted(r: &TrafficReport, what: &str) {
+    assert_eq!(
+        r.offered,
+        r.submitted + r.shed + r.queue_full + r.expired + r.failed,
+        "{what}: every request must be accounted: {}",
+        r.summary()
+    );
+    assert_eq!(
+        r.harness_failures, 0,
+        "{what}: harness must survive: {}",
+        r.summary()
+    );
+    assert_eq!(
+        r.failed + r.shed + r.queue_full + r.expired,
+        0,
+        "{what}: closed-loop blocking admission must be loss-free: {}",
+        r.summary()
+    );
+}
+
+fn report_json(r: &TrafficReport) -> String {
+    format!(
+        "\"completed\": {}, \"achieved_rps\": {:.2}, \"p50_us\": {:.1}, \"p99_us\": {:.1}",
+        r.completed,
+        r.achieved_rps(),
+        r.percentile_us(50.0),
+        r.percentile_us(99.0),
+    )
+}
+
+fn stages_json(m: &PipelineMetrics) -> String {
+    let entries: Vec<String> = m
+        .occupancy
+        .iter()
+        .enumerate()
+        .map(|(k, occ)| {
+            format!(
+                "{{\"stage\": {k}, \"occupancy\": {:.3}, \"bubble\": {:.3}, \
+                 \"queue_high_water\": {}}}",
+                occ,
+                m.bubble_fraction(k),
+                m.queue_high_water[k]
+            )
+        })
+        .collect();
+    format!("[{}]", entries.join(", "))
+}
+
+fn main() {
+    println!("== pipeline-parallel stages: K-stage throughput vs single engine ==");
+    let smoke = smoke_mode();
+    let per_client = if smoke { 4 } else { 16 };
+
+    let net = resnet18_cifar_small();
+    let profile = RatioProfile::uniform(&net, 0.5);
+    let c = compiler();
+    let input_len = {
+        let l0 = &net.layers[0];
+        (l0.h * l0.w * l0.n_in) as usize
+    };
+    let input = Xoshiro256::seed_from_u64(SEED).normal_vec(input_len);
+    let classes = vec![RequestClass::timing(net.name.clone()).with_input(input)];
+
+    // -- Baseline: the unsplit model behind the same dispatch machinery.
+    let mut base_cfg = ReplicaConfig::new(1);
+    base_cfg.pool = PoolConfig::single_worker();
+    let baseline_set = ReplicaSet::start(base_cfg).unwrap();
+    baseline_set
+        .register_model(
+            net.name.clone(),
+            c.compile(net.clone(), profile.clone()).unwrap(),
+        )
+        .unwrap();
+    let t0 = Instant::now();
+    let baseline = run_closed_loop(&baseline_set, &classes, CLIENTS, per_client, SEED + 1);
+    accounted(&baseline, "single-engine");
+    println!(
+        "   single-engine        {} ({:.2} rps)",
+        baseline.summary(),
+        baseline.achieved_rps()
+    );
+    baseline_set.shutdown().unwrap();
+    let baseline_rps = baseline.achieved_rps();
+
+    // -- K-stage pipelines.
+    let mut pipeline_rows: Vec<String> = Vec::new();
+    let mut k2_rps = 0.0f64;
+    for k in [1usize, 2, 4] {
+        let stages = c
+            .split_balanced(net.clone(), profile.clone(), k)
+            .unwrap_or_else(|e| panic!("K={k} split must be feasible: {e}"));
+        let mut cfg = PipelineConfig::new();
+        cfg.pool = PoolConfig::single_worker();
+        cfg.queue_depth = 8;
+        let pipe = StagePipeline::start(cfg, net.name.clone(), stages).unwrap();
+        let report = run_closed_loop(&pipe, &classes, CLIENTS, per_client, SEED + 10 + k as u64);
+        accounted(&report, &format!("K={k}"));
+        let rps = report.achieved_rps();
+        if k == 2 {
+            k2_rps = rps;
+        }
+        let metrics = pipe.shutdown().unwrap();
+        println!(
+            "   K={k} pipeline        {} ({:.2} rps, {:.2}x) | {}",
+            report.summary(),
+            rps,
+            rps / baseline_rps,
+            metrics.summary()
+        );
+        pipeline_rows.push(format!(
+            "    \"k{k}\": {{{}, \"speedup_vs_single\": {:.3}, \"stages\": {}}}",
+            report_json(&report),
+            rps / baseline_rps,
+            stages_json(&metrics)
+        ));
+    }
+
+    // The headline acceptance: a two-stage split must not serve slower
+    // than the single engine it replaces.
+    assert!(
+        k2_rps >= baseline_rps,
+        "K=2 steady-state throughput ({k2_rps:.2} rps) fell below the \
+         single-engine baseline ({baseline_rps:.2} rps)"
+    );
+    println!(
+        "   total wall {:.2} s, K=2 speedup {:.2}x",
+        t0.elapsed().as_secs_f64(),
+        k2_rps / baseline_rps
+    );
+
+    // -- JSON artifact.
+    let path = std::env::var("BENCH_PIPELINE_JSON")
+        .unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
+    let mut out = String::from("{\n  \"bench\": \"pipeline-stages\",\n");
+    out.push_str(&format!(
+        "  \"smoke\": {smoke},\n  \"seed\": {SEED},\n  \"model\": \"{}\",\n  \
+         \"clients\": {CLIENTS},\n  \"requests_per_client\": {per_client},\n",
+        net.name
+    ));
+    out.push_str(&format!(
+        "  \"single_engine\": {{{}}},\n  \"pipelines\": {{\n",
+        report_json(&baseline)
+    ));
+    out.push_str(&pipeline_rows.join(",\n"));
+    out.push_str("\n  }\n}\n");
+    std::fs::write(&path, &out).expect("write BENCH_pipeline.json");
+    println!("   wrote {path}");
+}

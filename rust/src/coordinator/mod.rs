@@ -30,10 +30,18 @@
 //! rebuilds, administrative drain/rejoin, hedged retries, and
 //! degraded-mode admission ([`Error::DegradedCapacity`](crate::Error::DegradedCapacity))
 //! — see the [`replica`] module docs.
+//!
+//! Serving is **pipeline-parallel**: a [`stage::StagePipeline`] carves a
+//! deep model into K layer-range stages
+//! ([`Compiler::split`](crate::engine::compile::Compiler::split)), each a
+//! supervised [`replica::ReplicaSet`] with its own registry, slab budget
+//! and design point, connected by bounded inter-stage activation queues
+//! whose backpressure propagates to admission — the full model's weights
+//! are never co-resident on one cache, and outputs stay bit-identical to
+//! the single-engine reference. See the [`stage`] module docs.
 
 pub mod breaker;
 pub mod metrics;
-pub mod multi_model;
 pub mod multi_tenant;
 pub mod plan;
 pub mod pool;
@@ -41,6 +49,7 @@ pub mod registry;
 pub mod replica;
 pub mod scheduler;
 pub mod server;
+pub mod stage;
 pub mod traffic;
 
 pub use breaker::{BreakerConfig, BreakerState, CircuitBreaker};
@@ -53,6 +62,7 @@ pub use replica::{
     ReplicaSetMetrics, ReplicaState,
 };
 pub use server::{Request, Response};
+pub use stage::{PipelineConfig, PipelineHandle, PipelineMetrics, StagePipeline};
 pub use traffic::{
     ArrivalProcess, LoadTarget, RequestClass, SettleHandle, TrafficReport, TrafficSpec,
 };

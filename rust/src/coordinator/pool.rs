@@ -420,6 +420,10 @@ pub struct PoolMetrics {
     /// Final per-model breaker states (empty when breakers are disabled
     /// or no model was ever recorded).
     pub breaker_states: BTreeMap<String, BreakerState>,
+    /// Pipeline stage this pool served, when it belonged to a
+    /// [`StagePipeline`](crate::coordinator::stage::StagePipeline)
+    /// (stamped at pipeline shutdown; `None` for standalone pools).
+    pub stage: Option<usize>,
 }
 
 impl PoolMetrics {
@@ -464,8 +468,12 @@ impl PoolMetrics {
     /// One-line summary (global + per-model latencies, batching, switches,
     /// SLO shed/expired counts, fault-tolerance counters).
     pub fn summary(&self) -> String {
+        let stage = self
+            .stage
+            .map(|s| format!("stage={s} "))
+            .unwrap_or_default();
         format!(
-            "workers={} {} batches={} max_batch={} model_switches={} shed={} expired={} \
+            "{stage}workers={} {} batches={} max_batch={} model_switches={} shed={} expired={} \
              panics={} restarts={} breaker_trips={}",
             self.per_worker.len(),
             self.merged().summary(),
@@ -836,6 +844,7 @@ impl ServerPool {
                 .as_ref()
                 .map(|b| b.states())
                 .unwrap_or_default(),
+            stage: None,
         })
     }
 

@@ -252,6 +252,10 @@ fn clone_typed(e: &Error) -> Error {
             live: *live,
             configured: *configured,
         },
+        Error::StageFailed { stage, source } => Error::StageFailed {
+            stage: *stage,
+            source: Box::new(clone_typed(source)),
+        },
         other => Error::Coordinator(other.to_string()),
     }
 }

@@ -681,6 +681,17 @@ impl ReplicaSet {
         pool.breaker().map(|b| b.states())
     }
 
+    /// One replica's model registry (`None` when the replica has no live
+    /// pool — retired or mid-rebuild). A
+    /// [`StagePipeline`](crate::coordinator::stage::StagePipeline) reads
+    /// this to audit a stage's resident slab bytes against its per-stage
+    /// budget.
+    pub fn registry(&self, replica: usize) -> Option<Arc<ModelRegistry>> {
+        let slot = self.shared.slots.get(replica)?;
+        let inner = lock(&slot.inner);
+        inner.as_ref().map(|r| Arc::clone(&r.registry))
+    }
+
     /// Hedge legs launched.
     pub fn hedges(&self) -> u64 {
         self.shared.hedges.load(Ordering::Relaxed)

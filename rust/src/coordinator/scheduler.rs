@@ -25,20 +25,11 @@
 //! batch-mates — which is also what keeps a minority model from starving
 //! under a flood of deadline traffic.
 //!
-//! (Until v0.4 this path hosted the per-layer admission-time costing; that
-//! moved to [`coordinator::plan`](crate::coordinator::plan) — deprecated
-//! aliases below keep old imports compiling.)
+//! (Until v0.4 this path hosted the per-layer admission-time costing;
+//! that lives in [`coordinator::plan`](crate::coordinator::plan).)
 
 use std::cmp::Ordering;
 use std::time::{Duration, Instant};
-
-/// Moved to [`coordinator::plan`](crate::coordinator::plan).
-#[deprecated(since = "0.4.0", note = "moved to coordinator::plan::InferencePlan")]
-pub type InferencePlan = crate::coordinator::plan::InferencePlan;
-
-/// Moved to [`coordinator::plan`](crate::coordinator::plan).
-#[deprecated(since = "0.4.0", note = "moved to coordinator::plan::PlannedLayer")]
-pub type PlannedLayer = crate::coordinator::plan::PlannedLayer;
 
 /// The pop order of the pool's queue: priority ↓, deadline ↑ (`None`
 /// after every `Some`), then arrival sequence ↑. `min` = pop next.
@@ -177,22 +168,4 @@ mod tests {
         assert!(primaries.len() > 1, "hash must spread models: {primaries:?}");
     }
 
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_plan_alias_still_resolves() {
-        // External code importing the pre-v0.4 path must keep compiling.
-        fn takes_plan(p: &InferencePlan) -> usize {
-            p.layers.len()
-        }
-        let net = crate::workload::resnet::resnet18();
-        let profile = crate::workload::RatioProfile::ovsf50(&net);
-        let plan = crate::coordinator::plan::InferencePlan::build(
-            &crate::arch::Platform::z7045(),
-            4,
-            crate::arch::DesignPoint::new(64, 64, 16, 48),
-            &net,
-            &profile,
-        );
-        assert_eq!(takes_plan(&plan), net.layers.len());
-    }
 }

@@ -1,0 +1,1022 @@
+//! Pipeline-parallel engine stages: a deep model partitioned into K
+//! layer-range stages, each an independent supervised engine, connected by
+//! bounded inter-stage activation queues.
+//!
+//! The paper's single-engine design maps every layer onto one fixed
+//! configuration; suboptimally mapped layers are where performance density
+//! is lost (unzipFPGA §8). A [`StagePipeline`] instead serves a model
+//! *split* by [`Compiler::split`](crate::engine::compile::Compiler::split):
+//!
+//! * **Stage = supervised replica set.** Each stage runs its layer-range
+//!   [`CompiledModel`](crate::engine::compile::CompiledModel) on its own
+//!   [`ReplicaSet`] — own [`ModelRegistry`](crate::coordinator::registry::ModelRegistry),
+//!   own [`SlabCache`](crate::engine::SlabCache) byte budget, own
+//!   DSE-chosen design point, and the full health/supervision/drain
+//!   machinery of replicated serving. A sick stage rebuilds
+//!   deterministically (respins preserve the split's seed namespace) while
+//!   the pipeline degrades **typed**, never hanging.
+//! * **Bounded activation queues.** A request admitted at stage 0 flows
+//!   stage to stage as its activations; each hop must hold a permit on the
+//!   next stage's bounded queue *before* dispatching. A full downstream
+//!   queue therefore backpressures upstream hops — and ultimately
+//!   admission itself ([`Error::QueueFull`](crate::Error::QueueFull) from
+//!   [`try_submit`](StagePipeline::try_submit), blocking from
+//!   [`submit`](StagePipeline::submit)) — instead of growing unbounded
+//!   inter-stage buffers.
+//! * **No co-residency.** Stage k's cache only ever holds stage k's
+//!   weights: the full model's weights are never resident on one cache,
+//!   which is what lets a model whose weights exceed any single budget
+//!   still serve under per-stage budgets.
+//! * **Deadlock freedom.** The flow graph is a linear chain: user →
+//!   queue 0 → shuttle 0 → queue 1 → … → per-request settle channel
+//!   (unbounded). Pool workers never block on inter-stage queues (the
+//!   per-stage shuttle threads do all inter-stage blocking), and permits
+//!   are acquired strictly downstream, so no cycle exists and a full
+//!   downstream queue can never deadlock an upstream batch.
+//!
+//! Failure semantics: errors at *admission* (stage-0 submit) surface raw
+//! ([`Error::QueueFull`](crate::Error::QueueFull),
+//! [`Error::Overloaded`](crate::Error::Overloaded), …) so traffic
+//! accounting classifies them; anything that fails after admission settles
+//! the request with [`Error::StageFailed`](crate::Error::StageFailed)
+//! wrapping the stage-local error — every accepted request settles typed
+//! or correct.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::registry::{BackendWrap, ModelRegistry};
+use crate::coordinator::replica::{
+    DegradedPolicy, HealthPolicy, HedgePolicy, ReplicaConfig, ReplicaHandle, ReplicaSet,
+    ReplicaSetMetrics, ReplicaState,
+};
+use crate::coordinator::pool::PoolConfig;
+use crate::coordinator::server::{Request, Response};
+use crate::coordinator::traffic::{LoadTarget, SettleHandle};
+use crate::engine::{BackendKind, CompiledModel, SlabCache};
+use crate::error::{Error, Result};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Configuration of a [`StagePipeline`]. Stage-invariant knobs (pool,
+/// health, hedging) apply to every stage; the slab budget can be uniform
+/// ([`slab_budget`](Self::slab_budget)) or per-stage
+/// ([`slab_budgets`](Self::slab_budgets)).
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Capacity of each bounded activation queue (the entry queue and
+    /// every inter-stage queue): the maximum requests in flight *per
+    /// stage*, counting both queued hand-offs and dispatched work.
+    pub queue_depth: usize,
+    /// Replicas per stage (each stage is a full [`ReplicaSet`]).
+    pub replicas: usize,
+    /// Pool configuration for every stage replica.
+    pub pool: PoolConfig,
+    /// Backend kind for every stage's workers.
+    pub backend: BackendKind,
+    /// Per-stage slab-cache byte budget (each replica of a stage gets its
+    /// own cache of this size), unless overridden per stage.
+    pub slab_budget: usize,
+    /// Per-stage budget overrides (one entry per stage when set).
+    pub slab_budgets: Option<Vec<usize>>,
+    /// Health tracking and supervision, per stage.
+    pub health: HealthPolicy,
+    /// Degraded-mode admission, per stage.
+    pub degraded: DegradedPolicy,
+    /// Hedged retries across a stage's replicas (`None` disables).
+    pub hedge: Option<HedgePolicy>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PipelineConfig {
+    /// Defaults: queue depth 8, one replica per stage, simulator backend,
+    /// default slab budget everywhere.
+    pub fn new() -> Self {
+        Self {
+            queue_depth: 8,
+            replicas: 1,
+            pool: PoolConfig::default(),
+            backend: BackendKind::Simulator,
+            slab_budget: SlabCache::DEFAULT_BUDGET,
+            slab_budgets: None,
+            health: HealthPolicy::default(),
+            degraded: DegradedPolicy::default(),
+            hedge: None,
+        }
+    }
+
+    /// Validate against a concrete stage count
+    /// ([`StagePipeline::start`] calls this).
+    pub fn validate(&self, n_stages: usize) -> Result<()> {
+        if self.queue_depth == 0 {
+            return Err(Error::InvalidConfig(
+                "PipelineConfig: queue_depth must be ≥ 1".into(),
+            ));
+        }
+        if let Some(budgets) = &self.slab_budgets {
+            if budgets.len() != n_stages {
+                return Err(Error::InvalidConfig(format!(
+                    "PipelineConfig: {} slab budgets for {n_stages} stages \
+                     (pass one per stage or none)",
+                    budgets.len()
+                )));
+            }
+        }
+        self.replica_config(0, n_stages).validate()
+    }
+
+    fn stage_budget(&self, stage: usize) -> usize {
+        self.slab_budgets
+            .as_ref()
+            .map(|b| b[stage])
+            .unwrap_or(self.slab_budget)
+    }
+
+    fn replica_config(&self, stage: usize, _n_stages: usize) -> ReplicaConfig {
+        ReplicaConfig {
+            replicas: self.replicas,
+            pool: self.pool.clone(),
+            backend: self.backend.clone(),
+            slab_budget: self.stage_budget(stage),
+            // A stage serves exactly one model: affinity is meaningless.
+            affinity_spread: 0,
+            health: self.health.clone(),
+            degraded: self.degraded.clone(),
+            hedge: self.hedge.clone(),
+        }
+    }
+}
+
+/// Bounded hand-off queue with permit-style admission: a producer
+/// *acquires* capacity before dispatching downstream work and *pushes* the
+/// resulting in-flight item afterwards (or *releases* on dispatch
+/// failure), so a rejected acquisition — the backpressure signal — can
+/// never orphan an already-dispatched request. `depth()` counts permits
+/// (queued items plus acquired-not-yet-pushed dispatches), which is the
+/// stage's true in-flight bound.
+struct ActivationQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    high_water: AtomicUsize,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    permits: usize,
+    closed: bool,
+}
+
+impl<T> ActivationQueue<T> {
+    fn new(cap: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                permits: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+            high_water: AtomicUsize::new(0),
+        }
+    }
+
+    fn note_high_water(&self, permits: usize) {
+        self.high_water.fetch_max(permits, Ordering::Relaxed);
+    }
+
+    /// Reserve one capacity permit without blocking; typed
+    /// [`Error::QueueFull`] when the stage is at capacity.
+    fn try_acquire(&self) -> Result<()> {
+        let mut st = lock(&self.state);
+        if st.closed {
+            return Err(Error::PoolShutdown);
+        }
+        if st.permits >= self.cap {
+            return Err(Error::QueueFull);
+        }
+        st.permits += 1;
+        self.note_high_water(st.permits);
+        Ok(())
+    }
+
+    /// Reserve one capacity permit, blocking while the stage is full —
+    /// the backpressure path of blocking submission and upstream shuttles.
+    fn acquire(&self) -> Result<()> {
+        let mut st = lock(&self.state);
+        loop {
+            if st.closed {
+                return Err(Error::PoolShutdown);
+            }
+            if st.permits < self.cap {
+                st.permits += 1;
+                self.note_high_water(st.permits);
+                return Ok(());
+            }
+            st = self
+                .not_full
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Undo an [`acquire`](Self::acquire) whose dispatch failed.
+    fn release(&self) {
+        let mut st = lock(&self.state);
+        st.permits = st.permits.saturating_sub(1);
+        drop(st);
+        self.not_full.notify_one();
+        // A release can complete a close (closed && permits == 0).
+        self.not_empty.notify_all();
+    }
+
+    /// Enqueue the in-flight item for a dispatch made under a held permit
+    /// (never blocks: the permit *is* the capacity).
+    fn push(&self, item: T) {
+        let mut st = lock(&self.state);
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+    }
+
+    /// Dequeue the next in-flight item, blocking while the queue is open.
+    /// Returns `None` once the queue is closed **and** fully drained
+    /// (every permit released) — the consumer's exit signal.
+    fn pop(&self) -> Option<T> {
+        let mut st = lock(&self.state);
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                st.permits = st.permits.saturating_sub(1);
+                drop(st);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed && st.permits == 0 {
+                return None;
+            }
+            st = self
+                .not_empty
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    fn close(&self) {
+        let mut st = lock(&self.state);
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Current in-flight permits (queued + dispatched) — the live queue
+    /// depth gauge.
+    fn depth(&self) -> usize {
+        lock(&self.state).permits
+    }
+
+    fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
+    }
+}
+
+/// One admitted request's journey state between stages.
+struct InFlight {
+    id: u64,
+    model: String,
+    deadline: Option<Instant>,
+    priority: u8,
+    /// Admission time at the pipeline (end-to-end host latency origin).
+    accepted: Instant,
+    /// Device seconds accumulated over completed stages.
+    device_s: f64,
+    /// The pending dispatch into the current stage.
+    handle: ReplicaHandle,
+    /// Per-request settle channel the caller's [`PipelineHandle`] reads.
+    tx: mpsc::Sender<Result<Response>>,
+}
+
+/// Stage busy-time gauge: a stage is *busy* while ≥ 1 request is in
+/// flight on it; occupancy = busy/wall, bubble = 1 − occupancy.
+struct StageGauge {
+    state: Mutex<GaugeState>,
+}
+
+struct GaugeState {
+    in_flight: usize,
+    busy_since: Option<Instant>,
+    busy: Duration,
+}
+
+impl StageGauge {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(GaugeState {
+                in_flight: 0,
+                busy_since: None,
+                busy: Duration::ZERO,
+            }),
+        }
+    }
+
+    fn inc(&self) {
+        let mut st = lock(&self.state);
+        st.in_flight += 1;
+        if st.busy_since.is_none() {
+            st.busy_since = Some(Instant::now());
+        }
+    }
+
+    fn dec(&self) {
+        let mut st = lock(&self.state);
+        st.in_flight = st.in_flight.saturating_sub(1);
+        if st.in_flight == 0 {
+            if let Some(t0) = st.busy_since.take() {
+                st.busy += t0.elapsed();
+            }
+        }
+    }
+
+    fn busy_fraction(&self, wall: Duration) -> f64 {
+        let st = lock(&self.state);
+        let mut busy = st.busy;
+        if let Some(t0) = st.busy_since {
+            busy += t0.elapsed();
+        }
+        if wall.is_zero() {
+            return 0.0;
+        }
+        (busy.as_secs_f64() / wall.as_secs_f64()).clamp(0.0, 1.0)
+    }
+}
+
+/// One stage's runtime state.
+struct StageState {
+    /// The stage's replica set; `Some` until shutdown harvests it.
+    /// Dispatchers clone the `Arc` transiently so the slot lock is never
+    /// held across a blocking submit.
+    set: Mutex<Option<Arc<ReplicaSet>>>,
+    /// Bounded activation queue feeding this stage's shuttle.
+    queue: ActivationQueue<InFlight>,
+    gauge: StageGauge,
+}
+
+impl StageState {
+    fn set(&self) -> Option<Arc<ReplicaSet>> {
+        lock(&self.set).as_ref().map(Arc::clone)
+    }
+}
+
+struct PipelineShared {
+    stages: Vec<StageState>,
+    closed: AtomicBool,
+}
+
+/// K layer-range engine stages behind one admission point. See the module
+/// docs for topology, backpressure and failure semantics.
+pub struct StagePipeline {
+    shared: Arc<PipelineShared>,
+    shuttles: Mutex<Vec<Option<thread::JoinHandle<()>>>>,
+    model: String,
+    started: Instant,
+    input_len: usize,
+    output_len: usize,
+}
+
+impl StagePipeline {
+    /// Stand up one [`ReplicaSet`] per stage artifact (registered under
+    /// `model_id` on every stage), the inter-stage queues, and the shuttle
+    /// threads. The artifacts must chain: each stage's
+    /// [`output_len`](CompiledModel::output_len) must equal the next
+    /// stage's [`input_len`](CompiledModel::input_len) — artifacts from
+    /// [`Compiler::split`](crate::engine::compile::Compiler::split) do by
+    /// construction, and additionally serve bit-identical numerics.
+    pub fn start(
+        cfg: PipelineConfig,
+        model_id: impl Into<String>,
+        stages: Vec<CompiledModel>,
+    ) -> Result<Self> {
+        Self::start_with_stage_wraps(cfg, model_id, stages, Vec::new())
+    }
+
+    /// [`start`](Self::start) with per-stage backend decorators (empty =
+    /// none; otherwise one entry per stage, applied to every replica of
+    /// that stage and re-applied at supervisor rebuilds).
+    pub fn start_with_stage_wraps(
+        cfg: PipelineConfig,
+        model_id: impl Into<String>,
+        stages: Vec<CompiledModel>,
+        wraps: Vec<Option<BackendWrap>>,
+    ) -> Result<Self> {
+        let model_id = model_id.into();
+        let n = stages.len();
+        if n == 0 {
+            return Err(Error::InvalidConfig(
+                "StagePipeline: at least one stage artifact is required".into(),
+            ));
+        }
+        if !wraps.is_empty() && wraps.len() != n {
+            return Err(Error::InvalidConfig(format!(
+                "StagePipeline: {} wraps for {n} stages (pass one per stage or none)",
+                wraps.len()
+            )));
+        }
+        cfg.validate(n)?;
+        for (k, pair) in stages.windows(2).enumerate() {
+            if pair[0].output_len() != pair[1].input_len() {
+                return Err(Error::InvalidConfig(format!(
+                    "StagePipeline: stage {k} ('{}') emits {} activations but stage {} \
+                     ('{}') expects {} — stages must chain exactly (use Compiler::split)",
+                    pair[0].network_name(),
+                    pair[0].output_len(),
+                    k + 1,
+                    pair[1].network_name(),
+                    pair[1].input_len()
+                )));
+            }
+        }
+        let input_len = stages[0].input_len();
+        let output_len = stages[n - 1].output_len();
+        let mut states = Vec::with_capacity(n);
+        for (k, artifact) in stages.into_iter().enumerate() {
+            let stage_wraps = match wraps.get(k).and_then(|w| w.as_ref()) {
+                Some(w) => vec![Some(Arc::clone(w)); cfg.replicas],
+                None => Vec::new(),
+            };
+            let set = ReplicaSet::start_with_wraps(cfg.replica_config(k, n), stage_wraps)?;
+            set.register_model(model_id.clone(), artifact)?;
+            states.push(StageState {
+                set: Mutex::new(Some(Arc::new(set))),
+                queue: ActivationQueue::new(cfg.queue_depth),
+                gauge: StageGauge::new(),
+            });
+        }
+        let shared = Arc::new(PipelineShared {
+            stages: states,
+            closed: AtomicBool::new(false),
+        });
+        let mut shuttles = Vec::with_capacity(n);
+        for k in 0..n {
+            let s = Arc::clone(&shared);
+            let h = thread::Builder::new()
+                .name(format!("stage-shuttle-{k}"))
+                .spawn(move || shuttle(&s, k))
+                .map_err(|e| {
+                    Error::Coordinator(format!("failed to spawn stage shuttle {k}: {e}"))
+                })?;
+            shuttles.push(Some(h));
+        }
+        Ok(Self {
+            shared,
+            shuttles: Mutex::new(shuttles),
+            model: model_id,
+            started: Instant::now(),
+            input_len,
+            output_len,
+        })
+    }
+
+    /// The model id requests must route to.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Number of stages.
+    pub fn stages(&self) -> usize {
+        self.shared.stages.len()
+    }
+
+    /// Expected request input length (stage 0's input contract).
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    /// Output activation length of the final stage.
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    /// Live per-stage queue depths (in-flight permits per stage): the
+    /// inter-stage backpressure gauges.
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.shared.stages.iter().map(|s| s.queue.depth()).collect()
+    }
+
+    /// One stage's replica lifecycle states (`None` for an out-of-range
+    /// stage index).
+    pub fn stage_states(&self, stage: usize) -> Option<Vec<ReplicaState>> {
+        Some(self.shared.stages.get(stage)?.set()?.states())
+    }
+
+    /// Live replicas of one stage (0 when the stage index is bad).
+    pub fn live_replicas(&self, stage: usize) -> usize {
+        self.shared
+            .stages
+            .get(stage)
+            .and_then(|s| s.set())
+            .map_or(0, |set| set.live_replicas())
+    }
+
+    /// Supervisor rebuilds completed on one stage.
+    pub fn rebuilds(&self, stage: usize) -> u64 {
+        self.shared
+            .stages
+            .get(stage)
+            .and_then(|s| s.set())
+            .map_or(0, |set| set.rebuilds())
+    }
+
+    /// One stage replica's model registry — the hook for auditing a
+    /// stage's resident slab bytes against its budget.
+    pub fn stage_registry(&self, stage: usize, replica: usize) -> Option<Arc<ModelRegistry>> {
+        self.shared.stages.get(stage)?.set()?.registry(replica)
+    }
+
+    /// Administratively drain one replica of one stage (delegates to
+    /// [`ReplicaSet::drain`]).
+    pub fn drain(&self, stage: usize, replica: usize, timeout: Duration) -> Result<()> {
+        self.stage_set(stage)?.drain(replica, timeout)
+    }
+
+    /// Rejoin a drained replica of one stage.
+    pub fn rejoin(&self, stage: usize, replica: usize) -> Result<()> {
+        self.stage_set(stage)?.rejoin(replica)
+    }
+
+    fn stage_set(&self, stage: usize) -> Result<Arc<ReplicaSet>> {
+        self.shared
+            .stages
+            .get(stage)
+            .and_then(|s| s.set())
+            .ok_or_else(|| {
+                Error::InvalidConfig(format!(
+                    "no stage {stage} in a {}-stage pipeline",
+                    self.shared.stages.len()
+                ))
+            })
+    }
+
+    /// Submit a request, blocking while the entry queue is at capacity.
+    /// Admission errors surface raw (typed); post-admission failures
+    /// settle the returned handle with [`Error::StageFailed`].
+    pub fn submit(&self, req: Request) -> Result<PipelineHandle> {
+        self.dispatch(req, true)
+    }
+
+    /// Non-blocking submit: typed [`Error::QueueFull`] when the entry
+    /// queue (or stage 0's pool) is at capacity.
+    pub fn try_submit(&self, req: Request) -> Result<PipelineHandle> {
+        self.dispatch(req, false)
+    }
+
+    fn dispatch(&self, req: Request, blocking: bool) -> Result<PipelineHandle> {
+        if self.shared.closed.load(Ordering::SeqCst) {
+            return Err(Error::PoolShutdown);
+        }
+        let entry = &self.shared.stages[0];
+        // Permit BEFORE dispatch: a full pipeline rejects here, before the
+        // request exists anywhere downstream.
+        if blocking {
+            entry.queue.acquire()?;
+        } else {
+            entry.queue.try_acquire()?;
+        }
+        let Some(set) = entry.set() else {
+            entry.queue.release();
+            return Err(Error::PoolShutdown);
+        };
+        let id = req.id;
+        let model = req.model.clone();
+        let deadline = req.deadline;
+        let priority = req.priority;
+        let dispatched = if blocking {
+            set.submit(req)
+        } else {
+            set.try_submit(req)
+        };
+        match dispatched {
+            Ok(handle) => {
+                let (tx, rx) = mpsc::channel();
+                entry.gauge.inc();
+                entry.queue.push(InFlight {
+                    id,
+                    model,
+                    deadline,
+                    priority,
+                    accepted: Instant::now(),
+                    device_s: 0.0,
+                    handle,
+                    tx,
+                });
+                Ok(PipelineHandle { rx })
+            }
+            Err(e) => {
+                entry.queue.release();
+                Err(e)
+            }
+        }
+    }
+
+    fn stop_shuttles(&self) {
+        self.shared.closed.store(true, Ordering::SeqCst);
+        let mut hs = lock(&self.shuttles);
+        // Close and join strictly in stage order: shuttle k may still be
+        // handing drained work to queue k+1, which stays open until k has
+        // fully exited.
+        for (k, slot) in hs.iter_mut().enumerate() {
+            self.shared.stages[k].queue.close();
+            if let Some(h) = slot.take() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    /// Drain every in-flight request (each settles typed or correct),
+    /// retire every stage, and return the aggregated per-stage metrics.
+    pub fn shutdown(self) -> Result<PipelineMetrics> {
+        self.stop_shuttles();
+        let wall = self.started.elapsed();
+        let mut per_stage = Vec::with_capacity(self.shared.stages.len());
+        let mut occupancy = Vec::with_capacity(self.shared.stages.len());
+        let mut queue_high_water = Vec::with_capacity(self.shared.stages.len());
+        for (k, st) in self.shared.stages.iter().enumerate() {
+            occupancy.push(st.gauge.busy_fraction(wall));
+            queue_high_water.push(st.queue.high_water());
+            let arc = lock(&st.set).take().ok_or_else(|| {
+                Error::Coordinator(format!("stage {k} replica set already harvested"))
+            })?;
+            let set = unwrap_set(arc)?;
+            let mut m = set.shutdown()?;
+            for pm in m.per_replica.iter_mut().flatten() {
+                pm.stage = Some(k);
+            }
+            for pm in &mut m.retired {
+                pm.stage = Some(k);
+            }
+            per_stage.push(m);
+        }
+        Ok(PipelineMetrics {
+            per_stage,
+            occupancy,
+            queue_high_water,
+            wall,
+        })
+    }
+}
+
+impl Drop for StagePipeline {
+    /// Dropping without [`shutdown`](Self::shutdown) still drains: the
+    /// shuttles settle every in-flight request before exiting, then each
+    /// stage's `ReplicaSet` retires through its own `Drop`.
+    fn drop(&mut self) {
+        self.stop_shuttles();
+    }
+}
+
+impl LoadTarget for StagePipeline {
+    type Handle = PipelineHandle;
+
+    fn submit(&self, req: Request) -> Result<PipelineHandle> {
+        self.dispatch(req, true)
+    }
+
+    fn try_submit(&self, req: Request) -> Result<PipelineHandle> {
+        self.dispatch(req, false)
+    }
+}
+
+/// After the shuttles join, only the pipeline's own slot holds the set;
+/// transient dispatch clones are gone. Retry briefly anyway so a racing
+/// accessor clone cannot fail the harvest.
+fn unwrap_set(mut arc: Arc<ReplicaSet>) -> Result<ReplicaSet> {
+    for _ in 0..200 {
+        match Arc::try_unwrap(arc) {
+            Ok(set) => return Ok(set),
+            Err(still) => {
+                arc = still;
+                thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+    Err(Error::Coordinator(
+        "stage replica set still referenced at shutdown".into(),
+    ))
+}
+
+/// Stage k's shuttle: collects stage-k completions and hands each result
+/// to stage k+1 (permit first, then dispatch) or settles the request.
+/// All inter-stage blocking happens here — never on a pool worker.
+fn shuttle(shared: &PipelineShared, k: usize) {
+    let n = shared.stages.len();
+    while let Some(item) = shared.stages[k].queue.pop() {
+        let InFlight {
+            id,
+            model,
+            deadline,
+            priority,
+            accepted,
+            device_s,
+            handle,
+            tx,
+        } = item;
+        let result = handle.wait();
+        shared.stages[k].gauge.dec();
+        let resp = match result {
+            Ok(resp) => resp,
+            Err(e) => {
+                let _ = tx.send(Err(Error::StageFailed {
+                    stage: k,
+                    source: Box::new(e),
+                }));
+                continue;
+            }
+        };
+        let device_s = device_s + resp.device_latency_s;
+        if k + 1 == n {
+            let _ = tx.send(Ok(Response {
+                id,
+                model,
+                device_latency_s: device_s,
+                host_latency_s: accepted.elapsed().as_secs_f64(),
+                output: resp.output,
+                batch: resp.batch,
+            }));
+            continue;
+        }
+        let next = &shared.stages[k + 1];
+        // Bounded hand-off: hold a downstream permit before dispatching.
+        // Blocking here is the backpressure propagating upstream — queue k
+        // fills behind this shuttle, then admission itself rejects.
+        if next.queue.acquire().is_err() {
+            let _ = tx.send(Err(Error::StageFailed {
+                stage: k + 1,
+                source: Box::new(Error::PoolShutdown),
+            }));
+            continue;
+        }
+        let req = Request {
+            id,
+            model: model.clone(),
+            input: resp.output,
+            deadline,
+            priority,
+        };
+        let dispatched = match next.set() {
+            Some(set) => set.submit(req),
+            None => Err(Error::PoolShutdown),
+        };
+        match dispatched {
+            Ok(handle) => {
+                next.gauge.inc();
+                next.queue.push(InFlight {
+                    id,
+                    model,
+                    deadline,
+                    priority,
+                    accepted,
+                    device_s,
+                    handle,
+                    tx,
+                });
+            }
+            Err(e) => {
+                next.queue.release();
+                let _ = tx.send(Err(Error::StageFailed {
+                    stage: k + 1,
+                    source: Box::new(e),
+                }));
+            }
+        }
+    }
+}
+
+/// Handle to a request flowing through a [`StagePipeline`]: settles once,
+/// with the final stage's response (device latency summed over stages,
+/// host latency end-to-end) or a typed error.
+pub struct PipelineHandle {
+    rx: mpsc::Receiver<Result<Response>>,
+}
+
+impl SettleHandle for PipelineHandle {
+    fn wait(self) -> Result<Response> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            // Settle channel dropped unsent: the pipeline died around the
+            // request — report it as drained, not hung.
+            Err(_) => Err(Error::PoolShutdown),
+        }
+    }
+
+    fn try_wait(&self) -> Option<Result<Response>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(Error::PoolShutdown)),
+        }
+    }
+}
+
+/// Aggregated statistics returned by [`StagePipeline::shutdown`].
+#[derive(Debug)]
+pub struct PipelineMetrics {
+    /// Each stage's full [`ReplicaSetMetrics`] (per-replica
+    /// [`PoolMetrics`](crate::coordinator::pool::PoolMetrics) stamped with
+    /// their stage id).
+    pub per_stage: Vec<ReplicaSetMetrics>,
+    /// Fraction of the pipeline's wall time each stage had ≥ 1 request in
+    /// flight. `1 −` this is the stage's bubble fraction.
+    pub occupancy: Vec<f64>,
+    /// High-water mark of each stage's activation queue (permits), against
+    /// the configured [`PipelineConfig::queue_depth`].
+    pub queue_high_water: Vec<usize>,
+    /// Pipeline lifetime (start → shutdown).
+    pub wall: Duration,
+}
+
+impl PipelineMetrics {
+    /// Every stage's latency series merged into one collector, each
+    /// stage's series tagged `stage<k>` — per-stage percentiles appear as
+    /// per-model clauses in [`Metrics::summary`].
+    pub fn merged(&self) -> Metrics {
+        let mut m = Metrics::new();
+        for (k, s) in self.per_stage.iter().enumerate() {
+            m.merge_tagged(&s.merged(), &format!("stage{k}"));
+        }
+        m
+    }
+
+    /// Stage `k`'s bubble fraction (idle wall-time share).
+    pub fn bubble_fraction(&self, stage: usize) -> f64 {
+        (1.0 - self.occupancy.get(stage).copied().unwrap_or(0.0)).clamp(0.0, 1.0)
+    }
+
+    /// Executor panics across every stage and incarnation.
+    pub fn panicked_workers(&self) -> usize {
+        self.per_stage.iter().map(|s| s.panicked_workers()).sum()
+    }
+
+    /// One-line pipeline summary: merged latencies (with per-stage tags)
+    /// plus per-stage occupancy/bubble/queue high-water clauses.
+    pub fn summary(&self) -> String {
+        let mut s = format!("stages={} {}", self.per_stage.len(), self.merged().summary());
+        for (k, occ) in self.occupancy.iter().enumerate() {
+            s.push_str(&format!(
+                " | s{k}: occ={:.0}% bubble={:.0}% queue_hw={}",
+                occ * 100.0,
+                (1.0 - occ) * 100.0,
+                self.queue_high_water.get(k).copied().unwrap_or(0)
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{DesignPoint, Platform};
+    use crate::engine::{Compiler, Engine};
+    use crate::workload::tiny::tiny_resnet;
+    use crate::workload::RatioProfile;
+
+    fn compiler() -> Compiler {
+        Compiler::new()
+            .platform(Platform::z7045())
+            .bandwidth(4)
+            .design_point(DesignPoint::new(8, 4, 8, 4))
+    }
+
+    fn small_cfg() -> PipelineConfig {
+        let mut cfg = PipelineConfig::new();
+        cfg.pool = crate::coordinator::pool::PoolConfig::single_worker();
+        cfg.queue_depth = 4;
+        cfg
+    }
+
+    #[test]
+    fn activation_queue_permits_bound_and_drain() {
+        let q: ActivationQueue<u32> = ActivationQueue::new(2);
+        q.try_acquire().unwrap();
+        q.try_acquire().unwrap();
+        assert!(matches!(q.try_acquire(), Err(Error::QueueFull)));
+        assert_eq!(q.depth(), 2);
+        // Release (dispatch failed) frees capacity without a push.
+        q.release();
+        assert_eq!(q.depth(), 1);
+        q.push(7);
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.depth(), 0);
+        assert_eq!(q.high_water(), 2);
+        // Close: pending items still drain, then pop reports done.
+        q.try_acquire().unwrap();
+        q.push(9);
+        q.close();
+        assert!(matches!(q.try_acquire(), Err(Error::PoolShutdown)));
+        assert_eq!(q.pop(), Some(9));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pipeline_rejects_malformed_topologies() {
+        let net = tiny_resnet();
+        let profile = RatioProfile::uniform(&net, 0.5);
+        let c = compiler();
+        // No stages.
+        assert!(matches!(
+            StagePipeline::start(small_cfg(), "tiny", Vec::new()),
+            Err(Error::InvalidConfig(_))
+        ));
+        // Out-of-order stages break the activation chain.
+        let mut stages = c.split(net.clone(), profile.clone(), &[0..2, 2..4]).unwrap();
+        stages.reverse();
+        assert!(matches!(
+            StagePipeline::start(small_cfg(), "tiny", stages),
+            Err(Error::InvalidConfig(_))
+        ));
+        // Config-level validation: zero queue depth, budget-count mismatch.
+        let stages = c.split(net.clone(), profile.clone(), &[0..2, 2..4]).unwrap();
+        let mut cfg = small_cfg();
+        cfg.queue_depth = 0;
+        assert!(matches!(
+            StagePipeline::start(cfg, "tiny", stages),
+            Err(Error::InvalidConfig(_))
+        ));
+        let stages = c.split(net, profile, &[0..2, 2..4]).unwrap();
+        let mut cfg = small_cfg();
+        cfg.slab_budgets = Some(vec![1 << 20]); // 1 budget for 2 stages
+        assert!(matches!(
+            StagePipeline::start(cfg, "tiny", stages),
+            Err(Error::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn pipeline_matches_single_engine_and_settles_timing_requests() {
+        let net = tiny_resnet();
+        let profile = RatioProfile::uniform(&net, 0.5);
+        let c = compiler();
+        let stages = c.split(net.clone(), profile.clone(), &[0..2, 2..4]).unwrap();
+        let pipe = StagePipeline::start(small_cfg(), "tiny", stages).unwrap();
+        assert_eq!(pipe.stages(), 2);
+        assert_eq!(pipe.model(), "tiny");
+
+        let input: Vec<f32> = (0..pipe.input_len())
+            .map(|i| ((i % 13) as f32) / 13.0 - 0.5)
+            .collect();
+        let reference = {
+            let plan = Engine::builder()
+                .network(net)
+                .profile(profile)
+                .platform(Platform::z7045())
+                .bandwidth(4)
+                .design_point(DesignPoint::new(8, 4, 8, 4))
+                .plan()
+                .unwrap();
+            let mut engine =
+                Engine::with_backend(plan, Box::new(crate::engine::SimBackend::new())).unwrap();
+            engine.infer(&input).unwrap().output
+        };
+        let got = pipe
+            .submit(Request::for_model(1, "tiny", input))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(got.output, reference, "pipeline must be bit-identical");
+        assert!(got.device_latency_s > 0.0, "device time sums over stages");
+
+        // Timing-only requests (empty activations) flow through every
+        // stage and settle.
+        let t = pipe
+            .submit(Request::for_model(2, "tiny", Vec::new()))
+            .unwrap_or_else(|e| panic!("timing admission failed: {e}"));
+        let resp = t.wait().unwrap();
+        assert!(resp.output.is_empty());
+
+        let metrics = pipe.shutdown().unwrap();
+        assert_eq!(metrics.per_stage.len(), 2);
+        assert!(metrics.queue_high_water.iter().all(|&h| h >= 1));
+        let summary = metrics.summary();
+        assert!(summary.contains("stages=2"), "{summary}");
+        assert!(summary.contains("s0:"), "{summary}");
+        // Stage ids are stamped into the harvested pool metrics.
+        for (k, s) in metrics.per_stage.iter().enumerate() {
+            for pm in s.per_replica.iter().flatten() {
+                assert_eq!(pm.stage, Some(k));
+                assert!(pm.summary().contains(&format!("stage={k}")));
+            }
+        }
+    }
+}

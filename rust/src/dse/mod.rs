@@ -1,9 +1,13 @@
 //! Design-space exploration (paper §5.3, Eq. 10): exhaustive search over
-//! `σ = ⟨M, T_R, T_P, T_C⟩` under the platform's resource constraints.
+//! `σ = ⟨M, T_R, T_P, T_C⟩` under the platform's resource constraints —
+//! plus the layer-range partitioner that carves a deep model into
+//! pipeline-parallel stages, each free to pick its own σ.
 
 pub mod greedy;
+pub mod partition;
 pub mod roofline;
 pub mod search;
 
+pub use partition::{partition_stages, valid_boundaries};
 pub use roofline::baseline_optimise;
 pub use search::{optimise, sweep, DseConfig, DseResult};

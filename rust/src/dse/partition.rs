@@ -1,0 +1,154 @@
+//! Layer-range partitioning for pipeline-parallel engine stages.
+//!
+//! A deep model is split into K contiguous layer ranges, each compiled and
+//! served by its own engine stage
+//! ([`Compiler::split`](crate::engine::compile::Compiler::split),
+//! [`StagePipeline`](crate::coordinator::stage::StagePipeline)). Not every
+//! boundary is cuttable: a stage hands its raw output buffer to the next
+//! stage's admission check, so a cut is valid only where the producing
+//! layer's output feature map is *exactly* the consuming layer's input
+//! shape ([`Layer::chains_to`](crate::workload::Layer::chains_to)) — the
+//! workload's layer lists fold pooling/residual wiring away, and those
+//! folded reshapes can only happen inside a stage, never across one.
+//!
+//! Among the valid cut points the partitioner balances per-stage MACs (the
+//! throughput of a pipeline is set by its slowest stage): each of the K−1
+//! cuts greedily picks the valid boundary whose MACs prefix is closest to
+//! the ideal `total·j/K`, while always leaving enough boundaries for the
+//! cuts still to be placed.
+
+use std::ops::Range;
+
+use crate::error::{Error, Result};
+use crate::workload::Network;
+
+/// The boundaries of `net` where a pipeline cut is valid: every `b` such
+/// that layer `b−1` chains exactly into layer `b` (a cut at `b` puts
+/// layers `..b` and `b..` in different stages).
+pub fn valid_boundaries(net: &Network) -> Vec<usize> {
+    (1..net.layers.len())
+        .filter(|&b| net.layers[b - 1].chains_to(&net.layers[b]))
+        .collect()
+}
+
+/// Choose K contiguous, MACs-balanced layer ranges over `net`'s valid cut
+/// points. Returns ranges covering `0..layers.len()` exactly; typed
+/// [`Error::InvalidConfig`] when `k` is 0, the network is empty, or the
+/// network has fewer than `k−1` valid boundaries.
+pub fn partition_stages(net: &Network, k: usize) -> Result<Vec<Range<usize>>> {
+    let n = net.layers.len();
+    if k == 0 {
+        return Err(Error::InvalidConfig(
+            "a pipeline needs at least one stage (K = 0)".into(),
+        ));
+    }
+    if n == 0 {
+        return Err(Error::InvalidConfig(format!(
+            "cannot partition empty network '{}'",
+            net.name
+        )));
+    }
+    if k == 1 {
+        return Ok(vec![0..n]);
+    }
+    let candidates = valid_boundaries(net);
+    if candidates.len() < k - 1 {
+        return Err(Error::InvalidConfig(format!(
+            "network '{}' has {} valid cut points but K = {k} stages need {}: \
+             only exact activation hand-offs are cuttable",
+            net.name,
+            candidates.len(),
+            k - 1
+        )));
+    }
+    let mut prefix = vec![0u64; n + 1];
+    for (i, l) in net.layers.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + l.macs();
+    }
+    let total = prefix[n];
+    // Greedy balanced cuts: for the j-th cut aim at the `total·j/K` MACs
+    // prefix, restricted to candidates after the previous cut and leaving
+    // one candidate per cut still unplaced (so the choice is always
+    // completable).
+    let mut cuts = Vec::with_capacity(k - 1);
+    let mut lo = 0usize;
+    for j in 1..k {
+        let target = total as f64 * j as f64 / k as f64;
+        let hi = candidates.len() - (k - 1 - j);
+        let mut best = lo;
+        for i in lo..hi {
+            let d = (prefix[candidates[i]] as f64 - target).abs();
+            if d < (prefix[candidates[best]] as f64 - target).abs() {
+                best = i;
+            }
+        }
+        cuts.push(candidates[best]);
+        lo = best + 1;
+    }
+    let mut ranges = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for c in cuts {
+        ranges.push(start..c);
+        start = c;
+    }
+    ranges.push(start..n);
+    Ok(ranges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::tiny::{small_resnet, tiny_resnet};
+
+    #[test]
+    fn boundaries_respect_exact_chaining_only() {
+        let net = tiny_resnet();
+        // stem→conv1 and conv1→conv2 chain; conv2 (strided, 4·4·16 out)
+        // does not chain into the flat fc (1·1·16 in).
+        assert_eq!(valid_boundaries(&net), vec![1, 2]);
+        let net = small_resnet();
+        assert_eq!(valid_boundaries(&net), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn partitions_cover_and_balance() {
+        let net = small_resnet();
+        for k in 1..=4 {
+            let ranges = partition_stages(&net, k).unwrap();
+            assert_eq!(ranges.len(), k);
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, net.layers.len());
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous");
+                let b = w[0].end;
+                assert!(
+                    net.layers[b - 1].chains_to(&net.layers[b]),
+                    "cut at {b} must be a valid boundary"
+                );
+            }
+        }
+        // K=2 puts the cut at the MACs midpoint among {1, 2, 3}: the heavy
+        // middle convs must not all land in one stage.
+        let halves = partition_stages(&net, 2).unwrap();
+        let macs = |r: &Range<usize>| -> u64 { net.layers[r.clone()].iter().map(|l| l.macs()).sum() };
+        let (a, b) = (macs(&halves[0]), macs(&halves[1]));
+        let imbalance = a.abs_diff(b) as f64 / (a + b) as f64;
+        assert!(imbalance < 0.8, "grossly unbalanced split: {a} vs {b}");
+    }
+
+    #[test]
+    fn infeasible_counts_are_typed() {
+        let net = tiny_resnet();
+        assert!(matches!(
+            partition_stages(&net, 0),
+            Err(Error::InvalidConfig(_))
+        ));
+        // tiny_resnet has 2 valid boundaries → K=4 needs 3.
+        assert!(matches!(
+            partition_stages(&net, 4),
+            Err(Error::InvalidConfig(_))
+        ));
+        assert_eq!(partition_stages(&net, 1).unwrap(), vec![0..4]);
+        assert_eq!(partition_stages(&net, 3).unwrap(), vec![0..1, 1..2, 2..4]);
+    }
+}

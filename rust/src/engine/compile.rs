@@ -28,6 +28,7 @@
 //! per-model α state differing (unzipFPGA §1: resources reused across
 //! layers *and* CNN models without reconfiguring the fabric).
 
+use std::ops::Range;
 use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 
 use crate::arch::{DesignPoint, Platform};
@@ -35,7 +36,7 @@ use crate::engine::backend::EnginePlan;
 use crate::engine::sim::{layer_seed, synth_hw_weights};
 use crate::engine::wcache::WeightsKey;
 use crate::engine::Engine;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::sim::hw_weights::HwOvsfWeights;
 use crate::util::fixed::Precision;
 use crate::workload::{Network, RatioProfile};
@@ -56,6 +57,17 @@ pub struct CompiledModel {
     generation: u64,
     /// Numeric precision of the weight datapath this artifact serves at.
     precision: Precision,
+    /// Network name the per-layer weight *seeds* derive from. Equal to the
+    /// plan's network name for whole-model artifacts; for layer-range
+    /// stages produced by [`Compiler::split`] it stays the **original**
+    /// model's name so every stage synthesises the very same weights the
+    /// unsplit artifact would — while runtime [`WeightsKey`]s keep the
+    /// stage's own (disjoint) network name.
+    seed_name: String,
+    /// Absolute layer index of this artifact's first layer within the
+    /// original network (0 for whole-model artifacts). Seeds are pure
+    /// functions of `(seed_name, layer_offset + local_idx, layer)`.
+    layer_offset: usize,
     /// Fitted once per artifact, on first use by a numeric backend —
     /// timing-only (analytical) pools never pay the fit.
     hw: OnceLock<Vec<Option<Arc<HwOvsfWeights>>>>,
@@ -95,12 +107,28 @@ impl CompiledModel {
     /// f32 and an i8 artifact of the same network can never alias each
     /// other's slabs in a shared cache.
     pub fn from_plan_at(plan: EnginePlan, precision: Precision) -> Result<Self> {
+        let seed_name = plan.network.name.clone();
+        Self::from_plan_seeded(plan, precision, seed_name, 0)
+    }
+
+    /// Compile a plan whose weight identity lives in another model's seed
+    /// namespace: seeds derive from `(seed_name, layer_offset + idx)`
+    /// instead of the plan's own network name. This is how
+    /// [`Compiler::split`] gives each layer-range stage the *original*
+    /// model's weights (bit-identical numerics) while runtime slab keys
+    /// stay under the stage's own disjoint network name.
+    pub(crate) fn from_plan_seeded(
+        plan: EnginePlan,
+        precision: Precision,
+        seed_name: String,
+        layer_offset: usize,
+    ) -> Result<Self> {
         let n = plan.n_layers();
         let mut weights_keys = Vec::new();
         let mut weight_seeds = Vec::with_capacity(n);
         let mut alpha_words = 0u64;
         for (idx, layer) in plan.network.layers.iter().enumerate() {
-            weight_seeds.push(layer_seed(&plan.network.name, idx, layer));
+            weight_seeds.push(layer_seed(&seed_name, layer_offset + idx, layer));
             if layer.ovsf {
                 let rho = plan.profile.rho(idx);
                 alpha_words += layer.n_in * layer.n_out * layer.basis_per_chunk(rho);
@@ -140,6 +168,8 @@ impl CompiledModel {
             weight_seeds,
             generation: 0,
             precision,
+            seed_name,
+            layer_offset,
             hw: OnceLock::new(),
             i8_scales: OnceLock::new(),
         })
@@ -159,7 +189,14 @@ impl CompiledModel {
     /// survivors' catalog entries. Registering the respin stamps it a new
     /// generation, so it can never adopt the dead incarnation's slabs.
     pub fn respin(&self) -> Result<Self> {
-        Self::from_plan_at(self.plan.clone(), self.precision)
+        // Preserve the seed namespace: a respun stage artifact must keep
+        // synthesising the original model's weights at its layer offset.
+        Self::from_plan_seeded(
+            self.plan.clone(),
+            self.precision,
+            self.seed_name.clone(),
+            self.layer_offset,
+        )
     }
 
     /// Stamp a registration generation into the artifact and every
@@ -220,6 +257,18 @@ impl CompiledModel {
         &self.weight_seeds
     }
 
+    /// Network name the weight seeds derive from — the original model for
+    /// [`Compiler::split`] stages, the plan's own name otherwise.
+    pub fn seed_name(&self) -> &str {
+        &self.seed_name
+    }
+
+    /// Absolute index of this artifact's first layer within the original
+    /// network (0 for whole-model artifacts).
+    pub fn layer_offset(&self) -> usize {
+        self.layer_offset
+    }
+
     /// The artifact's compressed OVSF α sets, one entry per layer (`None`
     /// for dense layers) — the resident model state the slab generator
     /// reads. Fitted deterministically on first call and cached in the
@@ -235,7 +284,7 @@ impl CompiledModel {
         for (idx, layer) in self.plan.network.layers.iter().enumerate() {
             if layer.ovsf {
                 let rho = self.plan.profile.rho(idx);
-                let h = synth_hw_weights(&self.plan.network.name, idx, layer, rho)?;
+                let h = synth_hw_weights(&self.seed_name, self.layer_offset + idx, layer, rho)?;
                 fitted.push(Some(Arc::new(h)));
             } else {
                 fitted.push(None);
@@ -372,6 +421,148 @@ impl Compiler {
         *self.pinned() = Some(plan.sigma);
         CompiledModel::from_plan_at(plan, self.precision)
     }
+
+    /// Partition `network` into contiguous layer-range stages and compile
+    /// each range as its own artifact — the compile side of pipeline-
+    /// parallel serving ([`StagePipeline`](crate::coordinator::stage::StagePipeline)).
+    ///
+    /// Validation (typed [`Error::InvalidConfig`] on violation):
+    /// * `ranges` must be non-empty, each range non-empty, contiguous, and
+    ///   cover `0..layers.len()` exactly;
+    /// * every internal boundary must be an exact activation hand-off —
+    ///   [`Layer::chains_to`](crate::workload::Layer::chains_to): the
+    ///   producing layer's `(out_h, out_w, n_out)` equals the consuming
+    ///   layer's `(h, w, n_in)` — so stage `k`'s raw output buffer *is*
+    ///   stage `k+1`'s admission-valid input and the split serves
+    ///   bit-identical numerics.
+    ///
+    /// Each stage artifact gets:
+    /// * its own network/profile named `"{name}::s{k}"`, which keeps the
+    ///   runtime [`WeightsKey`] namespaces of different stages (and of the
+    ///   unsplit model) disjoint in any shared cache;
+    /// * the **original** model's seed namespace at the stage's layer
+    ///   offset ([`CompiledModel::seed_name`]/[`layer_offset`](CompiledModel::layer_offset)),
+    ///   so every stage synthesises exactly the weights the unsplit
+    ///   artifact would for those layers;
+    /// * its own design point: a pinned compiler σ applies to every stage,
+    ///   otherwise each stage runs its own DSE over just its layer range —
+    ///   per-stage fabric shapes for free. `split` never pins the
+    ///   compiler's σ (stage optima are range-local, not whole-model).
+    pub fn split(
+        &self,
+        network: Network,
+        profile: RatioProfile,
+        ranges: &[Range<usize>],
+    ) -> Result<Vec<CompiledModel>> {
+        let n = network.layers.len();
+        if ranges.is_empty() {
+            return Err(Error::InvalidConfig(
+                "split requires at least one layer range".into(),
+            ));
+        }
+        if profile.len() != n {
+            return Err(Error::InvalidConfig(format!(
+                "ρ profile '{}' has {} entries but network '{}' has {} layers",
+                profile.name,
+                profile.len(),
+                network.name,
+                n
+            )));
+        }
+        let mut expect = 0usize;
+        for (k, r) in ranges.iter().enumerate() {
+            if r.start >= r.end {
+                return Err(Error::InvalidConfig(format!(
+                    "stage {k} range {}..{} is empty",
+                    r.start, r.end
+                )));
+            }
+            if r.start != expect {
+                return Err(Error::InvalidConfig(format!(
+                    "stage {k} starts at layer {} but the previous stage ends at {expect}: \
+                     ranges must be contiguous",
+                    r.start
+                )));
+            }
+            if r.end > n {
+                return Err(Error::InvalidConfig(format!(
+                    "stage {k} range {}..{} exceeds the {n}-layer network",
+                    r.start, r.end
+                )));
+            }
+            expect = r.end;
+        }
+        if expect != n {
+            return Err(Error::InvalidConfig(format!(
+                "ranges cover layers 0..{expect} but the network has {n}: \
+                 every layer must belong to exactly one stage"
+            )));
+        }
+        for (k, r) in ranges[..ranges.len() - 1].iter().enumerate() {
+            let prev = &network.layers[r.end - 1];
+            let next = &network.layers[r.end];
+            if !prev.chains_to(next) {
+                return Err(Error::InvalidConfig(format!(
+                    "cut between layers {} ('{}') and {} ('{}') is not an exact \
+                     activation hand-off: {}×{}×{} out vs {}×{}×{} in — stage {k} \
+                     cannot hand its output buffer to stage {}",
+                    r.end - 1,
+                    prev.name,
+                    r.end,
+                    next.name,
+                    prev.out_h(),
+                    prev.out_w(),
+                    prev.n_out,
+                    next.h,
+                    next.w,
+                    next.n_in,
+                    k + 1
+                )));
+            }
+        }
+        let mut stages = Vec::with_capacity(ranges.len());
+        for (k, r) in ranges.iter().enumerate() {
+            let stage_net = Network {
+                name: format!("{}::s{k}", network.name),
+                layers: network.layers[r.clone()].to_vec(),
+            };
+            let stage_profile = RatioProfile {
+                name: format!("{}::s{k}", profile.name),
+                rhos: profile.rhos[r.clone()].to_vec(),
+            };
+            let mut b = Engine::builder().network(stage_net).profile(stage_profile);
+            if let Some(p) = self.platform.clone() {
+                b = b.platform(p);
+            }
+            if let Some(bw) = self.bw_mult {
+                b = b.bandwidth(bw);
+            }
+            if let Some(s) = self.sigma() {
+                b = b.design_point(s);
+            }
+            let plan = b.plan()?;
+            stages.push(CompiledModel::from_plan_seeded(
+                plan,
+                self.precision,
+                network.name.clone(),
+                r.start,
+            )?);
+        }
+        Ok(stages)
+    }
+
+    /// [`split`](Self::split) with ranges chosen automatically: MACs-
+    /// balanced over the network's valid cut points
+    /// ([`partition_stages`](crate::dse::partition_stages)).
+    pub fn split_balanced(
+        &self,
+        network: Network,
+        profile: RatioProfile,
+        k: usize,
+    ) -> Result<Vec<CompiledModel>> {
+        let ranges = crate::dse::partition_stages(&network, k)?;
+        self.split(network, profile, &ranges)
+    }
 }
 
 #[cfg(test)]
@@ -492,5 +683,108 @@ mod tests {
         // A wgen-less σ cannot serve an OVSF model.
         let compiler = Compiler::new().design_point(DesignPoint::new(0, 4, 8, 4));
         assert!(compiler.compile(net, profile).is_err());
+    }
+
+    fn pinned_compiler() -> Compiler {
+        Compiler::new()
+            .platform(Platform::z7045())
+            .bandwidth(4)
+            .design_point(DesignPoint::new(8, 4, 8, 4))
+    }
+
+    #[test]
+    fn split_produces_chained_stages_in_the_original_seed_namespace() {
+        let net = tiny_net();
+        let profile = RatioProfile::uniform(&net, 0.5);
+        let compiler = pinned_compiler();
+        let whole = compiler.compile(net.clone(), profile.clone()).unwrap();
+        let stages = compiler.split(net.clone(), profile, &[0..2, 2..4]).unwrap();
+        assert_eq!(stages.len(), 2);
+        // Disjoint runtime namespaces: stage networks are renamed.
+        assert_eq!(stages[0].network_name(), "tiny::s0");
+        assert_eq!(stages[1].network_name(), "tiny::s1");
+        // Shared weight identity: seeds live in the ORIGINAL namespace at
+        // each stage's absolute layer offset.
+        assert_eq!(stages[0].seed_name(), "tiny");
+        assert_eq!(stages[1].seed_name(), "tiny");
+        assert_eq!(stages[0].layer_offset(), 0);
+        assert_eq!(stages[1].layer_offset(), 2);
+        assert_eq!(stages[0].weight_seeds(), &whole.weight_seeds()[..2]);
+        assert_eq!(stages[1].weight_seeds(), &whole.weight_seeds()[2..]);
+        // Activation shapes chain exactly across the cut.
+        assert_eq!(stages[0].input_len(), whole.input_len());
+        assert_eq!(stages[0].output_len(), stages[1].input_len());
+        assert_eq!(stages[1].output_len(), whole.output_len());
+        // The fitted α sets are the unsplit model's, re-indexed.
+        let whole_hw = whole.hw().unwrap();
+        let s1_hw = stages[1].hw().unwrap();
+        assert_eq!(
+            s1_hw[0].as_ref().unwrap().alphas,
+            whole_hw[2].as_ref().unwrap().alphas,
+            "stage α ≠ unsplit α at absolute layer 2"
+        );
+        // WeightsKeys are disjoint across stages and vs the unsplit model.
+        let mut all_keys: Vec<_> = whole.weights_keys().to_vec();
+        all_keys.extend(stages.iter().flat_map(|s| s.weights_keys().to_vec()));
+        for (i, a) in all_keys.iter().enumerate() {
+            for b in &all_keys[i + 1..] {
+                assert_ne!(a, b, "slab key namespaces must not alias");
+            }
+        }
+        // Respins preserve the stage's seed namespace (the supervisor
+        // rebuild path must keep serving the original model's weights).
+        let re = stages[1].respin().unwrap();
+        assert_eq!(re.seed_name(), "tiny");
+        assert_eq!(re.layer_offset(), 2);
+        assert_eq!(re.weight_seeds(), stages[1].weight_seeds());
+    }
+
+    #[test]
+    fn split_rejects_bad_ranges_typed() {
+        let net = tiny_net();
+        let profile = RatioProfile::uniform(&net, 0.5);
+        let compiler = pinned_compiler();
+        let bad: &[&[std::ops::Range<usize>]] = &[
+            &[],               // no ranges at all
+            &[0..2],           // does not cover the tail
+            &[0..2, 3..4],     // gap at layer 2
+            &[0..2, 1..4],     // overlap
+            &[0..0, 0..4],     // empty range
+            &[0..2, 2..5],     // out of bounds
+            &[1..4],           // does not start at 0
+            &[0..3, 3..4],     // conv2→fc: 4·4·16 out vs 1·1·16 in
+        ];
+        for ranges in bad {
+            let err = compiler
+                .split(net.clone(), profile.clone(), ranges)
+                .expect_err(&format!("ranges {ranges:?} must be rejected"));
+            assert!(
+                matches!(err, crate::error::Error::InvalidConfig(_)),
+                "expected InvalidConfig for {ranges:?}, got {err}"
+            );
+        }
+        // A short ρ profile is caught before any slicing.
+        let short = RatioProfile {
+            name: "short".into(),
+            rhos: vec![0.5; 2],
+        };
+        assert!(matches!(
+            compiler.split(net, short, &[0..2, 2..4]),
+            Err(crate::error::Error::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn split_balanced_picks_valid_contiguous_cuts() {
+        let net = crate::workload::tiny::small_resnet();
+        let profile = RatioProfile::uniform(&net, 0.5);
+        let compiler = pinned_compiler();
+        let stages = compiler
+            .split_balanced(net.clone(), profile, 2)
+            .expect("small_resnet has valid cuts for K=2");
+        assert_eq!(stages.len(), 2);
+        let total: usize = stages.iter().map(|s| s.plan().n_layers()).sum();
+        assert_eq!(total, net.layers.len());
+        assert_eq!(stages[0].output_len(), stages[1].input_len());
     }
 }

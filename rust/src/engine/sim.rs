@@ -109,11 +109,20 @@ pub fn synth_dense_slab(
     c1: usize,
     out: &mut Vec<f32>,
 ) {
+    synth_dense_slab_seeded(layer_seed(model, idx, layer), layer, c0, c1, out)
+}
+
+/// [`synth_dense_slab`] with an explicit layer seed instead of a
+/// `(model, idx)` pair. Stage artifacts from
+/// [`Compiler::split`](crate::engine::compile::Compiler::split) carry
+/// seeds derived in the *original* model's namespace at absolute layer
+/// indices; feeding those seeds here makes a stage's dense layers
+/// bit-identical to the unsplit model's.
+pub fn synth_dense_slab_seeded(seed: u64, layer: &Layer, c0: usize, c1: usize, out: &mut Vec<f32>) {
     let p_dim = (layer.n_in * layer.k * layer.k) as usize;
     let cols = c1 - c0;
     out.clear();
     out.resize(p_dim * cols, 0.0);
-    let seed = layer_seed(model, idx, layer);
     let scale = 1.0 / (p_dim.max(1) as f32).sqrt();
     for (oi, o) in (c0..c1).enumerate() {
         let mut rng =
@@ -192,10 +201,11 @@ enum SlabJob {
         w_scale: f32,
     },
     /// Dense (stem / downsample / classifier) slab, synthesised into fresh
-    /// scratch — the DRAM stream stand-in, deliberately uncached.
+    /// scratch — the DRAM stream stand-in, deliberately uncached. Carries
+    /// the resolved layer seed (the artifact's for compiled/stage models,
+    /// else derived from the plan's network name).
     Dense {
-        model: String,
-        idx: usize,
+        seed: u64,
         layer: Layer,
         c0: usize,
         c1: usize,
@@ -235,14 +245,13 @@ fn generate_slab(job: SlabJob) -> Result<Arc<Slab>> {
             }
         }),
         SlabJob::Dense {
-            model,
-            idx,
+            seed,
             layer,
             c0,
             c1,
         } => {
             let mut slab = Vec::new();
-            synth_dense_slab(&model, idx, &layer, c0, c1, &mut slab);
+            synth_dense_slab_seeded(seed, &layer, c0, c1, &mut slab);
             Ok(Arc::new(Slab::F32(slab)))
         }
     }
@@ -501,9 +510,14 @@ impl SimBackend {
                 w_scale,
             })
         } else {
+            // The artifact's seeds live in its (possibly original-model)
+            // seed namespace; artifact-less engines derive from the plan.
+            let seed = match &self.artifact {
+                Some(artifact) => artifact.weight_seeds()[idx],
+                None => layer_seed(&plan.network.name, idx, layer),
+            };
             Ok(SlabJob::Dense {
-                model: plan.network.name.clone(),
-                idx,
+                seed,
                 layer: layer.clone(),
                 c0,
                 c1,

@@ -108,6 +108,19 @@ pub enum Error {
     /// The pool retries these automatically with jittered backoff.
     Transient(String),
 
+    /// A pipeline stage failed a request *after* it cleared end-to-end
+    /// admission: the wrapped error is what the stage's replica set
+    /// reported, tagged with the stage index so callers can see where in
+    /// the pipeline the request died. Transience delegates to the wrapped
+    /// error (a `QueueFull` deep in the pipeline is still worth retrying;
+    /// a `ShapeMismatch` is not).
+    StageFailed {
+        /// Zero-based pipeline stage index the failure occurred at.
+        stage: usize,
+        /// The stage-local failure.
+        source: Box<Error>,
+    },
+
     /// Replicated serving is running below its configured capacity floor
     /// (replicas unhealthy, draining, or rebuilding) and degraded-mode
     /// admission shed this request by priority class rather than letting
@@ -179,6 +192,9 @@ impl std::fmt::Display for Error {
                 retry_after.as_secs_f64() * 1e3
             ),
             Error::Transient(s) => write!(f, "transient backend fault (retryable): {s}"),
+            Error::StageFailed { stage, source } => {
+                write!(f, "pipeline stage {stage} failed: {source}")
+            }
             Error::DegradedCapacity { live, configured } => write!(
                 f,
                 "serving capacity degraded: {live} of {configured} replicas live \
@@ -196,13 +212,18 @@ impl Error {
     /// errors and panics do not (retrying would fail identically or hide
     /// a real bug).
     pub fn is_transient(&self) -> bool {
-        matches!(
-            self,
-            Error::Transient(_)
-                | Error::QueueFull
-                | Error::Overloaded { .. }
-                | Error::DegradedCapacity { .. }
-        )
+        match self {
+            // Stage-tagged failures are exactly as retryable as the
+            // stage-local error they wrap.
+            Error::StageFailed { source, .. } => source.is_transient(),
+            _ => matches!(
+                self,
+                Error::Transient(_)
+                    | Error::QueueFull
+                    | Error::Overloaded { .. }
+                    | Error::DegradedCapacity { .. }
+            ),
+        }
     }
 }
 
@@ -211,6 +232,7 @@ impl std::error::Error for Error {
         match self {
             Error::MissingArtifact { source, .. } => Some(source),
             Error::Io(e) => Some(e),
+            Error::StageFailed { source, .. } => Some(source.as_ref()),
             _ => None,
         }
     }
@@ -273,6 +295,13 @@ mod tests {
         };
         assert!(deg.to_string().contains("1 of 3 replicas"), "{deg}");
         assert!(deg.to_string().contains("shed by priority"), "{deg}");
+        let st = Error::StageFailed {
+            stage: 2,
+            source: Box::new(Error::PoolShutdown),
+        };
+        assert!(st.to_string().contains("stage 2"), "{st}");
+        assert!(st.to_string().contains("shut down"), "{st}");
+        assert!(std::error::Error::source(&st).is_some());
     }
 
     #[test]
@@ -297,6 +326,17 @@ mod tests {
         }
         .is_transient());
         assert!(!Error::ShapeMismatch("bad".into()).is_transient());
+        // Stage wrapping is transparent to transience.
+        assert!(Error::StageFailed {
+            stage: 1,
+            source: Box::new(Error::QueueFull),
+        }
+        .is_transient());
+        assert!(!Error::StageFailed {
+            stage: 0,
+            source: Box::new(Error::WorkerPanic { detail: "p".into() }),
+        }
+        .is_transient());
     }
 
     #[test]

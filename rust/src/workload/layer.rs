@@ -175,6 +175,17 @@ impl Layer {
         self.n_in * self.n_out * self.basis_per_chunk(rho)
     }
 
+    /// Whether this layer's output feature map is exactly the input shape
+    /// of `next`: `(out_h, out_w, n_out) == (h, w, n_in)`. This is the
+    /// condition for a pipeline cut between the two layers to carry
+    /// activations across byte-for-byte — within one plan the simulator may
+    /// re-fit mismatched shapes, but a stage boundary hands the raw output
+    /// buffer to the next stage's admission check, so only exact chains are
+    /// valid cut points (see `Compiler::split`).
+    pub fn chains_to(&self, next: &Layer) -> bool {
+        self.out_h() == next.h && self.out_w() == next.w && self.n_out == next.n_in
+    }
+
     /// Input feature-map elements (what `t_mem_in` streams per row tile is
     /// `T_R·P`; per full layer the paper's model moves `R·P`).
     pub fn ifm_elems(&self) -> u64 {
@@ -238,6 +249,20 @@ mod tests {
         // Dense (non-OVSF) layers ignore ρ.
         let dense = Layer::conv("d", 28, 28, 128, 128, 3, 1, 1, false);
         assert_eq!(dense.params_with_rho(0.25), dense.params());
+    }
+
+    #[test]
+    fn chains_to_requires_exact_shape_handoff() {
+        let a = Layer::conv("a", 8, 8, 4, 8, 3, 1, 1, false);
+        let b = Layer::conv("b", 8, 8, 8, 8, 3, 1, 1, true);
+        assert!(a.chains_to(&b), "same-spatial conv chains");
+        let strided = Layer::conv("s", 8, 8, 8, 16, 3, 2, 1, true);
+        assert!(b.chains_to(&strided));
+        // Strided conv halves the map: 8→4, so an 8×8 consumer mismatches.
+        assert!(!strided.chains_to(&b));
+        // FC consumes a flat vector; only a 1×1×n_in producer chains.
+        let fc = Layer::fc("fc", 16, 10);
+        assert!(!strided.chains_to(&fc), "4·4·16 ≠ 1·1·16");
     }
 
     #[test]

@@ -1,0 +1,432 @@
+//! Pipeline-parallel serving acceptance: a model split into K layer-range
+//! stages behind bounded activation queues must
+//!
+//! * stay **bit-identical** to the single-engine reference across
+//!   ρ ∈ {0.25, 1.0} and both PE schedules (selective and dense),
+//! * serve a deep model with **no stage exceeding its per-stage slab
+//!   budget** — budgets deliberately too small to ever hold the full
+//!   model's weights on one cache,
+//! * keep **disjoint weight-key/seed namespaces** across stages,
+//! * **backpressure, not deadlock**: a full downstream queue stalls
+//!   upstream hops and ultimately admission, while every accepted request
+//!   still settles,
+//! * settle every request **typed-or-correct through a mid-stream stage
+//!   kill**, with the stage's supervisor restoring capacity.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use unzipfpga::arch::{DesignPoint, Platform};
+use unzipfpga::coordinator::pool::PoolConfig;
+use unzipfpga::coordinator::registry::BackendWrap;
+use unzipfpga::coordinator::stage::{PipelineConfig, StagePipeline};
+use unzipfpga::coordinator::server::Request;
+use unzipfpga::coordinator::traffic::SettleHandle;
+use unzipfpga::engine::{
+    CompiledModel, Compiler, Engine, EnginePlan, ExecutionBackend, ExecutionReport, LayerOutcome,
+    SimBackend,
+};
+use unzipfpga::error::{Error, Result};
+use unzipfpga::util::prng::Xoshiro256;
+use unzipfpga::workload::resnet::resnet18_cifar_small;
+use unzipfpga::workload::tiny::{small_resnet, tiny_resnet};
+use unzipfpga::workload::{Network, RatioProfile};
+
+fn compiler() -> Compiler {
+    Compiler::new()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(8, 4, 8, 4))
+}
+
+fn input_for(net: &Network, seed: u64) -> Vec<f32> {
+    let l0 = &net.layers[0];
+    let n = (l0.h * l0.w * l0.n_in) as usize;
+    Xoshiro256::seed_from_u64(seed).normal_vec(n)
+}
+
+/// Single-engine reference output under an explicit PE schedule.
+fn reference(net: &Network, profile: &RatioProfile, input: &[f32], selective: bool) -> Vec<f32> {
+    let plan = Engine::builder()
+        .platform(Platform::z7045())
+        .bandwidth(4)
+        .design_point(DesignPoint::new(8, 4, 8, 4))
+        .network(net.clone())
+        .profile(profile.clone())
+        .plan()
+        .unwrap();
+    let mut backend = SimBackend::new();
+    backend.selective = selective;
+    let mut engine = Engine::with_backend(plan, Box::new(backend)).unwrap();
+    engine.infer(input).unwrap().output
+}
+
+fn quick_cfg() -> PipelineConfig {
+    let mut cfg = PipelineConfig::new();
+    cfg.pool = PoolConfig::single_worker();
+    cfg.queue_depth = 4;
+    cfg.health.supervisor_tick = Duration::from_millis(2);
+    cfg
+}
+
+/// Acceptance grid: split serving is bit-identical to the single engine
+/// across ρ ∈ {0.25, 1.0} × both PE schedules. The reference pair also
+/// pins schedule-invariance: selective and dense PEs must agree, so one
+/// pipeline response is checked against both.
+#[test]
+fn pipeline_matches_single_engine_across_rho_and_schedules() {
+    let net = small_resnet();
+    let input = input_for(&net, 31);
+    for rho in [0.25, 1.0] {
+        let profile = RatioProfile::uniform(&net, rho);
+        let stages = compiler()
+            .split_balanced(net.clone(), profile.clone(), 2)
+            .unwrap();
+        let pipe = StagePipeline::start(quick_cfg(), "small", stages).unwrap();
+        let got = pipe
+            .submit(Request::for_model(1, "small", input.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        for selective in [true, false] {
+            let want = reference(&net, &profile, &input, selective);
+            assert_eq!(
+                got.output, want,
+                "ρ={rho} selective={selective}: pipeline diverged from reference"
+            );
+        }
+        pipe.shutdown().unwrap();
+    }
+}
+
+/// Deep model under deliberately tight per-stage budgets: each stage's
+/// budget is far below the full model's generated-weight bytes, so the
+/// split is the only way this model serves — and no stage's cache may
+/// ever exceed its own budget. Stage namespaces (runtime weight keys and
+/// synthesis seeds) must be pairwise disjoint, and the split must stay
+/// bit-identical to the unsplit reference.
+#[test]
+fn deep_model_splits_under_per_stage_budgets_with_disjoint_namespaces() {
+    let net = resnet18_cifar_small();
+    let profile = RatioProfile::uniform(&net, 0.5);
+    let full_weight_bytes: u64 = net
+        .layers
+        .iter()
+        .map(|l| {
+            let g = l.gemm();
+            g.p * g.c * 4
+        })
+        .sum();
+    // A third of the dense footprint per stage: three stages never hold
+    // the model co-resident, and a single-cache engine at this budget
+    // would thrash.
+    let budget = (full_weight_bytes / 3) as usize;
+    assert!(
+        (budget as u64) < full_weight_bytes,
+        "budget must not admit the whole model"
+    );
+
+    let k = 3;
+    let stages = compiler()
+        .split_balanced(net.clone(), profile.clone(), k)
+        .unwrap();
+
+    // Namespace disjointness: every (runtime weight key, synthesis seed)
+    // is unique across all stages.
+    let mut keys = std::collections::BTreeSet::new();
+    let mut seeds = std::collections::BTreeSet::new();
+    for stage in &stages {
+        for key in stage.weights_keys() {
+            assert!(keys.insert(format!("{key:?}")), "duplicate key {key:?}");
+        }
+        for &seed in stage.weight_seeds() {
+            assert!(seeds.insert(seed), "duplicate layer seed {seed:#x}");
+        }
+    }
+
+    let mut cfg = quick_cfg();
+    cfg.slab_budgets = Some(vec![budget; k]);
+    let pipe = StagePipeline::start(cfg, "r18s", stages).unwrap();
+
+    let input = input_for(&net, 47);
+    let got = pipe
+        .submit(Request::for_model(1, "r18s", input.clone()))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let want = reference(&net, &profile, &input, true);
+    assert_eq!(got.output, want, "split ResNet18-small diverged");
+
+    for stage in 0..k {
+        let reg = pipe
+            .stage_registry(stage, 0)
+            .unwrap_or_else(|| panic!("stage {stage} registry missing"));
+        let peak = reg.cache().peak_resident_bytes();
+        assert!(peak > 0, "stage {stage} never generated weights");
+        assert!(
+            peak <= budget,
+            "stage {stage} peak resident {peak} B exceeds its budget {budget} B"
+        );
+    }
+    pipe.shutdown().unwrap();
+}
+
+/// Malformed splits fail typed at the compiler, and stage artifacts that
+/// do not chain fail typed at pipeline start.
+#[test]
+fn invalid_splits_and_topologies_are_typed() {
+    let net = small_resnet();
+    let profile = RatioProfile::uniform(&net, 0.5);
+    let c = compiler();
+    for ranges in [
+        vec![],                 // no ranges
+        vec![0..3],             // gap at the tail
+        vec![0..2, 3..5],       // hole
+        vec![0..3, 2..5],       // overlap
+        vec![0..2, 2..4, 3..5], // regression after the second cut
+        vec![0..5, 5..6],       // out of bounds
+    ] {
+        match c.split(net.clone(), profile.clone(), &ranges) {
+            Err(Error::InvalidConfig(msg)) => {
+                assert!(!msg.is_empty(), "ranges {ranges:?}: empty diagnostic")
+            }
+            Err(e) => panic!("ranges {ranges:?} failed with the wrong type: {e}"),
+            Ok(_) => panic!("ranges {ranges:?} must be rejected"),
+        }
+    }
+    // small_resnet's strided block1.conv2 → block2.conv1 boundary chains,
+    // but cutting inside a shape-incompatible pair is refused: tiny_resnet
+    // has no valid cut at 3 (strided conv feeds the flattening fc).
+    let tiny = tiny_resnet();
+    let tiny_profile = RatioProfile::uniform(&tiny, 0.5);
+    assert!(matches!(
+        c.split(tiny.clone(), tiny_profile.clone(), &[0..3, 3..4]),
+        Err(Error::InvalidConfig(_))
+    ));
+    // Reordered (hence unchained) artifacts are refused at start.
+    let mut stages = c.split(tiny, tiny_profile, &[0..2, 2..4]).unwrap();
+    stages.swap(0, 1);
+    assert!(matches!(
+        StagePipeline::start(quick_cfg(), "tiny", stages),
+        Err(Error::InvalidConfig(_))
+    ));
+}
+
+/// Backpressure, not deadlock: tiny activation queues and single-slot
+/// pool queues, a burst bigger than total pipeline capacity, submitted
+/// with blocking admission from one thread while another occasionally
+/// probes `try_submit` (which must observe typed `QueueFull` raw, the
+/// admission-level backpressure signal). Every accepted request settles
+/// bit-identically; nothing hangs.
+#[test]
+fn full_downstream_queues_backpressure_admission_without_deadlock() {
+    let net = tiny_resnet();
+    let profile = RatioProfile::uniform(&net, 0.5);
+    let stages = compiler()
+        .split(net.clone(), profile.clone(), &[0..2, 2..4])
+        .unwrap();
+    let mut cfg = quick_cfg();
+    cfg.queue_depth = 2;
+    cfg.pool.queue_depth = 1;
+    cfg.pool.max_batch = 1;
+    let pipe = StagePipeline::start(cfg, "tiny", stages).unwrap();
+    let input = input_for(&net, 7);
+    let want = reference(&net, &profile, &input, true);
+
+    let n_burst: u64 = 48;
+    let t0 = Instant::now();
+    let (queue_full_seen, outputs) = std::thread::scope(|s| {
+        let pipe_ref = &pipe;
+        let input_ref = &input;
+        let submitter = s.spawn(move || {
+            let mut handles = Vec::new();
+            for i in 0..n_burst {
+                handles.push(
+                    pipe_ref
+                        .submit(Request::for_model(i, "tiny", input_ref.clone()))
+                        .expect("blocking admission must backpressure, not fail"),
+                );
+            }
+            handles
+                .into_iter()
+                .map(|h| h.wait().expect("burst request must settle Ok"))
+                .map(|r| r.output)
+                .collect::<Vec<_>>()
+        });
+        // Probe non-blocking admission while the burst saturates the
+        // pipeline: at least one probe must be rejected typed.
+        let mut queue_full = 0u32;
+        for i in 0..200 {
+            match pipe_ref.try_submit(Request::for_model(10_000 + i, "tiny", input_ref.clone())) {
+                Err(Error::QueueFull) | Err(Error::Overloaded { .. }) => queue_full += 1,
+                Ok(h) => {
+                    let r = h.wait().expect("accepted probe must settle Ok");
+                    assert_eq!(r.output, want, "probe {i} diverged");
+                }
+                Err(e) => panic!("probe {i}: unexpected admission error {e}"),
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        (queue_full, submitter.join().unwrap())
+    });
+    assert!(
+        queue_full_seen >= 1,
+        "saturating burst never tripped typed admission backpressure"
+    );
+    assert_eq!(outputs.len(), n_burst as usize);
+    for (i, out) in outputs.iter().enumerate() {
+        assert_eq!(out, &want, "burst request {i} diverged under backpressure");
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "burst settled too slowly — suspicious of a near-deadlock"
+    );
+
+    let metrics = pipe.shutdown().unwrap();
+    for (k, &hw) in metrics.queue_high_water.iter().enumerate() {
+        assert!(hw >= 1, "stage {k} queue never held an in-flight request");
+        assert!(hw <= 2, "stage {k} queue exceeded its configured bound");
+    }
+}
+
+/// Backend decorator that panics on the next execution once armed — the
+/// deterministic "pull the plug on this stage" lever.
+struct KillSwitch {
+    inner: Box<dyn ExecutionBackend>,
+    armed: Arc<AtomicBool>,
+}
+
+impl ExecutionBackend for KillSwitch {
+    fn name(&self) -> &'static str {
+        "kill-switch"
+    }
+
+    fn plan(&mut self, plan: &EnginePlan) -> Result<()> {
+        self.inner.plan(plan)
+    }
+
+    fn preload(&mut self, model: &Arc<CompiledModel>) -> Result<()> {
+        self.inner.preload(model)
+    }
+
+    fn execute_layer(&mut self, idx: usize, input: &[f32]) -> Result<LayerOutcome> {
+        if self.armed.load(Ordering::SeqCst) {
+            panic!("kill switch fired");
+        }
+        self.inner.execute_layer(idx, input)
+    }
+
+    fn finish(&mut self) -> Result<ExecutionReport> {
+        self.inner.finish()
+    }
+}
+
+/// Mid-stream stage kill: stage 1's sole replica dies with an exhausted
+/// restart budget while a burst is in flight. Every burst request settles
+/// typed ([`Error::StageFailed`] naming the sick stage) or correct;
+/// nothing hangs. After disarming, the stage's supervisor rebuilds the
+/// replica from the catalog (respins preserve the split's seed namespace)
+/// and the pipeline serves bit-identical numerics again.
+#[test]
+fn stage_kill_mid_stream_settles_typed_or_correct_then_recovers() {
+    let net = tiny_resnet();
+    let profile = RatioProfile::uniform(&net, 0.5);
+    let stages = compiler()
+        .split(net.clone(), profile.clone(), &[0..2, 2..4])
+        .unwrap();
+    let mut cfg = quick_cfg();
+    // A single panic permanently kills the stage's sole worker: the outage
+    // is unrecoverable below the replica layer by construction.
+    cfg.pool.restart_budget = 0;
+    cfg.pool.retries = 0;
+
+    let armed = Arc::new(AtomicBool::new(false));
+    let armed_in_wrap = Arc::clone(&armed);
+    let wrap: BackendWrap = Arc::new(move |backend, _worker| {
+        Box::new(KillSwitch {
+            inner: backend,
+            armed: Arc::clone(&armed_in_wrap),
+        })
+    });
+    let pipe =
+        StagePipeline::start_with_stage_wraps(cfg, "tiny", stages, vec![None, Some(wrap)]).unwrap();
+    let input = input_for(&net, 7);
+    let want = reference(&net, &profile, &input, true);
+
+    // Phase A — steady state.
+    for i in 0..8u64 {
+        let r = pipe
+            .submit(Request::for_model(i, "tiny", input.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.output, want, "steady-state request {i} diverged");
+    }
+
+    // Phase B — the outage: arm stage 1's kill switch, burst, and require
+    // every settle to be typed-or-correct.
+    armed.store(true, Ordering::SeqCst);
+    let handles: Vec<_> = (0..16u64)
+        .map(|i| {
+            pipe.submit(Request::for_model(100 + i, "tiny", input.clone()))
+                .expect("admission stays open during a downstream outage")
+        })
+        .collect();
+    let mut failed = 0usize;
+    for (i, h) in handles.into_iter().enumerate() {
+        match h.wait() {
+            Ok(r) => assert_eq!(r.output, want, "outage request {i} diverged"),
+            Err(Error::StageFailed { stage, source }) => {
+                assert_eq!(stage, 1, "only stage 1 was killed: {source}");
+                failed += 1;
+            }
+            Err(e) => panic!("outage request {i}: untyped failure {e}"),
+        }
+    }
+    assert!(failed >= 1, "the kill switch must have claimed a request");
+
+    // Phase C — recovery: disarm, wait for the stage supervisor to
+    // rebuild, then require intact numerics and restored capacity.
+    armed.store(false, Ordering::SeqCst);
+    let t0 = Instant::now();
+    while pipe.rebuilds(1) < 1 || pipe.live_replicas(1) < 1 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "stage 1 supervisor never restored capacity (rebuilds={}, live={})",
+            pipe.rebuilds(1),
+            pipe.live_replicas(1)
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // The rebuilt stage may need a few attempts while it warms back up.
+    let t0 = Instant::now();
+    let recovered = loop {
+        let r = pipe
+            .submit(Request::for_model(1000, "tiny", input.clone()))
+            .unwrap()
+            .wait();
+        match r {
+            Ok(r) => break r,
+            Err(_) if t0.elapsed() < Duration::from_secs(10) => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => panic!("pipeline never recovered after rebuild: {e}"),
+        }
+    };
+    assert_eq!(
+        recovered.output, want,
+        "post-rebuild numerics diverged — respin lost the seed namespace"
+    );
+
+    let metrics = pipe.shutdown().unwrap();
+    assert!(
+        metrics.per_stage[1].rebuilds >= 1,
+        "stage 1 must have been rebuilt"
+    );
+    assert!(
+        metrics.panicked_workers() >= 1,
+        "the kill switch's panic must survive into stage metrics"
+    );
+    assert_eq!(metrics.per_stage.len(), 2);
+}
